@@ -1,0 +1,90 @@
+//! Paper §V-D quality experiment (Figs. 8 and 9): 32 neurons on 32
+//! ranks (one each, so ALL connectivity is cross-rank and the spike
+//! approximation is fully exercised), target calcium 0.7, growth rate
+//! 0.001, background N(5,1).
+//!
+//! Runs the experiment twice — once with the OLD per-step spike-id
+//! exchange, once with the NEW frequency approximation — writes both
+//! calcium traces to CSV, and prints the quartile boxes the paper plots
+//! every 50,000 steps. The claim under test: the approximation changes
+//! only the statistics' spread, not the homeostatic trajectory.
+//!
+//!     cargo run --release --example calcium_homeostasis -- [--steps N]
+//!
+//! Default 200,000 steps (2000 connectivity updates), as in the paper.
+
+use ilmi::cli::Args;
+use ilmi::config::{SimConfig, SpikeAlg};
+use ilmi::coordinator::run_simulation;
+
+fn quartiles(mut xs: Vec<f32>) -> (f32, f32, f32) {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let q = |f: f64| xs[((xs.len() - 1) as f64 * f).round() as usize];
+    (q(0.25), q(0.5), q(0.75))
+}
+
+fn run(alg: SpikeAlg, steps: usize, csv_path: &str) -> anyhow::Result<()> {
+    let mut cfg = SimConfig::paper_quality(steps);
+    cfg.spike_alg = alg;
+    let label = match alg {
+        SpikeAlg::OldIds => "old (per-step spike ids)",
+        SpikeAlg::NewFrequency => "new (frequency approximation)",
+    };
+    println!("== {label} ==");
+    let report = run_simulation(&cfg)?;
+
+    // Assemble the 32-neuron calcium matrix (one neuron per rank).
+    let recorded = report.ranks[0].calcium_trace.len();
+    let mut csv = String::from("step");
+    for r in 0..cfg.ranks {
+        csv.push_str(&format!(",ca_{r}"));
+    }
+    csv.push('\n');
+    for k in 0..recorded {
+        csv.push_str(&report.ranks[0].calcium_trace[k].0.to_string());
+        for r in &report.ranks {
+            csv.push_str(&format!(",{:.5}", r.calcium_trace[k].1[0]));
+        }
+        csv.push('\n');
+    }
+    std::fs::write(csv_path, csv)?;
+    println!("trace -> {csv_path}");
+
+    // Paper-style quartile boxes every 50k steps (or 4 slices if fewer).
+    let box_every = (steps / 4).max(cfg.record_calcium_every);
+    println!("{:>8} {:>8} {:>8} {:>8}", "step", "q25", "median", "q75");
+    for k in 0..recorded {
+        let (step, _) = report.ranks[0].calcium_trace[k];
+        if step > 0 && step % box_every == 0 {
+            let cas: Vec<f32> =
+                report.ranks.iter().map(|r| r.calcium_trace[k].1[0]).collect();
+            let (q25, med, q75) = quartiles(cas);
+            println!("{step:>8} {q25:>8.3} {med:>8.3} {q75:>8.3}");
+        }
+    }
+    let final_cas: Vec<f32> =
+        report.ranks.iter().map(|r| *r.calcium_trace.last().unwrap().1.first().unwrap()).collect();
+    let (q25, med, q75) = quartiles(final_cas);
+    println!(
+        "final: q25 {q25:.3} median {med:.3} q75 {q75:.3} (target {}) | synapses {}",
+        cfg.neuron.eps_target_ca,
+        report.total_synapses()
+    );
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    // Examples have no subcommand; give the parser a placeholder.
+    let mut argv = vec!["run".to_string()];
+    argv.extend(std::env::args().skip(1));
+    let args = Args::parse(&argv).map_err(anyhow::Error::msg)?;
+    let steps =
+        args.get_parse::<usize>("steps").map_err(anyhow::Error::msg)?.unwrap_or(200_000);
+    println!(
+        "calcium homeostasis (paper SS V-D, Figs. 8/9): 32 neurons / 32 ranks, {steps} steps"
+    );
+    run(SpikeAlg::OldIds, steps, "/tmp/ilmi_fig8_old.csv")?;
+    run(SpikeAlg::NewFrequency, steps, "/tmp/ilmi_fig9_new.csv")?;
+    println!("done; compare the two CSVs / quartile tables.");
+    Ok(())
+}

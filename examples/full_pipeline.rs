@@ -1,0 +1,106 @@
+//! END-TO-END DRIVER — exercises every layer of the stack on one real
+//! workload and reports the paper's headline metrics:
+//!
+//!   L1/L2  the JAX/Pallas neuron-update artifact (AOT-lowered HLO) is
+//!          loaded through PJRT and executes EVERY simulation step;
+//!   L3     the Rust coordinator runs the paper's timing workload
+//!          (§V-B: 1000 steps / 10 plasticity updates, no initial
+//!          connectivity, 1.1–1.5 vacant elements) on 16 simulated MPI
+//!          ranks, once with the OLD algorithms (RMA Barnes–Hut +
+//!          per-step spike ids) and once with the NEW ones
+//!          (location-aware Barnes–Hut + frequency approximation).
+//!
+//! Printed at the end: phase breakdowns (Fig. 11 shape), byte totals
+//! (Tables I/II shape), and the old/new speedup factors (the paper's
+//! headline: connectivity ~6x, spikes >100x at 1024 ranks; scaled-down
+//! here, the gap must still favour NEW). Results are recorded in
+//! EXPERIMENTS.md.
+//!
+//!     make artifacts && cargo run --release --example full_pipeline
+
+use ilmi::config::{Backend, ConnectivityAlg, SimConfig, SpikeAlg};
+use ilmi::coordinator::run_simulation_with_xla;
+use ilmi::metrics::Phase;
+use ilmi::runtime::spawn_service;
+use ilmi::util::format_bytes;
+
+fn main() -> anyhow::Result<()> {
+    let base = SimConfig {
+        ranks: 16,
+        neurons_per_rank: 256,
+        steps: 1000,
+        plasticity_interval: 100,
+        delta: 100,
+        theta: 0.3,
+        backend: Backend::Xla,
+        ..SimConfig::default()
+    };
+    println!(
+        "full pipeline: {} ranks x {} neurons, {} steps, theta={}, backend=XLA (AOT artifacts)",
+        base.ranks, base.neurons_per_rank, base.steps, base.theta
+    );
+
+    let handle = spawn_service(&base.artifacts_dir)?;
+    println!("PJRT artifacts loaded; neuron batches {:?}", handle.neuron_batches()?);
+
+    let mut old_cfg = base.clone();
+    old_cfg.connectivity_alg = ConnectivityAlg::OldRma;
+    old_cfg.spike_alg = SpikeAlg::OldIds;
+    let mut new_cfg = base.clone();
+    new_cfg.connectivity_alg = ConnectivityAlg::NewLocationAware;
+    new_cfg.spike_alg = SpikeAlg::NewFrequency;
+
+    println!("\n-- OLD algorithms --");
+    let old = run_simulation_with_xla(&old_cfg, Some(handle.clone()))?;
+    print!("{}", old.phase_table());
+
+    println!("\n-- NEW algorithms --");
+    let new = run_simulation_with_xla(&new_cfg, Some(handle.clone()))?;
+    print!("{}", new.phase_table());
+    handle.shutdown();
+
+    // Headline metrics (paper §V-E shape).
+    let conn_old = old.phase_max(Phase::BarnesHut) + old.phase_max(Phase::SynapseExchange);
+    let conn_new = new.phase_max(Phase::BarnesHut) + new.phase_max(Phase::SynapseExchange);
+    let spike_old = old.phase_max(Phase::SpikeExchange);
+    let spike_new = new.phase_max(Phase::SpikeExchange);
+    let lookup_old = old.phase_max(Phase::SpikeLookup);
+    let lookup_new = new.phase_max(Phase::SpikeLookup);
+    let bytes_old = old.total_bytes_sent() + old.total_bytes_rma();
+    let bytes_new = new.total_bytes_sent() + new.total_bytes_rma();
+
+    println!("\n== headline metrics (old vs new) ==");
+    println!("connectivity update : {conn_old:.4}s vs {conn_new:.4}s  ({:.2}x)", conn_old / conn_new.max(1e-12));
+    println!("spike transmission  : {spike_old:.4}s vs {spike_new:.4}s  ({:.2}x)", spike_old / spike_new.max(1e-12));
+    println!("spike look-up       : {lookup_old:.4}s vs {lookup_new:.4}s  ({:.2}x — new pays a small PRNG premium)", lookup_old / lookup_new.max(1e-12));
+    println!(
+        "transferred data    : {} vs {}  ({:.2}x)",
+        format_bytes(bytes_old),
+        format_bytes(bytes_new),
+        bytes_old as f64 / bytes_new.max(1) as f64
+    );
+    println!(
+        "RMA bytes           : {} vs {} (new algorithm: zero by construction)",
+        format_bytes(old.total_bytes_rma()),
+        format_bytes(new.total_bytes_rma())
+    );
+    println!(
+        "wall clock          : {:.3}s vs {:.3}s  ({:.1}% reduction; paper: 78.8% at 1024 ranks)",
+        old.wall_seconds,
+        new.wall_seconds,
+        100.0 * (1.0 - new.wall_seconds / old.wall_seconds)
+    );
+    println!(
+        "synapses formed     : {} (old) vs {} (new)",
+        old.total_synapses(),
+        new.total_synapses()
+    );
+
+    // The paper's qualitative claims, asserted.
+    assert!(new.total_bytes_rma() == 0, "new algorithm must not RMA");
+    assert!(conn_new < conn_old, "location-aware connectivity must be faster");
+    assert!(spike_new < spike_old, "frequency exchange must be faster");
+    assert!(new.total_synapses() > 0 && old.total_synapses() > 0);
+    println!("\nfull pipeline OK — all layers composed (Pallas kernel -> HLO -> PJRT -> coordinator).");
+    Ok(())
+}

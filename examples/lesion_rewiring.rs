@@ -1,0 +1,156 @@
+//! Lesion-induced rewiring — the use case that motivates MSP (Butz &
+//! van Ooyen 2013 model cortical reorganization after focal retinal
+//! lesions; paper §I, §VI: "predict brain changes after learning,
+//! lesions, or normal development").
+//!
+//! Protocol:
+//!   1. Grow a healthy 8-rank network to (near-)equilibrium.
+//!   2. Lesion rank 0's neurons: background input silenced, synaptic
+//!      elements forced to zero — their calcium collapses, their
+//!      elements retract, and the deletion protocol dismantles every
+//!      synapse touching them.
+//!   3. Keep simulating: the surviving neurons lost input, their calcium
+//!      dips below target, they grow new elements and REWIRE among
+//!      themselves.
+//!
+//! The example drives the per-rank `RankState` API directly (rather than
+//! `run_simulation`) to inject the lesion mid-run, and prints the synapse
+//! census before/after.
+//!
+//!     cargo run --release --example lesion_rewiring
+
+use ilmi::comm::run_ranks;
+use ilmi::config::SimConfig;
+use ilmi::coordinator::RankState;
+use ilmi::octree::DomainDecomposition;
+
+const LESION_RANK: usize = 0;
+
+/// (synapses between healthy neurons, synapses touching the lesion,
+/// mean calcium of this rank if healthy) — counted on the axonal side,
+/// so summing over ranks counts each synapse exactly once.
+fn census(state: &RankState, rank: usize, npr: u64) -> (usize, usize, f64) {
+    let mut healthy = 0usize;
+    let mut lesioned = 0usize;
+    let src_lesioned = rank == LESION_RANK;
+    for edges in &state.store.out_edges {
+        for &tgt in edges {
+            if src_lesioned || (tgt / npr) as usize == LESION_RANK {
+                lesioned += 1;
+            } else {
+                healthy += 1;
+            }
+        }
+    }
+    let ca = if src_lesioned { 0.0 } else { state.pop.mean_calcium() };
+    (healthy, lesioned, ca)
+}
+
+fn main() -> anyhow::Result<()> {
+    let cfg = SimConfig {
+        ranks: 8,
+        neurons_per_rank: 64,
+        steps: 0, // stepping manually
+        plasticity_interval: 100,
+        delta: 100,
+        ..SimConfig::default()
+    };
+    let grow_steps = 30_000;
+    let post_lesion_steps = 30_000;
+    let decomp = DomainDecomposition::new(cfg.ranks, cfg.domain_size);
+    let npr = cfg.neurons_per_rank as u64;
+
+    println!(
+        "lesion experiment: {} ranks x {} neurons; grow {} steps, lesion rank {}, recover {} steps",
+        cfg.ranks, cfg.neurons_per_rank, grow_steps, LESION_RANK, post_lesion_steps
+    );
+
+    let results = run_ranks(cfg.ranks, |comm| {
+        let rank = comm.rank();
+        let mut cfg_rank = cfg.clone();
+        let mut state = RankState::init(&cfg_rank, &decomp, &comm);
+
+        // Phase 1: grow to equilibrium.
+        for step in 0..grow_steps {
+            state.step(&cfg_rank, &decomp, &comm, step, None).unwrap();
+        }
+        let before = census(&state, rank, npr);
+
+        // Phase 2: lesion — silence rank 0's neurons. Their elements are
+        // zeroed, so the next deletion phase breaks all their synapses
+        // (partners are notified through the normal protocol).
+        if rank == LESION_RANK {
+            for i in 0..state.pop.len() {
+                state.pop.z_ax[i] = 0.0;
+                state.pop.z_den_exc[i] = 0.0;
+                state.pop.z_den_inh[i] = 0.0;
+                state.pop.ca[i] = 0.0;
+            }
+            // No more background drive: the neurons stay silent, their
+            // growth curve stays negative, they never regrow.
+            cfg_rank.bg_mean = 0.0;
+            cfg_rank.bg_std = 0.0;
+        }
+
+        // Phase 3: recovery.
+        let mut mid = None;
+        for step in grow_steps..grow_steps + post_lesion_steps {
+            state.step(&cfg_rank, &decomp, &comm, step, None).unwrap();
+            if step == grow_steps + 200 {
+                mid = Some(census(&state, rank, npr));
+            }
+        }
+        let after = census(&state, rank, npr);
+        (before, mid.unwrap(), after)
+    });
+
+    let agg = |pick: fn(&(usize, usize, f64)) -> usize, which: usize| -> usize {
+        results
+            .iter()
+            .map(|(b, m, a)| pick(match which {
+                0 => b,
+                1 => m,
+                _ => a,
+            }))
+            .sum()
+    };
+    let ca_healthy = |which: usize| -> f64 {
+        let v: Vec<f64> = results
+            .iter()
+            .enumerate()
+            .filter(|(r, _)| *r != LESION_RANK)
+            .map(|(_, (b, m, a))| match which {
+                0 => b.2,
+                1 => m.2,
+                _ => a.2,
+            })
+            .collect();
+        v.iter().sum::<f64>() / v.len() as f64
+    };
+
+    let stages = ["pre-lesion", "post-lesion (200 steps)", "recovered"];
+    println!(
+        "{:<26} {:>16} {:>18} {:>14}",
+        "stage", "healthy synapses", "touching lesion", "healthy Ca"
+    );
+    for (i, stage) in stages.iter().enumerate() {
+        println!(
+            "{:<26} {:>16} {:>18} {:>14.3}",
+            stage,
+            agg(|c| c.0, i),
+            agg(|c| c.1, i),
+            ca_healthy(i)
+        );
+    }
+
+    let lesioned_after = agg(|c| c.1, 2);
+    let healthy_before = agg(|c| c.0, 0);
+    let healthy_after = agg(|c| c.0, 2);
+    assert_eq!(lesioned_after, 0, "lesioned neurons must end fully disconnected");
+    assert!(
+        healthy_after > healthy_before,
+        "survivors should rewire among themselves ({healthy_before} -> {healthy_after})"
+    );
+    println!("lesion rewiring OK: deafferented survivors formed replacement synapses.");
+    Ok(())
+}

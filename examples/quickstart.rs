@@ -1,0 +1,45 @@
+//! Quickstart: the smallest meaningful ILMI run.
+//!
+//! Simulates a 4-rank, 1024-neuron network for 1000 steps (10
+//! connectivity updates) with the paper's NEW algorithms — the
+//! location-aware Barnes–Hut and the frequency-based spike exchange —
+//! then prints the phase breakdown and network statistics.
+//!
+//!     cargo run --release --example quickstart
+
+use ilmi::config::SimConfig;
+use ilmi::coordinator::run_simulation;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = SimConfig {
+        ranks: 4,
+        neurons_per_rank: 256,
+        steps: 1000,
+        ..SimConfig::default()
+    };
+    println!(
+        "quickstart: {} ranks x {} neurons, {} steps ({} connectivity updates), theta={}",
+        cfg.ranks,
+        cfg.neurons_per_rank,
+        cfg.steps,
+        cfg.steps / cfg.plasticity_interval,
+        cfg.theta
+    );
+
+    let report = run_simulation(&cfg)?;
+    print!("{}", report.phase_table());
+
+    let f = report.formation();
+    println!(
+        "searches {} | proposals {} | formed {} | declined {} | failed {}",
+        f.searches, f.proposals, f.formed, f.declined, f.failed_searches
+    );
+    println!(
+        "spike look-ups {} | synchronization collectives {}",
+        report.total_lookups(),
+        report.ranks.iter().map(|r| r.comm.collectives).sum::<u64>()
+    );
+    assert!(report.total_synapses() > 0, "expected the network to wire up");
+    println!("quickstart OK");
+    Ok(())
+}

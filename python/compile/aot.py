@@ -1,0 +1,92 @@
+"""AOT lowering: JAX/Pallas -> HLO text artifacts for the Rust runtime.
+
+Interchange format is HLO *text*, NOT a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(what the published `xla` 0.1.6 crate links) rejects (`proto.id() <=
+INT_MAX`). The text parser reassigns ids and round-trips cleanly — see
+/opt/xla-example/README.md.
+
+Lowered with `return_tuple=True`; the Rust side unwraps with `to_tuple*`.
+
+Artifacts (one per batch size, so Rust pads a rank's neuron count to the
+next available size):
+
+    artifacts/neuron_update_b{N}.hlo.txt   N in NEURON_BATCHES
+    artifacts/gauss_probs_n{N}.hlo.txt     N in PROB_BATCHES
+    artifacts/manifest.txt                 one line per artifact
+
+Usage: cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import ref
+
+NEURON_BATCHES = [256, 1024, 4096, 16384, 65536]
+PROB_BATCHES = [1024, 4096, 16384]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_neuron_update(n: int) -> str:
+    vec = jax.ShapeDtypeStruct((n,), jnp.float32)
+    par = jax.ShapeDtypeStruct((ref.NUM_PARAMS,), jnp.float32)
+    args = [vec] * 8 + [par]
+    return to_hlo_text(jax.jit(model.electrical_update).lower(*args))
+
+
+def lower_gauss_probs(n: int) -> str:
+    vec = jax.ShapeDtypeStruct((n,), jnp.float32)
+    src = jax.ShapeDtypeStruct((3,), jnp.float32)
+    sig = jax.ShapeDtypeStruct((1,), jnp.float32)
+    return to_hlo_text(
+        jax.jit(model.connection_probs).lower(src, sig, vec, vec, vec, vec)
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--max-neuron-batch", type=int, default=65536,
+                    help="skip neuron batches above this size")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = []
+    for n in NEURON_BATCHES:
+        if n > args.max_neuron_batch:
+            continue
+        name = f"neuron_update_b{n}.hlo.txt"
+        text = lower_neuron_update(n)
+        with open(os.path.join(args.out_dir, name), "w") as f:
+            f.write(text)
+        manifest.append(f"neuron_update {n} {name}")
+        print(f"wrote {name} ({len(text)} chars)")
+    for n in PROB_BATCHES:
+        name = f"gauss_probs_n{n}.hlo.txt"
+        text = lower_gauss_probs(n)
+        with open(os.path.join(args.out_dir, name), "w") as f:
+            f.write(text)
+        manifest.append(f"gauss_probs {n} {name}")
+        print(f"wrote {name} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"manifest: {len(manifest)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

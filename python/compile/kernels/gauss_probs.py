@@ -1,0 +1,58 @@
+"""L1 Pallas kernel: Gaussian connection-probability row.
+
+Computes, for one searching axon at `src_pos`, the un-normalised MSP
+connection probability against every candidate dendrite:
+
+    p_j = vac_j * exp(-|x_j - src|^2 / sigma^2)
+
+This is the inner product the direct O(n^2) connectivity update evaluates
+n times per plasticity step; the Barnes-Hut path approximates exactly this
+row. The kernel is the oracle for distribution tests of both Barnes-Hut
+variants and powers the `direct` baseline in the bench harness.
+
+Tiling: candidate positions arrive as three separate coordinate arrays
+(SoA) so each tile is a clean (BLOCK,) vector; the scalar source position
+is broadcast from a (3,) operand into every grid step (one VMEM-resident
+copy reused across all target tiles — the data stays put, the small thing
+moves, which is the paper's own trick at cluster level).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 1024
+
+
+def _kernel(src_ref, sigma_ref, tx_ref, ty_ref, tz_ref, vac_ref, out_ref):
+    src = src_ref[...]
+    dx = tx_ref[...] - src[0]
+    dy = ty_ref[...] - src[1]
+    dz = tz_ref[...] - src[2]
+    d2 = dx * dx + dy * dy + dz * dz
+    sigma = sigma_ref[0]
+    out_ref[...] = vac_ref[...] * jnp.exp(-d2 / (sigma * sigma))
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def gauss_probs(src_pos, sigma, tx, ty, tz, vac, *, block=BLOCK):
+    """Probability row over n candidates (n a multiple of `block`).
+
+    src_pos: f32 (3,); sigma: f32 (1,); tx/ty/tz/vac: f32 (n,).
+    """
+    n = tx.shape[0]
+    assert n % block == 0, f"batch {n} not a multiple of block {block}"
+    grid = (n // block,)
+    vec_spec = pl.BlockSpec((block,), lambda i: (i,))
+    src_spec = pl.BlockSpec((3,), lambda i: (0,))
+    sig_spec = pl.BlockSpec((1,), lambda i: (0,))
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[src_spec, sig_spec] + [vec_spec] * 4,
+        out_specs=vec_spec,
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(src_pos, sigma, tx, ty, tz, vac)

@@ -1,0 +1,62 @@
+"""L1 Pallas kernel: fused MSP neuron-state transition.
+
+One pass over a structure-of-arrays tile of neurons performs the whole
+per-step state transition the paper's "Actual activity update" and
+"Update of synaptic elements" phases need: Izhikevich integration, spike
+detection/reset, calcium trace, and the three Gaussian growth curves.
+
+TPU framing (DESIGN.md SS Hardware-Adaptation): the kernel is elementwise
+(VPU-bound), so the win is touching each state array exactly once per
+step — block = (BLOCK,) per array, 9 input tiles + 7 output tiles of
+BLOCK * 4 B each (BLOCK=1024 -> 64 KiB live in VMEM, far under budget),
+one HBM<->VMEM round trip instead of five separate elementwise passes.
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO, which is what the Rust
+runtime loads.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+BLOCK = 1024
+
+
+def _kernel(v_ref, u_ref, ca_ref, zax_ref, zde_ref, zdi_ref, isyn_ref,
+            noise_ref, params_ref,
+            vo_ref, uo_ref, cao_ref, zaxo_ref, zdeo_ref, zdio_ref, fo_ref):
+    params = params_ref[...]
+    out = ref.neuron_update_ref(
+        v_ref[...], u_ref[...], ca_ref[...],
+        zax_ref[...], zde_ref[...], zdi_ref[...],
+        isyn_ref[...], noise_ref[...], params,
+    )
+    vo_ref[...], uo_ref[...], cao_ref[...] = out[0], out[1], out[2]
+    zaxo_ref[...], zdeo_ref[...], zdio_ref[...] = out[3], out[4], out[5]
+    fo_ref[...] = out[6]
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def neuron_update(v, u, ca, z_ax, z_de, z_di, i_syn, noise, params,
+                  *, block=BLOCK):
+    """Pallas-tiled fused neuron update. All state arrays f32 (n,) with n a
+    multiple of `block`; params f32 (NUM_PARAMS,) broadcast to every tile."""
+    n = v.shape[0]
+    assert n % block == 0, f"batch {n} not a multiple of block {block}"
+    grid = (n // block,)
+    state_spec = pl.BlockSpec((block,), lambda i: (i,))
+    param_spec = pl.BlockSpec((ref.NUM_PARAMS,), lambda i: (0,))
+    out_shape = [jax.ShapeDtypeStruct((n,), jnp.float32) for _ in range(7)]
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[state_spec] * 8 + [param_spec],
+        out_specs=[state_spec] * 7,
+        out_shape=out_shape,
+        interpret=True,
+    )(v, u, ca, z_ax, z_de, z_di, i_syn, noise, params)

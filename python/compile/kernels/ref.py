@@ -1,0 +1,97 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the CORE correctness references: `neuron_update_ref` defines the
+fused MSP electrical/plasticity state transition (Izhikevich + calcium +
+three Gaussian growth curves), and `gauss_probs_ref` defines the pairwise
+Gaussian connection-probability row used by the direct O(n^2) baseline.
+
+The Rust native fallback (`rust/src/neuron/izhikevich.rs`) mirrors this
+math op-for-op in f32; the integration test `integration_runtime.rs`
+checks the lowered HLO against the Rust implementation.
+"""
+
+import jax.numpy as jnp
+
+# Indices into the (16,) f32 parameter vector shared by all layers.
+# Keep in sync with `rust/src/neuron/params.rs` (PARAM_* constants).
+P_A = 0  # Izhikevich recovery time scale
+P_B = 1  # Izhikevich recovery sensitivity
+P_C = 2  # Izhikevich reset potential (mV)
+P_D = 3  # Izhikevich reset recovery increment
+P_DT = 4  # integration step (ms)
+P_TAU_CA = 5  # calcium decay constant (steps)
+P_BETA_CA = 6  # calcium increment per spike
+P_NU = 7  # synaptic-element growth rate (elements/step)
+P_EPS = 8  # target calcium (growth-curve zero, right)
+P_ETA_AX = 9  # minimal calcium for axonal growth (zero, left)
+P_ETA_DEN = 10  # minimal calcium for dendritic growth (zero, left)
+P_VSPIKE = 11  # spike threshold (mV)
+P_ISCALE = 12  # synaptic-input scaling
+NUM_PARAMS = 16
+
+SQRT_LN2 = 0.8325546111576977  # sqrt(ln 2)
+
+
+def growth_curve(ca, nu, eta, eps):
+    """Butz & van Ooyen (2013) Gaussian growth curve.
+
+    dz = nu * (2 * exp(-((ca - xi)/zeta)^2) - 1), with xi/zeta chosen so
+    the curve is exactly zero at ca = eta and ca = eps, positive between,
+    negative outside (homeostasis towards the target calcium eps).
+    """
+    xi = (eta + eps) / 2.0
+    zeta = (eps - eta) / (2.0 * SQRT_LN2)
+    g = (ca - xi) / zeta
+    return nu * (2.0 * jnp.exp(-(g * g)) - 1.0)
+
+
+def neuron_update_ref(v, u, ca, z_ax, z_de, z_di, i_syn, noise, params):
+    """One fused MSP step for a batch of neurons (all arrays f32 (n,)).
+
+    Returns (v', u', ca', z_ax', z_de', z_di', fired) with fired in {0,1}.
+    """
+    a = params[P_A]
+    b = params[P_B]
+    c = params[P_C]
+    d = params[P_D]
+    dt = params[P_DT]
+    tau_ca = params[P_TAU_CA]
+    beta_ca = params[P_BETA_CA]
+    nu = params[P_NU]
+    eps = params[P_EPS]
+    eta_ax = params[P_ETA_AX]
+    eta_den = params[P_ETA_DEN]
+    v_spike = params[P_VSPIKE]
+    i_scale = params[P_ISCALE]
+
+    i_total = i_syn * i_scale + noise
+
+    # Izhikevich (2003): v' = 0.04 v^2 + 5v + 140 - u + I ; u' = a(bv - u).
+    v_new = v + dt * (0.04 * v * v + 5.0 * v + 140.0 - u + i_total)
+    u_new = u + dt * a * (b * v - u)
+
+    fired = (v_new >= v_spike).astype(jnp.float32)
+    v_out = jnp.where(fired > 0.0, c, v_new)
+    u_out = jnp.where(fired > 0.0, u_new + d, u_new)
+
+    # Calcium trace: running, exponentially-decaying spike average.
+    ca_out = ca - dt * ca / tau_ca + beta_ca * fired
+
+    # Synaptic-element growth (axonal / excitatory-dendritic /
+    # inhibitory-dendritic); element counts never go negative.
+    z_ax_out = jnp.maximum(z_ax + growth_curve(ca_out, nu, eta_ax, eps), 0.0)
+    z_de_out = jnp.maximum(z_de + growth_curve(ca_out, nu, eta_den, eps), 0.0)
+    z_di_out = jnp.maximum(z_di + growth_curve(ca_out, nu, eta_den, eps), 0.0)
+
+    return v_out, u_out, ca_out, z_ax_out, z_de_out, z_di_out, fired
+
+
+def gauss_probs_ref(src_pos, tgt_pos, tgt_vac, sigma):
+    """Gaussian connection-probability row: vac_j * exp(-|x_j - s|^2 / sigma^2).
+
+    src_pos: (3,), tgt_pos: (n, 3), tgt_vac: (n,). The caller masks
+    self-connection by zeroing its own vacancy entry.
+    """
+    diff = tgt_pos - src_pos[None, :]
+    d2 = jnp.sum(diff * diff, axis=1)
+    return tgt_vac * jnp.exp(-d2 / (sigma * sigma))

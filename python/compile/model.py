@@ -1,0 +1,42 @@
+"""L2 JAX model: the per-rank batched compute graph the Rust runtime runs.
+
+Two exported computations:
+
+* `electrical_update` — one simulation step for all neurons a rank owns:
+  the fused L1 `neuron_update` Pallas kernel over the SoA state. This is
+  the paper's "Actual activity update" + "Update of synaptic elements"
+  phases, batched. Rust supplies the synaptic input (assembled from the
+  spike-exchange phase) and the background noise (its own PRNG, so the
+  artifact stays stateless and deterministic).
+* `connection_probs` — one Gaussian probability row (L1 `gauss_probs`),
+  used by the direct O(n^2) baseline and by tests.
+
+Both are lowered once per batch size by `aot.py` to HLO text; Python is
+never on the request path.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import gauss_probs as gp
+from .kernels import neuron_update as nu
+from .kernels import ref
+
+
+def electrical_update(v, u, ca, z_ax, z_de, z_di, i_syn, noise, params):
+    """Fused per-step state transition (see kernels.ref for the math)."""
+    block = min(nu.BLOCK, v.shape[0])
+    return nu.neuron_update(v, u, ca, z_ax, z_de, z_di, i_syn, noise,
+                            params, block=block)
+
+
+def connection_probs(src_pos, sigma, tx, ty, tz, vac):
+    """Gaussian connection-probability row for one searching axon."""
+    block = min(gp.BLOCK, tx.shape[0])
+    return (gp.gauss_probs(src_pos, sigma, tx, ty, tz, vac, block=block),)
+
+
+def electrical_update_ref(v, u, ca, z_ax, z_de, z_di, i_syn, noise, params):
+    """Pure-jnp reference of `electrical_update` (no Pallas) for tests."""
+    return ref.neuron_update_ref(v, u, ca, z_ax, z_de, z_di, i_syn, noise,
+                                 params)

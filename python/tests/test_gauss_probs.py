@@ -1,0 +1,99 @@
+"""L1 correctness: Pallas gauss_probs kernel vs the pure-jnp oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import model
+from compile.kernels import gauss_probs as gp
+from compile.kernels import ref
+
+
+def run_kernel(src, sigma, pos, vac, block=None):
+    n = pos.shape[0]
+    blk = block or min(gp.BLOCK, n)
+    return np.asarray(gp.gauss_probs(
+        jnp.asarray(src), jnp.asarray([sigma], dtype=jnp.float32),
+        jnp.asarray(pos[:, 0]), jnp.asarray(pos[:, 1]),
+        jnp.asarray(pos[:, 2]), jnp.asarray(vac), block=blk))
+
+
+def run_ref(src, sigma, pos, vac):
+    return np.asarray(ref.gauss_probs_ref(
+        jnp.asarray(src), jnp.asarray(pos), jnp.asarray(vac),
+        jnp.float32(sigma)))
+
+
+def random_case(rng, n, box=1000.0):
+    src = rng.uniform(0, box, 3).astype(np.float32)
+    pos = rng.uniform(0, box, (n, 3)).astype(np.float32)
+    vac = rng.integers(0, 5, n).astype(np.float32)
+    return src, pos, vac
+
+
+def test_kernel_matches_ref():
+    rng = np.random.default_rng(0)
+    src, pos, vac = random_case(rng, 256)
+    np.testing.assert_allclose(run_kernel(src, 750.0, pos, vac),
+                               run_ref(src, 750.0, pos, vac),
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_kernel_matches_ref_multi_block():
+    rng = np.random.default_rng(1)
+    src, pos, vac = random_case(rng, 512)
+    np.testing.assert_allclose(run_kernel(src, 750.0, pos, vac, block=128),
+                               run_ref(src, 750.0, pos, vac),
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_model_entrypoint_matches_ref():
+    rng = np.random.default_rng(2)
+    src, pos, vac = random_case(rng, 256)
+    (got,) = model.connection_probs(
+        jnp.asarray(src), jnp.asarray([750.0], dtype=jnp.float32),
+        jnp.asarray(pos[:, 0]), jnp.asarray(pos[:, 1]),
+        jnp.asarray(pos[:, 2]), jnp.asarray(vac))
+    np.testing.assert_allclose(np.asarray(got), run_ref(src, 750.0, pos, vac),
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_zero_vacancy_zero_probability():
+    rng = np.random.default_rng(3)
+    src, pos, vac = random_case(rng, 128)
+    vac[:] = 0.0
+    assert (run_kernel(src, 750.0, pos, vac) == 0.0).all()
+
+
+def test_probability_decays_with_distance():
+    src = np.zeros(3, dtype=np.float32)
+    n = 128
+    pos = np.zeros((n, 3), dtype=np.float32)
+    pos[:, 0] = np.linspace(0.0, 2000.0, n)
+    vac = np.ones(n, dtype=np.float32)
+    probs = run_kernel(src, 750.0, pos, vac)
+    assert (np.diff(probs) <= 1e-9).all()
+
+
+def test_at_source_probability_equals_vacancy():
+    src = np.array([5.0, 5.0, 5.0], dtype=np.float32)
+    pos = np.tile(src, (128, 1))
+    vac = np.full(128, 3.0, dtype=np.float32)
+    np.testing.assert_allclose(run_kernel(src, 750.0, pos, vac), 3.0,
+                               rtol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n_blocks=st.integers(min_value=1, max_value=4),
+    block=st.sampled_from([64, 256]),
+    sigma=st.floats(min_value=1.0, max_value=5000.0),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_kernel_matches_ref_hypothesis(n_blocks, block, sigma, seed):
+    rng = np.random.default_rng(seed)
+    src, pos, vac = random_case(rng, n_blocks * block)
+    np.testing.assert_allclose(run_kernel(src, sigma, pos, vac, block=block),
+                               run_ref(src, sigma, pos, vac),
+                               rtol=1e-5, atol=1e-7)

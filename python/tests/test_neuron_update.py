@@ -1,0 +1,195 @@
+"""L1 correctness: Pallas neuron_update kernel vs the pure-jnp oracle.
+
+This is the core correctness signal for the compute layer: everything the
+Rust runtime executes is the lowering of exactly this kernel.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import model
+from compile.kernels import neuron_update as nu
+from compile.kernels import ref
+
+
+def default_params():
+    p = np.zeros(ref.NUM_PARAMS, dtype=np.float32)
+    p[ref.P_A] = 0.02
+    p[ref.P_B] = 0.2
+    p[ref.P_C] = -65.0
+    p[ref.P_D] = 8.0
+    p[ref.P_DT] = 1.0
+    p[ref.P_TAU_CA] = 100.0
+    p[ref.P_BETA_CA] = 0.01
+    p[ref.P_NU] = 0.001
+    p[ref.P_EPS] = 0.7
+    p[ref.P_ETA_AX] = 0.1
+    p[ref.P_ETA_DEN] = 0.0
+    p[ref.P_VSPIKE] = 30.0
+    p[ref.P_ISCALE] = 10.0
+    return p
+
+
+def random_state(rng, n):
+    return dict(
+        v=rng.uniform(-80.0, 25.0, n).astype(np.float32),
+        u=rng.uniform(-20.0, 10.0, n).astype(np.float32),
+        ca=rng.uniform(0.0, 1.2, n).astype(np.float32),
+        z_ax=rng.uniform(0.0, 5.0, n).astype(np.float32),
+        z_de=rng.uniform(0.0, 5.0, n).astype(np.float32),
+        z_di=rng.uniform(0.0, 5.0, n).astype(np.float32),
+        i_syn=rng.uniform(-3.0, 3.0, n).astype(np.float32),
+        noise=rng.normal(5.0, 1.0, n).astype(np.float32),
+    )
+
+
+def run_both(state, params, block=None):
+    args = [state[k] for k in
+            ("v", "u", "ca", "z_ax", "z_de", "z_di", "i_syn", "noise")]
+    n = args[0].shape[0]
+    blk = block or min(nu.BLOCK, n)
+    got = nu.neuron_update(*[jnp.asarray(a) for a in args],
+                           jnp.asarray(params), block=blk)
+    want = ref.neuron_update_ref(*[jnp.asarray(a) for a in args],
+                                 jnp.asarray(params))
+    return got, want
+
+
+def assert_matches(got, want, atol=1e-4, rtol=1e-5):
+    # f32 + different fusion order between interpret-mode Pallas and the
+    # jnp oracle -> last-ulp differences on ~1e2-magnitude values.
+    names = ["v", "u", "ca", "z_ax", "z_de", "z_di", "fired"]
+    for g, w, name in zip(got, want, names):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   atol=atol, rtol=rtol, err_msg=name)
+
+
+def test_kernel_matches_ref_single_block():
+    rng = np.random.default_rng(0)
+    got, want = run_both(random_state(rng, 256), default_params())
+    assert_matches(got, want)
+
+
+def test_kernel_matches_ref_multi_block():
+    rng = np.random.default_rng(1)
+    got, want = run_both(random_state(rng, 512), default_params(), block=128)
+    assert_matches(got, want)
+
+
+def test_model_entrypoint_matches_ref():
+    rng = np.random.default_rng(2)
+    state = random_state(rng, 256)
+    args = [jnp.asarray(state[k]) for k in
+            ("v", "u", "ca", "z_ax", "z_de", "z_di", "i_syn", "noise")]
+    params = jnp.asarray(default_params())
+    got = model.electrical_update(*args, params)
+    want = model.electrical_update_ref(*args, params)
+    assert_matches(got, want)
+
+
+def test_spike_resets_state():
+    """A neuron pushed far above threshold fires, resets v to c, bumps u by d."""
+    params = default_params()
+    n = 128
+    state = {k: np.zeros(n, dtype=np.float32) for k in
+             ("v", "u", "ca", "z_ax", "z_de", "z_di", "i_syn", "noise")}
+    state["v"][:] = 29.0
+    state["noise"][:] = 1000.0  # guaranteed spike
+    got, _ = run_both(state, params)
+    fired = np.asarray(got[6])
+    assert (fired == 1.0).all()
+    np.testing.assert_allclose(np.asarray(got[0]), params[ref.P_C])
+
+
+def test_subthreshold_does_not_fire():
+    params = default_params()
+    n = 128
+    state = {k: np.zeros(n, dtype=np.float32) for k in
+             ("v", "u", "ca", "z_ax", "z_de", "z_di", "i_syn", "noise")}
+    state["v"][:] = -65.0
+    state["u"][:] = -13.0
+    got, _ = run_both(state, params)
+    assert (np.asarray(got[6]) == 0.0).all()
+
+
+def test_calcium_decays_without_spikes():
+    params = default_params()
+    n = 128
+    state = {k: np.zeros(n, dtype=np.float32) for k in
+             ("v", "u", "ca", "z_ax", "z_de", "z_di", "i_syn", "noise")}
+    state["v"][:] = -65.0
+    state["u"][:] = -13.0
+    state["ca"][:] = 0.5
+    got, _ = run_both(state, params)
+    ca = np.asarray(got[2])
+    expected = 0.5 - 0.5 / params[ref.P_TAU_CA]
+    np.testing.assert_allclose(ca, expected, rtol=1e-6)
+
+
+def test_elements_never_negative():
+    params = default_params()
+    rng = np.random.default_rng(3)
+    state = random_state(rng, 256)
+    state["z_ax"][:] = 0.0  # retraction would go below zero
+    state["ca"][:] = 2.0  # far above target -> shrink
+    got, _ = run_both(state, params)
+    for idx in (3, 4, 5):
+        assert (np.asarray(got[idx]) >= 0.0).all()
+
+
+def test_growth_curve_zeros_at_eta_and_eps():
+    g_eta = ref.growth_curve(jnp.float32(0.1), 0.001, 0.1, 0.7)
+    g_eps = ref.growth_curve(jnp.float32(0.7), 0.001, 0.1, 0.7)
+    assert abs(float(g_eta)) < 1e-8
+    assert abs(float(g_eps)) < 1e-8
+
+
+def test_growth_curve_sign_structure():
+    nu_, eta, eps = 0.001, 0.1, 0.7
+    mid = ref.growth_curve(jnp.float32(0.4), nu_, eta, eps)
+    below = ref.growth_curve(jnp.float32(0.0), nu_, eta, eps)
+    above = ref.growth_curve(jnp.float32(1.0), nu_, eta, eps)
+    assert float(mid) > 0.0  # grow between eta and eps
+    assert float(below) < 0.0  # retract below eta
+    assert float(above) < 0.0  # retract above eps (homeostasis)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n_blocks=st.integers(min_value=1, max_value=4),
+    block=st.sampled_from([64, 128, 256]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_kernel_matches_ref_hypothesis(n_blocks, block, seed):
+    """Property sweep: any (shape, seed) combination matches the oracle."""
+    rng = np.random.default_rng(seed)
+    state = random_state(rng, n_blocks * block)
+    got, want = run_both(state, default_params(), block=block)
+    assert_matches(got, want)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    tau=st.floats(min_value=10.0, max_value=1000.0),
+    beta=st.floats(min_value=0.0, max_value=0.1),
+    target=st.floats(min_value=0.3, max_value=1.0),
+)
+def test_kernel_matches_ref_param_sweep(tau, beta, target):
+    """Parameter-space sweep: the kernel tracks the oracle for any params."""
+    params = default_params()
+    params[ref.P_TAU_CA] = tau
+    params[ref.P_BETA_CA] = beta
+    params[ref.P_EPS] = target
+    rng = np.random.default_rng(42)
+    got, want = run_both(random_state(rng, 128), params)
+    assert_matches(got, want)
+
+
+def test_rejects_non_multiple_batch():
+    rng = np.random.default_rng(4)
+    state = random_state(rng, 100)
+    with pytest.raises(AssertionError):
+        run_both(state, default_params(), block=64)

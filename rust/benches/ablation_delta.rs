@@ -1,0 +1,85 @@
+//! Ablation: the frequency-exchange epoch length Δ (paper §IV-B / §V-A:
+//! "our version can theoretically benefit from larger Δ values"; the
+//! paper fixes Δ = 100 = every connectivity update).
+//!
+//! Sweeps Δ and reports (a) spike-transfer time, (b) bytes moved by the
+//! spike path, (c) modeled communication time on the paper's
+//! InfiniBand-class network (the counters re-priced — see
+//! `metrics::netmodel`), and (d) a quality proxy: mean |Ca − target| at
+//! the end of a §V-D-style homeostasis run. Expectation: cost falls
+//! ~1/Δ, quality degrades only slowly (response lag), Δ=100 is a sweet
+//! spot — which is why the paper chose it.
+
+#[path = "common/mod.rs"]
+mod common;
+use common::*;
+use ilmi::config::{SimConfig, SpikeAlg};
+use ilmi::coordinator::run_simulation;
+use ilmi::metrics::NetModel;
+
+fn main() {
+    figure_header("Ablation", "frequency-exchange epoch length (delta)");
+    let net = NetModel::hdr100();
+
+    println!(
+        "\n{:>7} {:>12} {:>12} {:>14} {:>16}",
+        "delta", "xfer [s]", "sent [B]", "net-model [s]", "|Ca - target|"
+    );
+
+    // Old algorithm reference row (per-step ids == \"delta 1\", exact).
+    {
+        let mut cfg = timing_cfg();
+        cfg.spike_alg = SpikeAlg::OldIds;
+        let report = run_simulation(&cfg).unwrap();
+        let q = quality_offset(&quality_cfg(1, SpikeAlg::OldIds));
+        println!(
+            "{:>7} {:>12.6} {:>12} {:>14.6} {:>16.4}   (old per-step ids)",
+            "exact",
+            report.phase_max(ilmi::metrics::Phase::SpikeExchange),
+            report.total_bytes_sent(),
+            net.price_run(&report.ranks.iter().map(|r| r.comm).collect::<Vec<_>>()),
+            q
+        );
+    }
+
+    for delta in [10usize, 50, 100, 200, 500] {
+        let mut cfg = timing_cfg();
+        cfg.delta = delta;
+        let report = run_simulation(&cfg).unwrap();
+        let q = quality_offset(&quality_cfg(delta, SpikeAlg::NewFrequency));
+        println!(
+            "{:>7} {:>12.6} {:>12} {:>14.6} {:>16.4}",
+            delta,
+            report.phase_max(ilmi::metrics::Phase::SpikeExchange),
+            report.total_bytes_sent(),
+            net.price_run(&report.ranks.iter().map(|r| r.comm).collect::<Vec<_>>()),
+            q
+        );
+    }
+    println!("\n(paper picks delta = 100 — every connectivity update)");
+}
+
+fn timing_cfg() -> SimConfig {
+    let mut cfg = paper_cfg(8, 512, 0.3);
+    cfg.spike_alg = SpikeAlg::NewFrequency;
+    cfg
+}
+
+fn quality_cfg(delta: usize, alg: SpikeAlg) -> SimConfig {
+    let mut cfg = SimConfig::paper_quality(20_000);
+    cfg.ranks = 16;
+    cfg.delta = delta.max(1);
+    cfg.spike_alg = alg;
+    cfg
+}
+
+/// Mean |Ca − target| over neurons at the end of a homeostasis run.
+fn quality_offset(cfg: &SimConfig) -> f64 {
+    let report = run_simulation(cfg).unwrap();
+    let target = cfg.neuron.eps_target_ca as f64;
+    let mut acc = 0.0;
+    for r in &report.ranks {
+        acc += (r.mean_calcium - target).abs();
+    }
+    acc / report.ranks.len() as f64
+}

@@ -1,0 +1,120 @@
+//! Shared bench harness. `criterion` is not in the offline crate set, so
+//! each bench target is a `harness = false` binary that runs the paper's
+//! workload (§V-B: 1000 steps, 10 plasticity updates, no initial
+//! connectivity, 1.1–1.5 vacant elements) across a parameter grid and
+//! prints the same rows/series the paper's figure reports.
+//!
+//! Environment knobs:
+//!   ILMI_BENCH_FULL=1    use the full grid (ranks up to 32, npr 4096)
+//!   ILMI_BENCH_STEPS=N   override the 1000-step workload length
+
+#![allow(dead_code)]
+
+use ilmi::config::{ConnectivityAlg, SimConfig, SpikeAlg};
+use ilmi::coordinator::run_simulation;
+use ilmi::metrics::{Phase, SimReport};
+
+/// One measured cell of a figure/table.
+#[derive(Clone, Copy, Debug)]
+pub struct Cell {
+    pub ranks: usize,
+    pub npr: usize,
+    pub theta: f64,
+    /// Connectivity-update time: target search + request/response
+    /// exchanges (what Fig. 3/6 plot).
+    pub conn_s: f64,
+    /// Spike/frequency transfer time (Fig. 4/7).
+    pub spike_s: f64,
+    /// Remote look-up time: binary search / PRNG (Fig. 5).
+    pub lookup_s: f64,
+    pub bytes_sent: u64,
+    pub bytes_rma: u64,
+    pub wall_s: f64,
+    pub synapses: usize,
+}
+
+pub fn full_grid() -> bool {
+    std::env::var("ILMI_BENCH_FULL").map(|v| v == "1").unwrap_or(false)
+}
+
+pub fn bench_steps() -> usize {
+    std::env::var("ILMI_BENCH_STEPS").ok().and_then(|v| v.parse().ok()).unwrap_or(1000)
+}
+
+/// Weak-scaling rank axis (paper: 1..1024; scaled to this box).
+pub fn rank_axis() -> Vec<usize> {
+    if full_grid() {
+        vec![1, 2, 4, 8, 16, 32]
+    } else {
+        vec![1, 2, 4, 8, 16]
+    }
+}
+
+/// Neurons-per-rank axis (paper: 1024..65,536; scaled).
+pub fn npr_axis() -> Vec<usize> {
+    if full_grid() {
+        vec![256, 1024, 4096]
+    } else {
+        vec![256, 1024]
+    }
+}
+
+pub const THETAS: [f64; 3] = [0.2, 0.3, 0.4];
+
+pub fn paper_cfg(ranks: usize, npr: usize, theta: f64) -> SimConfig {
+    let mut cfg = SimConfig::paper_timing(ranks, npr, theta);
+    cfg.steps = bench_steps();
+    cfg
+}
+
+/// Run one configuration and extract the figure quantities.
+pub fn measure(cfg: &SimConfig) -> Cell {
+    let report = run_simulation(cfg).expect("bench simulation failed");
+    cell_from(cfg, &report)
+}
+
+pub fn cell_from(cfg: &SimConfig, report: &SimReport) -> Cell {
+    Cell {
+        ranks: cfg.ranks,
+        npr: cfg.neurons_per_rank,
+        theta: cfg.theta,
+        conn_s: report.phase_max(Phase::BarnesHut) + report.phase_max(Phase::SynapseExchange),
+        spike_s: report.phase_max(Phase::SpikeExchange),
+        lookup_s: report.phase_max(Phase::SpikeLookup),
+        bytes_sent: report.total_bytes_sent(),
+        bytes_rma: report.total_bytes_rma(),
+        wall_s: report.wall_seconds,
+        synapses: report.total_synapses(),
+    }
+}
+
+pub fn with_algs(cfg: &SimConfig, conn: ConnectivityAlg, spikes: SpikeAlg) -> SimConfig {
+    SimConfig { connectivity_alg: conn, spike_alg: spikes, ..cfg.clone() }
+}
+
+pub const OLD: (ConnectivityAlg, SpikeAlg) = (ConnectivityAlg::OldRma, SpikeAlg::OldIds);
+pub const NEW: (ConnectivityAlg, SpikeAlg) =
+    (ConnectivityAlg::NewLocationAware, SpikeAlg::NewFrequency);
+
+/// Print a figure header in a consistent format.
+pub fn figure_header(name: &str, what: &str) {
+    println!("==========================================================");
+    println!("{name}: {what}");
+    println!("workload: {} steps, {} plasticity updates, no initial connectivity",
+        bench_steps(), bench_steps() / 100);
+    println!("==========================================================");
+}
+
+/// Seconds with µs resolution.
+pub fn s(x: f64) -> String {
+    format!("{x:.6}")
+}
+
+/// Ratio formatted as "x.xx".
+pub fn ratio(old: f64, new: f64) -> String {
+    if new <= 0.0 {
+        "inf".into()
+    } else {
+        format!("{:.2}", old / new)
+    }
+}

@@ -1,0 +1,43 @@
+//! Fig. 10 — performance model of the new location-aware algorithm:
+//! least-squares fit over the basis {1, log₂n, log₂²n} (the family
+//! Extra-P reports: O(log² n) with per-θ coefficients), extrapolated
+//! beyond the measured range exactly as the paper does.
+
+#[path = "common/mod.rs"]
+mod common;
+use common::*;
+use ilmi::metrics::model::{fit_log_model, r_squared};
+
+fn main() {
+    figure_header(
+        "Fig. 10",
+        "performance model of the new algorithm (fit + extrapolation)",
+    );
+    let npr = if full_grid() { 1024 } else { 512 };
+    for theta in THETAS {
+        let mut samples = Vec::new();
+        for &ranks in &rank_axis() {
+            let base = paper_cfg(ranks, npr, theta);
+            let cell = measure(&with_algs(&base, NEW.0, NEW.1));
+            let total = (ranks * npr) as f64;
+            samples.push((total, cell.conn_s));
+        }
+        let model = fit_log_model(&samples).expect("fit needs >= 3 scales");
+        let r2 = r_squared(&model, &samples);
+        println!("\ntheta = {theta}: t(n) = {}", model.formula());
+        println!("R^2 = {r2:.4} over measured n = {:?}", samples
+            .iter()
+            .map(|&(n, _)| n as usize)
+            .collect::<Vec<_>>());
+        println!("{:>12} {:>14} {:>14}", "n", "measured [s]", "model [s]");
+        for &(n, y) in &samples {
+            println!("{:>12} {:>14.6} {:>14.6}", n as usize, y, model.eval(n));
+        }
+        // Extrapolate like the paper ("fitted the trend line and
+        // extrapolated it beyond our tests").
+        for mult in [4usize, 16, 64] {
+            let n = samples.last().unwrap().0 * mult as f64;
+            println!("{:>12} {:>14} {:>14.6}", n as usize, "-", model.eval(n));
+        }
+    }
+}

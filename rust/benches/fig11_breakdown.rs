@@ -1,0 +1,54 @@
+//! Fig. 11 — phase breakdown of the largest simulation, old vs new
+//! (paper: 1024 ranks × 65,536 neurons, θ = 0.2; 617 s -> 131 s,
+//! a 78.8% wall-clock reduction).
+//!
+//! Shape to check: with the new algorithms, per-neuron compute
+//! (activity + elements) and Barnes–Hut dominate; communication phases
+//! shrink to a small share.
+
+#[path = "common/mod.rs"]
+mod common;
+use common::*;
+use ilmi::metrics::{ALL_PHASES};
+
+fn main() {
+    let (ranks, npr) = if full_grid() { (32, 2048) } else { (16, 1024) };
+    figure_header(
+        "Fig. 11",
+        &format!("phase breakdown at the largest local scale ({ranks} ranks x {npr} neurons, theta=0.2)"),
+    );
+    let base = paper_cfg(ranks, npr, 0.2);
+    let old_report =
+        ilmi::coordinator::run_simulation(&with_algs(&base, OLD.0, OLD.1)).unwrap();
+    let new_report =
+        ilmi::coordinator::run_simulation(&with_algs(&base, NEW.0, NEW.1)).unwrap();
+
+    println!(
+        "\n{:<18} {:>12} {:>7} {:>12} {:>7}",
+        "phase", "old [s]", "old %", "new [s]", "new %"
+    );
+    let old_total: f64 = ALL_PHASES.iter().map(|&p| old_report.phase_max(p)).sum();
+    let new_total: f64 = ALL_PHASES.iter().map(|&p| new_report.phase_max(p)).sum();
+    for p in ALL_PHASES {
+        let o = old_report.phase_max(p);
+        let n = new_report.phase_max(p);
+        println!(
+            "{:<18} {:>12.4} {:>6.1}% {:>12.4} {:>6.1}%",
+            p.name(),
+            o,
+            100.0 * o / old_total,
+            n,
+            100.0 * n / new_total
+        );
+    }
+    println!(
+        "{:<18} {:>12.4} {:>7} {:>12.4}",
+        "sum(max-per-phase)", old_total, "", new_total
+    );
+    println!(
+        "wall clock: {:.3} s -> {:.3} s ({:.1}% reduction; paper: 78.8%)",
+        old_report.wall_seconds,
+        new_report.wall_seconds,
+        100.0 * (1.0 - new_report.wall_seconds / old_report.wall_seconds)
+    );
+}

@@ -1,0 +1,40 @@
+//! Fig. 3 — weak scaling of the connectivity update: old (RMA
+//! download) vs new (location-aware) Barnes–Hut, one panel per
+//! neurons-per-rank value, θ ∈ {0.2, 0.3, 0.4}.
+//!
+//! Paper shape to check: identical at 1 rank; the gap opens with rank
+//! count (paper: up to 6–10x at 512–1024 ranks); larger θ is faster for
+//! both.
+
+#[path = "common/mod.rs"]
+mod common;
+use common::*;
+
+fn main() {
+    figure_header(
+        "Fig. 3",
+        "connectivity-update time [s], old vs new Barnes-Hut (weak scaling)",
+    );
+    for npr in npr_axis() {
+        println!("\n--- panel: {npr} neurons per rank ---");
+        println!(
+            "{:>6} {:>6} {:>12} {:>12} {:>8}",
+            "ranks", "theta", "old [s]", "new [s]", "old/new"
+        );
+        for theta in THETAS {
+            for &ranks in &rank_axis() {
+                let base = paper_cfg(ranks, npr, theta);
+                let old = measure(&with_algs(&base, OLD.0, OLD.1));
+                let new = measure(&with_algs(&base, NEW.0, NEW.1));
+                println!(
+                    "{:>6} {:>6.1} {:>12} {:>12} {:>8}",
+                    ranks,
+                    theta,
+                    s(old.conn_s),
+                    s(new.conn_s),
+                    ratio(old.conn_s, new.conn_s)
+                );
+            }
+        }
+    }
+}

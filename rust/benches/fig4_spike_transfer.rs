@@ -1,0 +1,45 @@
+//! Fig. 4 — weak scaling of spike transmission: per-step spike-id
+//! exchange (old) vs Δ-epoch frequency exchange (new).
+//!
+//! Paper shape to check: old grows super-linearly with rank count
+//! (synchronization + channel setup dominate); new stays virtually
+//! constant in rank count and is orders of magnitude cheaper (paper:
+//! 23 s vs 169 ms at the largest scale).
+
+#[path = "common/mod.rs"]
+mod common;
+use common::*;
+use ilmi::config::ConnectivityAlg;
+
+fn main() {
+    figure_header("Fig. 4", "spike/frequency transfer time [s] (weak scaling)");
+    for npr in npr_axis() {
+        println!("\n--- panel: {npr} neurons per rank ---");
+        println!(
+            "{:>6} {:>12} {:>12} {:>8}",
+            "ranks", "spikes [s]", "freqs [s]", "old/new"
+        );
+        for &ranks in &rank_axis() {
+            // Connectivity algorithm fixed to the new one so only the
+            // spike path differs.
+            let base = paper_cfg(ranks, npr, 0.3);
+            let old = measure(&with_algs(
+                &base,
+                ConnectivityAlg::NewLocationAware,
+                ilmi::config::SpikeAlg::OldIds,
+            ));
+            let new = measure(&with_algs(
+                &base,
+                ConnectivityAlg::NewLocationAware,
+                ilmi::config::SpikeAlg::NewFrequency,
+            ));
+            println!(
+                "{:>6} {:>12} {:>12} {:>8}",
+                ranks,
+                s(old.spike_s),
+                s(new.spike_s),
+                ratio(old.spike_s, new.spike_s)
+            );
+        }
+    }
+}

@@ -1,0 +1,42 @@
+//! Fig. 5 — remote-spike look-up time: binary search over received id
+//! lists (old) vs PRNG reconstruction from frequencies (new).
+//!
+//! Paper shape to check: both essentially flat in rank count; the PRNG
+//! path is somewhat SLOWER (paper: 13 s vs 9.5 s — a 1.5x premium that
+//! §VI calls "an insignificant cost compared to the gains").
+
+#[path = "common/mod.rs"]
+mod common;
+use common::*;
+use ilmi::config::{ConnectivityAlg, SpikeAlg};
+
+fn main() {
+    figure_header("Fig. 5", "remote spike look-up time [s]: binary search vs PRNG");
+    for npr in npr_axis() {
+        println!("\n--- panel: {npr} neurons per rank ---");
+        println!(
+            "{:>6} {:>12} {:>12} {:>10}",
+            "ranks", "search [s]", "PRNG [s]", "PRNG/srch"
+        );
+        for &ranks in &rank_axis() {
+            let base = paper_cfg(ranks, npr, 0.3);
+            let old = measure(&with_algs(
+                &base,
+                ConnectivityAlg::NewLocationAware,
+                SpikeAlg::OldIds,
+            ));
+            let new = measure(&with_algs(
+                &base,
+                ConnectivityAlg::NewLocationAware,
+                SpikeAlg::NewFrequency,
+            ));
+            println!(
+                "{:>6} {:>12} {:>12} {:>10}",
+                ranks,
+                s(old.lookup_s),
+                s(new.lookup_s),
+                ratio(new.lookup_s, old.lookup_s)
+            );
+        }
+    }
+}

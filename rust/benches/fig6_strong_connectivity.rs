@@ -1,0 +1,35 @@
+//! Fig. 6 — STRONG scaling of the new location-aware Barnes–Hut: total
+//! neuron count fixed (paper: 65,536 and 1,048,576; scaled here),
+//! rank count varies.
+
+#[path = "common/mod.rs"]
+mod common;
+use common::*;
+
+fn main() {
+    figure_header(
+        "Fig. 6",
+        "connectivity-update time [s], new algorithm (strong scaling)",
+    );
+    let totals: &[usize] = if full_grid() { &[8192, 65536] } else { &[4096, 16384] };
+    for &total in totals {
+        println!("\n--- panel: {total} total neurons ---");
+        println!("{:>6} {:>8} {:>6} {:>12}", "ranks", "npr", "theta", "new [s]");
+        for theta in THETAS {
+            for &ranks in &rank_axis() {
+                if total / ranks < 32 {
+                    continue;
+                }
+                let base = paper_cfg(ranks, total / ranks, theta);
+                let new = measure(&with_algs(&base, NEW.0, NEW.1));
+                println!(
+                    "{:>6} {:>8} {:>6.1} {:>12}",
+                    ranks,
+                    total / ranks,
+                    theta,
+                    s(new.conn_s)
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,32 @@
+//! Fig. 7 — STRONG scaling of the new frequency-transfer algorithm:
+//! total neuron count fixed, rank count varies.
+
+#[path = "common/mod.rs"]
+mod common;
+use common::*;
+
+fn main() {
+    figure_header(
+        "Fig. 7",
+        "frequency transfer time [s], new algorithm (strong scaling)",
+    );
+    let totals: &[usize] = if full_grid() { &[8192, 65536] } else { &[4096, 16384] };
+    for &total in totals {
+        println!("\n--- panel: {total} total neurons ---");
+        println!("{:>6} {:>8} {:>12} {:>12}", "ranks", "npr", "freqs [s]", "lookup [s]");
+        for &ranks in &rank_axis() {
+            if total / ranks < 32 {
+                continue;
+            }
+            let base = paper_cfg(ranks, total / ranks, 0.3);
+            let new = measure(&with_algs(&base, NEW.0, NEW.1));
+            println!(
+                "{:>6} {:>8} {:>12} {:>12}",
+                ranks,
+                total / ranks,
+                s(new.spike_s),
+                s(new.lookup_s)
+            );
+        }
+    }
+}

@@ -1,0 +1,71 @@
+//! Tables I and II — bytes sent (and remotely accessed) over the whole
+//! simulation, old algorithms vs new algorithms, across the
+//! (ranks × neurons-per-rank) grid.
+//!
+//! Paper shape to check: at 1 rank nothing crosses the wire in either
+//! version except bookkeeping; the old version's RMA traffic explodes
+//! with scale (Table I lower entries); the new version sends a bounded,
+//! frequency-independent volume (Table II) — overall a ~21x reduction
+//! in transferred information at the paper's largest scale.
+
+#[path = "common/mod.rs"]
+mod common;
+use common::*;
+use ilmi::util::format_bytes;
+
+fn main() {
+    figure_header("Tables I + II", "transferred bytes over the whole simulation (theta=0.2)");
+    let ranks_axis = rank_axis();
+    let nprs = npr_axis();
+
+    println!("\nTable I — OLD algorithms: bytes sent (upper) / remotely accessed (lower)");
+    print!("{:>8}", "ranks");
+    for npr in &nprs {
+        print!(" {:>12}", format!("npr {npr}"));
+    }
+    println!();
+    let mut old_cells = Vec::new();
+    for &ranks in &ranks_axis {
+        let mut sent_row = format!("{ranks:>6} r.");
+        let mut rma_row = format!("{:>8}", "");
+        for &npr in &nprs {
+            let cell = measure(&with_algs(&paper_cfg(ranks, npr, 0.2), OLD.0, OLD.1));
+            sent_row.push_str(&format!(" {:>12}", format_bytes(cell.bytes_sent)));
+            rma_row.push_str(&format!(" {:>12}", format_bytes(cell.bytes_rma)));
+            old_cells.push(cell);
+        }
+        println!("{sent_row}");
+        println!("{rma_row}");
+    }
+
+    println!("\nTable II — NEW algorithms: bytes sent (no RMA by construction)");
+    print!("{:>8}", "ranks");
+    for npr in &nprs {
+        print!(" {:>12}", format!("npr {npr}"));
+    }
+    println!();
+    let mut new_cells = Vec::new();
+    for &ranks in &ranks_axis {
+        let mut sent_row = format!("{ranks:>6} r.");
+        for &npr in &nprs {
+            let cell = measure(&with_algs(&paper_cfg(ranks, npr, 0.2), NEW.0, NEW.1));
+            assert_eq!(cell.bytes_rma, 0, "new algorithms must not RMA");
+            sent_row.push_str(&format!(" {:>12}", format_bytes(cell.bytes_sent)));
+            new_cells.push(cell);
+        }
+        println!("{sent_row}");
+    }
+
+    // Reduction factor at the largest measured cell (paper: 21x).
+    let old_last = old_cells.last().unwrap();
+    let new_last = new_cells.last().unwrap();
+    let old_total = old_last.bytes_sent + old_last.bytes_rma;
+    println!(
+        "\nlargest cell ({} ranks x {} npr): old {} (sent+rma) vs new {} -> {:.1}x reduction",
+        old_last.ranks,
+        old_last.npr,
+        format_bytes(old_total),
+        format_bytes(new_last.bytes_sent),
+        old_total as f64 / new_last.bytes_sent.max(1) as f64
+    );
+}

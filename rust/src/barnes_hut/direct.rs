@@ -1,0 +1,221 @@
+//! Direct O(n²) synapse formation — the NEST-style baseline (paper §II:
+//! NEST "incorporates MSP with a time complexity of O(n²)").
+//!
+//! Every rank gathers (id, position, vacancies) of all neurons, then
+//! evaluates the full Gaussian probability row for each searching axon —
+//! exactly the computation the L1 `gauss_probs` Pallas kernel performs,
+//! and the oracle the Barnes–Hut variants approximate. Used as a
+//! baseline in benches and as the reference distribution in tests.
+
+use crate::comm::{gather_all, ThreadComm};
+use crate::config::SimConfig;
+use crate::neuron::{GlobalNeuronId, Population};
+use crate::plasticity::{vacant, SynapseStore};
+use crate::util::wire::{get_f32, get_u64, put_f32, put_u64, Wire};
+use crate::util::{Rng, Vec3};
+
+use super::{axon_kind, kernel_weight, old_request_roundtrip, FormationStats, OldRequest};
+use crate::octree::ElementKind;
+
+/// Per-neuron record gathered by every rank (28 B).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DirectRecord {
+    pub id: GlobalNeuronId,
+    pub pos: [f32; 3],
+    pub vac_exc: f32,
+    pub vac_inh: f32,
+}
+
+impl Wire for DirectRecord {
+    const SIZE: usize = 8 + 12 + 4 + 4;
+    fn write(&self, out: &mut Vec<u8>) {
+        put_u64(out, self.id);
+        for v in self.pos {
+            put_f32(out, v);
+        }
+        put_f32(out, self.vac_exc);
+        put_f32(out, self.vac_inh);
+    }
+    fn read(buf: &[u8]) -> Self {
+        DirectRecord {
+            id: get_u64(buf, 0),
+            pos: [get_f32(buf, 8), get_f32(buf, 12), get_f32(buf, 16)],
+            vac_exc: get_f32(buf, 20),
+            vac_inh: get_f32(buf, 24),
+        }
+    }
+}
+
+/// Gather the global candidate table (only neurons with any vacant
+/// dendritic element; others can never be chosen).
+pub fn gather_candidates(
+    comm: &ThreadComm,
+    pop: &Population,
+    store: &SynapseStore,
+) -> Vec<DirectRecord> {
+    let mine: Vec<DirectRecord> = (0..pop.len())
+        .filter_map(|i| {
+            let ve = vacant(pop.z_den_exc[i], store.connected_den_exc[i]) as f32;
+            let vi = vacant(pop.z_den_inh[i], store.connected_den_inh[i]) as f32;
+            if ve == 0.0 && vi == 0.0 {
+                return None;
+            }
+            let p = pop.positions[i];
+            Some(DirectRecord {
+                id: pop.global_id(i),
+                pos: [p.x as f32, p.y as f32, p.z as f32],
+                vac_exc: ve,
+                vac_inh: vi,
+            })
+        })
+        .collect();
+    gather_all(comm, &mine).into_iter().flatten().collect()
+}
+
+/// Sample one target for a source at `src_pos` from the full candidate
+/// table — the exact distribution Barnes–Hut approximates.
+pub fn sample_direct(
+    records: &[DirectRecord],
+    src_id: GlobalNeuronId,
+    src_pos: &Vec3,
+    kind: ElementKind,
+    sigma: f64,
+    weights_scratch: &mut Vec<f64>,
+    rng: &mut Rng,
+) -> Option<GlobalNeuronId> {
+    weights_scratch.clear();
+    weights_scratch.reserve(records.len());
+    for r in records {
+        let vac = match kind {
+            ElementKind::Excitatory => r.vac_exc,
+            ElementKind::Inhibitory => r.vac_inh,
+        };
+        let w = if r.id == src_id {
+            0.0
+        } else {
+            let p = Vec3::new(r.pos[0] as f64, r.pos[1] as f64, r.pos[2] as f64);
+            kernel_weight(vac, src_pos.dist2(&p), sigma)
+        };
+        weights_scratch.push(w);
+    }
+    rng.weighted_choice(weights_scratch).map(|k| records[k].id)
+}
+
+/// Full formation phase, direct algorithm.
+pub fn run_formation(
+    comm: &ThreadComm,
+    pop: &Population,
+    store: &mut SynapseStore,
+    cfg: &SimConfig,
+    rng: &mut Rng,
+) -> FormationStats {
+    let mut stats = FormationStats::default();
+    let npr = cfg.neurons_per_rank as u64;
+    let t_gather = std::time::Instant::now();
+    let records = gather_candidates(comm, pop, store);
+    stats.exchange_nanos += t_gather.elapsed().as_nanos() as u64;
+    let mut requests: Vec<Vec<OldRequest>> = vec![Vec::new(); comm.size()];
+    let mut weights = Vec::new();
+
+    let t_sample = std::time::Instant::now();
+    for local in 0..pop.len() {
+        let kind = axon_kind(pop.is_excitatory[local]);
+        let n_vacant = vacant(pop.z_ax[local], store.connected_ax[local]);
+        let src_id = pop.global_id(local);
+        let src_pos = pop.positions[local];
+        for _ in 0..n_vacant {
+            stats.searches += 1;
+            match sample_direct(&records, src_id, &src_pos, kind, cfg.sigma, &mut weights, rng) {
+                Some(target) => requests[(target / npr) as usize].push(OldRequest {
+                    source: src_id,
+                    target,
+                    source_exc: pop.is_excitatory[local],
+                }),
+                None => stats.failed_searches += 1,
+            }
+        }
+    }
+
+    stats.compute_nanos += t_sample.elapsed().as_nanos() as u64;
+    let rt = old_request_roundtrip(comm, requests, pop, store, rng);
+    stats.merge(&rt)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(id: u64, x: f32, ve: f32) -> DirectRecord {
+        DirectRecord { id, pos: [x, 0.0, 0.0], vac_exc: ve, vac_inh: 0.0 }
+    }
+
+    #[test]
+    fn record_roundtrip_is_28_bytes() {
+        assert_eq!(DirectRecord::SIZE, 28);
+        let r = rec(7, 1.5, 2.0);
+        let mut buf = Vec::new();
+        r.write(&mut buf);
+        assert_eq!(buf.len(), 28);
+        assert_eq!(DirectRecord::read(&buf), r);
+    }
+
+    #[test]
+    fn sampling_excludes_self_and_zero_vacancy() {
+        let records = vec![rec(0, 0.0, 1.0), rec(1, 1.0, 0.0), rec(2, 2.0, 1.0)];
+        let mut rng = Rng::new(1);
+        let mut w = Vec::new();
+        for _ in 0..100 {
+            let got = sample_direct(
+                &records,
+                0,
+                &Vec3::ZERO,
+                ElementKind::Excitatory,
+                100.0,
+                &mut w,
+                &mut rng,
+            );
+            assert_eq!(got, Some(2)); // not self (0), not vacancy-0 (1)
+        }
+    }
+
+    #[test]
+    fn sampling_matches_kernel_ratio() {
+        // Two candidates at distances 10 and 20 with sigma 20:
+        // ratio = exp(-100/400) / exp(-400/400) ≈ e^{0.75}.
+        let records = vec![rec(1, 10.0, 1.0), rec(2, 20.0, 1.0)];
+        let mut rng = Rng::new(2);
+        let mut w = Vec::new();
+        let mut near = 0usize;
+        let n = 200_000;
+        for _ in 0..n {
+            if sample_direct(
+                &records,
+                0,
+                &Vec3::ZERO,
+                ElementKind::Excitatory,
+                20.0,
+                &mut w,
+                &mut rng,
+            ) == Some(1)
+            {
+                near += 1;
+            }
+        }
+        let p_near = near as f64 / n as f64;
+        let w1 = (-100.0f64 / 400.0).exp();
+        let w2 = (-400.0f64 / 400.0).exp();
+        let expect = w1 / (w1 + w2);
+        assert!((p_near - expect).abs() < 0.01, "{p_near} vs {expect}");
+    }
+
+    #[test]
+    fn none_when_no_candidates() {
+        let records = vec![rec(0, 0.0, 1.0)];
+        let mut rng = Rng::new(3);
+        let mut w = Vec::new();
+        assert_eq!(
+            sample_direct(&records, 0, &Vec3::ZERO, ElementKind::Excitatory, 10.0, &mut w, &mut rng),
+            None
+        );
+    }
+}

@@ -1,0 +1,442 @@
+//! Synapse formation: the Barnes–Hut target search in both variants, and
+//! the shared request/accept/response protocol.
+//!
+//! * `old` — the prior distributed Barnes–Hut (Rinke et al. 2018):
+//!   descents that need remote octree nodes download them via RMA.
+//! * `new` — the paper's location-aware Barnes–Hut: descents stop at
+//!   remote branch nodes and ship the *searching neuron* to the owner
+//!   ("move computation, not data").
+//! * `direct` — O(n²) probability evaluation (NEST-style baseline).
+//!
+//! Wire sizes follow the paper exactly: old request 17 B, old response
+//! 1 B, new request 42 B, new response 9 B (§IV-A).
+
+pub mod direct;
+pub mod new;
+pub mod old;
+pub mod select;
+
+use crate::comm::{exchange, ThreadComm};
+use crate::neuron::{GlobalNeuronId, Population};
+use crate::octree::ElementKind;
+use crate::plasticity::SynapseStore;
+use crate::util::wire::{get_f64, get_u64, get_u8, put_f64, put_u64, put_u8, Wire};
+use crate::util::{Rng, Vec3};
+
+/// Gaussian connection-probability kernel: `vac * exp(-d² / σ²)`
+/// (the quantity the L1 `gauss_probs` Pallas kernel computes rows of).
+#[inline]
+pub fn kernel_weight(vac: f32, dist2: f64, sigma: f64) -> f64 {
+    vac as f64 * (-dist2 / (sigma * sigma)).exp()
+}
+
+/// Barnes–Hut acceptance criterion (paper §II): a cell of edge length
+/// `side` at distance `dist` may be approximated iff `side/dist < θ`.
+/// Always fails for `dist == 0` (e.g. the root containing the source).
+#[inline]
+pub fn accepts(side: f64, dist: f64, theta: f64) -> bool {
+    dist > 0.0 && side / dist < theta
+}
+
+/// `accepts` on the SQUARED distance (hot path: saves the sqrt —
+/// side/√d² < θ ⟺ side² < θ²·d²; EXPERIMENTS.md §Perf, opt 3).
+#[inline]
+pub fn accepts_d2(side: f64, dist2: f64, theta: f64) -> bool {
+    dist2 > 0.0 && side * side < theta * theta * dist2
+}
+
+// -- wire formats --------------------------------------------------------
+
+/// Old-format synapse request (17 B): source id, target id, type.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct OldRequest {
+    pub source: GlobalNeuronId,
+    pub target: GlobalNeuronId,
+    /// Source neuron type == dendritic element kind requested.
+    pub source_exc: bool,
+}
+
+impl Wire for OldRequest {
+    const SIZE: usize = 17;
+    fn write(&self, out: &mut Vec<u8>) {
+        put_u64(out, self.source);
+        put_u64(out, self.target);
+        put_u8(out, u8::from(self.source_exc));
+    }
+    fn read(buf: &[u8]) -> Self {
+        OldRequest {
+            source: get_u64(buf, 0),
+            target: get_u64(buf, 8),
+            source_exc: get_u8(buf, 16) != 0,
+        }
+    }
+}
+
+/// Old-format response (1 B): yes/no — "the requesting neuron knows
+/// which partner it has chosen" (paper §III-B0c).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct OldResponse {
+    pub success: bool,
+}
+
+impl Wire for OldResponse {
+    const SIZE: usize = 1;
+    fn write(&self, out: &mut Vec<u8>) {
+        put_u8(out, u8::from(self.success));
+    }
+    fn read(buf: &[u8]) -> Self {
+        OldResponse { success: get_u8(buf, 0) != 0 }
+    }
+}
+
+/// New-format *synapse formation and calculation* request (42 B =
+/// 8 + 24 + 8 + 1 + 1, paper §IV-A): the searching neuron travels to the
+/// rank owning the target subtree.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct NewRequest {
+    pub source: GlobalNeuronId,
+    /// Source neuron position (the owner continues the search with it).
+    pub pos: Vec3,
+    /// Target node id: the target *neuron* id when `is_leaf`, else the
+    /// Morton cell index of the branch node to search below.
+    pub target_node: u64,
+    /// Whether the target node is already a leaf.
+    pub is_leaf: bool,
+    /// Source neuron type == dendritic element kind requested.
+    pub source_exc: bool,
+}
+
+impl Wire for NewRequest {
+    const SIZE: usize = 42;
+    fn write(&self, out: &mut Vec<u8>) {
+        put_u64(out, self.source);
+        put_f64(out, self.pos.x);
+        put_f64(out, self.pos.y);
+        put_f64(out, self.pos.z);
+        put_u64(out, self.target_node);
+        put_u8(out, u8::from(self.is_leaf));
+        put_u8(out, u8::from(self.source_exc));
+    }
+    fn read(buf: &[u8]) -> Self {
+        NewRequest {
+            source: get_u64(buf, 0),
+            pos: Vec3::new(get_f64(buf, 8), get_f64(buf, 16), get_f64(buf, 24)),
+            target_node: get_u64(buf, 32),
+            is_leaf: get_u8(buf, 40) != 0,
+            source_exc: get_u8(buf, 41) != 0,
+        }
+    }
+}
+
+/// New-format response (9 B = 8 + 1): the id of the neuron the owner's
+/// search found (u64::MAX if none) and the acceptance outcome.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct NewResponse {
+    pub target: GlobalNeuronId,
+    pub success: bool,
+}
+
+pub const NO_TARGET: GlobalNeuronId = u64::MAX;
+
+impl Wire for NewResponse {
+    const SIZE: usize = 9;
+    fn write(&self, out: &mut Vec<u8>) {
+        put_u64(out, self.target);
+        put_u8(out, u8::from(self.success));
+    }
+    fn read(buf: &[u8]) -> Self {
+        NewResponse { target: get_u64(buf, 0), success: get_u8(buf, 8) != 0 }
+    }
+}
+
+// -- acceptance phase ----------------------------------------------------
+
+/// A resolved synapse proposal awaiting target-side acceptance.
+#[derive(Clone, Copy, Debug)]
+pub struct Proposal {
+    pub source: GlobalNeuronId,
+    pub source_exc: bool,
+    pub target_local: usize,
+}
+
+/// Target-side acceptance (paper §III-A0c): each neuron accepts randomly
+/// chosen requests up to its vacant dendritic elements of the requested
+/// kind; the rest are declined. Accepted proposals are recorded as
+/// in-edges. Returns per-proposal success, aligned with the input order.
+pub fn accept_proposals(
+    pop: &Population,
+    store: &mut SynapseStore,
+    proposals: &[Proposal],
+    rng: &mut Rng,
+) -> Vec<bool> {
+    // Remaining capacity per (local neuron, kind), computed against the
+    // current element/synapse state.
+    let n = pop.len();
+    let mut cap_exc: Vec<i64> = (0..n)
+        .map(|i| pop.z_den_exc[i].floor() as i64 - store.connected_den_exc[i] as i64)
+        .collect();
+    let mut cap_inh: Vec<i64> = (0..n)
+        .map(|i| pop.z_den_inh[i].floor() as i64 - store.connected_den_inh[i] as i64)
+        .collect();
+
+    let mut order: Vec<usize> = (0..proposals.len()).collect();
+    rng.shuffle(&mut order);
+    let mut success = vec![false; proposals.len()];
+    for idx in order {
+        let p = &proposals[idx];
+        let cap = if p.source_exc {
+            &mut cap_exc[p.target_local]
+        } else {
+            &mut cap_inh[p.target_local]
+        };
+        if *cap > 0 {
+            *cap -= 1;
+            success[idx] = true;
+            store.add_in(p.target_local, p.source, p.source_exc);
+        }
+    }
+    success
+}
+
+/// Shared plumbing for algorithms whose proposals already name a target
+/// neuron (old + direct): all-to-all the requests, accept on the target
+/// rank, all-to-all the 1 B responses back (order-preserving), and apply
+/// successful formations on the source side.
+pub fn old_request_roundtrip(
+    comm: &ThreadComm,
+    requests: Vec<Vec<OldRequest>>,
+    pop: &Population,
+    store: &mut SynapseStore,
+    rng: &mut Rng,
+) -> FormationStats {
+    let mut stats = FormationStats::default();
+    stats.proposals = requests.iter().map(|v| v.len() as u64).sum();
+    // Remember what we asked each rank, in order.
+    let sent: Vec<Vec<OldRequest>> = requests.clone();
+    let t0 = std::time::Instant::now();
+    let incoming = exchange(comm, requests);
+    stats.exchange_nanos += t0.elapsed().as_nanos() as u64;
+
+    // Flatten to proposals, tracking (rank, seq) for the replies.
+    let mut proposals = Vec::new();
+    let mut origin = Vec::new();
+    for (src_rank, batch) in incoming.iter().enumerate() {
+        for (seq, req) in batch.iter().enumerate() {
+            proposals.push(Proposal {
+                source: req.source,
+                source_exc: req.source_exc,
+                target_local: pop.local_index(req.target),
+            });
+            origin.push((src_rank, seq));
+        }
+    }
+    let success = accept_proposals(pop, store, &proposals, rng);
+
+    let mut responses: Vec<Vec<OldResponse>> =
+        incoming.iter().map(|b| vec![OldResponse { success: false }; b.len()]).collect();
+    for (i, &(r, seq)) in origin.iter().enumerate() {
+        responses[r][seq] = OldResponse { success: success[i] };
+    }
+    let t1 = std::time::Instant::now();
+    let replies = exchange(comm, responses);
+    stats.exchange_nanos += t1.elapsed().as_nanos() as u64;
+
+    for (rank, batch) in replies.iter().enumerate() {
+        debug_assert_eq!(batch.len(), sent[rank].len());
+        for (req, resp) in sent[rank].iter().zip(batch) {
+            if resp.success {
+                store.add_out(pop.local_index(req.source), req.target);
+                stats.formed += 1;
+            } else {
+                stats.declined += 1;
+            }
+        }
+    }
+    stats
+}
+
+/// Outcome of one formation phase on one rank.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FormationStats {
+    /// Vacant axonal elements that searched.
+    pub searches: u64,
+    /// Searches that found no admissible target.
+    pub failed_searches: u64,
+    /// Requests/proposals sent (by this rank's sources).
+    pub proposals: u64,
+    /// Synapses formed (source side).
+    pub formed: u64,
+    /// Proposals declined by the target.
+    pub declined: u64,
+    /// Nanoseconds spent in Barnes–Hut compute (incl. RMA waits for the
+    /// old algorithm, owner-side continuation for the new one).
+    pub compute_nanos: u64,
+    /// Nanoseconds spent in the request/response all-to-alls.
+    pub exchange_nanos: u64,
+}
+
+impl FormationStats {
+    pub fn merge(&self, o: &FormationStats) -> FormationStats {
+        FormationStats {
+            searches: self.searches + o.searches,
+            failed_searches: self.failed_searches + o.failed_searches,
+            proposals: self.proposals + o.proposals,
+            formed: self.formed + o.formed,
+            declined: self.declined + o.declined,
+            compute_nanos: self.compute_nanos + o.compute_nanos,
+            exchange_nanos: self.exchange_nanos + o.exchange_nanos,
+        }
+    }
+}
+
+/// The element kind a neuron's axon searches for.
+#[inline]
+pub fn axon_kind(is_excitatory: bool) -> ElementKind {
+    if is_excitatory {
+        ElementKind::Excitatory
+    } else {
+        ElementKind::Inhibitory
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+
+    #[test]
+    fn wire_sizes_match_paper() {
+        assert_eq!(OldRequest::SIZE, 17);
+        assert_eq!(OldResponse::SIZE, 1);
+        assert_eq!(NewRequest::SIZE, 42);
+        assert_eq!(NewResponse::SIZE, 9);
+    }
+
+    #[test]
+    fn request_roundtrips() {
+        let old = OldRequest { source: 3, target: 9, source_exc: true };
+        let mut buf = Vec::new();
+        old.write(&mut buf);
+        assert_eq!(OldRequest::read(&buf), old);
+
+        let new = NewRequest {
+            source: 3,
+            pos: Vec3::new(1.5, 2.5, 3.5),
+            target_node: 42,
+            is_leaf: false,
+            source_exc: false,
+        };
+        buf.clear();
+        new.write(&mut buf);
+        assert_eq!(buf.len(), 42);
+        assert_eq!(NewRequest::read(&buf), new);
+
+        let resp = NewResponse { target: NO_TARGET, success: false };
+        buf.clear();
+        resp.write(&mut buf);
+        assert_eq!(NewResponse::read(&buf), resp);
+    }
+
+    #[test]
+    fn acceptance_criterion() {
+        assert!(accepts(1.0, 10.0, 0.2)); // 0.1 < 0.2
+        assert!(!accepts(1.0, 4.0, 0.2)); // 0.25 >= 0.2
+        assert!(!accepts(1.0, 0.0, 0.2)); // containing cell never accepted
+        // theta = 0 -> direct solution (nothing accepted)
+        assert!(!accepts(0.001, 1e9, 0.0));
+    }
+
+    #[test]
+    fn kernel_weight_decays() {
+        assert!(kernel_weight(1.0, 0.0, 10.0) == 1.0);
+        assert!(kernel_weight(1.0, 100.0, 10.0) < kernel_weight(1.0, 1.0, 10.0));
+        assert_eq!(kernel_weight(0.0, 1.0, 10.0), 0.0);
+        assert!(kernel_weight(3.0, 1.0, 10.0) == 3.0 * kernel_weight(1.0, 1.0, 10.0));
+    }
+
+    fn tiny_pop(n: usize) -> Population {
+        let cfg = SimConfig { neurons_per_rank: n, ..SimConfig::default() };
+        let mut rng = Rng::new(1);
+        Population::init(&cfg, 0, crate::util::Vec3::ZERO, crate::util::Vec3::splat(10.0), &mut rng)
+    }
+
+    #[test]
+    fn acceptance_respects_capacity() {
+        let mut pop = tiny_pop(2);
+        pop.z_den_exc[0] = 1.0; // capacity 1
+        let mut store = SynapseStore::new(2);
+        let mut rng = Rng::new(2);
+        let proposals = vec![
+            Proposal { source: 100, source_exc: true, target_local: 0 },
+            Proposal { source: 101, source_exc: true, target_local: 0 },
+            Proposal { source: 102, source_exc: true, target_local: 0 },
+        ];
+        let ok = accept_proposals(&pop, &mut store, &proposals, &mut rng);
+        assert_eq!(ok.iter().filter(|&&s| s).count(), 1);
+        assert_eq!(store.connected_den_exc[0], 1);
+        store.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn acceptance_separates_kinds() {
+        let mut pop = tiny_pop(1);
+        pop.z_den_exc[0] = 1.0;
+        pop.z_den_inh[0] = 1.0;
+        let mut store = SynapseStore::new(1);
+        let mut rng = Rng::new(3);
+        let proposals = vec![
+            Proposal { source: 100, source_exc: true, target_local: 0 },
+            Proposal { source: 101, source_exc: false, target_local: 0 },
+        ];
+        let ok = accept_proposals(&pop, &mut store, &proposals, &mut rng);
+        assert_eq!(ok, vec![true, true]);
+    }
+
+    #[test]
+    fn acceptance_counts_existing_synapses() {
+        let mut pop = tiny_pop(1);
+        pop.z_den_exc[0] = 2.0;
+        let mut store = SynapseStore::new(1);
+        store.add_in(0, 55, true); // one element already bound
+        let mut rng = Rng::new(4);
+        let proposals = vec![
+            Proposal { source: 100, source_exc: true, target_local: 0 },
+            Proposal { source: 101, source_exc: true, target_local: 0 },
+        ];
+        let ok = accept_proposals(&pop, &mut store, &proposals, &mut rng);
+        assert_eq!(ok.iter().filter(|&&s| s).count(), 1);
+    }
+
+    #[test]
+    fn old_roundtrip_forms_synapses_across_ranks() {
+        let results = crate::comm::run_ranks(2, |comm| {
+            let cfg = SimConfig { neurons_per_rank: 1, ..SimConfig::default() };
+            let mut rng = Rng::new(10 + comm.rank() as u64);
+            let mut pop = Population::init(
+                &cfg,
+                comm.rank(),
+                crate::util::Vec3::ZERO,
+                crate::util::Vec3::splat(10.0),
+                &mut rng,
+            );
+            pop.z_den_exc[0] = 3.0;
+            let mut store = SynapseStore::new(1);
+            // Each rank proposes to the other rank's neuron.
+            let other = 1 - comm.rank();
+            let mut reqs = vec![Vec::new(), Vec::new()];
+            reqs[other].push(OldRequest {
+                source: comm.rank() as u64,
+                target: other as u64,
+                source_exc: true,
+            });
+            let stats = old_request_roundtrip(&comm, reqs, &pop, &mut store, &mut rng);
+            (stats, store)
+        });
+        for (rank, (stats, store)) in results.iter().enumerate() {
+            assert_eq!(stats.formed, 1, "rank {rank}");
+            assert_eq!(store.total_out(), 1);
+            assert_eq!(store.total_in(), 1);
+            store.check_invariants().unwrap();
+        }
+    }
+}

@@ -1,0 +1,381 @@
+//! The *new* location-aware Barnes–Hut algorithm (paper §IV-A,
+//! Algorithm 1): "move the computation, not the data".
+//!
+//! The source rank descends only through what it already holds — the
+//! shared upper tree and its own subtrees. A remote branch node is a
+//! terminal: instead of downloading the subtree below it, the rank sends
+//! a 42 B *synapse formation and calculation* request (source id +
+//! position + target node + flags) to the owner, which finishes the
+//! search locally and answers with a 9 B response (found neuron id +
+//! accept/decline). Per-neuron communication drops from O(log n) RMA
+//! fetches to O(1) messages.
+
+use crate::comm::{exchange, ThreadComm};
+use crate::config::SimConfig;
+use crate::neuron::{GlobalNeuronId, Population};
+use crate::octree::{ElementKind, NodeKind, Octree, NO_CHILD, NO_NEURON};
+use crate::plasticity::{vacant, SynapseStore};
+use crate::util::{Rng, Vec3};
+
+use super::select::{select_local, SelectParams, SelectScratch};
+use super::{
+    accept_proposals, accepts_d2, axon_kind, kernel_weight, FormationStats, NewRequest,
+    NewResponse, Proposal, NO_TARGET,
+};
+
+/// Result of the source-side descent.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Outcome {
+    /// Search bottomed out at an actual neuron (local leaf, or a remote
+    /// subdomain known to hold exactly one neuron).
+    Leaf { neuron: GlobalNeuronId, owner: u32 },
+    /// Search selected a remote branch node: the owner must continue.
+    RemoteInner { cell: u32, owner: u32 },
+    /// No admissible candidate.
+    None,
+}
+
+/// Source-side search: descend from the root using only locally-held
+/// information. Remote branch nodes are candidates but never expanded.
+pub fn search_new(
+    tree: &Octree,
+    src_id: GlobalNeuronId,
+    src_pos: &Vec3,
+    kind: ElementKind,
+    theta: f64,
+    sigma: f64,
+    scratch: &mut SelectScratch2,
+    rng: &mut Rng,
+) -> Outcome {
+    let me = tree.rank;
+    let mut start = tree.root();
+    loop {
+        scratch.stack.clear();
+        scratch.cand.clear();
+        scratch.weights.clear();
+
+        if tree.nodes[start].is_leaf() && !is_remote_branch(tree, start, me) {
+            scratch.stack.push(start);
+        } else if is_remote_branch(tree, start, me) {
+            unreachable!("remote branch nodes are terminals, never restart points");
+        } else {
+            for &c in &tree.nodes[start].children {
+                if c != NO_CHILD {
+                    scratch.stack.push(c as usize);
+                }
+            }
+        }
+
+        while let Some(i) = scratch.stack.pop() {
+            let n = &tree.nodes[i];
+            let vac = n.vac(kind);
+            if vac <= 0.0 {
+                continue;
+            }
+            let d2 = src_pos.dist2(&n.pos(kind));
+            if is_remote_branch(tree, i, me) {
+                // Terminal candidate regardless of the acceptance
+                // criterion: if selected, the owner restarts from it.
+                scratch.cand.push(i);
+                scratch.weights.push(kernel_weight(vac, d2, sigma));
+            } else if n.is_leaf() {
+                if n.neuron != NO_NEURON && n.neuron != src_id as i64 {
+                    scratch.cand.push(i);
+                    scratch.weights.push(kernel_weight(vac, d2, sigma));
+                }
+            } else if accepts_d2(n.side, d2, theta) {
+                scratch.cand.push(i);
+                scratch.weights.push(kernel_weight(vac, d2, sigma));
+            } else {
+                for &c in &n.children {
+                    if c != NO_CHILD {
+                        scratch.stack.push(c as usize);
+                    }
+                }
+            }
+        }
+
+        let Some(pick) = rng.weighted_choice(&scratch.weights) else {
+            return Outcome::None;
+        };
+        let i = scratch.cand[pick];
+        let n = &tree.nodes[i];
+        if is_remote_branch(tree, i, me) {
+            if n.neuron != NO_NEURON {
+                // The whole remote subdomain is one known neuron: the
+                // request can be marked "target is already a leaf".
+                return Outcome::Leaf { neuron: n.neuron as GlobalNeuronId, owner: n.owner };
+            }
+            return Outcome::RemoteInner { cell: n.cell, owner: n.owner };
+        }
+        if n.is_leaf() {
+            return Outcome::Leaf { neuron: n.neuron as GlobalNeuronId, owner: me };
+        }
+        start = i;
+    }
+}
+
+fn is_remote_branch(tree: &Octree, i: usize, me: u32) -> bool {
+    let n = &tree.nodes[i];
+    n.kind == NodeKind::Branch && n.owner != me
+}
+
+/// Scratch buffers for `search_new` (hot path: one search per vacant
+/// axonal element).
+#[derive(Default)]
+pub struct SelectScratch2 {
+    stack: Vec<usize>,
+    cand: Vec<usize>,
+    weights: Vec<f64>,
+}
+
+/// Full formation phase, location-aware algorithm (Algorithm 1):
+/// source-side searches, one 42 B-request all-to-all, owner-side
+/// searches, acceptance, one 9 B-response all-to-all.
+pub fn run_formation(
+    comm: &ThreadComm,
+    tree: &Octree,
+    pop: &Population,
+    store: &mut SynapseStore,
+    cfg: &SimConfig,
+    rng: &mut Rng,
+) -> FormationStats {
+    let mut stats = FormationStats::default();
+    let mut requests: Vec<Vec<NewRequest>> = vec![Vec::new(); comm.size()];
+    let mut scratch = SelectScratch2::default();
+
+    // Phase 1: local descents (lines 6-12 of Algorithm 1).
+    let t_search = std::time::Instant::now();
+    for local in 0..pop.len() {
+        let kind = axon_kind(pop.is_excitatory[local]);
+        let n_vacant = vacant(pop.z_ax[local], store.connected_ax[local]);
+        let src_id = pop.global_id(local);
+        let src_pos = pop.positions[local];
+        for _ in 0..n_vacant {
+            stats.searches += 1;
+            match search_new(tree, src_id, &src_pos, kind, cfg.theta, cfg.sigma, &mut scratch, rng)
+            {
+                Outcome::Leaf { neuron, owner } => {
+                    requests[owner as usize].push(NewRequest {
+                        source: src_id,
+                        pos: src_pos,
+                        target_node: neuron,
+                        is_leaf: true,
+                        source_exc: pop.is_excitatory[local],
+                    });
+                }
+                Outcome::RemoteInner { cell, owner } => {
+                    requests[owner as usize].push(NewRequest {
+                        source: src_id,
+                        pos: src_pos,
+                        target_node: cell as u64,
+                        is_leaf: false,
+                        source_exc: pop.is_excitatory[local],
+                    });
+                }
+                Outcome::None => stats.failed_searches += 1,
+            }
+        }
+    }
+    stats.compute_nanos += t_search.elapsed().as_nanos() as u64;
+    stats.proposals = requests.iter().map(|v| v.len() as u64).sum();
+    let sent: Vec<usize> = requests.iter().map(|v| v.len()).collect();
+    let sent_sources: Vec<Vec<GlobalNeuronId>> =
+        requests.iter().map(|v| v.iter().map(|r| r.source).collect()).collect();
+
+    // Phase 2: all-to-all the requests (line 15).
+    let t_x1 = std::time::Instant::now();
+    let incoming = exchange(comm, requests);
+    stats.exchange_nanos += t_x1.elapsed().as_nanos() as u64;
+
+    // Phase 3: owner-side continuation (lines 17-20). Leaf-typed
+    // requests convert straight to proposals; inner-typed ones restart
+    // the Barnes-Hut search at the named branch node — entirely local,
+    // no further RMA (the whole point of the algorithm).
+    let mut proposals = Vec::new();
+    let mut origin = Vec::new(); // (src_rank, seq) per proposal
+    let mut found: Vec<Vec<GlobalNeuronId>> =
+        incoming.iter().map(|b| vec![NO_TARGET; b.len()]).collect();
+    let mut local_scratch = SelectScratch::default();
+    let t_owner = std::time::Instant::now();
+    for (src_rank, batch) in incoming.iter().enumerate() {
+        for (seq, req) in batch.iter().enumerate() {
+            let kind = if req.source_exc {
+                ElementKind::Excitatory
+            } else {
+                ElementKind::Inhibitory
+            };
+            let target = if req.is_leaf {
+                Some(req.target_node)
+            } else {
+                let start = tree.branch_of_cell[req.target_node as usize];
+                debug_assert_eq!(tree.nodes[start].owner, tree.rank);
+                select_local(
+                    tree,
+                    start,
+                    &req.pos,
+                    &SelectParams {
+                        theta: cfg.theta,
+                        sigma: cfg.sigma,
+                        exclude: req.source,
+                        kind,
+                    },
+                    &mut local_scratch,
+                    rng,
+                )
+            };
+            if let Some(t) = target {
+                found[src_rank][seq] = t;
+                proposals.push(Proposal {
+                    source: req.source,
+                    source_exc: req.source_exc,
+                    target_local: pop.local_index(t),
+                });
+                origin.push((src_rank, seq));
+            }
+        }
+    }
+
+    stats.compute_nanos += t_owner.elapsed().as_nanos() as u64;
+
+    // Phase 4: acceptance on the target rank.
+    let success = accept_proposals(pop, store, &proposals, rng);
+
+    // Phase 5: 9 B responses, order-preserving per source rank
+    // (lines 23-26).
+    let mut responses: Vec<Vec<NewResponse>> = found
+        .iter()
+        .map(|f| f.iter().map(|&t| NewResponse { target: t, success: false }).collect())
+        .collect();
+    for (k, &(r, seq)) in origin.iter().enumerate() {
+        responses[r][seq].success = success[k];
+    }
+    let t_x2 = std::time::Instant::now();
+    let replies = exchange(comm, responses);
+    stats.exchange_nanos += t_x2.elapsed().as_nanos() as u64;
+
+    // Phase 6: apply on the source side.
+    for (rank, batch) in replies.iter().enumerate() {
+        debug_assert_eq!(batch.len(), sent[rank]);
+        for (seq, resp) in batch.iter().enumerate() {
+            if resp.success {
+                debug_assert_ne!(resp.target, NO_TARGET);
+                let src_local = pop.local_index(sent_sources[rank][seq]);
+                store.add_out(src_local, resp.target);
+                stats.formed += 1;
+            } else {
+                stats.declined += 1;
+            }
+        }
+    }
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::run_ranks;
+    use crate::octree::DomainDecomposition;
+
+    fn build_two_rank_tree(
+        comm: &ThreadComm,
+        rank: usize,
+        vac: f32,
+    ) -> (DomainDecomposition, Octree, Vec3) {
+        let decomp = DomainDecomposition::new(2, 100.0);
+        let (lo, hi) = decomp.cell_bounds(decomp.cells_of_rank(rank).start);
+        let pos = (lo + hi) / 2.0;
+        let mut tree = Octree::build(&decomp, rank, rank as u64, &[pos]);
+        tree.reset_and_set_leaves(rank as u64, &[vac], &[vac]);
+        tree.aggregate_local();
+        let payloads =
+            tree.own_branch_payloads(decomp.cells_of_rank(rank), |_| NO_CHILD);
+        let all = crate::comm::gather_all(comm, &payloads);
+        for (src, batch) in all.iter().enumerate() {
+            if src != rank {
+                tree.apply_branch_payloads(batch);
+            }
+        }
+        tree.aggregate_upper();
+        tree.normalize();
+        (decomp, tree, pos)
+    }
+
+    #[test]
+    fn source_search_terminates_at_remote_leaf_branch() {
+        // Each rank holds one neuron; the remote subdomain is a single
+        // known neuron, so the outcome is Leaf with the remote owner.
+        let results = run_ranks(2, |comm| {
+            let rank = comm.rank();
+            let (_, tree, pos) = build_two_rank_tree(&comm, rank, 1.0);
+            let mut scratch = SelectScratch2::default();
+            let mut rng = Rng::new(rank as u64);
+            let out = search_new(
+                &tree,
+                rank as u64,
+                &pos,
+                ElementKind::Excitatory,
+                0.3,
+                750.0,
+                &mut scratch,
+                &mut rng,
+            );
+            let rma = comm.counters().snapshot().bytes_rma;
+            (out, rma)
+        });
+        assert_eq!(results[0].0, Outcome::Leaf { neuron: 1, owner: 1 });
+        assert_eq!(results[1].0, Outcome::Leaf { neuron: 0, owner: 0 });
+        // The defining property: zero RMA.
+        assert_eq!(results[0].1, 0);
+        assert_eq!(results[1].1, 0);
+    }
+
+    #[test]
+    fn formation_forms_cross_rank_synapses_without_rma() {
+        let results = run_ranks(2, |comm| {
+            let rank = comm.rank();
+            let cfg = SimConfig {
+                ranks: 2,
+                neurons_per_rank: 1,
+                theta: 0.3,
+                ..SimConfig::default()
+            };
+            let mut rng = Rng::new(100 + rank as u64);
+            let decomp = DomainDecomposition::new(2, cfg.domain_size);
+            let (lo, hi) = decomp.cell_bounds(decomp.cells_of_rank(rank).start);
+            let pos = (lo + hi) / 2.0;
+            let mut pop = Population::init(&cfg, rank, lo, hi, &mut rng);
+            pop.positions[0] = pos;
+            pop.is_excitatory[0] = true;
+            pop.z_ax[0] = 1.0;
+            pop.z_den_exc[0] = 1.0;
+            pop.z_den_inh[0] = 0.0;
+
+            let mut tree = Octree::build(&decomp, rank, pop.first_id, &pop.positions);
+            tree.reset_and_set_leaves(pop.first_id, &pop.z_den_exc, &pop.z_den_inh);
+            tree.aggregate_local();
+            let payloads =
+                tree.own_branch_payloads(decomp.cells_of_rank(rank), |_| NO_CHILD);
+            let all = crate::comm::gather_all(&comm, &payloads);
+            for (src, batch) in all.iter().enumerate() {
+                if src != rank {
+                    tree.apply_branch_payloads(batch);
+                }
+            }
+            tree.aggregate_upper();
+            tree.normalize();
+
+            let mut store = SynapseStore::new(1);
+            let stats = run_formation(&comm, &tree, &pop, &mut store, &cfg, &mut rng);
+            (stats, store, comm.counters().snapshot())
+        });
+        for (rank, (stats, store, snap)) in results.iter().enumerate() {
+            assert_eq!(stats.searches, 1, "rank {rank}");
+            assert_eq!(stats.formed, 1, "rank {rank}: one synapse formed");
+            assert_eq!(store.total_out(), 1);
+            assert_eq!(store.total_in(), 1);
+            assert_eq!(snap.bytes_rma, 0, "new algorithm must not RMA");
+            store.check_invariants().unwrap();
+        }
+    }
+}

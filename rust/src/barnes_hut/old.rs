@@ -1,0 +1,295 @@
+//! The *old* distributed Barnes–Hut algorithm (Rinke et al. 2018,
+//! paper §III-B0c): the searching rank performs the entire descent
+//! itself; whenever the path drops below the branch level into another
+//! rank's subtree, the needed octree nodes are downloaded via RMA and
+//! cached for the remainder of the formation phase.
+//!
+//! Per-neuron communication is O(log n) node downloads — the baseline
+//! the location-aware algorithm (`new.rs`) eliminates.
+
+use crate::comm::ThreadComm;
+use crate::config::SimConfig;
+use crate::neuron::{GlobalNeuronId, Population};
+use crate::octree::{
+    ElementKind, NodeKind, Octree, RemoteNodeCache, WireNode, NO_CHILD, NO_NEURON,
+};
+use crate::plasticity::{vacant, SynapseStore};
+use crate::util::{Rng, Vec3};
+
+use super::{accepts_d2, axon_kind, kernel_weight, old_request_roundtrip, FormationStats, OldRequest};
+
+/// Handle onto a node that may live in the local arena or in another
+/// rank's published window.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum H {
+    Local(usize),
+    Remote { rank: u32, idx: i32 },
+}
+
+/// Node attributes the descent needs, resolved from either side.
+struct Info {
+    vac: f32,
+    pos: Vec3,
+    side: f64,
+    is_leaf: bool,
+    neuron: i64,
+}
+
+/// The old algorithm's tree view: local arena + RMA downloads.
+pub struct OldView<'a> {
+    pub tree: &'a Octree,
+    pub cache: &'a mut RemoteNodeCache,
+    pub comm: &'a ThreadComm,
+}
+
+impl<'a> OldView<'a> {
+    fn info(&mut self, h: H, kind: ElementKind) -> Info {
+        match h {
+            H::Local(i) => {
+                let n = &self.tree.nodes[i];
+                Info {
+                    vac: n.vac(kind),
+                    pos: n.pos(kind),
+                    side: n.side,
+                    is_leaf: n.is_leaf() && !self.is_expandable_remote_branch(i),
+                    neuron: n.neuron,
+                }
+            }
+            H::Remote { rank, idx } => {
+                let w: WireNode = self.cache.get(self.comm, rank, idx);
+                Info {
+                    vac: w.vac(kind),
+                    pos: w.pos(kind),
+                    side: w.side as f64,
+                    is_leaf: w.is_leaf,
+                    neuron: w.neuron,
+                }
+            }
+        }
+    }
+
+    /// A branch node of a remote cell with a non-empty subtree: locally
+    /// childless, but expandable through the owner's window.
+    fn is_expandable_remote_branch(&self, i: usize) -> bool {
+        let n = &self.tree.nodes[i];
+        n.kind == NodeKind::Branch
+            && n.owner != self.tree.rank
+            && n.window_root != NO_CHILD
+            && n.neuron == NO_NEURON
+    }
+
+    fn push_children(&mut self, h: H, out: &mut Vec<H>) {
+        match h {
+            H::Local(i) => {
+                if self.is_expandable_remote_branch(i) {
+                    // Cross into the owner's subtree: download the
+                    // window root to learn its children ("download the
+                    // red nodes", paper Fig. 2).
+                    let n = &self.tree.nodes[i];
+                    let rank = n.owner;
+                    let root: WireNode = self.cache.get(self.comm, rank, n.window_root);
+                    for &c in &root.children {
+                        if c != NO_CHILD {
+                            out.push(H::Remote { rank, idx: c });
+                        }
+                    }
+                } else {
+                    for &c in &self.tree.nodes[i].children {
+                        if c != NO_CHILD {
+                            out.push(H::Local(c as usize));
+                        }
+                    }
+                }
+            }
+            H::Remote { rank, idx } => {
+                let w: WireNode = self.cache.get(self.comm, rank, idx);
+                for &c in &w.children {
+                    if c != NO_CHILD {
+                        out.push(H::Remote { rank, idx: c });
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// One full old-style target search from the root. Downloads remote
+/// nodes as needed; returns the found neuron or None.
+pub fn search_old(
+    view: &mut OldView<'_>,
+    src_id: GlobalNeuronId,
+    src_pos: &Vec3,
+    kind: ElementKind,
+    theta: f64,
+    sigma: f64,
+    rng: &mut Rng,
+) -> Option<GlobalNeuronId> {
+    let mut start = H::Local(view.tree.root());
+    let mut stack: Vec<H> = Vec::new();
+    // Candidate handle + (is_leaf, neuron) so the chosen one needs no
+    // second resolution (EXPERIMENTS.md §Perf, opt 3).
+    let mut cand: Vec<(H, bool, i64)> = Vec::new();
+    let mut weights: Vec<f64> = Vec::new();
+    loop {
+        stack.clear();
+        cand.clear();
+        weights.clear();
+
+        let start_info = view.info(start, kind);
+        if start_info.is_leaf {
+            stack.push(start);
+        } else {
+            view.push_children(start, &mut stack);
+        }
+
+        while let Some(h) = stack.pop() {
+            let info = view.info(h, kind);
+            if info.vac <= 0.0 {
+                continue;
+            }
+            let d2 = src_pos.dist2(&info.pos);
+            if info.is_leaf {
+                if info.neuron != NO_NEURON && info.neuron != src_id as i64 {
+                    cand.push((h, true, info.neuron));
+                    weights.push(kernel_weight(info.vac, d2, sigma));
+                }
+            } else if accepts_d2(info.side, d2, theta) {
+                cand.push((h, false, NO_NEURON));
+                weights.push(kernel_weight(info.vac, d2, sigma));
+            } else {
+                view.push_children(h, &mut stack);
+            }
+        }
+
+        let pick = rng.weighted_choice(&weights)?;
+        let (chosen, is_leaf, neuron) = cand[pick];
+        if is_leaf {
+            return Some(neuron as GlobalNeuronId);
+        }
+        start = chosen;
+    }
+}
+
+/// Full formation phase, old algorithm: every vacant axonal element
+/// searches (with RMA downloads), then one request/response round-trip.
+#[allow(clippy::too_many_arguments)]
+pub fn run_formation(
+    comm: &ThreadComm,
+    tree: &Octree,
+    pop: &Population,
+    store: &mut SynapseStore,
+    cache: &mut RemoteNodeCache,
+    cfg: &SimConfig,
+    rng: &mut Rng,
+) -> FormationStats {
+    let mut stats = FormationStats::default();
+    let npr = cfg.neurons_per_rank as u64;
+    let mut requests: Vec<Vec<OldRequest>> = vec![Vec::new(); comm.size()];
+
+    let t_search = std::time::Instant::now();
+    for local in 0..pop.len() {
+        let kind = axon_kind(pop.is_excitatory[local]);
+        let n_vacant = vacant(pop.z_ax[local], store.connected_ax[local]);
+        let src_id = pop.global_id(local);
+        let src_pos = pop.positions[local];
+        for _ in 0..n_vacant {
+            stats.searches += 1;
+            let mut view = OldView { tree, cache, comm };
+            match search_old(&mut view, src_id, &src_pos, kind, cfg.theta, cfg.sigma, rng) {
+                Some(target) => {
+                    let owner = (target / npr) as usize;
+                    requests[owner].push(OldRequest {
+                        source: src_id,
+                        target,
+                        source_exc: pop.is_excitatory[local],
+                    });
+                }
+                None => stats.failed_searches += 1,
+            }
+        }
+    }
+
+    stats.compute_nanos += t_search.elapsed().as_nanos() as u64;
+
+    let rt = old_request_roundtrip(comm, requests, pop, store, rng);
+    // Downloaded nodes are only valid for this formation phase.
+    cache.clear();
+    stats.merge(&rt)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::run_ranks;
+    use crate::octree::{serialize_local_subtrees, DomainDecomposition, OCTREE_WINDOW};
+
+    /// Two ranks, two neurons each (so remote branch cells are NOT
+    /// leaves): the old search from rank 0 must cross into rank 1's
+    /// subtree via RMA to resolve an actual neuron.
+    #[test]
+    fn cross_rank_search_downloads_and_finds() {
+        let results = run_ranks(2, |comm| {
+            let decomp = DomainDecomposition::new(2, 100.0);
+            let rank = comm.rank();
+            // Two neurons inside the rank's first cell.
+            let (lo, hi) = decomp.cell_bounds(decomp.cells_of_rank(rank).start);
+            let mid = (lo + hi) / 2.0;
+            let positions =
+                vec![(lo * 3.0 + hi) / 4.0, (lo + hi * 3.0) / 4.0];
+            let pos = mid;
+            let first_id = 2 * rank as u64;
+            let mut tree = Octree::build(&decomp, rank, first_id, &positions);
+            tree.reset_and_set_leaves(first_id, &[1.0, 1.0], &[1.0, 1.0]);
+            tree.aggregate_local();
+            let win = serialize_local_subtrees(&tree, decomp.cells_of_rank(rank));
+            comm.publish_window(OCTREE_WINDOW, win.bytes);
+            comm.barrier();
+            let payloads = tree.own_branch_payloads(decomp.cells_of_rank(rank), |c| {
+                win.root_of_cell[&c]
+            });
+            let all = crate::comm::gather_all(&comm, &payloads);
+            for (src, batch) in all.iter().enumerate() {
+                if src != rank {
+                    tree.apply_branch_payloads(batch);
+                }
+            }
+            tree.aggregate_upper();
+            tree.normalize();
+
+            let mut cache = RemoteNodeCache::default();
+            let mut rng = Rng::new(rank as u64 + 10);
+            let mut found = Vec::new();
+            for _ in 0..20 {
+                let mut view =
+                    OldView { tree: &tree, cache: &mut cache, comm: &comm };
+                let got = search_old(
+                    &mut view,
+                    first_id,
+                    &pos,
+                    ElementKind::Excitatory,
+                    0.3,
+                    750.0,
+                    &mut rng,
+                );
+                found.push(got.expect("candidates exist"));
+            }
+            let rma = comm.counters().snapshot().bytes_rma;
+            comm.barrier();
+            (found, rma, first_id)
+        });
+        for (rank, (found, rma, first_id)) in results.iter().enumerate() {
+            // Never the searching neuron itself; all ids valid.
+            assert!(found.iter().all(|&id| id != *first_id && id < 4));
+            // Some searches must land on the remote rank (2 of 3
+            // admissible candidates are remote) and resolving them
+            // requires RMA downloads.
+            let remote_lo = 2 * (1 - rank as u64);
+            assert!(
+                found.iter().any(|&id| id == remote_lo || id == remote_lo + 1),
+                "rank {rank}: no remote target in {found:?}"
+            );
+            assert!(*rma > 0, "old search must use RMA");
+        }
+    }
+
+}

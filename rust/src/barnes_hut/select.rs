@@ -1,0 +1,241 @@
+//! Local Barnes–Hut target selection (no communication).
+//!
+//! The probabilistic descent of the MSP-adapted Barnes–Hut algorithm
+//! (paper §III-B0c): starting from a node, rejected nodes are replaced by
+//! their children, accepted nodes (and leaves) become candidates, one
+//! candidate is sampled with probability ∝ vacancy · exp(−d²/σ²); if it
+//! is an inner node the process restarts from it, until an actual neuron
+//! is found.
+//!
+//! Used directly by the owner-side search of the location-aware
+//! algorithm (everything below a branch node is local to its owner) and
+//! by any search whose path stays on one rank.
+
+use crate::neuron::GlobalNeuronId;
+use crate::octree::{ElementKind, Octree, NO_CHILD, NO_NEURON};
+use crate::util::{Rng, Vec3};
+
+use super::{accepts_d2, kernel_weight};
+
+/// Search parameters threaded through every selection.
+#[derive(Clone, Copy, Debug)]
+pub struct SelectParams {
+    pub theta: f64,
+    pub sigma: f64,
+    /// Searching neuron (excluded as its own target).
+    pub exclude: GlobalNeuronId,
+    pub kind: ElementKind,
+}
+
+/// Reusable scratch buffers — the descent runs once per vacant axonal
+/// element, so allocation here is hot (see EXPERIMENTS.md §Perf).
+#[derive(Default)]
+pub struct SelectScratch {
+    stack: Vec<usize>,
+    cand_nodes: Vec<usize>,
+    cand_weights: Vec<f64>,
+}
+
+/// Select a target neuron by descending *locally* from `start`
+/// (inclusive of its subtree only). Returns `None` when no admissible
+/// candidate exists (e.g. all vacancy is the excluded neuron's).
+pub fn select_local(
+    tree: &Octree,
+    start: usize,
+    src_pos: &Vec3,
+    params: &SelectParams,
+    scratch: &mut SelectScratch,
+    rng: &mut Rng,
+) -> Option<GlobalNeuronId> {
+    let mut at = start;
+    loop {
+        scratch.cand_nodes.clear();
+        scratch.cand_weights.clear();
+        scratch.stack.clear();
+
+        // The start node itself is always "rejected": expand children.
+        // A start that is already a leaf is the candidate itself.
+        if tree.nodes[at].is_leaf() {
+            scratch.stack.push(at);
+        } else {
+            for &c in &tree.nodes[at].children {
+                if c != NO_CHILD {
+                    scratch.stack.push(c as usize);
+                }
+            }
+        }
+
+        while let Some(i) = scratch.stack.pop() {
+            let n = &tree.nodes[i];
+            let vac = n.vac(params.kind);
+            if vac <= 0.0 {
+                continue;
+            }
+            let d2 = src_pos.dist2(&n.pos(params.kind));
+            if n.is_leaf() {
+                if n.neuron != params.exclude as i64 && n.neuron != NO_NEURON {
+                    scratch.cand_nodes.push(i);
+                    scratch.cand_weights.push(kernel_weight(vac, d2, params.sigma));
+                }
+            } else if accepts_d2(n.side, d2, params.theta) {
+                scratch.cand_nodes.push(i);
+                scratch.cand_weights.push(kernel_weight(vac, d2, params.sigma));
+            } else {
+                for &c in &n.children {
+                    if c != NO_CHILD {
+                        scratch.stack.push(c as usize);
+                    }
+                }
+            }
+        }
+
+        let pick = rng.weighted_choice(&scratch.cand_weights)?;
+        let node = scratch.cand_nodes[pick];
+        if tree.nodes[node].is_leaf() {
+            return Some(tree.nodes[node].neuron as GlobalNeuronId);
+        }
+        // Inner node selected: restart the whole process from it
+        // (paper: "the entire process restarts with the target node").
+        at = node;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::octree::DomainDecomposition;
+
+    fn build(positions: &[Vec3], vac: &[f32]) -> Octree {
+        let decomp = DomainDecomposition::new(1, 100.0);
+        let mut tree = Octree::build(&decomp, 0, 0, positions);
+        tree.reset_and_set_leaves(0, vac, vac);
+        tree.aggregate_local();
+        tree.aggregate_upper();
+        tree.normalize();
+        tree
+    }
+
+    fn params(exclude: u64) -> SelectParams {
+        SelectParams {
+            theta: 0.3,
+            sigma: 750.0,
+            exclude,
+            kind: ElementKind::Excitatory,
+        }
+    }
+
+    #[test]
+    fn finds_the_only_candidate() {
+        let positions =
+            vec![Vec3::new(10.0, 10.0, 10.0), Vec3::new(90.0, 90.0, 90.0)];
+        let tree = build(&positions, &[1.0, 1.0]);
+        let mut rng = Rng::new(1);
+        let mut scratch = SelectScratch::default();
+        // Searching from neuron 0 must find neuron 1.
+        let got = select_local(
+            &tree,
+            tree.root(),
+            &positions[0],
+            &params(0),
+            &mut scratch,
+            &mut rng,
+        );
+        assert_eq!(got, Some(1));
+    }
+
+    #[test]
+    fn excludes_self_even_when_alone() {
+        let positions = vec![Vec3::new(10.0, 10.0, 10.0)];
+        let tree = build(&positions, &[1.0]);
+        let mut rng = Rng::new(2);
+        let mut scratch = SelectScratch::default();
+        let got = select_local(
+            &tree,
+            tree.root(),
+            &positions[0],
+            &params(0),
+            &mut scratch,
+            &mut rng,
+        );
+        assert_eq!(got, None);
+    }
+
+    #[test]
+    fn zero_vacancy_is_never_selected() {
+        let positions =
+            vec![Vec3::new(10.0, 10.0, 10.0), Vec3::new(50.0, 50.0, 50.0), Vec3::new(90.0, 90.0, 90.0)];
+        let tree = build(&positions, &[1.0, 0.0, 1.0]);
+        let mut rng = Rng::new(3);
+        let mut scratch = SelectScratch::default();
+        for _ in 0..50 {
+            let got = select_local(
+                &tree,
+                tree.root(),
+                &positions[0],
+                &params(0),
+                &mut scratch,
+                &mut rng,
+            );
+            assert_eq!(got, Some(2), "vacancy-0 neuron 1 must never be chosen");
+        }
+    }
+
+    #[test]
+    fn returns_none_when_no_vacancy_at_all() {
+        let positions = vec![Vec3::new(10.0, 10.0, 10.0), Vec3::new(90.0, 90.0, 90.0)];
+        let tree = build(&positions, &[0.0, 0.0]);
+        let mut rng = Rng::new(4);
+        let mut scratch = SelectScratch::default();
+        assert_eq!(
+            select_local(&tree, tree.root(), &positions[0], &params(0), &mut scratch, &mut rng),
+            None
+        );
+    }
+
+    #[test]
+    fn closer_targets_preferred_with_small_sigma() {
+        // Neuron 0 searches; neuron 1 is near, neuron 2 far. With a
+        // small sigma the near one should dominate.
+        let positions = vec![
+            Vec3::new(10.0, 10.0, 10.0),
+            Vec3::new(15.0, 10.0, 10.0),
+            Vec3::new(95.0, 95.0, 95.0),
+        ];
+        let tree = build(&positions, &[1.0, 1.0, 1.0]);
+        let mut rng = Rng::new(5);
+        let mut scratch = SelectScratch::default();
+        let mut p = params(0);
+        p.sigma = 20.0;
+        let mut near = 0;
+        for _ in 0..200 {
+            match select_local(&tree, tree.root(), &positions[0], &p, &mut scratch, &mut rng) {
+                Some(1) => near += 1,
+                Some(2) => {}
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        assert!(near > 190, "near target chosen {near}/200");
+    }
+
+    #[test]
+    fn theta_zero_is_exact_and_still_terminates() {
+        let mut rng = Rng::new(6);
+        let positions: Vec<Vec3> = (0..50)
+            .map(|_| {
+                Vec3::new(
+                    rng.uniform(0.0, 100.0),
+                    rng.uniform(0.0, 100.0),
+                    rng.uniform(0.0, 100.0),
+                )
+            })
+            .collect();
+        let vac = vec![1.0f32; 50];
+        let tree = build(&positions, &vac);
+        let mut scratch = SelectScratch::default();
+        let mut p = params(0);
+        p.theta = 0.0; // never approximate: all candidates are leaves
+        let got =
+            select_local(&tree, tree.root(), &positions[0], &p, &mut scratch, &mut rng);
+        assert!(matches!(got, Some(id) if id != 0 && id < 50));
+    }
+}

@@ -1,0 +1,91 @@
+//! Minimal CLI argument handling (the offline crate set has no `clap`).
+//!
+//! Grammar: `ilmi <subcommand> [--flag value]... [--bool-flag]...`
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub subcommand: String,
+    flags: BTreeMap<String, Vec<String>>,
+    bools: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`. Flags may repeat (`--set a=1 --set b=2`).
+    pub fn parse(argv: &[String]) -> Result<Args, String> {
+        let mut args = Args::default();
+        let mut it = argv.iter().peekable();
+        args.subcommand = it.next().cloned().unwrap_or_default();
+        while let Some(tok) = it.next() {
+            let Some(name) = tok.strip_prefix("--") else {
+                return Err(format!("unexpected positional argument {tok:?}"));
+            };
+            match it.peek() {
+                Some(v) if !v.starts_with("--") => {
+                    let v = it.next().unwrap().clone();
+                    args.flags.entry(name.to_string()).or_default().push(v);
+                }
+                _ => args.bools.push(name.to_string()),
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    pub fn get_all(&self, name: &str) -> &[String] {
+        self.flags.get(name).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    pub fn get_bool(&self, name: &str) -> bool {
+        self.bools.iter().any(|b| b == name)
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>, String> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => {
+                v.parse().map(Some).map_err(|_| format!("invalid value {v:?} for --{name}"))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_flags_and_bools() {
+        let a = Args::parse(&sv(&[
+            "simulate", "--config", "x.ini", "--set", "a=1", "--set", "b=2", "--verbose",
+        ]))
+        .unwrap();
+        assert_eq!(a.subcommand, "simulate");
+        assert_eq!(a.get("config"), Some("x.ini"));
+        assert_eq!(a.get_all("set"), &["a=1".to_string(), "b=2".to_string()]);
+        assert!(a.get_bool("verbose"));
+        assert!(!a.get_bool("quiet"));
+    }
+
+    #[test]
+    fn rejects_positionals() {
+        assert!(Args::parse(&sv(&["run", "oops"])).is_err());
+    }
+
+    #[test]
+    fn typed_parse() {
+        let a = Args::parse(&sv(&["x", "--steps", "100"])).unwrap();
+        assert_eq!(a.get_parse::<usize>("steps").unwrap(), Some(100));
+        assert_eq!(a.get_parse::<usize>("missing").unwrap(), None);
+        let bad = Args::parse(&sv(&["x", "--steps", "abc"])).unwrap();
+        assert!(bad.get_parse::<usize>("steps").is_err());
+    }
+}

@@ -1,0 +1,140 @@
+//! Per-rank communication accounting.
+//!
+//! Matches the paper's Tables I/II accounting: bytes sent/received over
+//! collectives (self-delivery is free, exactly as a rank's copy to itself
+//! costs no network traffic) and bytes fetched through RMA. Message and
+//! collective counts feed the latency analysis in the bench harness.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+#[derive(Default, Debug)]
+pub struct CommCounters {
+    bytes_sent: AtomicU64,
+    bytes_recv: AtomicU64,
+    bytes_rma: AtomicU64,
+    msgs_sent: AtomicU64,
+    collectives: AtomicU64,
+    rma_gets: AtomicU64,
+}
+
+/// A plain-data copy of the counters at one point in time.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CounterSnapshot {
+    pub bytes_sent: u64,
+    pub bytes_recv: u64,
+    pub bytes_rma: u64,
+    pub msgs_sent: u64,
+    pub collectives: u64,
+    pub rma_gets: u64,
+}
+
+impl CommCounters {
+    pub fn add_sent(&self, bytes: u64) {
+        self.bytes_sent.fetch_add(bytes, Ordering::Relaxed);
+        if bytes > 0 {
+            self.msgs_sent.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    pub fn add_recv(&self, bytes: u64) {
+        self.bytes_recv.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    pub fn add_rma(&self, bytes: u64) {
+        self.bytes_rma.fetch_add(bytes, Ordering::Relaxed);
+        self.rma_gets.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add_collective(&self) {
+        self.collectives.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> CounterSnapshot {
+        CounterSnapshot {
+            bytes_sent: self.bytes_sent.load(Ordering::Relaxed),
+            bytes_recv: self.bytes_recv.load(Ordering::Relaxed),
+            bytes_rma: self.bytes_rma.load(Ordering::Relaxed),
+            msgs_sent: self.msgs_sent.load(Ordering::Relaxed),
+            collectives: self.collectives.load(Ordering::Relaxed),
+            rma_gets: self.rma_gets.load(Ordering::Relaxed),
+        }
+    }
+
+    pub fn reset(&self) {
+        self.bytes_sent.store(0, Ordering::Relaxed);
+        self.bytes_recv.store(0, Ordering::Relaxed);
+        self.bytes_rma.store(0, Ordering::Relaxed);
+        self.msgs_sent.store(0, Ordering::Relaxed);
+        self.collectives.store(0, Ordering::Relaxed);
+        self.rma_gets.store(0, Ordering::Relaxed);
+    }
+}
+
+impl CounterSnapshot {
+    /// Difference since an earlier snapshot.
+    pub fn since(&self, earlier: &CounterSnapshot) -> CounterSnapshot {
+        CounterSnapshot {
+            bytes_sent: self.bytes_sent - earlier.bytes_sent,
+            bytes_recv: self.bytes_recv - earlier.bytes_recv,
+            bytes_rma: self.bytes_rma - earlier.bytes_rma,
+            msgs_sent: self.msgs_sent - earlier.msgs_sent,
+            collectives: self.collectives - earlier.collectives,
+            rma_gets: self.rma_gets - earlier.rma_gets,
+        }
+    }
+
+    /// Elementwise sum (aggregating over ranks).
+    pub fn merge(&self, other: &CounterSnapshot) -> CounterSnapshot {
+        CounterSnapshot {
+            bytes_sent: self.bytes_sent + other.bytes_sent,
+            bytes_recv: self.bytes_recv + other.bytes_recv,
+            bytes_rma: self.bytes_rma + other.bytes_rma,
+            msgs_sent: self.msgs_sent + other.msgs_sent,
+            collectives: self.collectives + other.collectives,
+            rma_gets: self.rma_gets + other.rma_gets,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accounting_and_snapshot() {
+        let c = CommCounters::default();
+        c.add_sent(100);
+        c.add_sent(0); // zero-byte sends are not messages
+        c.add_recv(50);
+        c.add_rma(17);
+        c.add_collective();
+        let s = c.snapshot();
+        assert_eq!(s.bytes_sent, 100);
+        assert_eq!(s.msgs_sent, 1);
+        assert_eq!(s.bytes_recv, 50);
+        assert_eq!(s.bytes_rma, 17);
+        assert_eq!(s.rma_gets, 1);
+        assert_eq!(s.collectives, 1);
+    }
+
+    #[test]
+    fn since_and_merge() {
+        let c = CommCounters::default();
+        c.add_sent(10);
+        let before = c.snapshot();
+        c.add_sent(30);
+        let diff = c.snapshot().since(&before);
+        assert_eq!(diff.bytes_sent, 30);
+        assert_eq!(diff.msgs_sent, 1);
+        let merged = before.merge(&diff);
+        assert_eq!(merged.bytes_sent, 40);
+    }
+
+    #[test]
+    fn reset_clears() {
+        let c = CommCounters::default();
+        c.add_sent(10);
+        c.reset();
+        assert_eq!(c.snapshot(), CounterSnapshot::default());
+    }
+}

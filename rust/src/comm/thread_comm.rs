@@ -1,0 +1,322 @@
+//! Thread-backed communicator: each simulated MPI rank is an OS thread.
+//!
+//! Collectives move real heap buffers through per-(dst, src) slots with a
+//! barrier on each side — the synchronization structure of a synchronous
+//! MPI all-to-all. RMA windows are published `Arc<Vec<u8>>` buffers other
+//! ranks copy from (one-sided: the owner does not participate in a get,
+//! exactly like `MPI_Get` on a passive target).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Barrier, Mutex, RwLock};
+
+use super::counters::{CommCounters, CounterSnapshot};
+
+/// Key identifying a published RMA window (e.g. "octree nodes of this
+/// connectivity update").
+pub type WindowKey = u32;
+
+struct Shared {
+    size: usize,
+    barrier: Barrier,
+    /// slots[parity][dst][src]: in-flight buffer from `src` to `dst`.
+    /// Two parity-alternating slot sets let `all_to_all` get away with a
+    /// SINGLE barrier per collective: writes of collective k+1 go to the
+    /// other set, so they can never clobber a k-buffer a slower rank has
+    /// not consumed yet, and by the time collective k+2 (same set as k)
+    /// writes, every rank has passed the k+1 barrier — which it can only
+    /// do after consuming k. (EXPERIMENTS.md §Perf, optimization 1.)
+    slots: [Vec<Vec<Mutex<Option<Vec<u8>>>>>; 2],
+    /// Per-rank published RMA windows.
+    windows: Vec<RwLock<HashMap<WindowKey, Arc<Vec<u8>>>>>,
+    counters: Vec<CommCounters>,
+    poisoned: AtomicBool,
+}
+
+/// One rank's handle onto the shared communicator.
+pub struct ThreadComm {
+    rank: usize,
+    /// Parity of the next collective on this rank (ranks stay in
+    /// lockstep: a collective is collective for everyone).
+    parity: std::cell::Cell<u8>,
+    shared: Arc<Shared>,
+}
+
+impl ThreadComm {
+    /// Create handles for all `size` ranks of a new communicator.
+    pub fn create(size: usize) -> Vec<ThreadComm> {
+        assert!(size > 0);
+        let make_slots = || {
+            (0..size)
+                .map(|_| (0..size).map(|_| Mutex::new(None)).collect())
+                .collect()
+        };
+        let shared = Arc::new(Shared {
+            size,
+            barrier: Barrier::new(size),
+            slots: [make_slots(), make_slots()],
+            windows: (0..size).map(|_| RwLock::new(HashMap::new())).collect(),
+            counters: (0..size).map(|_| CommCounters::default()).collect(),
+            poisoned: AtomicBool::new(false),
+        });
+        (0..size)
+            .map(|rank| ThreadComm {
+                rank,
+                parity: std::cell::Cell::new(0),
+                shared: Arc::clone(&shared),
+            })
+            .collect()
+    }
+
+    /// A single-rank communicator (serial execution, e.g. unit tests).
+    pub fn solo() -> ThreadComm {
+        ThreadComm::create(1).pop().unwrap()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn size(&self) -> usize {
+        self.shared.size
+    }
+
+    /// Synchronize all ranks.
+    pub fn barrier(&self) {
+        self.shared.barrier.wait();
+    }
+
+    /// Synchronous all-to-all: `sends[d]` is delivered to rank `d`;
+    /// returns `recvs[s]` = buffer sent by rank `s`. Bytes moving between
+    /// distinct ranks are counted; self-delivery is free (no network).
+    pub fn all_to_all(&self, mut sends: Vec<Vec<u8>>) -> Vec<Vec<u8>> {
+        let size = self.shared.size;
+        assert_eq!(sends.len(), size, "all_to_all needs one buffer per rank");
+        let me = self.rank;
+        let counters = &self.shared.counters[me];
+        counters.add_collective();
+        let parity = self.parity.get() as usize;
+        self.parity.set(1 - parity as u8);
+        let slots = &self.shared.slots[parity];
+
+        // Keep our own buffer aside; post the rest.
+        let mut own = Some(std::mem::take(&mut sends[me]));
+        for (dst, buf) in sends.into_iter().enumerate() {
+            if dst == me {
+                continue;
+            }
+            counters.add_sent(buf.len() as u64);
+            *slots[dst][me].lock().unwrap() = Some(buf);
+        }
+        // One barrier: all posts are visible; parity double-buffering
+        // makes a drain barrier unnecessary (see `Shared::slots`).
+        self.barrier();
+
+        let mut recvs = Vec::with_capacity(size);
+        for src in 0..size {
+            if src == me {
+                recvs.push(own.take().expect("self buffer consumed twice"));
+                continue;
+            }
+            let buf = slots[me][src]
+                .lock()
+                .unwrap()
+                .take()
+                .expect("all_to_all slot empty: collective mismatch across ranks");
+            counters.add_recv(buf.len() as u64);
+            recvs.push(buf);
+        }
+        recvs
+    }
+
+    /// Publish (replace) an RMA window under `key`. Visible to other
+    /// ranks after the next barrier (caller synchronizes, like
+    /// `MPI_Win_fence`).
+    pub fn publish_window(&self, key: WindowKey, data: Vec<u8>) {
+        self.shared.windows[self.rank].write().unwrap().insert(key, Arc::new(data));
+    }
+
+    /// Remove a published window.
+    pub fn retract_window(&self, key: WindowKey) {
+        self.shared.windows[self.rank].write().unwrap().remove(&key);
+    }
+
+    /// One-sided get: copy `len` bytes at `offset` from `target`'s window.
+    /// Counted as remotely-accessed bytes on the *calling* rank (the paper
+    /// attributes RMA traffic to the requester). Self-gets are free.
+    pub fn rma_get(&self, target: usize, key: WindowKey, offset: usize, len: usize) -> Vec<u8> {
+        let win = self.shared.windows[target]
+            .read()
+            .unwrap()
+            .get(&key)
+            .cloned()
+            .unwrap_or_else(|| panic!("rank {} has no window {key}", target));
+        assert!(
+            offset + len <= win.len(),
+            "rma_get out of bounds: {}+{} > {}",
+            offset,
+            len,
+            win.len()
+        );
+        if target != self.rank {
+            self.shared.counters[self.rank].add_rma(len as u64);
+        }
+        win[offset..offset + len].to_vec()
+    }
+
+    /// Size in bytes of `target`'s window (free metadata peek used to
+    /// bound fetches; not counted).
+    pub fn window_len(&self, target: usize, key: WindowKey) -> Option<usize> {
+        self.shared.windows[target].read().unwrap().get(&key).map(|w| w.len())
+    }
+
+    /// This rank's counter handle.
+    pub fn counters(&self) -> &CommCounters {
+        &self.shared.counters[self.rank]
+    }
+
+    /// Snapshot of every rank's counters (any rank may read).
+    pub fn all_counters(&self) -> Vec<CounterSnapshot> {
+        self.shared.counters.iter().map(|c| c.snapshot()).collect()
+    }
+
+    /// Mark the communicator as failed (a panicking rank sets this so
+    /// sibling ranks blocked in a barrier can be diagnosed).
+    pub fn poison(&self) {
+        self.shared.poisoned.store(true, Ordering::SeqCst);
+    }
+
+    pub fn is_poisoned(&self) -> bool {
+        self.shared.poisoned.load(Ordering::SeqCst)
+    }
+}
+
+/// Run `f` on `size` ranks (threads); returns per-rank results in rank
+/// order. Panics propagate after all threads finish or abort.
+pub fn run_ranks<R, F>(size: usize, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(ThreadComm) -> R + Send + Sync,
+{
+    let comms = ThreadComm::create(size);
+    let mut results: Vec<Option<R>> = (0..size).map(|_| None).collect();
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(size);
+        for (slot, comm) in results.iter_mut().zip(comms) {
+            let f = &f;
+            handles.push(scope.spawn(move || {
+                *slot = Some(f(comm));
+            }));
+        }
+        let mut panic: Option<Box<dyn std::any::Any + Send>> = None;
+        for h in handles {
+            if let Err(e) = h.join() {
+                panic = Some(e);
+            }
+        }
+        if let Some(e) = panic {
+            std::panic::resume_unwind(e);
+        }
+    });
+    results.into_iter().map(|r| r.expect("rank produced no result")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_to_all_routes_buffers() {
+        let results = run_ranks(3, |comm| {
+            let sends: Vec<Vec<u8>> =
+                (0..3).map(|d| vec![comm.rank() as u8, d as u8]).collect();
+            comm.all_to_all(sends)
+        });
+        for (rank, recvs) in results.iter().enumerate() {
+            for (src, buf) in recvs.iter().enumerate() {
+                assert_eq!(buf, &vec![src as u8, rank as u8]);
+            }
+        }
+    }
+
+    #[test]
+    fn repeated_collectives_do_not_cross() {
+        let results = run_ranks(4, |comm| {
+            let mut sums = Vec::new();
+            for round in 0..10u8 {
+                let sends: Vec<Vec<u8>> = (0..4).map(|_| vec![round]).collect();
+                let recvs = comm.all_to_all(sends);
+                sums.push(recvs.iter().map(|b| b[0] as u32).sum::<u32>());
+            }
+            sums
+        });
+        for sums in results {
+            assert_eq!(sums, (0..10).map(|r| 4 * r).collect::<Vec<u32>>());
+        }
+    }
+
+    #[test]
+    fn self_delivery_is_free() {
+        let results = run_ranks(2, |comm| {
+            let sends: Vec<Vec<u8>> = vec![vec![0; 100], vec![0; 100]];
+            comm.all_to_all(sends);
+            comm.counters().snapshot()
+        });
+        for snap in results {
+            assert_eq!(snap.bytes_sent, 100); // only the off-rank buffer
+            assert_eq!(snap.bytes_recv, 100);
+            assert_eq!(snap.msgs_sent, 1);
+        }
+    }
+
+    #[test]
+    fn solo_all_to_all() {
+        let comm = ThreadComm::solo();
+        let recvs = comm.all_to_all(vec![vec![1, 2, 3]]);
+        assert_eq!(recvs, vec![vec![1, 2, 3]]);
+        assert_eq!(comm.counters().snapshot().bytes_sent, 0);
+    }
+
+    #[test]
+    fn rma_window_get() {
+        let results = run_ranks(2, |comm| {
+            comm.publish_window(7, vec![comm.rank() as u8; 16]);
+            comm.barrier();
+            let other = 1 - comm.rank();
+            let got = comm.rma_get(other, 7, 4, 8);
+            comm.barrier();
+            (got, comm.counters().snapshot())
+        });
+        for (rank, (got, snap)) in results.iter().enumerate() {
+            assert_eq!(got, &vec![(1 - rank) as u8; 8]);
+            assert_eq!(snap.bytes_rma, 8);
+            assert_eq!(snap.rma_gets, 1);
+        }
+    }
+
+    #[test]
+    fn self_rma_is_free() {
+        let comm = ThreadComm::solo();
+        comm.publish_window(1, vec![9; 4]);
+        let got = comm.rma_get(0, 1, 0, 4);
+        assert_eq!(got, vec![9; 4]);
+        assert_eq!(comm.counters().snapshot().bytes_rma, 0);
+    }
+
+    #[test]
+    fn window_len_and_retract() {
+        let comm = ThreadComm::solo();
+        comm.publish_window(3, vec![0; 10]);
+        assert_eq!(comm.window_len(0, 3), Some(10));
+        comm.retract_window(3);
+        assert_eq!(comm.window_len(0, 3), None);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rma_out_of_bounds_panics() {
+        let comm = ThreadComm::solo();
+        comm.publish_window(1, vec![0; 4]);
+        comm.rma_get(0, 1, 2, 8);
+    }
+}

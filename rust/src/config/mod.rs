@@ -1,0 +1,375 @@
+//! Simulation configuration: typed config struct, INI-style parser,
+//! presets matching the paper's experimental setups.
+//!
+//! The offline crate set has no `serde`/`toml`, so the parser is a small
+//! hand-rolled INI subset: `[section]` headers, `key = value` lines, `#`
+//! comments. Every key can also be overridden from the CLI as
+//! `--set section.key=value`.
+
+mod parser;
+
+pub use parser::{parse_ini, ParseError};
+
+use crate::neuron::params::NeuronParams;
+
+/// Which connectivity-update algorithm to run (paper §IV-A).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ConnectivityAlg {
+    /// Original distributed Barnes–Hut: remote octree nodes are
+    /// downloaded via (emulated) RMA during the descent.
+    OldRma,
+    /// Proposed location-aware Barnes–Hut: the searching neuron is sent
+    /// to the rank owning the target subtree ("move computation").
+    NewLocationAware,
+    /// Direct O(n^2) evaluation (NEST-style baseline; testing/validation).
+    Direct,
+}
+
+/// Which spike-exchange algorithm to run (paper §IV-B).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpikeAlg {
+    /// Original: all-to-all exchange of fired neuron ids every step;
+    /// receivers binary-search the sorted id lists.
+    OldIds,
+    /// Proposed: exchange firing frequencies every `delta` steps;
+    /// receivers reconstruct spikes with a PRNG.
+    NewFrequency,
+}
+
+/// Which backend executes the per-step neuron update.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Native Rust implementation (bit-compatible with the L1 kernel).
+    Native,
+    /// AOT-lowered JAX/Pallas artifact executed through PJRT.
+    Xla,
+}
+
+/// Which neuron model drives the electrical activity (the plasticity
+/// machinery is model-agnostic — paper §III-A0a "computed using models
+/// like Izhikevich").
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NeuronModel {
+    /// Izhikevich (2003) spiking model — the default; this is what the
+    /// L1 Pallas kernel implements, so it works on both backends.
+    Izhikevich,
+    /// Rate-based Poisson model (native backend only).
+    Poisson,
+}
+
+/// Full simulation configuration.
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    // -- topology ------------------------------------------------------
+    /// Number of simulated MPI ranks (threads).
+    pub ranks: usize,
+    /// Neurons owned by each rank.
+    pub neurons_per_rank: usize,
+    /// Edge length of the cubic simulation domain (µm).
+    pub domain_size: f64,
+    /// Global PRNG seed.
+    pub seed: u64,
+
+    // -- schedule ------------------------------------------------------
+    /// Total simulation steps (1 step = 1 ms biological time).
+    pub steps: usize,
+    /// Connectivity update every this many steps (paper: 100).
+    pub plasticity_interval: usize,
+    /// Frequency-exchange epoch Δ for `SpikeAlg::NewFrequency`
+    /// (paper: 100 — every connectivity update).
+    pub delta: usize,
+
+    // -- algorithms ----------------------------------------------------
+    pub connectivity_alg: ConnectivityAlg,
+    pub spike_alg: SpikeAlg,
+    pub backend: Backend,
+    pub neuron_model: NeuronModel,
+    /// Barnes–Hut acceptance criterion θ (paper: {0.2, 0.3, 0.4}).
+    pub theta: f64,
+
+    // -- model ---------------------------------------------------------
+    /// Gaussian connection-kernel width σ (µm).
+    pub sigma: f64,
+    /// Fraction of excitatory neurons (rest inhibitory).
+    pub frac_excitatory: f64,
+    /// Initial vacant synaptic elements per neuron drawn uniformly from
+    /// [lo, hi] (paper: [1.1, 1.5]).
+    pub init_elements_lo: f64,
+    pub init_elements_hi: f64,
+    /// Background input ~ N(mean, std) (paper §V-D: N(5, 1)).
+    pub bg_mean: f64,
+    pub bg_std: f64,
+    /// Neuron/plasticity model parameters (shared with L1/L2 as a
+    /// (16,)-f32 vector — see `neuron::params`).
+    pub neuron: NeuronParams,
+
+    // -- instrumentation -----------------------------------------------
+    /// Record per-neuron calcium every this many steps (0 = off).
+    pub record_calcium_every: usize,
+    /// Directory with AOT artifacts (for `Backend::Xla`).
+    pub artifacts_dir: String,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        Self {
+            ranks: 2,
+            neurons_per_rank: 256,
+            domain_size: 1000.0,
+            seed: 42,
+            steps: 1000,
+            plasticity_interval: 100,
+            delta: 100,
+            connectivity_alg: ConnectivityAlg::NewLocationAware,
+            spike_alg: SpikeAlg::NewFrequency,
+            backend: Backend::Native,
+            neuron_model: NeuronModel::Izhikevich,
+            theta: 0.3,
+            sigma: 750.0,
+            frac_excitatory: 0.8,
+            init_elements_lo: 1.1,
+            init_elements_hi: 1.5,
+            bg_mean: 5.0,
+            bg_std: 1.0,
+            neuron: NeuronParams::default(),
+            record_calcium_every: 0,
+            artifacts_dir: "artifacts".to_string(),
+        }
+    }
+}
+
+impl SimConfig {
+    /// Total neuron count across all ranks.
+    pub fn total_neurons(&self) -> usize {
+        self.ranks * self.neurons_per_rank
+    }
+
+    /// Paper §V-B experimental setup: 1000 steps, 10 plasticity updates,
+    /// no initial connectivity, 1.1–1.5 vacant elements per neuron.
+    pub fn paper_timing(ranks: usize, neurons_per_rank: usize, theta: f64) -> Self {
+        Self {
+            ranks,
+            neurons_per_rank,
+            theta,
+            steps: 1000,
+            plasticity_interval: 100,
+            delta: 100,
+            ..Self::default()
+        }
+    }
+
+    /// Paper §V-D quality setup: 32 neurons on 32 ranks (one each),
+    /// target calcium 0.7, growth rate 0.001, background N(5,1).
+    pub fn paper_quality(steps: usize) -> Self {
+        let mut neuron = NeuronParams::default();
+        neuron.eps_target_ca = 0.7;
+        neuron.nu_growth = 0.001;
+        Self {
+            ranks: 32,
+            neurons_per_rank: 1,
+            steps,
+            plasticity_interval: 100,
+            delta: 100,
+            bg_mean: 5.0,
+            bg_std: 1.0,
+            neuron,
+            record_calcium_every: 100,
+            ..Self::default()
+        }
+    }
+
+    /// Apply a `section.key=value` override. Unknown keys are an error so
+    /// typos surface instead of silently doing nothing.
+    pub fn apply_kv(&mut self, key: &str, value: &str) -> Result<(), String> {
+        let bad = |what: &str| format!("invalid value {value:?} for {what}");
+        match key {
+            "topology.ranks" => self.ranks = value.parse().map_err(|_| bad(key))?,
+            "topology.neurons_per_rank" => {
+                self.neurons_per_rank = value.parse().map_err(|_| bad(key))?
+            }
+            "topology.domain_size" => self.domain_size = value.parse().map_err(|_| bad(key))?,
+            "topology.seed" => self.seed = value.parse().map_err(|_| bad(key))?,
+            "schedule.steps" => self.steps = value.parse().map_err(|_| bad(key))?,
+            "schedule.plasticity_interval" => {
+                self.plasticity_interval = value.parse().map_err(|_| bad(key))?
+            }
+            "schedule.delta" => self.delta = value.parse().map_err(|_| bad(key))?,
+            "algorithms.connectivity" => {
+                self.connectivity_alg = match value {
+                    "old" | "old_rma" => ConnectivityAlg::OldRma,
+                    "new" | "location_aware" => ConnectivityAlg::NewLocationAware,
+                    "direct" => ConnectivityAlg::Direct,
+                    _ => return Err(bad(key)),
+                }
+            }
+            "algorithms.spikes" => {
+                self.spike_alg = match value {
+                    "old" | "ids" => SpikeAlg::OldIds,
+                    "new" | "frequency" => SpikeAlg::NewFrequency,
+                    _ => return Err(bad(key)),
+                }
+            }
+            "algorithms.backend" => {
+                self.backend = match value {
+                    "native" => Backend::Native,
+                    "xla" => Backend::Xla,
+                    _ => return Err(bad(key)),
+                }
+            }
+            "model.neuron_model" => {
+                self.neuron_model = match value {
+                    "izhikevich" => NeuronModel::Izhikevich,
+                    "poisson" | "rate" => NeuronModel::Poisson,
+                    _ => return Err(bad(key)),
+                }
+            }
+            "algorithms.theta" => self.theta = value.parse().map_err(|_| bad(key))?,
+            "model.sigma" => self.sigma = value.parse().map_err(|_| bad(key))?,
+            "model.frac_excitatory" => {
+                self.frac_excitatory = value.parse().map_err(|_| bad(key))?
+            }
+            "model.init_elements_lo" => {
+                self.init_elements_lo = value.parse().map_err(|_| bad(key))?
+            }
+            "model.init_elements_hi" => {
+                self.init_elements_hi = value.parse().map_err(|_| bad(key))?
+            }
+            "model.bg_mean" => self.bg_mean = value.parse().map_err(|_| bad(key))?,
+            "model.bg_std" => self.bg_std = value.parse().map_err(|_| bad(key))?,
+            "model.target_calcium" => {
+                self.neuron.eps_target_ca = value.parse().map_err(|_| bad(key))?
+            }
+            "model.growth_rate" => {
+                self.neuron.nu_growth = value.parse().map_err(|_| bad(key))?
+            }
+            "model.tau_calcium" => self.neuron.tau_ca = value.parse().map_err(|_| bad(key))?,
+            "model.beta_calcium" => self.neuron.beta_ca = value.parse().map_err(|_| bad(key))?,
+            "instrumentation.record_calcium_every" => {
+                self.record_calcium_every = value.parse().map_err(|_| bad(key))?
+            }
+            "instrumentation.artifacts_dir" => self.artifacts_dir = value.to_string(),
+            _ => return Err(format!("unknown config key: {key}")),
+        }
+        Ok(())
+    }
+
+    /// Parse an INI-style config file content into a config, starting
+    /// from defaults.
+    pub fn from_ini(text: &str) -> Result<Self, String> {
+        let mut cfg = Self::default();
+        let entries = parse_ini(text).map_err(|e| e.to_string())?;
+        for (key, value) in entries {
+            cfg.apply_kv(&key, &value)?;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Load from a file path.
+    pub fn from_file(path: &str) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("cannot read config {path}: {e}"))?;
+        Self::from_ini(&text)
+    }
+
+    /// Sanity-check invariants the rest of the system assumes.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.ranks == 0 {
+            return Err("topology.ranks must be > 0".into());
+        }
+        if self.neurons_per_rank == 0 {
+            return Err("topology.neurons_per_rank must be > 0".into());
+        }
+        if !(self.theta >= 0.0 && self.theta < 1.0) {
+            return Err("algorithms.theta must be in [0, 1)".into());
+        }
+        if self.plasticity_interval == 0 || self.delta == 0 {
+            return Err("schedule intervals must be > 0".into());
+        }
+        if !(self.frac_excitatory >= 0.0 && self.frac_excitatory <= 1.0) {
+            return Err("model.frac_excitatory must be in [0, 1]".into());
+        }
+        if self.init_elements_lo > self.init_elements_hi {
+            return Err("model.init_elements_lo must be <= hi".into());
+        }
+        if self.sigma <= 0.0 || self.domain_size <= 0.0 {
+            return Err("model.sigma and topology.domain_size must be > 0".into());
+        }
+        if self.neuron_model == NeuronModel::Poisson && self.backend == Backend::Xla {
+            return Err(
+                "model.neuron_model=poisson runs on the native backend only \
+                 (the AOT artifact implements the Izhikevich kernel)"
+                    .into(),
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        SimConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn paper_presets_validate() {
+        SimConfig::paper_timing(8, 1024, 0.3).validate().unwrap();
+        SimConfig::paper_quality(1000).validate().unwrap();
+    }
+
+    #[test]
+    fn quality_preset_matches_paper() {
+        let cfg = SimConfig::paper_quality(200_000);
+        assert_eq!(cfg.ranks, 32);
+        assert_eq!(cfg.neurons_per_rank, 1);
+        assert_eq!(cfg.neuron.eps_target_ca, 0.7);
+        assert_eq!(cfg.neuron.nu_growth, 0.001);
+        assert_eq!(cfg.bg_mean, 5.0);
+        assert_eq!(cfg.bg_std, 1.0);
+    }
+
+    #[test]
+    fn ini_roundtrip() {
+        let text = "
+[topology]
+ranks = 4
+neurons_per_rank = 128
+# a comment
+[algorithms]
+connectivity = old
+spikes = frequency
+theta = 0.2
+[model]
+target_calcium = 0.6
+";
+        let cfg = SimConfig::from_ini(text).unwrap();
+        assert_eq!(cfg.ranks, 4);
+        assert_eq!(cfg.neurons_per_rank, 128);
+        assert_eq!(cfg.connectivity_alg, ConnectivityAlg::OldRma);
+        assert_eq!(cfg.spike_alg, SpikeAlg::NewFrequency);
+        assert_eq!(cfg.theta, 0.2);
+        assert_eq!(cfg.neuron.eps_target_ca, 0.6);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        assert!(SimConfig::from_ini("[topology]\nbogus = 1").is_err());
+        let mut cfg = SimConfig::default();
+        assert!(cfg.apply_kv("no.such.key", "1").is_err());
+    }
+
+    #[test]
+    fn invalid_values_rejected() {
+        let mut cfg = SimConfig::default();
+        assert!(cfg.apply_kv("topology.ranks", "not-a-number").is_err());
+        cfg.theta = 1.5;
+        assert!(cfg.validate().is_err());
+        cfg.theta = 0.3;
+        cfg.ranks = 0;
+        assert!(cfg.validate().is_err());
+    }
+}

@@ -1,0 +1,103 @@
+//! Tiny INI-subset parser: `[section]` headers, `key = value` pairs,
+//! `#`/`;` comments, blank lines. Returns flattened `section.key` pairs
+//! in file order.
+
+use std::fmt;
+
+#[derive(Debug, PartialEq, Eq)]
+pub struct ParseError {
+    pub line: usize,
+    pub message: String,
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "config parse error at line {}: {}", self.line, self.message)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+/// Parse INI text into ordered `(section.key, value)` pairs.
+pub fn parse_ini(text: &str) -> Result<Vec<(String, String)>, ParseError> {
+    let mut section = String::new();
+    let mut out = Vec::new();
+    for (idx, raw) in text.lines().enumerate() {
+        let line_no = idx + 1;
+        // Strip comments (not inside values — values with '#' need quoting
+        // we don't support; fine for this config surface).
+        let line = match raw.find(['#', ';']) {
+            Some(pos) => &raw[..pos],
+            None => raw,
+        };
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest.strip_suffix(']').ok_or_else(|| ParseError {
+                line: line_no,
+                message: "unterminated section header".into(),
+            })?;
+            let name = name.trim();
+            if name.is_empty() {
+                return Err(ParseError { line: line_no, message: "empty section name".into() });
+            }
+            section = name.to_string();
+            continue;
+        }
+        let eq = line.find('=').ok_or_else(|| ParseError {
+            line: line_no,
+            message: format!("expected `key = value`, got {line:?}"),
+        })?;
+        let key = line[..eq].trim();
+        let value = line[eq + 1..].trim();
+        if key.is_empty() {
+            return Err(ParseError { line: line_no, message: "empty key".into() });
+        }
+        let full_key =
+            if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
+        out.push((full_key, value.to_string()));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_pairs() {
+        let got = parse_ini("[a]\nx = 1\ny=2\n[b]\nz = hello world\n").unwrap();
+        assert_eq!(
+            got,
+            vec![
+                ("a.x".to_string(), "1".to_string()),
+                ("a.y".to_string(), "2".to_string()),
+                ("b.z".to_string(), "hello world".to_string()),
+            ]
+        );
+    }
+
+    #[test]
+    fn comments_and_blank_lines() {
+        let got = parse_ini("# header\n\n[s]\nk = v  # trailing\n; full line\n").unwrap();
+        assert_eq!(got, vec![("s.k".to_string(), "v".to_string())]);
+    }
+
+    #[test]
+    fn sectionless_keys() {
+        let got = parse_ini("k = v\n").unwrap();
+        assert_eq!(got, vec![("k".to_string(), "v".to_string())]);
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = parse_ini("[ok]\nbroken line\n").unwrap_err();
+        assert_eq!(err.line, 2);
+        let err = parse_ini("[unterminated\n").unwrap_err();
+        assert_eq!(err.line, 1);
+        let err = parse_ini("= nokey\n").unwrap_err();
+        assert_eq!(err.line, 1);
+    }
+}

@@ -1,0 +1,377 @@
+//! The MSP simulation loop (paper §III-A): per step — spike transmission,
+//! electrical update, element update; every `plasticity_interval` steps —
+//! synapse deletion, octree update, Barnes–Hut formation. Each phase is
+//! timed under the paper's Fig. 11 categories and every byte crossing
+//! ranks is counted by the communicator.
+
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::barnes_hut::{self, FormationStats};
+use crate::comm::{gather_all, run_ranks, ThreadComm};
+use crate::config::{Backend, ConnectivityAlg, SimConfig, SpikeAlg};
+use crate::metrics::{Phase, PhaseTimers, RankReport, SimReport};
+use crate::neuron::{izhikevich, Population};
+use crate::octree::{
+    serialize_local_subtrees, DomainDecomposition, Octree, RemoteNodeCache, NO_CHILD,
+    OCTREE_WINDOW,
+};
+use crate::plasticity::{run_deletion_phase, vacant, DeletionStats, SynapseStore};
+use crate::runtime::{NeuronInputs, XlaHandle};
+use crate::spikes::{deliver_input, FrequencyExchange, IdExchange};
+use crate::util::Rng;
+
+/// All mutable state of one rank during a simulation.
+pub struct RankState {
+    pub pop: Population,
+    pub store: SynapseStore,
+    pub tree: Octree,
+    pub id_exchange: IdExchange,
+    pub freq_exchange: FrequencyExchange,
+    pub cache: RemoteNodeCache,
+    pub rng_model: Rng,
+    pub rng_conn: Rng,
+    pub timers: PhaseTimers,
+    pub formation: FormationStats,
+    pub deletion: DeletionStats,
+    pub spike_lookups: u64,
+    pub calcium_trace: Vec<(usize, Vec<f32>)>,
+}
+
+impl RankState {
+    /// Build the initial state of `rank` (placement, octree, RNG streams).
+    pub fn init(cfg: &SimConfig, decomp: &DomainDecomposition, comm: &ThreadComm) -> RankState {
+        let rank = comm.rank();
+        let root = Rng::new(cfg.seed);
+        let mut rng_model = root.fork(1_000 + rank as u64);
+        let rng_conn = root.fork(2_000 + rank as u64);
+        let rng_spikes = root.fork(3_000 + rank as u64);
+
+        let cells: Vec<_> =
+            decomp.cells_of_rank(rank).map(|c| decomp.cell_bounds(c)).collect();
+        let pop = Population::init_in_cells(cfg, rank, &cells, &mut rng_model);
+        let tree = Octree::build(decomp, rank, pop.first_id, &pop.positions);
+        let n = pop.len();
+        RankState {
+            pop,
+            store: SynapseStore::new(n),
+            tree,
+            id_exchange: IdExchange::new(comm.size()),
+            freq_exchange: FrequencyExchange::new(cfg.delta, cfg.total_neurons(), rng_spikes),
+            cache: RemoteNodeCache::default(),
+            rng_model,
+            rng_conn,
+            timers: PhaseTimers::new(),
+            formation: FormationStats::default(),
+            deletion: DeletionStats::default(),
+            spike_lookups: 0,
+            calcium_trace: Vec::new(),
+        }
+    }
+
+    /// Phase A: spike transmission (previous step's spikes / last epoch's
+    /// frequencies) + input assembly.
+    pub fn spike_phase(&mut self, cfg: &SimConfig, comm: &ThreadComm, step: usize) {
+        let npr = cfg.neurons_per_rank as u64;
+        match cfg.spike_alg {
+            SpikeAlg::OldIds => {
+                let (pop, store, ex) = (&mut self.pop, &self.store, &mut self.id_exchange);
+                self.timers.time(Phase::SpikeExchange, || ex.exchange(comm, pop, store, npr));
+                let ex = &self.id_exchange;
+                self.spike_lookups += self.timers.time(Phase::SpikeLookup, || {
+                    deliver_input(&mut self.pop, &self.store, npr, comm.rank(), |r, id| {
+                        ex.spiked(r, id)
+                    })
+                });
+            }
+            SpikeAlg::NewFrequency => {
+                let (pop, store, ex) = (&mut self.pop, &self.store, &mut self.freq_exchange);
+                self.timers
+                    .time(Phase::SpikeExchange, || ex.maybe_exchange(comm, pop, store, npr, step));
+                let ex = &mut self.freq_exchange;
+                self.spike_lookups += self.timers.time(Phase::SpikeLookup, || {
+                    deliver_input(&mut self.pop, &self.store, npr, comm.rank(), |_, id| {
+                        ex.spiked(id)
+                    })
+                });
+            }
+        }
+    }
+
+    /// Phase B: background noise + the fused neuron/element update
+    /// (native mirror or the AOT XLA artifact).
+    pub fn activity_phase(&mut self, cfg: &SimConfig, xla: Option<&XlaHandle>) -> Result<()> {
+        let t0 = Instant::now();
+        self.pop.draw_noise(cfg, &mut self.rng_model);
+        match (cfg.backend, xla) {
+            (Backend::Native, _) | (Backend::Xla, None) => match cfg.neuron_model {
+                crate::config::NeuronModel::Izhikevich => {
+                    izhikevich::step(&mut self.pop, &cfg.neuron);
+                }
+                crate::config::NeuronModel::Poisson => {
+                    crate::neuron::poisson::step(
+                        &mut self.pop,
+                        &cfg.neuron,
+                        &crate::neuron::poisson::PoissonParams::default(),
+                        &mut self.rng_model,
+                    );
+                }
+            },
+            (Backend::Xla, Some(handle)) => {
+                let pop = &mut self.pop;
+                let out = handle.neuron_update(NeuronInputs {
+                    v: pop.v.clone(),
+                    u: pop.u.clone(),
+                    ca: pop.ca.clone(),
+                    z_ax: pop.z_ax.clone(),
+                    z_de: pop.z_den_exc.clone(),
+                    z_di: pop.z_den_inh.clone(),
+                    i_syn: pop.i_syn.clone(),
+                    noise: pop.noise.clone(),
+                    params: cfg.neuron.to_vec(),
+                })?;
+                pop.v = out.v;
+                pop.u = out.u;
+                pop.ca = out.ca;
+                pop.z_ax = out.z_ax;
+                pop.z_den_exc = out.z_de;
+                pop.z_den_inh = out.z_di;
+                for (i, &f) in out.fired.iter().enumerate() {
+                    let fired = f > 0.5;
+                    pop.fired[i] = fired;
+                    if fired {
+                        pop.epoch_spikes[i] += 1;
+                    }
+                }
+            }
+        }
+        self.timers.add(Phase::ActivityUpdate, t0.elapsed());
+        Ok(())
+    }
+
+    /// Phase C: the connectivity update — deletion, octree refresh (incl.
+    /// branch all-to-all and, for the old algorithm, RMA-window publish),
+    /// then formation with the configured algorithm.
+    pub fn plasticity_phase(
+        &mut self,
+        cfg: &SimConfig,
+        decomp: &DomainDecomposition,
+        comm: &ThreadComm,
+    ) {
+        let npr = cfg.neurons_per_rank as u64;
+        // C1: deletion.
+        let (pop, store, rng) = (&self.pop, &mut self.store, &mut self.rng_conn);
+        let dstats = self.timers.time(Phase::DeleteSynapses, || {
+            run_deletion_phase(comm, pop, store, rng, |id| (id / npr) as usize)
+        });
+        self.deletion.axonal_retractions += dstats.axonal_retractions;
+        self.deletion.dendritic_retractions += dstats.dendritic_retractions;
+        self.deletion.notifications_sent += dstats.notifications_sent;
+
+        // C2: octree vacancy update + branch exchange (+ window publish
+        // for the old algorithm's RMA path).
+        let t0 = Instant::now();
+        let n = self.pop.len();
+        let vac_exc: Vec<f32> = (0..n)
+            .map(|i| vacant(self.pop.z_den_exc[i], self.store.connected_den_exc[i]) as f32)
+            .collect();
+        let vac_inh: Vec<f32> = (0..n)
+            .map(|i| vacant(self.pop.z_den_inh[i], self.store.connected_den_inh[i]) as f32)
+            .collect();
+        self.tree.reset_and_set_leaves(self.pop.first_id, &vac_exc, &vac_inh);
+        self.tree.aggregate_local();
+
+        let own_cells = decomp.cells_of_rank(comm.rank());
+        let payloads = if cfg.connectivity_alg == ConnectivityAlg::OldRma {
+            let win = serialize_local_subtrees(&self.tree, own_cells.clone());
+            comm.publish_window(OCTREE_WINDOW, win.bytes);
+            self.tree.own_branch_payloads(own_cells, |c| win.root_of_cell[&c])
+        } else {
+            self.tree.own_branch_payloads(own_cells, |_| NO_CHILD)
+        };
+        let all = gather_all(comm, &payloads);
+        for (src, batch) in all.iter().enumerate() {
+            if src != comm.rank() {
+                self.tree.apply_branch_payloads(batch);
+            }
+        }
+        self.tree.aggregate_upper();
+        self.tree.normalize();
+        self.timers.add(Phase::OctreeUpdate, t0.elapsed());
+
+        // C3: formation.
+        let fstats = match cfg.connectivity_alg {
+            ConnectivityAlg::OldRma => barnes_hut::old::run_formation(
+                comm,
+                &self.tree,
+                &self.pop,
+                &mut self.store,
+                &mut self.cache,
+                cfg,
+                &mut self.rng_conn,
+            ),
+            ConnectivityAlg::NewLocationAware => barnes_hut::new::run_formation(
+                comm,
+                &self.tree,
+                &self.pop,
+                &mut self.store,
+                cfg,
+                &mut self.rng_conn,
+            ),
+            ConnectivityAlg::Direct => barnes_hut::direct::run_formation(
+                comm,
+                &self.pop,
+                &mut self.store,
+                cfg,
+                &mut self.rng_conn,
+            ),
+        };
+        self.timers.add(Phase::BarnesHut, Duration::from_nanos(fstats.compute_nanos));
+        self.timers.add(Phase::SynapseExchange, Duration::from_nanos(fstats.exchange_nanos));
+        self.formation = self.formation.merge(&fstats);
+    }
+
+    /// One full simulation step.
+    pub fn step(
+        &mut self,
+        cfg: &SimConfig,
+        decomp: &DomainDecomposition,
+        comm: &ThreadComm,
+        step: usize,
+        xla: Option<&XlaHandle>,
+    ) -> Result<()> {
+        self.spike_phase(cfg, comm, step);
+        self.activity_phase(cfg, xla)?;
+        if (step + 1) % cfg.plasticity_interval == 0 {
+            self.plasticity_phase(cfg, decomp, comm);
+        }
+        if cfg.record_calcium_every > 0 && step % cfg.record_calcium_every == 0 {
+            self.calcium_trace.push((step, self.pop.ca.clone()));
+        }
+        Ok(())
+    }
+
+    /// Assemble this rank's final report.
+    pub fn into_report(self, comm: &ThreadComm) -> RankReport {
+        RankReport {
+            rank: comm.rank(),
+            phase_seconds: self.timers.seconds(),
+            comm: comm.counters().snapshot(),
+            formation: self.formation,
+            deletion: self.deletion,
+            spike_lookups: self.spike_lookups,
+            synapses_out: self.store.total_out(),
+            synapses_in: self.store.total_in(),
+            mean_calcium: self.pop.mean_calcium(),
+            calcium_trace: self.calcium_trace,
+        }
+    }
+}
+
+/// Run a full simulation with the native backend (or whatever the config
+/// says, if an XLA handle is supplied via `run_simulation_with_xla`).
+pub fn run_simulation(cfg: &SimConfig) -> Result<SimReport> {
+    run_simulation_with_xla(cfg, None)
+}
+
+/// Run a full simulation; `xla` supplies the shared artifact executor
+/// when `cfg.backend == Backend::Xla`.
+pub fn run_simulation_with_xla(cfg: &SimConfig, xla: Option<XlaHandle>) -> Result<SimReport> {
+    cfg.validate().map_err(anyhow::Error::msg)?;
+    let decomp = DomainDecomposition::new(cfg.ranks, cfg.domain_size);
+    let wall = Instant::now();
+    let results: Vec<Result<RankReport>> = run_ranks(cfg.ranks, |comm| {
+        let mut state = RankState::init(cfg, &decomp, &comm);
+        for step in 0..cfg.steps {
+            state.step(cfg, &decomp, &comm, step, xla.as_ref())?;
+        }
+        Ok(state.into_report(&comm))
+    });
+    let mut ranks = Vec::with_capacity(results.len());
+    for r in results {
+        ranks.push(r?);
+    }
+    Ok(SimReport { ranks, wall_seconds: wall.elapsed().as_secs_f64() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn smoke_cfg() -> SimConfig {
+        SimConfig {
+            ranks: 2,
+            neurons_per_rank: 32,
+            steps: 200,
+            plasticity_interval: 50,
+            delta: 50,
+            ..SimConfig::default()
+        }
+    }
+
+    #[test]
+    fn smoke_new_algorithms() {
+        let report = run_simulation(&smoke_cfg()).unwrap();
+        assert_eq!(report.ranks.len(), 2);
+        // Synapse bookkeeping is globally consistent.
+        let out: usize = report.ranks.iter().map(|r| r.synapses_out).sum();
+        let inn: usize = report.ranks.iter().map(|r| r.synapses_in).sum();
+        assert_eq!(out, inn);
+        // With background N(5,1) the network is active and forms synapses.
+        assert!(out > 0, "no synapses formed");
+        assert!(report.mean_calcium() > 0.0);
+        // New algorithm: no RMA at all.
+        assert_eq!(report.total_bytes_rma(), 0);
+    }
+
+    #[test]
+    fn smoke_old_algorithms() {
+        let mut cfg = smoke_cfg();
+        cfg.connectivity_alg = ConnectivityAlg::OldRma;
+        cfg.spike_alg = SpikeAlg::OldIds;
+        let report = run_simulation(&cfg).unwrap();
+        let out: usize = report.ranks.iter().map(|r| r.synapses_out).sum();
+        assert!(out > 0);
+        // The old path downloads octree nodes at some point once
+        // cross-rank proposals happen.
+        assert!(
+            report.total_bytes_rma() > 0,
+            "old algorithm should use RMA (bytes_rma = 0)"
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let cfg = smoke_cfg();
+        let a = run_simulation(&cfg).unwrap();
+        let b = run_simulation(&cfg).unwrap();
+        for (ra, rb) in a.ranks.iter().zip(&b.ranks) {
+            assert_eq!(ra.synapses_out, rb.synapses_out);
+            assert_eq!(ra.mean_calcium, rb.mean_calcium);
+            assert_eq!(ra.comm.bytes_sent, rb.comm.bytes_sent);
+        }
+    }
+
+    #[test]
+    fn direct_baseline_runs() {
+        let mut cfg = smoke_cfg();
+        cfg.connectivity_alg = ConnectivityAlg::Direct;
+        cfg.steps = 100;
+        let report = run_simulation(&cfg).unwrap();
+        assert!(report.total_synapses() > 0);
+    }
+
+    #[test]
+    fn single_rank_runs() {
+        let mut cfg = smoke_cfg();
+        cfg.ranks = 1;
+        cfg.neurons_per_rank = 64;
+        let report = run_simulation(&cfg).unwrap();
+        assert_eq!(report.ranks.len(), 1);
+        // One rank: everything is local — nothing on the wire.
+        assert_eq!(report.total_bytes_sent(), 0);
+        assert_eq!(report.total_bytes_rma(), 0);
+        assert!(report.total_synapses() > 0);
+    }
+}

@@ -1,0 +1,6 @@
+//! The simulation coordinator: per-rank phase loop, algorithm selection,
+//! backend dispatch, and report assembly.
+
+mod driver;
+
+pub use driver::{run_simulation, run_simulation_with_xla, RankState};

@@ -1,0 +1,24 @@
+//! `ilmi` — *I Like To Move It: Computation Instead of Data in the Brain*.
+//!
+//! A full reimplementation of the paper's structural-plasticity
+//! simulation stack (MSP + distributed Barnes–Hut) with both
+//! communication algorithms — the original RMA-download variant and the
+//! proposed location-aware / frequency-approximation variants — on a
+//! simulated-MPI substrate, with the per-neuron numeric hot path compiled
+//! from JAX/Pallas to HLO and executed through PJRT.
+//!
+//! See DESIGN.md for the architecture and the experiment index.
+
+pub mod barnes_hut;
+pub mod cli;
+pub mod comm;
+pub mod coordinator;
+pub mod config;
+pub mod metrics;
+pub mod neuron;
+pub mod octree;
+pub mod plasticity;
+pub mod runtime;
+pub mod spikes;
+pub mod testing;
+pub mod util;

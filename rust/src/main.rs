@@ -1,0 +1,217 @@
+//! `ilmi` — leader entrypoint.
+//!
+//! Subcommands:
+//!   simulate   run one simulation and print the phase/byte report
+//!   compare    run old vs new algorithms on the same workload, print
+//!              the speedups (the paper's headline numbers, scaled)
+//!   quality    the §V-D calcium-quality experiment (Figs. 8/9), CSV out
+//!   inspect    load + exercise the AOT artifacts through PJRT
+//!
+//! Common flags: --config FILE, --set section.key=value (repeatable),
+//! --csv PATH, --xla (use the AOT artifacts for the neuron update).
+
+use anyhow::{anyhow, bail, Result};
+
+use ilmi::cli::Args;
+use ilmi::config::{Backend, ConnectivityAlg, SimConfig, SpikeAlg};
+use ilmi::coordinator::{run_simulation, run_simulation_with_xla};
+use ilmi::runtime::spawn_service;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv).map_err(anyhow::Error::msg)?;
+    match args.subcommand.as_str() {
+        "simulate" => cmd_simulate(&args),
+        "compare" => cmd_compare(&args),
+        "quality" => cmd_quality(&args),
+        "inspect" => cmd_inspect(&args),
+        "" | "help" | "-h" | "--help" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => bail!("unknown subcommand {other:?}; try `ilmi help`"),
+    }
+}
+
+const HELP: &str = "\
+ilmi - I Like To Move It: structural-plasticity brain simulation
+usage: ilmi <simulate|compare|quality|inspect> [flags]
+  simulate  --config FILE --set k=v ... [--csv PATH] [--xla]
+  compare   --set k=v ... (runs old-vs-new on the same workload)
+  quality   [--steps N] [--csv PATH] [--old] (paper SS V-D, Figs 8/9)
+  inspect   [--artifacts DIR] (load artifacts, run one batch through PJRT)
+";
+
+fn build_config(args: &Args) -> Result<SimConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => SimConfig::from_file(path).map_err(anyhow::Error::msg)?,
+        None => SimConfig::default(),
+    };
+    for kv in args.get_all("set") {
+        let (k, v) = kv
+            .split_once('=')
+            .ok_or_else(|| anyhow!("--set expects section.key=value, got {kv:?}"))?;
+        cfg.apply_kv(k.trim(), v.trim()).map_err(anyhow::Error::msg)?;
+    }
+    if args.get_bool("xla") {
+        cfg.backend = Backend::Xla;
+    }
+    cfg.validate().map_err(anyhow::Error::msg)?;
+    Ok(cfg)
+}
+
+fn run_with_backend(cfg: &SimConfig) -> Result<ilmi::metrics::SimReport> {
+    if cfg.backend == Backend::Xla {
+        let handle = spawn_service(&cfg.artifacts_dir)?;
+        let report = run_simulation_with_xla(cfg, Some(handle.clone()));
+        handle.shutdown();
+        report
+    } else {
+        run_simulation(cfg)
+    }
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let cfg = build_config(args)?;
+    println!(
+        "simulate: {} ranks x {} neurons, {} steps, theta={}, conn={:?}, spikes={:?}, backend={:?}",
+        cfg.ranks, cfg.neurons_per_rank, cfg.steps, cfg.theta, cfg.connectivity_alg,
+        cfg.spike_alg, cfg.backend
+    );
+    let report = run_with_backend(&cfg)?;
+    print!("{}", report.phase_table());
+    if let Some(path) = args.get("csv") {
+        std::fs::write(path, report.to_csv())?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_compare(args: &Args) -> Result<()> {
+    let base = build_config(args)?;
+
+    let mut old_cfg = base.clone();
+    old_cfg.connectivity_alg = ConnectivityAlg::OldRma;
+    old_cfg.spike_alg = SpikeAlg::OldIds;
+    let mut new_cfg = base.clone();
+    new_cfg.connectivity_alg = ConnectivityAlg::NewLocationAware;
+    new_cfg.spike_alg = SpikeAlg::NewFrequency;
+
+    println!(
+        "compare: {} ranks x {} neurons, {} steps, theta={}",
+        base.ranks, base.neurons_per_rank, base.steps, base.theta
+    );
+    println!("-- old algorithms (RMA Barnes-Hut + per-step spike ids) --");
+    let old = run_with_backend(&old_cfg)?;
+    print!("{}", old.phase_table());
+    println!("-- new algorithms (location-aware + frequency approximation) --");
+    let new = run_with_backend(&new_cfg)?;
+    print!("{}", new.phase_table());
+
+    use ilmi::metrics::Phase;
+    let conn_old = old.phase_max(Phase::BarnesHut) + old.phase_max(Phase::SynapseExchange);
+    let conn_new = new.phase_max(Phase::BarnesHut) + new.phase_max(Phase::SynapseExchange);
+    let spike_old = old.phase_max(Phase::SpikeExchange);
+    let spike_new = new.phase_max(Phase::SpikeExchange);
+    let bytes_old = old.total_bytes_sent() + old.total_bytes_rma();
+    let bytes_new = new.total_bytes_sent() + new.total_bytes_rma();
+    println!("== speedups (old/new) ==");
+    println!("connectivity update: {:.2}x", conn_old / conn_new.max(1e-12));
+    println!("spike transmission:  {:.2}x", spike_old / spike_new.max(1e-12));
+    println!(
+        "transferred data:    {:.2}x ({} -> {})",
+        bytes_old as f64 / bytes_new.max(1) as f64,
+        ilmi::util::format_bytes(bytes_old),
+        ilmi::util::format_bytes(bytes_new)
+    );
+    println!("wall clock:          {:.2}x", old.wall_seconds / new.wall_seconds.max(1e-12));
+
+    // Re-price the counted communication on cluster-class networks
+    // (see metrics::netmodel): what the byte/message/RMA accounting
+    // would cost on the paper's testbed rather than shared memory.
+    for (name, model) in [
+        ("HDR100 (paper-class)", ilmi::metrics::NetModel::hdr100()),
+        ("25GbE", ilmi::metrics::NetModel::ethernet25g()),
+    ] {
+        let price = |r: &ilmi::metrics::SimReport| {
+            model.price_run(&r.ranks.iter().map(|x| x.comm).collect::<Vec<_>>())
+        };
+        let (po, pn) = (price(&old), price(&new));
+        println!(
+            "modeled comm on {name}: {po:.4}s -> {pn:.4}s ({:.1}x)",
+            po / pn.max(1e-12)
+        );
+    }
+    Ok(())
+}
+
+fn cmd_quality(args: &Args) -> Result<()> {
+    let steps = args.get_parse::<usize>("steps").map_err(anyhow::Error::msg)?.unwrap_or(20_000);
+    let mut cfg = SimConfig::paper_quality(steps);
+    if args.get_bool("old") {
+        cfg.spike_alg = SpikeAlg::OldIds;
+        cfg.connectivity_alg = ConnectivityAlg::OldRma;
+    }
+    for kv in args.get_all("set") {
+        let (k, v) = kv.split_once('=').ok_or_else(|| anyhow!("bad --set {kv:?}"))?;
+        cfg.apply_kv(k.trim(), v.trim()).map_err(anyhow::Error::msg)?;
+    }
+    let report = run_simulation(&cfg)?;
+    print!("{}", report.phase_table());
+    // CSV: step, ca_0..ca_31 (one column per neuron; one neuron per rank).
+    if let Some(path) = args.get("csv") {
+        let mut csv = String::from("step");
+        for r in 0..cfg.ranks {
+            csv.push_str(&format!(",ca_{r}"));
+        }
+        csv.push('\n');
+        let steps_recorded = report.ranks[0].calcium_trace.len();
+        for k in 0..steps_recorded {
+            csv.push_str(&report.ranks[0].calcium_trace[k].0.to_string());
+            for r in &report.ranks {
+                csv.push_str(&format!(",{:.5}", r.calcium_trace[k].1[0]));
+            }
+            csv.push('\n');
+        }
+        std::fs::write(path, csv)?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let dir = args.get("artifacts").unwrap_or("artifacts");
+    let handle = spawn_service(dir)?;
+    println!("artifacts loaded from {dir}; neuron batches: {:?}", handle.neuron_batches()?);
+    // Push one batch through the whole PJRT path as a liveness check.
+    let n = 256;
+    let zeros = vec![0.0f32; n];
+    let noise = vec![1000.0f32; n]; // everyone fires
+    let params = ilmi::neuron::NeuronParams::default().to_vec();
+    let out = handle.neuron_update(ilmi::runtime::NeuronInputs {
+        v: vec![-65.0; n],
+        u: vec![-13.0; n],
+        ca: zeros.clone(),
+        z_ax: zeros.clone(),
+        z_de: zeros.clone(),
+        z_di: zeros.clone(),
+        i_syn: zeros.clone(),
+        noise,
+        params,
+    })?;
+    let fired: usize = out.fired.iter().filter(|&&f| f > 0.5).count();
+    println!("executed neuron_update(b>=256): {fired}/{n} fired (expect {n})");
+    handle.shutdown();
+    if fired != n {
+        bail!("artifact sanity check failed");
+    }
+    println!("inspect OK");
+    Ok(())
+}

@@ -1,0 +1,139 @@
+//! Phase timing, byte accounting, report rendering, and the Extra-P
+//! style performance-model fit (paper Fig. 10).
+
+pub mod model;
+pub mod netmodel;
+pub mod report;
+
+pub use netmodel::NetModel;
+pub use report::{RankReport, SimReport};
+
+use std::time::{Duration, Instant};
+
+/// Simulation phases, named after the paper's Fig. 11 breakdown.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// "Spike exchange" — moving fired ids (old) / frequencies (new).
+    SpikeExchange,
+    /// "Input distant" — looking up remote spikes (binary search / PRNG).
+    SpikeLookup,
+    /// "Actual activity update" + "Update of synaptic elements" —
+    /// fused in our L1 kernel by design.
+    ActivityUpdate,
+    /// "Delete synapses".
+    DeleteSynapses,
+    /// Octree vacancy aggregation + branch exchange + window publish.
+    OctreeUpdate,
+    /// "Barnes–Hut" — target-search compute (incl. RMA waits for old).
+    BarnesHut,
+    /// "Synapse exchange" — formation request/response all-to-alls.
+    SynapseExchange,
+}
+
+pub const ALL_PHASES: [Phase; 7] = [
+    Phase::SpikeExchange,
+    Phase::SpikeLookup,
+    Phase::ActivityUpdate,
+    Phase::DeleteSynapses,
+    Phase::OctreeUpdate,
+    Phase::BarnesHut,
+    Phase::SynapseExchange,
+];
+
+impl Phase {
+    pub fn index(self) -> usize {
+        match self {
+            Phase::SpikeExchange => 0,
+            Phase::SpikeLookup => 1,
+            Phase::ActivityUpdate => 2,
+            Phase::DeleteSynapses => 3,
+            Phase::OctreeUpdate => 4,
+            Phase::BarnesHut => 5,
+            Phase::SynapseExchange => 6,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::SpikeExchange => "spike_exchange",
+            Phase::SpikeLookup => "spike_lookup",
+            Phase::ActivityUpdate => "activity_update",
+            Phase::DeleteSynapses => "delete_synapses",
+            Phase::OctreeUpdate => "octree_update",
+            Phase::BarnesHut => "barnes_hut",
+            Phase::SynapseExchange => "synapse_exchange",
+        }
+    }
+}
+
+/// Per-rank accumulated phase timings.
+#[derive(Clone, Debug, Default)]
+pub struct PhaseTimers {
+    acc: [Duration; ALL_PHASES.len()],
+}
+
+impl PhaseTimers {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure under `phase`.
+    #[inline]
+    pub fn time<R>(&mut self, phase: Phase, f: impl FnOnce() -> R) -> R {
+        let t0 = Instant::now();
+        let r = f();
+        self.acc[phase.index()] += t0.elapsed();
+        r
+    }
+
+    /// Add an externally measured duration.
+    pub fn add(&mut self, phase: Phase, d: Duration) {
+        self.acc[phase.index()] += d;
+    }
+
+    pub fn get(&self, phase: Phase) -> Duration {
+        self.acc[phase.index()]
+    }
+
+    pub fn total(&self) -> Duration {
+        self.acc.iter().sum()
+    }
+
+    /// Per-phase seconds, in `ALL_PHASES` order.
+    pub fn seconds(&self) -> [f64; ALL_PHASES.len()] {
+        let mut out = [0.0; ALL_PHASES.len()];
+        for (o, d) in out.iter_mut().zip(&self.acc) {
+            *o = d.as_secs_f64();
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_accumulates() {
+        let mut t = PhaseTimers::new();
+        let x = t.time(Phase::BarnesHut, || {
+            std::thread::sleep(Duration::from_millis(5));
+            42
+        });
+        assert_eq!(x, 42);
+        assert!(t.get(Phase::BarnesHut) >= Duration::from_millis(5));
+        assert_eq!(t.get(Phase::SpikeExchange), Duration::ZERO);
+        t.add(Phase::BarnesHut, Duration::from_millis(1));
+        assert!(t.total() >= Duration::from_millis(6));
+    }
+
+    #[test]
+    fn phase_indices_are_dense_and_unique() {
+        let mut seen = [false; ALL_PHASES.len()];
+        for p in ALL_PHASES {
+            assert!(!seen[p.index()]);
+            seen[p.index()] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+}

@@ -1,0 +1,132 @@
+//! Least-squares performance-model fit over the basis {1, log₂n, log₂²n}
+//! — the functional family Extra-P reports for the new location-aware
+//! algorithm in the paper's Fig. 10 (O(log² n) with per-θ coefficients).
+
+/// Fitted model `t(n) = a + b·log₂(n) + c·log₂²(n)`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LogModel {
+    pub a: f64,
+    pub b: f64,
+    pub c: f64,
+}
+
+impl LogModel {
+    pub fn eval(&self, n: f64) -> f64 {
+        let l = n.log2();
+        self.a + self.b * l + self.c * l * l
+    }
+
+    /// Human-readable form used by the Fig. 10 bench output.
+    pub fn formula(&self) -> String {
+        format!("{:.4e} + {:.4e}*log2(n) + {:.4e}*log2(n)^2", self.a, self.b, self.c)
+    }
+}
+
+/// Fit by solving the 3×3 normal equations with Gaussian elimination.
+/// Needs at least 3 distinct sample sizes.
+pub fn fit_log_model(samples: &[(f64, f64)]) -> Option<LogModel> {
+    if samples.len() < 3 {
+        return None;
+    }
+    // Design matrix rows: [1, l, l^2]; accumulate A^T A and A^T y.
+    let mut ata = [[0.0f64; 3]; 3];
+    let mut aty = [0.0f64; 3];
+    for &(n, y) in samples {
+        let l = n.log2();
+        let row = [1.0, l, l * l];
+        for i in 0..3 {
+            for j in 0..3 {
+                ata[i][j] += row[i] * row[j];
+            }
+            aty[i] += row[i] * y;
+        }
+    }
+    solve3(ata, aty).map(|x| LogModel { a: x[0], b: x[1], c: x[2] })
+}
+
+/// Gaussian elimination with partial pivoting for a 3×3 system.
+fn solve3(mut a: [[f64; 3]; 3], mut b: [f64; 3]) -> Option<[f64; 3]> {
+    for col in 0..3 {
+        // Pivot.
+        let pivot = (col..3).max_by(|&i, &j| {
+            a[i][col].abs().partial_cmp(&a[j][col].abs()).unwrap()
+        })?;
+        if a[pivot][col].abs() < 1e-12 {
+            return None;
+        }
+        a.swap(col, pivot);
+        b.swap(col, pivot);
+        for row in col + 1..3 {
+            let f = a[row][col] / a[col][col];
+            for k in col..3 {
+                a[row][k] -= f * a[col][k];
+            }
+            b[row] -= f * b[col];
+        }
+    }
+    let mut x = [0.0; 3];
+    for row in (0..3).rev() {
+        let mut s = b[row];
+        for k in row + 1..3 {
+            s -= a[row][k] * x[k];
+        }
+        x[row] = s / a[row][row];
+    }
+    Some(x)
+}
+
+/// Coefficient of determination R² of a fit over the samples.
+pub fn r_squared(model: &LogModel, samples: &[(f64, f64)]) -> f64 {
+    let mean = samples.iter().map(|&(_, y)| y).sum::<f64>() / samples.len() as f64;
+    let ss_tot: f64 = samples.iter().map(|&(_, y)| (y - mean).powi(2)).sum();
+    let ss_res: f64 =
+        samples.iter().map(|&(n, y)| (y - model.eval(n)).powi(2)).sum();
+    if ss_tot == 0.0 {
+        1.0
+    } else {
+        1.0 - ss_res / ss_tot
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recovers_exact_log2_model() {
+        let truth = LogModel { a: 2.0, b: -0.5, c: 0.25 };
+        let samples: Vec<(f64, f64)> =
+            [16.0, 64.0, 256.0, 1024.0, 4096.0].iter().map(|&n| (n, truth.eval(n))).collect();
+        let fit = fit_log_model(&samples).unwrap();
+        assert!((fit.a - truth.a).abs() < 1e-8);
+        assert!((fit.b - truth.b).abs() < 1e-8);
+        assert!((fit.c - truth.c).abs() < 1e-8);
+        assert!(r_squared(&fit, &samples) > 0.999999);
+    }
+
+    #[test]
+    fn needs_three_samples() {
+        assert!(fit_log_model(&[(2.0, 1.0), (4.0, 2.0)]).is_none());
+    }
+
+    #[test]
+    fn degenerate_identical_sizes_rejected() {
+        let samples = [(8.0, 1.0), (8.0, 1.1), (8.0, 0.9), (8.0, 1.0)];
+        assert!(fit_log_model(&samples).is_none());
+    }
+
+    #[test]
+    fn fits_noisy_data_reasonably() {
+        let truth = LogModel { a: 1.0, b: 0.1, c: 0.02 };
+        let mut rng = crate::util::Rng::new(3);
+        let samples: Vec<(f64, f64)> = (4..14)
+            .map(|k| {
+                let n = (1usize << k) as f64;
+                (n, truth.eval(n) * (1.0 + 0.01 * rng.normal()))
+            })
+            .collect();
+        let fit = fit_log_model(&samples).unwrap();
+        assert!(r_squared(&fit, &samples) > 0.98);
+        assert!((fit.c - truth.c).abs() < 0.02);
+    }
+}

@@ -1,0 +1,132 @@
+//! Analytic network-cost model.
+//!
+//! Our simulated-MPI substrate moves bytes at shared-memory speed, so
+//! wall-clock alone understates what the two algorithm generations
+//! would cost on the paper's cluster (InfiniBand HDR100). This model
+//! re-prices a run's *counted* communication — collectives, messages,
+//! bytes, RMA gets — under configurable network constants, turning
+//! Tables I/II-style accounting into predicted communication time. The
+//! `compare` CLI and the ablation bench report it next to measured
+//! wall-clock.
+
+use crate::comm::CounterSnapshot;
+
+/// Cost constants of a modeled interconnect.
+#[derive(Clone, Copy, Debug)]
+pub struct NetModel {
+    /// Cost of one collective synchronization (latency of the slowest
+    /// path through the all-to-all), seconds.
+    pub collective_latency: f64,
+    /// Per-message overhead (injection + matching), seconds.
+    pub message_overhead: f64,
+    /// Per-byte transfer cost, seconds (1 / bandwidth).
+    pub per_byte: f64,
+    /// One-sided get latency (passive-target RMA round trip), seconds.
+    pub rma_latency: f64,
+}
+
+impl NetModel {
+    /// InfiniBand HDR100-class constants (the paper's testbed):
+    /// ~1.5 µs small-message latency, ~100 Gbit/s ≈ 12.5 GB/s,
+    /// collectives ~5 µs at moderate rank counts, RMA get ~2 µs.
+    pub fn hdr100() -> NetModel {
+        NetModel {
+            collective_latency: 5e-6,
+            message_overhead: 1.5e-6,
+            per_byte: 1.0 / 12.5e9,
+            rma_latency: 2e-6,
+        }
+    }
+
+    /// Ethernet-class constants (25 GbE, ~10 µs latency): the regime
+    /// where communication structure matters even more.
+    pub fn ethernet25g() -> NetModel {
+        NetModel {
+            collective_latency: 30e-6,
+            message_overhead: 10e-6,
+            per_byte: 1.0 / 3.1e9,
+            rma_latency: 15e-6,
+        }
+    }
+
+    /// Predicted communication seconds for one rank's counters.
+    pub fn price(&self, c: &CounterSnapshot) -> f64 {
+        c.collectives as f64 * self.collective_latency
+            + c.msgs_sent as f64 * self.message_overhead
+            + (c.bytes_sent + c.bytes_rma) as f64 * self.per_byte
+            + c.rma_gets as f64 * self.rma_latency
+    }
+
+    /// Predicted communication seconds for a whole run: the maximum
+    /// over ranks (synchronized phases are gated by the slowest rank).
+    pub fn price_run(&self, per_rank: &[CounterSnapshot]) -> f64 {
+        per_rank.iter().map(|c| self.price(c)).fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap(collectives: u64, msgs: u64, bytes: u64, rma: u64) -> CounterSnapshot {
+        CounterSnapshot {
+            bytes_sent: bytes,
+            bytes_recv: bytes,
+            bytes_rma: 0,
+            msgs_sent: msgs,
+            collectives,
+            rma_gets: rma,
+        }
+    }
+
+    #[test]
+    fn pricing_is_linear_in_counters() {
+        let m = NetModel::hdr100();
+        let a = m.price(&snap(10, 5, 1000, 2));
+        let b = m.price(&snap(20, 10, 2000, 4));
+        assert!((b - 2.0 * a).abs() < 1e-12);
+    }
+
+    #[test]
+    fn run_price_takes_slowest_rank() {
+        let m = NetModel::hdr100();
+        let ranks = vec![snap(1, 1, 100, 0), snap(1000, 1, 100, 0)];
+        assert_eq!(m.price_run(&ranks), m.price(&ranks[1]));
+    }
+
+    #[test]
+    fn collective_heavy_old_spikes_cost_more() {
+        // 1000 per-step collectives (old) vs 10 epoch collectives (new)
+        // with identical byte volume: the old path must price higher on
+        // any latency-bearing network.
+        for m in [NetModel::hdr100(), NetModel::ethernet25g()] {
+            let old = m.price(&snap(1000, 1000, 10_000, 0));
+            let new = m.price(&snap(10, 10, 10_000, 0));
+            assert!(old > 50.0 * new, "{old} vs {new}");
+        }
+    }
+
+    #[test]
+    fn rma_heavy_old_connectivity_costs_more() {
+        let m = NetModel::hdr100();
+        // Old: few collectives but thousands of 89 B RMA gets.
+        let old = m.price(&CounterSnapshot {
+            bytes_sent: 17_000,
+            bytes_recv: 17_000,
+            bytes_rma: 89 * 5_000,
+            msgs_sent: 100,
+            collectives: 20,
+            rma_gets: 5_000,
+        });
+        // New: the same work as 42 B requests, no RMA.
+        let new = m.price(&CounterSnapshot {
+            bytes_sent: 42_000,
+            bytes_recv: 42_000,
+            bytes_rma: 0,
+            msgs_sent: 100,
+            collectives: 20,
+            rma_gets: 0,
+        });
+        assert!(old > 3.0 * new, "{old} vs {new}");
+    }
+}

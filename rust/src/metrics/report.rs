@@ -1,0 +1,173 @@
+//! Per-rank and aggregated simulation reports.
+
+use crate::barnes_hut::FormationStats;
+use crate::comm::CounterSnapshot;
+use crate::plasticity::DeletionStats;
+use crate::util::format_bytes;
+
+use super::{Phase, ALL_PHASES};
+
+/// Everything one rank reports after a run.
+#[derive(Clone, Debug, Default)]
+pub struct RankReport {
+    pub rank: usize,
+    /// Per-phase seconds, `ALL_PHASES` order.
+    pub phase_seconds: [f64; ALL_PHASES.len()],
+    pub comm: CounterSnapshot,
+    pub formation: FormationStats,
+    pub deletion: DeletionStats,
+    /// Remote spike look-ups performed (Fig. 5 quantity).
+    pub spike_lookups: u64,
+    pub synapses_out: usize,
+    pub synapses_in: usize,
+    pub mean_calcium: f64,
+    /// Optional calcium trace: (step, per-local-neuron calcium).
+    pub calcium_trace: Vec<(usize, Vec<f32>)>,
+}
+
+/// Aggregated view over all ranks of one simulation.
+#[derive(Clone, Debug, Default)]
+pub struct SimReport {
+    pub ranks: Vec<RankReport>,
+    pub wall_seconds: f64,
+}
+
+impl SimReport {
+    /// MPI-style phase time: the maximum across ranks (the slowest rank
+    /// gates every synchronization point).
+    pub fn phase_max(&self, phase: Phase) -> f64 {
+        self.ranks
+            .iter()
+            .map(|r| r.phase_seconds[phase.index()])
+            .fold(0.0, f64::max)
+    }
+
+    pub fn phase_mean(&self, phase: Phase) -> f64 {
+        if self.ranks.is_empty() {
+            return 0.0;
+        }
+        self.ranks.iter().map(|r| r.phase_seconds[phase.index()]).sum::<f64>()
+            / self.ranks.len() as f64
+    }
+
+    /// Total bytes sent by all ranks (Table I upper / Table II value).
+    pub fn total_bytes_sent(&self) -> u64 {
+        self.ranks.iter().map(|r| r.comm.bytes_sent).sum()
+    }
+
+    /// Total bytes remotely accessed by all ranks (Table I lower value).
+    pub fn total_bytes_rma(&self) -> u64 {
+        self.ranks.iter().map(|r| r.comm.bytes_rma).sum()
+    }
+
+    pub fn total_synapses(&self) -> usize {
+        self.ranks.iter().map(|r| r.synapses_out).sum()
+    }
+
+    pub fn total_lookups(&self) -> u64 {
+        self.ranks.iter().map(|r| r.spike_lookups).sum()
+    }
+
+    pub fn mean_calcium(&self) -> f64 {
+        if self.ranks.is_empty() {
+            return 0.0;
+        }
+        self.ranks.iter().map(|r| r.mean_calcium).sum::<f64>() / self.ranks.len() as f64
+    }
+
+    /// Merged formation stats.
+    pub fn formation(&self) -> FormationStats {
+        self.ranks.iter().fold(FormationStats::default(), |acc, r| acc.merge(&r.formation))
+    }
+
+    /// Render the Fig. 11-style phase table.
+    pub fn phase_table(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{:<18} {:>12} {:>12}\n",
+            "phase", "max [s]", "mean [s]"
+        ));
+        for p in ALL_PHASES {
+            out.push_str(&format!(
+                "{:<18} {:>12.4} {:>12.4}\n",
+                p.name(),
+                self.phase_max(p),
+                self.phase_mean(p)
+            ));
+        }
+        out.push_str(&format!(
+            "{:<18} {:>12.4}\n",
+            "wall_clock", self.wall_seconds
+        ));
+        out.push_str(&format!(
+            "bytes sent {} | rma {} | synapses {} | mean Ca {:.3}\n",
+            format_bytes(self.total_bytes_sent()),
+            format_bytes(self.total_bytes_rma()),
+            self.total_synapses(),
+            self.mean_calcium(),
+        ));
+        out
+    }
+
+    /// One CSV row per rank (machine-readable output).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("rank,");
+        out.push_str(
+            &ALL_PHASES.iter().map(|p| p.name().to_string()).collect::<Vec<_>>().join(","),
+        );
+        out.push_str(",bytes_sent,bytes_rma,msgs,synapses_out,mean_ca\n");
+        for r in &self.ranks {
+            out.push_str(&format!("{},", r.rank));
+            out.push_str(
+                &r.phase_seconds.iter().map(|s| format!("{s:.6}")).collect::<Vec<_>>().join(","),
+            );
+            out.push_str(&format!(
+                ",{},{},{},{},{:.4}\n",
+                r.comm.bytes_sent, r.comm.bytes_rma, r.comm.msgs_sent, r.synapses_out, r.mean_calcium
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report_with(phase: Phase, secs: f64, sent: u64, rma: u64) -> RankReport {
+        let mut r = RankReport::default();
+        r.phase_seconds[phase.index()] = secs;
+        r.comm.bytes_sent = sent;
+        r.comm.bytes_rma = rma;
+        r
+    }
+
+    #[test]
+    fn max_and_mean_aggregation() {
+        let sim = SimReport {
+            ranks: vec![
+                report_with(Phase::BarnesHut, 1.0, 100, 50),
+                report_with(Phase::BarnesHut, 3.0, 200, 0),
+            ],
+            wall_seconds: 3.5,
+        };
+        assert_eq!(sim.phase_max(Phase::BarnesHut), 3.0);
+        assert_eq!(sim.phase_mean(Phase::BarnesHut), 2.0);
+        assert_eq!(sim.total_bytes_sent(), 300);
+        assert_eq!(sim.total_bytes_rma(), 50);
+    }
+
+    #[test]
+    fn tables_render() {
+        let sim = SimReport {
+            ranks: vec![report_with(Phase::SpikeExchange, 0.5, 1024, 0)],
+            wall_seconds: 1.0,
+        };
+        let t = sim.phase_table();
+        assert!(t.contains("spike_exchange"));
+        assert!(t.contains("wall_clock"));
+        let csv = sim.to_csv();
+        assert!(csv.lines().count() == 2);
+        assert!(csv.contains("bytes_sent"));
+    }
+}

@@ -1,0 +1,136 @@
+//! Native-Rust neuron state update, op-for-op identical (in f32) to the
+//! L1 Pallas kernel / `ref.py` oracle.
+//!
+//! Exists for three reasons: (1) a backend when artifacts are absent,
+//! (2) the cross-layer correctness check (`integration_runtime.rs`
+//! asserts the XLA-executed artifact matches this to f32 tolerance), and
+//! (3) a fair baseline for the perf comparison in EXPERIMENTS.md §Perf.
+
+use super::params::{growth_curve, NeuronParams};
+use super::population::Population;
+
+/// One fused step over the whole population (Izhikevich + calcium +
+/// growth of the three element kinds). Reads `i_syn`/`noise`, writes
+/// `v`, `u`, `ca`, `z_*`, `fired`.
+pub fn step(pop: &mut Population, p: &NeuronParams) {
+    let n = pop.len();
+    for i in 0..n {
+        let i_total = pop.i_syn[i] * p.i_scale + pop.noise[i];
+
+        // Izhikevich (2003): v' = 0.04 v^2 + 5v + 140 - u + I.
+        let v = pop.v[i];
+        let u = pop.u[i];
+        let v_new = v + p.dt * (0.04 * v * v + 5.0 * v + 140.0 - u + i_total);
+        let u_new = u + p.dt * p.a * (p.b * v - u);
+
+        let fired = v_new >= p.v_spike;
+        pop.v[i] = if fired { p.c } else { v_new };
+        pop.u[i] = if fired { u_new + p.d } else { u_new };
+        pop.fired[i] = fired;
+        if fired {
+            pop.epoch_spikes[i] += 1;
+        }
+
+        // Calcium trace (decaying spike average).
+        let spike = if fired { 1.0f32 } else { 0.0 };
+        let ca = pop.ca[i] - p.dt * pop.ca[i] / p.tau_ca + p.beta_ca * spike;
+        pop.ca[i] = ca;
+
+        // Synaptic-element growth; counts never go negative. Both
+        // dendrite kinds share (nu, eta_den, eps) -> one curve
+        // evaluation serves both (saves an exp per neuron per step;
+        // EXPERIMENTS.md §Perf, opt 5 — values identical to the L1
+        // kernel, which XLA fuses the same way).
+        let g_ax = growth_curve(ca, p.nu_growth, p.eta_ax, p.eps_target_ca);
+        let g_den = growth_curve(ca, p.nu_growth, p.eta_den, p.eps_target_ca);
+        pop.z_ax[i] = (pop.z_ax[i] + g_ax).max(0.0);
+        pop.z_den_exc[i] = (pop.z_den_exc[i] + g_den).max(0.0);
+        pop.z_den_inh[i] = (pop.z_den_inh[i] + g_den).max(0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+    use crate::util::{Rng, Vec3};
+
+    fn make_pop(n: usize) -> (Population, NeuronParams) {
+        let cfg = SimConfig { neurons_per_rank: n, ..SimConfig::default() };
+        let mut rng = Rng::new(7);
+        let pop = Population::init(&cfg, 0, Vec3::ZERO, Vec3::splat(100.0), &mut rng);
+        (pop, cfg.neuron)
+    }
+
+    #[test]
+    fn strong_input_fires_and_resets() {
+        let (mut pop, p) = make_pop(8);
+        pop.noise.iter_mut().for_each(|x| *x = 1000.0);
+        step(&mut pop, &p);
+        assert!(pop.fired.iter().all(|&f| f));
+        assert!(pop.v.iter().all(|&v| v == p.c));
+        assert!(pop.epoch_spikes.iter().all(|&s| s == 1));
+    }
+
+    #[test]
+    fn resting_state_is_quiet() {
+        let (mut pop, p) = make_pop(8);
+        // No input at all: the resting fixed point should not fire.
+        step(&mut pop, &p);
+        assert!(pop.fired.iter().all(|&f| !f));
+    }
+
+    #[test]
+    fn calcium_tracks_firing_rate() {
+        // Drive neurons hard for many steps; calcium should approach
+        // beta * tau (the fixed point for firing every step). Use a
+        // short tau so 2000 steps converge.
+        let (mut pop, mut p) = make_pop(4);
+        p.tau_ca = 100.0;
+        p.beta_ca = 0.01;
+        for _ in 0..2000 {
+            pop.noise.iter_mut().for_each(|x| *x = 1000.0);
+            step(&mut pop, &p);
+        }
+        let expect = p.beta_ca * p.tau_ca; // = 1.0
+        for &ca in &pop.ca {
+            assert!((ca - expect).abs() < 0.05, "ca {ca} vs {expect}");
+        }
+    }
+
+    #[test]
+    fn elements_grow_when_calcium_in_band() {
+        let (mut pop, p) = make_pop(4);
+        pop.ca.iter_mut().for_each(|c| *c = 0.4); // inside (eta, eps)
+        let before = pop.z_den_exc.clone();
+        step(&mut pop, &p);
+        for i in 0..pop.len() {
+            assert!(pop.z_den_exc[i] > before[i]);
+        }
+    }
+
+    #[test]
+    fn elements_retract_above_target() {
+        let (mut pop, p) = make_pop(4);
+        // Hold calcium above target: no firing input, but set ca high.
+        pop.ca.iter_mut().for_each(|c| *c = 2.0);
+        let before = pop.z_ax.clone();
+        step(&mut pop, &p);
+        for i in 0..pop.len() {
+            assert!(pop.z_ax[i] < before[i]);
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let (mut a, p) = make_pop(32);
+        let mut b = a.clone();
+        for _ in 0..50 {
+            step(&mut a, &p);
+            step(&mut b, &p);
+        }
+        assert_eq!(a.v, b.v);
+        assert_eq!(a.ca, b.ca);
+        assert_eq!(a.z_ax, b.z_ax);
+    }
+}

@@ -1,0 +1,10 @@
+//! Neuron model: parameters, per-rank population (SoA), and the native
+//! state-update implementation mirroring the L1 Pallas kernel.
+
+pub mod izhikevich;
+pub mod params;
+pub mod poisson;
+pub mod population;
+
+pub use params::NeuronParams;
+pub use population::{GlobalNeuronId, Population};

@@ -1,0 +1,155 @@
+//! Rate-based (Poisson) neuron model — the simpler alternative the MSP
+//! literature also uses (Butz & van Ooyen 2013 drive their neurons with
+//! rate dynamics; the paper's framework is model-agnostic: "computed
+//! using models like Izhikevich").
+//!
+//! The membrane variable follows a leaky integrator of the total input;
+//! the neuron fires with probability sigmoid(v), giving a smooth
+//! rate-current curve. Calcium and synaptic-element updates are shared
+//! with the Izhikevich path (the homeostatic loop does not care where
+//! spikes come from — which this model demonstrates).
+
+use super::params::{growth_curve, NeuronParams};
+use super::population::Population;
+use crate::util::Rng;
+
+/// Extra constants of the rate model.
+#[derive(Clone, Copy, Debug)]
+pub struct PoissonParams {
+    /// Membrane leak time constant (steps).
+    pub tau_v: f32,
+    /// Sigmoid midpoint: input level at which the rate is half-maximal.
+    pub v_half: f32,
+    /// Sigmoid steepness.
+    pub beta: f32,
+    /// Maximal firing probability per step.
+    pub rate_max: f32,
+}
+
+impl Default for PoissonParams {
+    fn default() -> Self {
+        // Tuned so the paper's N(5,1) background alone yields ~10 Hz
+        // (the same operating point as the Izhikevich defaults).
+        PoissonParams { tau_v: 10.0, v_half: 7.0, beta: 1.0, rate_max: 0.1 }
+    }
+}
+
+/// One fused step of the rate model (reuses `v` as the membrane trace).
+pub fn step(pop: &mut Population, p: &NeuronParams, pp: &PoissonParams, rng: &mut Rng) {
+    let n = pop.len();
+    for i in 0..n {
+        let i_total = pop.i_syn[i] * p.i_scale + pop.noise[i];
+        let v = pop.v[i] + (i_total - pop.v[i]) / pp.tau_v;
+        pop.v[i] = v;
+
+        let rate = pp.rate_max / (1.0 + (-(pp.beta * (v - pp.v_half))).exp());
+        let fired = rng.next_f32() < rate;
+        pop.fired[i] = fired;
+        if fired {
+            pop.epoch_spikes[i] += 1;
+        }
+
+        let spike = if fired { 1.0f32 } else { 0.0 };
+        let ca = pop.ca[i] - p.dt * pop.ca[i] / p.tau_ca + p.beta_ca * spike;
+        pop.ca[i] = ca;
+
+        let g_ax = growth_curve(ca, p.nu_growth, p.eta_ax, p.eps_target_ca);
+        let g_den = growth_curve(ca, p.nu_growth, p.eta_den, p.eps_target_ca);
+        pop.z_ax[i] = (pop.z_ax[i] + g_ax).max(0.0);
+        pop.z_den_exc[i] = (pop.z_den_exc[i] + g_den).max(0.0);
+        pop.z_den_inh[i] = (pop.z_den_inh[i] + g_den).max(0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+    use crate::util::Vec3;
+
+    fn make_pop(n: usize) -> (Population, NeuronParams) {
+        let cfg = SimConfig { neurons_per_rank: n, ..SimConfig::default() };
+        let mut rng = Rng::new(3);
+        let mut pop = Population::init(&cfg, 0, Vec3::ZERO, Vec3::splat(10.0), &mut rng);
+        pop.v.iter_mut().for_each(|v| *v = 0.0);
+        (pop, cfg.neuron)
+    }
+
+    #[test]
+    fn rate_increases_with_input() {
+        let pp = PoissonParams::default();
+        let (mut pop, p) = make_pop(500);
+        let mut rng = Rng::new(1);
+        let count_spikes = |pop: &mut Population, rng: &mut Rng, drive: f32| {
+            let mut spikes = 0usize;
+            for _ in 0..400 {
+                pop.noise.iter_mut().for_each(|x| *x = drive);
+                step(pop, &p, &pp, rng);
+                spikes += pop.fired.iter().filter(|&&f| f).count();
+            }
+            spikes
+        };
+        let low = count_spikes(&mut pop, &mut rng, 2.0);
+        let high = count_spikes(&mut pop, &mut rng, 12.0);
+        assert!(high > 2 * low, "rate must grow with drive: {low} vs {high}");
+    }
+
+    #[test]
+    fn rate_bounded_by_rate_max() {
+        let pp = PoissonParams::default();
+        let (mut pop, p) = make_pop(2000);
+        let mut rng = Rng::new(2);
+        pop.noise.iter_mut().for_each(|x| *x = 1000.0);
+        // Warm the membrane up, then measure.
+        for _ in 0..50 {
+            step(&mut pop, &p, &pp, &mut rng);
+        }
+        let mut spikes = 0usize;
+        for _ in 0..100 {
+            pop.noise.iter_mut().for_each(|x| *x = 1000.0);
+            step(&mut pop, &p, &pp, &mut rng);
+            spikes += pop.fired.iter().filter(|&&f| f).count();
+        }
+        let rate = spikes as f64 / (2000.0 * 100.0);
+        assert!(rate <= pp.rate_max as f64 * 1.05, "rate {rate}");
+        assert!(rate >= pp.rate_max as f64 * 0.9, "saturated drive should be near max");
+    }
+
+    #[test]
+    fn homeostatic_machinery_shared_with_izhikevich() {
+        // Calcium and element updates behave identically to the
+        // Izhikevich path given the same spike train.
+        let pp = PoissonParams::default();
+        let (mut pop, p) = make_pop(64);
+        let mut rng = Rng::new(4);
+        pop.ca.iter_mut().for_each(|c| *c = 0.4); // in the growth band
+        let before = pop.z_den_exc.clone();
+        step(&mut pop, &p, &pp, &mut rng);
+        for i in 0..pop.len() {
+            assert!(pop.z_den_exc[i] > before[i], "elements must grow at ca=0.4");
+            assert_eq!(pop.z_den_exc[i], pop.z_den_inh[i] - (pop.z_den_inh[i] - pop.z_den_exc[i]));
+        }
+    }
+
+    #[test]
+    fn background_operating_point_matches_izhikevich_regime() {
+        // N(5,1) background -> ~10 Hz (0.01 spikes/step), the same
+        // operating point the calcium constants are tuned for.
+        let pp = PoissonParams::default();
+        let (mut pop, p) = make_pop(2000);
+        let mut rng = Rng::new(5);
+        let cfg = SimConfig { neurons_per_rank: 2000, ..SimConfig::default() };
+        for _ in 0..100 {
+            pop.draw_noise(&cfg, &mut rng);
+            step(&mut pop, &p, &pp, &mut rng);
+        }
+        let mut spikes = 0usize;
+        for _ in 0..500 {
+            pop.draw_noise(&cfg, &mut rng);
+            step(&mut pop, &p, &pp, &mut rng);
+            spikes += pop.fired.iter().filter(|&&f| f).count();
+        }
+        let rate = spikes as f64 / (2000.0 * 500.0);
+        assert!((0.002..0.05).contains(&rate), "background rate {rate}");
+    }
+}

@@ -1,0 +1,216 @@
+//! Per-rank neuron population, stored structure-of-arrays.
+//!
+//! SoA mirrors the L1 kernel's layout, so handing the state to the XLA
+//! runtime is a set of slice views, no transposition.
+
+use crate::config::SimConfig;
+use crate::util::{Rng, Vec3};
+
+/// Globally unique neuron id. With the fixed block distribution the
+/// owning rank is `id / neurons_per_rank` and the local index is
+/// `id % neurons_per_rank`.
+pub type GlobalNeuronId = u64;
+
+/// A rank's neurons (structure of arrays).
+#[derive(Clone, Debug)]
+pub struct Population {
+    /// Global id of local neuron 0 (ids are contiguous per rank).
+    pub first_id: GlobalNeuronId,
+    pub positions: Vec<Vec3>,
+    pub is_excitatory: Vec<bool>,
+    // Electrical state.
+    pub v: Vec<f32>,
+    pub u: Vec<f32>,
+    pub ca: Vec<f32>,
+    // Synaptic-element counts (continuous).
+    pub z_ax: Vec<f32>,
+    pub z_den_exc: Vec<f32>,
+    pub z_den_inh: Vec<f32>,
+    // Per-step scratch.
+    pub i_syn: Vec<f32>,
+    pub noise: Vec<f32>,
+    pub fired: Vec<bool>,
+    /// Spikes fired during the current frequency epoch (for the new
+    /// spike-exchange algorithm).
+    pub epoch_spikes: Vec<u32>,
+}
+
+impl Population {
+    /// Number of local neurons.
+    pub fn len(&self) -> usize {
+        self.positions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.positions.is_empty()
+    }
+
+    pub fn global_id(&self, local: usize) -> GlobalNeuronId {
+        self.first_id + local as GlobalNeuronId
+    }
+
+    pub fn local_index(&self, id: GlobalNeuronId) -> usize {
+        debug_assert!(id >= self.first_id && id < self.first_id + self.len() as u64);
+        (id - self.first_id) as usize
+    }
+
+    /// Initialize `n` neurons for `rank`, placed uniformly inside the
+    /// rank's spatial region `[lo, hi)`, with the paper's initial
+    /// conditions: resting Izhikevich state, zero calcium, and every
+    /// element count drawn from [init_lo, init_hi] (paper §V-B: each
+    /// neuron starts with 1.1–1.5 vacant elements of each kind and no
+    /// synapses).
+    pub fn init(cfg: &SimConfig, rank: usize, lo: Vec3, hi: Vec3, rng: &mut Rng) -> Population {
+        let n = cfg.neurons_per_rank;
+        let first_id = (rank * n) as GlobalNeuronId;
+        let mut positions = Vec::with_capacity(n);
+        let mut is_excitatory = Vec::with_capacity(n);
+        let mut z_ax = Vec::with_capacity(n);
+        let mut z_den_exc = Vec::with_capacity(n);
+        let mut z_den_inh = Vec::with_capacity(n);
+        for _ in 0..n {
+            positions.push(Vec3::new(
+                rng.uniform(lo.x, hi.x),
+                rng.uniform(lo.y, hi.y),
+                rng.uniform(lo.z, hi.z),
+            ));
+            is_excitatory.push(rng.bernoulli(cfg.frac_excitatory));
+            z_ax.push(rng.uniform(cfg.init_elements_lo, cfg.init_elements_hi) as f32);
+            z_den_exc.push(rng.uniform(cfg.init_elements_lo, cfg.init_elements_hi) as f32);
+            z_den_inh.push(rng.uniform(cfg.init_elements_lo, cfg.init_elements_hi) as f32);
+        }
+        let v0 = cfg.neuron.c;
+        let u0 = cfg.neuron.b * v0;
+        Population {
+            first_id,
+            positions,
+            is_excitatory,
+            v: vec![v0; n],
+            u: vec![u0; n],
+            ca: vec![0.0; n],
+            z_ax,
+            z_den_exc,
+            z_den_inh,
+            i_syn: vec![0.0; n],
+            noise: vec![0.0; n],
+            fired: vec![false; n],
+            epoch_spikes: vec![0; n],
+        }
+    }
+
+    /// Initialize `n` neurons spread round-robin over the rank's Morton
+    /// cells (`cells` = per-cell `[lo, hi)` boxes), uniform within each
+    /// cell. This is the placement the distributed octree assumes: every
+    /// local neuron falls inside a subdomain this rank owns.
+    pub fn init_in_cells(
+        cfg: &SimConfig,
+        rank: usize,
+        cells: &[(Vec3, Vec3)],
+        rng: &mut Rng,
+    ) -> Population {
+        assert!(!cells.is_empty());
+        let mut pop = Population::init(cfg, rank, cells[0].0, cells[0].1, rng);
+        for (i, pos) in pop.positions.iter_mut().enumerate() {
+            let (lo, hi) = cells[i % cells.len()];
+            *pos = Vec3::new(
+                rng.uniform(lo.x, hi.x),
+                rng.uniform(lo.y, hi.y),
+                rng.uniform(lo.z, hi.z),
+            );
+        }
+        pop
+    }
+
+    /// Draw fresh background noise ~ N(bg_mean, bg_std) for every neuron.
+    pub fn draw_noise(&mut self, cfg: &SimConfig, rng: &mut Rng) {
+        for x in self.noise.iter_mut() {
+            *x = rng.normal_ms(cfg.bg_mean, cfg.bg_std) as f32;
+        }
+    }
+
+    /// Zero the synaptic-input accumulator (start of a step).
+    pub fn clear_inputs(&mut self) {
+        self.i_syn.iter_mut().for_each(|x| *x = 0.0);
+    }
+
+    /// Mean calcium across local neurons (reporting).
+    pub fn mean_calcium(&self) -> f64 {
+        if self.is_empty() {
+            return 0.0;
+        }
+        self.ca.iter().map(|&c| c as f64).sum::<f64>() / self.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+
+    fn cfg() -> SimConfig {
+        SimConfig { neurons_per_rank: 100, ..SimConfig::default() }
+    }
+
+    #[test]
+    fn init_places_in_box_with_initial_elements() {
+        let cfg = cfg();
+        let mut rng = Rng::new(1);
+        let lo = Vec3::new(10.0, 0.0, 0.0);
+        let hi = Vec3::new(20.0, 5.0, 5.0);
+        let pop = Population::init(&cfg, 3, lo, hi, &mut rng);
+        assert_eq!(pop.len(), 100);
+        assert_eq!(pop.first_id, 300);
+        for p in &pop.positions {
+            assert!(p.in_box(&lo, &hi));
+        }
+        for i in 0..pop.len() {
+            assert!((1.1..=1.5).contains(&(pop.z_ax[i] as f64)));
+            assert!((1.1..=1.5).contains(&(pop.z_den_exc[i] as f64)));
+            assert!((1.1..=1.5).contains(&(pop.z_den_inh[i] as f64)));
+        }
+        assert!(pop.ca.iter().all(|&c| c == 0.0));
+        assert!(pop.v.iter().all(|&v| v == cfg.neuron.c));
+    }
+
+    #[test]
+    fn id_mapping_roundtrips() {
+        let cfg = cfg();
+        let mut rng = Rng::new(2);
+        let pop =
+            Population::init(&cfg, 2, Vec3::ZERO, Vec3::splat(1.0), &mut rng);
+        for local in [0usize, 5, 99] {
+            assert_eq!(pop.local_index(pop.global_id(local)), local);
+        }
+    }
+
+    #[test]
+    fn excitatory_fraction_roughly_respected() {
+        let mut cfg = cfg();
+        cfg.neurons_per_rank = 10_000;
+        cfg.frac_excitatory = 0.8;
+        let mut rng = Rng::new(3);
+        let pop =
+            Population::init(&cfg, 0, Vec3::ZERO, Vec3::splat(1.0), &mut rng);
+        let frac =
+            pop.is_excitatory.iter().filter(|&&e| e).count() as f64 / pop.len() as f64;
+        assert!((frac - 0.8).abs() < 0.02, "frac {frac}");
+    }
+
+    #[test]
+    fn noise_has_requested_moments() {
+        let mut cfg = cfg();
+        cfg.neurons_per_rank = 50_000;
+        cfg.bg_mean = 5.0;
+        cfg.bg_std = 1.0;
+        let mut rng = Rng::new(4);
+        let mut pop =
+            Population::init(&cfg, 0, Vec3::ZERO, Vec3::splat(1.0), &mut rng);
+        pop.draw_noise(&cfg, &mut rng);
+        let n = pop.len() as f64;
+        let mean = pop.noise.iter().map(|&x| x as f64).sum::<f64>() / n;
+        let var =
+            pop.noise.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / n;
+        assert!((mean - 5.0).abs() < 0.05, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+}

@@ -1,0 +1,182 @@
+//! Domain decomposition (paper §III-B0a).
+//!
+//! The cubic simulation domain is split into `8^b` subdomains indexed by
+//! the Morton curve; each rank owns a consecutive run of subdomains. For
+//! power-of-two rank counts every rank gets 1, 2, or 4 cells (8 when the
+//! rank count itself is a lower power of 8); other counts get near-even
+//! consecutive runs.
+
+use crate::util::{morton, Vec3};
+
+#[derive(Clone, Debug)]
+pub struct DomainDecomposition {
+    /// Branch level `b`: subdomains are the cells at tree depth `b`.
+    pub branch_level: u32,
+    /// Number of subdomains = 8^b.
+    pub num_cells: usize,
+    /// Edge length of the whole domain.
+    pub domain_size: f64,
+    /// `cell_start[r]..cell_start[r+1]` = Morton cell range of rank r.
+    cell_start: Vec<usize>,
+}
+
+impl DomainDecomposition {
+    /// Decompose for `ranks` ranks: smallest `b` with `8^b >= ranks`.
+    pub fn new(ranks: usize, domain_size: f64) -> Self {
+        assert!(ranks > 0);
+        let mut b = 0u32;
+        while 8usize.pow(b) < ranks {
+            b += 1;
+        }
+        let num_cells = 8usize.pow(b);
+        // Near-even consecutive distribution: first `extra` ranks get one
+        // more cell. (Power-of-two ranks -> exact 8^b/ranks each.)
+        let base = num_cells / ranks;
+        let extra = num_cells % ranks;
+        let mut cell_start = Vec::with_capacity(ranks + 1);
+        let mut at = 0;
+        for r in 0..ranks {
+            cell_start.push(at);
+            at += base + usize::from(r < extra);
+        }
+        cell_start.push(at);
+        debug_assert_eq!(at, num_cells);
+        Self { branch_level: b, num_cells, domain_size, cell_start }
+    }
+
+    pub fn ranks(&self) -> usize {
+        self.cell_start.len() - 1
+    }
+
+    /// Cells per axis at the branch level (2^b).
+    pub fn cells_per_axis(&self) -> u64 {
+        1u64 << self.branch_level
+    }
+
+    /// Edge length of one subdomain.
+    pub fn cell_size(&self) -> f64 {
+        self.domain_size / self.cells_per_axis() as f64
+    }
+
+    /// Morton cell range owned by `rank`.
+    pub fn cells_of_rank(&self, rank: usize) -> std::ops::Range<usize> {
+        self.cell_start[rank]..self.cell_start[rank + 1]
+    }
+
+    /// Which rank owns Morton cell `cell`.
+    pub fn owner_of_cell(&self, cell: usize) -> usize {
+        debug_assert!(cell < self.num_cells);
+        // cell_start is sorted; find the last start <= cell.
+        match self.cell_start.binary_search(&cell) {
+            Ok(r) => r.min(self.ranks() - 1),
+            Err(ins) => ins - 1,
+        }
+    }
+
+    /// Spatial bounds `[lo, hi)` of Morton cell `cell`.
+    pub fn cell_bounds(&self, cell: usize) -> (Vec3, Vec3) {
+        let (x, y, z) = morton::decode(cell as u64);
+        let s = self.cell_size();
+        let lo = Vec3::new(x as f64 * s, y as f64 * s, z as f64 * s);
+        let hi = lo + Vec3::splat(s);
+        (lo, hi)
+    }
+
+    /// Morton cell containing `pos`.
+    pub fn cell_of_position(&self, pos: &Vec3) -> usize {
+        let s = self.cell_size();
+        let clamp = |v: f64| {
+            (v / s).floor().max(0.0).min((self.cells_per_axis() - 1) as f64) as u64
+        };
+        morton::encode(clamp(pos.x), clamp(pos.y), clamp(pos.z)) as usize
+    }
+
+    /// Which rank owns `pos`.
+    pub fn owner_of_position(&self, pos: &Vec3) -> usize {
+        self.owner_of_cell(self.cell_of_position(pos))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn branch_level_matches_paper_examples() {
+        // k ranks -> 8^b cells, 1/2/4 consecutive each (power-of-two k).
+        assert_eq!(DomainDecomposition::new(1, 1.0).branch_level, 0);
+        assert_eq!(DomainDecomposition::new(2, 1.0).branch_level, 1); // 4 each
+        assert_eq!(DomainDecomposition::new(8, 1.0).branch_level, 1); // 1 each
+        assert_eq!(DomainDecomposition::new(16, 1.0).branch_level, 2); // 4 each
+        assert_eq!(DomainDecomposition::new(32, 1.0).branch_level, 2); // 2 each
+        assert_eq!(DomainDecomposition::new(64, 1.0).branch_level, 2); // 1 each
+        assert_eq!(DomainDecomposition::new(1024, 1.0).branch_level, 4);
+    }
+
+    #[test]
+    fn power_of_two_ranks_get_1_2_or_4_cells() {
+        for ranks in [2usize, 4, 8, 16, 32, 64, 128, 256, 512, 1024] {
+            let d = DomainDecomposition::new(ranks, 1.0);
+            for r in 0..ranks {
+                let c = d.cells_of_rank(r).len();
+                assert!(
+                    c == 1 || c == 2 || c == 4,
+                    "ranks={ranks} rank={r} cells={c}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn cells_partition_exactly() {
+        for ranks in [1usize, 3, 5, 8, 13, 32] {
+            let d = DomainDecomposition::new(ranks, 1.0);
+            let mut covered = 0;
+            for r in 0..ranks {
+                let range = d.cells_of_rank(r);
+                assert_eq!(range.start, covered);
+                covered = range.end;
+                for c in range {
+                    assert_eq!(d.owner_of_cell(c), r);
+                }
+            }
+            assert_eq!(covered, d.num_cells);
+        }
+    }
+
+    #[test]
+    fn cell_bounds_tile_domain() {
+        let d = DomainDecomposition::new(16, 100.0);
+        let mut volume = 0.0;
+        for c in 0..d.num_cells {
+            let (lo, hi) = d.cell_bounds(c);
+            assert!(lo.x >= 0.0 && hi.x <= 100.0 + 1e-9);
+            volume += (hi.x - lo.x) * (hi.y - lo.y) * (hi.z - lo.z);
+        }
+        assert!((volume - 100.0f64.powi(3)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn position_cell_roundtrip() {
+        let d = DomainDecomposition::new(16, 100.0);
+        let mut rng = crate::util::Rng::new(3);
+        for _ in 0..500 {
+            let p = Vec3::new(
+                rng.uniform(0.0, 100.0),
+                rng.uniform(0.0, 100.0),
+                rng.uniform(0.0, 100.0),
+            );
+            let cell = d.cell_of_position(&p);
+            let (lo, hi) = d.cell_bounds(cell);
+            assert!(p.in_box(&lo, &hi), "{p:?} not in cell {cell}");
+        }
+    }
+
+    #[test]
+    fn boundary_positions_clamp() {
+        let d = DomainDecomposition::new(8, 100.0);
+        let p = Vec3::new(100.0, 100.0, 100.0); // exactly on the far corner
+        let cell = d.cell_of_position(&p);
+        assert!(cell < d.num_cells);
+    }
+}

@@ -1,0 +1,84 @@
+//! Distributed spatial octree: domain decomposition, the per-rank tree
+//! with shared upper portion, and the RMA-window serialization used by
+//! the old (download-based) Barnes–Hut algorithm.
+
+pub mod domain;
+pub mod tree;
+pub mod window;
+
+pub use domain::DomainDecomposition;
+pub use tree::{BranchPayload, ElementKind, Node, NodeKind, Octree, NO_CHILD, NO_NEURON};
+pub use window::{serialize_local_subtrees, RemoteNodeCache, SerializedWindow, WireNode, OCTREE_WINDOW};
+
+use crate::util::wire::{get_f32, get_u32, put_f32, put_u32, Wire};
+use crate::util::Vec3;
+
+/// Wire format for the branch-node all-to-all exchange: cell index,
+/// both vacancy aggregates, both weighted position sums, the owner's
+/// window root index, and the leaf neuron id (if the whole subdomain is
+/// a single leaf). 48 B per subdomain — part of the "small amount of
+/// bookkeeping" in Tables I/II, identical for old and new algorithms.
+impl Wire for BranchPayload {
+    const SIZE: usize = 4 + 4 + 4 + 12 + 12 + 4 + 8;
+
+    fn write(&self, out: &mut Vec<u8>) {
+        put_u32(out, self.cell);
+        put_f32(out, self.vac_exc);
+        put_f32(out, self.vac_inh);
+        put_f32(out, self.pos_exc.x as f32);
+        put_f32(out, self.pos_exc.y as f32);
+        put_f32(out, self.pos_exc.z as f32);
+        put_f32(out, self.pos_inh.x as f32);
+        put_f32(out, self.pos_inh.y as f32);
+        put_f32(out, self.pos_inh.z as f32);
+        put_u32(out, self.window_root as u32);
+        out.extend_from_slice(&self.neuron.to_le_bytes());
+    }
+
+    fn read(buf: &[u8]) -> Self {
+        BranchPayload {
+            cell: get_u32(buf, 0),
+            vac_exc: get_f32(buf, 4),
+            vac_inh: get_f32(buf, 8),
+            pos_exc: Vec3::new(
+                get_f32(buf, 12) as f64,
+                get_f32(buf, 16) as f64,
+                get_f32(buf, 20) as f64,
+            ),
+            pos_inh: Vec3::new(
+                get_f32(buf, 24) as f64,
+                get_f32(buf, 28) as f64,
+                get_f32(buf, 32) as f64,
+            ),
+            window_root: get_u32(buf, 36) as i32,
+            neuron: crate::util::wire::get_i64_at(buf, 40),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn branch_payload_roundtrip() {
+        let p = BranchPayload {
+            cell: 17,
+            vac_exc: 3.5,
+            vac_inh: 1.25,
+            pos_exc: Vec3::new(1.0, 2.0, 3.0),
+            pos_inh: Vec3::new(4.0, 5.0, 6.0),
+            window_root: -1,
+            neuron: 99,
+        };
+        let mut buf = Vec::new();
+        p.write(&mut buf);
+        assert_eq!(buf.len(), BranchPayload::SIZE);
+        let q = BranchPayload::read(&buf);
+        assert_eq!(q.cell, 17);
+        assert_eq!(q.window_root, -1);
+        assert_eq!(q.neuron, 99);
+        assert!((q.vac_exc - 3.5).abs() < 1e-6);
+        assert!(q.pos_inh.dist(&p.pos_inh) < 1e-6);
+    }
+}

@@ -1,0 +1,335 @@
+//! RMA window serialization of a rank's local subtrees, plus the
+//! remote-node cache the *old* Barnes–Hut algorithm uses.
+//!
+//! Each connectivity update, every rank publishes its local subtree
+//! nodes (everything at or below the branch nodes of its cells) as a
+//! flat, index-addressable array of fixed-size `WireNode`s. The old
+//! algorithm downloads nodes from these windows one at a time during its
+//! descent ("download all red nodes", paper Fig. 2) and caches them for
+//! the rest of the synapse-formation phase (paper §III-B0c). The new
+//! algorithm never touches these windows below the branch level — that is
+//! the entire point.
+
+use std::collections::HashMap;
+
+use super::tree::{ElementKind, NodeKind, Octree, NO_CHILD};
+use crate::comm::{ThreadComm, WindowKey};
+use crate::util::wire::{get_f32, get_i64_at, get_i32_at, put_f32, put_u32, Wire};
+use crate::util::Vec3;
+
+/// Window key under which octree nodes are published.
+pub const OCTREE_WINDOW: WindowKey = 1;
+
+/// A serialized octree node as it travels over (emulated) RMA.
+///
+/// 89 B on the wire: bounds (16) + vacancies (8) + weighted positions
+/// (24) + child window indices (32) + neuron id (8) + flags (1).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct WireNode {
+    pub lo: [f32; 3],
+    pub side: f32,
+    pub vac_exc: f32,
+    pub vac_inh: f32,
+    pub pos_exc: [f32; 3],
+    pub pos_inh: [f32; 3],
+    /// Children as indices into the owner's window (NO_CHILD = none).
+    pub children: [i32; 8],
+    pub neuron: i64,
+    pub is_leaf: bool,
+}
+
+impl WireNode {
+    pub fn vac(&self, kind: ElementKind) -> f32 {
+        match kind {
+            ElementKind::Excitatory => self.vac_exc,
+            ElementKind::Inhibitory => self.vac_inh,
+        }
+    }
+
+    pub fn pos(&self, kind: ElementKind) -> Vec3 {
+        let p = match kind {
+            ElementKind::Excitatory => self.pos_exc,
+            ElementKind::Inhibitory => self.pos_inh,
+        };
+        Vec3::new(p[0] as f64, p[1] as f64, p[2] as f64)
+    }
+}
+
+impl Wire for WireNode {
+    const SIZE: usize = 16 + 8 + 24 + 32 + 8 + 1;
+
+    fn write(&self, out: &mut Vec<u8>) {
+        for v in self.lo {
+            put_f32(out, v);
+        }
+        put_f32(out, self.side);
+        put_f32(out, self.vac_exc);
+        put_f32(out, self.vac_inh);
+        for v in self.pos_exc {
+            put_f32(out, v);
+        }
+        for v in self.pos_inh {
+            put_f32(out, v);
+        }
+        for c in self.children {
+            put_u32(out, c as u32);
+        }
+        out.extend_from_slice(&self.neuron.to_le_bytes());
+        out.push(u8::from(self.is_leaf));
+    }
+
+    fn read(buf: &[u8]) -> Self {
+        let mut lo = [0f32; 3];
+        for (i, v) in lo.iter_mut().enumerate() {
+            *v = get_f32(buf, i * 4);
+        }
+        let side = get_f32(buf, 12);
+        let vac_exc = get_f32(buf, 16);
+        let vac_inh = get_f32(buf, 20);
+        let mut pos_exc = [0f32; 3];
+        let mut pos_inh = [0f32; 3];
+        for i in 0..3 {
+            pos_exc[i] = get_f32(buf, 24 + i * 4);
+            pos_inh[i] = get_f32(buf, 36 + i * 4);
+        }
+        let mut children = [NO_CHILD; 8];
+        for (i, c) in children.iter_mut().enumerate() {
+            *c = get_i32_at(buf, 48 + i * 4);
+        }
+        let neuron = get_i64_at(buf, 80);
+        let is_leaf = buf[88] != 0;
+        WireNode { lo, side, vac_exc, vac_inh, pos_exc, pos_inh, children, neuron, is_leaf }
+    }
+}
+
+/// Serialized local subtrees: the window bytes plus the window index of
+/// each owned branch cell's subtree root.
+pub struct SerializedWindow {
+    pub bytes: Vec<u8>,
+    /// cell -> window index of the branch node (only owned cells).
+    pub root_of_cell: HashMap<usize, i32>,
+}
+
+/// Serialize this rank's branch nodes + local subtrees in DFS order.
+/// Children pointers become window indices. Called after
+/// `aggregate_local` but BEFORE `normalize` (the publish happens inside
+/// the octree-update phase, ahead of the branch exchange), so position
+/// sums are converted to weighted means here.
+pub fn serialize_local_subtrees(
+    tree: &Octree,
+    own_cells: std::ops::Range<usize>,
+) -> SerializedWindow {
+    // First pass: assign window indices in DFS order.
+    let mut order: Vec<usize> = Vec::new();
+    let mut window_idx: HashMap<usize, i32> = HashMap::new();
+    let mut root_of_cell = HashMap::new();
+    for cell in own_cells {
+        let root = tree.branch_of_cell[cell];
+        root_of_cell.insert(cell, order.len() as i32);
+        let mut stack = vec![root];
+        while let Some(at) = stack.pop() {
+            window_idx.insert(at, order.len() as i32);
+            order.push(at);
+            for &c in tree.nodes[at].children.iter().rev() {
+                if c != NO_CHILD {
+                    stack.push(c as usize);
+                }
+            }
+        }
+    }
+    // Second pass: encode with remapped children.
+    let mut bytes = Vec::with_capacity(order.len() * WireNode::SIZE);
+    for &at in &order {
+        let n = &tree.nodes[at];
+        debug_assert!(matches!(n.kind, NodeKind::Branch | NodeKind::Local));
+        let mut children = [NO_CHILD; 8];
+        for (i, &c) in n.children.iter().enumerate() {
+            if c != NO_CHILD {
+                children[i] = window_idx[&(c as usize)];
+            }
+        }
+        // Convert vacancy-weighted position sums to means; leaves carry
+        // the exact neuron position.
+        let mean = |sum: Vec3, vac: f32| -> [f32; 3] {
+            let p = if n.neuron != super::tree::NO_NEURON {
+                n.leaf_pos
+            } else if vac > 0.0 {
+                sum / vac as f64
+            } else {
+                Vec3::ZERO
+            };
+            [p.x as f32, p.y as f32, p.z as f32]
+        };
+        let w = WireNode {
+            lo: [n.lo.x as f32, n.lo.y as f32, n.lo.z as f32],
+            side: n.side as f32,
+            vac_exc: n.vac_exc,
+            vac_inh: n.vac_inh,
+            pos_exc: mean(n.pos_exc, n.vac_exc),
+            pos_inh: mean(n.pos_inh, n.vac_inh),
+            children,
+            neuron: n.neuron,
+            is_leaf: n.is_leaf(),
+        };
+        w.write(&mut bytes);
+    }
+    SerializedWindow { bytes, root_of_cell }
+}
+
+/// Cache of octree nodes downloaded from other ranks' windows.
+///
+/// Paper §III-B0c: downloaded nodes "remain valid until the end of the
+/// synapse-formation phase and thus do not need re-downloading for
+/// subsequent neurons" — so the cache lives for one formation phase and
+/// is cleared afterwards.
+/// Dense per-rank node cache: window indices are contiguous, so a
+/// `Vec<Option<WireNode>>` per rank turns each lookup into one indexed
+/// load (a `HashMap<(rank, idx), _>` here cost ~35% of the old
+/// algorithm's runtime in SipHash — EXPERIMENTS.md §Perf, opt 2).
+#[derive(Default)]
+pub struct RemoteNodeCache {
+    per_rank: Vec<Vec<Option<WireNode>>>,
+    /// Cache hits/misses for perf reporting.
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl RemoteNodeCache {
+    pub fn clear(&mut self) {
+        for v in self.per_rank.iter_mut() {
+            v.clear();
+        }
+    }
+
+    /// Fetch node `idx` of `rank`'s window, via RMA on a miss.
+    pub fn get(&mut self, comm: &ThreadComm, rank: u32, idx: i32) -> WireNode {
+        let r = rank as usize;
+        if self.per_rank.len() <= r {
+            self.per_rank.resize_with(r + 1, Vec::new);
+        }
+        let slots = &mut self.per_rank[r];
+        let i = idx as usize;
+        if slots.len() <= i {
+            // First touch of this rank this phase: size the cache to the
+            // window once (free metadata peek).
+            let window_nodes = comm
+                .window_len(r, OCTREE_WINDOW)
+                .map(|len| len / WireNode::SIZE)
+                .unwrap_or(i + 1)
+                .max(i + 1);
+            slots.resize(window_nodes, None);
+        }
+        if let Some(n) = slots[i] {
+            self.hits += 1;
+            return n;
+        }
+        self.misses += 1;
+        let bytes = comm.rma_get(r, OCTREE_WINDOW, i * WireNode::SIZE, WireNode::SIZE);
+        let node = WireNode::read(&bytes);
+        slots[i] = Some(node);
+        node
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::octree::domain::DomainDecomposition;
+    use crate::octree::NO_NEURON;
+    use crate::util::Rng;
+
+    fn build_tree(n: usize) -> (DomainDecomposition, Octree) {
+        let decomp = DomainDecomposition::new(1, 100.0);
+        let mut rng = Rng::new(1);
+        let positions: Vec<Vec3> = (0..n)
+            .map(|_| {
+                Vec3::new(
+                    rng.uniform(0.0, 100.0),
+                    rng.uniform(0.0, 100.0),
+                    rng.uniform(0.0, 100.0),
+                )
+            })
+            .collect();
+        let mut tree = Octree::build(&decomp, 0, 0, &positions);
+        let vac = vec![1.0f32; n];
+        tree.reset_and_set_leaves(0, &vac, &vac);
+        tree.aggregate_local();
+        // NOTE: serialization happens pre-normalize (sums), mirroring
+        // the octree-update phase ordering.
+        (decomp, tree)
+    }
+
+    #[test]
+    fn wire_node_size_is_89_bytes() {
+        assert_eq!(WireNode::SIZE, 89);
+    }
+
+    #[test]
+    fn wire_node_roundtrip() {
+        let w = WireNode {
+            lo: [1.0, 2.0, 3.0],
+            side: 4.5,
+            vac_exc: 2.0,
+            vac_inh: 0.5,
+            pos_exc: [1.5, 2.5, 3.5],
+            pos_inh: [0.5, 0.5, 0.5],
+            children: [0, NO_CHILD, 2, NO_CHILD, NO_CHILD, 5, NO_CHILD, 7],
+            neuron: 1234567,
+            is_leaf: false,
+        };
+        let mut buf = Vec::new();
+        w.write(&mut buf);
+        assert_eq!(buf.len(), WireNode::SIZE);
+        assert_eq!(WireNode::read(&buf), w);
+    }
+
+    #[test]
+    fn serialization_preserves_structure_and_values() {
+        let (decomp, tree) = build_tree(100);
+        let win = serialize_local_subtrees(&tree, decomp.cells_of_rank(0));
+        let nodes: Vec<WireNode> =
+            crate::util::wire::decode_all(&win.bytes);
+        // Walk the window tree from the root; count leaves with neurons.
+        let root = win.root_of_cell[&0] as usize;
+        let mut stack = vec![root];
+        let mut neurons = 0;
+        let mut vac_sum = 0.0f32;
+        while let Some(at) = stack.pop() {
+            let n = &nodes[at];
+            if n.neuron != NO_NEURON {
+                neurons += 1;
+                vac_sum += n.vac_exc;
+            }
+            for &c in &n.children {
+                if c != NO_CHILD {
+                    stack.push(c as usize);
+                }
+            }
+        }
+        assert_eq!(neurons, 100);
+        assert!((vac_sum - 100.0).abs() < 1e-4);
+        // Root aggregate survives the f32 narrowing.
+        assert!((nodes[root].vac_exc - 100.0).abs() < 1e-3);
+        // Positions on the wire are MEANS (a downloaded node is consumed
+        // directly by the acceptance criterion), not weighted sums.
+        let wp = nodes[root].pos(ElementKind::Excitatory);
+        assert!(
+            wp.x < 100.0 && wp.y < 100.0 && wp.z < 100.0 && wp.x > 0.0,
+            "window root position {wp:?} looks like an unnormalized sum"
+        );
+    }
+
+    #[test]
+    fn remote_cache_fetches_once() {
+        let (decomp, tree) = build_tree(10);
+        let comm = ThreadComm::solo();
+        let win = serialize_local_subtrees(&tree, decomp.cells_of_rank(0));
+        comm.publish_window(OCTREE_WINDOW, win.bytes);
+        let mut cache = RemoteNodeCache::default();
+        let a = cache.get(&comm, 0, 0);
+        let b = cache.get(&comm, 0, 0);
+        assert_eq!(a, b);
+        assert_eq!(cache.misses, 1);
+        assert_eq!(cache.hits, 1);
+    }
+}

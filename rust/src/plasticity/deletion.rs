@@ -1,0 +1,249 @@
+//! Synapse-deletion phase (paper §III-A0c, first sub-phase).
+//!
+//! When a neuron's element count falls below its bound-synapse count
+//! (floor(z) < connected), bound elements have retracted: synapses are
+//! chosen uniformly at random and broken. The affected partner on the
+//! other side must be notified — it keeps its element (now vacant) but
+//! loses the synapse. Notifications cross ranks in one all-to-all.
+
+use crate::comm::{exchange, ThreadComm};
+use crate::neuron::{GlobalNeuronId, Population};
+use crate::octree::ElementKind;
+use crate::util::wire::{get_u64, get_u8, put_u64, put_u8, Wire};
+use crate::util::Rng;
+
+use super::synapses::SynapseStore;
+
+/// "Your synapse partner dropped the synapse" notification.
+/// 17 B: partner id (8) + notifying id (8) + which side retracted (1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DeleteNotify {
+    /// Neuron that must drop its edge (lives on the receiving rank).
+    pub partner: GlobalNeuronId,
+    /// Neuron whose element retracted (lives on the sending rank).
+    pub initiator: GlobalNeuronId,
+    /// True if the *axonal* side retracted (so the partner drops an
+    /// in-edge); false if the dendritic side retracted (partner drops an
+    /// out-edge).
+    pub axon_side: bool,
+}
+
+impl Wire for DeleteNotify {
+    const SIZE: usize = 17;
+
+    fn write(&self, out: &mut Vec<u8>) {
+        put_u64(out, self.partner);
+        put_u64(out, self.initiator);
+        put_u8(out, u8::from(self.axon_side));
+    }
+
+    fn read(buf: &[u8]) -> Self {
+        DeleteNotify {
+            partner: get_u64(buf, 0),
+            initiator: get_u64(buf, 8),
+            axon_side: get_u8(buf, 16) != 0,
+        }
+    }
+}
+
+/// Outcome counters of one deletion phase (for reporting/tests).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DeletionStats {
+    pub axonal_retractions: u64,
+    pub dendritic_retractions: u64,
+    pub notifications_sent: u64,
+}
+
+/// Run the deletion phase for this rank. `owner_of` maps a global neuron
+/// id to its rank.
+pub fn run_deletion_phase(
+    comm: &ThreadComm,
+    pop: &Population,
+    store: &mut SynapseStore,
+    rng: &mut Rng,
+    owner_of: impl Fn(GlobalNeuronId) -> usize,
+) -> DeletionStats {
+    let mut stats = DeletionStats::default();
+    let mut notifies: Vec<Vec<DeleteNotify>> = vec![Vec::new(); comm.size()];
+
+    for local in 0..pop.len() {
+        let my_id = pop.global_id(local);
+
+        // Axonal retraction: bound axonal elements exceed floor(z_ax).
+        let want_ax = pop.z_ax[local].floor().max(0.0) as i64;
+        while (store.connected_ax[local] as i64) > want_ax {
+            let target = store
+                .remove_random_out(local, rng)
+                .expect("connected_ax > 0 implies an out-edge");
+            stats.axonal_retractions += 1;
+            notifies[owner_of(target)].push(DeleteNotify {
+                partner: target,
+                initiator: my_id,
+                axon_side: true,
+            });
+        }
+
+        // Dendritic retraction, per element kind.
+        for kind in [ElementKind::Excitatory, ElementKind::Inhibitory] {
+            let z = match kind {
+                ElementKind::Excitatory => pop.z_den_exc[local],
+                ElementKind::Inhibitory => pop.z_den_inh[local],
+            };
+            let want = z.floor().max(0.0) as i64;
+            while (store.connected_den(local, kind) as i64) > want {
+                let source = store
+                    .remove_random_in(local, kind, rng)
+                    .expect("connected_den > 0 implies an in-edge");
+                stats.dendritic_retractions += 1;
+                notifies[owner_of(source)].push(DeleteNotify {
+                    partner: source,
+                    initiator: my_id,
+                    axon_side: false,
+                });
+            }
+        }
+    }
+
+    stats.notifications_sent =
+        notifies.iter().enumerate().filter(|(r, _)| *r != comm.rank()).map(|(_, v)| v.len() as u64).sum();
+
+    // One all-to-all; apply what lands here. A notification can miss if
+    // both ends retracted the same synapse this round — that's fine.
+    let incoming = exchange(comm, notifies);
+    for batch in incoming {
+        for n in batch {
+            let local = pop.local_index(n.partner);
+            if n.axon_side {
+                // Partner's axon retracted: we lose an in-edge.
+                store.remove_specific_in(local, n.initiator);
+            } else {
+                // Partner's dendrite retracted: we lose an out-edge.
+                store.remove_specific_out(local, n.initiator);
+            }
+        }
+    }
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::run_ranks;
+    use crate::config::SimConfig;
+    use crate::util::Vec3;
+
+    #[test]
+    fn notify_wire_is_17_bytes() {
+        assert_eq!(DeleteNotify::SIZE, 17);
+        let n = DeleteNotify { partner: 5, initiator: 9, axon_side: true };
+        let mut buf = Vec::new();
+        n.write(&mut buf);
+        assert_eq!(buf.len(), 17);
+        assert_eq!(DeleteNotify::read(&buf), n);
+    }
+
+    fn make_pop(rank: usize, n: usize) -> Population {
+        let cfg = SimConfig { neurons_per_rank: n, ..SimConfig::default() };
+        let mut rng = Rng::new(rank as u64);
+        Population::init(&cfg, rank, Vec3::ZERO, Vec3::splat(100.0), &mut rng)
+    }
+
+    #[test]
+    fn local_retraction_breaks_both_sides() {
+        // Single rank, two neurons, one synapse 0 -> 1; force z_ax to 0.
+        let results = run_ranks(1, |comm| {
+            let mut pop = make_pop(0, 2);
+            let mut store = SynapseStore::new(2);
+            store.add_out(0, 1);
+            store.add_in(1, 0, pop.is_excitatory[0]);
+            pop.z_ax[0] = 0.0;
+            // Keep dendrites generous so only the axon retracts.
+            pop.z_den_exc[1] = 5.0;
+            pop.z_den_inh[1] = 5.0;
+            let mut rng = Rng::new(1);
+            let stats = run_deletion_phase(&comm, &pop, &mut store, &mut rng, |_| 0);
+            (stats, store)
+        });
+        let (stats, store) = &results[0];
+        assert_eq!(stats.axonal_retractions, 1);
+        assert_eq!(store.total_out(), 0);
+        assert_eq!(store.total_in(), 0);
+        store.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn cross_rank_retraction_notifies_partner() {
+        // Rank 0: neuron 0 with axon to neuron 1 (rank 1). Rank 0's
+        // z_ax drops to 0 -> rank 1 must lose the in-edge.
+        let results = run_ranks(2, |comm| {
+            let mut pop = make_pop(comm.rank(), 1);
+            let mut store = SynapseStore::new(1);
+            if comm.rank() == 0 {
+                store.add_out(0, 1);
+                pop.z_ax[0] = 0.0;
+            } else {
+                store.add_in(0, 0, true);
+                pop.z_den_exc[0] = 5.0;
+                pop.z_den_inh[0] = 5.0;
+                pop.z_ax[0] = 5.0;
+            }
+            if comm.rank() == 0 {
+                pop.z_den_exc[0] = 5.0;
+                pop.z_den_inh[0] = 5.0;
+            }
+            let mut rng = Rng::new(comm.rank() as u64);
+            let stats =
+                run_deletion_phase(&comm, &pop, &mut store, &mut rng, |id| id as usize);
+            (stats, store)
+        });
+        assert_eq!(results[0].0.axonal_retractions, 1);
+        assert_eq!(results[0].0.notifications_sent, 1);
+        assert_eq!(results[0].1.total_out(), 0);
+        assert_eq!(results[1].1.total_in(), 0);
+        results[1].1.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn dendritic_retraction_notifies_source() {
+        let results = run_ranks(2, |comm| {
+            let mut pop = make_pop(comm.rank(), 1);
+            let mut store = SynapseStore::new(1);
+            pop.z_ax[0] = 5.0;
+            pop.z_den_exc[0] = 5.0;
+            pop.z_den_inh[0] = 5.0;
+            if comm.rank() == 0 {
+                store.add_out(0, 1);
+            } else {
+                store.add_in(0, 0, true);
+                pop.z_den_exc[0] = 0.0; // force dendritic retraction
+            }
+            let mut rng = Rng::new(comm.rank() as u64);
+            let stats =
+                run_deletion_phase(&comm, &pop, &mut store, &mut rng, |id| id as usize);
+            (stats, store)
+        });
+        assert_eq!(results[1].0.dendritic_retractions, 1);
+        assert_eq!(results[0].1.total_out(), 0, "source must drop its out-edge");
+    }
+
+    #[test]
+    fn no_retraction_when_elements_sufficient() {
+        let results = run_ranks(1, |comm| {
+            let mut pop = make_pop(0, 2);
+            let mut store = SynapseStore::new(2);
+            store.add_out(0, 1);
+            store.add_in(1, 0, true);
+            pop.z_ax[0] = 2.0;
+            pop.z_den_exc[1] = 2.0;
+            pop.z_den_inh[1] = 2.0;
+            pop.z_den_exc[0] = 2.0;
+            pop.z_den_inh[0] = 2.0;
+            pop.z_ax[1] = 2.0;
+            let mut rng = Rng::new(3);
+            run_deletion_phase(&comm, &pop, &mut store, &mut rng, |_| 0);
+            store
+        });
+        assert_eq!(results[0].total_out(), 1);
+        assert_eq!(results[0].total_in(), 1);
+    }
+}

@@ -1,0 +1,9 @@
+//! Structural plasticity: synapse bookkeeping and the deletion phase.
+//! (Synapse *formation* lives in `barnes_hut`, which implements the
+//! paper's old and new target-search algorithms.)
+
+pub mod deletion;
+pub mod synapses;
+
+pub use deletion::{run_deletion_phase, DeleteNotify, DeletionStats};
+pub use synapses::{vacant, InEdge, SynapseStore};

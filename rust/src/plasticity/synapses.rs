@@ -1,0 +1,247 @@
+//! Per-rank synapse bookkeeping.
+//!
+//! A synapse is an (axon of source neuron) -> (dendrite of target neuron)
+//! pair. Each rank stores the axonal side of its local sources
+//! (`out_edges`) and the dendritic side of its local targets
+//! (`in_edges`); a synapse crossing ranks appears once on each rank.
+//! Dendrites are typed by the *source* neuron (an excitatory axon binds
+//! an excitatory-dendritic element), matching MSP.
+
+use crate::neuron::GlobalNeuronId;
+use crate::octree::ElementKind;
+use crate::util::Rng;
+
+/// One incoming synapse as stored on the dendritic side.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct InEdge {
+    pub source: GlobalNeuronId,
+    /// Source neuron's type == which dendritic element kind is bound.
+    pub source_exc: bool,
+}
+
+/// Synapse store for one rank (`n` local neurons).
+#[derive(Clone, Debug, Default)]
+pub struct SynapseStore {
+    /// Axonal side: targets of each local neuron's outgoing synapses.
+    pub out_edges: Vec<Vec<GlobalNeuronId>>,
+    /// Dendritic side: sources of each local neuron's incoming synapses.
+    pub in_edges: Vec<Vec<InEdge>>,
+    /// Bound (connected) element counts per local neuron.
+    pub connected_ax: Vec<u32>,
+    pub connected_den_exc: Vec<u32>,
+    pub connected_den_inh: Vec<u32>,
+}
+
+impl SynapseStore {
+    pub fn new(n: usize) -> Self {
+        SynapseStore {
+            out_edges: vec![Vec::new(); n],
+            in_edges: vec![Vec::new(); n],
+            connected_ax: vec![0; n],
+            connected_den_exc: vec![0; n],
+            connected_den_inh: vec![0; n],
+        }
+    }
+
+    /// Record the axonal side of a new synapse on local `src`.
+    pub fn add_out(&mut self, src_local: usize, target: GlobalNeuronId) {
+        self.out_edges[src_local].push(target);
+        self.connected_ax[src_local] += 1;
+    }
+
+    /// Record the dendritic side of a new synapse on local `tgt`.
+    pub fn add_in(&mut self, tgt_local: usize, source: GlobalNeuronId, source_exc: bool) {
+        self.in_edges[tgt_local].push(InEdge { source, source_exc });
+        if source_exc {
+            self.connected_den_exc[tgt_local] += 1;
+        } else {
+            self.connected_den_inh[tgt_local] += 1;
+        }
+    }
+
+    /// Remove a uniformly-random outgoing synapse of local `src`
+    /// (axonal retraction). Returns the disconnected target.
+    pub fn remove_random_out(&mut self, src_local: usize, rng: &mut Rng) -> Option<GlobalNeuronId> {
+        let edges = &mut self.out_edges[src_local];
+        if edges.is_empty() {
+            return None;
+        }
+        let k = rng.next_below(edges.len());
+        let target = edges.swap_remove(k);
+        self.connected_ax[src_local] -= 1;
+        Some(target)
+    }
+
+    /// Remove a uniformly-random incoming synapse of kind `kind` on
+    /// local `tgt` (dendritic retraction). Returns the source.
+    pub fn remove_random_in(
+        &mut self,
+        tgt_local: usize,
+        kind: ElementKind,
+        rng: &mut Rng,
+    ) -> Option<GlobalNeuronId> {
+        let want_exc = kind == ElementKind::Excitatory;
+        let edges = &self.in_edges[tgt_local];
+        let matching: Vec<usize> = edges
+            .iter()
+            .enumerate()
+            .filter(|(_, e)| e.source_exc == want_exc)
+            .map(|(i, _)| i)
+            .collect();
+        if matching.is_empty() {
+            return None;
+        }
+        let k = matching[rng.next_below(matching.len())];
+        let e = self.in_edges[tgt_local].swap_remove(k);
+        if want_exc {
+            self.connected_den_exc[tgt_local] -= 1;
+        } else {
+            self.connected_den_inh[tgt_local] -= 1;
+        }
+        Some(e.source)
+    }
+
+    /// Remove one specific outgoing synapse (partner-initiated deletion).
+    /// Returns false if it was already gone (both ends deleted in the
+    /// same update — benign race the protocol tolerates).
+    pub fn remove_specific_out(&mut self, src_local: usize, target: GlobalNeuronId) -> bool {
+        let edges = &mut self.out_edges[src_local];
+        if let Some(k) = edges.iter().position(|&t| t == target) {
+            edges.swap_remove(k);
+            self.connected_ax[src_local] -= 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Remove one specific incoming synapse (partner-initiated deletion).
+    pub fn remove_specific_in(&mut self, tgt_local: usize, source: GlobalNeuronId) -> bool {
+        let edges = &mut self.in_edges[tgt_local];
+        if let Some(k) = edges.iter().position(|e| e.source == source) {
+            let e = edges.swap_remove(k);
+            if e.source_exc {
+                self.connected_den_exc[tgt_local] -= 1;
+            } else {
+                self.connected_den_inh[tgt_local] -= 1;
+            }
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Bound dendritic elements of `kind` on local `tgt`.
+    pub fn connected_den(&self, tgt_local: usize, kind: ElementKind) -> u32 {
+        match kind {
+            ElementKind::Excitatory => self.connected_den_exc[tgt_local],
+            ElementKind::Inhibitory => self.connected_den_inh[tgt_local],
+        }
+    }
+
+    /// Total synapses stored on the axonal side of this rank.
+    pub fn total_out(&self) -> usize {
+        self.out_edges.iter().map(|e| e.len()).sum()
+    }
+
+    /// Total synapses stored on the dendritic side of this rank.
+    pub fn total_in(&self) -> usize {
+        self.in_edges.iter().map(|e| e.len()).sum()
+    }
+
+    /// Internal-consistency check (used by property tests): counters
+    /// match edge-list lengths.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        for i in 0..self.out_edges.len() {
+            if self.out_edges[i].len() != self.connected_ax[i] as usize {
+                return Err(format!("neuron {i}: out edges vs connected_ax mismatch"));
+            }
+            let exc = self.in_edges[i].iter().filter(|e| e.source_exc).count();
+            let inh = self.in_edges[i].len() - exc;
+            if exc != self.connected_den_exc[i] as usize {
+                return Err(format!("neuron {i}: exc in-edges mismatch"));
+            }
+            if inh != self.connected_den_inh[i] as usize {
+                return Err(format!("neuron {i}: inh in-edges mismatch"));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Number of vacant elements given a continuous count `z` and `bound`
+/// elements already in synapses: floor(z) - bound, clamped at 0.
+#[inline]
+pub fn vacant(z: f32, bound: u32) -> u32 {
+    (z.floor() as i64 - bound as i64).max(0) as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_and_counts() {
+        let mut s = SynapseStore::new(3);
+        s.add_out(0, 100);
+        s.add_out(0, 101);
+        s.add_in(1, 50, true);
+        s.add_in(1, 51, false);
+        s.add_in(1, 52, true);
+        assert_eq!(s.connected_ax[0], 2);
+        assert_eq!(s.connected_den_exc[1], 2);
+        assert_eq!(s.connected_den_inh[1], 1);
+        assert_eq!(s.total_out(), 2);
+        assert_eq!(s.total_in(), 3);
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn remove_random_out_updates_counts() {
+        let mut s = SynapseStore::new(1);
+        let mut rng = Rng::new(1);
+        s.add_out(0, 7);
+        s.add_out(0, 8);
+        let t = s.remove_random_out(0, &mut rng).unwrap();
+        assert!(t == 7 || t == 8);
+        assert_eq!(s.connected_ax[0], 1);
+        assert!(s.remove_random_out(0, &mut rng).is_some());
+        assert!(s.remove_random_out(0, &mut rng).is_none());
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn remove_random_in_respects_kind() {
+        let mut s = SynapseStore::new(1);
+        let mut rng = Rng::new(2);
+        s.add_in(0, 10, true);
+        s.add_in(0, 11, false);
+        let src = s.remove_random_in(0, ElementKind::Inhibitory, &mut rng).unwrap();
+        assert_eq!(src, 11);
+        assert_eq!(s.connected_den_inh[0], 0);
+        assert_eq!(s.connected_den_exc[0], 1);
+        assert!(s.remove_random_in(0, ElementKind::Inhibitory, &mut rng).is_none());
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn remove_specific_tolerates_missing() {
+        let mut s = SynapseStore::new(1);
+        s.add_out(0, 5);
+        assert!(s.remove_specific_out(0, 5));
+        assert!(!s.remove_specific_out(0, 5));
+        s.add_in(0, 6, true);
+        assert!(s.remove_specific_in(0, 6));
+        assert!(!s.remove_specific_in(0, 6));
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn vacant_clamps() {
+        assert_eq!(vacant(2.7, 1), 1);
+        assert_eq!(vacant(2.7, 2), 0);
+        assert_eq!(vacant(2.7, 5), 0);
+        assert_eq!(vacant(0.9, 0), 0);
+        assert_eq!(vacant(1.0, 0), 1);
+    }
+}

@@ -1,0 +1,207 @@
+//! PJRT runtime: loads the AOT artifacts (`python/compile/aot.py` →
+//! `artifacts/*.hlo.txt`) and executes them from the Rust hot path.
+//!
+//! Interchange is HLO *text*: jax ≥ 0.5 emits HloModuleProto with 64-bit
+//! instruction ids which xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md). Python never runs at
+//! simulation time — artifacts are produced once by `make artifacts`.
+//!
+//! The `xla` crate's `PjRtClient` is `Rc`-based (not `Send`), while our
+//! simulated-MPI ranks are threads. `XlaService` therefore owns the
+//! client on one dedicated executor thread — the software analogue of
+//! "one accelerator shared by all ranks of a node" — and rank threads
+//! talk to it through a cloneable `XlaHandle`.
+
+mod service;
+
+pub use service::{spawn_service, NeuronInputs, XlaHandle};
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::neuron::params::NUM_PARAMS;
+
+/// Outputs of one neuron-update execution (padded batch truncated to n).
+pub struct NeuronOutputs {
+    pub v: Vec<f32>,
+    pub u: Vec<f32>,
+    pub ca: Vec<f32>,
+    pub z_ax: Vec<f32>,
+    pub z_de: Vec<f32>,
+    pub z_di: Vec<f32>,
+    pub fired: Vec<f32>,
+}
+
+/// The artifact registry + compiled executables (single-threaded owner).
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+    /// batch size -> compiled neuron-update executable.
+    neuron: BTreeMap<usize, xla::PjRtLoadedExecutable>,
+    /// candidate count -> compiled gauss-probs executable.
+    gauss: BTreeMap<usize, xla::PjRtLoadedExecutable>,
+}
+
+impl XlaRuntime {
+    /// Load every artifact listed in `<dir>/manifest.txt` and compile it
+    /// on the PJRT CPU client.
+    pub fn load(dir: &str) -> Result<XlaRuntime> {
+        let manifest = Path::new(dir).join("manifest.txt");
+        let text = std::fs::read_to_string(&manifest)
+            .with_context(|| format!("reading {manifest:?}; run `make artifacts` first"))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e}"))?;
+        let mut neuron = BTreeMap::new();
+        let mut gauss = BTreeMap::new();
+        for line in text.lines() {
+            let mut parts = line.split_whitespace();
+            let (Some(kind), Some(n), Some(file)) =
+                (parts.next(), parts.next(), parts.next())
+            else {
+                continue;
+            };
+            let n: usize = n.parse().context("manifest batch size")?;
+            let path = Path::new(dir).join(file);
+            let path_str = path.to_str().context("artifact path")?;
+            let proto = xla::HloModuleProto::from_text_file(path_str)
+                .map_err(|e| anyhow!("parsing {path_str}: {e}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp).map_err(|e| anyhow!("compiling {file}: {e}"))?;
+            match kind {
+                "neuron_update" => {
+                    neuron.insert(n, exe);
+                }
+                "gauss_probs" => {
+                    gauss.insert(n, exe);
+                }
+                other => bail!("unknown artifact kind {other:?} in manifest"),
+            }
+        }
+        if neuron.is_empty() {
+            bail!("no neuron_update artifacts in {dir}");
+        }
+        Ok(XlaRuntime { client, neuron, gauss })
+    }
+
+    /// Batch sizes available for the neuron update.
+    pub fn neuron_batches(&self) -> Vec<usize> {
+        self.neuron.keys().copied().collect()
+    }
+
+    /// Smallest lowered batch size >= n.
+    fn pick_batch(map: &BTreeMap<usize, xla::PjRtLoadedExecutable>, n: usize) -> Result<usize> {
+        map.range(n..)
+            .next()
+            .map(|(&b, _)| b)
+            .ok_or_else(|| anyhow!("no artifact batch >= {n} (have {:?})", map.keys()))
+    }
+
+    /// Execute one fused neuron-update step. All input slices length n;
+    /// the batch is zero-padded to the next lowered size.
+    #[allow(clippy::too_many_arguments)]
+    pub fn neuron_update(
+        &self,
+        v: &[f32],
+        u: &[f32],
+        ca: &[f32],
+        z_ax: &[f32],
+        z_de: &[f32],
+        z_di: &[f32],
+        i_syn: &[f32],
+        noise: &[f32],
+        params: &[f32; NUM_PARAMS],
+    ) -> Result<NeuronOutputs> {
+        let n = v.len();
+        let batch = Self::pick_batch(&self.neuron, n)?;
+        let exe = &self.neuron[&batch];
+
+        let pad = |xs: &[f32]| -> xla::Literal {
+            if xs.len() == batch {
+                xla::Literal::vec1(xs)
+            } else {
+                let mut padded = Vec::with_capacity(batch);
+                padded.extend_from_slice(xs);
+                padded.resize(batch, 0.0);
+                xla::Literal::vec1(&padded)
+            }
+        };
+        let inputs = [
+            pad(v),
+            pad(u),
+            pad(ca),
+            pad(z_ax),
+            pad(z_de),
+            pad(z_di),
+            pad(i_syn),
+            pad(noise),
+            xla::Literal::vec1(&params[..]),
+        ];
+        let result = exe
+            .execute::<xla::Literal>(&inputs)
+            .map_err(|e| anyhow!("neuron_update execute: {e}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("neuron_update readback: {e}"))?;
+        let outs = result.to_tuple().map_err(|e| anyhow!("neuron_update tuple: {e}"))?;
+        if outs.len() != 7 {
+            bail!("expected 7 outputs, got {}", outs.len());
+        }
+        let mut vecs: Vec<Vec<f32>> = Vec::with_capacity(7);
+        for o in outs {
+            let mut xs = o.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e}"))?;
+            xs.truncate(n);
+            vecs.push(xs);
+        }
+        let fired = vecs.pop().unwrap();
+        let z_di = vecs.pop().unwrap();
+        let z_de = vecs.pop().unwrap();
+        let z_ax = vecs.pop().unwrap();
+        let ca = vecs.pop().unwrap();
+        let u = vecs.pop().unwrap();
+        let v = vecs.pop().unwrap();
+        Ok(NeuronOutputs { v, u, ca, z_ax, z_de, z_di, fired })
+    }
+
+    /// Execute one Gaussian probability row over `tx.len()` candidates
+    /// (zero-padded; padding has vacancy 0 so its probability is 0).
+    pub fn gauss_probs(
+        &self,
+        src_pos: [f32; 3],
+        sigma: f32,
+        tx: &[f32],
+        ty: &[f32],
+        tz: &[f32],
+        vac: &[f32],
+    ) -> Result<Vec<f32>> {
+        let n = tx.len();
+        let batch = Self::pick_batch(&self.gauss, n)?;
+        let exe = &self.gauss[&batch];
+        let pad = |xs: &[f32]| {
+            let mut padded = Vec::with_capacity(batch);
+            padded.extend_from_slice(xs);
+            padded.resize(batch, 0.0);
+            xla::Literal::vec1(&padded)
+        };
+        let inputs = [
+            xla::Literal::vec1(&src_pos[..]),
+            xla::Literal::vec1(&[sigma][..]),
+            pad(tx),
+            pad(ty),
+            pad(tz),
+            pad(vac),
+        ];
+        let result = exe
+            .execute::<xla::Literal>(&inputs)
+            .map_err(|e| anyhow!("gauss_probs execute: {e}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("gauss_probs readback: {e}"))?;
+        let out = result.to_tuple1().map_err(|e| anyhow!("gauss_probs tuple: {e}"))?;
+        let mut xs = out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e}"))?;
+        xs.truncate(n);
+        Ok(xs)
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}

@@ -1,0 +1,142 @@
+//! XLA executor service: one dedicated thread owns the (non-`Send`)
+//! PJRT client; rank threads submit work through a cloneable handle.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, Result};
+
+use super::{NeuronOutputs, XlaRuntime};
+use crate::neuron::params::NUM_PARAMS;
+
+enum Request {
+    NeuronUpdate {
+        inputs: Box<NeuronInputs>,
+        reply: mpsc::Sender<Result<NeuronOutputs>>,
+    },
+    GaussProbs {
+        src_pos: [f32; 3],
+        sigma: f32,
+        tx: Vec<f32>,
+        ty: Vec<f32>,
+        tz: Vec<f32>,
+        vac: Vec<f32>,
+        reply: mpsc::Sender<Result<Vec<f32>>>,
+    },
+    Batches {
+        reply: mpsc::Sender<Vec<usize>>,
+    },
+    Shutdown,
+}
+
+pub struct NeuronInputs {
+    pub v: Vec<f32>,
+    pub u: Vec<f32>,
+    pub ca: Vec<f32>,
+    pub z_ax: Vec<f32>,
+    pub z_de: Vec<f32>,
+    pub z_di: Vec<f32>,
+    pub i_syn: Vec<f32>,
+    pub noise: Vec<f32>,
+    pub params: [f32; NUM_PARAMS],
+}
+
+/// Cloneable, `Send` handle to the XLA service thread.
+#[derive(Clone)]
+pub struct XlaHandle {
+    tx: Arc<Mutex<mpsc::Sender<Request>>>,
+}
+
+impl XlaHandle {
+    /// Execute one fused neuron-update step on the service thread.
+    pub fn neuron_update(&self, inputs: NeuronInputs) -> Result<NeuronOutputs> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .lock()
+            .unwrap()
+            .send(Request::NeuronUpdate { inputs: Box::new(inputs), reply })
+            .map_err(|_| anyhow!("XLA service is gone"))?;
+        rx.recv().map_err(|_| anyhow!("XLA service dropped the reply"))?
+    }
+
+    /// Execute one Gaussian probability row on the service thread.
+    pub fn gauss_probs(
+        &self,
+        src_pos: [f32; 3],
+        sigma: f32,
+        tx_: Vec<f32>,
+        ty: Vec<f32>,
+        tz: Vec<f32>,
+        vac: Vec<f32>,
+    ) -> Result<Vec<f32>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .lock()
+            .unwrap()
+            .send(Request::GaussProbs { src_pos, sigma, tx: tx_, ty, tz, vac, reply })
+            .map_err(|_| anyhow!("XLA service is gone"))?;
+        rx.recv().map_err(|_| anyhow!("XLA service dropped the reply"))?
+    }
+
+    /// Batch sizes the loaded neuron-update artifacts cover.
+    pub fn neuron_batches(&self) -> Result<Vec<usize>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .lock()
+            .unwrap()
+            .send(Request::Batches { reply })
+            .map_err(|_| anyhow!("XLA service is gone"))?;
+        rx.recv().map_err(|_| anyhow!("XLA service dropped the reply"))
+    }
+
+    /// Ask the service thread to exit (idempotent; also happens when the
+    /// last handle is dropped and the channel closes).
+    pub fn shutdown(&self) {
+        let _ = self.tx.lock().unwrap().send(Request::Shutdown);
+    }
+}
+
+/// Load artifacts from `dir`, compile them on a fresh service thread,
+/// and return a handle. Fails fast if loading/compilation fails.
+pub fn spawn_service(dir: &str) -> Result<XlaHandle> {
+    let (tx, rx) = mpsc::channel::<Request>();
+    let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+    let dir = dir.to_string();
+    std::thread::Builder::new()
+        .name("xla-service".into())
+        .spawn(move || {
+            let runtime = match XlaRuntime::load(&dir) {
+                Ok(rt) => {
+                    let _ = ready_tx.send(Ok(()));
+                    rt
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e));
+                    return;
+                }
+            };
+            while let Ok(req) = rx.recv() {
+                match req {
+                    Request::NeuronUpdate { inputs, reply } => {
+                        let i = &*inputs;
+                        let out = runtime.neuron_update(
+                            &i.v, &i.u, &i.ca, &i.z_ax, &i.z_de, &i.z_di, &i.i_syn,
+                            &i.noise, &i.params,
+                        );
+                        let _ = reply.send(out);
+                    }
+                    Request::GaussProbs { src_pos, sigma, tx, ty, tz, vac, reply } => {
+                        let _ =
+                            reply.send(runtime.gauss_probs(src_pos, sigma, &tx, &ty, &tz, &vac));
+                    }
+                    Request::Batches { reply } => {
+                        let _ = reply.send(runtime.neuron_batches());
+                    }
+                    Request::Shutdown => break,
+                }
+            }
+        })
+        .expect("spawning xla-service thread");
+    ready_rx.recv().map_err(|_| anyhow!("XLA service died during startup"))??;
+    Ok(XlaHandle { tx: Arc::new(Mutex::new(tx)) })
+}

@@ -1,0 +1,200 @@
+//! New spike transmission: firing-*frequency* exchange every Δ steps +
+//! PRNG reconstruction (paper §IV-B).
+//!
+//! At every epoch boundary each rank computes, for each local neuron
+//! with remote out-partners, the firing frequency over the elapsed epoch
+//! (spikes / Δ) and sends (id, frequency) records to the partner ranks.
+//! In between, a receiving rank decides per remote in-edge per step with
+//! probability = frequency whether the sender spiked. Spikes lose exact
+//! timing across ranks — the approximation §V-D quantifies — but the
+//! number of synchronization points drops by Δ and transfer volume
+//! becomes independent of the firing rate.
+
+use crate::comm::{exchange, ThreadComm};
+use crate::neuron::Population;
+use crate::plasticity::SynapseStore;
+use crate::util::wire::{get_f32, get_u64, put_f32, put_u64, Wire};
+use crate::util::Rng;
+
+/// (neuron id, firing frequency) record — 12 B.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FreqRecord {
+    pub id: u64,
+    pub freq: f32,
+}
+
+impl Wire for FreqRecord {
+    const SIZE: usize = 12;
+    fn write(&self, out: &mut Vec<u8>) {
+        put_u64(out, self.id);
+        put_f32(out, self.freq);
+    }
+    fn read(buf: &[u8]) -> Self {
+        FreqRecord { id: get_u64(buf, 0), freq: get_f32(buf, 4 + 4) }
+    }
+}
+
+/// State of the new algorithm on one rank.
+pub struct FrequencyExchange {
+    /// Epoch length Δ (paper: 100 — every connectivity update).
+    pub delta: usize,
+    /// Dense frequency table indexed by global neuron id (only entries
+    /// for remote in-partners are ever read; dense indexing keeps the
+    /// per-lookup cost at one load — see EXPERIMENTS.md §Perf).
+    freqs: Vec<f32>,
+    /// PRNG for spike reconstruction.
+    rng: Rng,
+    dest_flags: Vec<bool>,
+}
+
+impl FrequencyExchange {
+    pub fn new(delta: usize, total_neurons: usize, rng: Rng) -> Self {
+        FrequencyExchange {
+            delta,
+            freqs: vec![0.0; total_neurons],
+            rng,
+            dest_flags: Vec::new(),
+        }
+    }
+
+    /// Run at epoch boundaries (`step % delta == 0`): exchange the
+    /// frequencies accumulated over the previous epoch and reset the
+    /// per-neuron spike counters. No-op on other steps — and crucially,
+    /// no synchronization on other steps either.
+    pub fn maybe_exchange(
+        &mut self,
+        comm: &ThreadComm,
+        pop: &mut Population,
+        store: &SynapseStore,
+        neurons_per_rank: u64,
+        step: usize,
+    ) -> bool {
+        if step % self.delta != 0 {
+            return false;
+        }
+        let size = comm.size();
+        self.dest_flags.resize(size, false);
+        let mut sends: Vec<Vec<FreqRecord>> = vec![Vec::new(); size];
+        for local in 0..pop.len() {
+            let spikes = pop.epoch_spikes[local];
+            pop.epoch_spikes[local] = 0;
+            if store.out_edges[local].is_empty() {
+                continue;
+            }
+            self.dest_flags.iter_mut().for_each(|f| *f = false);
+            for &tgt in &store.out_edges[local] {
+                self.dest_flags[(tgt / neurons_per_rank) as usize] = true;
+            }
+            let rec = FreqRecord {
+                id: pop.global_id(local),
+                freq: spikes as f32 / self.delta as f32,
+            };
+            for (rank, &flagged) in self.dest_flags.iter().enumerate() {
+                if flagged && rank != comm.rank() {
+                    sends[rank].push(rec);
+                }
+            }
+        }
+        let incoming = exchange(comm, sends);
+        for batch in incoming {
+            for rec in batch {
+                self.freqs[rec.id as usize] = rec.freq;
+            }
+        }
+        true
+    }
+
+    /// Reconstruct: did remote neuron `id` spike this step? One PRNG
+    /// draw against its last known frequency (paper Fig. 5, "PRNG").
+    #[inline]
+    pub fn spiked(&mut self, id: u64) -> bool {
+        let f = self.freqs[id as usize];
+        f > 0.0 && self.rng.bernoulli(f as f64)
+    }
+
+    /// Last received frequency of a neuron (tests/inspection).
+    pub fn freq_of(&self, id: u64) -> f32 {
+        self.freqs[id as usize]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::run_ranks;
+    use crate::config::SimConfig;
+    use crate::util::Vec3;
+
+    fn make_pop(rank: usize, n: usize) -> Population {
+        let cfg = SimConfig { neurons_per_rank: n, ..SimConfig::default() };
+        let mut rng = Rng::new(4);
+        Population::init(&cfg, rank, Vec3::ZERO, Vec3::splat(10.0), &mut rng)
+    }
+
+    #[test]
+    fn record_is_12_bytes() {
+        assert_eq!(FreqRecord::SIZE, 12);
+        let r = FreqRecord { id: 77, freq: 0.25 };
+        let mut buf = Vec::new();
+        r.write(&mut buf);
+        assert_eq!(buf.len(), 12);
+        assert_eq!(FreqRecord::read(&buf), r);
+    }
+
+    #[test]
+    fn frequencies_cross_ranks_at_epoch_boundaries_only() {
+        let results = run_ranks(2, |comm| {
+            let rank = comm.rank();
+            let mut pop = make_pop(rank, 2);
+            let mut store = SynapseStore::new(2);
+            if rank == 0 {
+                store.add_out(0, 2); // to rank 1
+                pop.epoch_spikes[0] = 10; // fired 10 times this epoch
+            }
+            let mut ex = FrequencyExchange::new(100, 4, Rng::new(1));
+            // Mid-epoch: nothing happens, no synchronization.
+            assert!(!ex.maybe_exchange(&comm, &mut pop, &store, 2, 50));
+            assert_eq!(comm.counters().snapshot().collectives, 0);
+            // Epoch boundary: records move.
+            assert!(ex.maybe_exchange(&comm, &mut pop, &store, 2, 100));
+            (ex, pop, comm.counters().snapshot())
+        });
+        let (ex1, _, _) = &results[1];
+        assert!((ex1.freq_of(0) - 0.1).abs() < 1e-6);
+        // Sender reset its epoch counter.
+        assert_eq!(results[0].1.epoch_spikes[0], 0);
+        // 12 bytes went rank0 -> rank1.
+        assert_eq!(results[0].2.bytes_sent, 12);
+        assert_eq!(results[1].2.bytes_sent, 0);
+    }
+
+    #[test]
+    fn reconstruction_matches_frequency_statistically() {
+        let mut ex = FrequencyExchange::new(100, 4, Rng::new(7));
+        ex.freqs[2] = 0.3;
+        let n = 100_000;
+        let hits = (0..n).filter(|_| ex.spiked(2)).count();
+        let rate = hits as f64 / n as f64;
+        assert!((rate - 0.3).abs() < 0.01, "rate {rate}");
+    }
+
+    #[test]
+    fn zero_frequency_never_spikes() {
+        let mut ex = FrequencyExchange::new(100, 4, Rng::new(8));
+        assert!((0..1000).all(|_| !ex.spiked(1)));
+    }
+
+    #[test]
+    fn neurons_without_partners_send_nothing() {
+        let results = run_ranks(2, |comm| {
+            let mut pop = make_pop(comm.rank(), 4);
+            pop.epoch_spikes.iter_mut().for_each(|s| *s = 50);
+            let store = SynapseStore::new(4); // no synapses at all
+            let mut ex = FrequencyExchange::new(10, 8, Rng::new(2));
+            ex.maybe_exchange(&comm, &mut pop, &store, 4, 0);
+            comm.counters().snapshot().bytes_sent
+        });
+        assert_eq!(results[0], 0);
+        assert_eq!(results[1], 0);
+    }
+}

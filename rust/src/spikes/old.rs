@@ -1,0 +1,146 @@
+//! Old spike transmission: per-step all-to-all of fired neuron ids,
+//! sorted on receipt, binary-searched per remote in-partner
+//! (paper §III-A0a / §V-B0b).
+
+use crate::comm::{exchange, ThreadComm};
+use crate::neuron::Population;
+use crate::plasticity::SynapseStore;
+
+/// State of the old algorithm on one rank: the sorted id lists received
+/// this step, indexed by source rank.
+pub struct IdExchange {
+    sorted: Vec<Vec<u64>>,
+    /// Scratch: which destination ranks each local neuron projects to
+    /// (rebuilt lazily each step from out_edges).
+    dest_flags: Vec<bool>,
+}
+
+impl IdExchange {
+    pub fn new(size: usize) -> Self {
+        IdExchange { sorted: vec![Vec::new(); size], dest_flags: vec![false; size] }
+    }
+
+    /// One step: send the ids of local neurons that fired to every rank
+    /// hosting at least one of their out-partners; sort what arrives.
+    /// This happens EVERY simulation step — the synchronization the new
+    /// algorithm amortizes away.
+    pub fn exchange(
+        &mut self,
+        comm: &ThreadComm,
+        pop: &Population,
+        store: &SynapseStore,
+        neurons_per_rank: u64,
+    ) {
+        let size = comm.size();
+        let mut sends: Vec<Vec<u64>> = vec![Vec::new(); size];
+        for local in 0..pop.len() {
+            if !pop.fired[local] {
+                continue;
+            }
+            self.dest_flags.iter_mut().for_each(|f| *f = false);
+            for &tgt in &store.out_edges[local] {
+                self.dest_flags[(tgt / neurons_per_rank) as usize] = true;
+            }
+            let id = pop.global_id(local);
+            for (rank, &flagged) in self.dest_flags.iter().enumerate() {
+                if flagged && rank != comm.rank() {
+                    sends[rank].push(id);
+                }
+            }
+        }
+        self.sorted = exchange(comm, sends);
+        for list in self.sorted.iter_mut() {
+            list.sort_unstable();
+        }
+    }
+
+    /// Did remote neuron `id` (on `src_rank`) fire this step?
+    /// Binary search over the received list (paper Fig. 5, "search").
+    #[inline]
+    pub fn spiked(&self, src_rank: usize, id: u64) -> bool {
+        self.sorted[src_rank].binary_search(&id).is_ok()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::run_ranks;
+    use crate::config::SimConfig;
+    use crate::util::{Rng, Vec3};
+
+    fn make_pop(rank: usize, n: usize) -> Population {
+        let cfg = SimConfig { neurons_per_rank: n, ..SimConfig::default() };
+        let mut rng = Rng::new(9);
+        Population::init(&cfg, rank, Vec3::ZERO, Vec3::splat(10.0), &mut rng)
+    }
+
+    #[test]
+    fn fired_ids_reach_partner_ranks_only() {
+        let results = run_ranks(3, |comm| {
+            let rank = comm.rank();
+            let mut pop = make_pop(rank, 2);
+            let mut store = SynapseStore::new(2);
+            // Rank 0's neuron 0 projects to rank 1 (id 2) only.
+            if rank == 0 {
+                store.add_out(0, 2);
+                pop.fired[0] = true;
+                pop.fired[1] = true; // fired but no out-partners: not sent
+            }
+            let mut ex = IdExchange::new(3);
+            ex.exchange(&comm, &pop, &store, 2);
+            let sent = comm.counters().snapshot().bytes_sent;
+            (ex, sent)
+        });
+        // Rank 1 sees rank 0's neuron 0.
+        assert!(results[1].0.spiked(0, 0));
+        assert!(!results[1].0.spiked(0, 1));
+        // Rank 2 got nothing.
+        assert!(!results[2].0.spiked(0, 0));
+        // Rank 0 sent exactly one 8-byte id.
+        assert_eq!(results[0].1, 8);
+    }
+
+    #[test]
+    fn lists_are_sorted_for_binary_search() {
+        let results = run_ranks(2, |comm| {
+            let rank = comm.rank();
+            let mut pop = make_pop(rank, 8);
+            let mut store = SynapseStore::new(8);
+            if rank == 1 {
+                // Fire several, all projecting to rank 0's neuron 0.
+                for i in [5usize, 1, 7, 3] {
+                    store.add_out(i, 0);
+                    pop.fired[i] = true;
+                }
+            }
+            let mut ex = IdExchange::new(2);
+            ex.exchange(&comm, &pop, &store, 8);
+            ex
+        });
+        let ex = &results[0];
+        for id in [9u64, 11, 13, 15] {
+            assert!(ex.spiked(1, id), "id {id}");
+        }
+        for id in [8u64, 10, 12, 14] {
+            assert!(!ex.spiked(1, id));
+        }
+    }
+
+    #[test]
+    fn empty_step_exchanges_nothing_but_still_synchronizes() {
+        let results = run_ranks(2, |comm| {
+            let pop = make_pop(comm.rank(), 2);
+            let store = SynapseStore::new(2);
+            let mut ex = IdExchange::new(2);
+            ex.exchange(&comm, &pop, &store, 2);
+            comm.counters().snapshot()
+        });
+        for snap in results {
+            assert_eq!(snap.bytes_sent, 0);
+            // The collective still happened (the old algorithm's cost:
+            // every rank synchronizes even with zero spikes).
+            assert_eq!(snap.collectives, 1);
+        }
+    }
+}

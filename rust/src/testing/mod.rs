@@ -1,0 +1,61 @@
+//! Mini property-testing harness.
+//!
+//! The offline crate set has no `proptest`, so this provides the piece we
+//! actually need: run a property over many PRNG-generated cases, and on
+//! failure report the case index and seed so the exact case can be
+//! replayed (`forall_seeded` with the printed seed).
+
+use crate::util::Rng;
+
+/// Run `prop` over `cases` random inputs drawn by `gen`. Panics with the
+/// failing seed + case description on the first violation.
+pub fn forall<T: std::fmt::Debug>(
+    name: &str,
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    forall_seeded(name, 0xDEFA17, cases, &mut gen, &mut prop);
+}
+
+/// Like `forall` with an explicit base seed (to replay a failure).
+pub fn forall_seeded<T: std::fmt::Debug>(
+    name: &str,
+    base_seed: u64,
+    cases: usize,
+    gen: &mut impl FnMut(&mut Rng) -> T,
+    prop: &mut impl FnMut(&T) -> Result<(), String>,
+) {
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64);
+        let mut rng = Rng::new(seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property {name:?} failed at case {case} (seed {seed}):\n  {msg}\n  input: {input:?}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_when_property_holds() {
+        forall("u64 is even after doubling", 100, |rng| rng.next_u64() / 2 * 2, |&x| {
+            if x % 2 == 0 {
+                Ok(())
+            } else {
+                Err("odd".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property \"always fails\"")]
+    fn reports_failure_with_seed() {
+        forall("always fails", 10, |rng| rng.next_u64(), |_| Err("nope".into()));
+    }
+}

@@ -1,0 +1,55 @@
+//! Small shared substrates: PRNG, 3-D vectors, Morton curve, wire codec.
+
+pub mod morton;
+pub mod rng;
+pub mod vec3;
+pub mod wire;
+
+pub use rng::Rng;
+pub use vec3::Vec3;
+
+/// Round `n` up to the next multiple of `m`.
+#[inline]
+pub fn round_up(n: usize, m: usize) -> usize {
+    debug_assert!(m > 0);
+    n.div_ceil(m) * m
+}
+
+/// Human-readable byte count using the paper's convention (1 KB = 1024 B,
+/// digits after the decimal point are cut — Table I/II caption). The
+/// paper's tables only promote to the next unit at >= 10 of it (they
+/// print "9908 KB" but "12 MB"), which we follow.
+pub fn format_bytes(bytes: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KB", "MB", "GB", "TB"];
+    let mut v = bytes;
+    let mut unit = 0;
+    while v >= 10 * 1024 && unit < UNITS.len() - 1 {
+        v /= 1024;
+        unit += 1;
+    }
+    format!("{} {}", v, UNITS[unit])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_up_cases() {
+        assert_eq!(round_up(1, 4), 4);
+        assert_eq!(round_up(4, 4), 4);
+        assert_eq!(round_up(5, 4), 8);
+    }
+
+    #[test]
+    fn format_bytes_paper_convention() {
+        assert_eq!(format_bytes(86 * 1024), "86 KB");
+        assert_eq!(format_bytes(1273 * 1024), "1273 KB");
+        assert_eq!(format_bytes(9908 * 1024), "9908 KB");
+        assert_eq!(format_bytes(12 * 1024 * 1024), "12 MB");
+        assert_eq!(format_bytes(1023), "1023 B");
+        assert_eq!(format_bytes(5075 * 1024), "5075 KB");
+        // digits are cut, not rounded
+        assert_eq!(format_bytes(11 * 1024 * 1024 - 1), "10 MB");
+    }
+}

@@ -1,0 +1,95 @@
+//! Morton (Z-order) space-filling curve.
+//!
+//! The simulation domain is split into `8^b` subdomains indexed by the
+//! Morton curve (paper §III-B0a); each MPI rank owns 1, 2, or 4
+//! consecutive subdomains. 21 bits per axis (63-bit codes) is far beyond
+//! any branch level we use.
+
+/// Spread the low 21 bits of `v` so each bit occupies every third slot.
+#[inline]
+fn part1by2(v: u64) -> u64 {
+    let mut x = v & 0x1F_FFFF; // 21 bits
+    x = (x | (x << 32)) & 0x1F00000000FFFF;
+    x = (x | (x << 16)) & 0x1F0000FF0000FF;
+    x = (x | (x << 8)) & 0x100F00F00F00F00F;
+    x = (x | (x << 4)) & 0x10C30C30C30C30C3;
+    x = (x | (x << 2)) & 0x1249249249249249;
+    x
+}
+
+/// Inverse of `part1by2`.
+#[inline]
+fn compact1by2(v: u64) -> u64 {
+    let mut x = v & 0x1249249249249249;
+    x = (x ^ (x >> 2)) & 0x10C30C30C30C30C3;
+    x = (x ^ (x >> 4)) & 0x100F00F00F00F00F;
+    x = (x ^ (x >> 8)) & 0x1F0000FF0000FF;
+    x = (x ^ (x >> 16)) & 0x1F00000000FFFF;
+    x = (x ^ (x >> 32)) & 0x1F_FFFF;
+    x
+}
+
+/// Interleave three 21-bit cell coordinates into a Morton code.
+#[inline]
+pub fn encode(x: u64, y: u64, z: u64) -> u64 {
+    part1by2(x) | (part1by2(y) << 1) | (part1by2(z) << 2)
+}
+
+/// Recover the three cell coordinates from a Morton code.
+#[inline]
+pub fn decode(code: u64) -> (u64, u64, u64) {
+    (compact1by2(code), compact1by2(code >> 1), compact1by2(code >> 2))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_small() {
+        for x in 0..8 {
+            for y in 0..8 {
+                for z in 0..8 {
+                    assert_eq!(decode(encode(x, y, z)), (x, y, z));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip_large() {
+        let cases = [(0, 0, 0), (1, 2, 3), (0x1F_FFFF, 0x1F_FFFF, 0x1F_FFFF), (12345, 54321, 99999)];
+        for &(x, y, z) in &cases {
+            assert_eq!(decode(encode(x, y, z)), (x, y, z));
+        }
+    }
+
+    #[test]
+    fn first_octant_ordering() {
+        // Morton order of the 8 octants of a cube is exactly the child
+        // index used by the octree: bit0 = x, bit1 = y, bit2 = z.
+        assert_eq!(encode(0, 0, 0), 0);
+        assert_eq!(encode(1, 0, 0), 1);
+        assert_eq!(encode(0, 1, 0), 2);
+        assert_eq!(encode(1, 1, 0), 3);
+        assert_eq!(encode(0, 0, 1), 4);
+        assert_eq!(encode(1, 0, 1), 5);
+        assert_eq!(encode(0, 1, 1), 6);
+        assert_eq!(encode(1, 1, 1), 7);
+    }
+
+    #[test]
+    fn locality_prefix_property() {
+        // Cells sharing the same high bits of the code share an ancestor
+        // cube: codes of an 2x2x2 block differ only in the low 3 bits.
+        let base = encode(4, 6, 2);
+        for dx in 0..2u64 {
+            for dy in 0..2u64 {
+                for dz in 0..2u64 {
+                    let c = encode(4 + dx, 6 + dy, 2 + dz);
+                    assert_eq!(c >> 3, base >> 3);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,124 @@
+//! Minimal 3-D vector used for neuron positions and octree geometry.
+
+use std::ops::{Add, AddAssign, Div, Mul, Sub};
+
+#[derive(Clone, Copy, Debug, PartialEq, Default)]
+pub struct Vec3 {
+    pub x: f64,
+    pub y: f64,
+    pub z: f64,
+}
+
+impl Vec3 {
+    pub const ZERO: Vec3 = Vec3 { x: 0.0, y: 0.0, z: 0.0 };
+
+    pub fn new(x: f64, y: f64, z: f64) -> Self {
+        Self { x, y, z }
+    }
+
+    pub fn splat(v: f64) -> Self {
+        Self { x: v, y: v, z: v }
+    }
+
+    /// Squared Euclidean distance.
+    #[inline]
+    pub fn dist2(&self, other: &Vec3) -> f64 {
+        let dx = self.x - other.x;
+        let dy = self.y - other.y;
+        let dz = self.z - other.z;
+        dx * dx + dy * dy + dz * dz
+    }
+
+    #[inline]
+    pub fn dist(&self, other: &Vec3) -> f64 {
+        self.dist2(other).sqrt()
+    }
+
+    /// Componentwise minimum.
+    pub fn min(&self, other: &Vec3) -> Vec3 {
+        Vec3::new(self.x.min(other.x), self.y.min(other.y), self.z.min(other.z))
+    }
+
+    /// Componentwise maximum.
+    pub fn max(&self, other: &Vec3) -> Vec3 {
+        Vec3::new(self.x.max(other.x), self.y.max(other.y), self.z.max(other.z))
+    }
+
+    /// True if `self` lies in the half-open box [lo, hi).
+    pub fn in_box(&self, lo: &Vec3, hi: &Vec3) -> bool {
+        self.x >= lo.x
+            && self.x < hi.x
+            && self.y >= lo.y
+            && self.y < hi.y
+            && self.z >= lo.z
+            && self.z < hi.z
+    }
+}
+
+impl Add for Vec3 {
+    type Output = Vec3;
+    fn add(self, o: Vec3) -> Vec3 {
+        Vec3::new(self.x + o.x, self.y + o.y, self.z + o.z)
+    }
+}
+
+impl AddAssign for Vec3 {
+    fn add_assign(&mut self, o: Vec3) {
+        self.x += o.x;
+        self.y += o.y;
+        self.z += o.z;
+    }
+}
+
+impl Sub for Vec3 {
+    type Output = Vec3;
+    fn sub(self, o: Vec3) -> Vec3 {
+        Vec3::new(self.x - o.x, self.y - o.y, self.z - o.z)
+    }
+}
+
+impl Mul<f64> for Vec3 {
+    type Output = Vec3;
+    fn mul(self, s: f64) -> Vec3 {
+        Vec3::new(self.x * s, self.y * s, self.z * s)
+    }
+}
+
+impl Div<f64> for Vec3 {
+    type Output = Vec3;
+    fn div(self, s: f64) -> Vec3 {
+        Vec3::new(self.x / s, self.y / s, self.z / s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn distance() {
+        let a = Vec3::new(0.0, 0.0, 0.0);
+        let b = Vec3::new(3.0, 4.0, 0.0);
+        assert_eq!(a.dist2(&b), 25.0);
+        assert_eq!(a.dist(&b), 5.0);
+    }
+
+    #[test]
+    fn box_membership_half_open() {
+        let lo = Vec3::ZERO;
+        let hi = Vec3::splat(1.0);
+        assert!(Vec3::new(0.0, 0.5, 0.999).in_box(&lo, &hi));
+        assert!(!Vec3::new(1.0, 0.5, 0.5).in_box(&lo, &hi));
+        assert!(!Vec3::new(-0.1, 0.5, 0.5).in_box(&lo, &hi));
+    }
+
+    #[test]
+    fn arithmetic() {
+        let a = Vec3::new(1.0, 2.0, 3.0);
+        let b = Vec3::new(4.0, 5.0, 6.0);
+        assert_eq!(a + b, Vec3::new(5.0, 7.0, 9.0));
+        assert_eq!(b - a, Vec3::new(3.0, 3.0, 3.0));
+        assert_eq!(a * 2.0, Vec3::new(2.0, 4.0, 6.0));
+        assert_eq!(b / 2.0, Vec3::new(2.0, 2.5, 3.0));
+    }
+}

@@ -1,0 +1,137 @@
+//! Fixed-size little-endian wire encoding for inter-rank messages.
+//!
+//! The paper reports exact message sizes (old synapse request 17 B, new
+//! request 42 B, old response 1 B, new response 9 B, spike id 8 B); the
+//! byte accounting in `comm::CommCounters` counts exactly what these
+//! encoders produce, so Tables I/II are regenerated from the same
+//! accounting the paper uses.
+
+/// A message with a fixed wire size.
+pub trait Wire: Sized {
+    /// Encoded size in bytes.
+    const SIZE: usize;
+    fn write(&self, out: &mut Vec<u8>);
+    fn read(buf: &[u8]) -> Self;
+}
+
+/// Encode a slice of messages into a flat byte buffer.
+pub fn encode_all<T: Wire>(items: &[T]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(items.len() * T::SIZE);
+    for it in items {
+        it.write(&mut out);
+    }
+    out
+}
+
+/// Decode a flat byte buffer into messages.
+pub fn decode_all<T: Wire>(buf: &[u8]) -> Vec<T> {
+    assert!(buf.len() % T::SIZE == 0, "buffer not a multiple of message size");
+    buf.chunks_exact(T::SIZE).map(T::read).collect()
+}
+
+// -- primitive helpers --------------------------------------------------
+
+#[inline]
+pub fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+#[inline]
+pub fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+#[inline]
+pub fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+#[inline]
+pub fn put_f32(out: &mut Vec<u8>, v: f32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+#[inline]
+pub fn put_u8(out: &mut Vec<u8>, v: u8) {
+    out.push(v);
+}
+
+#[inline]
+pub fn get_u64(buf: &[u8], at: usize) -> u64 {
+    u64::from_le_bytes(buf[at..at + 8].try_into().unwrap())
+}
+
+#[inline]
+pub fn get_u32(buf: &[u8], at: usize) -> u32 {
+    u32::from_le_bytes(buf[at..at + 4].try_into().unwrap())
+}
+
+#[inline]
+pub fn get_f64(buf: &[u8], at: usize) -> f64 {
+    f64::from_le_bytes(buf[at..at + 8].try_into().unwrap())
+}
+
+#[inline]
+pub fn get_f32(buf: &[u8], at: usize) -> f32 {
+    f32::from_le_bytes(buf[at..at + 4].try_into().unwrap())
+}
+
+#[inline]
+pub fn get_u8(buf: &[u8], at: usize) -> u8 {
+    buf[at]
+}
+
+#[inline]
+pub fn get_i32_at(buf: &[u8], at: usize) -> i32 {
+    i32::from_le_bytes(buf[at..at + 4].try_into().unwrap())
+}
+
+#[inline]
+pub fn get_i64_at(buf: &[u8], at: usize) -> i64 {
+    i64::from_le_bytes(buf[at..at + 8].try_into().unwrap())
+}
+
+impl Wire for u64 {
+    const SIZE: usize = 8;
+    fn write(&self, out: &mut Vec<u8>) {
+        put_u64(out, *self);
+    }
+    fn read(buf: &[u8]) -> Self {
+        get_u64(buf, 0)
+    }
+}
+
+impl Wire for f32 {
+    const SIZE: usize = 4;
+    fn write(&self, out: &mut Vec<u8>) {
+        put_f32(out, *self);
+    }
+    fn read(buf: &[u8]) -> Self {
+        get_f32(buf, 0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn u64_roundtrip() {
+        let xs = vec![0u64, 1, u64::MAX, 0xDEADBEEF];
+        let buf = encode_all(&xs);
+        assert_eq!(buf.len(), 32);
+        assert_eq!(decode_all::<u64>(&buf), xs);
+    }
+
+    #[test]
+    fn f32_roundtrip() {
+        let xs = vec![0.0f32, -1.5, f32::MAX, 1e-20];
+        assert_eq!(decode_all::<f32>(&encode_all(&xs)), xs);
+    }
+
+    #[test]
+    #[should_panic]
+    fn decode_rejects_partial_messages() {
+        decode_all::<u64>(&[1, 2, 3]);
+    }
+}

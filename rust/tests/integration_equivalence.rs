@@ -1,0 +1,106 @@
+//! Distribution-level equivalence of the three target-search algorithms.
+//!
+//! The paper's correctness argument (§V-A) is that the location-aware
+//! algorithm evaluates the SAME selection distribution as the original,
+//! only with different PRNG state. We verify it empirically: over many
+//! independent formation rounds on a fixed 4-rank scenario, the
+//! distribution of chosen targets (aggregated per rank) must agree
+//! between old, new, and — for moderate θ — the direct O(n²) solution.
+
+use ilmi::comm::run_ranks;
+use ilmi::config::{ConnectivityAlg, SimConfig};
+use ilmi::coordinator::RankState;
+use ilmi::octree::DomainDecomposition;
+use ilmi::plasticity::SynapseStore;
+use ilmi::util::Rng;
+
+const RANKS: usize = 4;
+const NPR: usize = 16;
+const ROUNDS: usize = 250;
+
+/// Run `ROUNDS` independent single-search formation rounds with `alg`;
+/// return, for rank 0's neuron 0, the histogram of chosen target ranks.
+fn target_rank_histogram(alg: ConnectivityAlg, seed: u64) -> Vec<usize> {
+    let cfg = SimConfig {
+        ranks: RANKS,
+        neurons_per_rank: NPR,
+        connectivity_alg: alg,
+        theta: 0.3,
+        seed,
+        ..SimConfig::default()
+    };
+    let decomp = DomainDecomposition::new(cfg.ranks, cfg.domain_size);
+    let results = run_ranks(cfg.ranks, |comm| {
+        let mut state = RankState::init(&cfg, &decomp, &comm);
+        // Freeze a scenario: everyone offers dendrites, only rank 0's
+        // neuron 0 searches (one vacant excitatory axonal element).
+        for i in 0..NPR {
+            state.pop.z_ax[i] = 0.0;
+            state.pop.z_den_exc[i] = 4.0;
+            state.pop.z_den_inh[i] = 4.0;
+        }
+        if comm.rank() == 0 {
+            state.pop.z_ax[0] = 1.0;
+            state.pop.is_excitatory[0] = true;
+        }
+        let mut hist = vec![0usize; RANKS];
+        for round in 0..ROUNDS {
+            // Fresh store each round -> i.i.d. samples of the first choice.
+            state.store = SynapseStore::new(NPR);
+            state.rng_conn = Rng::new(seed ^ (round as u64 * 7919));
+            state.plasticity_phase(&cfg, &decomp, &comm);
+            if comm.rank() == 0 {
+                match state.store.out_edges[0].first() {
+                    Some(&tgt) => hist[(tgt as usize) / NPR] += 1,
+                    None => { /* failed search this round */ }
+                }
+            }
+        }
+        hist
+    });
+    results.into_iter().next().unwrap()
+}
+
+fn total_variation(a: &[usize], b: &[usize]) -> f64 {
+    let sa: f64 = a.iter().sum::<usize>() as f64;
+    let sb: f64 = b.iter().sum::<usize>() as f64;
+    assert!(sa > 0.0 && sb > 0.0);
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| (x as f64 / sa - y as f64 / sb).abs())
+        .sum::<f64>()
+        / 2.0
+}
+
+#[test]
+fn new_algorithm_samples_same_distribution_as_old() {
+    let old = target_rank_histogram(ConnectivityAlg::OldRma, 42);
+    let new = target_rank_histogram(ConnectivityAlg::NewLocationAware, 42);
+    let tv = total_variation(&old, &new);
+    assert!(
+        tv < 0.12,
+        "old {old:?} vs new {new:?}: total variation {tv:.3} too large"
+    );
+}
+
+#[test]
+fn barnes_hut_approximates_direct_distribution() {
+    let new = target_rank_histogram(ConnectivityAlg::NewLocationAware, 43);
+    let direct = target_rank_histogram(ConnectivityAlg::Direct, 43);
+    let tv = total_variation(&new, &direct);
+    // theta = 0.3 introduces approximation error; the paper accepts it
+    // as qualitatively equivalent.
+    assert!(
+        tv < 0.15,
+        "new {new:?} vs direct {direct:?}: total variation {tv:.3} too large"
+    );
+}
+
+#[test]
+fn searches_almost_always_succeed_in_dense_scenario() {
+    // With 63 candidate neurons offering 4 elements each, a single
+    // search should essentially never fail.
+    let hist = target_rank_histogram(ConnectivityAlg::NewLocationAware, 44);
+    let found: usize = hist.iter().sum();
+    assert!(found >= ROUNDS * 95 / 100, "only {found}/{ROUNDS} searches succeeded");
+}

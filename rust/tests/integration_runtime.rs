@@ -1,0 +1,179 @@
+//! Cross-layer integration: the AOT-lowered JAX/Pallas artifacts executed
+//! through PJRT must match the native Rust mirror bit-closely, and a full
+//! simulation on the XLA backend must agree with the native backend.
+//!
+//! Requires `make artifacts` (the Makefile test target guarantees it).
+
+use ilmi::config::{Backend, SimConfig};
+use ilmi::coordinator::{run_simulation, run_simulation_with_xla};
+use ilmi::neuron::{izhikevich, NeuronParams, Population};
+use ilmi::runtime::{spawn_service, NeuronInputs, XlaHandle};
+use ilmi::util::{Rng, Vec3};
+
+fn service() -> XlaHandle {
+    spawn_service("artifacts").expect("run `make artifacts` before cargo test")
+}
+
+fn random_pop(n: usize, seed: u64) -> Population {
+    let cfg = SimConfig { neurons_per_rank: n, ..SimConfig::default() };
+    let mut rng = Rng::new(seed);
+    let mut pop = Population::init(&cfg, 0, Vec3::ZERO, Vec3::splat(100.0), &mut rng);
+    for i in 0..n {
+        pop.v[i] = rng.uniform(-80.0, 25.0) as f32;
+        pop.u[i] = rng.uniform(-20.0, 10.0) as f32;
+        pop.ca[i] = rng.uniform(0.0, 1.2) as f32;
+        pop.i_syn[i] = rng.uniform(-3.0, 3.0) as f32;
+        pop.noise[i] = rng.normal_ms(5.0, 1.0) as f32;
+    }
+    pop
+}
+
+fn assert_close(name: &str, a: &[f32], b: &[f32], tol: f32) {
+    assert_eq!(a.len(), b.len());
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        let scale = x.abs().max(y.abs()).max(1.0);
+        assert!(
+            (x - y).abs() <= tol * scale,
+            "{name}[{i}]: native {x} vs xla {y}"
+        );
+    }
+}
+
+#[test]
+fn xla_neuron_update_matches_native_mirror() {
+    let handle = service();
+    let params = NeuronParams::default();
+    for seed in [1u64, 2, 3] {
+        let mut native = random_pop(300, seed); // padded to batch 1024
+        let inputs = NeuronInputs {
+            v: native.v.clone(),
+            u: native.u.clone(),
+            ca: native.ca.clone(),
+            z_ax: native.z_ax.clone(),
+            z_de: native.z_den_exc.clone(),
+            z_di: native.z_den_inh.clone(),
+            i_syn: native.i_syn.clone(),
+            noise: native.noise.clone(),
+            params: params.to_vec(),
+        };
+        let out = handle.neuron_update(inputs).unwrap();
+        izhikevich::step(&mut native, &params);
+        assert_close("v", &native.v, &out.v, 1e-4);
+        assert_close("u", &native.u, &out.u, 1e-4);
+        assert_close("ca", &native.ca, &out.ca, 1e-4);
+        assert_close("z_ax", &native.z_ax, &out.z_ax, 1e-4);
+        assert_close("z_de", &native.z_den_exc, &out.z_de, 1e-4);
+        assert_close("z_di", &native.z_den_inh, &out.z_di, 1e-4);
+        let native_fired: Vec<f32> =
+            native.fired.iter().map(|&f| if f { 1.0 } else { 0.0 }).collect();
+        assert_eq!(native_fired, out.fired, "spike decisions must agree exactly");
+    }
+    handle.shutdown();
+}
+
+#[test]
+fn xla_neuron_update_iterated_stays_in_agreement() {
+    // 50 chained steps: f32 drift must stay bounded and spike decisions
+    // aligned (the two backends run the same f32 ops).
+    let handle = service();
+    let params = NeuronParams::default();
+    let mut native = random_pop(256, 7);
+    let mut xla = native.clone();
+    for step in 0..50 {
+        // Shared noise for both backends.
+        let mut rng = Rng::new(1000 + step);
+        for x in native.noise.iter_mut() {
+            *x = rng.normal_ms(5.0, 1.0) as f32;
+        }
+        xla.noise.copy_from_slice(&native.noise);
+
+        let out = handle
+            .neuron_update(NeuronInputs {
+                v: xla.v.clone(),
+                u: xla.u.clone(),
+                ca: xla.ca.clone(),
+                z_ax: xla.z_ax.clone(),
+                z_de: xla.z_den_exc.clone(),
+                z_di: xla.z_den_inh.clone(),
+                i_syn: xla.i_syn.clone(),
+                noise: xla.noise.clone(),
+                params: params.to_vec(),
+            })
+            .unwrap();
+        xla.v = out.v;
+        xla.u = out.u;
+        xla.ca = out.ca;
+        xla.z_ax = out.z_ax;
+        xla.z_den_exc = out.z_de;
+        xla.z_den_inh = out.z_di;
+        for (i, &f) in out.fired.iter().enumerate() {
+            xla.fired[i] = f > 0.5;
+        }
+        izhikevich::step(&mut native, &params);
+        let agree =
+            native.fired.iter().zip(&xla.fired).filter(|(a, b)| a == b).count();
+        assert!(
+            agree as f64 / native.fired.len() as f64 > 0.99,
+            "step {step}: spike agreement dropped to {agree}/256"
+        );
+    }
+    assert_close("ca after 50 steps", &native.ca, &xla.ca, 1e-2);
+    handle.shutdown();
+}
+
+#[test]
+fn xla_gauss_probs_matches_native_kernel() {
+    let handle = service();
+    let mut rng = Rng::new(11);
+    let n = 777; // padded to 1024
+    let tx: Vec<f32> = (0..n).map(|_| rng.uniform(0.0, 1000.0) as f32).collect();
+    let ty: Vec<f32> = (0..n).map(|_| rng.uniform(0.0, 1000.0) as f32).collect();
+    let tz: Vec<f32> = (0..n).map(|_| rng.uniform(0.0, 1000.0) as f32).collect();
+    let vac: Vec<f32> = (0..n).map(|_| rng.next_below(4) as f32).collect();
+    let src = [500.0f32, 500.0, 500.0];
+    let sigma = 750.0f32;
+    let got = handle.gauss_probs(src, sigma, tx.clone(), ty.clone(), tz.clone(), vac.clone()).unwrap();
+    assert_eq!(got.len(), n);
+    for i in 0..n {
+        let d2 = (tx[i] - src[0]).powi(2) + (ty[i] - src[1]).powi(2) + (tz[i] - src[2]).powi(2);
+        let want = ilmi::barnes_hut::kernel_weight(vac[i], d2 as f64, sigma as f64) as f32;
+        let scale = want.abs().max(1e-6);
+        assert!((got[i] - want).abs() <= 1e-4 * scale + 1e-7, "probs[{i}]: {} vs {want}", got[i]);
+    }
+    handle.shutdown();
+}
+
+#[test]
+fn full_simulation_on_xla_backend_matches_native() {
+    // The end-to-end cross-check: same config, same seeds, two backends.
+    // Spike decisions are bit-aligned per step (verified above), so the
+    // network trajectories should match statistically.
+    let cfg_native = SimConfig {
+        ranks: 2,
+        neurons_per_rank: 48,
+        steps: 300,
+        plasticity_interval: 100,
+        delta: 100,
+        ..SimConfig::default()
+    };
+    let mut cfg_xla = cfg_native.clone();
+    cfg_xla.backend = Backend::Xla;
+
+    let native = run_simulation(&cfg_native).unwrap();
+    let handle = service();
+    let xla = run_simulation_with_xla(&cfg_xla, Some(handle.clone())).unwrap();
+    handle.shutdown();
+
+    let (sn, sx) = (native.total_synapses() as f64, xla.total_synapses() as f64);
+    assert!(sx > 0.0);
+    assert!(
+        (sn - sx).abs() / sn.max(sx) < 0.2,
+        "backends diverge: native {sn} synapses vs xla {sx}"
+    );
+    assert!(
+        (native.mean_calcium() - xla.mean_calcium()).abs() < 0.05,
+        "calcium: native {:.3} vs xla {:.3}",
+        native.mean_calcium(),
+        xla.mean_calcium()
+    );
+}

@@ -1,0 +1,360 @@
+//! Property-based tests over the simulator's core invariants
+//! (mini-harness in `ilmi::testing`; `proptest` is not in the offline
+//! crate set — see DESIGN.md §6).
+
+use ilmi::barnes_hut::select::{select_local, SelectParams, SelectScratch};
+use ilmi::barnes_hut::{accept_proposals, Proposal};
+use ilmi::comm::run_ranks;
+use ilmi::config::SimConfig;
+use ilmi::neuron::Population;
+use ilmi::octree::{DomainDecomposition, ElementKind, Octree, NO_NEURON};
+use ilmi::plasticity::{run_deletion_phase, SynapseStore};
+use ilmi::testing::forall;
+use ilmi::util::{morton, Rng, Vec3};
+
+fn random_positions(rng: &mut Rng, n: usize, size: f64) -> Vec<Vec3> {
+    (0..n)
+        .map(|_| {
+            Vec3::new(rng.uniform(0.0, size), rng.uniform(0.0, size), rng.uniform(0.0, size))
+        })
+        .collect()
+}
+
+#[test]
+fn prop_morton_roundtrip() {
+    forall(
+        "morton encode/decode roundtrip",
+        500,
+        |rng| {
+            (
+                rng.next_u64() & 0x1F_FFFF,
+                rng.next_u64() & 0x1F_FFFF,
+                rng.next_u64() & 0x1F_FFFF,
+            )
+        },
+        |&(x, y, z)| {
+            if morton::decode(morton::encode(x, y, z)) == (x, y, z) {
+                Ok(())
+            } else {
+                Err("roundtrip mismatch".into())
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_octree_aggregation_conserves_vacancy() {
+    forall(
+        "octree root vacancy == sum of leaf vacancies",
+        40,
+        |rng| {
+            let n = 1 + rng.next_below(200);
+            let positions = random_positions(rng, n, 100.0);
+            let vac_exc: Vec<f32> = (0..n).map(|_| rng.next_below(4) as f32).collect();
+            let vac_inh: Vec<f32> = (0..n).map(|_| rng.next_below(3) as f32).collect();
+            (positions, vac_exc, vac_inh)
+        },
+        |(positions, vac_exc, vac_inh)| {
+            let decomp = DomainDecomposition::new(1, 100.0);
+            let mut tree = Octree::build(&decomp, 0, 0, positions);
+            tree.reset_and_set_leaves(0, vac_exc, vac_inh);
+            tree.aggregate_local();
+            tree.aggregate_upper();
+            tree.normalize();
+            let root = &tree.nodes[0];
+            let se: f32 = vac_exc.iter().sum();
+            let si: f32 = vac_inh.iter().sum();
+            if (root.vac_exc - se).abs() > 1e-2 * se.max(1.0) {
+                return Err(format!("exc: {} vs {}", root.vac_exc, se));
+            }
+            if (root.vac_inh - si).abs() > 1e-2 * si.max(1.0) {
+                return Err(format!("inh: {} vs {}", root.vac_inh, si));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_octree_every_neuron_in_one_leaf() {
+    forall(
+        "octree stores each neuron exactly once",
+        30,
+        |rng| {
+            let n = 1 + rng.next_below(300);
+            random_positions(rng, n, 50.0)
+        },
+        |positions| {
+            let decomp = DomainDecomposition::new(1, 50.0);
+            let tree = Octree::build(&decomp, 0, 0, positions);
+            let mut seen = vec![0usize; positions.len()];
+            for node in &tree.nodes {
+                if node.neuron != NO_NEURON {
+                    seen[node.neuron as usize] += 1;
+                }
+            }
+            if seen.iter().all(|&c| c == 1) {
+                Ok(())
+            } else {
+                Err(format!("leaf counts: {seen:?}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_select_local_respects_vacancy_and_exclusion() {
+    forall(
+        "select_local returns only admissible targets",
+        30,
+        |rng| {
+            let n = 2 + rng.next_below(60);
+            let positions = random_positions(rng, n, 100.0);
+            let vac: Vec<f32> = (0..n).map(|_| rng.next_below(3) as f32).collect();
+            let exclude = rng.next_below(n) as u64;
+            let theta = rng.uniform(0.0, 0.6);
+            (positions, vac, exclude, theta)
+        },
+        |(positions, vac, exclude, theta)| {
+            let decomp = DomainDecomposition::new(1, 100.0);
+            let mut tree = Octree::build(&decomp, 0, 0, positions);
+            tree.reset_and_set_leaves(0, vac, vac);
+            tree.aggregate_local();
+            tree.aggregate_upper();
+            tree.normalize();
+            let params = SelectParams {
+                theta: *theta,
+                sigma: 500.0,
+                exclude: *exclude,
+                kind: ElementKind::Excitatory,
+            };
+            let mut scratch = SelectScratch::default();
+            let mut rng2 = Rng::new(exclude * 31 + positions.len() as u64);
+            for _ in 0..20 {
+                match select_local(
+                    &tree,
+                    tree.root(),
+                    &positions[*exclude as usize],
+                    &params,
+                    &mut scratch,
+                    &mut rng2,
+                ) {
+                    Some(id) => {
+                        if id == *exclude {
+                            return Err("selected the excluded source".into());
+                        }
+                        if vac[id as usize] <= 0.0 {
+                            return Err(format!("selected zero-vacancy neuron {id}"));
+                        }
+                    }
+                    None => {
+                        // Legal only if no other neuron has vacancy.
+                        let any = vac
+                            .iter()
+                            .enumerate()
+                            .any(|(i, &v)| i as u64 != *exclude && v > 0.0);
+                        if any {
+                            return Err("returned None despite candidates".into());
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_synapse_store_random_ops_keep_invariants() {
+    forall(
+        "synapse store counters match edge lists under random ops",
+        50,
+        |rng| {
+            let ops: Vec<u8> = (0..200).map(|_| rng.next_below(5) as u8).collect();
+            (rng.next_u64(), ops)
+        },
+        |(seed, ops)| {
+            let mut rng = Rng::new(*seed);
+            let n = 8;
+            let mut store = SynapseStore::new(n);
+            for &op in ops {
+                let local = rng.next_below(n);
+                match op {
+                    0 => store.add_out(local, rng.next_below(64) as u64),
+                    1 => store.add_in(local, rng.next_below(64) as u64, rng.bernoulli(0.5)),
+                    2 => {
+                        store.remove_random_out(local, &mut rng);
+                    }
+                    3 => {
+                        store.remove_random_in(local, ElementKind::Excitatory, &mut rng);
+                    }
+                    _ => {
+                        store.remove_random_in(local, ElementKind::Inhibitory, &mut rng);
+                    }
+                }
+            }
+            store.check_invariants()
+        },
+    );
+}
+
+#[test]
+fn prop_acceptance_never_exceeds_capacity() {
+    forall(
+        "accepted proposals <= vacant dendritic elements",
+        40,
+        |rng| {
+            let n_neurons = 1 + rng.next_below(6);
+            let n_props = rng.next_below(40);
+            let caps: Vec<f32> = (0..n_neurons).map(|_| rng.next_below(5) as f32).collect();
+            let props: Vec<(usize, bool)> = (0..n_props)
+                .map(|_| (rng.next_below(n_neurons), rng.bernoulli(0.7)))
+                .collect();
+            (rng.next_u64(), caps, props)
+        },
+        |(seed, caps, props)| {
+            let cfg = SimConfig { neurons_per_rank: caps.len(), ..SimConfig::default() };
+            let mut rng = Rng::new(*seed);
+            let mut pop =
+                Population::init(&cfg, 0, Vec3::ZERO, Vec3::splat(10.0), &mut rng);
+            for (i, &c) in caps.iter().enumerate() {
+                pop.z_den_exc[i] = c;
+                pop.z_den_inh[i] = c;
+            }
+            let mut store = SynapseStore::new(caps.len());
+            let proposals: Vec<Proposal> = props
+                .iter()
+                .enumerate()
+                .map(|(k, &(t, exc))| Proposal {
+                    source: 1000 + k as u64,
+                    source_exc: exc,
+                    target_local: t,
+                })
+                .collect();
+            let ok = accept_proposals(&pop, &mut store, &proposals, &mut rng);
+            store.check_invariants()?;
+            for (i, &c) in caps.iter().enumerate() {
+                if store.connected_den_exc[i] as f32 > c {
+                    return Err(format!("neuron {i} exc over capacity"));
+                }
+                if store.connected_den_inh[i] as f32 > c {
+                    return Err(format!("neuron {i} inh over capacity"));
+                }
+            }
+            // Everything accepted must be recorded.
+            let accepted = ok.iter().filter(|&&s| s).count();
+            if accepted != store.total_in() {
+                return Err("accepted count != stored in-edges".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_deletion_restores_element_consistency() {
+    forall(
+        "after deletion, connected <= floor(z) on every side",
+        12,
+        |rng| rng.next_u64(),
+        |&seed| {
+            // Two ranks with random synapses between 4 neurons each, then
+            // random element counts; deletion must restore consistency
+            // and keep both sides of every synapse in agreement.
+            let results = run_ranks(2, move |comm| {
+                let rank = comm.rank();
+                let cfg = SimConfig { neurons_per_rank: 4, ..SimConfig::default() };
+                let mut rng = Rng::new(seed ^ rank as u64);
+                let mut pop =
+                    Population::init(&cfg, rank, Vec3::ZERO, Vec3::splat(10.0), &mut rng);
+                let mut store = SynapseStore::new(4);
+                // Build a deterministic, globally consistent edge set:
+                // neuron (r, i) -> neuron (1-r, i) for all i (exc).
+                for i in 0..4 {
+                    let other = ((1 - rank) * 4 + i) as u64;
+                    store.add_out(i, other);
+                    store.add_in(i, ((1 - rank) * 4 + i) as u64, true);
+                }
+                // Random element counts in [0, 2].
+                for i in 0..4 {
+                    pop.z_ax[i] = rng.next_below(3) as f32;
+                    pop.z_den_exc[i] = rng.next_below(3) as f32;
+                    pop.z_den_inh[i] = 2.0;
+                }
+                run_deletion_phase(&comm, &pop, &mut store, &mut rng, |id| {
+                    (id / 4) as usize
+                });
+                store.check_invariants().unwrap();
+                for i in 0..4 {
+                    assert!(
+                        store.connected_ax[i] as i64 <= pop.z_ax[i].floor() as i64,
+                        "rank {rank} neuron {i} axon over"
+                    );
+                    assert!(
+                        store.connected_den_exc[i] as i64
+                            <= pop.z_den_exc[i].floor() as i64
+                    );
+                }
+                (store.total_out(), store.total_in())
+            });
+            let out: usize = results.iter().map(|r| r.0).sum();
+            let inn: usize = results.iter().map(|r| r.1).sum();
+            if out != inn {
+                return Err(format!("dangling edges: out {out} != in {inn}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_all_to_all_conserves_bytes() {
+    forall(
+        "sum of bytes sent == sum of bytes received",
+        10,
+        |rng| rng.next_u64(),
+        |&seed| {
+            let results = run_ranks(4, move |comm| {
+                let mut rng = Rng::new(seed ^ (comm.rank() as u64) << 8);
+                for _ in 0..5 {
+                    let sends: Vec<Vec<u8>> =
+                        (0..4).map(|_| vec![0u8; rng.next_below(100)]).collect();
+                    comm.all_to_all(sends);
+                }
+                comm.counters().snapshot()
+            });
+            let sent: u64 = results.iter().map(|s| s.bytes_sent).sum();
+            let recv: u64 = results.iter().map(|s| s.bytes_recv).sum();
+            if sent != recv {
+                return Err(format!("sent {sent} != recv {recv}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_config_kv_roundtrip() {
+    forall(
+        "numeric config keys accept what they print",
+        50,
+        |rng| {
+            (
+                1 + rng.next_below(64),
+                1 + rng.next_below(4096),
+                (rng.next_below(40) as f64) / 100.0,
+            )
+        },
+        |&(ranks, npr, theta)| {
+            let mut cfg = SimConfig::default();
+            cfg.apply_kv("topology.ranks", &ranks.to_string())?;
+            cfg.apply_kv("topology.neurons_per_rank", &npr.to_string())?;
+            cfg.apply_kv("algorithms.theta", &theta.to_string())?;
+            cfg.validate()?;
+            if cfg.ranks != ranks || cfg.neurons_per_rank != npr {
+                return Err("values not applied".into());
+            }
+            Ok(())
+        },
+    );
+}
