@@ -1,0 +1,184 @@
+//! Scenario branching from one saved brain — the workflow the
+//! checkpoint/restore subsystem exists for (paper §I, §VI: "predict
+//! brain changes after learning, lesions, or normal development").
+//!
+//! Instead of regrowing the connectome once per experiment (as
+//! `lesion_rewiring.rs` does), this example:
+//!
+//!   1. grows ONE network to (near-)equilibrium and snapshots it
+//!      (`--checkpoint-every` machinery, one `.ilmisnap` file);
+//!   2. branches a CONTROL run from the snapshot through the public
+//!      `resume_simulation` API — bit-exact continuation;
+//!   3. branches a LESION run from the *same* snapshot through the
+//!      per-rank `RankState::restore` API, silencing rank 0's neurons
+//!      before continuing — same brain, different protocol;
+//!   4. shows the two scenarios diverging, and that the lesioned
+//!      tissue ends fully disconnected while the control keeps its
+//!      connectivity.
+//!
+//!     cargo run --release --example branch_scenarios
+
+use ilmi::comm::run_ranks;
+use ilmi::config::SimConfig;
+use ilmi::coordinator::{resume_simulation, RankState};
+use ilmi::octree::DomainDecomposition;
+use ilmi::snapshot::{snapshot_file_name, Snapshot};
+
+const LESION_RANK: usize = 0;
+const GROW_STEPS: usize = 8_000;
+const BRANCH_STEPS: usize = 4_000;
+
+/// (synapses between healthy neurons, synapses touching the lesion
+/// rank, mean calcium of this rank) — counted on the axonal side, so
+/// summing over ranks counts each synapse exactly once.
+fn census(state: &RankState, rank: usize, npr: u64) -> (usize, usize, f64) {
+    let mut healthy = 0usize;
+    let mut touching = 0usize;
+    let src_lesioned = rank == LESION_RANK;
+    for edges in &state.store.out_edges {
+        for &tgt in edges {
+            if src_lesioned || (tgt / npr) as usize == LESION_RANK {
+                touching += 1;
+            } else {
+                healthy += 1;
+            }
+        }
+    }
+    (healthy, touching, state.pop.mean_calcium())
+}
+
+/// Continue the saved brain for `BRANCH_STEPS` via the per-rank API,
+/// optionally lesioning rank 0 first. Returns per-rank census tuples.
+fn run_branch(
+    cfg: &SimConfig,
+    snap: &Snapshot,
+    lesion: bool,
+) -> Vec<(usize, usize, f64)> {
+    let decomp = DomainDecomposition::new(cfg.ranks, cfg.domain_size);
+    let npr = cfg.neurons_per_rank as u64;
+    run_ranks(cfg.ranks, |comm| {
+        let rank = comm.rank();
+        let mut cfg_rank = cfg.clone();
+        let mut state = RankState::restore(&cfg_rank, &decomp, &comm, snap)
+            .expect("snapshot restores");
+        if lesion && rank == LESION_RANK {
+            // Zero the synaptic elements: the next deletion phase
+            // dismantles every synapse touching these neurons through
+            // the normal notification protocol. Silencing the
+            // background keeps them from regrowing.
+            for i in 0..state.pop.len() {
+                state.pop.z_ax[i] = 0.0;
+                state.pop.z_den_exc[i] = 0.0;
+                state.pop.z_den_inh[i] = 0.0;
+                state.pop.ca[i] = 0.0;
+            }
+            cfg_rank.bg_mean = 0.0;
+            cfg_rank.bg_std = 0.0;
+        }
+        for step in GROW_STEPS..GROW_STEPS + BRANCH_STEPS {
+            state.step(&cfg_rank, &decomp, &comm, step, None).unwrap();
+        }
+        census(&state, rank, npr)
+    })
+}
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::env::temp_dir().join(format!("ilmi_branch_{}", std::process::id()));
+    let cfg = SimConfig {
+        ranks: 4,
+        neurons_per_rank: 64,
+        steps: GROW_STEPS,
+        plasticity_interval: 100,
+        delta: 100,
+        checkpoint_every: GROW_STEPS,
+        checkpoint_dir: dir.to_str().unwrap().to_string(),
+        ..SimConfig::default()
+    };
+    println!(
+        "branch scenarios: grow {} ranks x {} neurons for {} steps ONCE, then fan out \
+         {}-step scenarios from the snapshot",
+        cfg.ranks, cfg.neurons_per_rank, GROW_STEPS, BRANCH_STEPS
+    );
+
+    // -- 1. grow one equilibrium brain, snapshotted at the end ----------
+    let grown = ilmi::coordinator::run_simulation(&cfg)?;
+    println!(
+        "grown: {} synapses, mean Ca {:.3} -> snapshot at step {}",
+        grown.total_synapses(),
+        grown.mean_calcium(),
+        GROW_STEPS
+    );
+    let snap_path = dir.join(snapshot_file_name(GROW_STEPS as u64));
+    let snap = Snapshot::read_file(&snap_path).map_err(anyhow::Error::msg)?;
+
+    // Branch config: same dynamics, longer schedule, no checkpointing.
+    let mut branch_cfg = cfg.clone();
+    branch_cfg.steps = GROW_STEPS + BRANCH_STEPS;
+    branch_cfg.checkpoint_every = 0;
+    branch_cfg.checkpoint_dir = String::new();
+
+    // -- 2. control scenario through the public resume API -------------
+    let control_api = resume_simulation(&branch_cfg, &snap)?;
+
+    // -- 3. the same control plus a lesion scenario through the
+    //       per-rank restore API, both from the SAME snapshot ----------
+    let control = run_branch(&branch_cfg, &snap, false);
+    let lesion = run_branch(&branch_cfg, &snap, true);
+
+    // The two control paths (driver resume vs manual restore+step) are
+    // the same computation: their synapse totals must agree exactly.
+    let control_total: usize = control.iter().map(|c| c.0 + c.1).sum();
+    assert_eq!(
+        control_api.total_synapses(),
+        control_total,
+        "resume_simulation and RankState::restore must agree bit-exactly"
+    );
+
+    let sum = |xs: &[(usize, usize, f64)], pick: fn(&(usize, usize, f64)) -> usize| -> usize {
+        xs.iter().map(pick).sum()
+    };
+    let healthy_ca = |xs: &[(usize, usize, f64)]| -> f64 {
+        let v: Vec<f64> = xs
+            .iter()
+            .enumerate()
+            .filter(|(r, _)| *r != LESION_RANK)
+            .map(|(_, c)| c.2)
+            .collect();
+        v.iter().sum::<f64>() / v.len() as f64
+    };
+
+    println!(
+        "\n{:<22} {:>16} {:>18} {:>12}",
+        "scenario", "healthy synapses", "touching rank 0", "healthy Ca"
+    );
+    for (name, xs) in [("control", &control), ("lesion rank 0", &lesion)] {
+        println!(
+            "{:<22} {:>16} {:>18} {:>12.3}",
+            name,
+            sum(xs, |c| c.0),
+            sum(xs, |c| c.1),
+            healthy_ca(xs)
+        );
+    }
+
+    // Divergence: same initial brain, different outcomes.
+    assert_eq!(
+        sum(&lesion, |c| c.1),
+        0,
+        "lesioned neurons must end fully disconnected"
+    );
+    assert!(
+        sum(&control, |c| c.1) > 0,
+        "control must keep synapses touching rank 0"
+    );
+    assert_ne!(
+        sum(&control, |c| c.0),
+        sum(&lesion, |c| c.0),
+        "scenarios should diverge in healthy-tissue connectivity"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+    println!(
+        "\nbranch scenarios OK: one grown brain, two divergent futures — no regrowing."
+    );
+    Ok(())
+}

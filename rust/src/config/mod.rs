@@ -108,6 +108,11 @@ pub struct SimConfig {
     pub record_calcium_every: usize,
     /// Directory with AOT artifacts (for `Backend::Xla`).
     pub artifacts_dir: String,
+    /// Write a resumable snapshot every this many steps (0 = off).
+    /// Requires `checkpoint_dir`. See the `snapshot` module.
+    pub checkpoint_every: usize,
+    /// Directory snapshots are written to (one file per checkpoint).
+    pub checkpoint_dir: String,
 }
 
 impl Default for SimConfig {
@@ -134,6 +139,8 @@ impl Default for SimConfig {
             neuron: NeuronParams::default(),
             record_calcium_every: 0,
             artifacts_dir: "artifacts".to_string(),
+            checkpoint_every: 0,
+            checkpoint_dir: String::new(),
         }
     }
 }
@@ -248,9 +255,99 @@ impl SimConfig {
                 self.record_calcium_every = value.parse().map_err(|_| bad(key))?
             }
             "instrumentation.artifacts_dir" => self.artifacts_dir = value.to_string(),
+            "instrumentation.checkpoint_every" => {
+                self.checkpoint_every = value.parse().map_err(|_| bad(key))?
+            }
+            "instrumentation.checkpoint_dir" => self.checkpoint_dir = value.to_string(),
             _ => return Err(format!("unknown config key: {key}")),
         }
         Ok(())
+    }
+
+    /// Serialize to the INI dialect `from_ini` parses, so a config can
+    /// travel inside a snapshot and `ilmi resume` needs no separate
+    /// config file. Float formatting uses Rust's shortest-round-trip
+    /// `Display`, so `from_ini(to_ini(cfg))` reproduces every
+    /// INI-expressible field exactly. Neuron parameters without an INI
+    /// key (e.g. Izhikevich a/b/c/d) are not serialized — the snapshot
+    /// config *fingerprint* covers them, so a programmatically changed
+    /// parameter is still caught at resume time.
+    pub fn to_ini(&self) -> String {
+        let conn = match self.connectivity_alg {
+            ConnectivityAlg::OldRma => "old",
+            ConnectivityAlg::NewLocationAware => "new",
+            ConnectivityAlg::Direct => "direct",
+        };
+        let spikes = match self.spike_alg {
+            SpikeAlg::OldIds => "old",
+            SpikeAlg::NewFrequency => "new",
+        };
+        let backend = match self.backend {
+            Backend::Native => "native",
+            Backend::Xla => "xla",
+        };
+        let model = match self.neuron_model {
+            NeuronModel::Izhikevich => "izhikevich",
+            NeuronModel::Poisson => "poisson",
+        };
+        let mut out = format!(
+            "[topology]\n\
+             ranks = {}\n\
+             neurons_per_rank = {}\n\
+             domain_size = {}\n\
+             seed = {}\n\
+             [schedule]\n\
+             steps = {}\n\
+             plasticity_interval = {}\n\
+             delta = {}\n\
+             [algorithms]\n\
+             connectivity = {conn}\n\
+             spikes = {spikes}\n\
+             backend = {backend}\n\
+             theta = {}\n\
+             [model]\n\
+             neuron_model = {model}\n\
+             sigma = {}\n\
+             frac_excitatory = {}\n\
+             init_elements_lo = {}\n\
+             init_elements_hi = {}\n\
+             bg_mean = {}\n\
+             bg_std = {}\n\
+             target_calcium = {}\n\
+             growth_rate = {}\n\
+             tau_calcium = {}\n\
+             beta_calcium = {}\n\
+             [instrumentation]\n\
+             record_calcium_every = {}\n\
+             artifacts_dir = {}\n",
+            self.ranks,
+            self.neurons_per_rank,
+            self.domain_size,
+            self.seed,
+            self.steps,
+            self.plasticity_interval,
+            self.delta,
+            self.theta,
+            self.sigma,
+            self.frac_excitatory,
+            self.init_elements_lo,
+            self.init_elements_hi,
+            self.bg_mean,
+            self.bg_std,
+            self.neuron.eps_target_ca,
+            self.neuron.nu_growth,
+            self.neuron.tau_ca,
+            self.neuron.beta_ca,
+            self.record_calcium_every,
+            self.artifacts_dir,
+        );
+        if self.checkpoint_every > 0 {
+            out.push_str(&format!("checkpoint_every = {}\n", self.checkpoint_every));
+        }
+        if !self.checkpoint_dir.is_empty() {
+            out.push_str(&format!("checkpoint_dir = {}\n", self.checkpoint_dir));
+        }
+        out
     }
 
     /// Parse an INI-style config file content into a config, starting
@@ -294,6 +391,29 @@ impl SimConfig {
         }
         if self.sigma <= 0.0 || self.domain_size <= 0.0 {
             return Err("model.sigma and topology.domain_size must be > 0".into());
+        }
+        // Directory values travel through the INI round-trip inside
+        // snapshots; the parser treats '#'/';' as comment starts and
+        // has no escaping, so such paths would be silently truncated
+        // at resume. Reject them up front instead.
+        for (key, value) in [
+            ("instrumentation.artifacts_dir", &self.artifacts_dir),
+            ("instrumentation.checkpoint_dir", &self.checkpoint_dir),
+        ] {
+            if value.contains(&['#', ';', '\n'][..]) {
+                return Err(format!(
+                    "{key} must not contain '#', ';' or newlines (the INI config \
+                     format embedded in snapshots cannot represent them): {value:?}"
+                ));
+            }
+        }
+        if self.checkpoint_every > 0 && self.checkpoint_dir.is_empty() {
+            return Err(
+                "instrumentation.checkpoint_every (--checkpoint-every) requires \
+                 instrumentation.checkpoint_dir (--checkpoint-dir): snapshots need \
+                 a directory to be written to"
+                    .into(),
+            );
         }
         if self.neuron_model == NeuronModel::Poisson && self.backend == Backend::Xla {
             return Err(
@@ -353,6 +473,61 @@ target_calcium = 0.6
         assert_eq!(cfg.spike_alg, SpikeAlg::NewFrequency);
         assert_eq!(cfg.theta, 0.2);
         assert_eq!(cfg.neuron.eps_target_ca, 0.6);
+    }
+
+    #[test]
+    fn to_ini_roundtrips_exactly() {
+        let mut cfg = SimConfig {
+            ranks: 8,
+            neurons_per_rank: 96,
+            domain_size: 1234.5,
+            seed: 991,
+            steps: 777,
+            plasticity_interval: 50,
+            delta: 25,
+            connectivity_alg: ConnectivityAlg::OldRma,
+            spike_alg: SpikeAlg::OldIds,
+            theta: 0.2,
+            sigma: 333.25,
+            frac_excitatory: 0.75,
+            bg_mean: 4.5,
+            bg_std: 1.25,
+            record_calcium_every: 10,
+            checkpoint_every: 100,
+            checkpoint_dir: "ckpts".to_string(),
+            ..SimConfig::default()
+        };
+        cfg.neuron.eps_target_ca = 0.65;
+        cfg.neuron.nu_growth = 0.002;
+        let back = SimConfig::from_ini(&cfg.to_ini()).unwrap();
+        assert_eq!(back.ranks, cfg.ranks);
+        assert_eq!(back.neurons_per_rank, cfg.neurons_per_rank);
+        assert_eq!(back.domain_size, cfg.domain_size);
+        assert_eq!(back.seed, cfg.seed);
+        assert_eq!(back.steps, cfg.steps);
+        assert_eq!(back.plasticity_interval, cfg.plasticity_interval);
+        assert_eq!(back.delta, cfg.delta);
+        assert_eq!(back.connectivity_alg, cfg.connectivity_alg);
+        assert_eq!(back.spike_alg, cfg.spike_alg);
+        assert_eq!(back.theta, cfg.theta);
+        assert_eq!(back.sigma, cfg.sigma);
+        assert_eq!(back.frac_excitatory, cfg.frac_excitatory);
+        assert_eq!(back.bg_mean, cfg.bg_mean);
+        assert_eq!(back.bg_std, cfg.bg_std);
+        assert_eq!(back.neuron.eps_target_ca, cfg.neuron.eps_target_ca);
+        assert_eq!(back.neuron.nu_growth, cfg.neuron.nu_growth);
+        assert_eq!(back.record_calcium_every, cfg.record_calcium_every);
+        assert_eq!(back.checkpoint_every, cfg.checkpoint_every);
+        assert_eq!(back.checkpoint_dir, cfg.checkpoint_dir);
+    }
+
+    #[test]
+    fn checkpoint_every_without_dir_rejected() {
+        let mut cfg = SimConfig { checkpoint_every: 100, ..SimConfig::default() };
+        let err = cfg.validate().unwrap_err();
+        assert!(err.contains("checkpoint_dir"), "{err}");
+        cfg.checkpoint_dir = "somewhere".to_string();
+        cfg.validate().unwrap();
     }
 
     #[test]

@@ -6,10 +6,10 @@
 
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::barnes_hut::{self, FormationStats};
-use crate::comm::{gather_all, run_ranks, ThreadComm};
+use crate::comm::{gather_all, run_ranks, CounterSnapshot, ThreadComm};
 use crate::config::{Backend, ConnectivityAlg, SimConfig, SpikeAlg};
 use crate::metrics::{Phase, PhaseTimers, RankReport, SimReport};
 use crate::neuron::{izhikevich, Population};
@@ -17,8 +17,9 @@ use crate::octree::{
     serialize_local_subtrees, DomainDecomposition, Octree, RemoteNodeCache, NO_CHILD,
     OCTREE_WINDOW,
 };
-use crate::plasticity::{run_deletion_phase, vacant, DeletionStats, SynapseStore};
+use crate::plasticity::{run_deletion_phase, vacant, DeletionStats, InEdge, SynapseStore};
 use crate::runtime::{NeuronInputs, XlaHandle};
+use crate::snapshot::{CheckpointSink, RankSection, Snapshot};
 use crate::spikes::{deliver_input, FrequencyExchange, IdExchange};
 use crate::util::Rng;
 
@@ -37,6 +38,12 @@ pub struct RankState {
     pub deletion: DeletionStats,
     pub spike_lookups: u64,
     pub calcium_trace: Vec<(usize, Vec<f32>)>,
+    /// Communication counters accumulated before this process segment
+    /// (non-zero only for states restored from a snapshot): the run's
+    /// communicator starts at zero, so the final report adds this
+    /// baseline to make a resumed run's accounting equal a straight
+    /// run's.
+    pub baseline_comm: CounterSnapshot,
 }
 
 impl RankState {
@@ -67,7 +74,142 @@ impl RankState {
             deletion: DeletionStats::default(),
             spike_lookups: 0,
             calcium_trace: Vec::new(),
+            baseline_comm: CounterSnapshot::default(),
         }
+    }
+
+    /// Capture this rank's complete state as an encoded snapshot
+    /// section (see `snapshot::format`). Read-only: capturing must not
+    /// perturb the simulation, so a checkpointed run stays bit-identical
+    /// to an unchekpointed one. The octree is not captured — `restore`
+    /// rebuilds it from the (immutable) positions.
+    pub fn capture(&self, comm: &ThreadComm) -> Vec<u8> {
+        RankSection {
+            first_id: self.pop.first_id,
+            positions: self.pop.positions.clone(),
+            is_excitatory: self.pop.is_excitatory.clone(),
+            v: self.pop.v.clone(),
+            u: self.pop.u.clone(),
+            ca: self.pop.ca.clone(),
+            z_ax: self.pop.z_ax.clone(),
+            z_den_exc: self.pop.z_den_exc.clone(),
+            z_den_inh: self.pop.z_den_inh.clone(),
+            i_syn: self.pop.i_syn.clone(),
+            noise: self.pop.noise.clone(),
+            fired: self.pop.fired.clone(),
+            epoch_spikes: self.pop.epoch_spikes.clone(),
+            out_edges: self.store.out_edges.clone(),
+            in_edges: self
+                .store
+                .in_edges
+                .iter()
+                .map(|edges| edges.iter().map(|e| (e.source, e.source_exc)).collect())
+                .collect(),
+            connected_ax: self.store.connected_ax.clone(),
+            connected_den_exc: self.store.connected_den_exc.clone(),
+            connected_den_inh: self.store.connected_den_inh.clone(),
+            rng_model: self.rng_model.state(),
+            rng_conn: self.rng_conn.state(),
+            rng_spikes: self.freq_exchange.rng_state(),
+            freqs: self.freq_exchange.freq_table().to_vec(),
+            baseline_comm: self.baseline_comm.merge(&comm.counters().snapshot()),
+            spike_lookups: self.spike_lookups,
+            deletion: self.deletion,
+            formation: self.formation,
+            calcium_trace: self
+                .calcium_trace
+                .iter()
+                .map(|(step, cas)| (*step as u64, cas.clone()))
+                .collect(),
+        }
+        .encode()
+    }
+
+    /// Rebuild a rank's state from a validated snapshot, bit-exactly:
+    /// stepping the restored state continues the exact trajectory of
+    /// the run that wrote the snapshot. The caller validates the
+    /// snapshot against `cfg` first (`Snapshot::validate_for`, or
+    /// `validate_for_branch` when deliberately forking a scenario).
+    pub fn restore(
+        cfg: &SimConfig,
+        decomp: &DomainDecomposition,
+        comm: &ThreadComm,
+        snap: &Snapshot,
+    ) -> Result<RankState, String> {
+        let sec = load_validated_section(cfg, snap, comm.rank())?;
+        RankState::restore_section(cfg, decomp, comm, sec)
+    }
+
+    /// `restore` from an already decoded and validated section (see
+    /// `load_validated_section`).
+    fn restore_section(
+        cfg: &SimConfig,
+        decomp: &DomainDecomposition,
+        comm: &ThreadComm,
+        sec: RankSection,
+    ) -> Result<RankState, String> {
+        let rank = comm.rank();
+        let pop = Population {
+            first_id: sec.first_id,
+            positions: sec.positions,
+            is_excitatory: sec.is_excitatory,
+            v: sec.v,
+            u: sec.u,
+            ca: sec.ca,
+            z_ax: sec.z_ax,
+            z_den_exc: sec.z_den_exc,
+            z_den_inh: sec.z_den_inh,
+            i_syn: sec.i_syn,
+            noise: sec.noise,
+            fired: sec.fired,
+            epoch_spikes: sec.epoch_spikes,
+        };
+        // Edge-list/counter consistency and id bounds were verified by
+        // `load_validated_section` before any state is built here.
+        let store = SynapseStore {
+            out_edges: sec.out_edges,
+            in_edges: sec
+                .in_edges
+                .into_iter()
+                .map(|edges| {
+                    edges
+                        .into_iter()
+                        .map(|(source, source_exc)| InEdge { source, source_exc })
+                        .collect()
+                })
+                .collect(),
+            connected_ax: sec.connected_ax,
+            connected_den_exc: sec.connected_den_exc,
+            connected_den_inh: sec.connected_den_inh,
+        };
+        // The octree is structural over the (immutable) positions;
+        // rebuilding it reproduces the exact arena the original run had,
+        // and its aggregates are recomputed from scratch at every
+        // plasticity phase anyway.
+        let tree = Octree::build(decomp, rank, pop.first_id, &pop.positions);
+        let freq_exchange =
+            FrequencyExchange::from_parts(cfg.delta, cfg.total_neurons(), sec.freqs, sec.rng_spikes)
+                .map_err(|e| format!("rank {rank}: {e}"))?;
+        Ok(RankState {
+            pop,
+            store,
+            tree,
+            id_exchange: IdExchange::new(comm.size()),
+            freq_exchange,
+            cache: RemoteNodeCache::default(),
+            rng_model: Rng::from_state(sec.rng_model),
+            rng_conn: Rng::from_state(sec.rng_conn),
+            timers: PhaseTimers::new(),
+            formation: sec.formation,
+            deletion: sec.deletion,
+            spike_lookups: sec.spike_lookups,
+            calcium_trace: sec
+                .calcium_trace
+                .into_iter()
+                .map(|(step, cas)| (step as usize, cas))
+                .collect(),
+            baseline_comm: sec.baseline_comm,
+        })
     }
 
     /// Phase A: spike transmission (previous step's spikes / last epoch's
@@ -252,12 +394,14 @@ impl RankState {
         Ok(())
     }
 
-    /// Assemble this rank's final report.
+    /// Assemble this rank's final report. Restored states add their
+    /// pre-resume communication baseline so the totals equal a straight
+    /// run's.
     pub fn into_report(self, comm: &ThreadComm) -> RankReport {
         RankReport {
             rank: comm.rank(),
             phase_seconds: self.timers.seconds(),
-            comm: comm.counters().snapshot(),
+            comm: self.baseline_comm.merge(&comm.counters().snapshot()),
             formation: self.formation,
             deletion: self.deletion,
             spike_lookups: self.spike_lookups,
@@ -276,21 +420,148 @@ pub fn run_simulation(cfg: &SimConfig) -> Result<SimReport> {
 }
 
 /// Run a full simulation; `xla` supplies the shared artifact executor
-/// when `cfg.backend == Backend::Xla`.
+/// when `cfg.backend == Backend::Xla`. With `cfg.checkpoint_every > 0`
+/// a resumable snapshot is written to `cfg.checkpoint_dir` every that
+/// many steps (see the `snapshot` module).
 pub fn run_simulation_with_xla(cfg: &SimConfig, xla: Option<XlaHandle>) -> Result<SimReport> {
+    run_simulation_inner(cfg, xla, None, false)
+}
+
+/// Resume a simulation from a snapshot, bit-exactly: steps
+/// `snap.next_step()..cfg.steps` continue the exact trajectory of the
+/// run that wrote the snapshot (`cfg.steps` is always the TOTAL
+/// schedule length, not an increment). The config must match the
+/// snapshot's fingerprint.
+pub fn resume_simulation(cfg: &SimConfig, snap: &Snapshot) -> Result<SimReport> {
+    run_simulation_inner(cfg, None, Some(snap), false)
+}
+
+/// `resume_simulation` with an XLA executor handle.
+pub fn resume_simulation_with_xla(
+    cfg: &SimConfig,
+    snap: &Snapshot,
+    xla: Option<XlaHandle>,
+) -> Result<SimReport> {
+    run_simulation_inner(cfg, xla, Some(snap), false)
+}
+
+/// Fork a new *scenario* from a snapshot: like `resume_simulation`, but
+/// only the structural compatibility of the state is enforced — the
+/// dynamics config (background input, model parameters, algorithms,
+/// seed) may deliberately differ from the run that wrote the snapshot.
+/// Same brain, different protocol.
+pub fn branch_simulation(cfg: &SimConfig, snap: &Snapshot) -> Result<SimReport> {
+    branch_simulation_with_xla(cfg, snap, None)
+}
+
+/// `branch_simulation` with an XLA executor handle.
+pub fn branch_simulation_with_xla(
+    cfg: &SimConfig,
+    snap: &Snapshot,
+    xla: Option<XlaHandle>,
+) -> Result<SimReport> {
+    run_simulation_inner(cfg, xla, Some(snap), true)
+}
+
+/// Decode and fully validate one rank's snapshot section: framing
+/// (via `RankSection::decode`), the expected id range, edge-list
+/// consistency and id bounds, and the frequency-table size. After this
+/// passes, `RankState::restore_section` cannot fail on the same data.
+fn load_validated_section(
+    cfg: &SimConfig,
+    snap: &Snapshot,
+    rank: usize,
+) -> Result<RankSection, String> {
+    let sec = snap.section(rank)?;
+    let expect_first = (rank * cfg.neurons_per_rank) as u64;
+    if sec.first_id != expect_first {
+        return Err(format!(
+            "rank {rank}: snapshot section starts at neuron {} (expected {expect_first})",
+            sec.first_id
+        ));
+    }
+    sec.check_synapse_consistency(cfg.total_neurons() as u64)
+        .map_err(|e| format!("rank {rank}: {e}"))?;
+    if sec.freqs.len() != cfg.total_neurons() {
+        return Err(format!(
+            "rank {rank}: frequency table size mismatch: snapshot has {}, simulation \
+             expects {}",
+            sec.freqs.len(),
+            cfg.total_neurons()
+        ));
+    }
+    Ok(sec)
+}
+
+fn run_simulation_inner(
+    cfg: &SimConfig,
+    xla: Option<XlaHandle>,
+    resume: Option<&Snapshot>,
+    branch: bool,
+) -> Result<SimReport> {
     cfg.validate().map_err(anyhow::Error::msg)?;
+    // Decode and validate every rank's section BEFORE spawning rank
+    // threads: an error inside one rank's closure would strand the
+    // other ranks at their next collective barrier (deadlock) instead
+    // of surfacing the decoder's message. Each slot is consumed by its
+    // rank inside `run_ranks`.
+    let preloaded: Option<Vec<std::sync::Mutex<Option<RankSection>>>> = match resume {
+        Some(snap) => {
+            let check =
+                if branch { snap.validate_for_branch(cfg) } else { snap.validate_for(cfg) };
+            check.map_err(anyhow::Error::msg)?;
+            let mut slots = Vec::with_capacity(cfg.ranks);
+            for rank in 0..cfg.ranks {
+                let sec = load_validated_section(cfg, snap, rank).map_err(anyhow::Error::msg)?;
+                slots.push(std::sync::Mutex::new(Some(sec)));
+            }
+            Some(slots)
+        }
+        None => None,
+    };
+    let sink = if cfg.checkpoint_every > 0 {
+        Some(CheckpointSink::create(cfg).map_err(anyhow::Error::msg)?)
+    } else {
+        None
+    };
+    let start_step = resume.map_or(0, |s| s.next_step());
     let decomp = DomainDecomposition::new(cfg.ranks, cfg.domain_size);
     let wall = Instant::now();
     let results: Vec<Result<RankReport>> = run_ranks(cfg.ranks, |comm| {
-        let mut state = RankState::init(cfg, &decomp, &comm);
-        for step in 0..cfg.steps {
+        let mut state = match &preloaded {
+            Some(slots) => {
+                let sec = slots[comm.rank()]
+                    .lock()
+                    .unwrap()
+                    .take()
+                    .expect("preloaded section consumed exactly once per rank");
+                RankState::restore_section(cfg, &decomp, &comm, sec)
+                    .map_err(anyhow::Error::msg)?
+            }
+            None => RankState::init(cfg, &decomp, &comm),
+        };
+        for step in start_step..cfg.steps {
             state.step(cfg, &decomp, &comm, step, xla.as_ref())?;
+            if let Some(sink) = &sink {
+                if (step + 1) % cfg.checkpoint_every == 0 {
+                    // Checkpoint I/O failures are recorded, not
+                    // returned: erroring out of one rank's loop would
+                    // deadlock the others at the next barrier. The
+                    // first failure is surfaced after the join below.
+                    sink.deposit_nonfatal(step as u64 + 1, comm.rank(), state.capture(&comm));
+                }
+            }
         }
         Ok(state.into_report(&comm))
     });
     let mut ranks = Vec::with_capacity(results.len());
     for r in results {
         ranks.push(r?);
+    }
+    if let Some(sink) = &sink {
+        if let Some(e) = sink.first_error() {
+            bail!("simulation finished but checkpointing failed: {e}");
+        }
     }
     Ok(SimReport { ranks, wall_seconds: wall.elapsed().as_secs_f64() })
 }
@@ -373,5 +644,160 @@ mod tests {
         assert_eq!(report.total_bytes_sent(), 0);
         assert_eq!(report.total_bytes_rma(), 0);
         assert!(report.total_synapses() > 0);
+    }
+
+    /// Temp checkpoint directory unique to one test.
+    fn ckpt_dir(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("ilmi_driver_ckpt_{tag}_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        dir
+    }
+
+    /// The checkpoint/resume determinism contract: N steps + resume for
+    /// the rest == the straight run, bit-exactly, for the given
+    /// algorithm pair. The checkpoint lands mid-frequency-epoch and
+    /// between plasticity updates (step 75 with delta = interval = 50),
+    /// so partial epoch counters and the received frequency table must
+    /// all survive the round-trip.
+    fn assert_resume_matches_straight(conn: ConnectivityAlg, spikes: SpikeAlg, tag: &str) {
+        let dir = ckpt_dir(tag);
+        let base = SimConfig {
+            ranks: 2,
+            neurons_per_rank: 32,
+            steps: 150,
+            plasticity_interval: 50,
+            delta: 50,
+            connectivity_alg: conn,
+            spike_alg: spikes,
+            record_calcium_every: 30,
+            ..SimConfig::default()
+        };
+        let straight = run_simulation(&base).unwrap();
+
+        // Leg 1: run the first half with checkpointing on.
+        let mut first = base.clone();
+        first.steps = 75;
+        first.checkpoint_every = 75;
+        first.checkpoint_dir = dir.to_str().unwrap().to_string();
+        run_simulation(&first).unwrap();
+        let snap_path = dir.join(crate::snapshot::snapshot_file_name(75));
+        let snap = Snapshot::read_file(&snap_path).unwrap();
+        assert_eq!(snap.next_step(), 75);
+
+        // Leg 2: resume to the full schedule, no checkpointing.
+        let resumed = resume_simulation(&base, &snap).unwrap();
+
+        assert_eq!(straight.ranks.len(), resumed.ranks.len());
+        for (s, r) in straight.ranks.iter().zip(&resumed.ranks) {
+            assert_eq!(s.synapses_out, r.synapses_out, "{tag}: synapses_out");
+            assert_eq!(s.synapses_in, r.synapses_in, "{tag}: synapses_in");
+            assert_eq!(
+                s.mean_calcium.to_bits(),
+                r.mean_calcium.to_bits(),
+                "{tag}: mean_calcium {} vs {}",
+                s.mean_calcium,
+                r.mean_calcium
+            );
+            assert_eq!(s.comm.bytes_sent, r.comm.bytes_sent, "{tag}: bytes_sent");
+            assert_eq!(s.comm.bytes_recv, r.comm.bytes_recv, "{tag}: bytes_recv");
+            assert_eq!(s.comm.bytes_rma, r.comm.bytes_rma, "{tag}: bytes_rma");
+            assert_eq!(s.comm.msgs_sent, r.comm.msgs_sent, "{tag}: msgs_sent");
+            assert_eq!(s.spike_lookups, r.spike_lookups, "{tag}: spike_lookups");
+            assert_eq!(s.deletion, r.deletion, "{tag}: deletion stats");
+            assert_eq!(s.formation.formed, r.formation.formed, "{tag}: formed");
+            assert_eq!(s.formation.searches, r.formation.searches, "{tag}: searches");
+            // The calcium trace spans both legs seamlessly.
+            assert_eq!(s.calcium_trace.len(), r.calcium_trace.len(), "{tag}: trace len");
+            for ((ss, sv), (rs, rv)) in s.calcium_trace.iter().zip(&r.calcium_trace) {
+                assert_eq!(ss, rs, "{tag}: trace step");
+                let sb: Vec<u32> = sv.iter().map(|x| x.to_bits()).collect();
+                let rb: Vec<u32> = rv.iter().map(|x| x.to_bits()).collect();
+                assert_eq!(sb, rb, "{tag}: trace values at step {ss}");
+            }
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn resume_is_bit_exact_new_algorithms() {
+        assert_resume_matches_straight(
+            ConnectivityAlg::NewLocationAware,
+            SpikeAlg::NewFrequency,
+            "new",
+        );
+    }
+
+    #[test]
+    fn resume_is_bit_exact_old_algorithms() {
+        assert_resume_matches_straight(ConnectivityAlg::OldRma, SpikeAlg::OldIds, "old");
+    }
+
+    #[test]
+    fn chained_resume_accumulates_baselines() {
+        // checkpoint -> resume (checkpointing again) -> resume: counters
+        // and stats must keep matching the straight run across TWO
+        // restore round-trips.
+        let dir = ckpt_dir("chained");
+        let base = SimConfig {
+            ranks: 2,
+            neurons_per_rank: 32,
+            steps: 150,
+            plasticity_interval: 50,
+            delta: 50,
+            ..SimConfig::default()
+        };
+        let straight = run_simulation(&base).unwrap();
+
+        let mut ck = base.clone();
+        ck.steps = 150;
+        ck.checkpoint_every = 50;
+        ck.checkpoint_dir = dir.to_str().unwrap().to_string();
+        // Leg 1: 0..50.
+        let mut leg1 = ck.clone();
+        leg1.steps = 50;
+        run_simulation(&leg1).unwrap();
+        // Leg 2: 50..100, still checkpointing (tests capture-on-resumed-state).
+        let snap50 = Snapshot::read_file(dir.join(crate::snapshot::snapshot_file_name(50))).unwrap();
+        let mut leg2 = ck.clone();
+        leg2.steps = 100;
+        resume_simulation(&leg2, &snap50).unwrap();
+        // Leg 3: 100..150, from the checkpoint leg 2 wrote.
+        let snap100 =
+            Snapshot::read_file(dir.join(crate::snapshot::snapshot_file_name(100))).unwrap();
+        let final_cfg = base.clone();
+        let resumed = resume_simulation(&final_cfg, &snap100).unwrap();
+
+        for (s, r) in straight.ranks.iter().zip(&resumed.ranks) {
+            assert_eq!(s.synapses_out, r.synapses_out);
+            assert_eq!(s.mean_calcium.to_bits(), r.mean_calcium.to_bits());
+            assert_eq!(s.comm.bytes_sent, r.comm.bytes_sent);
+            assert_eq!(s.comm.collectives, r.comm.collectives);
+            assert_eq!(s.spike_lookups, r.spike_lookups);
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn resume_rejects_mismatched_config() {
+        let dir = ckpt_dir("reject");
+        let mut cfg = smoke_cfg();
+        cfg.steps = 50;
+        cfg.checkpoint_every = 50;
+        cfg.checkpoint_dir = dir.to_str().unwrap().to_string();
+        run_simulation(&cfg).unwrap();
+        let snap = Snapshot::read_file(dir.join(crate::snapshot::snapshot_file_name(50))).unwrap();
+
+        let mut other = cfg.clone();
+        other.steps = 100;
+        other.checkpoint_every = 0;
+        other.checkpoint_dir = String::new();
+        other.seed += 1; // dynamics-relevant change
+        let err = resume_simulation(&other, &snap).unwrap_err();
+        assert!(format!("{err:#}").contains("fingerprint"), "{err:#}");
+        // ...but branch_simulation deliberately allows it.
+        let report = branch_simulation(&other, &snap).unwrap();
+        assert_eq!(report.ranks.len(), cfg.ranks);
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

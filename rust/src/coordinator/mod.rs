@@ -3,4 +3,7 @@
 
 mod driver;
 
-pub use driver::{run_simulation, run_simulation_with_xla, RankState};
+pub use driver::{
+    branch_simulation, branch_simulation_with_xla, resume_simulation, resume_simulation_with_xla,
+    run_simulation, run_simulation_with_xla, RankState,
+};

@@ -19,6 +19,7 @@ pub mod neuron;
 pub mod octree;
 pub mod plasticity;
 pub mod runtime;
+pub mod snapshot;
 pub mod spikes;
 pub mod testing;
 pub mod util;

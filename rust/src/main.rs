@@ -1,7 +1,20 @@
 //! `ilmi` — leader entrypoint.
 //!
 //! Subcommands:
-//!   simulate   run one simulation and print the phase/byte report
+//!   simulate   run one simulation and print the phase/byte report;
+//!              `--checkpoint-every N --checkpoint-dir D` writes a
+//!              resumable snapshot every N steps (both flags required
+//!              together)
+//!   resume     continue (or branch) a simulation from a snapshot file:
+//!              `resume --from FILE` or `resume --dir D` (newest
+//!              snapshot in D). The snapshot embeds its config
+//!              (`--config FILE` overrides it); `--steps T` raises the
+//!              total schedule, `--set`/`--xla` override further.
+//!              Resume is bit-exact and refuses a
+//!              config whose dynamics fingerprint differs from the
+//!              snapshot's; pass `--branch` to deliberately fork a new
+//!              scenario (e.g. changed background input) from the
+//!              saved brain instead
 //!   compare    run old vs new algorithms on the same workload, print
 //!              the speedups (the paper's headline numbers, scaled)
 //!   quality    the §V-D calcium-quality experiment (Figs. 8/9), CSV out
@@ -14,8 +27,12 @@ use anyhow::{anyhow, bail, Result};
 
 use ilmi::cli::Args;
 use ilmi::config::{Backend, ConnectivityAlg, SimConfig, SpikeAlg};
-use ilmi::coordinator::{run_simulation, run_simulation_with_xla};
+use ilmi::coordinator::{
+    branch_simulation_with_xla, resume_simulation, resume_simulation_with_xla, run_simulation,
+    run_simulation_with_xla,
+};
 use ilmi::runtime::spawn_service;
+use ilmi::snapshot::{latest_snapshot_in, Snapshot};
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -29,6 +46,7 @@ fn run(argv: &[String]) -> Result<()> {
     let args = Args::parse(argv).map_err(anyhow::Error::msg)?;
     match args.subcommand.as_str() {
         "simulate" => cmd_simulate(&args),
+        "resume" => cmd_resume(&args),
         "compare" => cmd_compare(&args),
         "quality" => cmd_quality(&args),
         "inspect" => cmd_inspect(&args),
@@ -42,8 +60,22 @@ fn run(argv: &[String]) -> Result<()> {
 
 const HELP: &str = "\
 ilmi - I Like To Move It: structural-plasticity brain simulation
-usage: ilmi <simulate|compare|quality|inspect> [flags]
+usage: ilmi <simulate|resume|compare|quality|inspect> [flags]
   simulate  --config FILE --set k=v ... [--csv PATH] [--xla]
+            [--checkpoint-every N --checkpoint-dir D]
+              write a resumable snapshot every N steps into D
+              (both flags are required together)
+  resume    (--from FILE | --dir D) [--steps T] [--config FILE]
+            [--set k=v ...] [--csv PATH] [--xla] [--branch]
+            [--checkpoint-every N --checkpoint-dir D]
+              continue a run from a snapshot, bit-exactly. The snapshot
+              embeds its config (--config FILE overrides it); --steps T
+              sets the TOTAL schedule length (must exceed the
+              snapshot's completed steps). --dir D picks the newest
+              snapshot in D. A config whose dynamics differ from the
+              snapshot's is refused unless --branch is given, which
+              forks a new scenario (same brain, different protocol)
+              from the saved state.
   compare   --set k=v ... (runs old-vs-new on the same workload)
   quality   [--steps N] [--csv PATH] [--old] (paper SS V-D, Figs 8/9)
   inspect   [--artifacts DIR] (load artifacts, run one batch through PJRT)
@@ -54,17 +86,43 @@ fn build_config(args: &Args) -> Result<SimConfig> {
         Some(path) => SimConfig::from_file(path).map_err(anyhow::Error::msg)?,
         None => SimConfig::default(),
     };
+    apply_set_flags(&mut cfg, args)?;
+    if args.get_bool("xla") {
+        cfg.backend = Backend::Xla;
+    }
+    apply_checkpoint_flags(&mut cfg, args)?;
+    cfg.validate().map_err(anyhow::Error::msg)?;
+    Ok(cfg)
+}
+
+/// Apply every repeated `--set section.key=value` override.
+fn apply_set_flags(cfg: &mut SimConfig, args: &Args) -> Result<()> {
     for kv in args.get_all("set") {
         let (k, v) = kv
             .split_once('=')
             .ok_or_else(|| anyhow!("--set expects section.key=value, got {kv:?}"))?;
         cfg.apply_kv(k.trim(), v.trim()).map_err(anyhow::Error::msg)?;
     }
-    if args.get_bool("xla") {
-        cfg.backend = Backend::Xla;
+    Ok(())
+}
+
+/// Map `--checkpoint-every N` / `--checkpoint-dir D` into the config,
+/// rejecting the combination `validate` cannot express a CLI-worded
+/// error for.
+fn apply_checkpoint_flags(cfg: &mut SimConfig, args: &Args) -> Result<()> {
+    if let Some(every) = args.get_parse::<usize>("checkpoint-every").map_err(anyhow::Error::msg)? {
+        cfg.checkpoint_every = every;
     }
-    cfg.validate().map_err(anyhow::Error::msg)?;
-    Ok(cfg)
+    if let Some(dir) = args.get("checkpoint-dir") {
+        cfg.checkpoint_dir = dir.to_string();
+    }
+    if cfg.checkpoint_every > 0 && cfg.checkpoint_dir.is_empty() {
+        bail!(
+            "--checkpoint-every needs --checkpoint-dir: snapshots must have a \
+             directory to be written to"
+        );
+    }
+    Ok(())
 }
 
 fn run_with_backend(cfg: &SimConfig) -> Result<ilmi::metrics::SimReport> {
@@ -90,6 +148,73 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     if let Some(path) = args.get("csv") {
         std::fs::write(path, report.to_csv())?;
         println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_resume(args: &Args) -> Result<()> {
+    let path = match (args.get("from"), args.get("dir")) {
+        (Some(file), None) => std::path::PathBuf::from(file),
+        (None, Some(dir)) => latest_snapshot_in(dir).map_err(anyhow::Error::msg)?,
+        (Some(_), Some(_)) => bail!("pass either --from FILE or --dir D, not both"),
+        (None, None) => bail!("resume needs --from FILE or --dir D; see `ilmi help`"),
+    };
+    let snap = Snapshot::read_file(&path).map_err(anyhow::Error::msg)?;
+    // The snapshot embeds its config; an explicit --config FILE takes
+    // precedence (needed when the original run used parameters that are
+    // not INI-expressible, which the embedded config cannot reproduce).
+    let mut cfg = match args.get("config") {
+        Some(file) => SimConfig::from_file(file).map_err(anyhow::Error::msg)?,
+        None => {
+            let mut cfg = snap.config().map_err(anyhow::Error::msg)?;
+            // Checkpointing settings of the original run do not
+            // auto-carry over: resuming into the same directory is
+            // opt-in via the flags below.
+            cfg.checkpoint_every = 0;
+            cfg.checkpoint_dir = String::new();
+            cfg
+        }
+    };
+    apply_set_flags(&mut cfg, args)?;
+    if let Some(steps) = args.get_parse::<usize>("steps").map_err(anyhow::Error::msg)? {
+        cfg.steps = steps;
+    }
+    if args.get_bool("xla") {
+        cfg.backend = Backend::Xla;
+    }
+    apply_checkpoint_flags(&mut cfg, args)?;
+    cfg.validate().map_err(anyhow::Error::msg)?;
+
+    let branch = args.get_bool("branch");
+    println!(
+        "resume: {} (step {} of {}), {} ranks x {} neurons, conn={:?}, spikes={:?}{}",
+        path.display(),
+        snap.next_step(),
+        cfg.steps,
+        cfg.ranks,
+        cfg.neurons_per_rank,
+        cfg.connectivity_alg,
+        cfg.spike_alg,
+        if branch { " [BRANCH: dynamics may differ from the snapshot]" } else { "" },
+    );
+    let report = if cfg.backend == Backend::Xla {
+        let handle = spawn_service(&cfg.artifacts_dir)?;
+        let report = if branch {
+            branch_simulation_with_xla(&cfg, &snap, Some(handle.clone()))
+        } else {
+            resume_simulation_with_xla(&cfg, &snap, Some(handle.clone()))
+        };
+        handle.shutdown();
+        report?
+    } else if branch {
+        branch_simulation_with_xla(&cfg, &snap, None)?
+    } else {
+        resume_simulation(&cfg, &snap)?
+    };
+    print!("{}", report.phase_table());
+    if let Some(csv) = args.get("csv") {
+        std::fs::write(csv, report.to_csv())?;
+        println!("wrote {csv}");
     }
     Ok(())
 }
@@ -159,10 +284,7 @@ fn cmd_quality(args: &Args) -> Result<()> {
         cfg.spike_alg = SpikeAlg::OldIds;
         cfg.connectivity_alg = ConnectivityAlg::OldRma;
     }
-    for kv in args.get_all("set") {
-        let (k, v) = kv.split_once('=').ok_or_else(|| anyhow!("bad --set {kv:?}"))?;
-        cfg.apply_kv(k.trim(), v.trim()).map_err(anyhow::Error::msg)?;
-    }
+    apply_set_flags(&mut cfg, args)?;
     let report = run_simulation(&cfg)?;
     print!("{}", report.phase_table());
     // CSV: step, ca_0..ca_31 (one column per neuron; one neuron per rank).

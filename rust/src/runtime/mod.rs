@@ -12,7 +12,13 @@
 //! "one accelerator shared by all ranks of a node" — and rank threads
 //! talk to it through a cloneable `XlaHandle`.
 
+mod pjrt_stub;
 mod service;
+
+// The real `xla` crate is not in the offline crate set; `pjrt_stub`
+// mirrors the API subset we call and errors at client construction.
+// Swap this alias for `use xla;` once the real bindings are available.
+use pjrt_stub as xla;
 
 pub use service::{spawn_service, NeuronInputs, XlaHandle};
 

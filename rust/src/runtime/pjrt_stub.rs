@@ -1,0 +1,108 @@
+//! Stub stand-in for the `xla` crate (PJRT bindings).
+//!
+//! The offline crate set does not ship `xla_extension`, so this module
+//! mirrors the exact API surface `XlaRuntime` consumes and fails at
+//! client construction with a descriptive error. Everything upstream of
+//! the PJRT boundary — manifest parsing, the service thread, the
+//! native mirror of the kernels — keeps compiling and running; only
+//! `Backend::Xla` execution is unavailable.
+//!
+//! To re-enable the real runtime: add the `xla` crate to
+//! `rust/Cargo.toml`, delete this module, and restore `use xla;` in
+//! `runtime/mod.rs`. No other code changes are needed — the stub types
+//! are signature-compatible with the subset of `xla` we call.
+
+use std::fmt;
+
+/// Error type standing in for `xla::Error` (only `Display` is consumed).
+pub struct XlaError(pub String);
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl fmt::Debug for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "XlaError({})", self.0)
+    }
+}
+
+fn unavailable() -> XlaError {
+    XlaError(
+        "PJRT runtime unavailable: this build uses the stub in \
+         runtime/pjrt_stub.rs (the offline crate set has no xla_extension). \
+         Use the native backend, or add the real `xla` crate to re-enable \
+         Backend::Xla."
+            .to_string(),
+    )
+}
+
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, XlaError> {
+        Err(unavailable())
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, XlaError> {
+        Err(unavailable())
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+}
+
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto, XlaError> {
+        Err(unavailable())
+    }
+}
+
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _inputs: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, XlaError> {
+        Err(unavailable())
+    }
+}
+
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, XlaError> {
+        Err(unavailable())
+    }
+}
+
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1(_xs: &[f32]) -> Literal {
+        Literal
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>, XlaError> {
+        Err(unavailable())
+    }
+
+    pub fn to_tuple1(self) -> Result<Literal, XlaError> {
+        Err(unavailable())
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, XlaError> {
+        Err(unavailable())
+    }
+}

@@ -1,0 +1,781 @@
+//! The versioned binary snapshot format (little-endian throughout).
+//!
+//! Layout of one snapshot file:
+//!
+//! ```text
+//! header:
+//!   magic              8 B   b"ILMISNAP"
+//!   format_version     u32   = 1
+//!   config_fingerprint u64   FNV-1a over the dynamics-relevant config
+//!   next_step          u64   first step index the resumed run executes
+//!   ranks              u32
+//!   neurons_per_rank   u32
+//!   config_ini_len     u32
+//!   config_ini         ..    the full config, `SimConfig::to_ini` text
+//! sections (one per rank, in rank order):
+//!   rank               u32
+//!   section_len        u64
+//!   section            ..    see `RankSection::encode`
+//! ```
+//!
+//! A rank section captures everything `RankState::restore` needs for a
+//! bit-exact resume: the `Population` arrays, the full `SynapseStore`,
+//! all three PRNG streams (including the cached polar-method spare
+//! normal), the `FrequencyExchange` table, and the report baselines
+//! (communication counters, formation/deletion statistics, calcium
+//! trace) so a resumed run's final `SimReport` equals the straight
+//! run's. The octree is NOT stored — it is rebuilt from positions on
+//! load, and its per-update aggregates are recomputed from scratch at
+//! every plasticity phase anyway.
+//!
+//! The encoding deliberately reuses the `util::wire` primitives used by
+//! the inter-rank message codecs; decoding goes through the checked
+//! `wire::Cursor` so truncated or corrupt files produce descriptive
+//! errors instead of panics.
+
+use crate::barnes_hut::FormationStats;
+use crate::comm::CounterSnapshot;
+use crate::config::{ConnectivityAlg, NeuronModel, SimConfig, SpikeAlg};
+use crate::plasticity::DeletionStats;
+use crate::util::wire::{put_f32, put_f64, put_u32, put_u64, put_u8, Cursor};
+use crate::util::{RngState, Vec3};
+
+/// File magic: identifies an ILMI snapshot.
+pub const MAGIC: [u8; 8] = *b"ILMISNAP";
+
+/// Current snapshot format version. Bump on any layout change; the
+/// reader rejects other versions with a descriptive error.
+pub const FORMAT_VERSION: u32 = 1;
+
+/// File extension snapshots are written with.
+pub const SNAPSHOT_EXT: &str = "ilmisnap";
+
+fn fnv1a(hash: u64, bytes: &[u8]) -> u64 {
+    let mut h = hash;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// Fingerprint of every config field that influences the simulation
+/// *dynamics*. Two configs with equal fingerprints produce identical
+/// trajectories from identical state, so resuming under a mismatched
+/// fingerprint is refused (unless explicitly branching). Schedule
+/// length, backend and instrumentation are excluded: changing them does
+/// not invalidate saved state.
+pub fn config_fingerprint(cfg: &SimConfig) -> u64 {
+    let mut buf = Vec::with_capacity(256);
+    put_u64(&mut buf, cfg.ranks as u64);
+    put_u64(&mut buf, cfg.neurons_per_rank as u64);
+    put_f64(&mut buf, cfg.domain_size);
+    put_u64(&mut buf, cfg.seed);
+    put_u64(&mut buf, cfg.plasticity_interval as u64);
+    put_u64(&mut buf, cfg.delta as u64);
+    put_u8(
+        &mut buf,
+        match cfg.connectivity_alg {
+            ConnectivityAlg::OldRma => 0,
+            ConnectivityAlg::NewLocationAware => 1,
+            ConnectivityAlg::Direct => 2,
+        },
+    );
+    put_u8(
+        &mut buf,
+        match cfg.spike_alg {
+            SpikeAlg::OldIds => 0,
+            SpikeAlg::NewFrequency => 1,
+        },
+    );
+    put_u8(
+        &mut buf,
+        match cfg.neuron_model {
+            NeuronModel::Izhikevich => 0,
+            NeuronModel::Poisson => 1,
+        },
+    );
+    put_f64(&mut buf, cfg.theta);
+    put_f64(&mut buf, cfg.sigma);
+    put_f64(&mut buf, cfg.frac_excitatory);
+    put_f64(&mut buf, cfg.init_elements_lo);
+    put_f64(&mut buf, cfg.init_elements_hi);
+    put_f64(&mut buf, cfg.bg_mean);
+    put_f64(&mut buf, cfg.bg_std);
+    for p in cfg.neuron.to_vec() {
+        put_f32(&mut buf, p);
+    }
+    fnv1a(0xcbf2_9ce4_8422_2325, &buf)
+}
+
+/// Parsed snapshot header (everything before the rank sections).
+#[derive(Clone, Debug)]
+pub struct SnapshotHeader {
+    pub version: u32,
+    pub fingerprint: u64,
+    /// First step index the resumed run executes (= steps completed).
+    pub next_step: u64,
+    pub ranks: u32,
+    pub neurons_per_rank: u32,
+    /// The originating config, serialized with `SimConfig::to_ini`.
+    pub config_ini: String,
+}
+
+impl SnapshotHeader {
+    pub fn for_config(cfg: &SimConfig, next_step: u64) -> SnapshotHeader {
+        SnapshotHeader {
+            version: FORMAT_VERSION,
+            fingerprint: config_fingerprint(cfg),
+            next_step,
+            ranks: cfg.ranks as u32,
+            neurons_per_rank: cfg.neurons_per_rank as u32,
+            config_ini: cfg.to_ini(),
+        }
+    }
+
+    pub fn encode(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&MAGIC);
+        put_u32(out, self.version);
+        put_u64(out, self.fingerprint);
+        put_u64(out, self.next_step);
+        put_u32(out, self.ranks);
+        put_u32(out, self.neurons_per_rank);
+        put_u32(out, self.config_ini.len() as u32);
+        out.extend_from_slice(self.config_ini.as_bytes());
+    }
+
+    pub fn decode(c: &mut Cursor<'_>) -> Result<SnapshotHeader, String> {
+        let magic = c.bytes(8, "magic")?;
+        if magic != MAGIC {
+            return Err(format!(
+                "not an ILMI snapshot: bad magic {:02x?} (expected {:02x?})",
+                magic, MAGIC
+            ));
+        }
+        let version = c.u32("format version")?;
+        if version != FORMAT_VERSION {
+            return Err(format!(
+                "unsupported snapshot format version {version}: this build reads \
+                 version {FORMAT_VERSION} only"
+            ));
+        }
+        let fingerprint = c.u64("config fingerprint")?;
+        let next_step = c.u64("step counter")?;
+        let ranks = c.u32("rank count")?;
+        let neurons_per_rank = c.u32("neurons per rank")?;
+        let ini_len = c.u32("config length")? as usize;
+        let ini = c.bytes(ini_len, "config text")?;
+        let config_ini = String::from_utf8(ini.to_vec())
+            .map_err(|_| "snapshot: embedded config is not valid UTF-8".to_string())?;
+        Ok(SnapshotHeader {
+            version,
+            fingerprint,
+            next_step,
+            ranks,
+            neurons_per_rank,
+            config_ini,
+        })
+    }
+}
+
+fn put_rng(out: &mut Vec<u8>, st: &RngState) {
+    for w in st.s {
+        put_u64(out, w);
+    }
+    match st.spare_normal {
+        Some(z) => {
+            put_u8(out, 1);
+            put_f64(out, z);
+        }
+        None => {
+            put_u8(out, 0);
+            put_f64(out, 0.0);
+        }
+    }
+}
+
+fn read_rng(c: &mut Cursor<'_>, what: &str) -> Result<RngState, String> {
+    let mut s = [0u64; 4];
+    for w in s.iter_mut() {
+        *w = c.u64(what)?;
+    }
+    let has_spare = c.u8(what)?;
+    let spare = c.f64(what)?;
+    Ok(RngState {
+        s,
+        spare_normal: if has_spare != 0 { Some(spare) } else { None },
+    })
+}
+
+/// One rank's complete captured state.
+#[derive(Clone, Debug)]
+pub struct RankSection {
+    // -- population -----------------------------------------------------
+    pub first_id: u64,
+    pub positions: Vec<Vec3>,
+    pub is_excitatory: Vec<bool>,
+    pub v: Vec<f32>,
+    pub u: Vec<f32>,
+    pub ca: Vec<f32>,
+    pub z_ax: Vec<f32>,
+    pub z_den_exc: Vec<f32>,
+    pub z_den_inh: Vec<f32>,
+    pub i_syn: Vec<f32>,
+    pub noise: Vec<f32>,
+    pub fired: Vec<bool>,
+    pub epoch_spikes: Vec<u32>,
+    // -- synapse store --------------------------------------------------
+    pub out_edges: Vec<Vec<u64>>,
+    /// (source id, source_exc) pairs per local target.
+    pub in_edges: Vec<Vec<(u64, bool)>>,
+    pub connected_ax: Vec<u32>,
+    pub connected_den_exc: Vec<u32>,
+    pub connected_den_inh: Vec<u32>,
+    // -- PRNG streams ---------------------------------------------------
+    pub rng_model: RngState,
+    pub rng_conn: RngState,
+    /// The `FrequencyExchange` reconstruction stream.
+    pub rng_spikes: RngState,
+    /// The `FrequencyExchange` dense frequency table (total_neurons).
+    pub freqs: Vec<f32>,
+    // -- report baselines (so a resumed SimReport equals a straight run)
+    pub baseline_comm: CounterSnapshot,
+    pub spike_lookups: u64,
+    pub deletion: DeletionStats,
+    pub formation: FormationStats,
+    pub calcium_trace: Vec<(u64, Vec<f32>)>,
+}
+
+impl RankSection {
+    /// Number of local neurons this section describes.
+    pub fn len(&self) -> usize {
+        self.positions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.positions.is_empty()
+    }
+
+    /// Cross-check the synapse arrays without building a
+    /// `SynapseStore`: bound-element counters vs edge lists (mirrors
+    /// `SynapseStore::check_invariants`) plus every edge id being a
+    /// valid global neuron id below `total_neurons` — a corrupt id
+    /// would otherwise pass counter checks and index out of bounds
+    /// deep inside the spike exchange. Lets callers reject a corrupt
+    /// section before any simulation state is constructed.
+    pub fn check_synapse_consistency(&self, total_neurons: u64) -> Result<(), String> {
+        for i in 0..self.len() {
+            if self.out_edges[i].len() != self.connected_ax[i] as usize {
+                return Err(format!("neuron {i}: out edges vs connected_ax mismatch"));
+            }
+            if let Some(&tgt) = self.out_edges[i].iter().find(|&&t| t >= total_neurons) {
+                return Err(format!(
+                    "neuron {i}: out-edge target {tgt} out of range (total neurons \
+                     {total_neurons})"
+                ));
+            }
+            let exc = self.in_edges[i].iter().filter(|(_, exc)| *exc).count();
+            let inh = self.in_edges[i].len() - exc;
+            if exc != self.connected_den_exc[i] as usize {
+                return Err(format!("neuron {i}: exc in-edges mismatch"));
+            }
+            if inh != self.connected_den_inh[i] as usize {
+                return Err(format!("neuron {i}: inh in-edges mismatch"));
+            }
+            if let Some(&(src, _)) = self.in_edges[i].iter().find(|&&(s, _)| s >= total_neurons) {
+                return Err(format!(
+                    "neuron {i}: in-edge source {src} out of range (total neurons \
+                     {total_neurons})"
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let n = self.len();
+        let mut out = Vec::with_capacity(64 + n * 64);
+        put_u64(&mut out, self.first_id);
+        put_u32(&mut out, n as u32);
+        for p in &self.positions {
+            put_f64(&mut out, p.x);
+            put_f64(&mut out, p.y);
+            put_f64(&mut out, p.z);
+        }
+        for &e in &self.is_excitatory {
+            put_u8(&mut out, u8::from(e));
+        }
+        for arr in [
+            &self.v,
+            &self.u,
+            &self.ca,
+            &self.z_ax,
+            &self.z_den_exc,
+            &self.z_den_inh,
+            &self.i_syn,
+            &self.noise,
+        ] {
+            for &x in arr.iter() {
+                put_f32(&mut out, x);
+            }
+        }
+        for &f in &self.fired {
+            put_u8(&mut out, u8::from(f));
+        }
+        for &s in &self.epoch_spikes {
+            put_u32(&mut out, s);
+        }
+        for edges in &self.out_edges {
+            put_u32(&mut out, edges.len() as u32);
+            for &tgt in edges {
+                put_u64(&mut out, tgt);
+            }
+        }
+        for edges in &self.in_edges {
+            put_u32(&mut out, edges.len() as u32);
+            for &(src, exc) in edges {
+                put_u64(&mut out, src);
+                put_u8(&mut out, u8::from(exc));
+            }
+        }
+        for arr in [&self.connected_ax, &self.connected_den_exc, &self.connected_den_inh] {
+            for &c in arr.iter() {
+                put_u32(&mut out, c);
+            }
+        }
+        put_rng(&mut out, &self.rng_model);
+        put_rng(&mut out, &self.rng_conn);
+        put_rng(&mut out, &self.rng_spikes);
+        put_u32(&mut out, self.freqs.len() as u32);
+        for &f in &self.freqs {
+            put_f32(&mut out, f);
+        }
+        for c in [
+            self.baseline_comm.bytes_sent,
+            self.baseline_comm.bytes_recv,
+            self.baseline_comm.bytes_rma,
+            self.baseline_comm.msgs_sent,
+            self.baseline_comm.collectives,
+            self.baseline_comm.rma_gets,
+        ] {
+            put_u64(&mut out, c);
+        }
+        put_u64(&mut out, self.spike_lookups);
+        put_u64(&mut out, self.deletion.axonal_retractions);
+        put_u64(&mut out, self.deletion.dendritic_retractions);
+        put_u64(&mut out, self.deletion.notifications_sent);
+        put_u64(&mut out, self.formation.searches);
+        put_u64(&mut out, self.formation.failed_searches);
+        put_u64(&mut out, self.formation.proposals);
+        put_u64(&mut out, self.formation.formed);
+        put_u64(&mut out, self.formation.declined);
+        put_u64(&mut out, self.formation.compute_nanos);
+        put_u64(&mut out, self.formation.exchange_nanos);
+        put_u32(&mut out, self.calcium_trace.len() as u32);
+        for (step, cas) in &self.calcium_trace {
+            put_u64(&mut out, *step);
+            for &ca in cas {
+                put_f32(&mut out, ca);
+            }
+        }
+        out
+    }
+
+    /// Decode one rank section. `expect_n` is the per-rank neuron count
+    /// from the snapshot header (every array length must match it).
+    ///
+    /// All `Vec` capacities are clamped to what the remaining bytes
+    /// could possibly hold: length prefixes are untrusted input, and a
+    /// corrupt count must produce the per-element truncation error, not
+    /// a multi-gigabyte up-front allocation.
+    pub fn decode(buf: &[u8], expect_n: usize) -> Result<RankSection, String> {
+        fn cap(count: usize, elem_bytes: usize, remaining: usize) -> usize {
+            count.min(remaining / elem_bytes.max(1))
+        }
+        let mut c = Cursor::new(buf, "snapshot rank section");
+        let first_id = c.u64("first neuron id")?;
+        let n = c.u32("neuron count")? as usize;
+        if n != expect_n {
+            return Err(format!(
+                "rank section holds {n} neurons but the header says {expect_n} per rank"
+            ));
+        }
+        let mut positions = Vec::with_capacity(cap(n, 24, c.remaining()));
+        for _ in 0..n {
+            let x = c.f64("positions")?;
+            let y = c.f64("positions")?;
+            let z = c.f64("positions")?;
+            positions.push(Vec3::new(x, y, z));
+        }
+        let mut is_excitatory = Vec::with_capacity(cap(n, 1, c.remaining()));
+        for _ in 0..n {
+            is_excitatory.push(c.u8("is_excitatory")? != 0);
+        }
+        let mut f32_array = |what: &'static str| -> Result<Vec<f32>, String> {
+            let mut xs = Vec::with_capacity(cap(n, 4, c.remaining()));
+            for _ in 0..n {
+                xs.push(c.f32(what)?);
+            }
+            Ok(xs)
+        };
+        let v = f32_array("v")?;
+        let u = f32_array("u")?;
+        let ca = f32_array("ca")?;
+        let z_ax = f32_array("z_ax")?;
+        let z_den_exc = f32_array("z_den_exc")?;
+        let z_den_inh = f32_array("z_den_inh")?;
+        let i_syn = f32_array("i_syn")?;
+        let noise = f32_array("noise")?;
+        let mut fired = Vec::with_capacity(cap(n, 1, c.remaining()));
+        for _ in 0..n {
+            fired.push(c.u8("fired")? != 0);
+        }
+        let mut epoch_spikes = Vec::with_capacity(cap(n, 4, c.remaining()));
+        for _ in 0..n {
+            epoch_spikes.push(c.u32("epoch_spikes")?);
+        }
+        let mut out_edges = Vec::with_capacity(cap(n, 4, c.remaining()));
+        for _ in 0..n {
+            let len = c.u32("out-edge count")? as usize;
+            let mut edges = Vec::with_capacity(cap(len, 8, c.remaining()));
+            for _ in 0..len {
+                edges.push(c.u64("out edge")?);
+            }
+            out_edges.push(edges);
+        }
+        let mut in_edges = Vec::with_capacity(cap(n, 4, c.remaining()));
+        for _ in 0..n {
+            let len = c.u32("in-edge count")? as usize;
+            let mut edges = Vec::with_capacity(cap(len, 9, c.remaining()));
+            for _ in 0..len {
+                let src = c.u64("in edge")?;
+                let exc = c.u8("in edge kind")? != 0;
+                edges.push((src, exc));
+            }
+            in_edges.push(edges);
+        }
+        let mut u32_array = |what: &'static str| -> Result<Vec<u32>, String> {
+            let mut xs = Vec::with_capacity(cap(n, 4, c.remaining()));
+            for _ in 0..n {
+                xs.push(c.u32(what)?);
+            }
+            Ok(xs)
+        };
+        let connected_ax = u32_array("connected_ax")?;
+        let connected_den_exc = u32_array("connected_den_exc")?;
+        let connected_den_inh = u32_array("connected_den_inh")?;
+        let rng_model = read_rng(&mut c, "model rng")?;
+        let rng_conn = read_rng(&mut c, "connectivity rng")?;
+        let rng_spikes = read_rng(&mut c, "spike rng")?;
+        let freq_len = c.u32("frequency table length")? as usize;
+        let mut freqs = Vec::with_capacity(cap(freq_len, 4, c.remaining()));
+        for _ in 0..freq_len {
+            freqs.push(c.f32("frequency table")?);
+        }
+        let baseline_comm = CounterSnapshot {
+            bytes_sent: c.u64("comm counters")?,
+            bytes_recv: c.u64("comm counters")?,
+            bytes_rma: c.u64("comm counters")?,
+            msgs_sent: c.u64("comm counters")?,
+            collectives: c.u64("comm counters")?,
+            rma_gets: c.u64("comm counters")?,
+        };
+        let spike_lookups = c.u64("spike lookups")?;
+        let deletion = DeletionStats {
+            axonal_retractions: c.u64("deletion stats")?,
+            dendritic_retractions: c.u64("deletion stats")?,
+            notifications_sent: c.u64("deletion stats")?,
+        };
+        let formation = FormationStats {
+            searches: c.u64("formation stats")?,
+            failed_searches: c.u64("formation stats")?,
+            proposals: c.u64("formation stats")?,
+            formed: c.u64("formation stats")?,
+            declined: c.u64("formation stats")?,
+            compute_nanos: c.u64("formation stats")?,
+            exchange_nanos: c.u64("formation stats")?,
+        };
+        let trace_len = c.u32("calcium trace length")? as usize;
+        let mut calcium_trace = Vec::with_capacity(cap(trace_len, 8 + 4 * n, c.remaining()));
+        for _ in 0..trace_len {
+            let step = c.u64("calcium trace step")?;
+            let mut cas = Vec::with_capacity(cap(n, 4, c.remaining()));
+            for _ in 0..n {
+                cas.push(c.f32("calcium trace")?);
+            }
+            calcium_trace.push((step, cas));
+        }
+        c.finish("rank section")?;
+        Ok(RankSection {
+            first_id,
+            positions,
+            is_excitatory,
+            v,
+            u,
+            ca,
+            z_ax,
+            z_den_exc,
+            z_den_inh,
+            i_syn,
+            noise,
+            fired,
+            epoch_spikes,
+            out_edges,
+            in_edges,
+            connected_ax,
+            connected_den_exc,
+            connected_den_inh,
+            rng_model,
+            rng_conn,
+            rng_spikes,
+            freqs,
+            baseline_comm,
+            spike_lookups,
+            deletion,
+            formation,
+            calcium_trace,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn sample_section(n: usize, seed: u64) -> RankSection {
+        let mut rng = Rng::new(seed);
+        let mut model = Rng::new(seed + 1);
+        model.normal(); // leave a spare normal cached
+        RankSection {
+            first_id: 3 * n as u64,
+            positions: (0..n)
+                .map(|_| Vec3::new(rng.uniform(0.0, 9.0), rng.uniform(0.0, 9.0), rng.next_f64()))
+                .collect(),
+            is_excitatory: (0..n).map(|i| i % 3 != 0).collect(),
+            v: (0..n).map(|_| rng.next_f32()).collect(),
+            u: (0..n).map(|_| rng.next_f32()).collect(),
+            ca: (0..n).map(|_| rng.next_f32()).collect(),
+            z_ax: (0..n).map(|_| rng.next_f32()).collect(),
+            z_den_exc: (0..n).map(|_| rng.next_f32()).collect(),
+            z_den_inh: (0..n).map(|_| rng.next_f32()).collect(),
+            i_syn: (0..n).map(|_| rng.next_f32()).collect(),
+            noise: (0..n).map(|_| rng.next_f32()).collect(),
+            fired: (0..n).map(|i| i % 2 == 0).collect(),
+            epoch_spikes: (0..n).map(|i| i as u32).collect(),
+            out_edges: (0..n).map(|i| (0..i % 4).map(|k| k as u64).collect()).collect(),
+            in_edges: (0..n)
+                .map(|i| (0..i % 3).map(|k| (10 + k as u64, k % 2 == 0)).collect())
+                .collect(),
+            // Counters derived from the edge lists above so the
+            // consistency checks hold: out_edges[i] has i % 4 entries;
+            // in_edges[i] has i % 3 entries alternating exc/inh
+            // starting with exc (k % 2 == 0).
+            connected_ax: (0..n).map(|i| (i % 4) as u32).collect(),
+            connected_den_exc: (0..n).map(|i| ((i % 3) as u32 + 1) / 2).collect(),
+            connected_den_inh: (0..n).map(|i| (i % 3) as u32 / 2).collect(),
+            rng_model: model.state(),
+            rng_conn: Rng::new(seed + 2).state(),
+            rng_spikes: Rng::new(seed + 3).state(),
+            freqs: (0..4 * n).map(|_| rng.next_f32()).collect(),
+            baseline_comm: CounterSnapshot {
+                bytes_sent: 123,
+                bytes_recv: 456,
+                bytes_rma: 7,
+                msgs_sent: 8,
+                collectives: 9,
+                rma_gets: 1,
+            },
+            spike_lookups: 42,
+            deletion: DeletionStats {
+                axonal_retractions: 1,
+                dendritic_retractions: 2,
+                notifications_sent: 3,
+            },
+            formation: FormationStats {
+                searches: 4,
+                failed_searches: 5,
+                proposals: 6,
+                formed: 7,
+                declined: 8,
+                compute_nanos: 9,
+                exchange_nanos: 10,
+            },
+            calcium_trace: vec![(0, vec![0.5; n]), (100, vec![0.25; n])],
+        }
+    }
+
+    #[test]
+    fn rank_section_roundtrips_bit_exactly() {
+        let sec = sample_section(13, 99);
+        let buf = sec.encode();
+        let back = RankSection::decode(&buf, 13).unwrap();
+        assert_eq!(back.first_id, sec.first_id);
+        assert_eq!(back.positions, sec.positions);
+        assert_eq!(back.is_excitatory, sec.is_excitatory);
+        for (a, b) in [
+            (&back.v, &sec.v),
+            (&back.u, &sec.u),
+            (&back.ca, &sec.ca),
+            (&back.z_ax, &sec.z_ax),
+            (&back.z_den_exc, &sec.z_den_exc),
+            (&back.z_den_inh, &sec.z_den_inh),
+            (&back.i_syn, &sec.i_syn),
+            (&back.noise, &sec.noise),
+        ] {
+            let a_bits: Vec<u32> = a.iter().map(|x| x.to_bits()).collect();
+            let b_bits: Vec<u32> = b.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(a_bits, b_bits);
+        }
+        assert_eq!(back.fired, sec.fired);
+        assert_eq!(back.epoch_spikes, sec.epoch_spikes);
+        assert_eq!(back.out_edges, sec.out_edges);
+        assert_eq!(back.in_edges, sec.in_edges);
+        assert_eq!(back.connected_ax, sec.connected_ax);
+        assert_eq!(back.connected_den_exc, sec.connected_den_exc);
+        assert_eq!(back.connected_den_inh, sec.connected_den_inh);
+        assert_eq!(back.rng_model, sec.rng_model);
+        assert_eq!(back.rng_conn, sec.rng_conn);
+        assert_eq!(back.rng_spikes, sec.rng_spikes);
+        assert_eq!(back.freqs, sec.freqs);
+        assert_eq!(back.baseline_comm, sec.baseline_comm);
+        assert_eq!(back.spike_lookups, sec.spike_lookups);
+        assert_eq!(back.deletion, sec.deletion);
+        assert_eq!(back.formation, sec.formation);
+        assert_eq!(back.calcium_trace, sec.calcium_trace);
+    }
+
+    #[test]
+    fn synapse_consistency_checks_counters_and_id_bounds() {
+        let sec = sample_section(5, 7);
+        // sample ids are all small: valid against a generous total.
+        sec.check_synapse_consistency(1_000).unwrap();
+
+        // Counter mismatch.
+        let mut bad = sec.clone();
+        bad.connected_ax[1] += 1;
+        assert!(bad.check_synapse_consistency(1_000).unwrap_err().contains("connected_ax"));
+
+        // Out-of-range target id with counters left consistent.
+        let mut bad = sec.clone();
+        if bad.out_edges[1].is_empty() {
+            bad.out_edges[1].push(0);
+            bad.connected_ax[1] += 1;
+        }
+        bad.out_edges[1][0] = 999_999;
+        let err = bad.check_synapse_consistency(1_000).unwrap_err();
+        assert!(err.contains("out of range"), "{err}");
+
+        // Out-of-range source id on the dendritic side.
+        let mut bad = sec.clone();
+        if bad.in_edges[2].is_empty() {
+            bad.in_edges[2].push((0, true));
+            bad.connected_den_exc[2] += 1;
+        }
+        bad.in_edges[2][0].0 = 999_999;
+        let err = bad.check_synapse_consistency(1_000).unwrap_err();
+        assert!(err.contains("out of range"), "{err}");
+    }
+
+    #[test]
+    fn corrupt_length_prefix_errors_without_huge_allocation() {
+        let n = 4usize;
+        let sec = sample_section(n, 3);
+        let mut buf = sec.encode();
+        // Offset of out_edges[0]'s length prefix: first_id(8) + n(4) +
+        // positions(24n) + is_excitatory(n) + 8 f32 arrays(32n) +
+        // fired(n) + epoch_spikes(4n).
+        let off = 12 + 62 * n;
+        assert_eq!(
+            u32::from_le_bytes(buf[off..off + 4].try_into().unwrap()),
+            sec.out_edges[0].len() as u32,
+            "layout offset drifted; update this test"
+        );
+        buf[off..off + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+        // Must come back as a truncation error, not an abort on a
+        // ~32 GB up-front allocation.
+        let err = RankSection::decode(&buf, n).unwrap_err();
+        assert!(err.contains("truncated"), "{err}");
+    }
+
+    #[test]
+    fn truncated_section_is_a_descriptive_error() {
+        let sec = sample_section(5, 7);
+        let buf = sec.encode();
+        let err = RankSection::decode(&buf[..buf.len() / 2], 5).unwrap_err();
+        assert!(err.contains("truncated"), "{err}");
+    }
+
+    #[test]
+    fn neuron_count_mismatch_rejected() {
+        let sec = sample_section(5, 7);
+        let err = RankSection::decode(&sec.encode(), 6).unwrap_err();
+        assert!(err.contains("6 per rank"), "{err}");
+    }
+
+    #[test]
+    fn header_roundtrip_and_magic_check() {
+        let cfg = SimConfig::default();
+        let hdr = SnapshotHeader::for_config(&cfg, 500);
+        let mut buf = Vec::new();
+        hdr.encode(&mut buf);
+        let mut c = Cursor::new(&buf, "snapshot");
+        let back = SnapshotHeader::decode(&mut c).unwrap();
+        assert_eq!(back.version, FORMAT_VERSION);
+        assert_eq!(back.fingerprint, config_fingerprint(&cfg));
+        assert_eq!(back.next_step, 500);
+        assert_eq!(back.ranks, cfg.ranks as u32);
+        assert_eq!(back.neurons_per_rank, cfg.neurons_per_rank as u32);
+        assert_eq!(back.config_ini, cfg.to_ini());
+
+        let mut bad = buf.clone();
+        bad[0] = b'X';
+        let err = SnapshotHeader::decode(&mut Cursor::new(&bad, "snapshot")).unwrap_err();
+        assert!(err.contains("bad magic"), "{err}");
+    }
+
+    #[test]
+    fn wrong_version_rejected_descriptively() {
+        let cfg = SimConfig::default();
+        let hdr = SnapshotHeader::for_config(&cfg, 0);
+        let mut buf = Vec::new();
+        hdr.encode(&mut buf);
+        // Version field sits right after the 8-byte magic.
+        buf[8] = 99;
+        let err = SnapshotHeader::decode(&mut Cursor::new(&buf, "snapshot")).unwrap_err();
+        assert!(err.contains("version 99"), "{err}");
+        assert!(err.contains("version 1"), "{err}");
+    }
+
+    #[test]
+    fn fingerprint_tracks_dynamics_fields_only() {
+        let base = SimConfig::default();
+        let f0 = config_fingerprint(&base);
+
+        let mut steps = base.clone();
+        steps.steps += 1000;
+        assert_eq!(f0, config_fingerprint(&steps), "steps must not affect fingerprint");
+
+        let mut instr = base.clone();
+        instr.record_calcium_every = 7;
+        instr.checkpoint_every = 100;
+        instr.checkpoint_dir = "x".into();
+        assert_eq!(f0, config_fingerprint(&instr), "instrumentation must not affect it");
+
+        let mut seed = base.clone();
+        seed.seed += 1;
+        assert_ne!(f0, config_fingerprint(&seed));
+
+        let mut sigma = base.clone();
+        sigma.sigma += 1.0;
+        assert_ne!(f0, config_fingerprint(&sigma));
+
+        let mut alg = base.clone();
+        alg.connectivity_alg = ConnectivityAlg::OldRma;
+        assert_ne!(f0, config_fingerprint(&alg));
+
+        let mut params = base.clone();
+        params.neuron.a += 0.001;
+        assert_ne!(f0, config_fingerprint(&params), "neuron params are fingerprinted");
+    }
+}

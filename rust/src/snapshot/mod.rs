@@ -1,0 +1,36 @@
+//! Checkpoint/restore: versioned binary snapshots of the complete
+//! per-rank simulation state, with deterministic (bit-exact) resume and
+//! scenario branching.
+//!
+//! The paper's motivating use cases — predicting brain changes after
+//! learning, lesions, or development (§I, §VI) — all need long runs
+//! that reach equilibrium before the interesting protocol starts. This
+//! subsystem turns the reproduction into a restartable, branchable
+//! simulation service: grow a brain once, snapshot it, then fan out
+//! lesion / stimulus / parameter-sweep scenarios from the same saved
+//! state instead of regrowing the connectome per scenario.
+//!
+//! * [`format`] — the versioned little-endian file format (magic +
+//!   version + config fingerprint + per-rank sections) and what exactly
+//!   is captured for bit-exact resume. See `DESIGN.md` §6 for the spec.
+//! * [`writer`] — single-file assembly, atomic writes, and the
+//!   [`CheckpointSink`] the driver deposits per-rank sections into for
+//!   periodic in-run checkpoints (`SimConfig::checkpoint_every`).
+//! * [`reader`] — parsing plus layered validation: structural fit,
+//!   exact fingerprint match for resume, relaxed structural-only checks
+//!   for deliberate scenario branches.
+//!
+//! Determinism contract: running `2N` steps straight produces a
+//! `SimReport` identical (synapse counts, calcium, transferred bytes)
+//! to running `N` steps, checkpointing, and resuming for `N` more —
+//! the coordinator's tests assert this for both the old and the new
+//! algorithm pairs. Checkpoint I/O never touches the simulated-MPI
+//! communicator, so the paper's byte accounting is unaffected.
+
+pub mod format;
+pub mod reader;
+pub mod writer;
+
+pub use format::{config_fingerprint, RankSection, SnapshotHeader, FORMAT_VERSION, MAGIC};
+pub use reader::{latest_snapshot_in, Snapshot};
+pub use writer::{snapshot_file_name, write_snapshot, write_snapshot_sections, CheckpointSink};

@@ -1,0 +1,318 @@
+//! Snapshot reading and validation.
+//!
+//! `Snapshot::read_file` parses and structurally validates a snapshot;
+//! rank sections stay raw until `section(rank)` decodes them. (The
+//! driver deliberately decodes and validates every section up front on
+//! one thread before spawning ranks — an error inside a rank thread
+//! would strand its siblings at a collective barrier; the transient
+//! extra memory is the price of failing with a message instead of a
+//! deadlock.) Loading is defensive throughout: bad magic, unknown
+//! versions, truncation, oversized length prefixes, section/rank
+//! mismatches and config-fingerprint drift all produce descriptive
+//! errors instead of garbage state.
+
+use std::path::{Path, PathBuf};
+
+use super::format::{config_fingerprint, RankSection, SnapshotHeader, SNAPSHOT_EXT};
+use crate::config::SimConfig;
+use crate::util::wire::Cursor;
+
+/// A parsed snapshot: header plus raw (undecoded) per-rank sections.
+pub struct Snapshot {
+    header: SnapshotHeader,
+    sections: Vec<Vec<u8>>,
+}
+
+impl Snapshot {
+    /// Parse a snapshot from raw bytes.
+    pub fn from_bytes(buf: &[u8]) -> Result<Snapshot, String> {
+        let mut c = Cursor::new(buf, "snapshot");
+        let header = SnapshotHeader::decode(&mut c)?;
+        let ranks = header.ranks as usize;
+        // The ranks field is untrusted input: clamp the capacity to what
+        // the remaining bytes could hold (each section needs >= 12 B of
+        // framing) so a corrupt header errors on decode instead of
+        // triggering a huge up-front allocation.
+        let mut sections = Vec::with_capacity(ranks.min(c.remaining() / 12));
+        for expect_rank in 0..ranks {
+            let rank = c.u32("section rank id")? as usize;
+            if rank != expect_rank {
+                return Err(format!(
+                    "snapshot sections out of order: found rank {rank} where rank \
+                     {expect_rank} was expected"
+                ));
+            }
+            let len = c.u64("section length")? as usize;
+            sections.push(c.bytes(len, "rank section")?.to_vec());
+        }
+        c.finish("snapshot")?;
+        Ok(Snapshot { header, sections })
+    }
+
+    /// Read and parse a snapshot file.
+    pub fn read_file(path: impl AsRef<Path>) -> Result<Snapshot, String> {
+        let path = path.as_ref();
+        let buf = std::fs::read(path)
+            .map_err(|e| format!("reading snapshot {}: {e}", path.display()))?;
+        Self::from_bytes(&buf)
+            .map_err(|e| format!("{}: {e}", path.display()))
+    }
+
+    /// First step index a resumed run executes (= steps completed when
+    /// the snapshot was taken).
+    pub fn next_step(&self) -> usize {
+        self.header.next_step as usize
+    }
+
+    pub fn ranks(&self) -> usize {
+        self.header.ranks as usize
+    }
+
+    pub fn neurons_per_rank(&self) -> usize {
+        self.header.neurons_per_rank as usize
+    }
+
+    pub fn fingerprint(&self) -> u64 {
+        self.header.fingerprint
+    }
+
+    /// The embedded config INI text (as written by `SimConfig::to_ini`).
+    pub fn config_ini(&self) -> &str {
+        &self.header.config_ini
+    }
+
+    /// Reconstruct the originating config from the embedded INI and
+    /// cross-check it against the stored fingerprint (catches neuron
+    /// parameters that have no INI key and therefore cannot round-trip).
+    pub fn config(&self) -> Result<SimConfig, String> {
+        let cfg = SimConfig::from_ini(&self.header.config_ini)
+            .map_err(|e| format!("snapshot's embedded config does not parse: {e}"))?;
+        if config_fingerprint(&cfg) != self.header.fingerprint {
+            return Err(
+                "snapshot's embedded config does not reproduce its fingerprint — the \
+                 original run used parameters that are not INI-expressible; resume with \
+                 an explicit --config/--set matching the original run"
+                    .to_string(),
+            );
+        }
+        Ok(cfg)
+    }
+
+    /// Structural compatibility: the state arrays must fit `cfg`.
+    fn validate_structure(&self, cfg: &SimConfig) -> Result<(), String> {
+        if self.ranks() != cfg.ranks {
+            return Err(format!(
+                "snapshot was taken with {} ranks but the config asks for {}",
+                self.ranks(),
+                cfg.ranks
+            ));
+        }
+        if self.neurons_per_rank() != cfg.neurons_per_rank {
+            return Err(format!(
+                "snapshot was taken with {} neurons per rank but the config asks for {}",
+                self.neurons_per_rank(),
+                cfg.neurons_per_rank
+            ));
+        }
+        if cfg.steps <= self.next_step() {
+            return Err(format!(
+                "nothing to resume: snapshot already has {} steps completed but \
+                 schedule.steps is {}; raise --steps above {}",
+                self.next_step(),
+                cfg.steps,
+                self.next_step()
+            ));
+        }
+        Ok(())
+    }
+
+    /// Full validation for bit-exact resume: structure plus an exact
+    /// config-fingerprint match.
+    pub fn validate_for(&self, cfg: &SimConfig) -> Result<(), String> {
+        self.validate_structure(cfg)?;
+        let have = config_fingerprint(cfg);
+        if have != self.header.fingerprint {
+            return Err(format!(
+                "config fingerprint mismatch: snapshot {:016x} vs current config {:016x} — \
+                 a dynamics-relevant setting (seed, algorithms, model parameters, topology \
+                 or intervals) differs from the run that wrote this snapshot. Resume with \
+                 the original config, or pass --branch to deliberately fork a new scenario \
+                 from this state",
+                self.header.fingerprint, have
+            ));
+        }
+        Ok(())
+    }
+
+    /// Relaxed validation for scenario *branching*: the state must fit
+    /// structurally, but dynamics parameters may differ (that is the
+    /// point of a branch — same brain, different protocol).
+    pub fn validate_for_branch(&self, cfg: &SimConfig) -> Result<(), String> {
+        self.validate_structure(cfg)
+    }
+
+    /// Decode rank `rank`'s section.
+    pub fn section(&self, rank: usize) -> Result<RankSection, String> {
+        let raw = self.sections.get(rank).ok_or_else(|| {
+            format!("snapshot has no section for rank {rank} (ranks: {})", self.ranks())
+        })?;
+        RankSection::decode(raw, self.neurons_per_rank())
+            .map_err(|e| format!("rank {rank}: {e}"))
+    }
+}
+
+/// The newest snapshot file (`step_*.ilmisnap`, highest step) in `dir`.
+pub fn latest_snapshot_in(dir: impl AsRef<Path>) -> Result<PathBuf, String> {
+    let dir = dir.as_ref();
+    let entries = std::fs::read_dir(dir)
+        .map_err(|e| format!("reading checkpoint dir {}: {e}", dir.display()))?;
+    let mut best: Option<PathBuf> = None;
+    for entry in entries {
+        let path = entry.map_err(|e| format!("listing {}: {e}", dir.display()))?.path();
+        let is_snap = path
+            .extension()
+            .and_then(|e| e.to_str())
+            .map(|e| e == SNAPSHOT_EXT)
+            .unwrap_or(false);
+        if !is_snap {
+            continue;
+        }
+        // `step_{:010}` zero-padding makes lexicographic == numeric order.
+        if best.as_ref().map(|b| path.file_name() > b.file_name()).unwrap_or(true) {
+            best = Some(path);
+        }
+    }
+    best.ok_or_else(|| format!("no *.{SNAPSHOT_EXT} files in {}", dir.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::writer::write_snapshot_sections;
+    use super::*;
+    use crate::snapshot::format::FORMAT_VERSION;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "ilmi_snap_test_{tag}_{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn tiny_cfg() -> SimConfig {
+        SimConfig { ranks: 2, neurons_per_rank: 4, steps: 100, ..SimConfig::default() }
+    }
+
+    fn tiny_sections(cfg: &SimConfig) -> Vec<RankSection> {
+        use crate::util::{Rng, Vec3};
+        (0..cfg.ranks)
+            .map(|rank| {
+                let n = cfg.neurons_per_rank;
+                RankSection {
+                    first_id: (rank * n) as u64,
+                    positions: vec![Vec3::new(1.0, 2.0, 3.0); n],
+                    is_excitatory: vec![true; n],
+                    v: vec![-65.0; n],
+                    u: vec![-13.0; n],
+                    ca: vec![0.1; n],
+                    z_ax: vec![1.2; n],
+                    z_den_exc: vec![1.3; n],
+                    z_den_inh: vec![1.4; n],
+                    i_syn: vec![0.0; n],
+                    noise: vec![0.0; n],
+                    fired: vec![false; n],
+                    epoch_spikes: vec![0; n],
+                    out_edges: vec![Vec::new(); n],
+                    in_edges: vec![Vec::new(); n],
+                    connected_ax: vec![0; n],
+                    connected_den_exc: vec![0; n],
+                    connected_den_inh: vec![0; n],
+                    rng_model: Rng::new(1).state(),
+                    rng_conn: Rng::new(2).state(),
+                    rng_spikes: Rng::new(3).state(),
+                    freqs: vec![0.0; cfg.total_neurons()],
+                    baseline_comm: Default::default(),
+                    spike_lookups: 0,
+                    deletion: Default::default(),
+                    formation: Default::default(),
+                    calcium_trace: Vec::new(),
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn file_roundtrip_and_latest_selection() {
+        let dir = tmp_dir("roundtrip");
+        let cfg = tiny_cfg();
+        let sections = tiny_sections(&cfg);
+        for step in [10u64, 50, 30] {
+            let path = dir.join(super::super::writer::snapshot_file_name(step));
+            write_snapshot_sections(&path, &cfg, step, &sections).unwrap();
+        }
+        let latest = latest_snapshot_in(&dir).unwrap();
+        let snap = Snapshot::read_file(&latest).unwrap();
+        assert_eq!(snap.next_step(), 50);
+        assert_eq!(snap.ranks(), 2);
+        assert_eq!(snap.neurons_per_rank(), 4);
+        let sec = snap.section(1).unwrap();
+        assert_eq!(sec.first_id, 4);
+        assert_eq!(sec.positions.len(), 4);
+        let cfg_back = snap.config().unwrap();
+        assert_eq!(cfg_back.ranks, cfg.ranks);
+        snap.validate_for(&cfg_back).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn mismatched_config_is_rejected_with_details() {
+        let dir = tmp_dir("mismatch");
+        let cfg = tiny_cfg();
+        let path = dir.join("one.ilmisnap");
+        write_snapshot_sections(&path, &cfg, 10, &tiny_sections(&cfg)).unwrap();
+        let snap = Snapshot::read_file(&path).unwrap();
+
+        let mut other_seed = cfg.clone();
+        other_seed.seed += 1;
+        let err = snap.validate_for(&other_seed).unwrap_err();
+        assert!(err.contains("fingerprint mismatch"), "{err}");
+        // ...but branching from the same structure is allowed.
+        snap.validate_for_branch(&other_seed).unwrap();
+
+        let mut other_ranks = cfg.clone();
+        other_ranks.ranks = 4;
+        let err = snap.validate_for_branch(&other_ranks).unwrap_err();
+        assert!(err.contains("2 ranks"), "{err}");
+
+        let mut done = cfg.clone();
+        done.steps = 10;
+        let err = snap.validate_for(&done).unwrap_err();
+        assert!(err.contains("nothing to resume"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corrupt_files_error_instead_of_garbage() {
+        let dir = tmp_dir("corrupt");
+        let cfg = tiny_cfg();
+        let path = dir.join("snap.ilmisnap");
+        write_snapshot_sections(&path, &cfg, 10, &tiny_sections(&cfg)).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+
+        // Bad magic.
+        let mut bad = bytes.clone();
+        bad[3] ^= 0xFF;
+        assert!(Snapshot::from_bytes(&bad).unwrap_err().contains("bad magic"));
+
+        // Unsupported version.
+        let mut bad = bytes.clone();
+        bad[8] = FORMAT_VERSION as u8 + 9;
+        assert!(Snapshot::from_bytes(&bad).unwrap_err().contains("unsupported"));
+
+        // Truncation.
+        bytes.truncate(bytes.len() - 7);
+        assert!(Snapshot::from_bytes(&bytes).unwrap_err().contains("truncated"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,160 @@
+//! Snapshot writing: single-file assembly plus the in-run
+//! `CheckpointSink` that collects per-rank sections and writes one
+//! complete snapshot file per checkpoint step.
+//!
+//! Checkpoint I/O is deliberately invisible to the simulation: capture
+//! only *reads* rank state, sections travel through shared process
+//! memory (not the simulated-MPI communicator, whose byte counters
+//! reproduce the paper's tables and must not see checkpoint traffic),
+//! and files are written atomically (temp file + rename) so a crash
+//! mid-write never leaves a half-snapshot behind.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use super::format::{RankSection, SnapshotHeader, SNAPSHOT_EXT};
+use crate::config::SimConfig;
+use crate::util::wire::{put_u32, put_u64};
+
+/// Canonical file name of the checkpoint taken with `next_step` steps
+/// completed: `step_0000001000.ilmisnap`.
+pub fn snapshot_file_name(next_step: u64) -> String {
+    format!("step_{next_step:010}.{SNAPSHOT_EXT}")
+}
+
+/// Assemble and atomically write one snapshot file from already-encoded
+/// per-rank sections (`sections[r]` = rank r, see `RankSection::encode`).
+pub fn write_snapshot(
+    path: &Path,
+    cfg: &SimConfig,
+    next_step: u64,
+    sections: &[Vec<u8>],
+) -> Result<(), String> {
+    if sections.len() != cfg.ranks {
+        return Err(format!(
+            "snapshot needs one section per rank: got {} for {} ranks",
+            sections.len(),
+            cfg.ranks
+        ));
+    }
+    let mut buf = Vec::with_capacity(
+        64 + sections.iter().map(|s| s.len() + 12).sum::<usize>(),
+    );
+    SnapshotHeader::for_config(cfg, next_step).encode(&mut buf);
+    for (rank, section) in sections.iter().enumerate() {
+        put_u32(&mut buf, rank as u32);
+        put_u64(&mut buf, section.len() as u64);
+        buf.extend_from_slice(section);
+    }
+    let tmp = path.with_extension("ilmisnap.tmp");
+    std::fs::write(&tmp, &buf)
+        .map_err(|e| format!("writing snapshot {}: {e}", tmp.display()))?;
+    std::fs::rename(&tmp, path)
+        .map_err(|e| format!("renaming snapshot into place at {}: {e}", path.display()))?;
+    Ok(())
+}
+
+/// Convenience for callers holding decoded sections (examples, tests).
+pub fn write_snapshot_sections(
+    path: &Path,
+    cfg: &SimConfig,
+    next_step: u64,
+    sections: &[RankSection],
+) -> Result<(), String> {
+    let encoded: Vec<Vec<u8>> = sections.iter().map(|s| s.encode()).collect();
+    write_snapshot(path, cfg, next_step, &encoded)
+}
+
+/// Collects per-rank sections during a run and writes one snapshot file
+/// per checkpoint step once every rank has deposited. Rank threads call
+/// `deposit` concurrently; the last depositor of a step performs the
+/// file write, so no barrier beyond the one the simulation step already
+/// implies is added.
+pub struct CheckpointSink {
+    dir: PathBuf,
+    cfg: SimConfig,
+    /// next_step -> per-rank section slots.
+    pending: Mutex<HashMap<u64, Vec<Option<Vec<u8>>>>>,
+    /// First failure, kept for end-of-run reporting. Checkpoint I/O
+    /// errors must NOT abort one rank's step loop mid-run: the other
+    /// ranks would block forever at their next collective barrier. The
+    /// driver records failures here, keeps simulating, and surfaces
+    /// the error after all ranks have joined.
+    first_error: Mutex<Option<String>>,
+}
+
+impl CheckpointSink {
+    /// Create the sink (and the checkpoint directory).
+    pub fn create(cfg: &SimConfig) -> Result<CheckpointSink, String> {
+        if cfg.checkpoint_dir.is_empty() {
+            return Err("checkpoint sink needs a non-empty checkpoint_dir".to_string());
+        }
+        let dir = PathBuf::from(&cfg.checkpoint_dir);
+        std::fs::create_dir_all(&dir)
+            .map_err(|e| format!("creating checkpoint dir {}: {e}", dir.display()))?;
+        Ok(CheckpointSink {
+            dir,
+            cfg: cfg.clone(),
+            pending: Mutex::new(HashMap::new()),
+            first_error: Mutex::new(None),
+        })
+    }
+
+    /// `deposit`, but failures are recorded (and printed once) instead
+    /// of returned, so a rank's step loop never aborts over checkpoint
+    /// I/O — see `first_error`.
+    pub fn deposit_nonfatal(&self, next_step: u64, rank: usize, section: Vec<u8>) {
+        if let Err(e) = self.deposit(next_step, rank, section) {
+            let mut first = self.first_error.lock().unwrap();
+            if first.is_none() {
+                eprintln!("warning: checkpoint at step {next_step} failed: {e}");
+                *first = Some(e);
+            }
+        }
+    }
+
+    /// The first recorded checkpoint failure, if any (checked by the
+    /// driver after all ranks have joined).
+    pub fn first_error(&self) -> Option<String> {
+        self.first_error.lock().unwrap().clone()
+    }
+
+    /// Deposit rank `rank`'s encoded section for the checkpoint taken
+    /// with `next_step` steps completed. Returns the written file path
+    /// if this call completed the snapshot, `None` while sections from
+    /// other ranks are still outstanding.
+    pub fn deposit(
+        &self,
+        next_step: u64,
+        rank: usize,
+        section: Vec<u8>,
+    ) -> Result<Option<PathBuf>, String> {
+        let complete = {
+            let mut pending = self.pending.lock().unwrap();
+            let slots = pending
+                .entry(next_step)
+                .or_insert_with(|| vec![None; self.cfg.ranks]);
+            if slots[rank].is_some() {
+                return Err(format!(
+                    "rank {rank} deposited twice for checkpoint step {next_step}"
+                ));
+            }
+            slots[rank] = Some(section);
+            if slots.iter().all(|s| s.is_some()) {
+                let slots = pending.remove(&next_step).unwrap();
+                Some(slots.into_iter().map(|s| s.unwrap()).collect::<Vec<_>>())
+            } else {
+                None
+            }
+        };
+        match complete {
+            None => Ok(None),
+            Some(sections) => {
+                let path = self.dir.join(snapshot_file_name(next_step));
+                write_snapshot(&path, &self.cfg, next_step, &sections)?;
+                Ok(Some(path))
+            }
+        }
+    }
+}

@@ -116,6 +116,44 @@ impl FrequencyExchange {
     pub fn freq_of(&self, id: u64) -> f32 {
         self.freqs[id as usize]
     }
+
+    // -- checkpoint/restore accessors (see `snapshot`) -------------------
+
+    /// The dense frequency table, for snapshotting. Mid-epoch this holds
+    /// the frequencies received at the last epoch boundary, which the
+    /// receiver keeps consulting until the next exchange — so a restored
+    /// rank must get these back bit-exactly.
+    pub fn freq_table(&self) -> &[f32] {
+        &self.freqs
+    }
+
+    /// Reconstruction-PRNG state, for snapshotting.
+    pub fn rng_state(&self) -> crate::util::RngState {
+        self.rng.state()
+    }
+
+    /// Rebuild an exchange from snapshotted parts. `total_neurons` is
+    /// the size the simulation expects the dense table to have.
+    pub fn from_parts(
+        delta: usize,
+        total_neurons: usize,
+        freqs: Vec<f32>,
+        rng: crate::util::RngState,
+    ) -> Result<FrequencyExchange, String> {
+        if freqs.len() != total_neurons {
+            return Err(format!(
+                "frequency table size mismatch: snapshot has {}, simulation expects \
+                 {total_neurons}",
+                freqs.len(),
+            ));
+        }
+        Ok(FrequencyExchange {
+            delta,
+            freqs,
+            rng: Rng::from_state(rng),
+            dest_flags: Vec::new(),
+        })
+    }
 }
 
 #[cfg(test)]

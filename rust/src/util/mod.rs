@@ -5,7 +5,7 @@ pub mod rng;
 pub mod vec3;
 pub mod wire;
 
-pub use rng::Rng;
+pub use rng::{Rng, RngState};
 pub use vec3::Vec3;
 
 /// Round `n` up to the next multiple of `m`.

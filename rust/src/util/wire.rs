@@ -91,6 +91,84 @@ pub fn get_i64_at(buf: &[u8], at: usize) -> i64 {
     i64::from_le_bytes(buf[at..at + 8].try_into().unwrap())
 }
 
+/// Checked sequential reader over an encoded buffer — the decoding twin
+/// of the `put_*` helpers for variable-length formats (snapshots),
+/// where a truncated or corrupt input must produce a descriptive error
+/// instead of a panic. `label` names what is being decoded in errors.
+pub struct Cursor<'a> {
+    buf: &'a [u8],
+    at: usize,
+    label: &'static str,
+}
+
+impl<'a> Cursor<'a> {
+    pub fn new(buf: &'a [u8], label: &'static str) -> Cursor<'a> {
+        Cursor { buf, at: 0, label }
+    }
+
+    /// Current read offset in bytes.
+    pub fn position(&self) -> usize {
+        self.at
+    }
+
+    /// Bytes not yet consumed.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.at
+    }
+
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8], String> {
+        if self.remaining() < n {
+            return Err(format!(
+                "{}: truncated reading {} at byte {} (need {n}, have {})",
+                self.label,
+                what,
+                self.at,
+                self.remaining()
+            ));
+        }
+        let s = &self.buf[self.at..self.at + n];
+        self.at += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self, what: &str) -> Result<u8, String> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    pub fn u32(&mut self, what: &str) -> Result<u32, String> {
+        Ok(u32::from_le_bytes(self.take(4, what)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self, what: &str) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.take(8, what)?.try_into().unwrap()))
+    }
+
+    pub fn f32(&mut self, what: &str) -> Result<f32, String> {
+        Ok(f32::from_le_bytes(self.take(4, what)?.try_into().unwrap()))
+    }
+
+    pub fn f64(&mut self, what: &str) -> Result<f64, String> {
+        Ok(f64::from_le_bytes(self.take(8, what)?.try_into().unwrap()))
+    }
+
+    pub fn bytes(&mut self, n: usize, what: &str) -> Result<&'a [u8], String> {
+        self.take(n, what)
+    }
+
+    /// Assert the buffer was consumed exactly (no trailing garbage).
+    pub fn finish(&self, what: &str) -> Result<(), String> {
+        if self.remaining() != 0 {
+            return Err(format!(
+                "{}: {} trailing bytes after {}",
+                self.label,
+                self.remaining(),
+                what
+            ));
+        }
+        Ok(())
+    }
+}
+
 impl Wire for u64 {
     const SIZE: usize = 8;
     fn write(&self, out: &mut Vec<u8>) {
@@ -133,5 +211,43 @@ mod tests {
     #[should_panic]
     fn decode_rejects_partial_messages() {
         decode_all::<u64>(&[1, 2, 3]);
+    }
+
+    #[test]
+    fn cursor_reads_back_what_put_wrote() {
+        let mut buf = Vec::new();
+        put_u64(&mut buf, 0xDEAD_BEEF_1234_5678);
+        put_u32(&mut buf, 42);
+        put_f64(&mut buf, -1.5);
+        put_f32(&mut buf, 0.25);
+        put_u8(&mut buf, 7);
+        let mut c = Cursor::new(&buf, "test");
+        assert_eq!(c.u64("a").unwrap(), 0xDEAD_BEEF_1234_5678);
+        assert_eq!(c.u32("b").unwrap(), 42);
+        assert_eq!(c.f64("c").unwrap(), -1.5);
+        assert_eq!(c.f32("d").unwrap(), 0.25);
+        assert_eq!(c.u8("e").unwrap(), 7);
+        assert_eq!(c.remaining(), 0);
+        c.finish("test payload").unwrap();
+    }
+
+    #[test]
+    fn cursor_truncation_is_an_error_not_a_panic() {
+        let buf = [1u8, 2, 3];
+        let mut c = Cursor::new(&buf, "snapshot");
+        let err = c.u64("step counter").unwrap_err();
+        assert!(err.contains("snapshot"), "{err}");
+        assert!(err.contains("step counter"), "{err}");
+        assert!(err.contains("truncated"), "{err}");
+    }
+
+    #[test]
+    fn cursor_rejects_trailing_bytes() {
+        let mut buf = Vec::new();
+        put_u32(&mut buf, 1);
+        put_u32(&mut buf, 2);
+        let mut c = Cursor::new(&buf, "section");
+        c.u32("x").unwrap();
+        assert!(c.finish("section").unwrap_err().contains("trailing"));
     }
 }
