@@ -1,0 +1,70 @@
+//! BENCHMARK-HARNESS TOUR — runs a tiny scenario matrix through the
+//! `bench` subsystem's library API (the `ilmi bench` subcommand is the
+//! same machinery behind flags) and demonstrates the full trajectory
+//! workflow:
+//!
+//!   1. build a matrix: {old, new} x 2 ranks x 32 neurons/rank,
+//!   2. run it (warmup + repetitions, per-phase medians),
+//!   3. emit the versioned BENCH_*.json and re-read it,
+//!   4. diff the run against its own file — the workflow CI uses to
+//!      gate regressions (EXPERIMENTS.md §Bench documents the schema).
+//!
+//!     cargo run --release --example bench_matrix
+
+use ilmi::bench::{run_matrix, AlgGen, BenchReport, MatrixSpec, Regime, RunSettings};
+use ilmi::metrics::ALL_PHASES;
+
+fn main() -> anyhow::Result<()> {
+    let spec = MatrixSpec {
+        algs: vec![AlgGen::Old, AlgGen::New],
+        ranks: vec![2],
+        neurons: vec![32],
+        deltas: vec![50],
+        regimes: vec![Regime::Active],
+    };
+    let settings =
+        RunSettings { steps: 100, plasticity_interval: 50, warmup: 1, reps: 3, seed: 42 };
+
+    let report = run_matrix("example", &spec, &settings, |msg| println!("{msg}"))?;
+    print!("{}", report.markdown_table());
+
+    // The JSON trajectory round-trips exactly.
+    let path = std::env::temp_dir().join("BENCH_example.json");
+    std::fs::write(&path, report.to_json())?;
+    let reread = BenchReport::from_json(&std::fs::read_to_string(&path)?)
+        .map_err(anyhow::Error::msg)?;
+    assert_eq!(reread, report);
+    println!("wrote and re-read {} ({} scenarios)", path.display(), reread.results.len());
+
+    // Self-diff: same workload fingerprint, zero regressions by
+    // construction — the shape of a CI baseline gate.
+    let diff = report.diff(&reread, 0.2).map_err(anyhow::Error::msg)?;
+    print!("{}", diff.render());
+    assert_eq!(diff.regressions(), 0);
+
+    // The headline the matrix exists to show: the new generation moves
+    // fewer bytes on the same workload.
+    let total = |alg: AlgGen| {
+        report
+            .results
+            .iter()
+            .filter(|r| r.scenario.alg == alg)
+            .map(|r| r.comm.bytes_sent + r.comm.bytes_rma)
+            .sum::<u64>()
+    };
+    let (old, new) = (total(AlgGen::Old), total(AlgGen::New));
+    println!("bytes old {old} vs new {new} ({:.1}x)", old as f64 / new.max(1) as f64);
+    for p in ALL_PHASES {
+        let med = |alg: AlgGen| {
+            report
+                .results
+                .iter()
+                .find(|r| r.scenario.alg == alg)
+                .map(|r| r.phases[p.index()].median)
+                .unwrap_or(0.0)
+        };
+        println!("{:<18} old {:.4}s new {:.4}s", p.name(), med(AlgGen::Old), med(AlgGen::New));
+    }
+    std::fs::remove_file(&path).ok();
+    Ok(())
+}

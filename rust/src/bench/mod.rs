@@ -1,0 +1,39 @@
+//! Benchmark harness: scenario matrix, runner, statistics, and the
+//! versioned `BENCH_*.json` trajectory (paper Figs. 5/10/11 tooling).
+//!
+//! The paper's headline claims are quantitative — connectivity update
+//! ~6× faster, spike exchange cheaper by two orders of magnitude — and
+//! EXPERIMENTS.md §Bench is where this repo records them. This module
+//! is the measurement loop behind that file:
+//!
+//! * [`scenario`] — one cell = {algorithm generation} × {ranks} ×
+//!   {neurons/rank} × {epoch Δ} × {firing regime}; [`MatrixSpec`]
+//!   crosses axis lists, [`preset`] names the standard matrices
+//!   (`smoke`: the 2-cell CI gate; `quick`: the 16-cell default;
+//!   `full`: 32 cells adding the quiet firing regime).
+//! * [`runner`] — warmup + timed repetitions per cell, reusing the
+//!   driver's [`crate::metrics::Phase`] timers and
+//!   [`crate::comm::CommCounters`]; no bench-only instrumentation.
+//! * [`stats`] — median/min/max over repetitions (median: robust to
+//!   scheduler noise on the thread-per-rank substrate).
+//! * [`report`] — the versioned JSON schema with a workload
+//!   fingerprint, a markdown table renderer, and `--baseline` diffing
+//!   that flags timing regressions beyond a threshold and *any*
+//!   communication-counter drift (counters are seed-deterministic).
+//! * [`json`] — the serde-free JSON subset the reports travel through.
+//!
+//! Timings from the thread-per-rank substrate are *relative* measures
+//! (old vs new on the same machine), not absolute cluster predictions —
+//! see DESIGN.md §8; counters and collective counts, by contrast, are
+//! exact and machine-independent.
+
+pub mod json;
+pub mod report;
+pub mod runner;
+pub mod scenario;
+pub mod stats;
+
+pub use report::{BenchReport, DiffReport, ScenarioResult, SCHEMA_VERSION};
+pub use runner::{run_matrix, run_scenario};
+pub use scenario::{preset, AlgGen, MatrixSpec, Regime, RunSettings, Scenario};
+pub use stats::Summary;

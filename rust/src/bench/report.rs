@@ -1,0 +1,552 @@
+//! The versioned `BENCH_*.json` report: emit, parse, markdown render,
+//! and baseline diffing.
+//!
+//! Schema (`schema_version` 1):
+//!
+//! ```json
+//! {
+//!   "schema_version": 1,
+//!   "name": "quick",
+//!   "created_unix": 1753500000,
+//!   "fingerprint": "9f…16 hex digits…",
+//!   "settings": {"steps":…, "plasticity_interval":…, "warmup":…,
+//!                "reps":…, "seed":…},
+//!   "scenarios": [{
+//!     "id": "new_r4_n128_d100_active",
+//!     "alg": "new", "ranks": 4, "neurons_per_rank": 128,
+//!     "delta": 100, "regime": "active", "reps": 3,
+//!     "phases": {"spike_exchange": {"median":…,"min":…,"max":…}, …},
+//!     "wall": {"median":…,"min":…,"max":…},
+//!     "comm": {"bytes_sent":…,"bytes_recv":…,"bytes_rma":…,
+//!              "msgs_sent":…,"collectives":…,"rma_gets":…}
+//!   }, …]
+//! }
+//! ```
+//!
+//! The *fingerprint* hashes everything that defines workload identity —
+//! schedule, seed, and the ordered scenario ids — and deliberately
+//! excludes timings and machine state. `diff` refuses two reports whose
+//! fingerprints differ: comparing timings of different workloads is a
+//! category error, not a regression. Timings are compared on medians
+//! with a relative threshold plus an absolute noise floor; communication
+//! counters are seeded-deterministic, so any counter difference at equal
+//! fingerprints is flagged as drift regardless of the threshold.
+
+use crate::comm::CounterSnapshot;
+use crate::metrics::ALL_PHASES;
+
+use super::json::{obj, parse, Json};
+use super::scenario::{AlgGen, Regime, RunSettings, Scenario};
+use super::stats::Summary;
+
+/// Version of the `BENCH_*.json` schema this build emits and accepts.
+pub const SCHEMA_VERSION: u32 = 1;
+
+/// Timing differences below this many seconds are never regressions —
+/// the thread-rank substrate cannot resolve them reliably.
+pub const NOISE_FLOOR_SECONDS: f64 = 1e-3;
+
+/// Measured outcome of one scenario cell.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScenarioResult {
+    pub scenario: Scenario,
+    /// Timed repetitions the summaries were taken over.
+    pub reps: usize,
+    /// Per-phase seconds (max across ranks, summarized over reps),
+    /// `ALL_PHASES` order.
+    pub phases: [Summary; ALL_PHASES.len()],
+    /// Whole-run wall clock, summarized over reps.
+    pub wall: Summary,
+    /// Communication counters aggregated over ranks. Deterministic for
+    /// a fixed seed, hence identical across reps — recorded once.
+    pub comm: CounterSnapshot,
+}
+
+/// One complete benchmark trajectory (a `BENCH_*.json` file in memory).
+#[derive(Clone, Debug, PartialEq)]
+pub struct BenchReport {
+    pub name: String,
+    /// Unix timestamp of the run (informational only; not fingerprinted).
+    pub created_unix: u64,
+    pub settings: RunSettings,
+    pub results: Vec<ScenarioResult>,
+}
+
+fn fnv1a(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+impl BenchReport {
+    /// Workload-identity hash: schema version, schedule, seed, and the
+    /// ordered scenario ids. Excludes timings, counters, reps, warmup
+    /// and timestamps — two runs of the same matrix on different
+    /// machines (or days) fingerprint identically and are comparable.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = 0xcbf2_9ce4_8422_2325; // FNV-1a offset basis
+        h = fnv1a(h, &SCHEMA_VERSION.to_le_bytes());
+        h = fnv1a(h, &(self.settings.steps as u64).to_le_bytes());
+        h = fnv1a(h, &(self.settings.plasticity_interval as u64).to_le_bytes());
+        h = fnv1a(h, &self.settings.seed.to_le_bytes());
+        for r in &self.results {
+            h = fnv1a(h, r.scenario.id().as_bytes());
+        }
+        h
+    }
+
+    /// Emit the versioned JSON document (see the module docs for the
+    /// schema).
+    pub fn to_json(&self) -> String {
+        let scenarios: Vec<Json> = self.results.iter().map(scenario_to_json).collect();
+        obj(vec![
+            ("schema_version", Json::Num(SCHEMA_VERSION as f64)),
+            ("name", Json::Str(self.name.clone())),
+            ("created_unix", Json::Num(self.created_unix as f64)),
+            ("fingerprint", Json::Str(format!("{:016x}", self.fingerprint()))),
+            (
+                "settings",
+                obj(vec![
+                    ("steps", Json::Num(self.settings.steps as f64)),
+                    (
+                        "plasticity_interval",
+                        Json::Num(self.settings.plasticity_interval as f64),
+                    ),
+                    ("warmup", Json::Num(self.settings.warmup as f64)),
+                    ("reps", Json::Num(self.settings.reps as f64)),
+                    ("seed", Json::Num(self.settings.seed as f64)),
+                ]),
+            ),
+            ("scenarios", Json::Arr(scenarios)),
+        ])
+        .pretty()
+    }
+
+    /// Parse and validate a `BENCH_*.json` document: schema version,
+    /// all seven phases per scenario, id/axes consistency, and the
+    /// stored fingerprint reproducing from the parsed content.
+    pub fn from_json(text: &str) -> Result<BenchReport, String> {
+        let root = parse(text)?;
+        let version = root.req("schema_version")?.as_u64()?;
+        if version != SCHEMA_VERSION as u64 {
+            return Err(format!(
+                "unsupported bench schema version {version} (this build reads \
+                 {SCHEMA_VERSION})"
+            ));
+        }
+        let settings_json = root.req("settings")?;
+        let settings = RunSettings {
+            steps: settings_json.req("steps")?.as_usize()?,
+            plasticity_interval: settings_json.req("plasticity_interval")?.as_usize()?,
+            warmup: settings_json.req("warmup")?.as_usize()?,
+            reps: settings_json.req("reps")?.as_usize()?,
+            seed: settings_json.req("seed")?.as_u64()?,
+        };
+        let mut results = Vec::new();
+        for (i, entry) in root.req("scenarios")?.as_arr()?.iter().enumerate() {
+            results
+                .push(scenario_from_json(entry).map_err(|e| format!("scenario #{i}: {e}"))?);
+        }
+        let report = BenchReport {
+            name: root.req("name")?.as_str()?.to_string(),
+            created_unix: root.req("created_unix")?.as_u64()?,
+            settings,
+            results,
+        };
+        let stored = root.req("fingerprint")?.as_str()?.to_string();
+        let recomputed = format!("{:016x}", report.fingerprint());
+        if stored != recomputed {
+            return Err(format!(
+                "bench fingerprint mismatch: file says {stored}, content hashes to \
+                 {recomputed} (edited or truncated report?)"
+            ));
+        }
+        Ok(report)
+    }
+
+    /// Render the per-scenario markdown table (median seconds per phase,
+    /// wall clock, and the exact communication counters).
+    pub fn markdown_table(&self) -> String {
+        let mut out = String::from("| scenario |");
+        for p in ALL_PHASES {
+            out.push_str(&format!(" {} |", p.name()));
+        }
+        out.push_str(" wall | bytes_sent | bytes_rma | collectives |\n|---|");
+        out.push_str(&"---:|".repeat(ALL_PHASES.len() + 4));
+        out.push('\n');
+        for r in &self.results {
+            out.push_str(&format!("| {} |", r.scenario.id()));
+            for p in ALL_PHASES {
+                out.push_str(&format!(" {:.4} |", r.phases[p.index()].median));
+            }
+            out.push_str(&format!(
+                " {:.4} | {} | {} | {} |\n",
+                r.wall.median, r.comm.bytes_sent, r.comm.bytes_rma, r.comm.collectives
+            ));
+        }
+        out
+    }
+
+    /// Diff against a baseline report of the SAME workload (equal
+    /// fingerprints — anything else is an error, not a regression).
+    /// `threshold` is relative (0.2 = +20%); timing rows additionally
+    /// need to exceed [`NOISE_FLOOR_SECONDS`] to regress, while counter
+    /// drift is flagged on any difference.
+    pub fn diff(&self, baseline: &BenchReport, threshold: f64) -> Result<DiffReport, String> {
+        if self.fingerprint() != baseline.fingerprint() {
+            return Err(format!(
+                "baseline fingerprint mismatch: current run is {:016x} but baseline \
+                 {:?} is {:016x} — the scenario matrix or schedule differs, so the \
+                 timings are not comparable; re-record the baseline with the same \
+                 preset/settings",
+                self.fingerprint(),
+                baseline.name,
+                baseline.fingerprint()
+            ));
+        }
+        // Equal fingerprints ⇒ same scenario ids in the same order.
+        let mut rows = Vec::new();
+        for (cur, base) in self.results.iter().zip(&baseline.results) {
+            let id = cur.scenario.id();
+            let timing_row = |metric: &str, b: f64, c: f64| DiffRow {
+                scenario: id.clone(),
+                metric: metric.to_string(),
+                baseline: b,
+                current: c,
+                regressed: c > b * (1.0 + threshold) && c - b > NOISE_FLOOR_SECONDS,
+            };
+            rows.push(timing_row("wall", base.wall.median, cur.wall.median));
+            for p in ALL_PHASES {
+                rows.push(timing_row(
+                    p.name(),
+                    base.phases[p.index()].median,
+                    cur.phases[p.index()].median,
+                ));
+            }
+            // One drift row per differing counter field, so the render
+            // names the counter that moved and by how much.
+            let counter_fields = [
+                ("bytes_sent", base.comm.bytes_sent, cur.comm.bytes_sent),
+                ("bytes_recv", base.comm.bytes_recv, cur.comm.bytes_recv),
+                ("bytes_rma", base.comm.bytes_rma, cur.comm.bytes_rma),
+                ("msgs_sent", base.comm.msgs_sent, cur.comm.msgs_sent),
+                ("collectives", base.comm.collectives, cur.comm.collectives),
+                ("rma_gets", base.comm.rma_gets, cur.comm.rma_gets),
+            ];
+            for (field, b, c) in counter_fields {
+                if b != c {
+                    rows.push(DiffRow {
+                        scenario: id.clone(),
+                        metric: format!("counter_drift:{field}"),
+                        baseline: b as f64,
+                        current: c as f64,
+                        regressed: true,
+                    });
+                }
+            }
+        }
+        Ok(DiffReport { baseline_name: baseline.name.clone(), threshold, rows })
+    }
+}
+
+/// One compared metric of one scenario.
+#[derive(Clone, Debug)]
+pub struct DiffRow {
+    pub scenario: String,
+    /// `wall`, a phase name, or `counter_drift:<field>`.
+    pub metric: String,
+    pub baseline: f64,
+    pub current: f64,
+    pub regressed: bool,
+}
+
+/// Outcome of `BenchReport::diff`.
+#[derive(Clone, Debug)]
+pub struct DiffReport {
+    pub baseline_name: String,
+    pub threshold: f64,
+    pub rows: Vec<DiffRow>,
+}
+
+impl DiffReport {
+    pub fn regressions(&self) -> usize {
+        self.rows.iter().filter(|r| r.regressed).count()
+    }
+
+    /// Human-readable diff: one wall-clock line per scenario, plus every
+    /// regressed metric spelled out.
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "baseline diff vs {:?} (threshold +{:.0}%, noise floor {} ms)\n",
+            self.baseline_name,
+            self.threshold * 100.0,
+            NOISE_FLOOR_SECONDS * 1e3
+        );
+        for row in &self.rows {
+            let keep = row.metric == "wall" || row.regressed;
+            if !keep {
+                continue;
+            }
+            let delta = if row.baseline > 0.0 {
+                format!("{:+.1}%", (row.current / row.baseline - 1.0) * 100.0)
+            } else {
+                "n/a".to_string()
+            };
+            if let Some(field) = row.metric.strip_prefix("counter_drift:") {
+                out.push_str(&format!(
+                    "  {}: COUNTER DRIFT {field} {} -> {} (counters are \
+                     seed-deterministic, so this is a behavior change)\n",
+                    row.scenario, row.baseline, row.current
+                ));
+            } else {
+                out.push_str(&format!(
+                    "  {}{} {} {:.4}s -> {:.4}s ({delta})\n",
+                    if row.regressed { "REGRESSED " } else { "" },
+                    row.scenario,
+                    row.metric,
+                    row.baseline,
+                    row.current
+                ));
+            }
+        }
+        out.push_str(&format!("{} regression(s)\n", self.regressions()));
+        out
+    }
+}
+
+fn summary_to_json(s: &Summary) -> Json {
+    obj(vec![
+        ("median", Json::Num(s.median)),
+        ("min", Json::Num(s.min)),
+        ("max", Json::Num(s.max)),
+    ])
+}
+
+fn summary_from_json(v: &Json) -> Result<Summary, String> {
+    Ok(Summary {
+        median: v.req("median")?.as_f64()?,
+        min: v.req("min")?.as_f64()?,
+        max: v.req("max")?.as_f64()?,
+    })
+}
+
+fn scenario_to_json(r: &ScenarioResult) -> Json {
+    let phases: Vec<(String, Json)> = ALL_PHASES
+        .iter()
+        .map(|p| (p.name().to_string(), summary_to_json(&r.phases[p.index()])))
+        .collect();
+    obj(vec![
+        ("id", Json::Str(r.scenario.id())),
+        ("alg", Json::Str(r.scenario.alg.name().to_string())),
+        ("ranks", Json::Num(r.scenario.ranks as f64)),
+        ("neurons_per_rank", Json::Num(r.scenario.neurons_per_rank as f64)),
+        ("delta", Json::Num(r.scenario.delta as f64)),
+        ("regime", Json::Str(r.scenario.regime.name().to_string())),
+        ("reps", Json::Num(r.reps as f64)),
+        ("phases", Json::Obj(phases)),
+        ("wall", summary_to_json(&r.wall)),
+        (
+            "comm",
+            obj(vec![
+                ("bytes_sent", Json::Num(r.comm.bytes_sent as f64)),
+                ("bytes_recv", Json::Num(r.comm.bytes_recv as f64)),
+                ("bytes_rma", Json::Num(r.comm.bytes_rma as f64)),
+                ("msgs_sent", Json::Num(r.comm.msgs_sent as f64)),
+                ("collectives", Json::Num(r.comm.collectives as f64)),
+                ("rma_gets", Json::Num(r.comm.rma_gets as f64)),
+            ]),
+        ),
+    ])
+}
+
+fn scenario_from_json(v: &Json) -> Result<ScenarioResult, String> {
+    let scenario = Scenario {
+        alg: AlgGen::from_name(v.req("alg")?.as_str()?)?,
+        ranks: v.req("ranks")?.as_usize()?,
+        neurons_per_rank: v.req("neurons_per_rank")?.as_usize()?,
+        delta: v.req("delta")?.as_usize()?,
+        regime: Regime::from_name(v.req("regime")?.as_str()?)?,
+    };
+    let id = v.req("id")?.as_str()?;
+    if id != scenario.id() {
+        return Err(format!(
+            "scenario id {id:?} does not match its axes (expected {:?})",
+            scenario.id()
+        ));
+    }
+    let phases_json = v.req("phases")?;
+    let mut phases = [Summary::default(); ALL_PHASES.len()];
+    for p in ALL_PHASES {
+        phases[p.index()] = summary_from_json(
+            phases_json
+                .get(p.name())
+                .ok_or_else(|| format!("{id}: missing phase {:?}", p.name()))?,
+        )?;
+    }
+    let comm_json = v.req("comm")?;
+    Ok(ScenarioResult {
+        scenario,
+        reps: v.req("reps")?.as_usize()?,
+        phases,
+        wall: summary_from_json(v.req("wall")?)?,
+        comm: CounterSnapshot {
+            bytes_sent: comm_json.req("bytes_sent")?.as_u64()?,
+            bytes_recv: comm_json.req("bytes_recv")?.as_u64()?,
+            bytes_rma: comm_json.req("bytes_rma")?.as_u64()?,
+            msgs_sent: comm_json.req("msgs_sent")?.as_u64()?,
+            collectives: comm_json.req("collectives")?.as_u64()?,
+            rma_gets: comm_json.req("rma_gets")?.as_u64()?,
+        },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::Phase;
+
+    fn sample_result(alg: AlgGen, ranks: usize) -> ScenarioResult {
+        let mut phases = [Summary::default(); ALL_PHASES.len()];
+        for (i, s) in phases.iter_mut().enumerate() {
+            *s = Summary {
+                median: 0.01 * (i + 1) as f64,
+                min: 0.009 * (i + 1) as f64,
+                max: 0.011 * (i + 1) as f64,
+            };
+        }
+        ScenarioResult {
+            scenario: Scenario {
+                alg,
+                ranks,
+                neurons_per_rank: 64,
+                delta: 50,
+                regime: Regime::Active,
+            },
+            reps: 3,
+            phases,
+            wall: Summary { median: 0.5, min: 0.45, max: 0.55 },
+            comm: CounterSnapshot {
+                bytes_sent: 123_456,
+                bytes_recv: 123_456,
+                bytes_rma: 789,
+                msgs_sent: 42,
+                collectives: 17,
+                rma_gets: 5,
+            },
+        }
+    }
+
+    fn sample_report() -> BenchReport {
+        BenchReport {
+            name: "unit".to_string(),
+            created_unix: 1_753_500_000,
+            settings: RunSettings {
+                steps: 200,
+                plasticity_interval: 50,
+                warmup: 1,
+                reps: 3,
+                seed: 42,
+            },
+            results: vec![sample_result(AlgGen::Old, 2), sample_result(AlgGen::New, 2)],
+        }
+    }
+
+    #[test]
+    fn schema_roundtrip_is_exact() {
+        let report = sample_report();
+        let text = report.to_json();
+        let back = BenchReport::from_json(&text).unwrap();
+        assert_eq!(back, report);
+        // Emitted text is a fixpoint too.
+        assert_eq!(back.to_json(), text);
+    }
+
+    #[test]
+    fn all_seven_phases_are_emitted_and_required() {
+        let report = sample_report();
+        let text = report.to_json();
+        for p in ALL_PHASES {
+            assert!(text.contains(&format!("\"{}\"", p.name())), "{} missing", p.name());
+        }
+        // Deleting one phase key must fail the parse.
+        let broken = text.replace("\"spike_lookup\"", "\"spike_lookup_gone\"");
+        let err = BenchReport::from_json(&broken).unwrap_err();
+        assert!(err.contains("spike_lookup"), "{err}");
+    }
+
+    #[test]
+    fn tampered_fingerprint_is_rejected() {
+        let text = sample_report().to_json();
+        // Change workload content without updating the fingerprint.
+        let tampered = text.replace("\"steps\": 200", "\"steps\": 300");
+        let err = BenchReport::from_json(&tampered).unwrap_err();
+        assert!(err.contains("fingerprint mismatch"), "{err}");
+    }
+
+    #[test]
+    fn unsupported_schema_version_is_rejected() {
+        let text = sample_report().to_json().replace(
+            "\"schema_version\": 1",
+            "\"schema_version\": 99",
+        );
+        let err = BenchReport::from_json(&text).unwrap_err();
+        assert!(err.contains("schema version"), "{err}");
+    }
+
+    #[test]
+    fn diff_refuses_mismatched_workloads() {
+        let a = sample_report();
+        let mut b = sample_report();
+        b.settings.seed = 7; // different workload
+        let err = a.diff(&b, 0.2).unwrap_err();
+        assert!(err.contains("fingerprint mismatch"), "{err}");
+        assert_ne!(a.fingerprint(), b.fingerprint());
+    }
+
+    #[test]
+    fn diff_flags_regressions_and_counter_drift() {
+        let base = sample_report();
+        let mut cur = sample_report();
+        // Identical content: no regressions.
+        let clean = cur.diff(&base, 0.2).unwrap();
+        assert_eq!(clean.regressions(), 0);
+
+        // +50% on one phase (well above floor) regresses at +20%.
+        cur.results[0].phases[Phase::BarnesHut.index()].median *= 1.5;
+        // Counter drift on the other scenario.
+        cur.results[1].comm.bytes_sent += 1;
+        let diff = cur.diff(&base, 0.2).unwrap();
+        assert_eq!(diff.regressions(), 2);
+        let rendered = diff.render();
+        assert!(rendered.contains("REGRESSED"), "{rendered}");
+        assert!(rendered.contains("barnes_hut"), "{rendered}");
+        // The drift row names the counter that moved.
+        assert!(rendered.contains("COUNTER DRIFT bytes_sent"), "{rendered}");
+    }
+
+    #[test]
+    fn sub_floor_slowdowns_are_not_regressions() {
+        // Timings are not fingerprinted, so both sides can be adjusted
+        // to craft a big relative / tiny absolute slowdown: +400% but
+        // only 0.4 ms — below the 1 ms noise floor, not a regression.
+        let mut base = sample_report();
+        let mut cur = sample_report();
+        base.results[0].phases[Phase::SpikeExchange.index()].median = 1e-4;
+        cur.results[0].phases[Phase::SpikeExchange.index()].median = 5e-4;
+        let diff = cur.diff(&base, 0.2).unwrap();
+        assert_eq!(diff.regressions(), 0);
+    }
+
+    #[test]
+    fn markdown_table_lists_every_scenario_and_phase() {
+        let md = sample_report().markdown_table();
+        assert!(md.contains("old_r2_n64_d50_active"), "{md}");
+        assert!(md.contains("new_r2_n64_d50_active"), "{md}");
+        for p in ALL_PHASES {
+            assert!(md.contains(p.name()), "{md}");
+        }
+        assert_eq!(md.lines().count(), 2 + 2); // header + separator + 2 rows
+    }
+}

@@ -1,0 +1,146 @@
+//! Matrix execution: warmup + timed repetitions per cell, reusing the
+//! driver's `metrics::Phase` timers and `comm::CommCounters` — the
+//! bench harness adds no instrumentation of its own, so what it reports
+//! is exactly what `ilmi simulate` and `ilmi compare` report.
+
+use anyhow::Result;
+
+use crate::comm::CounterSnapshot;
+use crate::coordinator::run_simulation;
+use crate::metrics::ALL_PHASES;
+
+use super::report::{BenchReport, ScenarioResult};
+use super::scenario::{MatrixSpec, RunSettings, Scenario};
+use super::stats::Summary;
+
+/// Run one scenario cell: `warmup` untimed runs, then `reps` timed ones.
+/// Per-phase values are the max across ranks per repetition (the slowest
+/// rank gates every synchronization point, exactly as `SimReport`
+/// aggregates them), summarized over repetitions. Counters come from the
+/// last repetition; with a fixed seed they must be identical across
+/// repetitions — any drift is a determinism bug and errors the run
+/// (a hard check, not a debug assertion: benches run `--release`).
+pub fn run_scenario(scenario: &Scenario, settings: &RunSettings) -> Result<ScenarioResult> {
+    let cfg = scenario.config(settings);
+    for _ in 0..settings.warmup {
+        run_simulation(&cfg)?;
+    }
+    let mut phase_samples = vec![Vec::with_capacity(settings.reps); ALL_PHASES.len()];
+    let mut wall_samples = Vec::with_capacity(settings.reps);
+    let mut comm = CounterSnapshot::default();
+    for rep in 0..settings.reps.max(1) {
+        let report = run_simulation(&cfg)?;
+        for p in ALL_PHASES {
+            phase_samples[p.index()].push(report.phase_max(p));
+        }
+        wall_samples.push(report.wall_seconds);
+        let total = report.total_comm();
+        if rep > 0 && total != comm {
+            anyhow::bail!(
+                "counters drifted between repetitions of {} ({:?} then {:?}) — \
+                 determinism bug; the trajectory would be meaningless",
+                scenario.id(),
+                comm,
+                total
+            );
+        }
+        comm = total;
+    }
+    let mut phases = [Summary::default(); ALL_PHASES.len()];
+    for p in ALL_PHASES {
+        phases[p.index()] = Summary::of(&phase_samples[p.index()]);
+    }
+    Ok(ScenarioResult {
+        scenario: *scenario,
+        reps: settings.reps.max(1),
+        phases,
+        wall: Summary::of(&wall_samples),
+        comm,
+    })
+}
+
+/// Run every cell of the matrix and assemble the report. `progress` is
+/// called once per cell before it runs (the CLI prints it; library
+/// callers pass `|_| {}`).
+pub fn run_matrix(
+    name: &str,
+    spec: &MatrixSpec,
+    settings: &RunSettings,
+    mut progress: impl FnMut(&str),
+) -> Result<BenchReport> {
+    let cells = spec.cells();
+    let mut results = Vec::with_capacity(cells.len());
+    for (i, cell) in cells.iter().enumerate() {
+        progress(&format!(
+            "[{}/{}] {} ({} warmup + {} reps x {} steps)",
+            i + 1,
+            cells.len(),
+            cell.id(),
+            settings.warmup,
+            settings.reps.max(1),
+            settings.steps
+        ));
+        results.push(run_scenario(cell, settings)?);
+    }
+    let created_unix = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    Ok(BenchReport { name: name.to_string(), created_unix, settings: *settings, results })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::scenario::{AlgGen, Regime};
+
+    fn tiny_settings() -> RunSettings {
+        RunSettings { steps: 60, plasticity_interval: 30, warmup: 0, reps: 2, seed: 42 }
+    }
+
+    #[test]
+    fn scenario_runs_and_counts_deterministically() {
+        let sc = Scenario {
+            alg: AlgGen::New,
+            ranks: 2,
+            neurons_per_rank: 16,
+            delta: 30,
+            regime: Regime::Active,
+        };
+        let settings = tiny_settings();
+        let a = run_scenario(&sc, &settings).unwrap();
+        let b = run_scenario(&sc, &settings).unwrap();
+        // Counters are seed-deterministic across whole harness runs too.
+        assert_eq!(a.comm, b.comm);
+        assert!(a.comm.collectives > 0);
+        // New algorithms never touch RMA.
+        assert_eq!(a.comm.bytes_rma, 0);
+        assert_eq!(a.reps, 2);
+        assert!(a.wall.min <= a.wall.median && a.wall.median <= a.wall.max);
+    }
+
+    #[test]
+    fn matrix_produces_one_result_per_cell_in_order() {
+        let spec = MatrixSpec {
+            algs: vec![AlgGen::Old, AlgGen::New],
+            ranks: vec![2],
+            neurons: vec![16],
+            deltas: vec![30],
+            regimes: vec![Regime::Active],
+        };
+        let mut seen = Vec::new();
+        let report =
+            run_matrix("unit", &spec, &tiny_settings(), |msg| seen.push(msg.to_string()))
+                .unwrap();
+        assert_eq!(report.results.len(), 2);
+        assert_eq!(seen.len(), 2);
+        let ids: Vec<String> = report.results.iter().map(|r| r.scenario.id()).collect();
+        assert_eq!(ids, vec!["old_r2_n16_d30_active", "new_r2_n16_d30_active"]);
+        // The old generation pays RMA bytes, the new one does not.
+        assert!(report.results[0].comm.bytes_rma > 0);
+        assert_eq!(report.results[1].comm.bytes_rma, 0);
+        // The assembled report round-trips through the JSON schema.
+        let back = BenchReport::from_json(&report.to_json()).unwrap();
+        assert_eq!(back, report);
+    }
+}

@@ -1,0 +1,303 @@
+//! Scenario definitions and the sweep matrix.
+//!
+//! One *scenario* (cell) fixes an algorithm generation, a topology, a
+//! frequency-exchange epoch Δ, and a firing regime; the *matrix* is the
+//! cross product of the axis value lists. Shared run settings (steps,
+//! warmup, repetitions, seed) live outside the matrix so every cell
+//! measures the same schedule. EXPERIMENTS.md §Bench documents the
+//! default matrices and how they map onto the paper's figures.
+
+use crate::config::{ConnectivityAlg, SimConfig, SpikeAlg};
+
+/// Algorithm generation under test: the paper's before/after pair.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AlgGen {
+    /// RMA-download Barnes–Hut + per-step spike-id all-to-all.
+    Old,
+    /// Location-aware Barnes–Hut + frequency approximation.
+    New,
+}
+
+impl AlgGen {
+    pub fn name(self) -> &'static str {
+        match self {
+            AlgGen::Old => "old",
+            AlgGen::New => "new",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Result<AlgGen, String> {
+        match name {
+            "old" => Ok(AlgGen::Old),
+            "new" => Ok(AlgGen::New),
+            other => Err(format!("unknown algorithm generation {other:?}")),
+        }
+    }
+
+    /// The config pair this generation selects.
+    pub fn algorithms(self) -> (ConnectivityAlg, SpikeAlg) {
+        match self {
+            AlgGen::Old => (ConnectivityAlg::OldRma, SpikeAlg::OldIds),
+            AlgGen::New => (ConnectivityAlg::NewLocationAware, SpikeAlg::NewFrequency),
+        }
+    }
+}
+
+/// Firing regime: the background-input level that drives network
+/// activity (and with it spike-exchange volume — the old algorithm's
+/// cost scales with firing, the new one's does not).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Regime {
+    /// Background N(3, 1): sparse firing.
+    Quiet,
+    /// Background N(5, 1): the paper's §V-D operating point.
+    Active,
+}
+
+impl Regime {
+    pub fn name(self) -> &'static str {
+        match self {
+            Regime::Quiet => "quiet",
+            Regime::Active => "active",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Result<Regime, String> {
+        match name {
+            "quiet" => Ok(Regime::Quiet),
+            "active" => Ok(Regime::Active),
+            other => Err(format!("unknown firing regime {other:?}")),
+        }
+    }
+
+    pub fn bg_mean(self) -> f64 {
+        match self {
+            Regime::Quiet => 3.0,
+            Regime::Active => 5.0,
+        }
+    }
+}
+
+/// Settings shared by every cell of one matrix run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RunSettings {
+    /// Simulation steps per repetition.
+    pub steps: usize,
+    /// Connectivity-update interval (paper: 100).
+    pub plasticity_interval: usize,
+    /// Untimed warmup repetitions per cell (page-cache/allocator/branch
+    /// predictor settling).
+    pub warmup: usize,
+    /// Timed repetitions per cell; medians are taken over these.
+    pub reps: usize,
+    /// Global PRNG seed — fixed, so communication counters are
+    /// bit-identical across repetitions and machines.
+    pub seed: u64,
+}
+
+/// One cell of the sweep matrix.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Scenario {
+    pub alg: AlgGen,
+    pub ranks: usize,
+    pub neurons_per_rank: usize,
+    /// Frequency-exchange epoch Δ. Only the new spike algorithm reads
+    /// it; sweeping it under `AlgGen::Old` yields control cells that
+    /// must time equal (a harness self-test).
+    pub delta: usize,
+    pub regime: Regime,
+}
+
+impl Scenario {
+    /// Stable identifier used as the JSON key and in baseline diffs,
+    /// e.g. `new_r4_n128_d100_active`.
+    pub fn id(&self) -> String {
+        format!(
+            "{}_r{}_n{}_d{}_{}",
+            self.alg.name(),
+            self.ranks,
+            self.neurons_per_rank,
+            self.delta,
+            self.regime.name()
+        )
+    }
+
+    /// The simulation config this cell runs.
+    pub fn config(&self, settings: &RunSettings) -> SimConfig {
+        let (connectivity_alg, spike_alg) = self.alg.algorithms();
+        SimConfig {
+            ranks: self.ranks,
+            neurons_per_rank: self.neurons_per_rank,
+            steps: settings.steps,
+            plasticity_interval: settings.plasticity_interval,
+            delta: self.delta,
+            connectivity_alg,
+            spike_alg,
+            bg_mean: self.regime.bg_mean(),
+            seed: settings.seed,
+            ..SimConfig::default()
+        }
+    }
+}
+
+/// Axis value lists; the matrix is their cross product.
+#[derive(Clone, Debug)]
+pub struct MatrixSpec {
+    pub algs: Vec<AlgGen>,
+    pub ranks: Vec<usize>,
+    pub neurons: Vec<usize>,
+    pub deltas: Vec<usize>,
+    pub regimes: Vec<Regime>,
+}
+
+impl MatrixSpec {
+    /// Expand the cross product in a fixed axis order (alg outermost,
+    /// regime innermost) so cell order — and with it the report
+    /// fingerprint — is deterministic.
+    pub fn cells(&self) -> Vec<Scenario> {
+        let mut out = Vec::new();
+        for &alg in &self.algs {
+            for &ranks in &self.ranks {
+                for &neurons_per_rank in &self.neurons {
+                    for &delta in &self.deltas {
+                        for &regime in &self.regimes {
+                            out.push(Scenario { alg, ranks, neurons_per_rank, delta, regime });
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Named matrix presets. `smoke` is the CI gate (2 ranks, seconds to
+/// run), `quick` the 16-cell default, `full` the 32-cell sweep that
+/// adds the quiet firing regime.
+pub fn preset(name: &str) -> Result<(MatrixSpec, RunSettings), String> {
+    let both_algs = vec![AlgGen::Old, AlgGen::New];
+    match name {
+        "smoke" => Ok((
+            MatrixSpec {
+                algs: both_algs,
+                ranks: vec![2],
+                neurons: vec![32],
+                deltas: vec![50],
+                regimes: vec![Regime::Active],
+            },
+            RunSettings {
+                steps: 100,
+                plasticity_interval: 50,
+                warmup: 0,
+                reps: 2,
+                seed: 42,
+            },
+        )),
+        "quick" => Ok((
+            MatrixSpec {
+                algs: both_algs,
+                ranks: vec![2, 4],
+                neurons: vec![64, 128],
+                deltas: vec![50, 100],
+                regimes: vec![Regime::Active],
+            },
+            RunSettings {
+                steps: 200,
+                plasticity_interval: 50,
+                warmup: 1,
+                reps: 3,
+                seed: 42,
+            },
+        )),
+        "full" => Ok((
+            MatrixSpec {
+                algs: both_algs,
+                ranks: vec![2, 4],
+                neurons: vec![64, 128],
+                deltas: vec![50, 100],
+                regimes: vec![Regime::Quiet, Regime::Active],
+            },
+            RunSettings {
+                steps: 400,
+                plasticity_interval: 100,
+                warmup: 1,
+                reps: 5,
+                seed: 42,
+            },
+        )),
+        other => Err(format!("unknown bench preset {other:?} (smoke | quick | full)")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_preset_has_at_least_12_cells() {
+        let (spec, settings) = preset("quick").unwrap();
+        let cells = spec.cells();
+        assert!(cells.len() >= 12, "{} cells", cells.len());
+        // Every cell yields a valid config and a unique id.
+        let mut ids: Vec<String> = cells.iter().map(|c| c.id()).collect();
+        for cell in &cells {
+            cell.config(&settings).validate().unwrap();
+        }
+        let n = ids.len();
+        ids.sort();
+        ids.dedup();
+        assert_eq!(ids.len(), n, "duplicate scenario ids");
+    }
+
+    #[test]
+    fn smoke_preset_is_tiny_and_two_ranked() {
+        let (spec, settings) = preset("smoke").unwrap();
+        for cell in spec.cells() {
+            assert_eq!(cell.ranks, 2);
+        }
+        assert!(settings.steps <= 200);
+        assert!(preset("bogus").is_err());
+    }
+
+    #[test]
+    fn scenario_id_is_stable() {
+        let sc = Scenario {
+            alg: AlgGen::New,
+            ranks: 4,
+            neurons_per_rank: 128,
+            delta: 100,
+            regime: Regime::Active,
+        };
+        assert_eq!(sc.id(), "new_r4_n128_d100_active");
+    }
+
+    #[test]
+    fn config_maps_algorithms_and_regime() {
+        let (_, settings) = preset("smoke").unwrap();
+        let sc = Scenario {
+            alg: AlgGen::Old,
+            ranks: 2,
+            neurons_per_rank: 32,
+            delta: 50,
+            regime: Regime::Quiet,
+        };
+        let cfg = sc.config(&settings);
+        assert_eq!(cfg.connectivity_alg, ConnectivityAlg::OldRma);
+        assert_eq!(cfg.spike_alg, SpikeAlg::OldIds);
+        assert_eq!(cfg.bg_mean, 3.0);
+        assert_eq!(cfg.delta, 50);
+        assert_eq!(cfg.steps, settings.steps);
+    }
+
+    #[test]
+    fn names_roundtrip() {
+        for alg in [AlgGen::Old, AlgGen::New] {
+            assert_eq!(AlgGen::from_name(alg.name()).unwrap(), alg);
+        }
+        for regime in [Regime::Quiet, Regime::Active] {
+            assert_eq!(Regime::from_name(regime.name()).unwrap(), regime);
+        }
+        assert!(AlgGen::from_name("direct").is_err());
+        assert!(Regime::from_name("loud").is_err());
+    }
+}

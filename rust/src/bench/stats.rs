@@ -1,0 +1,52 @@
+//! Repetition statistics for the bench harness.
+//!
+//! The harness reports the median over measured repetitions (robust
+//! against one-off scheduler noise on a thread-per-rank substrate) plus
+//! min/max as the observed spread — see DESIGN.md §8 for why medians
+//! and not means.
+
+/// Median/min/max over one scenario's measured repetitions.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Summary {
+    pub median: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    /// Summarize a non-empty sample set. The median of an even count is
+    /// the mean of the two middle order statistics.
+    pub fn of(samples: &[f64]) -> Summary {
+        assert!(!samples.is_empty(), "cannot summarize zero samples");
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).expect("non-finite sample"));
+        let n = sorted.len();
+        let median = if n % 2 == 1 {
+            sorted[n / 2]
+        } else {
+            (sorted[n / 2 - 1] + sorted[n / 2]) / 2.0
+        };
+        Summary { median, min: sorted[0], max: sorted[n - 1] }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn odd_and_even_medians() {
+        let s = Summary::of(&[3.0, 1.0, 2.0]);
+        assert_eq!(s, Summary { median: 2.0, min: 1.0, max: 3.0 });
+        let s = Summary::of(&[4.0, 1.0, 3.0, 2.0]);
+        assert_eq!(s, Summary { median: 2.5, min: 1.0, max: 4.0 });
+        let s = Summary::of(&[7.0]);
+        assert_eq!(s, Summary { median: 7.0, min: 7.0, max: 7.0 });
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_samples_panic() {
+        Summary::of(&[]);
+    }
+}

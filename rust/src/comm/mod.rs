@@ -25,6 +25,15 @@ use crate::util::wire::{decode_all, encode_all, Wire};
 /// Typed all-to-all: `sends[d]` goes to rank `d`; returns `recvs[s]`
 /// received from rank `s`. Counts wire bytes on the communicator.
 pub fn exchange<T: Wire>(comm: &ThreadComm, sends: Vec<Vec<T>>) -> Vec<Vec<T>> {
+    exchange_ref(comm, &sends)
+}
+
+/// `exchange` borrowing the send lists, so per-step callers can keep
+/// them as reusable scratch instead of reallocating one `Vec<Vec<_>>`
+/// per call (EXPERIMENTS.md §Perf, opt 6). The wire bytes on the
+/// communicator are identical to `exchange`'s: encoding copies out of
+/// the borrowed lists either way.
+pub fn exchange_ref<T: Wire>(comm: &ThreadComm, sends: &[Vec<T>]) -> Vec<Vec<T>> {
     let bufs = sends.iter().map(|msgs| encode_all(msgs)).collect();
     comm.all_to_all(bufs).iter().map(|buf| decode_all(buf)).collect()
 }

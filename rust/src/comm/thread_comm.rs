@@ -19,7 +19,7 @@ pub type WindowKey = u32;
 struct Shared {
     size: usize,
     barrier: Barrier,
-    /// slots[parity][dst][src]: in-flight buffer from `src` to `dst`.
+    /// `slots[parity][dst][src]`: in-flight buffer from `src` to `dst`.
     /// Two parity-alternating slot sets let `all_to_all` get away with a
     /// SINGLE barrier per collective: writes of collective k+1 go to the
     /// other set, so they can never clobber a k-buffer a slower rank has

@@ -58,6 +58,29 @@ pub enum NeuronModel {
 }
 
 /// Full simulation configuration.
+///
+/// # Examples
+///
+/// Start from defaults, override fields the INI way (exactly what the
+/// CLI's `--set section.key=value` does), and validate:
+///
+/// ```
+/// use ilmi::config::{ConnectivityAlg, SimConfig};
+///
+/// let mut cfg = SimConfig::default();
+/// cfg.apply_kv("topology.ranks", "4").unwrap();
+/// cfg.apply_kv("algorithms.connectivity", "old").unwrap();
+/// assert_eq!(cfg.connectivity_alg, ConnectivityAlg::OldRma);
+/// assert_eq!(cfg.total_neurons(), 4 * cfg.neurons_per_rank);
+/// cfg.validate().unwrap();
+///
+/// // Unknown keys error instead of silently doing nothing.
+/// assert!(cfg.apply_kv("topology.bogus", "1").is_err());
+///
+/// // Configs round-trip through the INI dialect snapshots embed.
+/// let back = SimConfig::from_ini(&cfg.to_ini()).unwrap();
+/// assert_eq!(back.ranks, 4);
+/// ```
 #[derive(Clone, Debug)]
 pub struct SimConfig {
     // -- topology ------------------------------------------------------

@@ -2,7 +2,9 @@
 //! electrical update, element update; every `plasticity_interval` steps —
 //! synapse deletion, octree update, Barnes–Hut formation. Each phase is
 //! timed under the paper's Fig. 11 categories and every byte crossing
-//! ranks is counted by the communicator.
+//! ranks is counted by the communicator; the `bench` subsystem sweeps
+//! exactly these timings and counters across its scenario matrix
+//! (EXPERIMENTS.md §Bench), so the driver carries no bench-only code.
 
 use std::time::{Duration, Instant};
 

@@ -7,9 +7,35 @@
 //! simulated-MPI substrate, with the per-neuron numeric hot path compiled
 //! from JAX/Pallas to HLO and executed through PJRT.
 //!
-//! See DESIGN.md for the architecture and the experiment index.
+//! # Paper-section → module map
+//!
+//! | Paper section | What it describes | Module |
+//! |---|---|---|
+//! | §III-A | MSP step loop (spikes → activity → plasticity) | [`coordinator`] |
+//! | §III-A0a | Electrical activity / Izhikevich model | [`neuron`] |
+//! | §III-B | Distributed octree over Morton-order domains | [`octree`] |
+//! | §III-B0c | Barnes–Hut target search (old, RMA download) | [`barnes_hut`] |
+//! | §IV-A | Location-aware Barnes–Hut ("move computation") | [`barnes_hut`] |
+//! | §IV-B | Frequency approximation of spike exchange | [`spikes`] |
+//! | §V-B | Timing experiments, phase breakdown (Fig. 11) | [`metrics`], [`bench`] |
+//! | §V-C | Transferred-bytes accounting (Tables I/II) | [`comm`] |
+//! | §V-D | Calcium-quality experiment (Figs. 8/9) | [`neuron`], `quality` CLI |
+//! | — | Synapse bookkeeping + deletion protocol | [`plasticity`] |
+//! | — | AOT artifact execution through PJRT | [`runtime`] |
+//! | — | Checkpoint/restore + scenario branching | [`snapshot`] |
+//! | — | Benchmark matrix + `BENCH_*.json` trajectories | [`bench`] |
+//!
+//! Entry points: [`config::SimConfig`] describes a run,
+//! [`coordinator::run_simulation`] executes it,
+//! [`snapshot::Snapshot`] reopens a checkpointed one, and
+//! [`bench::run_matrix`] measures a scenario matrix.
+//!
+//! See `DESIGN.md` for the architecture, `EXPERIMENTS.md` for the
+//! recorded measurements (§Perf, §Bench), and `README.md` for the CLI
+//! quickstart.
 
 pub mod barnes_hut;
+pub mod bench;
 pub mod cli;
 pub mod comm;
 pub mod coordinator;

@@ -17,6 +17,11 @@
 //!              saved brain instead
 //!   compare    run old vs new algorithms on the same workload, print
 //!              the speedups (the paper's headline numbers, scaled)
+//!   bench      run a scenario matrix ({old,new} x ranks x neurons x
+//!              delta x firing regime), write a versioned BENCH_*.json
+//!              (per-phase medians, bytes, collective counts) plus a
+//!              markdown table; `--baseline FILE` diffs against a prior
+//!              report and fails on regressions beyond `--threshold`
 //!   quality    the §V-D calcium-quality experiment (Figs. 8/9), CSV out
 //!   inspect    load + exercise the AOT artifacts through PJRT
 //!
@@ -48,6 +53,7 @@ fn run(argv: &[String]) -> Result<()> {
         "simulate" => cmd_simulate(&args),
         "resume" => cmd_resume(&args),
         "compare" => cmd_compare(&args),
+        "bench" => cmd_bench(&args),
         "quality" => cmd_quality(&args),
         "inspect" => cmd_inspect(&args),
         "" | "help" | "-h" | "--help" => {
@@ -60,7 +66,7 @@ fn run(argv: &[String]) -> Result<()> {
 
 const HELP: &str = "\
 ilmi - I Like To Move It: structural-plasticity brain simulation
-usage: ilmi <simulate|resume|compare|quality|inspect> [flags]
+usage: ilmi <simulate|resume|compare|bench|quality|inspect> [flags]
   simulate  --config FILE --set k=v ... [--csv PATH] [--xla]
             [--checkpoint-every N --checkpoint-dir D]
               write a resumable snapshot every N steps into D
@@ -77,6 +83,17 @@ usage: ilmi <simulate|resume|compare|quality|inspect> [flags]
               forks a new scenario (same brain, different protocol)
               from the saved state.
   compare   --set k=v ... (runs old-vs-new on the same workload)
+  bench     [--preset smoke|quick|full] [--name NAME] [--out FILE]
+            [--steps N] [--warmup N] [--reps N] [--seed S]
+            [--md FILE] [--baseline FILE] [--threshold PCT]
+              run the scenario matrix ({old,new} x ranks x neurons x
+              delta x regime) and write BENCH_<name>.json (per-phase
+              median/min/max seconds, bytes, collective counts) plus a
+              markdown table (--md saves it). --baseline diffs against
+              a prior report of the SAME matrix (fingerprint-checked)
+              and exits nonzero on timing regressions beyond
+              --threshold percent (default 20) or any counter drift.
+              See EXPERIMENTS.md SSBench.
   quality   [--steps N] [--csv PATH] [--old] (paper SS V-D, Figs 8/9)
   inspect   [--artifacts DIR] (load artifacts, run one batch through PJRT)
 ";
@@ -273,6 +290,90 @@ fn cmd_compare(args: &Args) -> Result<()> {
             "modeled comm on {name}: {po:.4}s -> {pn:.4}s ({:.1}x)",
             po / pn.max(1e-12)
         );
+    }
+    Ok(())
+}
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    let preset_name = args.get("preset").unwrap_or("quick");
+    let (spec, mut settings) = ilmi::bench::preset(preset_name).map_err(anyhow::Error::msg)?;
+    if let Some(v) = args.get_parse::<usize>("steps").map_err(anyhow::Error::msg)? {
+        settings.steps = v;
+    }
+    if let Some(v) = args.get_parse::<usize>("warmup").map_err(anyhow::Error::msg)? {
+        settings.warmup = v;
+    }
+    if let Some(v) = args.get_parse::<usize>("reps").map_err(anyhow::Error::msg)? {
+        settings.reps = v;
+    }
+    if let Some(v) = args.get_parse::<u64>("seed").map_err(anyhow::Error::msg)? {
+        settings.seed = v;
+    }
+    let name = args.get("name").unwrap_or(preset_name).to_string();
+    let out = args
+        .get("out")
+        .map(String::from)
+        .unwrap_or_else(|| format!("BENCH_{name}.json"));
+    let threshold =
+        args.get_parse::<f64>("threshold").map_err(anyhow::Error::msg)?.unwrap_or(20.0) / 100.0;
+
+    // Load the baseline BEFORE any write: --out may name the same file
+    // (the "diff, then update the baseline in place" workflow), and the
+    // diff must run against the old content, never the fresh report.
+    let baseline = match args.get("baseline") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .map_err(|e| anyhow!("cannot read baseline {path}: {e}"))?;
+            let parsed = ilmi::bench::BenchReport::from_json(&text)
+                .map_err(|e| anyhow!("baseline {path}: {e}"))?;
+            Some((path.to_string(), parsed))
+        }
+        None => None,
+    };
+    let out_is_baseline = baseline
+        .as_ref()
+        .is_some_and(|(path, _)| std::path::Path::new(path) == std::path::Path::new(&out));
+
+    let report = ilmi::bench::run_matrix(&name, &spec, &settings, |msg| println!("{msg}"))?;
+    let json = report.to_json();
+    // Self-check: the emitted document must parse back under the schema
+    // (which requires all seven phases per scenario) and reproduce its
+    // own fingerprint — this is what the CI smoke run relies on.
+    ilmi::bench::BenchReport::from_json(&json)
+        .map_err(|e| anyhow!("emitted report fails its own schema: {e}"))?;
+    let write_out = || -> Result<()> {
+        std::fs::write(&out, &json)?;
+        println!(
+            "wrote {out} ({} scenarios, fingerprint {:016x})",
+            report.results.len(),
+            report.fingerprint()
+        );
+        Ok(())
+    };
+    if !out_is_baseline {
+        write_out()?;
+    }
+    let md = report.markdown_table();
+    print!("{md}");
+    if let Some(path) = args.get("md") {
+        std::fs::write(path, &md)?;
+        println!("wrote {path}");
+    }
+    if let Some((baseline_path, baseline)) = &baseline {
+        let diff = report.diff(baseline, threshold).map_err(anyhow::Error::msg)?;
+        print!("{}", diff.render());
+        if diff.regressions() > 0 {
+            bail!(
+                "{} regression(s) against {baseline_path} (threshold {:.0}%){}",
+                diff.regressions(),
+                threshold * 100.0,
+                if out_is_baseline { "; baseline file left untouched" } else { "" }
+            );
+        }
+    }
+    if out_is_baseline {
+        // Clean diff: now it is safe to roll the baseline forward.
+        write_out()?;
     }
     Ok(())
 }

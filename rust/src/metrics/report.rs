@@ -50,6 +50,14 @@ impl SimReport {
             / self.ranks.len() as f64
     }
 
+    /// All communication counters merged over ranks (what one
+    /// `bench` scenario records per cell).
+    pub fn total_comm(&self) -> CounterSnapshot {
+        self.ranks
+            .iter()
+            .fold(CounterSnapshot::default(), |acc, r| acc.merge(&r.comm))
+    }
+
     /// Total bytes sent by all ranks (Table I upper / Table II value).
     pub fn total_bytes_sent(&self) -> u64 {
         self.ranks.iter().map(|r| r.comm.bytes_sent).sum()

@@ -50,6 +50,19 @@ impl Snapshot {
     }
 
     /// Read and parse a snapshot file.
+    ///
+    /// # Examples
+    ///
+    /// ```no_run
+    /// use ilmi::snapshot::Snapshot;
+    ///
+    /// let snap = Snapshot::read_file("ckpts/step_0000000500.ilmisnap").unwrap();
+    /// println!("{} ranks, resumes at step {}", snap.ranks(), snap.next_step());
+    /// // Snapshots are self-describing: the embedded config is
+    /// // cross-checked against the stored fingerprint on extraction.
+    /// let cfg = snap.config().unwrap();
+    /// assert_eq!(cfg.ranks, snap.ranks());
+    /// ```
     pub fn read_file(path: impl AsRef<Path>) -> Result<Snapshot, String> {
         let path = path.as_ref();
         let buf = std::fs::read(path)

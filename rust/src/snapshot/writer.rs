@@ -19,6 +19,33 @@ use crate::util::wire::{put_u32, put_u64};
 
 /// Canonical file name of the checkpoint taken with `next_step` steps
 /// completed: `step_0000001000.ilmisnap`.
+///
+/// # Examples
+///
+/// The usual write path is config-driven — the driver deposits into a
+/// [`CheckpointSink`] every `checkpoint_every` steps — and this
+/// function names the file a given checkpoint landed in:
+///
+/// ```no_run
+/// use ilmi::config::SimConfig;
+/// use ilmi::coordinator::{resume_simulation, run_simulation};
+/// use ilmi::snapshot::{snapshot_file_name, Snapshot};
+///
+/// let mut cfg = SimConfig::default();
+/// cfg.steps = 1000;
+/// cfg.checkpoint_every = 500;
+/// cfg.checkpoint_dir = "ckpts".to_string();
+/// run_simulation(&cfg).unwrap();
+///
+/// // Reopen the mid-run snapshot and resume to a longer schedule.
+/// let snap = Snapshot::read_file(format!("ckpts/{}", snapshot_file_name(500))).unwrap();
+/// let mut longer = cfg.clone();
+/// longer.steps = 2000;
+/// longer.checkpoint_every = 0;
+/// longer.checkpoint_dir = String::new();
+/// let report = resume_simulation(&longer, &snap).unwrap();
+/// assert_eq!(report.ranks.len(), cfg.ranks);
+/// ```
 pub fn snapshot_file_name(next_step: u64) -> String {
     format!("step_{next_step:010}.{SNAPSHOT_EXT}")
 }

@@ -10,7 +10,7 @@
 //! number of synchronization points drops by Δ and transfer volume
 //! becomes independent of the firing rate.
 
-use crate::comm::{exchange, ThreadComm};
+use crate::comm::{exchange_ref, ThreadComm};
 use crate::neuron::Population;
 use crate::plasticity::SynapseStore;
 use crate::util::wire::{get_f32, get_u64, put_f32, put_u64, Wire};
@@ -45,6 +45,10 @@ pub struct FrequencyExchange {
     /// PRNG for spike reconstruction.
     rng: Rng,
     dest_flags: Vec<bool>,
+    /// Scratch: per-destination send lists, reused across epochs like
+    /// `dest_flags` instead of rebuilding a `Vec<Vec<_>>` per exchange
+    /// (EXPERIMENTS.md §Perf, opt 6).
+    sends: Vec<Vec<FreqRecord>>,
 }
 
 impl FrequencyExchange {
@@ -54,6 +58,7 @@ impl FrequencyExchange {
             freqs: vec![0.0; total_neurons],
             rng,
             dest_flags: Vec::new(),
+            sends: Vec::new(),
         }
     }
 
@@ -74,7 +79,9 @@ impl FrequencyExchange {
         }
         let size = comm.size();
         self.dest_flags.resize(size, false);
-        let mut sends: Vec<Vec<FreqRecord>> = vec![Vec::new(); size];
+        self.sends.resize_with(size, Vec::new);
+        let sends = &mut self.sends;
+        sends.iter_mut().for_each(|s| s.clear());
         for local in 0..pop.len() {
             let spikes = pop.epoch_spikes[local];
             pop.epoch_spikes[local] = 0;
@@ -95,7 +102,7 @@ impl FrequencyExchange {
                 }
             }
         }
-        let incoming = exchange(comm, sends);
+        let incoming = exchange_ref(comm, sends);
         for batch in incoming {
             for rec in batch {
                 self.freqs[rec.id as usize] = rec.freq;
@@ -152,6 +159,7 @@ impl FrequencyExchange {
             freqs,
             rng: Rng::from_state(rng),
             dest_flags: Vec::new(),
+            sends: Vec::new(),
         })
     }
 }
@@ -220,6 +228,39 @@ mod tests {
     fn zero_frequency_never_spikes() {
         let mut ex = FrequencyExchange::new(100, 4, Rng::new(8));
         assert!((0..1000).all(|_| !ex.spiked(1)));
+    }
+
+    #[test]
+    fn scratch_reuse_keeps_accounting_identical() {
+        // Two consecutive epoch boundaries through ONE FrequencyExchange
+        // (reused hoisted send buffers) must produce exactly the
+        // per-epoch counters of the first exchange: the scratch changes
+        // allocation, not accounting (EXPERIMENTS.md §Perf, opt 6).
+        let results = run_ranks(2, |comm| {
+            let rank = comm.rank();
+            let mut pop = make_pop(rank, 2);
+            let mut store = SynapseStore::new(2);
+            if rank == 0 {
+                store.add_out(0, 2); // to rank 1
+            }
+            let mut ex = FrequencyExchange::new(10, 4, Rng::new(3));
+            pop.epoch_spikes[0] = 5;
+            assert!(ex.maybe_exchange(&comm, &mut pop, &store, 2, 0));
+            let first = comm.counters().snapshot();
+            pop.epoch_spikes[0] = 7;
+            assert!(ex.maybe_exchange(&comm, &mut pop, &store, 2, 10));
+            let second = comm.counters().snapshot().since(&first);
+            (first, second)
+        });
+        for (first, second) in &results {
+            assert_eq!(first, second);
+        }
+        // One 12-byte record rank0 -> rank1 per epoch, one collective each.
+        assert_eq!(results[0].0.bytes_sent, 12);
+        assert_eq!(results[0].0.msgs_sent, 1);
+        assert_eq!(results[0].0.collectives, 1);
+        assert_eq!(results[1].0.bytes_sent, 0);
+        assert_eq!(results[1].0.bytes_recv, 12);
     }
 
     #[test]

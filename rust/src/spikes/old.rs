@@ -2,7 +2,7 @@
 //! sorted on receipt, binary-searched per remote in-partner
 //! (paper §III-A0a / §V-B0b).
 
-use crate::comm::{exchange, ThreadComm};
+use crate::comm::{exchange_ref, ThreadComm};
 use crate::neuron::Population;
 use crate::plasticity::SynapseStore;
 
@@ -13,11 +13,20 @@ pub struct IdExchange {
     /// Scratch: which destination ranks each local neuron projects to
     /// (rebuilt lazily each step from out_edges).
     dest_flags: Vec<bool>,
+    /// Scratch: per-destination send lists, reused across steps like
+    /// `dest_flags` — this runs every step, so rebuilding the
+    /// `Vec<Vec<_>>` here was measurable allocation churn
+    /// (EXPERIMENTS.md §Perf, opt 6).
+    sends: Vec<Vec<u64>>,
 }
 
 impl IdExchange {
     pub fn new(size: usize) -> Self {
-        IdExchange { sorted: vec![Vec::new(); size], dest_flags: vec![false; size] }
+        IdExchange {
+            sorted: vec![Vec::new(); size],
+            dest_flags: vec![false; size],
+            sends: vec![Vec::new(); size],
+        }
     }
 
     /// One step: send the ids of local neurons that fired to every rank
@@ -31,8 +40,8 @@ impl IdExchange {
         store: &SynapseStore,
         neurons_per_rank: u64,
     ) {
-        let size = comm.size();
-        let mut sends: Vec<Vec<u64>> = vec![Vec::new(); size];
+        let sends = &mut self.sends;
+        sends.iter_mut().for_each(|s| s.clear());
         for local in 0..pop.len() {
             if !pop.fired[local] {
                 continue;
@@ -48,7 +57,7 @@ impl IdExchange {
                 }
             }
         }
-        self.sorted = exchange(comm, sends);
+        self.sorted = exchange_ref(comm, sends);
         for list in self.sorted.iter_mut() {
             list.sort_unstable();
         }
@@ -125,6 +134,42 @@ mod tests {
         for id in [8u64, 10, 12, 14] {
             assert!(!ex.spiked(1, id));
         }
+    }
+
+    #[test]
+    fn scratch_reuse_keeps_accounting_identical() {
+        // Two consecutive steps through ONE IdExchange (reused hoisted
+        // send buffers) must produce exactly the per-step counters a
+        // fresh step produces: the scratch changes allocation, not
+        // accounting (EXPERIMENTS.md §Perf, opt 6).
+        let results = run_ranks(2, |comm| {
+            let rank = comm.rank();
+            let mut pop = make_pop(rank, 4);
+            let mut store = SynapseStore::new(4);
+            if rank == 0 {
+                store.add_out(0, 4); // both to rank 1
+                store.add_out(1, 5);
+                pop.fired[0] = true;
+                pop.fired[1] = true;
+            }
+            let mut ex = IdExchange::new(2);
+            ex.exchange(&comm, &pop, &store, 4);
+            let first = comm.counters().snapshot();
+            ex.exchange(&comm, &pop, &store, 4);
+            let second = comm.counters().snapshot().since(&first);
+            (first, second)
+        });
+        for (first, second) in &results {
+            assert_eq!(first, second);
+        }
+        // Absolute values match the wire format: two 8-byte ids in one
+        // message from rank 0, one collective on every rank.
+        assert_eq!(results[0].0.bytes_sent, 16);
+        assert_eq!(results[0].0.msgs_sent, 1);
+        assert_eq!(results[0].0.collectives, 1);
+        assert_eq!(results[1].0.bytes_sent, 0);
+        assert_eq!(results[1].0.bytes_recv, 16);
+        assert_eq!(results[1].0.collectives, 1);
     }
 
     #[test]
