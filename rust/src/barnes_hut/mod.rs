@@ -364,7 +364,7 @@ mod tests {
     fn acceptance_respects_capacity() {
         let mut pop = tiny_pop(2);
         pop.z_den_exc[0] = 1.0; // capacity 1
-        let mut store = SynapseStore::new(2);
+        let mut store = SynapseStore::new(2, 2);
         let mut rng = Rng::new(2);
         let proposals = vec![
             Proposal { source: 100, source_exc: true, target_local: 0 },
@@ -382,7 +382,7 @@ mod tests {
         let mut pop = tiny_pop(1);
         pop.z_den_exc[0] = 1.0;
         pop.z_den_inh[0] = 1.0;
-        let mut store = SynapseStore::new(1);
+        let mut store = SynapseStore::new(1, 1);
         let mut rng = Rng::new(3);
         let proposals = vec![
             Proposal { source: 100, source_exc: true, target_local: 0 },
@@ -396,7 +396,7 @@ mod tests {
     fn acceptance_counts_existing_synapses() {
         let mut pop = tiny_pop(1);
         pop.z_den_exc[0] = 2.0;
-        let mut store = SynapseStore::new(1);
+        let mut store = SynapseStore::new(1, 1);
         store.add_in(0, 55, true); // one element already bound
         let mut rng = Rng::new(4);
         let proposals = vec![
@@ -420,7 +420,7 @@ mod tests {
                 &mut rng,
             );
             pop.z_den_exc[0] = 3.0;
-            let mut store = SynapseStore::new(1);
+            let mut store = SynapseStore::new(1, 1);
             // Each rank proposes to the other rank's neuron.
             let other = 1 - comm.rank();
             let mut reqs = vec![Vec::new(), Vec::new()];

@@ -10,7 +10,7 @@
 //! accept/decline). Per-neuron communication drops from O(log n) RMA
 //! fetches to O(1) messages.
 
-use crate::comm::{exchange, ThreadComm};
+use crate::comm::{exchange_ref, ThreadComm};
 use crate::config::SimConfig;
 use crate::neuron::{GlobalNeuronId, Population};
 use crate::octree::{ElementKind, NodeKind, Octree, NO_CHILD, NO_NEURON};
@@ -129,6 +129,18 @@ pub struct SelectScratch2 {
     weights: Vec<f64>,
 }
 
+/// Reusable per-destination send buffers for the formation phase's two
+/// all-to-alls, held by the driver across connectivity updates —
+/// EXPERIMENTS.md §Perf, opt 6 applied to the formation path: the
+/// request/response `Vec<Vec<_>>` pairs are cleared and refilled, never
+/// reallocated, and travel through the borrowing `comm::exchange_ref`
+/// exactly like both spike-exchange paths.
+#[derive(Default)]
+pub struct FormationScratch {
+    requests: Vec<Vec<NewRequest>>,
+    responses: Vec<Vec<NewResponse>>,
+}
+
 /// Full formation phase, location-aware algorithm (Algorithm 1):
 /// source-side searches, one 42 B-request all-to-all, owner-side
 /// searches, acceptance, one 9 B-response all-to-all.
@@ -139,9 +151,12 @@ pub fn run_formation(
     store: &mut SynapseStore,
     cfg: &SimConfig,
     rng: &mut Rng,
+    send_scratch: &mut FormationScratch,
 ) -> FormationStats {
     let mut stats = FormationStats::default();
-    let mut requests: Vec<Vec<NewRequest>> = vec![Vec::new(); comm.size()];
+    send_scratch.requests.resize_with(comm.size(), Vec::new);
+    send_scratch.requests.iter_mut().for_each(|v| v.clear());
+    let requests = &mut send_scratch.requests;
     let mut scratch = SelectScratch2::default();
 
     // Phase 1: local descents (lines 6-12 of Algorithm 1).
@@ -183,9 +198,11 @@ pub fn run_formation(
     let sent_sources: Vec<Vec<GlobalNeuronId>> =
         requests.iter().map(|v| v.iter().map(|r| r.source).collect()).collect();
 
-    // Phase 2: all-to-all the requests (line 15).
+    // Phase 2: all-to-all the requests (line 15) — borrowing the
+    // reusable scratch, identical wire accounting to the consuming
+    // `exchange` (pinned by `scratch_reuse_keeps_accounting_identical`).
     let t_x1 = std::time::Instant::now();
-    let incoming = exchange(comm, requests);
+    let incoming = exchange_ref(comm, requests);
     stats.exchange_nanos += t_x1.elapsed().as_nanos() as u64;
 
     // Phase 3: owner-side continuation (lines 17-20). Leaf-typed
@@ -242,16 +259,18 @@ pub fn run_formation(
     let success = accept_proposals(pop, store, &proposals, rng);
 
     // Phase 5: 9 B responses, order-preserving per source rank
-    // (lines 23-26).
-    let mut responses: Vec<Vec<NewResponse>> = found
-        .iter()
-        .map(|f| f.iter().map(|&t| NewResponse { target: t, success: false }).collect())
-        .collect();
+    // (lines 23-26), through the same reusable scratch.
+    send_scratch.responses.resize_with(comm.size(), Vec::new);
+    for (resp, f) in send_scratch.responses.iter_mut().zip(&found) {
+        resp.clear();
+        resp.extend(f.iter().map(|&t| NewResponse { target: t, success: false }));
+    }
+    let responses = &mut send_scratch.responses;
     for (k, &(r, seq)) in origin.iter().enumerate() {
         responses[r][seq].success = success[k];
     }
     let t_x2 = std::time::Instant::now();
-    let replies = exchange(comm, responses);
+    let replies = exchange_ref(comm, responses);
     stats.exchange_nanos += t_x2.elapsed().as_nanos() as u64;
 
     // Phase 6: apply on the source side.
@@ -330,44 +349,58 @@ mod tests {
         assert_eq!(results[1].1, 0);
     }
 
+    /// Build the frozen one-neuron-per-rank scenario and run one
+    /// formation phase through `scratch`; returns the stats, the store,
+    /// and the counters the formation itself produced (tree-setup
+    /// collectives excluded).
+    fn one_formation_round(
+        comm: &ThreadComm,
+        seed: u64,
+        scratch: &mut FormationScratch,
+    ) -> (FormationStats, SynapseStore, crate::comm::CounterSnapshot) {
+        let rank = comm.rank();
+        let cfg = SimConfig {
+            ranks: 2,
+            neurons_per_rank: 1,
+            theta: 0.3,
+            ..SimConfig::default()
+        };
+        let mut rng = Rng::new(seed + rank as u64);
+        let decomp = DomainDecomposition::new(2, cfg.domain_size);
+        let (lo, hi) = decomp.cell_bounds(decomp.cells_of_rank(rank).start);
+        let pos = (lo + hi) / 2.0;
+        let mut pop = Population::init(&cfg, rank, lo, hi, &mut rng);
+        pop.positions[0] = pos;
+        pop.is_excitatory[0] = true;
+        pop.z_ax[0] = 1.0;
+        pop.z_den_exc[0] = 1.0;
+        pop.z_den_inh[0] = 0.0;
+
+        let mut tree = Octree::build(&decomp, rank, pop.first_id, &pop.positions);
+        tree.reset_and_set_leaves(pop.first_id, &pop.z_den_exc, &pop.z_den_inh);
+        tree.aggregate_local();
+        let payloads = tree.own_branch_payloads(decomp.cells_of_rank(rank), |_| NO_CHILD);
+        let all = crate::comm::gather_all(comm, &payloads);
+        for (src, batch) in all.iter().enumerate() {
+            if src != rank {
+                tree.apply_branch_payloads(batch);
+            }
+        }
+        tree.aggregate_upper();
+        tree.normalize();
+
+        let mut store = SynapseStore::new(1, 1);
+        let before = comm.counters().snapshot();
+        let stats = run_formation(&comm, &tree, &pop, &mut store, &cfg, &mut rng, scratch);
+        let during = comm.counters().snapshot().since(&before);
+        (stats, store, during)
+    }
+
     #[test]
     fn formation_forms_cross_rank_synapses_without_rma() {
         let results = run_ranks(2, |comm| {
-            let rank = comm.rank();
-            let cfg = SimConfig {
-                ranks: 2,
-                neurons_per_rank: 1,
-                theta: 0.3,
-                ..SimConfig::default()
-            };
-            let mut rng = Rng::new(100 + rank as u64);
-            let decomp = DomainDecomposition::new(2, cfg.domain_size);
-            let (lo, hi) = decomp.cell_bounds(decomp.cells_of_rank(rank).start);
-            let pos = (lo + hi) / 2.0;
-            let mut pop = Population::init(&cfg, rank, lo, hi, &mut rng);
-            pop.positions[0] = pos;
-            pop.is_excitatory[0] = true;
-            pop.z_ax[0] = 1.0;
-            pop.z_den_exc[0] = 1.0;
-            pop.z_den_inh[0] = 0.0;
-
-            let mut tree = Octree::build(&decomp, rank, pop.first_id, &pop.positions);
-            tree.reset_and_set_leaves(pop.first_id, &pop.z_den_exc, &pop.z_den_inh);
-            tree.aggregate_local();
-            let payloads =
-                tree.own_branch_payloads(decomp.cells_of_rank(rank), |_| NO_CHILD);
-            let all = crate::comm::gather_all(&comm, &payloads);
-            for (src, batch) in all.iter().enumerate() {
-                if src != rank {
-                    tree.apply_branch_payloads(batch);
-                }
-            }
-            tree.aggregate_upper();
-            tree.normalize();
-
-            let mut store = SynapseStore::new(1);
-            let stats = run_formation(&comm, &tree, &pop, &mut store, &cfg, &mut rng);
-            (stats, store, comm.counters().snapshot())
+            let mut scratch = FormationScratch::default();
+            one_formation_round(&comm, 100, &mut scratch)
         });
         for (rank, (stats, store, snap)) in results.iter().enumerate() {
             assert_eq!(stats.searches, 1, "rank {rank}");
@@ -375,7 +408,35 @@ mod tests {
             assert_eq!(store.total_out(), 1);
             assert_eq!(store.total_in(), 1);
             assert_eq!(snap.bytes_rma, 0, "new algorithm must not RMA");
+            // Wire pins at the paper's exact message sizes: each rank
+            // ships one 42 B request and one 9 B response in two
+            // collectives — the values the `exchange_ref` migration
+            // must not move (pre-refactor accounting).
+            assert_eq!(snap.bytes_sent, 42 + 9, "rank {rank}: bytes");
+            assert_eq!(snap.bytes_recv, 42 + 9, "rank {rank}: bytes");
+            assert_eq!(snap.msgs_sent, 2, "rank {rank}: messages");
+            assert_eq!(snap.collectives, 2, "rank {rank}: collectives");
             store.check_invariants().unwrap();
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_keeps_accounting_identical() {
+        // Two formation rounds over identical (freshly rebuilt) state
+        // through ONE FormationScratch: the reused request/response
+        // buffers must reproduce exactly the counters of the first
+        // round — the scratch changes allocation, not accounting
+        // (EXPERIMENTS.md §Perf, opt 6 on the formation path).
+        let results = run_ranks(2, |comm| {
+            let mut scratch = FormationScratch::default();
+            let (s1, _, c1) = one_formation_round(&comm, 100, &mut scratch);
+            let (s2, _, c2) = one_formation_round(&comm, 100, &mut scratch);
+            (s1, c1, s2, c2)
+        });
+        for (s1, c1, s2, c2) in &results {
+            assert_eq!(s1.proposals, s2.proposals);
+            assert_eq!(s1.formed, s2.formed);
+            assert_eq!(c1, c2);
         }
     }
 }

@@ -1,11 +1,11 @@
 //! The versioned `BENCH_*.json` report: emit, parse, markdown render,
 //! and baseline diffing.
 //!
-//! Schema (`schema_version` 1):
+//! Schema (`schema_version` 2):
 //!
 //! ```json
 //! {
-//!   "schema_version": 1,
+//!   "schema_version": 2,
 //!   "name": "quick",
 //!   "created_unix": 1753500000,
 //!   "fingerprint": "9f…16 hex digits…",
@@ -18,7 +18,8 @@
 //!     "phases": {"spike_exchange": {"median":…,"min":…,"max":…}, …},
 //!     "wall": {"median":…,"min":…,"max":…},
 //!     "comm": {"bytes_sent":…,"bytes_recv":…,"bytes_rma":…,
-//!              "msgs_sent":…,"collectives":…,"rma_gets":…}
+//!              "msgs_sent":…,"collectives":…,"rma_gets":…},
+//!     "spike_state_bytes": …
 //!   }, …]
 //! }
 //! ```
@@ -40,7 +41,9 @@ use super::scenario::{AlgGen, Regime, RunSettings, Scenario};
 use super::stats::Summary;
 
 /// Version of the `BENCH_*.json` schema this build emits and accepts.
-pub const SCHEMA_VERSION: u32 = 1;
+/// v2 added `spike_state_bytes` (per-rank spike-exchange state memory,
+/// max across ranks — the EXPERIMENTS.md §Perf opt 7 counter).
+pub const SCHEMA_VERSION: u32 = 2;
 
 /// Timing differences below this many seconds are never regressions —
 /// the thread-rank substrate cannot resolve them reliably.
@@ -60,6 +63,10 @@ pub struct ScenarioResult {
     /// Communication counters aggregated over ranks. Deterministic for
     /// a fixed seed, hence identical across reps — recorded once.
     pub comm: CounterSnapshot,
+    /// Spike-exchange reconstruction-state memory at run end, max
+    /// across ranks (12 B per installed remote partner; 0 for the old
+    /// algorithm). Seed-deterministic like the counters.
+    pub spike_state_bytes: u64,
 }
 
 /// One complete benchmark trajectory (a `BENCH_*.json` file in memory).
@@ -133,7 +140,8 @@ impl BenchReport {
         if version != SCHEMA_VERSION as u64 {
             return Err(format!(
                 "unsupported bench schema version {version} (this build reads \
-                 {SCHEMA_VERSION})"
+                 {SCHEMA_VERSION}); re-record the baseline with this build — \
+                 cross-schema trajectories are not comparable"
             ));
         }
         let settings_json = root.req("settings")?;
@@ -173,8 +181,8 @@ impl BenchReport {
         for p in ALL_PHASES {
             out.push_str(&format!(" {} |", p.name()));
         }
-        out.push_str(" wall | bytes_sent | bytes_rma | collectives |\n|---|");
-        out.push_str(&"---:|".repeat(ALL_PHASES.len() + 4));
+        out.push_str(" wall | bytes_sent | bytes_rma | collectives | spike_state |\n|---|");
+        out.push_str(&"---:|".repeat(ALL_PHASES.len() + 5));
         out.push('\n');
         for r in &self.results {
             out.push_str(&format!("| {} |", r.scenario.id()));
@@ -182,8 +190,12 @@ impl BenchReport {
                 out.push_str(&format!(" {:.4} |", r.phases[p.index()].median));
             }
             out.push_str(&format!(
-                " {:.4} | {} | {} | {} |\n",
-                r.wall.median, r.comm.bytes_sent, r.comm.bytes_rma, r.comm.collectives
+                " {:.4} | {} | {} | {} | {} |\n",
+                r.wall.median,
+                r.comm.bytes_sent,
+                r.comm.bytes_rma,
+                r.comm.collectives,
+                r.spike_state_bytes
             ));
         }
         out
@@ -234,6 +246,7 @@ impl BenchReport {
                 ("msgs_sent", base.comm.msgs_sent, cur.comm.msgs_sent),
                 ("collectives", base.comm.collectives, cur.comm.collectives),
                 ("rma_gets", base.comm.rma_gets, cur.comm.rma_gets),
+                ("spike_state_bytes", base.spike_state_bytes, cur.spike_state_bytes),
             ];
             for (field, b, c) in counter_fields {
                 if b != c {
@@ -358,6 +371,7 @@ fn scenario_to_json(r: &ScenarioResult) -> Json {
                 ("rma_gets", Json::Num(r.comm.rma_gets as f64)),
             ]),
         ),
+        ("spike_state_bytes", Json::Num(r.spike_state_bytes as f64)),
     ])
 }
 
@@ -399,6 +413,7 @@ fn scenario_from_json(v: &Json) -> Result<ScenarioResult, String> {
             collectives: comm_json.req("collectives")?.as_u64()?,
             rma_gets: comm_json.req("rma_gets")?.as_u64()?,
         },
+        spike_state_bytes: v.req("spike_state_bytes")?.as_u64()?,
     })
 }
 
@@ -435,6 +450,7 @@ mod tests {
                 collectives: 17,
                 rma_gets: 5,
             },
+            spike_state_bytes: 1_212,
         }
     }
 
@@ -488,7 +504,7 @@ mod tests {
     #[test]
     fn unsupported_schema_version_is_rejected() {
         let text = sample_report().to_json().replace(
-            "\"schema_version\": 1",
+            "\"schema_version\": 2",
             "\"schema_version\": 99",
         );
         let err = BenchReport::from_json(&text).unwrap_err();
@@ -527,6 +543,22 @@ mod tests {
     }
 
     #[test]
+    fn spike_state_drift_is_flagged_and_field_is_required() {
+        let base = sample_report();
+        let mut cur = sample_report();
+        cur.results[0].spike_state_bytes += 12;
+        let diff = cur.diff(&base, 0.2).unwrap();
+        assert_eq!(diff.regressions(), 1);
+        assert!(diff.render().contains("COUNTER DRIFT spike_state_bytes"));
+        // The v2 schema requires the field on every scenario.
+        let text = base.to_json();
+        assert!(text.contains("\"spike_state_bytes\""));
+        let broken = text.replace("\"spike_state_bytes\"", "\"spike_state_gone\"");
+        let err = BenchReport::from_json(&broken).unwrap_err();
+        assert!(err.contains("spike_state_bytes"), "{err}");
+    }
+
+    #[test]
     fn sub_floor_slowdowns_are_not_regressions() {
         // Timings are not fingerprinted, so both sides can be adjusted
         // to craft a big relative / tiny absolute slowdown: +400% but
@@ -547,6 +579,7 @@ mod tests {
         for p in ALL_PHASES {
             assert!(md.contains(p.name()), "{md}");
         }
+        assert!(md.contains("spike_state"), "{md}");
         assert_eq!(md.lines().count(), 2 + 2); // header + separator + 2 rows
     }
 }

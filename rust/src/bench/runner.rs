@@ -28,6 +28,7 @@ pub fn run_scenario(scenario: &Scenario, settings: &RunSettings) -> Result<Scena
     let mut phase_samples = vec![Vec::with_capacity(settings.reps); ALL_PHASES.len()];
     let mut wall_samples = Vec::with_capacity(settings.reps);
     let mut comm = CounterSnapshot::default();
+    let mut spike_state_bytes = 0u64;
     for rep in 0..settings.reps.max(1) {
         let report = run_simulation(&cfg)?;
         for p in ALL_PHASES {
@@ -45,6 +46,19 @@ pub fn run_scenario(scenario: &Scenario, settings: &RunSettings) -> Result<Scena
             );
         }
         comm = total;
+        // The exchange-state size is seed-deterministic too (it is a
+        // function of the connectome at the last epoch boundary).
+        let state = report.max_spike_state_bytes();
+        if rep > 0 && state != spike_state_bytes {
+            anyhow::bail!(
+                "spike-exchange state drifted between repetitions of {} ({} then {} \
+                 bytes) — determinism bug",
+                scenario.id(),
+                spike_state_bytes,
+                state
+            );
+        }
+        spike_state_bytes = state;
     }
     let mut phases = [Summary::default(); ALL_PHASES.len()];
     for p in ALL_PHASES {
@@ -56,6 +70,7 @@ pub fn run_scenario(scenario: &Scenario, settings: &RunSettings) -> Result<Scena
         phases,
         wall: Summary::of(&wall_samples),
         comm,
+        spike_state_bytes,
     })
 }
 
@@ -117,6 +132,11 @@ mod tests {
         assert_eq!(a.comm.bytes_rma, 0);
         assert_eq!(a.reps, 2);
         assert!(a.wall.min <= a.wall.median && a.wall.median <= a.wall.max);
+        // Exchange-state memory is recorded, deterministic, and sparse:
+        // whole 12 B records bounded by the remote-neuron count.
+        assert_eq!(a.spike_state_bytes, b.spike_state_bytes);
+        assert_eq!(a.spike_state_bytes % 12, 0);
+        assert!(a.spike_state_bytes <= 16 * 12, "more state than remote neurons");
     }
 
     #[test]
@@ -139,6 +159,8 @@ mod tests {
         // The old generation pays RMA bytes, the new one does not.
         assert!(report.results[0].comm.bytes_rma > 0);
         assert_eq!(report.results[1].comm.bytes_rma, 0);
+        // Only the new generation holds frequency-reconstruction state.
+        assert_eq!(report.results[0].spike_state_bytes, 0);
         // The assembled report round-trips through the JSON schema.
         let back = BenchReport::from_json(&report.to_json()).unwrap();
         assert_eq!(back, report);

@@ -172,11 +172,29 @@ impl MatrixSpec {
 }
 
 /// Named matrix presets. `smoke` is the CI gate (2 ranks, seconds to
-/// run), `quick` the 16-cell default, `full` the 32-cell sweep that
-/// adds the quiet firing regime.
+/// run), `smoke8` its 8-rank sibling (same tiny schedule, wide enough
+/// that a multi-rank regression in the exchange routing shows up),
+/// `quick` the 16-cell default, `full` the 32-cell sweep that adds the
+/// quiet firing regime.
 pub fn preset(name: &str) -> Result<(MatrixSpec, RunSettings), String> {
     let both_algs = vec![AlgGen::Old, AlgGen::New];
     match name {
+        "smoke8" => Ok((
+            MatrixSpec {
+                algs: both_algs,
+                ranks: vec![8],
+                neurons: vec![16],
+                deltas: vec![50],
+                regimes: vec![Regime::Active],
+            },
+            RunSettings {
+                steps: 100,
+                plasticity_interval: 50,
+                warmup: 0,
+                reps: 2,
+                seed: 42,
+            },
+        )),
         "smoke" => Ok((
             MatrixSpec {
                 algs: both_algs,
@@ -225,7 +243,7 @@ pub fn preset(name: &str) -> Result<(MatrixSpec, RunSettings), String> {
                 seed: 42,
             },
         )),
-        other => Err(format!("unknown bench preset {other:?} (smoke | quick | full)")),
+        other => Err(format!("unknown bench preset {other:?} (smoke | smoke8 | quick | full)")),
     }
 }
 
@@ -257,6 +275,18 @@ mod tests {
         }
         assert!(settings.steps <= 200);
         assert!(preset("bogus").is_err());
+    }
+
+    #[test]
+    fn smoke8_preset_is_tiny_and_eight_ranked() {
+        let (spec, settings) = preset("smoke8").unwrap();
+        let cells = spec.cells();
+        assert_eq!(cells.len(), 2, "old + new only");
+        for cell in &cells {
+            assert_eq!(cell.ranks, 8);
+            cell.config(&settings).validate().unwrap();
+        }
+        assert!(settings.steps <= 200, "stays a seconds-scale CI gate");
     }
 
     #[test]

@@ -151,8 +151,13 @@ impl ThreadComm {
             .get(&key)
             .cloned()
             .unwrap_or_else(|| panic!("rank {} has no window {key}", target));
+        // checked_add: with plain `+`, an offset near usize::MAX wraps
+        // in release builds and the bounds assert silently passes.
+        let end = offset.checked_add(len).unwrap_or_else(|| {
+            panic!("rma_get out of bounds: {offset}+{len} overflows usize")
+        });
         assert!(
-            offset + len <= win.len(),
+            end <= win.len(),
             "rma_get out of bounds: {}+{} > {}",
             offset,
             len,
@@ -318,5 +323,17 @@ mod tests {
         let comm = ThreadComm::solo();
         comm.publish_window(1, vec![0; 4]);
         comm.rma_get(0, 1, 2, 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "rma_get out of bounds")]
+    fn rma_overflowing_range_panics_instead_of_wrapping() {
+        // offset + len wraps to 1 under unchecked usize addition, which
+        // would satisfy `1 <= win.len()` and read out of bounds in a
+        // release build. checked_add must turn it into the same panic
+        // an ordinary out-of-range get produces.
+        let comm = ThreadComm::solo();
+        comm.publish_window(1, vec![0; 4]);
+        comm.rma_get(0, 1, usize::MAX, 2);
     }
 }

@@ -10,7 +10,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
-use crate::barnes_hut::{self, FormationStats};
+use crate::barnes_hut::{self, new::FormationScratch, FormationStats};
 use crate::comm::{gather_all, run_ranks, CounterSnapshot, ThreadComm};
 use crate::config::{Backend, ConnectivityAlg, SimConfig, SpikeAlg};
 use crate::metrics::{Phase, PhaseTimers, RankReport, SimReport};
@@ -40,6 +40,10 @@ pub struct RankState {
     pub deletion: DeletionStats,
     pub spike_lookups: u64,
     pub calcium_trace: Vec<(usize, Vec<f32>)>,
+    /// Reusable send buffers for the location-aware formation phase's
+    /// two all-to-alls (EXPERIMENTS.md §Perf, opt 6). Pure scratch:
+    /// never snapshotted, rebuilt empty on restore.
+    pub bh_scratch: FormationScratch,
     /// Communication counters accumulated before this process segment
     /// (non-zero only for states restored from a snapshot): the run's
     /// communicator starts at zero, so the final report adds this
@@ -64,10 +68,10 @@ impl RankState {
         let n = pop.len();
         RankState {
             pop,
-            store: SynapseStore::new(n),
+            store: SynapseStore::new(n, cfg.neurons_per_rank as u64),
             tree,
             id_exchange: IdExchange::new(comm.size()),
-            freq_exchange: FrequencyExchange::new(cfg.delta, cfg.total_neurons(), rng_spikes),
+            freq_exchange: FrequencyExchange::new(cfg.delta, rng_spikes),
             cache: RemoteNodeCache::default(),
             rng_model,
             rng_conn,
@@ -76,6 +80,7 @@ impl RankState {
             deletion: DeletionStats::default(),
             spike_lookups: 0,
             calcium_trace: Vec::new(),
+            bh_scratch: FormationScratch::default(),
             baseline_comm: CounterSnapshot::default(),
         }
     }
@@ -113,7 +118,7 @@ impl RankState {
             rng_model: self.rng_model.state(),
             rng_conn: self.rng_conn.state(),
             rng_spikes: self.freq_exchange.rng_state(),
-            freqs: self.freq_exchange.freq_table().to_vec(),
+            freq_entries: self.freq_exchange.entries(),
             baseline_comm: self.baseline_comm.merge(&comm.counters().snapshot()),
             spike_lookups: self.spike_lookups,
             deletion: self.deletion,
@@ -167,11 +172,12 @@ impl RankState {
             epoch_spikes: sec.epoch_spikes,
         };
         // Edge-list/counter consistency and id bounds were verified by
-        // `load_validated_section` before any state is built here.
-        let store = SynapseStore {
-            out_edges: sec.out_edges,
-            in_edges: sec
-                .in_edges
+        // `load_validated_section` before any state is built here;
+        // `from_parts` rebuilds the derived routing table and partner
+        // refcounts from the edge lists deterministically.
+        let store = SynapseStore::from_parts(
+            sec.out_edges,
+            sec.in_edges
                 .into_iter()
                 .map(|edges| {
                     edges
@@ -180,17 +186,18 @@ impl RankState {
                         .collect()
                 })
                 .collect(),
-            connected_ax: sec.connected_ax,
-            connected_den_exc: sec.connected_den_exc,
-            connected_den_inh: sec.connected_den_inh,
-        };
+            sec.connected_ax,
+            sec.connected_den_exc,
+            sec.connected_den_inh,
+            cfg.neurons_per_rank as u64,
+        );
         // The octree is structural over the (immutable) positions;
         // rebuilding it reproduces the exact arena the original run had,
         // and its aggregates are recomputed from scratch at every
         // plasticity phase anyway.
         let tree = Octree::build(decomp, rank, pop.first_id, &pop.positions);
         let freq_exchange =
-            FrequencyExchange::from_parts(cfg.delta, cfg.total_neurons(), sec.freqs, sec.rng_spikes)
+            FrequencyExchange::from_parts(cfg.delta, sec.freq_entries, sec.rng_spikes)
                 .map_err(|e| format!("rank {rank}: {e}"))?;
         Ok(RankState {
             pop,
@@ -210,6 +217,7 @@ impl RankState {
                 .into_iter()
                 .map(|(step, cas)| (step as usize, cas))
                 .collect(),
+            bh_scratch: FormationScratch::default(),
             baseline_comm: sec.baseline_comm,
         })
     }
@@ -221,7 +229,7 @@ impl RankState {
         match cfg.spike_alg {
             SpikeAlg::OldIds => {
                 let (pop, store, ex) = (&mut self.pop, &self.store, &mut self.id_exchange);
-                self.timers.time(Phase::SpikeExchange, || ex.exchange(comm, pop, store, npr));
+                self.timers.time(Phase::SpikeExchange, || ex.exchange(comm, pop, store));
                 let ex = &self.id_exchange;
                 self.spike_lookups += self.timers.time(Phase::SpikeLookup, || {
                     deliver_input(&mut self.pop, &self.store, npr, comm.rank(), |r, id| {
@@ -232,7 +240,7 @@ impl RankState {
             SpikeAlg::NewFrequency => {
                 let (pop, store, ex) = (&mut self.pop, &self.store, &mut self.freq_exchange);
                 self.timers
-                    .time(Phase::SpikeExchange, || ex.maybe_exchange(comm, pop, store, npr, step));
+                    .time(Phase::SpikeExchange, || ex.maybe_exchange(comm, pop, store, step));
                 let ex = &mut self.freq_exchange;
                 self.spike_lookups += self.timers.time(Phase::SpikeLookup, || {
                     deliver_input(&mut self.pop, &self.store, npr, comm.rank(), |_, id| {
@@ -313,6 +321,16 @@ impl RankState {
         self.deletion.dendritic_retractions += dstats.dendritic_retractions;
         self.deletion.notifications_sent += dstats.notifications_sent;
 
+        // C1.5: spike-state maintenance, BEFORE formation. Deletion may
+        // have removed a source's last in-edge on this rank; its
+        // epoch-scoped frequency entry must die here so that an edge
+        // re-formed from the same source — whether by this phase's C3
+        // below or any later one — reconstructs against 0.0, never the
+        // dead edge's last reported frequency. (Pruning after C3 would
+        // silently keep the entry alive through a same-phase
+        // delete-and-reform.) No-op under `SpikeAlg::OldIds`.
+        self.freq_exchange.prune_stale(&self.store);
+
         // C2: octree vacancy update + branch exchange (+ window publish
         // for the old algorithm's RMA path).
         let t0 = Instant::now();
@@ -362,6 +380,7 @@ impl RankState {
                 &mut self.store,
                 cfg,
                 &mut self.rng_conn,
+                &mut self.bh_scratch,
             ),
             ConnectivityAlg::Direct => barnes_hut::direct::run_formation(
                 comm,
@@ -407,6 +426,7 @@ impl RankState {
             formation: self.formation,
             deletion: self.deletion,
             spike_lookups: self.spike_lookups,
+            spike_state_bytes: self.freq_exchange.state_bytes(),
             synapses_out: self.store.total_out(),
             synapses_in: self.store.total_in(),
             mean_calcium: self.pop.mean_calcium(),
@@ -467,8 +487,9 @@ pub fn branch_simulation_with_xla(
 
 /// Decode and fully validate one rank's snapshot section: framing
 /// (via `RankSection::decode`), the expected id range, edge-list
-/// consistency and id bounds, and the frequency-table size. After this
-/// passes, `RankState::restore_section` cannot fail on the same data.
+/// consistency and id bounds, and the sparse frequency entries
+/// (strictly ascending, in-range ids). After this passes,
+/// `RankState::restore_section` cannot fail on the same data.
 fn load_validated_section(
     cfg: &SimConfig,
     snap: &Snapshot,
@@ -484,14 +505,8 @@ fn load_validated_section(
     }
     sec.check_synapse_consistency(cfg.total_neurons() as u64)
         .map_err(|e| format!("rank {rank}: {e}"))?;
-    if sec.freqs.len() != cfg.total_neurons() {
-        return Err(format!(
-            "rank {rank}: frequency table size mismatch: snapshot has {}, simulation \
-             expects {}",
-            sec.freqs.len(),
-            cfg.total_neurons()
-        ));
-    }
+    sec.check_freq_entries(cfg.total_neurons() as u64)
+        .map_err(|e| format!("rank {rank}: {e}"))?;
     Ok(sec)
 }
 
@@ -733,6 +748,89 @@ mod tests {
     #[test]
     fn resume_is_bit_exact_old_algorithms() {
         assert_resume_matches_straight(ConnectivityAlg::OldRma, SpikeAlg::OldIds, "old");
+    }
+
+    #[test]
+    fn v1_snapshot_resumes_bit_exactly() {
+        // Format-compatibility contract: a version-1 snapshot (dense
+        // per-rank frequency table) of the same state must load and
+        // resume to exactly the straight run's report. The v1 file is
+        // manufactured by re-encoding a fresh checkpoint's sections in
+        // the old dense layout (nonzero entries scattered over
+        // total_neurons f32s) under a version-1 header.
+        use crate::snapshot::{SnapshotHeader, MIN_FORMAT_VERSION};
+        use crate::util::wire::{put_u32, put_u64};
+        let dir = ckpt_dir("v1compat");
+        let base = SimConfig {
+            ranks: 2,
+            neurons_per_rank: 32,
+            steps: 150,
+            plasticity_interval: 50,
+            delta: 50,
+            ..SimConfig::default()
+        };
+        let straight = run_simulation(&base).unwrap();
+
+        let mut first = base.clone();
+        first.steps = 75;
+        first.checkpoint_every = 75;
+        first.checkpoint_dir = dir.to_str().unwrap().to_string();
+        run_simulation(&first).unwrap();
+        let snap =
+            Snapshot::read_file(dir.join(crate::snapshot::snapshot_file_name(75))).unwrap();
+
+        // Rewrite as a v1 file.
+        let mut hdr = SnapshotHeader::for_config(&base, 75);
+        hdr.version = MIN_FORMAT_VERSION;
+        let mut buf = Vec::new();
+        hdr.encode(&mut buf);
+        for rank in 0..base.ranks {
+            let enc = snap.section(rank).unwrap().encode_v1(base.total_neurons());
+            put_u32(&mut buf, rank as u32);
+            put_u64(&mut buf, enc.len() as u64);
+            buf.extend_from_slice(&enc);
+        }
+        let v1 = Snapshot::from_bytes(&buf).unwrap();
+        assert_eq!(v1.version(), MIN_FORMAT_VERSION);
+
+        let resumed = resume_simulation(&base, &v1).unwrap();
+        for (s, r) in straight.ranks.iter().zip(&resumed.ranks) {
+            assert_eq!(s.synapses_out, r.synapses_out);
+            assert_eq!(s.mean_calcium.to_bits(), r.mean_calcium.to_bits());
+            assert_eq!(s.comm.bytes_sent, r.comm.bytes_sent);
+            assert_eq!(s.comm.collectives, r.comm.collectives);
+            assert_eq!(s.spike_lookups, r.spike_lookups);
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn spike_state_is_sparse_not_dense() {
+        // The memory claim behind EXPERIMENTS.md §Perf, opt 7: per-rank
+        // reconstruction state is 12 B per remote in-partner, bounded
+        // by the remote-neuron count and entirely absent under the old
+        // algorithm — never the 4·total_neurons dense table.
+        let report = run_simulation(&smoke_cfg()).unwrap();
+        let total = smoke_cfg().total_neurons() as u64;
+        for r in &report.ranks {
+            assert_eq!(r.spike_state_bytes % 12, 0, "whole 12 B records");
+            let remote = total - smoke_cfg().neurons_per_rank as u64;
+            assert!(
+                r.spike_state_bytes <= remote * 12,
+                "state {} exceeds 12 B per possible remote partner ({remote})",
+                r.spike_state_bytes
+            );
+        }
+        // An active 2-rank network forms cross-rank edges, so some
+        // partner state must exist somewhere.
+        assert!(report.ranks.iter().any(|r| r.spike_state_bytes > 0));
+
+        let mut old = smoke_cfg();
+        old.spike_alg = SpikeAlg::OldIds;
+        let report = run_simulation(&old).unwrap();
+        for r in &report.ranks {
+            assert_eq!(r.spike_state_bytes, 0, "old algorithm holds no frequency state");
+        }
     }
 
     #[test]

@@ -83,7 +83,7 @@ usage: ilmi <simulate|resume|compare|bench|quality|inspect> [flags]
               forks a new scenario (same brain, different protocol)
               from the saved state.
   compare   --set k=v ... (runs old-vs-new on the same workload)
-  bench     [--preset smoke|quick|full] [--name NAME] [--out FILE]
+  bench     [--preset smoke|smoke8|quick|full] [--name NAME] [--out FILE]
             [--steps N] [--warmup N] [--reps N] [--seed S]
             [--md FILE] [--baseline FILE] [--threshold PCT]
               run the scenario matrix ({old,new} x ranks x neurons x

@@ -18,6 +18,11 @@ pub struct RankReport {
     pub deletion: DeletionStats,
     /// Remote spike look-ups performed (Fig. 5 quantity).
     pub spike_lookups: u64,
+    /// Bytes of spike-exchange reconstruction state held at run end:
+    /// 12 B per installed remote partner under the new algorithm, 0
+    /// under the old. O(local remote partners), never the former
+    /// 4·total_neurons dense table (EXPERIMENTS.md §Perf, opt 7).
+    pub spike_state_bytes: u64,
     pub synapses_out: usize,
     pub synapses_in: usize,
     pub mean_calcium: f64,
@@ -76,6 +81,13 @@ impl SimReport {
         self.ranks.iter().map(|r| r.spike_lookups).sum()
     }
 
+    /// Largest per-rank spike-exchange state (the worst rank is the
+    /// memory bound that matters when scaling; what `bench` records as
+    /// `spike_state_bytes`).
+    pub fn max_spike_state_bytes(&self) -> u64 {
+        self.ranks.iter().map(|r| r.spike_state_bytes).max().unwrap_or(0)
+    }
+
     pub fn mean_calcium(&self) -> f64 {
         if self.ranks.is_empty() {
             return 0.0;
@@ -108,9 +120,10 @@ impl SimReport {
             "wall_clock", self.wall_seconds
         ));
         out.push_str(&format!(
-            "bytes sent {} | rma {} | synapses {} | mean Ca {:.3}\n",
+            "bytes sent {} | rma {} | spike state {}/rank | synapses {} | mean Ca {:.3}\n",
             format_bytes(self.total_bytes_sent()),
             format_bytes(self.total_bytes_rma()),
+            format_bytes(self.max_spike_state_bytes()),
             self.total_synapses(),
             self.mean_calcium(),
         ));
@@ -163,6 +176,15 @@ mod tests {
         assert_eq!(sim.phase_mean(Phase::BarnesHut), 2.0);
         assert_eq!(sim.total_bytes_sent(), 300);
         assert_eq!(sim.total_bytes_rma(), 50);
+    }
+
+    #[test]
+    fn spike_state_aggregates_as_max_across_ranks() {
+        let a = RankReport { spike_state_bytes: 24, ..Default::default() };
+        let b = RankReport { spike_state_bytes: 120, ..Default::default() };
+        let sim = SimReport { ranks: vec![a, b], wall_seconds: 0.0 };
+        assert_eq!(sim.max_spike_state_bytes(), 120);
+        assert_eq!(SimReport::default().max_spike_state_bytes(), 0);
     }
 
     #[test]

@@ -153,7 +153,7 @@ mod tests {
         // Single rank, two neurons, one synapse 0 -> 1; force z_ax to 0.
         let results = run_ranks(1, |comm| {
             let mut pop = make_pop(0, 2);
-            let mut store = SynapseStore::new(2);
+            let mut store = SynapseStore::new(2, 2);
             store.add_out(0, 1);
             store.add_in(1, 0, pop.is_excitatory[0]);
             pop.z_ax[0] = 0.0;
@@ -177,7 +177,7 @@ mod tests {
         // z_ax drops to 0 -> rank 1 must lose the in-edge.
         let results = run_ranks(2, |comm| {
             let mut pop = make_pop(comm.rank(), 1);
-            let mut store = SynapseStore::new(1);
+            let mut store = SynapseStore::new(1, 1);
             if comm.rank() == 0 {
                 store.add_out(0, 1);
                 pop.z_ax[0] = 0.0;
@@ -207,7 +207,7 @@ mod tests {
     fn dendritic_retraction_notifies_source() {
         let results = run_ranks(2, |comm| {
             let mut pop = make_pop(comm.rank(), 1);
-            let mut store = SynapseStore::new(1);
+            let mut store = SynapseStore::new(1, 1);
             pop.z_ax[0] = 5.0;
             pop.z_den_exc[0] = 5.0;
             pop.z_den_inh[0] = 5.0;
@@ -230,7 +230,7 @@ mod tests {
     fn no_retraction_when_elements_sufficient() {
         let results = run_ranks(1, |comm| {
             let mut pop = make_pop(0, 2);
-            let mut store = SynapseStore::new(2);
+            let mut store = SynapseStore::new(2, 2);
             store.add_out(0, 1);
             store.add_in(1, 0, true);
             pop.z_ax[0] = 2.0;

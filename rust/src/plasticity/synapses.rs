@@ -6,6 +6,24 @@
 //! (`in_edges`); a synapse crossing ranks appears once on each rank.
 //! Dendrites are typed by the *source* neuron (an excitatory axon binds
 //! an excitatory-dendritic element), matching MSP.
+//!
+//! Beyond the raw edge lists, the store maintains two derived structures
+//! *incrementally at the add/delete site* — "move the computation to
+//! where the edit happens" (EXPERIMENTS.md §Perf, opt 7) — instead of
+//! letting the hot paths rescan the edge lists:
+//!
+//! * the per-neuron **out-rank routing table** (`out_ranks`): sorted
+//!   `(destination rank, out-edge count)` pairs, consulted by both spike
+//!   exchange paths to route a firing neuron's record to exactly the
+//!   ranks hosting an out-partner — replacing the old per-firing-neuron
+//!   `dest_flags` rescan of `out_edges`;
+//! * the **in-partner reference count** (`in_partner_refs`): an ordered
+//!   map `source id -> in-edge count` over every in-edge of this rank,
+//!   consulted by `spikes::FrequencyExchange::prune_stale` to drop an
+//!   epoch-scoped frequency entry the moment the last in-edge from that
+//!   source is deleted.
+
+use std::collections::BTreeMap;
 
 use crate::neuron::GlobalNeuronId;
 use crate::octree::ElementKind;
@@ -20,7 +38,7 @@ pub struct InEdge {
 }
 
 /// Synapse store for one rank (`n` local neurons).
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug)]
 pub struct SynapseStore {
     /// Axonal side: targets of each local neuron's outgoing synapses.
     pub out_edges: Vec<Vec<GlobalNeuronId>>,
@@ -30,23 +48,146 @@ pub struct SynapseStore {
     pub connected_ax: Vec<u32>,
     pub connected_den_exc: Vec<u32>,
     pub connected_den_inh: Vec<u32>,
+    /// Partition stride: global id / `neurons_per_rank` = owning rank.
+    neurons_per_rank: u64,
+    /// Per local neuron: sorted (destination rank, out-edge count).
+    /// A flat sorted Vec is right here — entry count is bounded by the
+    /// rank count, so insert/remove memmoves are tiny.
+    out_ranks: Vec<Vec<(u32, u32)>>,
+    /// Source id -> in-edge count over all in-edges of this rank. An
+    /// ordered map (not a sorted Vec): a rank can hold in-edges from a
+    /// partner set that scales with the network, and first/last-edge
+    /// edits must stay O(log sources), not O(sources) memmoves.
+    in_partner_refs: BTreeMap<GlobalNeuronId, u32>,
+}
+
+/// Increment `key`'s count in a sorted `(key, count)` list, inserting at
+/// the sort position on first reference.
+fn bump<K: Ord + Copy>(list: &mut Vec<(K, u32)>, key: K) {
+    match list.binary_search_by_key(&key, |&(k, _)| k) {
+        Ok(i) => list[i].1 += 1,
+        Err(i) => list.insert(i, (key, 1)),
+    }
+}
+
+/// Decrement `key`'s count in a sorted `(key, count)` list, removing the
+/// entry when it reaches zero.
+fn unbump<K: Ord + Copy + std::fmt::Debug>(list: &mut Vec<(K, u32)>, key: K) {
+    let i = list
+        .binary_search_by_key(&key, |&(k, _)| k)
+        .unwrap_or_else(|_| panic!("derived count missing for {key:?}"));
+    list[i].1 -= 1;
+    if list[i].1 == 0 {
+        list.remove(i);
+    }
+}
+
+/// Decrement `key`'s count in an ordered map, removing the entry when
+/// it reaches zero.
+fn unbump_map(map: &mut BTreeMap<GlobalNeuronId, u32>, key: GlobalNeuronId) {
+    let count = map
+        .get_mut(&key)
+        .unwrap_or_else(|| panic!("in-partner refcount missing for {key}"));
+    *count -= 1;
+    if *count == 0 {
+        map.remove(&key);
+    }
 }
 
 impl SynapseStore {
-    pub fn new(n: usize) -> Self {
+    /// An empty store for `n` local neurons on a simulation partitioned
+    /// `neurons_per_rank` neurons per rank (the stride the routing table
+    /// derives destination ranks from).
+    pub fn new(n: usize, neurons_per_rank: u64) -> Self {
+        assert!(neurons_per_rank > 0, "neurons_per_rank must be positive");
         SynapseStore {
             out_edges: vec![Vec::new(); n],
             in_edges: vec![Vec::new(); n],
             connected_ax: vec![0; n],
             connected_den_exc: vec![0; n],
             connected_den_inh: vec![0; n],
+            neurons_per_rank,
+            out_ranks: vec![Vec::new(); n],
+            in_partner_refs: BTreeMap::new(),
         }
+    }
+
+    /// Recompute the derived routing table and partner refcounts from
+    /// scratch (shared by `from_parts` and `check_invariants`).
+    fn derive_routing(
+        out_edges: &[Vec<GlobalNeuronId>],
+        in_edges: &[Vec<InEdge>],
+        neurons_per_rank: u64,
+    ) -> (Vec<Vec<(u32, u32)>>, BTreeMap<GlobalNeuronId, u32>) {
+        let mut out_ranks: Vec<Vec<(u32, u32)>> = vec![Vec::new(); out_edges.len()];
+        for (local, edges) in out_edges.iter().enumerate() {
+            for &tgt in edges {
+                bump(&mut out_ranks[local], (tgt / neurons_per_rank) as u32);
+            }
+        }
+        let mut in_partner_refs = BTreeMap::new();
+        for edges in in_edges {
+            for e in edges {
+                *in_partner_refs.entry(e.source).or_insert(0) += 1;
+            }
+        }
+        (out_ranks, in_partner_refs)
+    }
+
+    /// Rebuild a store from captured edge lists and counters (snapshot
+    /// restore): the derived routing table and partner refcounts are
+    /// recomputed deterministically from the edge lists.
+    pub fn from_parts(
+        out_edges: Vec<Vec<GlobalNeuronId>>,
+        in_edges: Vec<Vec<InEdge>>,
+        connected_ax: Vec<u32>,
+        connected_den_exc: Vec<u32>,
+        connected_den_inh: Vec<u32>,
+        neurons_per_rank: u64,
+    ) -> Self {
+        assert!(neurons_per_rank > 0, "neurons_per_rank must be positive");
+        let (out_ranks, in_partner_refs) =
+            Self::derive_routing(&out_edges, &in_edges, neurons_per_rank);
+        SynapseStore {
+            out_edges,
+            in_edges,
+            connected_ax,
+            connected_den_exc,
+            connected_den_inh,
+            neurons_per_rank,
+            out_ranks,
+            in_partner_refs,
+        }
+    }
+
+    /// The partition stride this store routes with.
+    pub fn neurons_per_rank(&self) -> u64 {
+        self.neurons_per_rank
+    }
+
+    /// Destination ranks of local `src`'s out-edges, as sorted
+    /// (rank, count) pairs — the spike-exchange routing table.
+    pub fn out_ranks(&self, src_local: usize) -> &[(u32, u32)] {
+        &self.out_ranks[src_local]
+    }
+
+    /// Number of in-edges this rank holds from global `source` (any
+    /// local target). Zero means no synapse from that source survives,
+    /// so no spike-reconstruction state for it may survive either.
+    pub fn in_partner_count(&self, source: GlobalNeuronId) -> u32 {
+        self.in_partner_refs.get(&source).copied().unwrap_or(0)
+    }
+
+    /// Number of distinct sources with at least one in-edge here.
+    pub fn in_partner_sources(&self) -> usize {
+        self.in_partner_refs.len()
     }
 
     /// Record the axonal side of a new synapse on local `src`.
     pub fn add_out(&mut self, src_local: usize, target: GlobalNeuronId) {
         self.out_edges[src_local].push(target);
         self.connected_ax[src_local] += 1;
+        bump(&mut self.out_ranks[src_local], (target / self.neurons_per_rank) as u32);
     }
 
     /// Record the dendritic side of a new synapse on local `tgt`.
@@ -57,6 +198,7 @@ impl SynapseStore {
         } else {
             self.connected_den_inh[tgt_local] += 1;
         }
+        *self.in_partner_refs.entry(source).or_insert(0) += 1;
     }
 
     /// Remove a uniformly-random outgoing synapse of local `src`
@@ -69,6 +211,7 @@ impl SynapseStore {
         let k = rng.next_below(edges.len());
         let target = edges.swap_remove(k);
         self.connected_ax[src_local] -= 1;
+        unbump(&mut self.out_ranks[src_local], (target / self.neurons_per_rank) as u32);
         Some(target)
     }
 
@@ -98,6 +241,7 @@ impl SynapseStore {
         } else {
             self.connected_den_inh[tgt_local] -= 1;
         }
+        unbump_map(&mut self.in_partner_refs, e.source);
         Some(e.source)
     }
 
@@ -109,6 +253,7 @@ impl SynapseStore {
         if let Some(k) = edges.iter().position(|&t| t == target) {
             edges.swap_remove(k);
             self.connected_ax[src_local] -= 1;
+            unbump(&mut self.out_ranks[src_local], (target / self.neurons_per_rank) as u32);
             true
         } else {
             false
@@ -125,6 +270,7 @@ impl SynapseStore {
             } else {
                 self.connected_den_inh[tgt_local] -= 1;
             }
+            unbump_map(&mut self.in_partner_refs, source);
             true
         } else {
             false
@@ -150,7 +296,9 @@ impl SynapseStore {
     }
 
     /// Internal-consistency check (used by property tests): counters
-    /// match edge-list lengths.
+    /// match edge-list lengths, and the incrementally-maintained routing
+    /// table / partner refcounts equal what a from-scratch rebuild of
+    /// the edge lists produces.
     pub fn check_invariants(&self) -> Result<(), String> {
         for i in 0..self.out_edges.len() {
             if self.out_edges[i].len() != self.connected_ax[i] as usize {
@@ -164,6 +312,14 @@ impl SynapseStore {
             if inh != self.connected_den_inh[i] as usize {
                 return Err(format!("neuron {i}: inh in-edges mismatch"));
             }
+        }
+        let (out_ranks, in_partner_refs) =
+            Self::derive_routing(&self.out_edges, &self.in_edges, self.neurons_per_rank);
+        if out_ranks != self.out_ranks {
+            return Err("out-rank routing table disagrees with out_edges".to_string());
+        }
+        if in_partner_refs != self.in_partner_refs {
+            return Err("in-partner refcounts disagree with in_edges".to_string());
         }
         Ok(())
     }
@@ -182,7 +338,7 @@ mod tests {
 
     #[test]
     fn add_and_counts() {
-        let mut s = SynapseStore::new(3);
+        let mut s = SynapseStore::new(3, 3);
         s.add_out(0, 100);
         s.add_out(0, 101);
         s.add_in(1, 50, true);
@@ -198,7 +354,7 @@ mod tests {
 
     #[test]
     fn remove_random_out_updates_counts() {
-        let mut s = SynapseStore::new(1);
+        let mut s = SynapseStore::new(1, 4);
         let mut rng = Rng::new(1);
         s.add_out(0, 7);
         s.add_out(0, 8);
@@ -212,7 +368,7 @@ mod tests {
 
     #[test]
     fn remove_random_in_respects_kind() {
-        let mut s = SynapseStore::new(1);
+        let mut s = SynapseStore::new(1, 12);
         let mut rng = Rng::new(2);
         s.add_in(0, 10, true);
         s.add_in(0, 11, false);
@@ -226,7 +382,7 @@ mod tests {
 
     #[test]
     fn remove_specific_tolerates_missing() {
-        let mut s = SynapseStore::new(1);
+        let mut s = SynapseStore::new(1, 8);
         s.add_out(0, 5);
         assert!(s.remove_specific_out(0, 5));
         assert!(!s.remove_specific_out(0, 5));
@@ -234,6 +390,79 @@ mod tests {
         assert!(s.remove_specific_in(0, 6));
         assert!(!s.remove_specific_in(0, 6));
         s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn out_rank_routing_follows_adds_and_removes() {
+        // Stride 4: targets 1 -> rank 0, 5 and 6 -> rank 1, 9 -> rank 2.
+        let mut s = SynapseStore::new(2, 4);
+        s.add_out(0, 5);
+        s.add_out(0, 1);
+        s.add_out(0, 6);
+        s.add_out(0, 9);
+        assert_eq!(s.out_ranks(0), &[(0, 1), (1, 2), (2, 1)]);
+        assert!(s.out_ranks(1).is_empty());
+        // Dropping one of the two rank-1 edges keeps the route alive...
+        assert!(s.remove_specific_out(0, 5));
+        assert_eq!(s.out_ranks(0), &[(0, 1), (1, 1), (2, 1)]);
+        // ...dropping the last removes the route entirely.
+        assert!(s.remove_specific_out(0, 6));
+        assert_eq!(s.out_ranks(0), &[(0, 1), (2, 1)]);
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn in_partner_refcounts_track_last_edge() {
+        let mut s = SynapseStore::new(2, 2);
+        // Source 7 feeds both local targets; source 4 only one.
+        s.add_in(0, 7, true);
+        s.add_in(1, 7, false);
+        s.add_in(0, 4, true);
+        assert_eq!(s.in_partner_count(7), 2);
+        assert_eq!(s.in_partner_count(4), 1);
+        assert_eq!(s.in_partner_count(9), 0);
+        assert_eq!(s.in_partner_sources(), 2);
+        assert!(s.remove_specific_in(0, 7));
+        assert_eq!(s.in_partner_count(7), 1, "second in-edge keeps the partner");
+        assert!(s.remove_specific_in(1, 7));
+        assert_eq!(s.in_partner_count(7), 0, "last deletion drops the partner");
+        assert_eq!(s.in_partner_sources(), 1);
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn from_parts_rebuilds_derived_structures() {
+        let mut incremental = SynapseStore::new(2, 4);
+        incremental.add_out(0, 6);
+        incremental.add_out(0, 9);
+        incremental.add_out(1, 2);
+        incremental.add_in(0, 13, true);
+        incremental.add_in(1, 13, false);
+        incremental.add_in(1, 2, true);
+        let rebuilt = SynapseStore::from_parts(
+            incremental.out_edges.clone(),
+            incremental.in_edges.clone(),
+            incremental.connected_ax.clone(),
+            incremental.connected_den_exc.clone(),
+            incremental.connected_den_inh.clone(),
+            4,
+        );
+        assert_eq!(rebuilt.out_ranks, incremental.out_ranks);
+        assert_eq!(rebuilt.in_partner_refs, incremental.in_partner_refs);
+        rebuilt.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn invariants_catch_corrupt_derived_state() {
+        let mut s = SynapseStore::new(1, 2);
+        s.add_out(0, 3);
+        s.out_ranks[0].clear();
+        assert!(s.check_invariants().unwrap_err().contains("routing"));
+
+        let mut s = SynapseStore::new(1, 2);
+        s.add_in(0, 3, true);
+        s.in_partner_refs.clear();
+        assert!(s.check_invariants().unwrap_err().contains("refcounts"));
     }
 
     #[test]

@@ -5,7 +5,7 @@
 //! ```text
 //! header:
 //!   magic              8 B   b"ILMISNAP"
-//!   format_version     u32   = 1
+//!   format_version     u32   = 2 (this build also reads version 1)
 //!   config_fingerprint u64   FNV-1a over the dynamics-relevant config
 //!   next_step          u64   first step index the resumed run executes
 //!   ranks              u32
@@ -21,12 +21,21 @@
 //! A rank section captures everything `RankState::restore` needs for a
 //! bit-exact resume: the `Population` arrays, the full `SynapseStore`,
 //! all three PRNG streams (including the cached polar-method spare
-//! normal), the `FrequencyExchange` table, and the report baselines
-//! (communication counters, formation/deletion statistics, calcium
-//! trace) so a resumed run's final `SimReport` equals the straight
-//! run's. The octree is NOT stored — it is rebuilt from positions on
-//! load, and its per-update aggregates are recomputed from scratch at
-//! every plasticity phase anyway.
+//! normal), the `FrequencyExchange` sparse entries, and the report
+//! baselines (communication counters, formation/deletion statistics,
+//! calcium trace) so a resumed run's final `SimReport` equals the
+//! straight run's. The octree is NOT stored — it is rebuilt from
+//! positions on load, and its per-update aggregates are recomputed from
+//! scratch at every plasticity phase anyway.
+//!
+//! **Version history.** v1 stored the frequency table as a dense
+//! `total_neurons × f32` array on every rank; v2 stores the sparse
+//! (id, frequency) entries the exchange actually holds — O(local
+//! remote partners) per section instead of O(total neurons)
+//! (EXPERIMENTS.md §Perf, opt 7). v1 sections still decode: the dense
+//! table converts to sparse entries, dropping zeros (a zero frequency
+//! and a missing entry are behaviorally identical — neither ever draws
+//! the reconstruction PRNG).
 //!
 //! The encoding deliberately reuses the `util::wire` primitives used by
 //! the inter-rank message codecs; decoding goes through the checked
@@ -43,9 +52,12 @@ use crate::util::{RngState, Vec3};
 /// File magic: identifies an ILMI snapshot.
 pub const MAGIC: [u8; 8] = *b"ILMISNAP";
 
-/// Current snapshot format version. Bump on any layout change; the
-/// reader rejects other versions with a descriptive error.
-pub const FORMAT_VERSION: u32 = 1;
+/// Current snapshot format version (what this build writes). Bump on
+/// any layout change.
+pub const FORMAT_VERSION: u32 = 2;
+
+/// Oldest snapshot format version this build still reads.
+pub const MIN_FORMAT_VERSION: u32 = 1;
 
 /// File extension snapshots are written with.
 pub const SNAPSHOT_EXT: &str = "ilmisnap";
@@ -153,10 +165,10 @@ impl SnapshotHeader {
             ));
         }
         let version = c.u32("format version")?;
-        if version != FORMAT_VERSION {
+        if !(MIN_FORMAT_VERSION..=FORMAT_VERSION).contains(&version) {
             return Err(format!(
                 "unsupported snapshot format version {version}: this build reads \
-                 version {FORMAT_VERSION} only"
+                 versions {MIN_FORMAT_VERSION}..={FORMAT_VERSION} only"
             ));
         }
         let fingerprint = c.u64("config fingerprint")?;
@@ -236,8 +248,11 @@ pub struct RankSection {
     pub rng_conn: RngState,
     /// The `FrequencyExchange` reconstruction stream.
     pub rng_spikes: RngState,
-    /// The `FrequencyExchange` dense frequency table (total_neurons).
-    pub freqs: Vec<f32>,
+    /// The `FrequencyExchange` sparse state: (sender id, frequency)
+    /// entries in strictly ascending id order — O(local remote
+    /// partners), not O(total neurons). Decoding a v1 section converts
+    /// its dense table into this form (zeros dropped).
+    pub freq_entries: Vec<(u64, f32)>,
     // -- report baselines (so a resumed SimReport equals a straight run)
     pub baseline_comm: CounterSnapshot,
     pub spike_lookups: u64,
@@ -292,7 +307,23 @@ impl RankSection {
         Ok(())
     }
 
-    pub fn encode(&self) -> Vec<u8> {
+    /// Validate the sparse frequency entries: strictly ascending ids
+    /// (the binary-search lookup invariant) that are valid global
+    /// neuron ids. Run by the driver before any state is built, so
+    /// `FrequencyExchange::from_parts` cannot fail afterwards.
+    pub fn check_freq_entries(&self, total_neurons: u64) -> Result<(), String> {
+        for &(id, _) in &self.freq_entries {
+            if id >= total_neurons {
+                return Err(format!(
+                    "frequency entry id {id} out of range (total neurons {total_neurons})"
+                ));
+            }
+        }
+        crate::spikes::PartnerFreqs::check_ascending(&self.freq_entries)
+    }
+
+    /// Everything before the frequency state, shared by both layouts.
+    fn encode_prefix(&self) -> Vec<u8> {
         let n = self.len();
         let mut out = Vec::with_capacity(64 + n * 64);
         put_u64(&mut out, self.first_id);
@@ -346,10 +377,11 @@ impl RankSection {
         put_rng(&mut out, &self.rng_model);
         put_rng(&mut out, &self.rng_conn);
         put_rng(&mut out, &self.rng_spikes);
-        put_u32(&mut out, self.freqs.len() as u32);
-        for &f in &self.freqs {
-            put_f32(&mut out, f);
-        }
+        out
+    }
+
+    /// Everything after the frequency state, shared by both layouts.
+    fn encode_suffix(&self, out: &mut Vec<u8>) {
         for c in [
             self.baseline_comm.bytes_sent,
             self.baseline_comm.bytes_recv,
@@ -358,37 +390,76 @@ impl RankSection {
             self.baseline_comm.collectives,
             self.baseline_comm.rma_gets,
         ] {
-            put_u64(&mut out, c);
+            put_u64(out, c);
         }
-        put_u64(&mut out, self.spike_lookups);
-        put_u64(&mut out, self.deletion.axonal_retractions);
-        put_u64(&mut out, self.deletion.dendritic_retractions);
-        put_u64(&mut out, self.deletion.notifications_sent);
-        put_u64(&mut out, self.formation.searches);
-        put_u64(&mut out, self.formation.failed_searches);
-        put_u64(&mut out, self.formation.proposals);
-        put_u64(&mut out, self.formation.formed);
-        put_u64(&mut out, self.formation.declined);
-        put_u64(&mut out, self.formation.compute_nanos);
-        put_u64(&mut out, self.formation.exchange_nanos);
-        put_u32(&mut out, self.calcium_trace.len() as u32);
+        put_u64(out, self.spike_lookups);
+        put_u64(out, self.deletion.axonal_retractions);
+        put_u64(out, self.deletion.dendritic_retractions);
+        put_u64(out, self.deletion.notifications_sent);
+        put_u64(out, self.formation.searches);
+        put_u64(out, self.formation.failed_searches);
+        put_u64(out, self.formation.proposals);
+        put_u64(out, self.formation.formed);
+        put_u64(out, self.formation.declined);
+        put_u64(out, self.formation.compute_nanos);
+        put_u64(out, self.formation.exchange_nanos);
+        put_u32(out, self.calcium_trace.len() as u32);
         for (step, cas) in &self.calcium_trace {
-            put_u64(&mut out, *step);
+            put_u64(out, *step);
             for &ca in cas {
-                put_f32(&mut out, ca);
+                put_f32(out, ca);
             }
         }
+    }
+
+    /// Encode in the current (v2) layout: the frequency state is the
+    /// sparse entry list, `u32 count + count × (u64 id, f32 freq)`.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = self.encode_prefix();
+        put_u32(&mut out, self.freq_entries.len() as u32);
+        for &(id, f) in &self.freq_entries {
+            put_u64(&mut out, id);
+            put_f32(&mut out, f);
+        }
+        self.encode_suffix(&mut out);
         out
     }
 
-    /// Decode one rank section. `expect_n` is the per-rank neuron count
-    /// from the snapshot header (every array length must match it).
+    /// Encode in the **v1** layout: the frequency state is a dense
+    /// `total_neurons × f32` table with the sparse entries scattered
+    /// into it. Kept so the v1-compatibility tests can manufacture
+    /// old-format files; pair it with a `SnapshotHeader` whose
+    /// `version` is 1.
+    pub fn encode_v1(&self, total_neurons: usize) -> Vec<u8> {
+        let mut out = self.encode_prefix();
+        put_u32(&mut out, total_neurons as u32);
+        let mut dense = vec![0.0f32; total_neurons];
+        for &(id, f) in &self.freq_entries {
+            dense[id as usize] = f;
+        }
+        for &f in &dense {
+            put_f32(&mut out, f);
+        }
+        self.encode_suffix(&mut out);
+        out
+    }
+
+    /// Decode one rank section written by format `version`. `expect_n`
+    /// is the per-rank neuron count from the snapshot header (every
+    /// array length must match it); `expect_total` the whole
+    /// simulation's neuron count (ranks × per-rank), which a v1
+    /// section's dense frequency table must be sized to exactly.
     ///
     /// All `Vec` capacities are clamped to what the remaining bytes
     /// could possibly hold: length prefixes are untrusted input, and a
     /// corrupt count must produce the per-element truncation error, not
     /// a multi-gigabyte up-front allocation.
-    pub fn decode(buf: &[u8], expect_n: usize) -> Result<RankSection, String> {
+    pub fn decode(
+        buf: &[u8],
+        expect_n: usize,
+        expect_total: usize,
+        version: u32,
+    ) -> Result<RankSection, String> {
         fn cap(count: usize, elem_bytes: usize, remaining: usize) -> usize {
             count.min(remaining / elem_bytes.max(1))
         }
@@ -467,11 +538,37 @@ impl RankSection {
         let rng_model = read_rng(&mut c, "model rng")?;
         let rng_conn = read_rng(&mut c, "connectivity rng")?;
         let rng_spikes = read_rng(&mut c, "spike rng")?;
-        let freq_len = c.u32("frequency table length")? as usize;
-        let mut freqs = Vec::with_capacity(cap(freq_len, 4, c.remaining()));
-        for _ in 0..freq_len {
-            freqs.push(c.f32("frequency table")?);
-        }
+        let freq_entries = if version >= 2 {
+            let count = c.u32("frequency entry count")? as usize;
+            let mut entries = Vec::with_capacity(cap(count, 12, c.remaining()));
+            for _ in 0..count {
+                let id = c.u64("frequency entry id")?;
+                let f = c.f32("frequency entry")?;
+                entries.push((id, f));
+            }
+            crate::spikes::PartnerFreqs::check_ascending(&entries)?;
+            entries
+        } else {
+            // v1: dense table indexed by global neuron id. Nonzero
+            // entries become sparse records; zeros are dropped (a zero
+            // frequency and a missing entry behave identically — the
+            // reconstruction PRNG is never drawn for either).
+            let len = c.u32("frequency table length")? as usize;
+            if len != expect_total {
+                return Err(format!(
+                    "frequency table size mismatch: v1 snapshot has {len}, simulation \
+                     expects {expect_total}"
+                ));
+            }
+            let mut entries = Vec::new();
+            for i in 0..len {
+                let f = c.f32("frequency table")?;
+                if f != 0.0 {
+                    entries.push((i as u64, f));
+                }
+            }
+            entries
+        };
         let baseline_comm = CounterSnapshot {
             bytes_sent: c.u64("comm counters")?,
             bytes_recv: c.u64("comm counters")?,
@@ -528,7 +625,7 @@ impl RankSection {
             rng_model,
             rng_conn,
             rng_spikes,
-            freqs,
+            freq_entries,
             baseline_comm,
             spike_lookups,
             deletion,
@@ -577,7 +674,10 @@ mod tests {
             rng_model: model.state(),
             rng_conn: Rng::new(seed + 2).state(),
             rng_spikes: Rng::new(seed + 3).state(),
-            freqs: (0..4 * n).map(|_| rng.next_f32()).collect(),
+            // Sparse entries, strictly ascending ids.
+            freq_entries: (0..n)
+                .map(|i| ((n + 2 * i) as u64, 0.01 + rng.next_f32() * 0.9))
+                .collect(),
             baseline_comm: CounterSnapshot {
                 bytes_sent: 123,
                 bytes_recv: 456,
@@ -609,7 +709,7 @@ mod tests {
     fn rank_section_roundtrips_bit_exactly() {
         let sec = sample_section(13, 99);
         let buf = sec.encode();
-        let back = RankSection::decode(&buf, 13).unwrap();
+        let back = RankSection::decode(&buf, 13, 64, FORMAT_VERSION).unwrap();
         assert_eq!(back.first_id, sec.first_id);
         assert_eq!(back.positions, sec.positions);
         assert_eq!(back.is_excitatory, sec.is_excitatory);
@@ -637,12 +737,58 @@ mod tests {
         assert_eq!(back.rng_model, sec.rng_model);
         assert_eq!(back.rng_conn, sec.rng_conn);
         assert_eq!(back.rng_spikes, sec.rng_spikes);
-        assert_eq!(back.freqs, sec.freqs);
+        assert_eq!(back.freq_entries, sec.freq_entries);
         assert_eq!(back.baseline_comm, sec.baseline_comm);
         assert_eq!(back.spike_lookups, sec.spike_lookups);
         assert_eq!(back.deletion, sec.deletion);
         assert_eq!(back.formation, sec.formation);
         assert_eq!(back.calcium_trace, sec.calcium_trace);
+    }
+
+    #[test]
+    fn v1_dense_layout_decodes_to_sparse_entries() {
+        let mut sec = sample_section(6, 11);
+        // A zero entry proves dense zeros are dropped on conversion.
+        sec.freq_entries = vec![(3, 0.5), (7, 0.0), (20, 0.25)];
+        let buf = sec.encode_v1(24);
+        let back = RankSection::decode(&buf, 6, 24, 1).unwrap();
+        // A dense table whose length disagrees with the simulation's
+        // total neuron count is rejected, as it was pre-v2.
+        let err = RankSection::decode(&buf, 6, 25, 1).unwrap_err();
+        assert!(err.contains("size mismatch"), "{err}");
+        assert_eq!(back.freq_entries, vec![(3, 0.5), (20, 0.25)]);
+        // Everything around the frequency state decodes unchanged.
+        assert_eq!(back.out_edges, sec.out_edges);
+        assert_eq!(back.in_edges, sec.in_edges);
+        assert_eq!(back.rng_spikes, sec.rng_spikes);
+        assert_eq!(back.calcium_trace, sec.calcium_trace);
+        // The v2 encoding of the SAME state is smaller than the dense
+        // v1 one whenever partners < total neurons (the §Perf opt 7
+        // snapshot win).
+        assert!(sec.encode().len() < buf.len());
+    }
+
+    #[test]
+    fn unsorted_freq_entries_are_rejected() {
+        let mut sec = sample_section(4, 5);
+        sec.freq_entries = vec![(9, 0.1), (3, 0.2)];
+        let err = RankSection::decode(&sec.encode(), 4, 64, FORMAT_VERSION).unwrap_err();
+        assert!(err.contains("ascending"), "{err}");
+        sec.freq_entries = vec![(9, 0.1), (9, 0.2)];
+        let err = RankSection::decode(&sec.encode(), 4, 64, FORMAT_VERSION).unwrap_err();
+        assert!(err.contains("ascending"), "{err}");
+    }
+
+    #[test]
+    fn check_freq_entries_validates_order_and_bounds() {
+        let mut sec = sample_section(4, 6);
+        sec.freq_entries = vec![(1, 0.5), (2, 0.25)];
+        sec.check_freq_entries(1_000).unwrap();
+        let err = sec.check_freq_entries(2).unwrap_err();
+        assert!(err.contains("out of range"), "{err}");
+        sec.freq_entries = vec![(5, 0.5), (5, 0.25)];
+        let err = sec.check_freq_entries(1_000).unwrap_err();
+        assert!(err.contains("ascending"), "{err}");
     }
 
     #[test]
@@ -694,7 +840,7 @@ mod tests {
         buf[off..off + 4].copy_from_slice(&u32::MAX.to_le_bytes());
         // Must come back as a truncation error, not an abort on a
         // ~32 GB up-front allocation.
-        let err = RankSection::decode(&buf, n).unwrap_err();
+        let err = RankSection::decode(&buf, n, 64, FORMAT_VERSION).unwrap_err();
         assert!(err.contains("truncated"), "{err}");
     }
 
@@ -702,14 +848,15 @@ mod tests {
     fn truncated_section_is_a_descriptive_error() {
         let sec = sample_section(5, 7);
         let buf = sec.encode();
-        let err = RankSection::decode(&buf[..buf.len() / 2], 5).unwrap_err();
+        let err =
+            RankSection::decode(&buf[..buf.len() / 2], 5, 64, FORMAT_VERSION).unwrap_err();
         assert!(err.contains("truncated"), "{err}");
     }
 
     #[test]
     fn neuron_count_mismatch_rejected() {
         let sec = sample_section(5, 7);
-        let err = RankSection::decode(&sec.encode(), 6).unwrap_err();
+        let err = RankSection::decode(&sec.encode(), 6, 64, FORMAT_VERSION).unwrap_err();
         assert!(err.contains("6 per rank"), "{err}");
     }
 
@@ -735,6 +882,17 @@ mod tests {
     }
 
     #[test]
+    fn v1_headers_are_still_accepted() {
+        let cfg = SimConfig::default();
+        let mut hdr = SnapshotHeader::for_config(&cfg, 10);
+        hdr.version = 1;
+        let mut buf = Vec::new();
+        hdr.encode(&mut buf);
+        let back = SnapshotHeader::decode(&mut Cursor::new(&buf, "snapshot")).unwrap();
+        assert_eq!(back.version, 1);
+    }
+
+    #[test]
     fn wrong_version_rejected_descriptively() {
         let cfg = SimConfig::default();
         let hdr = SnapshotHeader::for_config(&cfg, 0);
@@ -744,7 +902,11 @@ mod tests {
         buf[8] = 99;
         let err = SnapshotHeader::decode(&mut Cursor::new(&buf, "snapshot")).unwrap_err();
         assert!(err.contains("version 99"), "{err}");
-        assert!(err.contains("version 1"), "{err}");
+        assert!(err.contains("1..=2"), "{err}");
+        // Version 0 (below the supported floor) is rejected too.
+        buf[8] = 0;
+        let err = SnapshotHeader::decode(&mut Cursor::new(&buf, "snapshot")).unwrap_err();
+        assert!(err.contains("version 0"), "{err}");
     }
 
     #[test]

@@ -31,6 +31,8 @@ pub mod format;
 pub mod reader;
 pub mod writer;
 
-pub use format::{config_fingerprint, RankSection, SnapshotHeader, FORMAT_VERSION, MAGIC};
+pub use format::{
+    config_fingerprint, RankSection, SnapshotHeader, FORMAT_VERSION, MAGIC, MIN_FORMAT_VERSION,
+};
 pub use reader::{latest_snapshot_in, Snapshot};
 pub use writer::{snapshot_file_name, write_snapshot, write_snapshot_sections, CheckpointSink};

@@ -89,6 +89,12 @@ impl Snapshot {
         self.header.fingerprint
     }
 
+    /// Format version the file was written with (v1 sections decode
+    /// through the dense-to-sparse frequency conversion).
+    pub fn version(&self) -> u32 {
+        self.header.version
+    }
+
     /// The embedded config INI text (as written by `SimConfig::to_ini`).
     pub fn config_ini(&self) -> &str {
         &self.header.config_ini
@@ -169,7 +175,8 @@ impl Snapshot {
         let raw = self.sections.get(rank).ok_or_else(|| {
             format!("snapshot has no section for rank {rank} (ranks: {})", self.ranks())
         })?;
-        RankSection::decode(raw, self.neurons_per_rank())
+        let total = self.ranks() * self.neurons_per_rank();
+        RankSection::decode(raw, self.neurons_per_rank(), total, self.header.version)
             .map_err(|e| format!("rank {rank}: {e}"))
     }
 }
@@ -244,7 +251,7 @@ mod tests {
                     rng_model: Rng::new(1).state(),
                     rng_conn: Rng::new(2).state(),
                     rng_spikes: Rng::new(3).state(),
-                    freqs: vec![0.0; cfg.total_neurons()],
+                    freq_entries: Vec::new(),
                     baseline_comm: Default::default(),
                     spike_lookups: 0,
                     deletion: Default::default(),
@@ -276,6 +283,34 @@ mod tests {
         assert_eq!(cfg_back.ranks, cfg.ranks);
         snap.validate_for(&cfg_back).unwrap();
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn v1_files_load_through_dense_conversion() {
+        // Manufacture a complete v1 file: version-1 header + sections in
+        // the dense-frequency-table layout. It must parse, report its
+        // version, and convert the dense table to sparse entries.
+        use crate::snapshot::format::SnapshotHeader;
+        use crate::util::wire::{put_u32, put_u64};
+        let cfg = tiny_cfg();
+        let mut sections = tiny_sections(&cfg);
+        sections[1].freq_entries = vec![(0, 0.5), (3, 0.25)];
+        let mut hdr = SnapshotHeader::for_config(&cfg, 20);
+        hdr.version = 1;
+        let mut buf = Vec::new();
+        hdr.encode(&mut buf);
+        for (rank, sec) in sections.iter().enumerate() {
+            let enc = sec.encode_v1(cfg.total_neurons());
+            put_u32(&mut buf, rank as u32);
+            put_u64(&mut buf, enc.len() as u64);
+            buf.extend_from_slice(&enc);
+        }
+        let snap = Snapshot::from_bytes(&buf).unwrap();
+        assert_eq!(snap.version(), 1);
+        assert_eq!(snap.next_step(), 20);
+        snap.validate_for(&cfg).unwrap();
+        assert!(snap.section(0).unwrap().freq_entries.is_empty());
+        assert_eq!(snap.section(1).unwrap().freq_entries, vec![(0, 0.5), (3, 0.25)]);
     }
 
     #[test]

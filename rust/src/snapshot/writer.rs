@@ -52,6 +52,8 @@ pub fn snapshot_file_name(next_step: u64) -> String {
 
 /// Assemble and atomically write one snapshot file from already-encoded
 /// per-rank sections (`sections[r]` = rank r, see `RankSection::encode`).
+/// Always writes the current format version (v2, sparse frequency
+/// entries); the reader additionally accepts v1 files (dense tables).
 pub fn write_snapshot(
     path: &Path,
     cfg: &SimConfig,

@@ -11,6 +11,13 @@
 //! Local pairs (sender and receiver on the same rank) always read the
 //! fired flag directly — "checking whether one spiked is virtually free
 //! for connected neuron pairs on the same MPI rank".
+//!
+//! Receiver-side reconstruction state is **epoch-scoped and sparse**
+//! ([`PartnerFreqs`]): one (id, frequency) entry per remote in-partner
+//! that reported at the last epoch boundary, O(local partners) per rank
+//! instead of the former O(total neurons) dense table — and entries die
+//! with the epoch or the edge, which is what fixes the stale-frequency
+//! reconstruction bug (EXPERIMENTS.md §Perf, opt 7).
 
 pub mod new;
 pub mod old;
@@ -20,6 +27,122 @@ pub use old::IdExchange;
 
 use crate::neuron::Population;
 use crate::plasticity::SynapseStore;
+
+/// Sparse frequency table keyed by remote sender id, sorted for
+/// binary-search lookup. This is the receiver half of the new spike
+/// algorithm's exchange state:
+///
+/// * **installed** wholesale at each epoch boundary from the records
+///   that actually arrived — a sender that stopped reporting (its last
+///   out-edge to this rank was deleted) simply has no entry afterwards;
+/// * **pruned** between boundaries when the last in-edge from a source
+///   is deleted ([`FrequencyExchange::prune_stale`]), so an edge that
+///   re-forms mid-epoch reconstructs against 0.0 instead of a frequency
+///   from an arbitrarily old epoch;
+/// * **missing entries read as 0.0**, which never draws the PRNG — a
+///   missing and a zero-frequency entry are behaviorally identical.
+#[derive(Clone, Debug, Default)]
+pub struct PartnerFreqs {
+    /// Strictly ascending sender ids.
+    ids: Vec<u64>,
+    /// `freqs[i]` is the epoch frequency of `ids[i]`.
+    freqs: Vec<f32>,
+}
+
+impl PartnerFreqs {
+    pub fn new() -> PartnerFreqs {
+        PartnerFreqs::default()
+    }
+
+    /// Entries currently installed (== remote partners that reported at
+    /// the last boundary and still have a surviving in-edge).
+    pub fn len(&self) -> usize {
+        self.ids.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ids.is_empty()
+    }
+
+    /// Last installed frequency of sender `id`; 0.0 when absent.
+    #[inline]
+    pub fn get(&self, id: u64) -> f32 {
+        match self.ids.binary_search(&id) {
+            Ok(i) => self.freqs[i],
+            Err(_) => 0.0,
+        }
+    }
+
+    /// Replace the whole table with this epoch's reports. The records
+    /// must arrive in strictly ascending id order — which concatenating
+    /// the all-to-all batches in source-rank order guarantees: per-rank
+    /// id ranges are disjoint and ascending with rank, and each sender
+    /// emits at most one record per neuron, in local (= id) order.
+    pub fn install_epoch(&mut self, records: impl Iterator<Item = (u64, f32)>) {
+        self.ids.clear();
+        self.freqs.clear();
+        for (id, f) in records {
+            debug_assert!(
+                !self.ids.last().is_some_and(|&last| last >= id),
+                "epoch records not strictly ascending by id"
+            );
+            self.ids.push(id);
+            self.freqs.push(f);
+        }
+    }
+
+    /// Drop every entry whose id fails `keep` (edge-deletion pruning).
+    pub fn retain(&mut self, mut keep: impl FnMut(u64) -> bool) {
+        let mut w = 0;
+        for r in 0..self.ids.len() {
+            if keep(self.ids[r]) {
+                self.ids[w] = self.ids[r];
+                self.freqs[w] = self.freqs[r];
+                w += 1;
+            }
+        }
+        self.ids.truncate(w);
+        self.freqs.truncate(w);
+    }
+
+    /// The installed (id, frequency) pairs in ascending id order
+    /// (snapshot capture).
+    pub fn entries(&self) -> Vec<(u64, f32)> {
+        self.ids.iter().copied().zip(self.freqs.iter().copied()).collect()
+    }
+
+    /// Validate the strictly-ascending-id invariant every producer of
+    /// sparse entries must uphold (binary-search lookups silently
+    /// misbehave otherwise). The single authority: the snapshot
+    /// decoder and the driver's section validation call this too.
+    pub fn check_ascending(entries: &[(u64, f32)]) -> Result<(), String> {
+        for w in entries.windows(2) {
+            if w[0].0 >= w[1].0 {
+                return Err(format!(
+                    "frequency entries not strictly ascending: id {} then {}",
+                    w[0].0, w[1].0
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Rebuild from captured entries; rejects unordered or duplicate
+    /// ids via [`PartnerFreqs::check_ascending`].
+    pub fn from_entries(entries: Vec<(u64, f32)>) -> Result<PartnerFreqs, String> {
+        Self::check_ascending(&entries)?;
+        let (ids, freqs) = entries.into_iter().unzip();
+        Ok(PartnerFreqs { ids, freqs })
+    }
+
+    /// Logical size of the exchange state: one 12 B (u64 id, f32
+    /// frequency) record per installed partner — the quantity the bench
+    /// harness reports as `spike_state_bytes` to demonstrate the
+    /// O(local partners) vs O(total neurons) win.
+    pub fn state_bytes(&self) -> u64 {
+        (self.ids.len() * 12) as u64
+    }
+}
 
 /// Synaptic weight per spike: +1 for excitatory sources, −1 for
 /// inhibitory (scaled by `NeuronParams::i_scale` inside the neuron
@@ -77,7 +200,7 @@ mod tests {
         let mut rng = Rng::new(1);
         let mut pop =
             Population::init(&cfg, 0, Vec3::ZERO, Vec3::splat(10.0), &mut rng);
-        let mut store = SynapseStore::new(3);
+        let mut store = SynapseStore::new(3, 3);
         // 0 -> 2 (exc), 1 -> 2 (inh); 0 fired, 1 did not.
         store.add_in(2, 0, true);
         store.add_in(2, 1, false);
@@ -97,7 +220,7 @@ mod tests {
         let mut rng = Rng::new(2);
         let mut pop =
             Population::init(&cfg, 0, Vec3::ZERO, Vec3::splat(10.0), &mut rng);
-        let mut store = SynapseStore::new(2);
+        let mut store = SynapseStore::new(2, 2);
         // Remote sources 2 (rank 1, exc) and 4 (rank 2, inh) -> local 0.
         store.add_in(0, 2, true);
         store.add_in(0, 4, false);
@@ -113,5 +236,47 @@ mod tests {
     fn inhibitory_weight_is_negative() {
         assert_eq!(spike_weight(true), 1.0);
         assert_eq!(spike_weight(false), -1.0);
+    }
+
+    #[test]
+    fn partner_freqs_lookup_and_epoch_scoping() {
+        let mut pf = PartnerFreqs::new();
+        assert_eq!(pf.get(5), 0.0);
+        assert_eq!(pf.state_bytes(), 0);
+        pf.install_epoch([(2u64, 0.25f32), (5, 0.5), (9, 0.0)].into_iter());
+        assert_eq!(pf.len(), 3);
+        assert_eq!(pf.state_bytes(), 36);
+        assert_eq!(pf.get(2), 0.25);
+        assert_eq!(pf.get(5), 0.5);
+        assert_eq!(pf.get(9), 0.0, "explicit zero reads like a missing entry");
+        assert_eq!(pf.get(4), 0.0);
+        // A new epoch REPLACES the table: a sender that stopped
+        // reporting loses its entry, it is not carried over.
+        pf.install_epoch([(5u64, 0.125f32)].into_iter());
+        assert_eq!(pf.len(), 1);
+        assert_eq!(pf.get(2), 0.0);
+        assert_eq!(pf.get(5), 0.125);
+    }
+
+    #[test]
+    fn partner_freqs_retain_drops_selected_ids() {
+        let mut pf = PartnerFreqs::new();
+        pf.install_epoch([(1u64, 0.1f32), (4, 0.4), (7, 0.7)].into_iter());
+        pf.retain(|id| id != 4);
+        assert_eq!(pf.entries(), vec![(1, 0.1), (7, 0.7)]);
+        assert_eq!(pf.get(4), 0.0);
+        assert_eq!(pf.get(7), 0.7);
+    }
+
+    #[test]
+    fn partner_freqs_entries_roundtrip_and_reject_disorder() {
+        let mut pf = PartnerFreqs::new();
+        pf.install_epoch([(3u64, 0.3f32), (8, 0.8)].into_iter());
+        let back = PartnerFreqs::from_entries(pf.entries()).unwrap();
+        assert_eq!(back.entries(), pf.entries());
+        let err = PartnerFreqs::from_entries(vec![(8, 0.8), (3, 0.3)]).unwrap_err();
+        assert!(err.contains("ascending"), "{err}");
+        let err = PartnerFreqs::from_entries(vec![(3, 0.8), (3, 0.3)]).unwrap_err();
+        assert!(err.contains("ascending"), "{err}");
     }
 }

@@ -9,12 +9,21 @@
 //! timing across ranks — the approximation §V-D quantifies — but the
 //! number of synchronization points drops by Δ and transfer volume
 //! becomes independent of the firing rate.
+//!
+//! Receiver state is the **epoch-scoped sparse** [`PartnerFreqs`] table
+//! (EXPERIMENTS.md §Perf, opt 7): O(local remote partners) per rank, not
+//! O(total neurons), rebuilt from scratch at each boundary and pruned by
+//! the connectivity update when an in-edge dies. Sender routing comes
+//! from the `SynapseStore`'s incrementally-maintained out-rank table
+//! instead of rescanning `out_edges` per firing neuron per exchange.
 
 use crate::comm::{exchange_ref, ThreadComm};
 use crate::neuron::Population;
 use crate::plasticity::SynapseStore;
 use crate::util::wire::{get_f32, get_u64, put_f32, put_u64, Wire};
 use crate::util::Rng;
+
+use super::PartnerFreqs;
 
 /// (neuron id, firing frequency) record — 12 B.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -38,100 +47,120 @@ impl Wire for FreqRecord {
 pub struct FrequencyExchange {
     /// Epoch length Δ (paper: 100 — every connectivity update).
     pub delta: usize,
-    /// Dense frequency table indexed by global neuron id (only entries
-    /// for remote in-partners are ever read; dense indexing keeps the
-    /// per-lookup cost at one load — see EXPERIMENTS.md §Perf).
-    freqs: Vec<f32>,
+    /// Sparse per-partner frequency table, epoch-scoped: rebuilt from
+    /// the records received at each boundary, pruned on edge deletion.
+    freqs: PartnerFreqs,
     /// PRNG for spike reconstruction.
     rng: Rng,
-    dest_flags: Vec<bool>,
-    /// Scratch: per-destination send lists, reused across epochs like
-    /// `dest_flags` instead of rebuilding a `Vec<Vec<_>>` per exchange
+    /// Scratch: per-destination send lists, reused across epochs
+    /// instead of rebuilding a `Vec<Vec<_>>` per exchange
     /// (EXPERIMENTS.md §Perf, opt 6).
     sends: Vec<Vec<FreqRecord>>,
 }
 
 impl FrequencyExchange {
-    pub fn new(delta: usize, total_neurons: usize, rng: Rng) -> Self {
-        FrequencyExchange {
-            delta,
-            freqs: vec![0.0; total_neurons],
-            rng,
-            dest_flags: Vec::new(),
-            sends: Vec::new(),
-        }
+    pub fn new(delta: usize, rng: Rng) -> Self {
+        FrequencyExchange { delta, freqs: PartnerFreqs::new(), rng, sends: Vec::new() }
     }
 
-    /// Run at epoch boundaries (`step % delta == 0`): exchange the
-    /// frequencies accumulated over the previous epoch and reset the
-    /// per-neuron spike counters. No-op on other steps — and crucially,
-    /// no synchronization on other steps either.
+    /// Run at epoch boundaries (`step % delta == 0`, excluding the
+    /// degenerate step 0, which has no elapsed epoch to report and
+    /// would cost one all-zero collective): exchange the frequencies
+    /// accumulated over the previous epoch and reset the per-neuron
+    /// spike counters. No-op on other steps — and crucially, no
+    /// synchronization on other steps either.
+    ///
+    /// The received records **replace** the table: a sender with no
+    /// surviving out-edge to this rank stops reporting, so its entry
+    /// dies with the epoch instead of lingering indefinitely.
     pub fn maybe_exchange(
         &mut self,
         comm: &ThreadComm,
         pop: &mut Population,
         store: &SynapseStore,
-        neurons_per_rank: u64,
         step: usize,
     ) -> bool {
-        if step % self.delta != 0 {
+        if step == 0 || step % self.delta != 0 {
             return false;
         }
         let size = comm.size();
-        self.dest_flags.resize(size, false);
         self.sends.resize_with(size, Vec::new);
         let sends = &mut self.sends;
         sends.iter_mut().for_each(|s| s.clear());
+        let me = comm.rank() as u32;
         for local in 0..pop.len() {
             let spikes = pop.epoch_spikes[local];
             pop.epoch_spikes[local] = 0;
-            if store.out_edges[local].is_empty() {
+            let routes = store.out_ranks(local);
+            if routes.is_empty() {
                 continue;
-            }
-            self.dest_flags.iter_mut().for_each(|f| *f = false);
-            for &tgt in &store.out_edges[local] {
-                self.dest_flags[(tgt / neurons_per_rank) as usize] = true;
             }
             let rec = FreqRecord {
                 id: pop.global_id(local),
                 freq: spikes as f32 / self.delta as f32,
             };
-            for (rank, &flagged) in self.dest_flags.iter().enumerate() {
-                if flagged && rank != comm.rank() {
-                    sends[rank].push(rec);
+            for &(rank, _) in routes {
+                if rank != me {
+                    sends[rank as usize].push(rec);
                 }
             }
         }
         let incoming = exchange_ref(comm, sends);
-        for batch in incoming {
-            for rec in batch {
-                self.freqs[rec.id as usize] = rec.freq;
-            }
-        }
+        // Batches arrive in source-rank order; per-rank id ranges are
+        // disjoint and each batch is in ascending id order, so the
+        // concatenation is globally sorted — install is O(records).
+        self.freqs.install_epoch(incoming.iter().flatten().map(|r| (r.id, r.freq)));
         true
     }
 
+    /// Drop frequency entries whose last in-edge from that source was
+    /// deleted (the `SynapseStore` refcounts are maintained at the
+    /// deletion site). The driver calls this right after the deletion
+    /// sub-phase of every connectivity update — before formation, so
+    /// even an edge deleted and re-formed **within one plasticity
+    /// phase** (let alone one epoch) reconstructs against 0.0 instead
+    /// of the dead edge's last reported frequency — the other half of
+    /// the staleness fix, for the window the boundary rebuild cannot
+    /// cover.
+    pub fn prune_stale(&mut self, store: &SynapseStore) {
+        self.freqs.retain(|id| store.in_partner_count(id) > 0);
+    }
+
     /// Reconstruct: did remote neuron `id` spike this step? One PRNG
-    /// draw against its last known frequency (paper Fig. 5, "PRNG").
+    /// draw against its last known frequency (paper Fig. 5, "PRNG");
+    /// an absent entry is frequency 0.0 and never draws.
     #[inline]
     pub fn spiked(&mut self, id: u64) -> bool {
-        let f = self.freqs[id as usize];
+        let f = self.freqs.get(id);
         f > 0.0 && self.rng.bernoulli(f as f64)
     }
 
-    /// Last received frequency of a neuron (tests/inspection).
+    /// Last received frequency of a neuron (tests/inspection); 0.0 when
+    /// no entry is installed.
     pub fn freq_of(&self, id: u64) -> f32 {
-        self.freqs[id as usize]
+        self.freqs.get(id)
+    }
+
+    /// Number of partners with an installed entry (tests/inspection).
+    pub fn partner_count(&self) -> usize {
+        self.freqs.len()
+    }
+
+    /// Bytes of reconstruction state currently held: 12 B per installed
+    /// partner — the per-rank memory the bench harness reports as
+    /// `spike_state_bytes` (O(local partners), not O(total neurons)).
+    pub fn state_bytes(&self) -> u64 {
+        self.freqs.state_bytes()
     }
 
     // -- checkpoint/restore accessors (see `snapshot`) -------------------
 
-    /// The dense frequency table, for snapshotting. Mid-epoch this holds
-    /// the frequencies received at the last epoch boundary, which the
-    /// receiver keeps consulting until the next exchange — so a restored
-    /// rank must get these back bit-exactly.
-    pub fn freq_table(&self) -> &[f32] {
-        &self.freqs
+    /// The sparse (id, frequency) entries, for snapshotting. Mid-epoch
+    /// these hold the frequencies received at the last epoch boundary,
+    /// which the receiver keeps consulting until the next exchange — so
+    /// a restored rank must get these back bit-exactly.
+    pub fn entries(&self) -> Vec<(u64, f32)> {
+        self.freqs.entries()
     }
 
     /// Reconstruction-PRNG state, for snapshotting.
@@ -139,26 +168,17 @@ impl FrequencyExchange {
         self.rng.state()
     }
 
-    /// Rebuild an exchange from snapshotted parts. `total_neurons` is
-    /// the size the simulation expects the dense table to have.
+    /// Rebuild an exchange from snapshotted parts. The entries must be
+    /// strictly ascending by id (the sparse table's lookup invariant).
     pub fn from_parts(
         delta: usize,
-        total_neurons: usize,
-        freqs: Vec<f32>,
+        entries: Vec<(u64, f32)>,
         rng: crate::util::RngState,
     ) -> Result<FrequencyExchange, String> {
-        if freqs.len() != total_neurons {
-            return Err(format!(
-                "frequency table size mismatch: snapshot has {}, simulation expects \
-                 {total_neurons}",
-                freqs.len(),
-            ));
-        }
         Ok(FrequencyExchange {
             delta,
-            freqs,
+            freqs: PartnerFreqs::from_entries(entries)?,
             rng: Rng::from_state(rng),
-            dest_flags: Vec::new(),
             sends: Vec::new(),
         })
     }
@@ -192,32 +212,57 @@ mod tests {
         let results = run_ranks(2, |comm| {
             let rank = comm.rank();
             let mut pop = make_pop(rank, 2);
-            let mut store = SynapseStore::new(2);
+            let mut store = SynapseStore::new(2, 2);
             if rank == 0 {
                 store.add_out(0, 2); // to rank 1
                 pop.epoch_spikes[0] = 10; // fired 10 times this epoch
             }
-            let mut ex = FrequencyExchange::new(100, 4, Rng::new(1));
+            let mut ex = FrequencyExchange::new(100, Rng::new(1));
             // Mid-epoch: nothing happens, no synchronization.
-            assert!(!ex.maybe_exchange(&comm, &mut pop, &store, 2, 50));
+            assert!(!ex.maybe_exchange(&comm, &mut pop, &store, 50));
             assert_eq!(comm.counters().snapshot().collectives, 0);
             // Epoch boundary: records move.
-            assert!(ex.maybe_exchange(&comm, &mut pop, &store, 2, 100));
+            assert!(ex.maybe_exchange(&comm, &mut pop, &store, 100));
             (ex, pop, comm.counters().snapshot())
         });
         let (ex1, _, _) = &results[1];
         assert!((ex1.freq_of(0) - 0.1).abs() < 1e-6);
-        // Sender reset its epoch counter.
+        assert_eq!(ex1.partner_count(), 1);
+        assert_eq!(ex1.state_bytes(), 12);
+        // Sender reset its epoch counter and holds no receiver state.
         assert_eq!(results[0].1.epoch_spikes[0], 0);
+        assert_eq!(results[0].0.partner_count(), 0);
         // 12 bytes went rank0 -> rank1.
         assert_eq!(results[0].2.bytes_sent, 12);
         assert_eq!(results[1].2.bytes_sent, 0);
     }
 
     #[test]
+    fn step_zero_is_not_an_epoch_boundary() {
+        // The old behavior exchanged a zero-length epoch of all-zero
+        // frequencies at step 0 — one wasted collective per run that
+        // polluted bench counters. The degenerate boundary is skipped.
+        let results = run_ranks(2, |comm| {
+            let rank = comm.rank();
+            let mut pop = make_pop(rank, 2);
+            let mut store = SynapseStore::new(2, 2);
+            if rank == 0 {
+                store.add_out(0, 2);
+            }
+            let mut ex = FrequencyExchange::new(10, Rng::new(5));
+            assert!(!ex.maybe_exchange(&comm, &mut pop, &store, 0));
+            comm.counters().snapshot()
+        });
+        for snap in results {
+            assert_eq!(snap.collectives, 0);
+            assert_eq!(snap.bytes_sent, 0);
+        }
+    }
+
+    #[test]
     fn reconstruction_matches_frequency_statistically() {
-        let mut ex = FrequencyExchange::new(100, 4, Rng::new(7));
-        ex.freqs[2] = 0.3;
+        let mut ex =
+            FrequencyExchange::from_parts(100, vec![(2, 0.3)], Rng::new(7).state()).unwrap();
         let n = 100_000;
         let hits = (0..n).filter(|_| ex.spiked(2)).count();
         let rate = hits as f64 / n as f64;
@@ -226,8 +271,94 @@ mod tests {
 
     #[test]
     fn zero_frequency_never_spikes() {
-        let mut ex = FrequencyExchange::new(100, 4, Rng::new(8));
+        let mut ex = FrequencyExchange::new(100, Rng::new(8));
         assert!((0..1000).all(|_| !ex.spiked(1)));
+    }
+
+    #[test]
+    fn stale_frequency_is_not_reused_after_edge_reform() {
+        // The headline regression (ISSUE 3): a remote in-edge is
+        // deleted, at least one epoch boundary passes (the sender stops
+        // reporting, so under the old dense table its last frequency
+        // would sit there stale forever), then the edge re-forms
+        // mid-epoch. Reconstruction must draw against 0.0.
+        let results = run_ranks(2, |comm| {
+            let rank = comm.rank();
+            let mut pop = make_pop(rank, 2);
+            let mut store = SynapseStore::new(2, 2);
+            if rank == 0 {
+                store.add_out(0, 2); // to rank 1's neuron 2
+            } else {
+                store.add_in(0, 0, true); // from rank 0's neuron 0
+            }
+            let mut ex = FrequencyExchange::new(10, Rng::new(11));
+            // Boundary 1: sender reports a saturated frequency.
+            if rank == 0 {
+                pop.epoch_spikes[0] = 10; // freq 1.0
+            }
+            assert!(ex.maybe_exchange(&comm, &mut pop, &store, 10));
+            if rank == 1 {
+                assert!((ex.freq_of(0) - 1.0).abs() < 1e-6);
+            }
+            // Mid-epoch: the edge is deleted on both sides; the
+            // connectivity update prunes receiver state.
+            if rank == 0 {
+                assert!(store.remove_specific_out(0, 2));
+            } else {
+                assert!(store.remove_specific_in(0, 0));
+            }
+            ex.prune_stale(&store);
+            // Boundary 2: the sender no longer reports this rank.
+            assert!(ex.maybe_exchange(&comm, &mut pop, &store, 20));
+            // Mid-epoch: the edge re-forms.
+            if rank == 0 {
+                store.add_out(0, 2);
+            } else {
+                store.add_in(0, 0, true);
+            }
+            // Reconstruction draws against 0.0, not the stale 1.0 (which
+            // would make EVERY draw a spike).
+            if rank == 1 {
+                assert_eq!(ex.freq_of(0), 0.0);
+                assert!((0..1000).all(|_| !ex.spiked(0)));
+            }
+            ex.partner_count()
+        });
+        assert_eq!(results[1], 0);
+    }
+
+    #[test]
+    fn prune_drops_entry_when_last_in_edge_dies_within_an_epoch() {
+        // Deletion + re-formation inside ONE epoch: the boundary
+        // rebuild cannot help here, only the deletion-site prune can.
+        let mut store = SynapseStore::new(1, 1);
+        store.add_in(0, 5, true); // remote source 5
+        let mut ex =
+            FrequencyExchange::from_parts(10, vec![(5, 0.8)], Rng::new(2).state()).unwrap();
+        assert_eq!(ex.freq_of(5), 0.8);
+        assert!(store.remove_specific_in(0, 5));
+        ex.prune_stale(&store);
+        store.add_in(0, 5, true); // re-formed in the same epoch
+        assert_eq!(ex.freq_of(5), 0.0, "re-formed edge must start from zero");
+        assert!((0..1000).all(|_| !ex.spiked(5)));
+    }
+
+    #[test]
+    fn prune_keeps_partners_with_surviving_in_edges() {
+        // Source 4 feeds two local targets; deleting one edge must NOT
+        // drop the entry — its frequency is still current for the other.
+        let mut store = SynapseStore::new(2, 2);
+        store.add_in(0, 4, true);
+        store.add_in(1, 4, true);
+        let mut ex =
+            FrequencyExchange::from_parts(10, vec![(4, 0.5)], Rng::new(3).state()).unwrap();
+        assert!(store.remove_specific_in(0, 4));
+        ex.prune_stale(&store);
+        assert_eq!(ex.freq_of(4), 0.5);
+        assert!(store.remove_specific_in(1, 4));
+        ex.prune_stale(&store);
+        assert_eq!(ex.freq_of(4), 0.0);
+        assert_eq!(ex.partner_count(), 0);
     }
 
     #[test]
@@ -239,16 +370,16 @@ mod tests {
         let results = run_ranks(2, |comm| {
             let rank = comm.rank();
             let mut pop = make_pop(rank, 2);
-            let mut store = SynapseStore::new(2);
+            let mut store = SynapseStore::new(2, 2);
             if rank == 0 {
                 store.add_out(0, 2); // to rank 1
             }
-            let mut ex = FrequencyExchange::new(10, 4, Rng::new(3));
+            let mut ex = FrequencyExchange::new(10, Rng::new(3));
             pop.epoch_spikes[0] = 5;
-            assert!(ex.maybe_exchange(&comm, &mut pop, &store, 2, 0));
+            assert!(ex.maybe_exchange(&comm, &mut pop, &store, 10));
             let first = comm.counters().snapshot();
             pop.epoch_spikes[0] = 7;
-            assert!(ex.maybe_exchange(&comm, &mut pop, &store, 2, 10));
+            assert!(ex.maybe_exchange(&comm, &mut pop, &store, 20));
             let second = comm.counters().snapshot().since(&first);
             (first, second)
         });
@@ -268,12 +399,40 @@ mod tests {
         let results = run_ranks(2, |comm| {
             let mut pop = make_pop(comm.rank(), 4);
             pop.epoch_spikes.iter_mut().for_each(|s| *s = 50);
-            let store = SynapseStore::new(4); // no synapses at all
-            let mut ex = FrequencyExchange::new(10, 8, Rng::new(2));
-            ex.maybe_exchange(&comm, &mut pop, &store, 4, 0);
+            let store = SynapseStore::new(4, 4); // no synapses at all
+            let mut ex = FrequencyExchange::new(10, Rng::new(2));
+            ex.maybe_exchange(&comm, &mut pop, &store, 10);
             comm.counters().snapshot().bytes_sent
         });
         assert_eq!(results[0], 0);
         assert_eq!(results[1], 0);
+    }
+
+    #[test]
+    fn routing_sends_one_record_per_partner_rank() {
+        // A neuron with out-edges on two remote ranks (and one local)
+        // must send exactly one record to each remote partner rank —
+        // driven by the incrementally-maintained out-rank table, with
+        // wire order identical to the old dest_flags rescan.
+        let results = run_ranks(3, |comm| {
+            let rank = comm.rank();
+            let mut pop = make_pop(rank, 2);
+            let mut store = SynapseStore::new(2, 2);
+            if rank == 0 {
+                store.add_out(0, 1); // local: never sent
+                store.add_out(0, 2); // rank 1
+                store.add_out(0, 3); // rank 1 again: still one record
+                store.add_out(0, 4); // rank 2
+                pop.epoch_spikes[0] = 5;
+            }
+            let mut ex = FrequencyExchange::new(10, Rng::new(6));
+            assert!(ex.maybe_exchange(&comm, &mut pop, &store, 10));
+            (ex, comm.counters().snapshot())
+        });
+        // 12 B to rank 1 + 12 B to rank 2, one message each.
+        assert_eq!(results[0].1.bytes_sent, 24);
+        assert_eq!(results[0].1.msgs_sent, 2);
+        assert!((results[1].0.freq_of(0) - 0.5).abs() < 1e-6);
+        assert!((results[2].0.freq_of(0) - 0.5).abs() < 1e-6);
     }
 }

@@ -10,50 +10,36 @@ use crate::plasticity::SynapseStore;
 /// this step, indexed by source rank.
 pub struct IdExchange {
     sorted: Vec<Vec<u64>>,
-    /// Scratch: which destination ranks each local neuron projects to
-    /// (rebuilt lazily each step from out_edges).
-    dest_flags: Vec<bool>,
-    /// Scratch: per-destination send lists, reused across steps like
-    /// `dest_flags` — this runs every step, so rebuilding the
-    /// `Vec<Vec<_>>` here was measurable allocation churn
-    /// (EXPERIMENTS.md §Perf, opt 6).
+    /// Scratch: per-destination send lists, reused across steps — this
+    /// runs every step, so rebuilding the `Vec<Vec<_>>` here was
+    /// measurable allocation churn (EXPERIMENTS.md §Perf, opt 6).
     sends: Vec<Vec<u64>>,
 }
 
 impl IdExchange {
     pub fn new(size: usize) -> Self {
-        IdExchange {
-            sorted: vec![Vec::new(); size],
-            dest_flags: vec![false; size],
-            sends: vec![Vec::new(); size],
-        }
+        IdExchange { sorted: vec![Vec::new(); size], sends: vec![Vec::new(); size] }
     }
 
     /// One step: send the ids of local neurons that fired to every rank
     /// hosting at least one of their out-partners; sort what arrives.
     /// This happens EVERY simulation step — the synchronization the new
-    /// algorithm amortizes away.
-    pub fn exchange(
-        &mut self,
-        comm: &ThreadComm,
-        pop: &Population,
-        store: &SynapseStore,
-        neurons_per_rank: u64,
-    ) {
+    /// algorithm amortizes away. Destination ranks come straight from
+    /// the `SynapseStore`'s incrementally-maintained out-rank table
+    /// (EXPERIMENTS.md §Perf, opt 7) instead of rescanning `out_edges`
+    /// into a per-destination flag array per firing neuron.
+    pub fn exchange(&mut self, comm: &ThreadComm, pop: &Population, store: &SynapseStore) {
         let sends = &mut self.sends;
         sends.iter_mut().for_each(|s| s.clear());
+        let me = comm.rank() as u32;
         for local in 0..pop.len() {
             if !pop.fired[local] {
                 continue;
             }
-            self.dest_flags.iter_mut().for_each(|f| *f = false);
-            for &tgt in &store.out_edges[local] {
-                self.dest_flags[(tgt / neurons_per_rank) as usize] = true;
-            }
             let id = pop.global_id(local);
-            for (rank, &flagged) in self.dest_flags.iter().enumerate() {
-                if flagged && rank != comm.rank() {
-                    sends[rank].push(id);
+            for &(rank, _) in store.out_ranks(local) {
+                if rank != me {
+                    sends[rank as usize].push(id);
                 }
             }
         }
@@ -89,7 +75,7 @@ mod tests {
         let results = run_ranks(3, |comm| {
             let rank = comm.rank();
             let mut pop = make_pop(rank, 2);
-            let mut store = SynapseStore::new(2);
+            let mut store = SynapseStore::new(2, 2);
             // Rank 0's neuron 0 projects to rank 1 (id 2) only.
             if rank == 0 {
                 store.add_out(0, 2);
@@ -97,7 +83,7 @@ mod tests {
                 pop.fired[1] = true; // fired but no out-partners: not sent
             }
             let mut ex = IdExchange::new(3);
-            ex.exchange(&comm, &pop, &store, 2);
+            ex.exchange(&comm, &pop, &store);
             let sent = comm.counters().snapshot().bytes_sent;
             (ex, sent)
         });
@@ -115,7 +101,7 @@ mod tests {
         let results = run_ranks(2, |comm| {
             let rank = comm.rank();
             let mut pop = make_pop(rank, 8);
-            let mut store = SynapseStore::new(8);
+            let mut store = SynapseStore::new(8, 8);
             if rank == 1 {
                 // Fire several, all projecting to rank 0's neuron 0.
                 for i in [5usize, 1, 7, 3] {
@@ -124,7 +110,7 @@ mod tests {
                 }
             }
             let mut ex = IdExchange::new(2);
-            ex.exchange(&comm, &pop, &store, 8);
+            ex.exchange(&comm, &pop, &store);
             ex
         });
         let ex = &results[0];
@@ -145,7 +131,7 @@ mod tests {
         let results = run_ranks(2, |comm| {
             let rank = comm.rank();
             let mut pop = make_pop(rank, 4);
-            let mut store = SynapseStore::new(4);
+            let mut store = SynapseStore::new(4, 4);
             if rank == 0 {
                 store.add_out(0, 4); // both to rank 1
                 store.add_out(1, 5);
@@ -153,9 +139,9 @@ mod tests {
                 pop.fired[1] = true;
             }
             let mut ex = IdExchange::new(2);
-            ex.exchange(&comm, &pop, &store, 4);
+            ex.exchange(&comm, &pop, &store);
             let first = comm.counters().snapshot();
-            ex.exchange(&comm, &pop, &store, 4);
+            ex.exchange(&comm, &pop, &store);
             let second = comm.counters().snapshot().since(&first);
             (first, second)
         });
@@ -176,9 +162,9 @@ mod tests {
     fn empty_step_exchanges_nothing_but_still_synchronizes() {
         let results = run_ranks(2, |comm| {
             let pop = make_pop(comm.rank(), 2);
-            let store = SynapseStore::new(2);
+            let store = SynapseStore::new(2, 2);
             let mut ex = IdExchange::new(2);
-            ex.exchange(&comm, &pop, &store, 2);
+            ex.exchange(&comm, &pop, &store);
             comm.counters().snapshot()
         });
         for snap in results {

@@ -46,7 +46,7 @@ fn target_rank_histogram(alg: ConnectivityAlg, seed: u64) -> Vec<usize> {
         let mut hist = vec![0usize; RANKS];
         for round in 0..ROUNDS {
             // Fresh store each round -> i.i.d. samples of the first choice.
-            state.store = SynapseStore::new(NPR);
+            state.store = SynapseStore::new(NPR, NPR as u64);
             state.rng_conn = Rng::new(seed ^ (round as u64 * 7919));
             state.plasticity_phase(&cfg, &decomp, &comm);
             if comm.rank() == 0 {

@@ -176,7 +176,7 @@ fn prop_synapse_store_random_ops_keep_invariants() {
         |(seed, ops)| {
             let mut rng = Rng::new(*seed);
             let n = 8;
-            let mut store = SynapseStore::new(n);
+            let mut store = SynapseStore::new(n, 8);
             for &op in ops {
                 let local = rng.next_below(n);
                 match op {
@@ -221,7 +221,7 @@ fn prop_acceptance_never_exceeds_capacity() {
                 pop.z_den_exc[i] = c;
                 pop.z_den_inh[i] = c;
             }
-            let mut store = SynapseStore::new(caps.len());
+            let mut store = SynapseStore::new(caps.len(), caps.len().max(1) as u64);
             let proposals: Vec<Proposal> = props
                 .iter()
                 .enumerate()
@@ -267,7 +267,7 @@ fn prop_deletion_restores_element_consistency() {
                 let mut rng = Rng::new(seed ^ rank as u64);
                 let mut pop =
                     Population::init(&cfg, rank, Vec3::ZERO, Vec3::splat(10.0), &mut rng);
-                let mut store = SynapseStore::new(4);
+                let mut store = SynapseStore::new(4, 4);
                 // Build a deterministic, globally consistent edge set:
                 // neuron (r, i) -> neuron (1-r, i) for all i (exc).
                 for i in 0..4 {
