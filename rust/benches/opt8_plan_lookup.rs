@@ -1,0 +1,140 @@
+//! §Perf opt 8 — per-step remote-lookup cost: O(1) slot-interned reads
+//! through the epoch-compiled `DeliveryPlan` vs the per-edge O(log P)
+//! binary search the naive delivery loop paid (P = remote partners).
+//!
+//! Two parts:
+//!
+//! 1. **Differential oracle**: rebuild the naive delivery loop inline
+//!    (division + per-edge search, exactly what `spikes::deliver_input`
+//!    does) and assert the plan produces bit-identical `i_syn` and the
+//!    identical lookup count on a random topology — the bench refuses
+//!    to print numbers for a plan that changed semantics.
+//! 2. **Microbench**: per-lookup nanoseconds of binary search over a
+//!    P-entry sparse table vs one indexed load from the slot-aligned
+//!    array, across partner counts. The search column grows with
+//!    log₂ P; the slot column stays flat — that gap, multiplied by
+//!    (remote edges × steps), is what the plan removes from every run.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use std::time::Instant;
+
+use common::figure_header;
+use ilmi::config::SimConfig;
+use ilmi::neuron::Population;
+use ilmi::plasticity::SynapseStore;
+use ilmi::spikes::{spike_weight, DeliveryPlan, PartnerFreqs};
+use ilmi::util::{Rng, Vec3};
+
+/// The naive oracle, reproduced from the pre-plan delivery loop: per
+/// edge per step, one u64 division, one nested-list chase, and the
+/// caller's per-id lookup.
+fn naive_deliver(
+    pop: &mut Population,
+    store: &SynapseStore,
+    neurons_per_rank: u64,
+    my_rank: usize,
+    mut remote_spiked: impl FnMut(u64) -> bool,
+) -> u64 {
+    let mut lookups = 0;
+    let first = pop.first_id;
+    for local in 0..pop.len() {
+        let mut acc = 0.0f32;
+        for e in &store.in_edges[local] {
+            let src_rank = (e.source / neurons_per_rank) as usize;
+            let spiked = if src_rank == my_rank {
+                pop.fired[(e.source - first) as usize]
+            } else {
+                lookups += 1;
+                remote_spiked(e.source)
+            };
+            if spiked {
+                acc += spike_weight(e.source_exc);
+            }
+        }
+        pop.i_syn[local] = acc;
+    }
+    lookups
+}
+
+fn oracle_check() {
+    let n = 64usize;
+    let cfg = SimConfig { neurons_per_rank: n, ..SimConfig::default() };
+    let mut rng = Rng::new(2024);
+    let mut pop = Population::init(&cfg, 1, Vec3::ZERO, Vec3::splat(10.0), &mut rng);
+    let mut store = SynapseStore::new(n, n as u64);
+    for _ in 0..n * 8 {
+        store.add_in(rng.next_below(n), rng.next_below(4 * n) as u64, rng.bernoulli(0.6));
+    }
+    for f in pop.fired.iter_mut() {
+        *f = rng.bernoulli(0.4);
+    }
+    let fired = |id: u64| id % 3 == 0; // deterministic stand-in lookup
+    let naive = naive_deliver(&mut pop, &store, n as u64, 1, fired);
+    let want: Vec<u32> = pop.i_syn.iter().map(|x| x.to_bits()).collect();
+    let plan = DeliveryPlan::compile(&store, n as u64);
+    plan.check_against(&store).expect("plan must cross-validate");
+    let planned = plan.deliver(&mut pop, |slot| fired(plan.remote_ids()[slot]));
+    let got: Vec<u32> = pop.i_syn.iter().map(|x| x.to_bits()).collect();
+    assert_eq!(naive, planned, "lookup counts diverged");
+    assert_eq!(want, got, "i_syn bit patterns diverged");
+    println!(
+        "oracle check: OK ({} edges, {} remote over {} slots, i_syn bit-identical)",
+        plan.edge_count(),
+        plan.remote_edge_count(),
+        plan.slot_count()
+    );
+}
+
+fn main() {
+    figure_header(
+        "Perf opt 8",
+        "remote-lookup cost: O(log P) binary search vs O(1) slot read",
+    );
+    oracle_check();
+
+    let lookups_per_round = 1 << 16;
+    println!(
+        "\n{:>10} {:>16} {:>16} {:>8}",
+        "partners", "search [ns/op]", "slot [ns/op]", "ratio"
+    );
+    for p in [256usize, 1024, 4096, 16384, 65536] {
+        // Sparse table with P entries (every 3rd id, like a real rank's
+        // scattered remote partners) and its slot-aligned mirror.
+        let mut table = PartnerFreqs::new();
+        table.install_epoch((0..p).map(|i| (3 * i as u64, 0.25f32)));
+        let slot_ids: Vec<u64> = (0..p).map(|i| 3 * i as u64).collect();
+        let mut slots = Vec::new();
+        table.fill_slot_thrs(&slot_ids, &mut slots);
+
+        // Pre-draw the access pattern so both sides pay identical
+        // index-generation cost.
+        let mut rng = Rng::new(p as u64);
+        let picks: Vec<usize> = (0..lookups_per_round).map(|_| rng.next_below(p)).collect();
+
+        let t0 = Instant::now();
+        let mut acc = 0.0f64;
+        for &k in &picks {
+            acc += table.get_thr(slot_ids[k]); // binary search per lookup
+        }
+        let search_ns = t0.elapsed().as_nanos() as f64 / picks.len() as f64;
+
+        let t1 = Instant::now();
+        let mut acc2 = 0.0f64;
+        for &k in &picks {
+            acc2 += slots[k]; // one indexed load
+        }
+        let slot_ns = t1.elapsed().as_nanos() as f64 / picks.len() as f64;
+        assert_eq!(acc.to_bits(), acc2.to_bits(), "lookup paths must agree");
+
+        println!(
+            "{:>10} {:>16.2} {:>16.2} {:>8}",
+            p,
+            search_ns,
+            slot_ns,
+            common::ratio(search_ns, slot_ns)
+        );
+    }
+    println!("\n(search grows ~log2 P; slot reads stay flat — the per-edge gap the plan removes)");
+}

@@ -139,6 +139,11 @@ pub struct SelectScratch2 {
 pub struct FormationScratch {
     requests: Vec<Vec<NewRequest>>,
     responses: Vec<Vec<NewResponse>>,
+    /// Descent scratch for the source-side searches, hoisted here so a
+    /// formation phase no longer allocates a fresh `SelectScratch2` per
+    /// call (one search runs per vacant axonal element, every
+    /// connectivity update — EXPERIMENTS.md §Perf, opt 8 satellite).
+    select: SelectScratch2,
 }
 
 /// Full formation phase, location-aware algorithm (Algorithm 1):
@@ -154,10 +159,9 @@ pub fn run_formation(
     send_scratch: &mut FormationScratch,
 ) -> FormationStats {
     let mut stats = FormationStats::default();
-    send_scratch.requests.resize_with(comm.size(), Vec::new);
-    send_scratch.requests.iter_mut().for_each(|v| v.clear());
-    let requests = &mut send_scratch.requests;
-    let mut scratch = SelectScratch2::default();
+    let FormationScratch { requests, responses, select: scratch } = send_scratch;
+    requests.resize_with(comm.size(), Vec::new);
+    requests.iter_mut().for_each(|v| v.clear());
 
     // Phase 1: local descents (lines 6-12 of Algorithm 1).
     let t_search = std::time::Instant::now();
@@ -168,7 +172,7 @@ pub fn run_formation(
         let src_pos = pop.positions[local];
         for _ in 0..n_vacant {
             stats.searches += 1;
-            match search_new(tree, src_id, &src_pos, kind, cfg.theta, cfg.sigma, &mut scratch, rng)
+            match search_new(tree, src_id, &src_pos, kind, cfg.theta, cfg.sigma, scratch, rng)
             {
                 Outcome::Leaf { neuron, owner } => {
                     requests[owner as usize].push(NewRequest {
@@ -260,12 +264,11 @@ pub fn run_formation(
 
     // Phase 5: 9 B responses, order-preserving per source rank
     // (lines 23-26), through the same reusable scratch.
-    send_scratch.responses.resize_with(comm.size(), Vec::new);
-    for (resp, f) in send_scratch.responses.iter_mut().zip(&found) {
+    responses.resize_with(comm.size(), Vec::new);
+    for (resp, f) in responses.iter_mut().zip(&found) {
         resp.clear();
         resp.extend(f.iter().map(|&t| NewResponse { target: t, success: false }));
     }
-    let responses = &mut send_scratch.responses;
     for (k, &(r, seq)) in origin.iter().enumerate() {
         responses[r][seq].success = success[k];
     }

@@ -1,11 +1,11 @@
 //! The versioned `BENCH_*.json` report: emit, parse, markdown render,
 //! and baseline diffing.
 //!
-//! Schema (`schema_version` 2):
+//! Schema (`schema_version` 3):
 //!
 //! ```json
 //! {
-//!   "schema_version": 2,
+//!   "schema_version": 3,
 //!   "name": "quick",
 //!   "created_unix": 1753500000,
 //!   "fingerprint": "9f…16 hex digits…",
@@ -19,7 +19,8 @@
 //!     "wall": {"median":…,"min":…,"max":…},
 //!     "comm": {"bytes_sent":…,"bytes_recv":…,"bytes_rma":…,
 //!              "msgs_sent":…,"collectives":…,"rma_gets":…},
-//!     "spike_state_bytes": …
+//!     "spike_state_bytes": …,
+//!     "spike_lookups": …
 //!   }, …]
 //! }
 //! ```
@@ -42,8 +43,12 @@ use super::stats::Summary;
 
 /// Version of the `BENCH_*.json` schema this build emits and accepts.
 /// v2 added `spike_state_bytes` (per-rank spike-exchange state memory,
-/// max across ranks — the EXPERIMENTS.md §Perf opt 7 counter).
-pub const SCHEMA_VERSION: u32 = 2;
+/// max across ranks — the EXPERIMENTS.md §Perf opt 7 counter); v3 added
+/// `spike_lookups` (remote look-ups summed over ranks, the Fig. 5
+/// quantity), drift-checked by the baseline diff so the epoch-compiled
+/// delivery plan can never silently change how many look-ups a
+/// workload performs (EXPERIMENTS.md §Perf, opt 8).
+pub const SCHEMA_VERSION: u32 = 3;
 
 /// Timing differences below this many seconds are never regressions —
 /// the thread-rank substrate cannot resolve them reliably.
@@ -67,6 +72,11 @@ pub struct ScenarioResult {
     /// across ranks (12 B per installed remote partner; 0 for the old
     /// algorithm). Seed-deterministic like the counters.
     pub spike_state_bytes: u64,
+    /// Remote spike look-ups summed over ranks (the paper's Fig. 5
+    /// quantity: one per remote in-edge per step). Seed-deterministic;
+    /// any drift at equal fingerprints is a behavior change in the
+    /// delivery path.
+    pub spike_lookups: u64,
 }
 
 /// One complete benchmark trajectory (a `BENCH_*.json` file in memory).
@@ -181,8 +191,10 @@ impl BenchReport {
         for p in ALL_PHASES {
             out.push_str(&format!(" {} |", p.name()));
         }
-        out.push_str(" wall | bytes_sent | bytes_rma | collectives | spike_state |\n|---|");
-        out.push_str(&"---:|".repeat(ALL_PHASES.len() + 5));
+        out.push_str(
+            " wall | bytes_sent | bytes_rma | collectives | spike_state | lookups |\n|---|",
+        );
+        out.push_str(&"---:|".repeat(ALL_PHASES.len() + 6));
         out.push('\n');
         for r in &self.results {
             out.push_str(&format!("| {} |", r.scenario.id()));
@@ -190,12 +202,13 @@ impl BenchReport {
                 out.push_str(&format!(" {:.4} |", r.phases[p.index()].median));
             }
             out.push_str(&format!(
-                " {:.4} | {} | {} | {} | {} |\n",
+                " {:.4} | {} | {} | {} | {} | {} |\n",
                 r.wall.median,
                 r.comm.bytes_sent,
                 r.comm.bytes_rma,
                 r.comm.collectives,
-                r.spike_state_bytes
+                r.spike_state_bytes,
+                r.spike_lookups
             ));
         }
         out
@@ -247,6 +260,7 @@ impl BenchReport {
                 ("collectives", base.comm.collectives, cur.comm.collectives),
                 ("rma_gets", base.comm.rma_gets, cur.comm.rma_gets),
                 ("spike_state_bytes", base.spike_state_bytes, cur.spike_state_bytes),
+                ("spike_lookups", base.spike_lookups, cur.spike_lookups),
             ];
             for (field, b, c) in counter_fields {
                 if b != c {
@@ -372,6 +386,7 @@ fn scenario_to_json(r: &ScenarioResult) -> Json {
             ]),
         ),
         ("spike_state_bytes", Json::Num(r.spike_state_bytes as f64)),
+        ("spike_lookups", Json::Num(r.spike_lookups as f64)),
     ])
 }
 
@@ -414,6 +429,7 @@ fn scenario_from_json(v: &Json) -> Result<ScenarioResult, String> {
             rma_gets: comm_json.req("rma_gets")?.as_u64()?,
         },
         spike_state_bytes: v.req("spike_state_bytes")?.as_u64()?,
+        spike_lookups: v.req("spike_lookups")?.as_u64()?,
     })
 }
 
@@ -451,6 +467,7 @@ mod tests {
                 rma_gets: 5,
             },
             spike_state_bytes: 1_212,
+            spike_lookups: 98_765,
         }
     }
 
@@ -504,8 +521,17 @@ mod tests {
     #[test]
     fn unsupported_schema_version_is_rejected() {
         let text = sample_report().to_json().replace(
-            "\"schema_version\": 2",
+            "\"schema_version\": 3",
             "\"schema_version\": 99",
+        );
+        let err = BenchReport::from_json(&text).unwrap_err();
+        assert!(err.contains("schema version"), "{err}");
+        // The previous schema generation is refused too — a v2 baseline
+        // has no spike_lookups to drift-check against, so cross-schema
+        // trajectories are not comparable.
+        let text = sample_report().to_json().replace(
+            "\"schema_version\": 3",
+            "\"schema_version\": 2",
         );
         let err = BenchReport::from_json(&text).unwrap_err();
         assert!(err.contains("schema version"), "{err}");
@@ -559,6 +585,22 @@ mod tests {
     }
 
     #[test]
+    fn spike_lookup_drift_is_flagged_and_field_is_required() {
+        let base = sample_report();
+        let mut cur = sample_report();
+        cur.results[1].spike_lookups += 1;
+        let diff = cur.diff(&base, 0.2).unwrap();
+        assert_eq!(diff.regressions(), 1);
+        assert!(diff.render().contains("COUNTER DRIFT spike_lookups"));
+        // The v3 schema requires the field on every scenario.
+        let text = base.to_json();
+        assert!(text.contains("\"spike_lookups\""));
+        let broken = text.replace("\"spike_lookups\"", "\"spike_lookups_gone\"");
+        let err = BenchReport::from_json(&broken).unwrap_err();
+        assert!(err.contains("spike_lookups"), "{err}");
+    }
+
+    #[test]
     fn sub_floor_slowdowns_are_not_regressions() {
         // Timings are not fingerprinted, so both sides can be adjusted
         // to craft a big relative / tiny absolute slowdown: +400% but
@@ -580,6 +622,7 @@ mod tests {
             assert!(md.contains(p.name()), "{md}");
         }
         assert!(md.contains("spike_state"), "{md}");
+        assert!(md.contains("lookups"), "{md}");
         assert_eq!(md.lines().count(), 2 + 2); // header + separator + 2 rows
     }
 }

@@ -29,6 +29,7 @@ pub fn run_scenario(scenario: &Scenario, settings: &RunSettings) -> Result<Scena
     let mut wall_samples = Vec::with_capacity(settings.reps);
     let mut comm = CounterSnapshot::default();
     let mut spike_state_bytes = 0u64;
+    let mut spike_lookups = 0u64;
     for rep in 0..settings.reps.max(1) {
         let report = run_simulation(&cfg)?;
         for p in ALL_PHASES {
@@ -59,6 +60,21 @@ pub fn run_scenario(scenario: &Scenario, settings: &RunSettings) -> Result<Scena
             );
         }
         spike_state_bytes = state;
+        // Remote look-ups are a pure function of the (seeded) topology
+        // trajectory: one per remote in-edge per step, whatever the
+        // lookup's implementation — the schema-v3 field the baseline
+        // diff drift-checks.
+        let lookups = report.total_lookups();
+        if rep > 0 && lookups != spike_lookups {
+            anyhow::bail!(
+                "spike lookups drifted between repetitions of {} ({} then {}) — \
+                 determinism bug in the delivery path",
+                scenario.id(),
+                spike_lookups,
+                lookups
+            );
+        }
+        spike_lookups = lookups;
     }
     let mut phases = [Summary::default(); ALL_PHASES.len()];
     for p in ALL_PHASES {
@@ -71,6 +87,7 @@ pub fn run_scenario(scenario: &Scenario, settings: &RunSettings) -> Result<Scena
         wall: Summary::of(&wall_samples),
         comm,
         spike_state_bytes,
+        spike_lookups,
     })
 }
 
@@ -137,6 +154,10 @@ mod tests {
         assert_eq!(a.spike_state_bytes, b.spike_state_bytes);
         assert_eq!(a.spike_state_bytes % 12, 0);
         assert!(a.spike_state_bytes <= 16 * 12, "more state than remote neurons");
+        // Lookup counts are recorded and seed-deterministic too (one
+        // per remote in-edge per step; an active 2-rank net has some).
+        assert_eq!(a.spike_lookups, b.spike_lookups);
+        assert!(a.spike_lookups > 0, "active cross-rank net must look up spikes");
     }
 
     #[test]

@@ -22,8 +22,19 @@ use crate::octree::{
 use crate::plasticity::{run_deletion_phase, vacant, DeletionStats, InEdge, SynapseStore};
 use crate::runtime::{NeuronInputs, XlaHandle};
 use crate::snapshot::{CheckpointSink, RankSection, Snapshot};
-use crate::spikes::{deliver_input, FrequencyExchange, IdExchange};
+use crate::spikes::{DeliveryPlan, FrequencyExchange, IdExchange};
 use crate::util::Rng;
+
+/// Reusable per-plasticity-phase vacancy buffers for the octree update
+/// (EXPERIMENTS.md §Perf, opt 8 satellite): the C2 sub-phase used to
+/// allocate two fresh `Vec<f32>` of n elements every connectivity
+/// update. Pure scratch — fully rewritten each phase, never
+/// snapshotted, rebuilt empty on restore.
+#[derive(Default)]
+pub struct VacancyScratch {
+    pub exc: Vec<f32>,
+    pub inh: Vec<f32>,
+}
 
 /// All mutable state of one rank during a simulation.
 pub struct RankState {
@@ -32,6 +43,16 @@ pub struct RankState {
     pub tree: Octree,
     pub id_exchange: IdExchange,
     pub freq_exchange: FrequencyExchange,
+    /// Epoch-compiled CSR delivery plan (EXPERIMENTS.md §Perf, opt 8).
+    /// Derived state: recompiled whenever the store's in-edge
+    /// generation moves (after plasticity phases) and on restore —
+    /// never stored in the ILMISNAP format.
+    pub plan: DeliveryPlan,
+    /// Plan recompiles performed in this process segment (initial
+    /// compile included). Like the phase timers, this is per-segment
+    /// bookkeeping: it is not snapshotted, so a resumed run reports its
+    /// own segment's count rather than the straight run's total.
+    pub plan_rebuilds: u64,
     pub cache: RemoteNodeCache,
     pub rng_model: Rng,
     pub rng_conn: Rng,
@@ -44,6 +65,8 @@ pub struct RankState {
     /// two all-to-alls (EXPERIMENTS.md §Perf, opt 6). Pure scratch:
     /// never snapshotted, rebuilt empty on restore.
     pub bh_scratch: FormationScratch,
+    /// Reusable vacancy buffers for the octree update (pure scratch).
+    pub vac_scratch: VacancyScratch,
     /// Communication counters accumulated before this process segment
     /// (non-zero only for states restored from a snapshot): the run's
     /// communicator starts at zero, so the final report adds this
@@ -66,12 +89,14 @@ impl RankState {
         let pop = Population::init_in_cells(cfg, rank, &cells, &mut rng_model);
         let tree = Octree::build(decomp, rank, pop.first_id, &pop.positions);
         let n = pop.len();
-        RankState {
+        let mut state = RankState {
             pop,
             store: SynapseStore::new(n, cfg.neurons_per_rank as u64),
             tree,
             id_exchange: IdExchange::new(comm.size()),
             freq_exchange: FrequencyExchange::new(cfg.delta, rng_spikes),
+            plan: DeliveryPlan::default(),
+            plan_rebuilds: 0,
             cache: RemoteNodeCache::default(),
             rng_model,
             rng_conn,
@@ -81,15 +106,33 @@ impl RankState {
             spike_lookups: 0,
             calcium_trace: Vec::new(),
             bh_scratch: FormationScratch::default(),
+            vac_scratch: VacancyScratch::default(),
             baseline_comm: CounterSnapshot::default(),
-        }
+        };
+        state.rebuild_plan();
+        state
+    }
+
+    /// Recompile the delivery plan from the current store and re-align
+    /// the frequency exchange's slot thresholds with the new slot
+    /// table. Runs at init, on restore, and after any plasticity phase
+    /// whose deletions/formations touched the in-edge set.
+    fn rebuild_plan(&mut self) {
+        self.plan = DeliveryPlan::compile(&self.store, self.pop.first_id);
+        self.plan_rebuilds += 1;
+        self.freq_exchange.install_slots(&self.plan);
+        debug_assert_eq!(self.plan.check_against(&self.store), Ok(()));
     }
 
     /// Capture this rank's complete state as an encoded snapshot
     /// section (see `snapshot::format`). Read-only: capturing must not
     /// perturb the simulation, so a checkpointed run stays bit-identical
     /// to an unchekpointed one. The octree is not captured — `restore`
-    /// rebuilds it from the (immutable) positions.
+    /// rebuilds it from the (immutable) positions — and neither is the
+    /// delivery plan (recompiled from the stored edge lists). The
+    /// frequency entries are encoded straight from the exchange's
+    /// borrowing iterator: this runs inside the step loop, so the
+    /// writer path allocates no per-capture entry `Vec`.
     pub fn capture(&self, comm: &ThreadComm) -> Vec<u8> {
         RankSection {
             first_id: self.pop.first_id,
@@ -118,7 +161,7 @@ impl RankState {
             rng_model: self.rng_model.state(),
             rng_conn: self.rng_conn.state(),
             rng_spikes: self.freq_exchange.rng_state(),
-            freq_entries: self.freq_exchange.entries(),
+            freq_entries: Vec::new(), // encoded from the iterator below
             baseline_comm: self.baseline_comm.merge(&comm.counters().snapshot()),
             spike_lookups: self.spike_lookups,
             deletion: self.deletion,
@@ -129,7 +172,7 @@ impl RankState {
                 .map(|(step, cas)| (*step as u64, cas.clone()))
                 .collect(),
         }
-        .encode()
+        .encode_with_freqs(self.freq_exchange.entries_iter())
     }
 
     /// Rebuild a rank's state from a validated snapshot, bit-exactly:
@@ -199,12 +242,14 @@ impl RankState {
         let freq_exchange =
             FrequencyExchange::from_parts(cfg.delta, sec.freq_entries, sec.rng_spikes)
                 .map_err(|e| format!("rank {rank}: {e}"))?;
-        Ok(RankState {
+        let mut state = RankState {
             pop,
             store,
             tree,
             id_exchange: IdExchange::new(comm.size()),
             freq_exchange,
+            plan: DeliveryPlan::default(),
+            plan_rebuilds: 0,
             cache: RemoteNodeCache::default(),
             rng_model: Rng::from_state(sec.rng_model),
             rng_conn: Rng::from_state(sec.rng_conn),
@@ -218,34 +263,51 @@ impl RankState {
                 .map(|(step, cas)| (step as usize, cas))
                 .collect(),
             bh_scratch: FormationScratch::default(),
+            vac_scratch: VacancyScratch::default(),
             baseline_comm: sec.baseline_comm,
-        })
+        };
+        // The plan is derived state: never read from the snapshot,
+        // always recompiled from the restored store (and the slot
+        // thresholds re-derived from the restored frequency entries).
+        state.rebuild_plan();
+        Ok(state)
     }
 
     /// Phase A: spike transmission (previous step's spikes / last epoch's
-    /// frequencies) + input assembly.
+    /// frequencies) + input assembly. Delivery runs through the
+    /// epoch-compiled [`DeliveryPlan`] — branch-light sequential reads
+    /// with O(1) slot lookups instead of per-edge division + search
+    /// (EXPERIMENTS.md §Perf, opt 8; the naive loop survives as the
+    /// differential-test oracle in `spikes`).
     pub fn spike_phase(&mut self, cfg: &SimConfig, comm: &ThreadComm, step: usize) {
-        let npr = cfg.neurons_per_rank as u64;
+        debug_assert!(
+            self.plan.is_current(&self.store),
+            "delivery plan not rebuilt after an in-edge edit"
+        );
         match cfg.spike_alg {
             SpikeAlg::OldIds => {
                 let (pop, store, ex) = (&mut self.pop, &self.store, &mut self.id_exchange);
                 self.timers.time(Phase::SpikeExchange, || ex.exchange(comm, pop, store));
-                let ex = &self.id_exchange;
+                let (pop, plan, ex) = (&mut self.pop, &self.plan, &mut self.id_exchange);
                 self.spike_lookups += self.timers.time(Phase::SpikeLookup, || {
-                    deliver_input(&mut self.pop, &self.store, npr, comm.rank(), |r, id| {
-                        ex.spiked(r, id)
-                    })
+                    ex.scatter_slots(plan);
+                    plan.deliver(pop, |slot| ex.slot_fired(slot))
                 });
             }
             SpikeAlg::NewFrequency => {
                 let (pop, store, ex) = (&mut self.pop, &self.store, &mut self.freq_exchange);
-                self.timers
-                    .time(Phase::SpikeExchange, || ex.maybe_exchange(comm, pop, store, step));
-                let ex = &mut self.freq_exchange;
+                let plan = &self.plan;
+                self.timers.time(Phase::SpikeExchange, || {
+                    if ex.maybe_exchange(comm, pop, store, step) {
+                        // Fresh epoch table: re-align the slot-indexed
+                        // Bernoulli thresholds with the (unchanged)
+                        // slot interning.
+                        ex.install_slots(plan);
+                    }
+                });
+                let (pop, ex) = (&mut self.pop, &mut self.freq_exchange);
                 self.spike_lookups += self.timers.time(Phase::SpikeLookup, || {
-                    deliver_input(&mut self.pop, &self.store, npr, comm.rank(), |_, id| {
-                        ex.spiked(id)
-                    })
+                    plan.deliver(pop, |slot| ex.spiked_slot(slot))
                 });
             }
         }
@@ -332,16 +394,22 @@ impl RankState {
         self.freq_exchange.prune_stale(&self.store);
 
         // C2: octree vacancy update + branch exchange (+ window publish
-        // for the old algorithm's RMA path).
+        // for the old algorithm's RMA path). The vacancy buffers are
+        // driver-held scratch, fully rewritten here each phase instead
+        // of two fresh n-element allocations per connectivity update
+        // (EXPERIMENTS.md §Perf, opt 8 satellite).
         let t0 = Instant::now();
         let n = self.pop.len();
-        let vac_exc: Vec<f32> = (0..n)
-            .map(|i| vacant(self.pop.z_den_exc[i], self.store.connected_den_exc[i]) as f32)
-            .collect();
-        let vac_inh: Vec<f32> = (0..n)
-            .map(|i| vacant(self.pop.z_den_inh[i], self.store.connected_den_inh[i]) as f32)
-            .collect();
-        self.tree.reset_and_set_leaves(self.pop.first_id, &vac_exc, &vac_inh);
+        let vac = &mut self.vac_scratch;
+        vac.exc.clear();
+        vac.exc.extend(
+            (0..n).map(|i| vacant(self.pop.z_den_exc[i], self.store.connected_den_exc[i]) as f32),
+        );
+        vac.inh.clear();
+        vac.inh.extend(
+            (0..n).map(|i| vacant(self.pop.z_den_inh[i], self.store.connected_den_inh[i]) as f32),
+        );
+        self.tree.reset_and_set_leaves(self.pop.first_id, &vac.exc, &vac.inh);
         self.tree.aggregate_local();
 
         let own_cells = decomp.cells_of_rank(comm.rank());
@@ -393,6 +461,15 @@ impl RankState {
         self.timers.add(Phase::BarnesHut, Duration::from_nanos(fstats.compute_nanos));
         self.timers.add(Phase::SynapseExchange, Duration::from_nanos(fstats.exchange_nanos));
         self.formation = self.formation.merge(&fstats);
+
+        // C4: recompile the delivery plan iff this phase's deletions or
+        // formations edited the in-edge set (the store's edit sites
+        // marked it dirty via the in-edge generation). The recompile
+        // also re-aligns the frequency exchange's slot thresholds with
+        // the new slot table, covering any entries C1.5 pruned.
+        if !self.plan.is_current(&self.store) {
+            self.rebuild_plan();
+        }
     }
 
     /// One full simulation step.
@@ -427,6 +504,7 @@ impl RankState {
             deletion: self.deletion,
             spike_lookups: self.spike_lookups,
             spike_state_bytes: self.freq_exchange.state_bytes(),
+            plan_rebuilds: self.plan_rebuilds,
             synapses_out: self.store.total_out(),
             synapses_in: self.store.total_in(),
             mean_calcium: self.pop.mean_calcium(),
@@ -638,6 +716,83 @@ mod tests {
             assert_eq!(ra.synapses_out, rb.synapses_out);
             assert_eq!(ra.mean_calcium, rb.mean_calcium);
             assert_eq!(ra.comm.bytes_sent, rb.comm.bytes_sent);
+        }
+    }
+
+    #[test]
+    fn plan_rebuilds_are_counted_and_deterministic() {
+        let cfg = smoke_cfg();
+        let a = run_simulation(&cfg).unwrap();
+        let b = run_simulation(&cfg).unwrap();
+        let phases = (cfg.steps / cfg.plasticity_interval) as u64;
+        for (ra, rb) in a.ranks.iter().zip(&b.ranks) {
+            assert!(ra.plan_rebuilds >= 1, "the initial compile is counted");
+            assert_eq!(ra.plan_rebuilds, rb.plan_rebuilds, "rebuild count is deterministic");
+            assert!(
+                ra.plan_rebuilds <= 1 + phases,
+                "at most one recompile per plasticity phase (got {})",
+                ra.plan_rebuilds
+            );
+        }
+        // An active smoke network forms synapses, so some phase must
+        // have dirtied and recompiled the plan somewhere.
+        assert!(a.total_plan_rebuilds() > a.ranks.len() as u64);
+    }
+
+    #[test]
+    fn plan_stays_cross_validated_with_store_through_a_run() {
+        // Drive RankStates manually through the full smoke schedule and
+        // cross-validate plan against store at the end — for both spike
+        // algorithms (the invariant the driver's debug assertions check
+        // at every rebuild, verified here in release builds too).
+        for (conn, spikes) in [
+            (ConnectivityAlg::NewLocationAware, SpikeAlg::NewFrequency),
+            (ConnectivityAlg::OldRma, SpikeAlg::OldIds),
+        ] {
+            let mut cfg = smoke_cfg();
+            cfg.connectivity_alg = conn;
+            cfg.spike_alg = spikes;
+            let decomp = DomainDecomposition::new(cfg.ranks, cfg.domain_size);
+            let results = run_ranks(cfg.ranks, |comm| {
+                let mut state = RankState::init(&cfg, &decomp, &comm);
+                for step in 0..cfg.steps {
+                    state.step(&cfg, &decomp, &comm, step, None).unwrap();
+                }
+                state.plan.check_against(&state.store).map_err(|e| format!("{spikes:?}: {e}"))
+            });
+            for r in results {
+                r.unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn poisoned_scratch_cannot_leak_into_results() {
+        // The opt-8 scratch-reuse accounting contract: the vacancy
+        // buffers are fully rewritten every plasticity phase, so
+        // pre-poisoning them with garbage of the wrong length must
+        // change nothing — synapses, calcium bits, wire accounting and
+        // lookup counts all match a clean run.
+        let cfg = smoke_cfg();
+        let clean = run_simulation(&cfg).unwrap();
+        let decomp = DomainDecomposition::new(cfg.ranks, cfg.domain_size);
+        let poisoned = run_ranks(cfg.ranks, |comm| {
+            let mut state = RankState::init(&cfg, &decomp, &comm);
+            state.vac_scratch.exc = vec![1e30; 1000];
+            state.vac_scratch.inh = vec![-7.5; 3];
+            for step in 0..cfg.steps {
+                state.step(&cfg, &decomp, &comm, step, None).unwrap();
+            }
+            state.into_report(&comm)
+        });
+        for (c, p) in clean.ranks.iter().zip(&poisoned) {
+            assert_eq!(c.synapses_out, p.synapses_out);
+            assert_eq!(c.synapses_in, p.synapses_in);
+            assert_eq!(c.mean_calcium.to_bits(), p.mean_calcium.to_bits());
+            assert_eq!(c.comm.bytes_sent, p.comm.bytes_sent);
+            assert_eq!(c.comm.collectives, p.comm.collectives);
+            assert_eq!(c.spike_lookups, p.spike_lookups);
+            assert_eq!(c.plan_rebuilds, p.plan_rebuilds);
         }
     }
 

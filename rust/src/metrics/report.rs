@@ -23,6 +23,12 @@ pub struct RankReport {
     /// under the old. O(local remote partners), never the former
     /// 4·total_neurons dense table (EXPERIMENTS.md §Perf, opt 7).
     pub spike_state_bytes: u64,
+    /// Delivery-plan recompiles in this process segment (initial
+    /// compile included): one per plasticity phase that edited the
+    /// in-edge set. Per-segment bookkeeping like `phase_seconds` — a
+    /// resumed run reports its own segment's count
+    /// (EXPERIMENTS.md §Perf, opt 8).
+    pub plan_rebuilds: u64,
     pub synapses_out: usize,
     pub synapses_in: usize,
     pub mean_calcium: f64,
@@ -81,6 +87,12 @@ impl SimReport {
         self.ranks.iter().map(|r| r.spike_lookups).sum()
     }
 
+    /// Delivery-plan recompiles summed over ranks (this process
+    /// segment; see `RankReport::plan_rebuilds`).
+    pub fn total_plan_rebuilds(&self) -> u64 {
+        self.ranks.iter().map(|r| r.plan_rebuilds).sum()
+    }
+
     /// Largest per-rank spike-exchange state (the worst rank is the
     /// memory bound that matters when scaling; what `bench` records as
     /// `spike_state_bytes`).
@@ -120,10 +132,12 @@ impl SimReport {
             "wall_clock", self.wall_seconds
         ));
         out.push_str(&format!(
-            "bytes sent {} | rma {} | spike state {}/rank | synapses {} | mean Ca {:.3}\n",
+            "bytes sent {} | rma {} | spike state {}/rank | plan rebuilds {} | \
+             synapses {} | mean Ca {:.3}\n",
             format_bytes(self.total_bytes_sent()),
             format_bytes(self.total_bytes_rma()),
             format_bytes(self.max_spike_state_bytes()),
+            self.total_plan_rebuilds(),
             self.total_synapses(),
             self.mean_calcium(),
         ));
@@ -185,6 +199,15 @@ mod tests {
         let sim = SimReport { ranks: vec![a, b], wall_seconds: 0.0 };
         assert_eq!(sim.max_spike_state_bytes(), 120);
         assert_eq!(SimReport::default().max_spike_state_bytes(), 0);
+    }
+
+    #[test]
+    fn plan_rebuilds_aggregate_as_sum() {
+        let a = RankReport { plan_rebuilds: 3, ..Default::default() };
+        let b = RankReport { plan_rebuilds: 4, ..Default::default() };
+        let sim = SimReport { ranks: vec![a, b], wall_seconds: 0.0 };
+        assert_eq!(sim.total_plan_rebuilds(), 7);
+        assert!(sim.phase_table().contains("plan rebuilds 7"));
     }
 
     #[test]

@@ -227,6 +227,44 @@ mod tests {
     }
 
     #[test]
+    fn deletion_phase_dirties_the_delivery_plan() {
+        // The deletion protocol edits in-edges only through the store's
+        // edit sites (remove_random_in locally, remove_specific_in via
+        // notification), so a phase that breaks a synapse must bump the
+        // in-edge generation and mark any compiled DeliveryPlan stale —
+        // the signal the driver's C4 recompile keys off.
+        use crate::spikes::DeliveryPlan;
+        let results = run_ranks(2, |comm| {
+            let mut pop = make_pop(comm.rank(), 1);
+            let mut store = SynapseStore::new(1, 1);
+            if comm.rank() == 0 {
+                store.add_out(0, 1);
+                pop.z_ax[0] = 0.0; // force axonal retraction
+                pop.z_den_exc[0] = 5.0;
+                pop.z_den_inh[0] = 5.0;
+            } else {
+                store.add_in(0, 0, true);
+                pop.z_ax[0] = 5.0;
+                pop.z_den_exc[0] = 5.0;
+                pop.z_den_inh[0] = 5.0;
+            }
+            let plan = DeliveryPlan::compile(&store, comm.rank() as u64);
+            assert!(plan.is_current(&store));
+            let mut rng = Rng::new(comm.rank() as u64);
+            run_deletion_phase(&comm, &pop, &mut store, &mut rng, |id| id as usize);
+            (plan.is_current(&store), store)
+        });
+        // Rank 1 lost its in-edge via the cross-rank notification: its
+        // plan must be stale. Rank 0 only lost an out-edge: its
+        // (dendritic-side) plan stays current.
+        assert!(results[0].0, "axonal-only edit must not dirty the plan");
+        assert!(!results[1].0, "in-edge deletion must dirty the plan");
+        let fresh = DeliveryPlan::compile(&results[1].1, 1);
+        assert_eq!(fresh.slot_count(), 0, "no remote partners survive");
+        fresh.check_against(&results[1].1).unwrap();
+    }
+
+    #[test]
     fn no_retraction_when_elements_sufficient() {
         let results = run_ranks(1, |comm| {
             let mut pop = make_pop(0, 2);

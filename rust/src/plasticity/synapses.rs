@@ -59,6 +59,13 @@ pub struct SynapseStore {
     /// partner set that scales with the network, and first/last-edge
     /// edits must stay O(log sources), not O(sources) memmoves.
     in_partner_refs: BTreeMap<GlobalNeuronId, u32>,
+    /// Generation counter bumped at every in-edge edit site (add or
+    /// delete). The `spikes::DeliveryPlan` records the value it was
+    /// compiled at; a mismatch marks the plan dirty, which is how the
+    /// driver knows a plasticity phase requires a recompile without
+    /// rescanning the edge lists (EXPERIMENTS.md §Perf, opt 8).
+    /// Out-edge edits do not bump it — the plan is dendritic-side only.
+    in_edits: u64,
 }
 
 /// Increment `key`'s count in a sorted `(key, count)` list, inserting at
@@ -109,6 +116,7 @@ impl SynapseStore {
             neurons_per_rank,
             out_ranks: vec![Vec::new(); n],
             in_partner_refs: BTreeMap::new(),
+            in_edits: 0,
         }
     }
 
@@ -157,6 +165,7 @@ impl SynapseStore {
             neurons_per_rank,
             out_ranks,
             in_partner_refs,
+            in_edits: 0,
         }
     }
 
@@ -183,6 +192,20 @@ impl SynapseStore {
         self.in_partner_refs.len()
     }
 
+    /// Every (source id, in-edge count) pair with at least one in-edge
+    /// here, in ascending id order — the `DeliveryPlan` compiler interns
+    /// its remote-source slots from this.
+    pub fn in_partners(&self) -> impl Iterator<Item = (GlobalNeuronId, u32)> + '_ {
+        self.in_partner_refs.iter().map(|(&id, &count)| (id, count))
+    }
+
+    /// In-edge edit generation: bumped by every in-edge add or delete.
+    /// Derived consumers (the `spikes::DeliveryPlan`) compare against
+    /// the value they were built at to detect staleness in O(1).
+    pub fn in_edits(&self) -> u64 {
+        self.in_edits
+    }
+
     /// Record the axonal side of a new synapse on local `src`.
     pub fn add_out(&mut self, src_local: usize, target: GlobalNeuronId) {
         self.out_edges[src_local].push(target);
@@ -199,6 +222,7 @@ impl SynapseStore {
             self.connected_den_inh[tgt_local] += 1;
         }
         *self.in_partner_refs.entry(source).or_insert(0) += 1;
+        self.in_edits += 1;
     }
 
     /// Remove a uniformly-random outgoing synapse of local `src`
@@ -242,6 +266,7 @@ impl SynapseStore {
             self.connected_den_inh[tgt_local] -= 1;
         }
         unbump_map(&mut self.in_partner_refs, e.source);
+        self.in_edits += 1;
         Some(e.source)
     }
 
@@ -271,6 +296,7 @@ impl SynapseStore {
                 self.connected_den_inh[tgt_local] -= 1;
             }
             unbump_map(&mut self.in_partner_refs, source);
+            self.in_edits += 1;
             true
         } else {
             false
@@ -428,6 +454,42 @@ mod tests {
         assert_eq!(s.in_partner_count(7), 0, "last deletion drops the partner");
         assert_eq!(s.in_partner_sources(), 1);
         s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn in_edit_generation_tracks_dendritic_edits_only() {
+        let mut s = SynapseStore::new(2, 2);
+        let mut rng = Rng::new(4);
+        assert_eq!(s.in_edits(), 0);
+        // Out-edge edits never bump: the delivery plan is in-side only.
+        s.add_out(0, 3);
+        assert!(s.remove_specific_out(0, 3));
+        s.remove_random_out(0, &mut rng);
+        assert_eq!(s.in_edits(), 0);
+        // Every in-edge edit bumps exactly once.
+        s.add_in(0, 3, true);
+        assert_eq!(s.in_edits(), 1);
+        s.add_in(1, 3, false);
+        assert_eq!(s.in_edits(), 2);
+        assert!(s.remove_specific_in(0, 3));
+        assert_eq!(s.in_edits(), 3);
+        // A no-op removal is not an edit.
+        assert!(!s.remove_specific_in(0, 3));
+        assert_eq!(s.in_edits(), 3);
+        assert!(s.remove_random_in(1, ElementKind::Inhibitory, &mut rng).is_some());
+        assert_eq!(s.in_edits(), 4);
+        assert!(s.remove_random_in(1, ElementKind::Inhibitory, &mut rng).is_none());
+        assert_eq!(s.in_edits(), 4);
+    }
+
+    #[test]
+    fn in_partners_iterates_ascending_with_counts() {
+        let mut s = SynapseStore::new(2, 2);
+        s.add_in(0, 7, true);
+        s.add_in(1, 7, false);
+        s.add_in(0, 4, true);
+        let got: Vec<(u64, u32)> = s.in_partners().collect();
+        assert_eq!(got, vec![(4, 1), (7, 2)]);
     }
 
     #[test]

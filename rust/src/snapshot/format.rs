@@ -415,9 +415,22 @@ impl RankSection {
     /// Encode in the current (v2) layout: the frequency state is the
     /// sparse entry list, `u32 count + count × (u64 id, f32 freq)`.
     pub fn encode(&self) -> Vec<u8> {
+        self.encode_with_freqs(self.freq_entries.iter().copied())
+    }
+
+    /// `encode`, with the frequency entries streamed from `freqs`
+    /// instead of `self.freq_entries`. This is the checkpoint writer
+    /// path: `RankState::capture` runs inside the step loop and feeds
+    /// the `FrequencyExchange`'s borrowing iterator here, so no
+    /// per-capture entry `Vec` is allocated. The entries must be
+    /// strictly ascending by id (the decoder re-validates).
+    pub fn encode_with_freqs(
+        &self,
+        freqs: impl ExactSizeIterator<Item = (u64, f32)>,
+    ) -> Vec<u8> {
         let mut out = self.encode_prefix();
-        put_u32(&mut out, self.freq_entries.len() as u32);
-        for &(id, f) in &self.freq_entries {
+        put_u32(&mut out, freqs.len() as u32);
+        for (id, f) in freqs {
             put_u64(&mut out, id);
             put_f32(&mut out, f);
         }
@@ -743,6 +756,20 @@ mod tests {
         assert_eq!(back.deletion, sec.deletion);
         assert_eq!(back.formation, sec.formation);
         assert_eq!(back.calcium_trace, sec.calcium_trace);
+    }
+
+    #[test]
+    fn streamed_freq_encoding_is_byte_identical_to_owned() {
+        // The writer path (borrowing iterator) and the owned-Vec path
+        // must produce the same bytes — the capture refactor changes
+        // allocation, never the format.
+        let sec = sample_section(9, 21);
+        let streamed = {
+            let mut empty = sec.clone();
+            let entries = std::mem::take(&mut empty.freq_entries);
+            empty.encode_with_freqs(entries.iter().copied())
+        };
+        assert_eq!(streamed, sec.encode());
     }
 
     #[test]

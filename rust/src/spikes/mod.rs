@@ -18,14 +18,23 @@
 //! instead of the former O(total neurons) dense table — and entries die
 //! with the epoch or the edge, which is what fixes the stale-frequency
 //! reconstruction bug (EXPERIMENTS.md §Perf, opt 7).
+//!
+//! Per-step delivery itself runs through the epoch-compiled
+//! [`DeliveryPlan`] (`plan` module): a CSR flattening of the in-edge
+//! lists with slot-interned remote sources, so the hot loop does no
+//! division and no per-edge search (EXPERIMENTS.md §Perf, opt 8).
 
 pub mod new;
 pub mod old;
+pub mod plan;
 
 pub use new::FrequencyExchange;
 pub use old::IdExchange;
+pub use plan::{DeliveryPlan, PlannedEdge};
 
+#[cfg(test)]
 use crate::neuron::Population;
+#[cfg(test)]
 use crate::plasticity::SynapseStore;
 
 /// Sparse frequency table keyed by remote sender id, sorted for
@@ -47,6 +56,12 @@ pub struct PartnerFreqs {
     ids: Vec<u64>,
     /// `freqs[i]` is the epoch frequency of `ids[i]`.
     freqs: Vec<f32>,
+    /// `thrs[i]` is `freqs[i] as f64` — the Bernoulli threshold the
+    /// reconstruction draw compares `next_f64()` against. Precomputed
+    /// once per install/prune instead of converting on every draw
+    /// (EXPERIMENTS.md §Perf, opt 8); the widening is exact, so draws
+    /// are bit-identical to converting inline.
+    thrs: Vec<f64>,
 }
 
 impl PartnerFreqs {
@@ -73,6 +88,17 @@ impl PartnerFreqs {
         }
     }
 
+    /// Last installed Bernoulli threshold (`frequency as f64`) of
+    /// sender `id`; 0.0 when absent. The draw-site lookup: precomputed
+    /// at install time, never converted per draw.
+    #[inline]
+    pub fn get_thr(&self, id: u64) -> f64 {
+        match self.ids.binary_search(&id) {
+            Ok(i) => self.thrs[i],
+            Err(_) => 0.0,
+        }
+    }
+
     /// Replace the whole table with this epoch's reports. The records
     /// must arrive in strictly ascending id order — which concatenating
     /// the all-to-all batches in source-rank order guarantees: per-rank
@@ -81,6 +107,7 @@ impl PartnerFreqs {
     pub fn install_epoch(&mut self, records: impl Iterator<Item = (u64, f32)>) {
         self.ids.clear();
         self.freqs.clear();
+        self.thrs.clear();
         for (id, f) in records {
             debug_assert!(
                 !self.ids.last().is_some_and(|&last| last >= id),
@@ -88,6 +115,7 @@ impl PartnerFreqs {
             );
             self.ids.push(id);
             self.freqs.push(f);
+            self.thrs.push(f as f64);
         }
     }
 
@@ -98,17 +126,47 @@ impl PartnerFreqs {
             if keep(self.ids[r]) {
                 self.ids[w] = self.ids[r];
                 self.freqs[w] = self.freqs[r];
+                self.thrs[w] = self.thrs[r];
                 w += 1;
             }
         }
         self.ids.truncate(w);
         self.freqs.truncate(w);
+        self.thrs.truncate(w);
     }
 
-    /// The installed (id, frequency) pairs in ascending id order
-    /// (snapshot capture).
+    /// Borrowing iterator over the installed (id, frequency) pairs in
+    /// ascending id order — the snapshot writer path encodes straight
+    /// from this instead of allocating a fresh `Vec` on every capture
+    /// inside the step loop.
+    pub fn entries_iter(&self) -> impl ExactSizeIterator<Item = (u64, f32)> + '_ {
+        self.ids.iter().copied().zip(self.freqs.iter().copied())
+    }
+
+    /// The installed (id, frequency) pairs in ascending id order, as an
+    /// owned `Vec` (tests / restore round-trips; the snapshot writer
+    /// uses the borrowing [`PartnerFreqs::entries_iter`] instead).
     pub fn entries(&self) -> Vec<(u64, f32)> {
-        self.ids.iter().copied().zip(self.freqs.iter().copied()).collect()
+        self.entries_iter().collect()
+    }
+
+    /// Scatter this table's Bernoulli thresholds into a slot-aligned
+    /// array: `out[slot]` becomes the threshold of `slot_ids[slot]`, or
+    /// 0.0 when that sender has no installed entry. `slot_ids` must be
+    /// ascending (the `DeliveryPlan` slot-table invariant), so one
+    /// merge walk fills every slot — O(slots + entries).
+    pub fn fill_slot_thrs(&self, slot_ids: &[u64], out: &mut Vec<f64>) {
+        out.clear();
+        out.resize(slot_ids.len(), 0.0);
+        let mut e = 0;
+        for (slot, &id) in slot_ids.iter().enumerate() {
+            while e < self.ids.len() && self.ids[e] < id {
+                e += 1;
+            }
+            if e < self.ids.len() && self.ids[e] == id {
+                out[slot] = self.thrs[e];
+            }
+        }
     }
 
     /// Validate the strictly-ascending-id invariant every producer of
@@ -131,8 +189,9 @@ impl PartnerFreqs {
     /// ids via [`PartnerFreqs::check_ascending`].
     pub fn from_entries(entries: Vec<(u64, f32)>) -> Result<PartnerFreqs, String> {
         Self::check_ascending(&entries)?;
+        let thrs = entries.iter().map(|&(_, f)| f as f64).collect();
         let (ids, freqs) = entries.into_iter().unzip();
-        Ok(PartnerFreqs { ids, freqs })
+        Ok(PartnerFreqs { ids, freqs, thrs })
     }
 
     /// Logical size of the exchange state: one 12 B (u64 id, f32
@@ -160,6 +219,14 @@ pub fn spike_weight(source_exc: bool) -> f32 {
 /// read the fired flag; remote ones are resolved by `remote_spiked`
 /// (binary search for `old`, PRNG draw for `new`). Returns the number of
 /// remote look-ups performed (paper Fig. 5 measures exactly these).
+///
+/// This is the **naive oracle**: the driver delivers through the
+/// epoch-compiled [`DeliveryPlan`] instead (EXPERIMENTS.md §Perf,
+/// opt 8), and this loop survives only as the reference the plan's
+/// differential tests compare against — per edge per step it pays the
+/// u64 division, the `Vec<Vec<InEdge>>` pointer chase, and the
+/// per-edge search the plan compiles away.
+#[cfg(test)]
 pub fn deliver_input(
     pop: &mut Population,
     store: &SynapseStore,
@@ -266,6 +333,54 @@ mod tests {
         assert_eq!(pf.entries(), vec![(1, 0.1), (7, 0.7)]);
         assert_eq!(pf.get(4), 0.0);
         assert_eq!(pf.get(7), 0.7);
+    }
+
+    #[test]
+    fn thresholds_are_precomputed_and_track_installs_and_prunes() {
+        let mut pf = PartnerFreqs::new();
+        assert_eq!(pf.get_thr(3), 0.0);
+        pf.install_epoch([(3u64, 0.25f32), (6, 0.0), (9, 0.75)].into_iter());
+        // The threshold is exactly the widened frequency — same bits
+        // the draw site used to compute inline.
+        assert_eq!(pf.get_thr(3).to_bits(), (0.25f32 as f64).to_bits());
+        assert_eq!(pf.get_thr(6), 0.0);
+        assert_eq!(pf.get_thr(9).to_bits(), (0.75f32 as f64).to_bits());
+        assert_eq!(pf.get_thr(4), 0.0, "missing entries read 0.0");
+        pf.retain(|id| id != 3);
+        assert_eq!(pf.get_thr(3), 0.0);
+        assert_eq!(pf.get_thr(9).to_bits(), (0.75f32 as f64).to_bits());
+        let back = PartnerFreqs::from_entries(pf.entries()).unwrap();
+        assert_eq!(back.get_thr(9).to_bits(), pf.get_thr(9).to_bits());
+    }
+
+    #[test]
+    fn borrowing_iter_matches_entries() {
+        let mut pf = PartnerFreqs::new();
+        pf.install_epoch([(2u64, 0.5f32), (7, 0.125)].into_iter());
+        let it: Vec<(u64, f32)> = pf.entries_iter().collect();
+        assert_eq!(it, pf.entries());
+        assert_eq!(
+            pf.entries_iter().len(),
+            2,
+            "ExactSizeIterator for the writer's count prefix"
+        );
+    }
+
+    #[test]
+    fn fill_slot_thrs_is_slot_aligned_with_zero_for_missing() {
+        let mut pf = PartnerFreqs::new();
+        pf.install_epoch([(2u64, 0.5f32), (9, 0.25)].into_iter());
+        let mut out = vec![9.9; 1]; // stale scratch must be overwritten
+        pf.fill_slot_thrs(&[1, 2, 5, 9, 12], &mut out);
+        assert_eq!(out.len(), 5);
+        assert_eq!(out[0], 0.0);
+        assert_eq!(out[1].to_bits(), (0.5f32 as f64).to_bits());
+        assert_eq!(out[2], 0.0);
+        assert_eq!(out[3].to_bits(), (0.25f32 as f64).to_bits());
+        assert_eq!(out[4], 0.0);
+        // An empty slot table clears the scratch.
+        pf.fill_slot_thrs(&[], &mut out);
+        assert!(out.is_empty());
     }
 
     #[test]

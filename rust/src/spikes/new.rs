@@ -56,11 +56,25 @@ pub struct FrequencyExchange {
     /// instead of rebuilding a `Vec<Vec<_>>` per exchange
     /// (EXPERIMENTS.md §Perf, opt 6).
     sends: Vec<Vec<FreqRecord>>,
+    /// Slot-aligned Bernoulli thresholds: `slot_thrs[slot]` is the
+    /// threshold of the sender the `DeliveryPlan` interned at `slot`
+    /// (0.0 when that sender has no installed entry). Refilled by
+    /// [`FrequencyExchange::install_slots`] whenever the table or the
+    /// plan changes, so the per-edge draw site is one indexed load —
+    /// no binary search, no per-draw `f as f64` (EXPERIMENTS.md §Perf,
+    /// opt 8). Derived cache: never snapshotted.
+    slot_thrs: Vec<f64>,
 }
 
 impl FrequencyExchange {
     pub fn new(delta: usize, rng: Rng) -> Self {
-        FrequencyExchange { delta, freqs: PartnerFreqs::new(), rng, sends: Vec::new() }
+        FrequencyExchange {
+            delta,
+            freqs: PartnerFreqs::new(),
+            rng,
+            sends: Vec::new(),
+            slot_thrs: Vec::new(),
+        }
     }
 
     /// Run at epoch boundaries (`step % delta == 0`, excluding the
@@ -128,11 +142,33 @@ impl FrequencyExchange {
 
     /// Reconstruct: did remote neuron `id` spike this step? One PRNG
     /// draw against its last known frequency (paper Fig. 5, "PRNG");
-    /// an absent entry is frequency 0.0 and never draws.
+    /// an absent entry is frequency 0.0 and never draws. The threshold
+    /// is precomputed at install time (`f as f64` is exact, so draws
+    /// are bit-identical to the former inline conversion). Id-keyed
+    /// oracle path — the driver draws through [`Self::spiked_slot`].
     #[inline]
     pub fn spiked(&mut self, id: u64) -> bool {
-        let f = self.freqs.get(id);
-        f > 0.0 && self.rng.bernoulli(f as f64)
+        let t = self.freqs.get_thr(id);
+        t > 0.0 && self.rng.bernoulli(t)
+    }
+
+    /// Reconstruct by plan slot: the O(1) draw site behind
+    /// `DeliveryPlan::deliver` — one indexed load instead of the
+    /// oracle's binary search, same PRNG stream (a zero threshold
+    /// never draws, exactly like a zero or missing frequency).
+    #[inline]
+    pub fn spiked_slot(&mut self, slot: usize) -> bool {
+        let t = self.slot_thrs[slot];
+        t > 0.0 && self.rng.bernoulli(t)
+    }
+
+    /// Refill the slot-aligned threshold array from the installed
+    /// frequency table for `plan`'s slot interning. The driver calls
+    /// this after every epoch install, plan recompile, and snapshot
+    /// restore — the three points where table and slots can diverge.
+    pub fn install_slots(&mut self, plan: &super::DeliveryPlan) {
+        let slot_thrs = &mut self.slot_thrs;
+        self.freqs.fill_slot_thrs(plan.remote_ids(), slot_thrs);
     }
 
     /// Last received frequency of a neuron (tests/inspection); 0.0 when
@@ -146,9 +182,13 @@ impl FrequencyExchange {
         self.freqs.len()
     }
 
-    /// Bytes of reconstruction state currently held: 12 B per installed
-    /// partner — the per-rank memory the bench harness reports as
-    /// `spike_state_bytes` (O(local partners), not O(total neurons)).
+    /// *Logical* size of the reconstruction state: 12 B per installed
+    /// (u64 id, f32 frequency) record — the per-rank quantity the bench
+    /// harness reports as `spike_state_bytes` (O(local partners), not
+    /// O(total neurons)). Derived caches (the precomputed f64
+    /// thresholds and the slot-aligned array) are deliberately
+    /// excluded: they are rebuildable acceleration state, and the
+    /// counter's meaning is pinned by baseline drift checks.
     pub fn state_bytes(&self) -> u64 {
         self.freqs.state_bytes()
     }
@@ -161,6 +201,14 @@ impl FrequencyExchange {
     /// a restored rank must get these back bit-exactly.
     pub fn entries(&self) -> Vec<(u64, f32)> {
         self.freqs.entries()
+    }
+
+    /// Borrowing variant of [`Self::entries`] for the snapshot writer
+    /// path: the capture that runs inside the step loop encodes the
+    /// entries straight from this iterator instead of allocating a
+    /// fresh `Vec` per checkpoint.
+    pub fn entries_iter(&self) -> impl ExactSizeIterator<Item = (u64, f32)> + '_ {
+        self.freqs.entries_iter()
     }
 
     /// Reconstruction-PRNG state, for snapshotting.
@@ -180,6 +228,7 @@ impl FrequencyExchange {
             freqs: PartnerFreqs::from_entries(entries)?,
             rng: Rng::from_state(rng),
             sends: Vec::new(),
+            slot_thrs: Vec::new(),
         })
     }
 }
@@ -267,6 +316,41 @@ mod tests {
         let hits = (0..n).filter(|_| ex.spiked(2)).count();
         let rate = hits as f64 / n as f64;
         assert!((rate - 0.3).abs() < 0.01, "rate {rate}");
+    }
+
+    #[test]
+    fn slot_draws_match_id_draws_bit_exactly() {
+        // Same entries, same PRNG state: drawing through the plan slots
+        // must produce the identical spike sequence AND leave the PRNG
+        // at the identical stream position as the id-keyed oracle —
+        // including never drawing for zero-frequency/missing slots.
+        let mut store = SynapseStore::new(2, 2);
+        store.add_in(0, 3, true); // rank 1
+        store.add_in(1, 4, true); // rank 2
+        store.add_in(0, 6, false); // rank 3, no installed entry
+        let plan = crate::spikes::DeliveryPlan::compile(&store, 0);
+        let entries = vec![(3u64, 0.6f32), (4, 0.0)];
+        let st = Rng::new(13).state();
+        let mut by_id = FrequencyExchange::from_parts(10, entries.clone(), st).unwrap();
+        let mut by_slot = FrequencyExchange::from_parts(10, entries, st).unwrap();
+        by_slot.install_slots(&plan);
+        assert_eq!(plan.remote_ids(), &[3, 4, 6]);
+        for _ in 0..500 {
+            for (slot, &id) in plan.remote_ids().iter().enumerate() {
+                assert_eq!(by_id.spiked(id), by_slot.spiked_slot(slot));
+            }
+        }
+        assert_eq!(by_id.rng_state(), by_slot.rng_state(), "stream positions");
+    }
+
+    #[test]
+    fn entries_iter_borrows_what_entries_allocates() {
+        let ex =
+            FrequencyExchange::from_parts(10, vec![(2, 0.5), (8, 0.25)], Rng::new(1).state())
+                .unwrap();
+        let borrowed: Vec<(u64, f32)> = ex.entries_iter().collect();
+        assert_eq!(borrowed, ex.entries());
+        assert_eq!(ex.entries_iter().len(), 2);
     }
 
     #[test]

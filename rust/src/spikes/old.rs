@@ -6,6 +6,8 @@ use crate::comm::{exchange_ref, ThreadComm};
 use crate::neuron::Population;
 use crate::plasticity::SynapseStore;
 
+use super::DeliveryPlan;
+
 /// State of the old algorithm on one rank: the sorted id lists received
 /// this step, indexed by source rank.
 pub struct IdExchange {
@@ -14,11 +16,22 @@ pub struct IdExchange {
     /// runs every step, so rebuilding the `Vec<Vec<_>>` here was
     /// measurable allocation churn (EXPERIMENTS.md §Perf, opt 6).
     sends: Vec<Vec<u64>>,
+    /// Per-step slot bitmap: `slot_bits[slot]` is true iff the sender
+    /// the `DeliveryPlan` interned at `slot` fired this step. Scattered
+    /// once per step from the received id lists — O(|fired| · log P) —
+    /// so per-edge delivery is one indexed load instead of a binary
+    /// search over the received lists, O(edges · log |fired|)
+    /// (EXPERIMENTS.md §Perf, opt 8). Reused scratch, never snapshotted.
+    slot_bits: Vec<bool>,
 }
 
 impl IdExchange {
     pub fn new(size: usize) -> Self {
-        IdExchange { sorted: vec![Vec::new(); size], sends: vec![Vec::new(); size] }
+        IdExchange {
+            sorted: vec![Vec::new(); size],
+            sends: vec![Vec::new(); size],
+            slot_bits: Vec::new(),
+        }
     }
 
     /// One step: send the ids of local neurons that fired to every rank
@@ -51,9 +64,35 @@ impl IdExchange {
 
     /// Did remote neuron `id` (on `src_rank`) fire this step?
     /// Binary search over the received list (paper Fig. 5, "search").
+    /// Oracle path — the driver reads [`Self::slot_fired`] instead.
     #[inline]
     pub fn spiked(&self, src_rank: usize, id: u64) -> bool {
         self.sorted[src_rank].binary_search(&id).is_ok()
+    }
+
+    /// Scatter this step's received fired ids into the plan's slot
+    /// bitmap: each id is located once (binary search over the interned
+    /// slot table), instead of every in-edge searching the received
+    /// lists. Ids without a slot are senders this rank holds no in-edge
+    /// from — the oracle's per-edge search could never match them
+    /// either, so they are skipped.
+    pub fn scatter_slots(&mut self, plan: &DeliveryPlan) {
+        self.slot_bits.clear();
+        self.slot_bits.resize(plan.slot_count(), false);
+        for list in &self.sorted {
+            for id in list {
+                if let Ok(slot) = plan.remote_ids().binary_search(id) {
+                    self.slot_bits[slot] = true;
+                }
+            }
+        }
+    }
+
+    /// Did the sender interned at `slot` fire this step? One indexed
+    /// load — the O(1) lookup behind `DeliveryPlan::deliver`.
+    #[inline]
+    pub fn slot_fired(&self, slot: usize) -> bool {
+        self.slot_bits[slot]
     }
 }
 
@@ -120,6 +159,43 @@ mod tests {
         for id in [8u64, 10, 12, 14] {
             assert!(!ex.spiked(1, id));
         }
+    }
+
+    #[test]
+    fn scatter_sets_exactly_the_fired_slots_and_resets_per_step() {
+        let results = run_ranks(2, |comm| {
+            let rank = comm.rank();
+            let mut pop = make_pop(rank, 4);
+            let mut store = SynapseStore::new(4, 4);
+            if rank == 1 {
+                // Rank 1 fires neurons 4 and 6 toward rank 0.
+                for i in [0usize, 2] {
+                    store.add_out(i, 0);
+                    pop.fired[i] = true;
+                }
+            } else {
+                // Rank 0 holds in-edges from 4, 5, 6 (slots 0, 1, 2).
+                store.add_in(0, 4, true);
+                store.add_in(1, 5, true);
+                store.add_in(2, 6, false);
+            }
+            let plan = DeliveryPlan::compile(&store, (rank * 4) as u64);
+            let mut ex = IdExchange::new(2);
+            ex.exchange(&comm, &pop, &store);
+            ex.scatter_slots(&plan);
+            let first: Vec<bool> =
+                (0..plan.slot_count()).map(|s| ex.slot_fired(s)).collect();
+            // Next step nobody fires: the bitmap must fully reset.
+            pop.fired.iter_mut().for_each(|f| *f = false);
+            ex.exchange(&comm, &pop, &store);
+            ex.scatter_slots(&plan);
+            let second: Vec<bool> =
+                (0..plan.slot_count()).map(|s| ex.slot_fired(s)).collect();
+            (first, second)
+        });
+        assert_eq!(results[0].0, vec![true, false, true]);
+        assert_eq!(results[0].1, vec![false, false, false]);
+        assert!(results[1].0.is_empty(), "rank 1 has no remote in-edges");
     }
 
     #[test]

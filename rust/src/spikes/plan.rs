@@ -1,0 +1,513 @@
+//! Epoch-compiled spike delivery: a CSR in-edge plan with O(1)
+//! slot-interned remote lookups (EXPERIMENTS.md §Perf, opt 8).
+//!
+//! The per-step delivery loop is the only O(edges)-per-step work in the
+//! simulator, and the naive loop pays, per edge per step, a u64 division
+//! (owner-rank derivation), a `Vec<Vec<InEdge>>` pointer chase, and a
+//! binary search (`PartnerFreqs::get` for the new spike algorithm,
+//! `sorted[src_rank].binary_search` for the old). [`DeliveryPlan`]
+//! compiles all of that out once per connectivity update:
+//!
+//! * the in-edge lists flatten into **one contiguous edge array** with
+//!   per-neuron offsets (CSR), each neuron's edges partitioned
+//!   **local-first** so the inner loop splits into two branch-light
+//!   sequential scans;
+//! * every **local** edge carries the pre-resolved local source index
+//!   plus its signed weight — delivery is one `fired[idx]` load;
+//! * every **remote** edge carries a *slot*: an index into the plan's
+//!   table of unique remote sources (interned in ascending id order)
+//!   plus its signed weight — delivery is one `O(1)` indexed load into
+//!   whatever per-slot state the spike algorithm maintains
+//!   (`FrequencyExchange::spiked_slot`, `IdExchange::slot_fired`).
+//!
+//! The plan is **derived state**: `SynapseStore` edit sites bump an
+//! in-edge generation counter ([`SynapseStore::in_edits`]), the driver
+//! recompiles after any plasticity phase that edited in-edges and on
+//! snapshot restore (the plan is never stored in the ILMISNAP format),
+//! and [`DeliveryPlan::check_against`] cross-validates a plan against
+//! the store it claims to compile.
+//!
+//! Bit-exactness contract: within one neuron the local/remote partition
+//! keeps each class in its original edge order, so the sequence of
+//! remote edges — and with it the reconstruction-PRNG draw order of the
+//! new algorithm, including its draw-iff-frequency>0 rule — is exactly
+//! the naive loop's. The synaptic sum reorders ±1.0 terms only;
+//! f32 addition of small integers is exact, so `i_syn` is bit-identical
+//! (the differential oracle tests below pin all of this).
+
+use crate::neuron::{GlobalNeuronId, Population};
+use crate::plasticity::SynapseStore;
+
+use super::spike_weight;
+
+/// One compiled in-edge: a pre-resolved index (local source index for
+/// local edges, remote-source *slot* for remote ones) and the signed
+/// synaptic weight (+1.0 excitatory, −1.0 inhibitory). 8 B, so a
+/// cache line holds eight edges.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PlannedEdge {
+    pub idx: u32,
+    pub weight: f32,
+}
+
+/// The epoch-compiled delivery plan of one rank (see module docs).
+#[derive(Clone, Debug, PartialEq)]
+pub struct DeliveryPlan {
+    /// First global id of the local population (locality resolution).
+    first_id: GlobalNeuronId,
+    /// Partition stride the plan was compiled with.
+    neurons_per_rank: u64,
+    /// CSR offsets into `edges`, length n+1.
+    offsets: Vec<u32>,
+    /// Per neuron: index into `edges` where its remote edges begin
+    /// (`edges[offsets[i]..remote_starts[i]]` are its local edges).
+    remote_starts: Vec<u32>,
+    /// All in-edges, flattened; per neuron local-first, each class in
+    /// its original `SynapseStore::in_edges` order.
+    edges: Vec<PlannedEdge>,
+    /// Slot table: the unique remote source ids, strictly ascending
+    /// (`remote_ids[slot]` is the sender the slot stands for).
+    remote_ids: Vec<GlobalNeuronId>,
+    /// Total remote edges (== lookups per delivery step).
+    remote_edges: u64,
+    /// `SynapseStore::in_edits` value the plan was compiled at.
+    generation: u64,
+}
+
+impl Default for DeliveryPlan {
+    /// A valid plan for zero neurons (the placeholder `RankState`
+    /// construction holds before its first `rebuild_plan`). `offsets`
+    /// must be `[0]`, never empty: the CSR invariant is length n+1, and
+    /// a derived empty `Vec` would make `deliver` underflow.
+    fn default() -> DeliveryPlan {
+        DeliveryPlan {
+            first_id: 0,
+            neurons_per_rank: 1,
+            offsets: vec![0],
+            remote_starts: Vec::new(),
+            edges: Vec::new(),
+            remote_ids: Vec::new(),
+            remote_edges: 0,
+            generation: 0,
+        }
+    }
+}
+
+impl DeliveryPlan {
+    /// Compile the store's in-edge lists into the CSR plan. Run once
+    /// per connectivity update that edited in-edges — all divisions and
+    /// id searches the per-step loop used to pay happen here instead.
+    pub fn compile(store: &SynapseStore, first_id: GlobalNeuronId) -> DeliveryPlan {
+        let npr = store.neurons_per_rank();
+        let my_rank = (first_id / npr) as u32;
+        let n = store.in_edges.len();
+
+        // Slot table: unique remote sources in ascending id order. The
+        // store's in-partner refcount map is already sorted and unique.
+        let remote_ids: Vec<GlobalNeuronId> = store
+            .in_partners()
+            .map(|(id, _)| id)
+            .filter(|&id| (id / npr) as u32 != my_rank)
+            .collect();
+
+        let total = store.total_in();
+        assert!(total <= u32::MAX as usize, "edge count overflows the u32 CSR");
+        let mut edges = Vec::with_capacity(total);
+        let mut offsets = Vec::with_capacity(n + 1);
+        let mut remote_starts = Vec::with_capacity(n);
+        let mut remote_edges = 0u64;
+        offsets.push(0);
+        for in_edges in &store.in_edges {
+            for e in in_edges {
+                if (e.source / npr) as u32 == my_rank {
+                    edges.push(PlannedEdge {
+                        idx: (e.source - first_id) as u32,
+                        weight: spike_weight(e.source_exc),
+                    });
+                }
+            }
+            remote_starts.push(edges.len() as u32);
+            for e in in_edges {
+                if (e.source / npr) as u32 != my_rank {
+                    let slot = remote_ids
+                        .binary_search(&e.source)
+                        .expect("remote in-edge source missing from slot table");
+                    edges.push(PlannedEdge {
+                        idx: slot as u32,
+                        weight: spike_weight(e.source_exc),
+                    });
+                    remote_edges += 1;
+                }
+            }
+            offsets.push(edges.len() as u32);
+        }
+        DeliveryPlan {
+            first_id,
+            neurons_per_rank: npr,
+            offsets,
+            remote_starts,
+            edges,
+            remote_ids,
+            remote_edges,
+            generation: store.in_edits(),
+        }
+    }
+
+    /// Accumulate synaptic input for every local neuron through the
+    /// compiled plan: branch-light sequential reads, zero division,
+    /// zero per-edge search. `remote_spiked(slot)` answers "did the
+    /// sender interned at `slot` spike this step" — it is called once
+    /// per remote edge, in exactly the naive loop's remote-edge order.
+    /// Returns the number of remote look-ups performed (the paper's
+    /// Fig. 5 quantity, identical to the naive loop's count).
+    pub fn deliver(
+        &self,
+        pop: &mut Population,
+        mut remote_spiked: impl FnMut(usize) -> bool,
+    ) -> u64 {
+        let n = self.offsets.len() - 1;
+        debug_assert_eq!(n, pop.len(), "plan compiled for a different population");
+        debug_assert_eq!(self.first_id, pop.first_id);
+        for local in 0..n {
+            let lo = self.offsets[local] as usize;
+            let mid = self.remote_starts[local] as usize;
+            let hi = self.offsets[local + 1] as usize;
+            let mut acc = 0.0f32;
+            for e in &self.edges[lo..mid] {
+                if pop.fired[e.idx as usize] {
+                    acc += e.weight;
+                }
+            }
+            for e in &self.edges[mid..hi] {
+                if remote_spiked(e.idx as usize) {
+                    acc += e.weight;
+                }
+            }
+            pop.i_syn[local] = acc;
+        }
+        self.remote_edges
+    }
+
+    /// Is this plan compiled against the store's current in-edge set?
+    /// (The edit sites bump the generation; equal generations mean no
+    /// in-edge was added or deleted since `compile`.)
+    pub fn is_current(&self, store: &SynapseStore) -> bool {
+        self.generation == store.in_edits()
+    }
+
+    /// Number of interned remote sources (slots).
+    pub fn slot_count(&self) -> usize {
+        self.remote_ids.len()
+    }
+
+    /// The interned remote source ids, ascending (`[slot] -> id`). The
+    /// owning rank of a slot, when needed, is `remote_ids[slot] /
+    /// neurons_per_rank` — not cached: no per-step consumer exists.
+    pub fn remote_ids(&self) -> &[GlobalNeuronId] {
+        &self.remote_ids
+    }
+
+    /// Remote in-edges in the plan (== remote lookups per step).
+    pub fn remote_edge_count(&self) -> u64 {
+        self.remote_edges
+    }
+
+    /// Total planned edges (local + remote).
+    pub fn edge_count(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Cross-validate this plan against `store`: it must be current
+    /// (generation) and structurally identical to a fresh compile of
+    /// the store's edge lists. Used by the invariant checks and the
+    /// driver's debug assertions — a plan that drifts from its store
+    /// silently mis-delivers spikes, which is exactly the failure mode
+    /// this catches.
+    pub fn check_against(&self, store: &SynapseStore) -> Result<(), String> {
+        if !self.is_current(store) {
+            return Err(format!(
+                "delivery plan is stale: compiled at in-edit generation {}, store is at {}",
+                self.generation,
+                store.in_edits()
+            ));
+        }
+        let fresh = DeliveryPlan::compile(store, self.first_id);
+        if self.remote_ids != fresh.remote_ids {
+            return Err("delivery plan slot table disagrees with store in-partners".to_string());
+        }
+        if self.offsets != fresh.offsets
+            || self.remote_starts != fresh.remote_starts
+            || self.edges != fresh.edges
+        {
+            return Err("delivery plan CSR disagrees with store in-edges".to_string());
+        }
+        if self.remote_edges != fresh.remote_edges
+            || self.neurons_per_rank != fresh.neurons_per_rank
+        {
+            return Err("delivery plan summary counters disagree with store".to_string());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{deliver_input, FrequencyExchange, IdExchange};
+    use super::*;
+    use crate::comm::run_ranks;
+    use crate::config::SimConfig;
+    use crate::testing::forall;
+    use crate::util::{Rng, Vec3};
+
+    fn make_pop(rank: usize, n: usize, seed: u64) -> Population {
+        let cfg = SimConfig { neurons_per_rank: n, ..SimConfig::default() };
+        let mut rng = Rng::new(seed);
+        Population::init(&cfg, rank, Vec3::ZERO, Vec3::splat(10.0), &mut rng)
+    }
+
+    #[test]
+    fn csr_partitions_local_first_and_interns_slots_ascending() {
+        // Rank 0 of stride 4: ids 0..4 local, the rest remote.
+        let mut store = SynapseStore::new(2, 4);
+        store.add_in(0, 9, true); // remote (rank 2)
+        store.add_in(0, 1, false); // local
+        store.add_in(0, 5, false); // remote (rank 1)
+        store.add_in(1, 9, true); // remote, same source as neuron 0's
+        store.add_in(1, 2, true); // local
+        let plan = DeliveryPlan::compile(&store, 0);
+        // Slots: unique remote sources, ascending.
+        assert_eq!(plan.remote_ids(), &[5, 9]);
+        assert_eq!(plan.slot_count(), 2);
+        assert_eq!(plan.remote_edge_count(), 3);
+        assert_eq!(plan.edge_count(), 5);
+        // Neuron 0: local (1, inh) first, then remotes 9, 5 in original
+        // edge order (NOT id order — draw order must match the naive
+        // loop, which walks edges as stored).
+        assert_eq!(plan.offsets, vec![0, 3, 5]);
+        assert_eq!(plan.remote_starts, vec![1, 4]);
+        assert_eq!(plan.edges[0], PlannedEdge { idx: 1, weight: -1.0 });
+        assert_eq!(plan.edges[1], PlannedEdge { idx: 1, weight: 1.0 }); // slot of id 9
+        assert_eq!(plan.edges[2], PlannedEdge { idx: 0, weight: -1.0 }); // slot of id 5
+        // Neuron 1: local 2 then remote 9.
+        assert_eq!(plan.edges[3], PlannedEdge { idx: 2, weight: 1.0 });
+        assert_eq!(plan.edges[4], PlannedEdge { idx: 1, weight: 1.0 });
+        plan.check_against(&store).unwrap();
+    }
+
+    #[test]
+    fn check_against_catches_stale_and_corrupt_plans() {
+        let mut store = SynapseStore::new(2, 2);
+        store.add_in(0, 2, true);
+        let plan = DeliveryPlan::compile(&store, 0);
+        plan.check_against(&store).unwrap();
+        // An in-edge edit makes the plan stale.
+        store.add_in(1, 3, false);
+        assert!(plan.check_against(&store).unwrap_err().contains("stale"));
+        assert!(!plan.is_current(&store));
+        // A recompiled plan is current again.
+        let plan = DeliveryPlan::compile(&store, 0);
+        plan.check_against(&store).unwrap();
+        // Structural corruption at equal generation is caught too.
+        let mut bad = plan.clone();
+        bad.remote_ids[0] = 999;
+        assert!(bad.check_against(&store).unwrap_err().contains("slot table"));
+        let mut bad = plan;
+        bad.edges[0].weight = -bad.edges[0].weight;
+        assert!(bad.check_against(&store).unwrap_err().contains("CSR"));
+    }
+
+    #[test]
+    fn out_edge_edits_do_not_dirty_the_plan() {
+        let mut store = SynapseStore::new(2, 2);
+        store.add_in(0, 2, true);
+        let plan = DeliveryPlan::compile(&store, 0);
+        store.add_out(0, 3);
+        assert!(store.remove_specific_out(0, 3));
+        assert!(plan.is_current(&store), "axonal edits cannot change the in-edge plan");
+        plan.check_against(&store).unwrap();
+    }
+
+    #[test]
+    fn planned_delivery_matches_naive_on_crafted_store() {
+        // Rank 1 of a 3-rank stride-2 layout: locals are ids 2, 3.
+        let mut pop = make_pop(1, 2, 7);
+        let mut store = SynapseStore::new(2, 2);
+        store.add_in(0, 4, true); // remote rank 2
+        store.add_in(0, 3, true); // local
+        store.add_in(0, 1, false); // remote rank 0
+        store.add_in(1, 2, false); // local
+        pop.fired[0] = false;
+        pop.fired[1] = true;
+        let remote_fired = |id: u64| id == 4; // only id 4 spiked
+        let naive = deliver_input(&mut pop, &store, 2, 1, |_, id| remote_fired(id));
+        let naive_isyn: Vec<u32> = pop.i_syn.iter().map(|x| x.to_bits()).collect();
+
+        let plan = DeliveryPlan::compile(&store, 2);
+        let planned =
+            plan.deliver(&mut pop, |slot| remote_fired(plan.remote_ids()[slot]));
+        let plan_isyn: Vec<u32> = pop.i_syn.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(naive, planned, "lookup counts");
+        assert_eq!(naive_isyn, plan_isyn, "i_syn bit patterns");
+        assert_eq!(pop.i_syn[0], 2.0); // +1 (remote 4 fired) +1 (local 3 fired) +0 (remote 1 silent)
+        assert_eq!(pop.i_syn[1], 0.0); // local inhibitory source 2 did not fire
+    }
+
+    /// Build a random dendritic topology on rank `my_rank` of a 3-rank,
+    /// stride-8 layout and return (pop, store).
+    fn random_topology(rng: &mut Rng, seed: u64) -> (Population, SynapseStore) {
+        let pop = make_pop(1, 8, seed);
+        let mut store = SynapseStore::new(8, 8);
+        let n_edges = rng.next_below(40);
+        for _ in 0..n_edges {
+            let tgt = rng.next_below(8);
+            let src = rng.next_below(24) as u64;
+            store.add_in(tgt, src, rng.bernoulli(0.6));
+        }
+        (pop, store)
+    }
+
+    /// Sparse frequency entries for every remote in-partner of `store`
+    /// (ascending by construction), with some zero frequencies mixed in
+    /// to exercise the draw-iff-frequency>0 rule.
+    fn random_freq_entries(rng: &mut Rng, store: &SynapseStore) -> Vec<(u64, f32)> {
+        store
+            .in_partners()
+            .filter(|&(id, _)| id / 8 != 1)
+            .map(|(id, _)| {
+                let f = if rng.bernoulli(0.3) { 0.0 } else { rng.next_f32() };
+                (id, f)
+            })
+            .collect()
+    }
+
+    fn randomize_fired(rng: &mut Rng, pop: &mut Population) {
+        for f in pop.fired.iter_mut() {
+            *f = rng.bernoulli(0.4);
+        }
+    }
+
+    #[test]
+    fn prop_plan_matches_oracle_new_algorithm_across_plasticity() {
+        // The differential contract for the frequency algorithm:
+        // identical i_syn bit patterns, identical lookup counts, and an
+        // identical PRNG stream position after every step — including
+        // across a delete/re-form plasticity phase mid-epoch.
+        forall(
+            "plan delivery ≡ naive oracle (new algorithm)",
+            25,
+            |rng| rng.next_u64(),
+            |&seed| {
+                let mut rng = Rng::new(seed);
+                let (mut pop, mut store) = random_topology(&mut rng, seed ^ 1);
+                let entries = random_freq_entries(&mut rng, &store);
+                let rng_state = Rng::new(seed ^ 2).state();
+                let mut naive_ex =
+                    FrequencyExchange::from_parts(100, entries.clone(), rng_state)?;
+                let mut plan_ex = FrequencyExchange::from_parts(100, entries, rng_state)?;
+                let mut plan = DeliveryPlan::compile(&store, 8);
+                plan.check_against(&store)?;
+                plan_ex.install_slots(&plan);
+
+                for round in 0..4 {
+                    randomize_fired(&mut rng, &mut pop);
+                    let naive = deliver_input(&mut pop, &store, 8, 1, |_, id| {
+                        naive_ex.spiked(id)
+                    });
+                    let want: Vec<u32> = pop.i_syn.iter().map(|x| x.to_bits()).collect();
+                    let planned =
+                        plan.deliver(&mut pop, |slot| plan_ex.spiked_slot(slot));
+                    let got: Vec<u32> = pop.i_syn.iter().map(|x| x.to_bits()).collect();
+                    if naive != planned {
+                        return Err(format!("round {round}: lookups {naive} vs {planned}"));
+                    }
+                    if want != got {
+                        return Err(format!("round {round}: i_syn diverged"));
+                    }
+                    if naive_ex.rng_state() != plan_ex.rng_state() {
+                        return Err(format!("round {round}: PRNG stream position diverged"));
+                    }
+
+                    // A mini plasticity phase: delete a few random
+                    // in-edges, prune, re-form a few (possibly the same
+                    // sources), then recompile — mid-epoch, so the
+                    // surviving entries keep their frequencies.
+                    for _ in 0..rng.next_below(4) {
+                        let tgt = rng.next_below(8);
+                        if let Some(&e) = store.in_edges[tgt].first() {
+                            assert!(store.remove_specific_in(tgt, e.source));
+                        }
+                    }
+                    naive_ex.prune_stale(&store);
+                    plan_ex.prune_stale(&store);
+                    for _ in 0..rng.next_below(4) {
+                        store.add_in(rng.next_below(8), rng.next_below(24) as u64, true);
+                    }
+                    if !plan.is_current(&store) {
+                        plan = DeliveryPlan::compile(&store, 8);
+                    }
+                    plan.check_against(&store)?;
+                    plan_ex.install_slots(&plan);
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_plan_matches_oracle_old_algorithm() {
+        // The id-exchange differential: the per-step slot bitmap
+        // (scattered once per received fired id) must reproduce the
+        // per-edge binary search bit-exactly, across ranks.
+        forall(
+            "plan delivery ≡ naive oracle (old algorithm)",
+            8,
+            |rng| rng.next_u64(),
+            |&seed| {
+                let results = run_ranks(2, move |comm| {
+                    let rank = comm.rank();
+                    let mut rng = Rng::new(seed ^ (rank as u64) << 3);
+                    let mut pop = make_pop(rank, 8, seed ^ 9);
+                    let mut store = SynapseStore::new(8, 8);
+                    let other = 1 - rank;
+                    for _ in 0..rng.next_below(24) {
+                        // In-edge from a random neuron on the other rank
+                        // (mirrored by an out-edge there, below).
+                        store.add_in(
+                            rng.next_below(8),
+                            (other * 8 + rng.next_below(8)) as u64,
+                            rng.bernoulli(0.5),
+                        );
+                    }
+                    // Everyone broadcasts to the other rank so every
+                    // fired id arrives (a superset of what edges need —
+                    // receivers must ignore ids they hold no edge from).
+                    for i in 0..8 {
+                        store.add_out(i, (other * 8) as u64);
+                        pop.fired[i] = rng.bernoulli(0.5);
+                    }
+                    let mut ex = IdExchange::new(2);
+                    ex.exchange(&comm, &pop, &store);
+                    let naive = deliver_input(&mut pop, &store, 8, rank, |r, id| {
+                        ex.spiked(r, id)
+                    });
+                    let want: Vec<u32> = pop.i_syn.iter().map(|x| x.to_bits()).collect();
+                    let plan = DeliveryPlan::compile(&store, (rank * 8) as u64);
+                    plan.check_against(&store).unwrap();
+                    ex.scatter_slots(&plan);
+                    let planned = plan.deliver(&mut pop, |slot| ex.slot_fired(slot));
+                    let got: Vec<u32> = pop.i_syn.iter().map(|x| x.to_bits()).collect();
+                    (naive, planned, want, got)
+                });
+                for (rank, (naive, planned, want, got)) in results.iter().enumerate() {
+                    if naive != planned {
+                        return Err(format!("rank {rank}: lookups {naive} vs {planned}"));
+                    }
+                    if want != got {
+                        return Err(format!("rank {rank}: i_syn diverged"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}
