@@ -21,6 +21,7 @@ fn main() -> anyhow::Result<()> {
         neurons: vec![32],
         deltas: vec![50],
         regimes: vec![Regime::Active],
+        skew: false,
     };
     let settings =
         RunSettings { steps: 100, plasticity_interval: 50, warmup: 1, reps: 3, seed: 42 };

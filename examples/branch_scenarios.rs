@@ -21,7 +21,6 @@
 use ilmi::comm::run_ranks;
 use ilmi::config::SimConfig;
 use ilmi::coordinator::{resume_simulation, RankState};
-use ilmi::octree::DomainDecomposition;
 use ilmi::snapshot::{snapshot_file_name, Snapshot};
 
 const LESION_RANK: usize = 0;
@@ -54,12 +53,11 @@ fn run_branch(
     snap: &Snapshot,
     lesion: bool,
 ) -> Vec<(usize, usize, f64)> {
-    let decomp = DomainDecomposition::new(cfg.ranks, cfg.domain_size);
     let npr = cfg.neurons_per_rank as u64;
     run_ranks(cfg.ranks, |comm| {
         let rank = comm.rank();
         let mut cfg_rank = cfg.clone();
-        let mut state = RankState::restore(&cfg_rank, &decomp, &comm, snap)
+        let mut state = RankState::restore(&cfg_rank, &comm, snap)
             .expect("snapshot restores");
         if lesion && rank == LESION_RANK {
             // Zero the synaptic elements: the next deletion phase
@@ -76,7 +74,7 @@ fn run_branch(
             cfg_rank.bg_std = 0.0;
         }
         for step in GROW_STEPS..GROW_STEPS + BRANCH_STEPS {
-            state.step(&cfg_rank, &decomp, &comm, step, None).unwrap();
+            state.step(&cfg_rank, &comm, step, None).unwrap();
         }
         census(&state, rank, npr)
     })

@@ -22,7 +22,6 @@
 use ilmi::comm::run_ranks;
 use ilmi::config::SimConfig;
 use ilmi::coordinator::RankState;
-use ilmi::octree::DomainDecomposition;
 
 const LESION_RANK: usize = 0;
 
@@ -57,7 +56,6 @@ fn main() -> anyhow::Result<()> {
     };
     let grow_steps = 30_000;
     let post_lesion_steps = 30_000;
-    let decomp = DomainDecomposition::new(cfg.ranks, cfg.domain_size);
     let npr = cfg.neurons_per_rank as u64;
 
     println!(
@@ -68,11 +66,11 @@ fn main() -> anyhow::Result<()> {
     let results = run_ranks(cfg.ranks, |comm| {
         let rank = comm.rank();
         let mut cfg_rank = cfg.clone();
-        let mut state = RankState::init(&cfg_rank, &decomp, &comm);
+        let mut state = RankState::init(&cfg_rank, &comm);
 
         // Phase 1: grow to equilibrium.
         for step in 0..grow_steps {
-            state.step(&cfg_rank, &decomp, &comm, step, None).unwrap();
+            state.step(&cfg_rank, &comm, step, None).unwrap();
         }
         let before = census(&state, rank, npr);
 
@@ -95,7 +93,7 @@ fn main() -> anyhow::Result<()> {
         // Phase 3: recovery.
         let mut mid = None;
         for step in grow_steps..grow_steps + post_lesion_steps {
-            state.step(&cfg_rank, &decomp, &comm, step, None).unwrap();
+            state.step(&cfg_rank, &comm, step, None).unwrap();
             if step == grow_steps + 200 {
                 mid = Some(census(&state, rank, npr));
             }

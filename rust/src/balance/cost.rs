@@ -1,0 +1,287 @@
+//! The load-balancing cost model and the deterministic rebalance
+//! decision.
+//!
+//! Each rank measures a [`RankCost`] — population size, stored edges,
+//! distinct remote in-partners, and the phase-timer nanoseconds spent
+//! so far — and all ranks `gather_all` the vector at every balance
+//! epoch. The *decision* uses only the structural terms
+//! ([`step_cost`]): they are seed-deterministic, so identically-seeded
+//! runs migrate identically (wall-clock nanoseconds ride along for
+//! observability and post-hoc analysis, but feeding them into the
+//! decision would make trajectories machine-dependent).
+//!
+//! [`plan_rebalance`] is a greedy boundary-shift: while the imbalance
+//! factor (max/mean cost) exceeds the configured threshold, ship one
+//! boundary Morton cell of the busiest rank to its cheaper adjacent
+//! neighbor — the only move that preserves the contiguous
+//! cell-run/id-range invariant ([`Partition`]'s). Cost transfers are
+//! estimated proportionally to the moved cell's neuron count. Every
+//! rank runs the identical pure function over the identical inputs, so
+//! no coordinator or consensus round is needed.
+
+use crate::util::wire::{get_u64, put_u64, Wire};
+
+use super::Partition;
+
+/// One rank's measured load, exchanged at balance epochs.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RankCost {
+    /// Local population size.
+    pub neurons: u64,
+    /// Stored edges, both sides (`total_in + total_out`).
+    pub local_edges: u64,
+    /// Distinct remote in-partners (the delivery plan's slot count).
+    pub remote_partners: u64,
+    /// Phase-timer nanoseconds accumulated this segment. Observability
+    /// only — never feeds the decision (see module docs).
+    pub nanos: u64,
+}
+
+impl RankCost {
+    /// The deterministic step cost the decision ranks by.
+    pub fn cost(&self) -> f64 {
+        step_cost(self.neurons, self.local_edges, self.remote_partners)
+    }
+}
+
+impl Wire for RankCost {
+    const SIZE: usize = 32;
+
+    fn write(&self, out: &mut Vec<u8>) {
+        put_u64(out, self.neurons);
+        put_u64(out, self.local_edges);
+        put_u64(out, self.remote_partners);
+        put_u64(out, self.nanos);
+    }
+
+    fn read(buf: &[u8]) -> Self {
+        RankCost {
+            neurons: get_u64(buf, 0),
+            local_edges: get_u64(buf, 8),
+            remote_partners: get_u64(buf, 16),
+            nanos: get_u64(buf, 24),
+        }
+    }
+}
+
+/// Structural per-step cost of one rank: every neuron is integrated
+/// every step, every stored edge is walked by delivery/plasticity, and
+/// every remote partner costs exchange state and slot lookups. Unit
+/// weights keep the model dimensionless and deterministic.
+pub fn step_cost(neurons: u64, local_edges: u64, remote_partners: u64) -> f64 {
+    neurons as f64 + local_edges as f64 + remote_partners as f64
+}
+
+/// Imbalance factor: max/mean cost across ranks. 1.0 is perfectly
+/// balanced; the slowest rank gates every collective, so this is a
+/// direct multiplier on synchronized step time. Degenerate inputs
+/// (no ranks, all-zero cost) read as balanced.
+pub fn imbalance(costs: &[f64]) -> f64 {
+    if costs.is_empty() {
+        return 1.0;
+    }
+    let mean = costs.iter().sum::<f64>() / costs.len() as f64;
+    if mean <= 0.0 {
+        return 1.0;
+    }
+    costs.iter().copied().fold(0.0, f64::max) / mean
+}
+
+/// Decide a new partition, or `None` when the measured imbalance is at
+/// or below `threshold` (or no admissible move improves it). Moves up
+/// to `max_moves` boundary cells, each from the currently-busiest rank
+/// to whichever adjacent neighbor yields the lower resulting pair
+/// maximum, requiring a strict improvement of the busiest rank's cost
+/// ceiling. Pure and deterministic: every rank derives the identical
+/// partition from the identical gathered costs.
+pub fn plan_rebalance(
+    part: &Partition,
+    costs: &[RankCost],
+    threshold: f64,
+    max_moves: usize,
+) -> Option<Partition> {
+    let ranks = part.ranks();
+    assert_eq!(costs.len(), ranks, "one cost record per rank");
+    if ranks < 2 {
+        return None;
+    }
+    let mut est: Vec<f64> = costs.iter().map(|c| c.cost()).collect();
+    let mut neurons: Vec<f64> = costs.iter().map(|c| c.neurons as f64).collect();
+    if imbalance(&est) <= threshold {
+        return None;
+    }
+    let mut p = part.clone();
+    let mut moved = 0usize;
+    while moved < max_moves {
+        // Busiest rank; strict comparison keeps the lowest index on
+        // ties (determinism).
+        let mut r = 0usize;
+        for i in 1..ranks {
+            if est[i] > est[r] {
+                r = i;
+            }
+        }
+        // Candidate moves: the boundary cells of r. A move must keep
+        // r at least one cell AND at least one neuron (migrating a
+        // rank empty would help nothing and complicates every layer).
+        // (direction, resulting pair max, cost transfer, neuron count)
+        let mut best: Option<(bool, f64, f64, f64)> = None;
+        if r + 1 < ranks && p.cells_of_rank(r).len() > 1 {
+            let cell = p.cell_start[r + 1] - 1;
+            let k = p.cell_counts[cell] as f64;
+            if k > 0.0 && neurons[r] > k {
+                let t = est[r] * k / neurons[r];
+                let pair = (est[r] - t).max(est[r + 1] + t);
+                best = Some((true, pair, t, k));
+            }
+        }
+        if r > 0 && p.cells_of_rank(r).len() > 1 {
+            let cell = p.cell_start[r];
+            let k = p.cell_counts[cell] as f64;
+            if k > 0.0 && neurons[r] > k {
+                let t = est[r] * k / neurons[r];
+                let pair = (est[r] - t).max(est[r - 1] + t);
+                let better = match best {
+                    None => true,
+                    Some((_, best_pair, _, _)) => pair < best_pair,
+                };
+                if better {
+                    best = Some((false, pair, t, k));
+                }
+            }
+        }
+        let Some((to_right, pair, t, k)) = best else { break };
+        // Strict improvement of the busiest rank's ceiling, or stop.
+        if pair >= est[r] {
+            break;
+        }
+        let nbr = if to_right { r + 1 } else { r - 1 };
+        if to_right {
+            p.cell_start[r + 1] -= 1;
+        } else {
+            p.cell_start[r] += 1;
+        }
+        est[r] -= t;
+        est[nbr] += t;
+        neurons[r] -= k;
+        neurons[nbr] += k;
+        moved += 1;
+        if imbalance(&est) <= threshold {
+            break;
+        }
+    }
+    if moved == 0 {
+        None
+    } else {
+        Some(p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cost(neurons: u64, edges: u64) -> RankCost {
+        RankCost { neurons, local_edges: edges, remote_partners: 0, nanos: 7 }
+    }
+
+    #[test]
+    fn rank_cost_wire_is_32_bytes() {
+        let c = RankCost { neurons: 1, local_edges: 2, remote_partners: 3, nanos: 4 };
+        let mut buf = Vec::new();
+        c.write(&mut buf);
+        assert_eq!(buf.len(), RankCost::SIZE);
+        assert_eq!(RankCost::read(&buf), c);
+    }
+
+    #[test]
+    fn imbalance_is_max_over_mean() {
+        assert_eq!(imbalance(&[]), 1.0);
+        assert_eq!(imbalance(&[0.0, 0.0]), 1.0);
+        assert_eq!(imbalance(&[2.0, 2.0]), 1.0);
+        assert_eq!(imbalance(&[3.0, 1.0]), 1.5);
+    }
+
+    #[test]
+    fn balanced_load_plans_nothing() {
+        let p = Partition::uniform(2, 32);
+        assert!(plan_rebalance(&p, &[cost(32, 100), cost(32, 100)], 1.2, 4).is_none());
+        // Single rank: nothing to move to.
+        let solo = Partition::uniform(1, 32);
+        assert!(plan_rebalance(&solo, &[cost(32, 0)], 1.0, 4).is_none());
+    }
+
+    #[test]
+    fn skew_moves_boundary_cells_toward_the_light_rank() {
+        // 48/16 neurons over 6+2 cells (8 per cell): one move ships the
+        // busy rank's LAST cell right.
+        let p = Partition {
+            cell_counts: vec![8; 8],
+            cell_start: vec![0, 6, 8],
+        };
+        let new = plan_rebalance(&p, &[cost(48, 0), cost(16, 0)], 1.1, 1).unwrap();
+        assert_eq!(new.cell_start, vec![0, 5, 8]);
+        assert_eq!(new.rank_starts(), vec![0, 40, 64]);
+        // Two moves fully even it out (32/32 -> imbalance 1.0 <= 1.1).
+        let new2 = plan_rebalance(&p, &[cost(48, 0), cost(16, 0)], 1.1, 8).unwrap();
+        assert_eq!(new2.rank_starts(), vec![0, 32, 64]);
+        assert_eq!(new2.ownership(), super::super::OwnershipMap::stride(32));
+    }
+
+    #[test]
+    fn middle_rank_ships_to_the_cheaper_side() {
+        // 3 ranks, 1 cell... need >1 cell to move: give rank 1 two
+        // cells and overload it; left neighbor is cheaper than right.
+        let p = Partition {
+            cell_counts: vec![4, 4, 20, 20, 4, 4, 4, 4],
+            cell_start: vec![0, 2, 4, 8],
+        };
+        let costs = [cost(8, 0), cost(40, 0), cost(16, 0)];
+        let new = plan_rebalance(&p, &costs, 1.1, 1).unwrap();
+        // Rank 1's first cell (20 neurons) goes LEFT to the cheapest
+        // neighbor: pair max 8+20=28 beats right's 16+20=36.
+        assert_eq!(new.cell_start, vec![0, 3, 4, 8]);
+    }
+
+    #[test]
+    fn no_admissible_move_returns_none() {
+        // The busy rank owns a single cell: it cannot give it away.
+        let p = Partition {
+            cell_counts: vec![30, 1, 1, 1, 1, 1, 1, 1],
+            cell_start: vec![0, 1, 8],
+        };
+        assert!(plan_rebalance(&p, &[cost(30, 0), cost(7, 0)], 1.1, 4).is_none());
+    }
+
+    #[test]
+    fn decision_ignores_wall_clock_nanos() {
+        let p = Partition { cell_counts: vec![8; 8], cell_start: vec![0, 6, 8] };
+        let a = plan_rebalance(
+            &p,
+            &[cost(48, 0), cost(16, 0)],
+            1.1,
+            1,
+        );
+        let mut noisy = [cost(48, 0), cost(16, 0)];
+        noisy[0].nanos = 999_999_999;
+        noisy[1].nanos = 1;
+        let b = plan_rebalance(&p, &noisy, 1.1, 1);
+        assert_eq!(a, b, "timers must never steer the (deterministic) decision");
+    }
+
+    #[test]
+    fn never_empties_a_rank() {
+        // Rank 0: two cells but all neurons in one; moving the loaded
+        // cell would empty it — only the empty boundary cell could
+        // move, which improves nothing.
+        let p = Partition {
+            cell_counts: vec![10, 0, 1, 1, 1, 1, 1, 1],
+            cell_start: vec![0, 2, 8],
+        };
+        let out = plan_rebalance(&p, &[cost(10, 0), cost(6, 0)], 1.05, 4);
+        if let Some(new) = out {
+            let starts = new.rank_starts();
+            assert!(starts[1] > starts[0] && starts[2] > starts[1], "{starts:?}");
+        }
+    }
+}

@@ -1,0 +1,252 @@
+//! The migration wire format: everything a moving neuron *is*, packed
+//! for the all-to-all.
+//!
+//! A [`NeuronRecord`] carries the full per-neuron state — Izhikevich
+//! membrane state, calcium, synaptic-element counts, the per-step
+//! scratch that must survive mid-step semantics (`i_syn`, `fired`,
+//! `epoch_spikes`), and both edge lists. A [`MigrationBatch`] is what
+//! one rank ships to one destination: the records of every neuron
+//! moving there (ascending by id) plus the sender-side
+//! `PartnerFreqs` entries for the moving neurons' in-edge sources, so
+//! the new owner keeps reconstructing spikes mid-epoch instead of
+//! silently reading 0.0 until the next boundary.
+//!
+//! Derived state deliberately does NOT travel: connected-element
+//! counters are recomputed from the edge lists, the octree is rebuilt
+//! from positions, the delivery plan is recompiled, and the routing
+//! tables re-derive in `SynapseStore::from_parts` — same philosophy as
+//! the ILMISNAP format (store ground truth, rebuild acceleration
+//! structures).
+//!
+//! Encoding reuses the `util::wire` primitives; decoding goes through
+//! the checked `Cursor`, so a malformed batch surfaces as a
+//! descriptive error at the receiving rank instead of garbage state.
+
+use crate::neuron::GlobalNeuronId;
+use crate::util::wire::{put_f32, put_f64, put_u32, put_u64, put_u8, Cursor};
+use crate::util::Vec3;
+
+/// One migrating neuron's complete state.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NeuronRecord {
+    pub id: GlobalNeuronId,
+    pub pos: Vec3,
+    pub is_excitatory: bool,
+    pub v: f32,
+    pub u: f32,
+    pub ca: f32,
+    pub z_ax: f32,
+    pub z_den_exc: f32,
+    pub z_den_inh: f32,
+    pub i_syn: f32,
+    pub noise: f32,
+    pub fired: bool,
+    pub epoch_spikes: u32,
+    /// Axonal side: targets of outgoing synapses.
+    pub out_edges: Vec<GlobalNeuronId>,
+    /// Dendritic side: (source id, source is excitatory).
+    pub in_edges: Vec<(GlobalNeuronId, bool)>,
+}
+
+impl NeuronRecord {
+    fn encode(&self, out: &mut Vec<u8>) {
+        put_u64(out, self.id);
+        put_f64(out, self.pos.x);
+        put_f64(out, self.pos.y);
+        put_f64(out, self.pos.z);
+        put_u8(out, u8::from(self.is_excitatory));
+        for x in [
+            self.v,
+            self.u,
+            self.ca,
+            self.z_ax,
+            self.z_den_exc,
+            self.z_den_inh,
+            self.i_syn,
+            self.noise,
+        ] {
+            put_f32(out, x);
+        }
+        put_u8(out, u8::from(self.fired));
+        put_u32(out, self.epoch_spikes);
+        put_u32(out, self.out_edges.len() as u32);
+        for &tgt in &self.out_edges {
+            put_u64(out, tgt);
+        }
+        put_u32(out, self.in_edges.len() as u32);
+        for &(src, exc) in &self.in_edges {
+            put_u64(out, src);
+            put_u8(out, u8::from(exc));
+        }
+    }
+
+    fn decode(c: &mut Cursor<'_>) -> Result<NeuronRecord, String> {
+        let id = c.u64("migrating neuron id")?;
+        let x = c.f64("neuron position")?;
+        let y = c.f64("neuron position")?;
+        let z = c.f64("neuron position")?;
+        let is_excitatory = c.u8("neuron type")? != 0;
+        let v = c.f32("membrane state")?;
+        let u = c.f32("membrane state")?;
+        let ca = c.f32("calcium")?;
+        let z_ax = c.f32("elements")?;
+        let z_den_exc = c.f32("elements")?;
+        let z_den_inh = c.f32("elements")?;
+        let i_syn = c.f32("synaptic input")?;
+        let noise = c.f32("noise")?;
+        let fired = c.u8("fired flag")? != 0;
+        let epoch_spikes = c.u32("epoch spikes")?;
+        let n_out = c.u32("out-edge count")? as usize;
+        let mut out_edges = Vec::with_capacity(n_out.min(c.remaining() / 8));
+        for _ in 0..n_out {
+            out_edges.push(c.u64("out edge")?);
+        }
+        let n_in = c.u32("in-edge count")? as usize;
+        let mut in_edges = Vec::with_capacity(n_in.min(c.remaining() / 9));
+        for _ in 0..n_in {
+            let src = c.u64("in edge")?;
+            let exc = c.u8("in edge kind")? != 0;
+            in_edges.push((src, exc));
+        }
+        Ok(NeuronRecord {
+            id,
+            pos: Vec3::new(x, y, z),
+            is_excitatory,
+            v,
+            u,
+            ca,
+            z_ax,
+            z_den_exc,
+            z_den_inh,
+            i_syn,
+            noise,
+            fired,
+            epoch_spikes,
+            out_edges,
+            in_edges,
+        })
+    }
+}
+
+/// Everything one rank ships to one destination during a migration.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct MigrationBatch {
+    /// Moving neurons, ascending by id.
+    pub records: Vec<NeuronRecord>,
+    /// Sender-side frequency entries for the moving neurons' in-edge
+    /// sources (ascending by id; only sources that HAVE an installed
+    /// entry). The receiver merges these into its own table so
+    /// mid-epoch reconstruction continues seamlessly.
+    pub freq_entries: Vec<(u64, f32)>,
+}
+
+impl MigrationBatch {
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty() && self.freq_entries.is_empty()
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        put_u32(&mut out, self.records.len() as u32);
+        for r in &self.records {
+            r.encode(&mut out);
+        }
+        put_u32(&mut out, self.freq_entries.len() as u32);
+        for &(id, f) in &self.freq_entries {
+            put_u64(&mut out, id);
+            put_f32(&mut out, f);
+        }
+        out
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<MigrationBatch, String> {
+        let mut c = Cursor::new(buf, "migration batch");
+        let n_rec = c.u32("record count")? as usize;
+        let mut records = Vec::with_capacity(n_rec.min(c.remaining() / 66));
+        for _ in 0..n_rec {
+            records.push(NeuronRecord::decode(&mut c)?);
+        }
+        let n_ent = c.u32("frequency entry count")? as usize;
+        let mut freq_entries = Vec::with_capacity(n_ent.min(c.remaining() / 12));
+        for _ in 0..n_ent {
+            let id = c.u64("frequency entry id")?;
+            let f = c.f32("frequency entry")?;
+            freq_entries.push((id, f));
+        }
+        c.finish("migration batch")?;
+        for w in records.windows(2) {
+            if w[0].id >= w[1].id {
+                return Err(format!(
+                    "migration records not ascending: id {} then {}",
+                    w[0].id, w[1].id
+                ));
+            }
+        }
+        crate::spikes::PartnerFreqs::check_ascending(&freq_entries)?;
+        Ok(MigrationBatch { records, freq_entries })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_record(id: u64) -> NeuronRecord {
+        NeuronRecord {
+            id,
+            pos: Vec3::new(1.25, -2.5, 7.75),
+            is_excitatory: id % 2 == 0,
+            v: -65.5,
+            u: -13.25,
+            ca: 0.5,
+            z_ax: 1.25,
+            z_den_exc: 1.375,
+            z_den_inh: 1.5,
+            i_syn: -2.0,
+            noise: 4.75,
+            fired: id % 3 == 0,
+            epoch_spikes: 7,
+            out_edges: vec![id + 10, id + 20],
+            in_edges: vec![(id + 1, true), (id + 2, false)],
+        }
+    }
+
+    #[test]
+    fn batch_roundtrips_bit_exactly() {
+        let batch = MigrationBatch {
+            records: vec![sample_record(3), sample_record(9)],
+            freq_entries: vec![(4, 0.25), (13, 0.5)],
+        };
+        let back = MigrationBatch::decode(&batch.encode()).unwrap();
+        assert_eq!(back, batch);
+        let empty = MigrationBatch::default();
+        assert!(empty.is_empty());
+        assert_eq!(MigrationBatch::decode(&empty.encode()).unwrap(), empty);
+    }
+
+    #[test]
+    fn decode_rejects_disorder_and_truncation() {
+        let batch = MigrationBatch {
+            records: vec![sample_record(9), sample_record(3)],
+            freq_entries: Vec::new(),
+        };
+        let err = MigrationBatch::decode(&batch.encode()).unwrap_err();
+        assert!(err.contains("ascending"), "{err}");
+
+        let batch = MigrationBatch {
+            records: vec![sample_record(1)],
+            freq_entries: vec![(9, 0.5), (2, 0.25)],
+        };
+        let err = MigrationBatch::decode(&batch.encode()).unwrap_err();
+        assert!(err.contains("ascending"), "{err}");
+
+        let good = MigrationBatch { records: vec![sample_record(1)], freq_entries: vec![] };
+        let buf = good.encode();
+        let err = MigrationBatch::decode(&buf[..buf.len() - 3]).unwrap_err();
+        assert!(err.contains("truncated"), "{err}");
+        // Trailing garbage is rejected too (finish).
+        let mut long = buf.clone();
+        long.push(0);
+        assert!(MigrationBatch::decode(&long).is_err());
+    }
+}

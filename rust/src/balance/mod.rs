@@ -1,0 +1,525 @@
+//! Dynamic load balancing: neuron ownership as an explicit, movable
+//! subsystem ("move the computation" applied to the partitioning itself).
+//!
+//! The seed reproduction pinned every neuron to a rank forever through
+//! the implicit stride `global_id / neurons_per_rank`, hard-coded in the
+//! synapse store's routing tables, both spike paths, the delivery plan's
+//! slot interning, and the snapshot layout. Structural plasticity makes
+//! load *drift* — formation/deletion skews per-rank edge counts and
+//! firing activity, so the slowest rank gates every collective. This
+//! module turns that implicit constant into three explicit parts:
+//!
+//! * [`OwnershipMap`] — who owns a global neuron id. A `Stride` variant
+//!   is bit-compatible with the historical layout (one division); the
+//!   `Ranges` variant holds contiguous Morton-ordered global-id ranges
+//!   per rank and answers `rank_of` in O(log R) via a range table.
+//! * [`Partition`] — the cell-level ground truth the map derives from:
+//!   per-Morton-cell neuron counts plus the rank → cell assignment.
+//!   The invariant that makes migration tractable is that **global id
+//!   order equals Morton cell order**: each cell owns one contiguous id
+//!   block, each rank owns a consecutive run of cells, hence a
+//!   contiguous id range. Migration moves whole boundary cells between
+//!   adjacent ranks, which moves contiguous id blocks between adjacent
+//!   ranges — ids never renumber, and the spatial octree stays
+//!   consistent because a neuron's cell travels with it.
+//! * [`cost`] — the per-rank cost model (neurons + edges + remote
+//!   partners, with phase-timer nanoseconds carried for observability)
+//!   and the deterministic greedy [`plan_rebalance`] decision.
+//! * [`migrate`] — the wire format a moving neuron's full state packs
+//!   into ([`NeuronRecord`] / [`MigrationBatch`]); the driver's
+//!   migration protocol in `coordinator` exchanges these through the
+//!   existing all-to-all.
+//!
+//! The decision inputs are gathered with one `gather_all` per balance
+//! epoch, so every rank computes the identical new partition — there is
+//! no coordinator rank.
+
+pub mod cost;
+pub mod migrate;
+
+pub use cost::{imbalance, plan_rebalance, step_cost, RankCost};
+pub use migrate::{MigrationBatch, NeuronRecord};
+
+use crate::config::SimConfig;
+use crate::neuron::GlobalNeuronId;
+use crate::octree::DomainDecomposition;
+use crate::util::wire::{put_u32, put_u64, Cursor};
+
+/// Who owns a global neuron id.
+///
+/// `Stride` is the historical fixed layout (`id / neurons_per_rank`),
+/// kept as a fast path that is bit-compatible decision-for-decision
+/// with a uniform `Ranges` map (property-tested). `Ranges` stores the
+/// per-rank range starts (`starts[r]..starts[r+1]` = rank r's ids,
+/// length R+1); `rank_of` is a binary search, O(log R).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum OwnershipMap {
+    /// Fixed blocks: rank = `id / neurons_per_rank`.
+    Stride { neurons_per_rank: u64 },
+    /// Contiguous per-rank id ranges; `starts` is non-decreasing with
+    /// `starts[0] == 0` (equal adjacent entries = an empty rank).
+    Ranges { starts: Vec<u64> },
+}
+
+impl OwnershipMap {
+    /// The historical fixed-block layout.
+    pub fn stride(neurons_per_rank: u64) -> OwnershipMap {
+        assert!(neurons_per_rank > 0, "stride must be positive");
+        OwnershipMap::Stride { neurons_per_rank }
+    }
+
+    /// An explicit range table (`starts[r]..starts[r+1]` per rank).
+    pub fn ranges(starts: Vec<u64>) -> Result<OwnershipMap, String> {
+        if starts.len() < 2 {
+            return Err("ownership ranges need at least one rank".to_string());
+        }
+        if starts[0] != 0 {
+            return Err(format!("ownership ranges must start at id 0, got {}", starts[0]));
+        }
+        for w in starts.windows(2) {
+            if w[0] > w[1] {
+                return Err(format!(
+                    "ownership range starts must be non-decreasing: {} then {}",
+                    w[0], w[1]
+                ));
+            }
+        }
+        Ok(OwnershipMap::Ranges { starts })
+    }
+
+    /// Which rank owns `id`. The one computation every routing layer
+    /// shares; `Stride` is a single division, `Ranges` an O(log R)
+    /// search over the range table.
+    #[inline]
+    pub fn rank_of(&self, id: GlobalNeuronId) -> u32 {
+        match self {
+            OwnershipMap::Stride { neurons_per_rank } => (id / neurons_per_rank) as u32,
+            OwnershipMap::Ranges { starts } => {
+                debug_assert!(
+                    id < *starts.last().unwrap(),
+                    "id {id} beyond the owned id space"
+                );
+                (starts.partition_point(|&s| s <= id) - 1) as u32
+            }
+        }
+    }
+
+    /// First global id of `rank`'s contiguous range.
+    #[inline]
+    pub fn first_id(&self, rank: usize) -> GlobalNeuronId {
+        match self {
+            OwnershipMap::Stride { neurons_per_rank } => rank as u64 * neurons_per_rank,
+            OwnershipMap::Ranges { starts } => starts[rank],
+        }
+    }
+
+    /// Number of neurons `rank` owns.
+    #[inline]
+    pub fn count(&self, rank: usize) -> u64 {
+        match self {
+            OwnershipMap::Stride { neurons_per_rank } => *neurons_per_rank,
+            OwnershipMap::Ranges { starts } => starts[rank + 1] - starts[rank],
+        }
+    }
+
+    /// Is this the historical fixed layout?
+    pub fn is_stride(&self) -> bool {
+        matches!(self, OwnershipMap::Stride { .. })
+    }
+}
+
+/// The cell-level partition the ownership map derives from (replicated
+/// identically on every rank; migration replaces it wholesale).
+///
+/// Invariants (checked by [`Partition::validate`]):
+/// * `cell_counts[c]` = neurons whose ids form the c-th contiguous id
+///   block (ids ascend with Morton cell index across the whole domain);
+/// * `cell_start[r]..cell_start[r+1]` = the consecutive Morton cells of
+///   rank r (every rank keeps at least one cell);
+/// * rank r's id range is therefore the prefix-sum window of its cells.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Partition {
+    /// Neurons per Morton cell, in Morton order.
+    pub cell_counts: Vec<u64>,
+    /// `cell_start[r]..cell_start[r+1]` = cells of rank r; length R+1.
+    pub cell_start: Vec<usize>,
+}
+
+impl Partition {
+    pub fn ranks(&self) -> usize {
+        self.cell_start.len() - 1
+    }
+
+    pub fn num_cells(&self) -> usize {
+        self.cell_counts.len()
+    }
+
+    pub fn total_neurons(&self) -> u64 {
+        self.cell_counts.iter().sum()
+    }
+
+    /// Morton cells of `rank`.
+    pub fn cells_of_rank(&self, rank: usize) -> std::ops::Range<usize> {
+        self.cell_start[rank]..self.cell_start[rank + 1]
+    }
+
+    /// The default uniform partition: the cell assignment of
+    /// `DomainDecomposition::new`, with each rank's `neurons_per_rank`
+    /// neurons spread near-evenly over its own cells. Its ownership map
+    /// normalizes to `Stride`, so a run that never balances is
+    /// bit-identical to the historical layout.
+    pub fn uniform(ranks: usize, neurons_per_rank: u64) -> Partition {
+        let decomp = DomainDecomposition::new(ranks, 1.0);
+        let cell_start = decomp.cell_partition();
+        let mut cell_counts = vec![0u64; decomp.num_cells];
+        for r in 0..ranks {
+            let cells = cell_start[r]..cell_start[r + 1];
+            let n_cells = cells.len() as u64;
+            let base = neurons_per_rank / n_cells;
+            let extra = neurons_per_rank % n_cells;
+            for (k, c) in cells.enumerate() {
+                cell_counts[c] = base + u64::from((k as u64) < extra);
+            }
+        }
+        Partition { cell_counts, cell_start }
+    }
+
+    /// Build the initial partition a config describes: uniform unless
+    /// `balance.init_cells` names an explicit per-rank cell split
+    /// (comma-separated cell counts summing to the 8^b Morton cells),
+    /// in which case the total neuron population is spread near-evenly
+    /// over ALL cells — ranks owning more cells own more neurons, which
+    /// is exactly the skew the rebalancer then irons out.
+    pub fn from_config(cfg: &SimConfig) -> Result<Partition, String> {
+        if cfg.ranks == 0 || cfg.neurons_per_rank == 0 {
+            return Err("balance: topology must have ranks > 0 and neurons_per_rank > 0".into());
+        }
+        if cfg.balance_init_cells.is_empty() {
+            return Ok(Partition::uniform(cfg.ranks, cfg.neurons_per_rank as u64));
+        }
+        let num_cells = DomainDecomposition::new(cfg.ranks, 1.0).num_cells;
+        let mut per_rank = Vec::with_capacity(cfg.ranks);
+        for part in cfg.balance_init_cells.split(',') {
+            let n: usize = part.trim().parse().map_err(|_| {
+                format!("balance.init_cells: {:?} is not a cell count", part.trim())
+            })?;
+            if n == 0 {
+                return Err("balance.init_cells: every rank needs at least one cell".into());
+            }
+            per_rank.push(n);
+        }
+        if per_rank.len() != cfg.ranks {
+            return Err(format!(
+                "balance.init_cells lists {} ranks but topology.ranks is {}",
+                per_rank.len(),
+                cfg.ranks
+            ));
+        }
+        let sum: usize = per_rank.iter().sum();
+        if sum != num_cells {
+            return Err(format!(
+                "balance.init_cells cells sum to {sum} but the {}-rank domain has \
+                 {num_cells} Morton cells",
+                cfg.ranks
+            ));
+        }
+        let mut cell_start = Vec::with_capacity(cfg.ranks + 1);
+        let mut at = 0usize;
+        for &n in &per_rank {
+            cell_start.push(at);
+            at += n;
+        }
+        cell_start.push(at);
+        let total = (cfg.ranks * cfg.neurons_per_rank) as u64;
+        let base = total / num_cells as u64;
+        let extra = total % num_cells as u64;
+        let cell_counts: Vec<u64> =
+            (0..num_cells).map(|c| base + u64::from((c as u64) < extra)).collect();
+        let partition = Partition { cell_counts, cell_start };
+        // Every layer assumes a rank owns at least one neuron (its
+        // contiguous id range anchors routing and the octree); a split
+        // this sparse cannot seed one.
+        let starts = partition.rank_starts();
+        for r in 0..cfg.ranks {
+            if starts[r + 1] == starts[r] {
+                return Err(format!(
+                    "balance.init_cells leaves rank {r} with zero neurons ({} neurons \
+                     over {num_cells} cells are too few for this split)",
+                    total
+                ));
+            }
+        }
+        Ok(partition)
+    }
+
+    /// Per-rank id range starts (length R+1): the prefix sums of the
+    /// cell counts sampled at the rank boundaries.
+    pub fn rank_starts(&self) -> Vec<u64> {
+        let mut prefix = Vec::with_capacity(self.num_cells() + 1);
+        prefix.push(0u64);
+        for &c in &self.cell_counts {
+            prefix.push(prefix.last().unwrap() + c);
+        }
+        self.cell_start.iter().map(|&c| prefix[c]).collect()
+    }
+
+    /// First global id of `cell`'s contiguous block.
+    pub fn first_id_of_cell(&self, cell: usize) -> u64 {
+        self.cell_counts[..cell].iter().sum()
+    }
+
+    /// The id-routing view of this partition. Uniform per-rank counts
+    /// normalize to the bit-compatible `Stride` fast path; anything
+    /// else is a `Ranges` table.
+    pub fn ownership(&self) -> OwnershipMap {
+        let starts = self.rank_starts();
+        let ranks = self.ranks();
+        let first = starts[1] - starts[0];
+        if first > 0 && (0..ranks).all(|r| starts[r + 1] - starts[r] == first) {
+            OwnershipMap::stride(first)
+        } else {
+            OwnershipMap::ranges(starts).expect("prefix sums are monotone")
+        }
+    }
+
+    /// The spatial decomposition this partition's cell assignment
+    /// induces.
+    pub fn decomposition(&self, domain_size: f64) -> DomainDecomposition {
+        DomainDecomposition::with_cells(domain_size, self.cell_start.clone())
+    }
+
+    /// Structural validation (used when a partition arrives from a
+    /// snapshot): rank/total agreement plus the cell-run invariants.
+    pub fn validate(&self, ranks: usize, total_neurons: u64) -> Result<(), String> {
+        if self.ranks() != ranks {
+            return Err(format!(
+                "partition describes {} ranks, expected {ranks}",
+                self.ranks()
+            ));
+        }
+        if self.cell_start[0] != 0 || *self.cell_start.last().unwrap() != self.num_cells() {
+            return Err("partition cell runs must cover all Morton cells".to_string());
+        }
+        for w in self.cell_start.windows(2) {
+            if w[0] >= w[1] {
+                return Err("every rank must keep at least one Morton cell".to_string());
+            }
+        }
+        if !self.num_cells().is_power_of_two() || self.num_cells().trailing_zeros() % 3 != 0 {
+            return Err(format!(
+                "partition has {} cells; Morton domains have 8^b",
+                self.num_cells()
+            ));
+        }
+        if self.total_neurons() != total_neurons {
+            return Err(format!(
+                "partition holds {} neurons, simulation has {total_neurons}",
+                self.total_neurons()
+            ));
+        }
+        Ok(())
+    }
+
+    /// Encode for the snapshot header (little-endian, counted arrays).
+    pub fn encode(&self, out: &mut Vec<u8>) {
+        put_u32(out, self.num_cells() as u32);
+        for &c in &self.cell_counts {
+            put_u64(out, c);
+        }
+        put_u32(out, self.cell_start.len() as u32);
+        for &s in &self.cell_start {
+            put_u32(out, s as u32);
+        }
+    }
+
+    /// Decode a snapshot header's partition section.
+    pub fn decode(c: &mut Cursor<'_>) -> Result<Partition, String> {
+        let cells = c.u32("partition cell count")? as usize;
+        let mut cell_counts = Vec::with_capacity(cells.min(c.remaining() / 8));
+        for _ in 0..cells {
+            cell_counts.push(c.u64("partition cell neurons")?);
+        }
+        let starts = c.u32("partition rank count")? as usize;
+        if starts < 2 {
+            return Err("partition needs at least one rank".to_string());
+        }
+        let mut cell_start = Vec::with_capacity(starts.min(c.remaining() / 4));
+        for _ in 0..starts {
+            cell_start.push(c.u32("partition cell start")? as usize);
+        }
+        Ok(Partition { cell_counts, cell_start })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::forall;
+    use crate::util::Rng;
+
+    #[test]
+    fn stride_and_uniform_ranges_agree_everywhere() {
+        // The tentpole equivalence: a uniform Ranges map must be
+        // decision-for-decision identical to Stride over the whole id
+        // space, and at every range boundary.
+        forall(
+            "uniform Ranges ≡ Stride (rank_of/first_id/count)",
+            50,
+            |rng| (1 + rng.next_below(16), 1 + rng.next_below(512) as u64),
+            |&(ranks, npr)| {
+                let stride = OwnershipMap::stride(npr);
+                let starts: Vec<u64> = (0..=ranks as u64).map(|r| r * npr).collect();
+                let ranges = OwnershipMap::ranges(starts).unwrap();
+                for rank in 0..ranks {
+                    if stride.first_id(rank) != ranges.first_id(rank) {
+                        return Err(format!("first_id({rank}) differs"));
+                    }
+                    if stride.count(rank) != ranges.count(rank) {
+                        return Err(format!("count({rank}) differs"));
+                    }
+                }
+                let total = ranks as u64 * npr;
+                let mut rng = Rng::new(npr ^ ranks as u64);
+                for _ in 0..200 {
+                    let id = rng.next_below(total as usize) as u64;
+                    if stride.rank_of(id) != ranges.rank_of(id) {
+                        return Err(format!("rank_of({id}) differs"));
+                    }
+                }
+                for rank in 0..ranks {
+                    let lo = rank as u64 * npr;
+                    for id in [lo, lo + npr - 1] {
+                        if ranges.rank_of(id) != rank as u32 {
+                            return Err(format!("boundary id {id} misrouted"));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn ranges_rejects_bad_tables_and_allows_empty_ranks() {
+        assert!(OwnershipMap::ranges(vec![0]).is_err());
+        assert!(OwnershipMap::ranges(vec![1, 5]).is_err());
+        assert!(OwnershipMap::ranges(vec![0, 5, 3]).is_err());
+        // An empty middle rank (equal adjacent starts) routes around it.
+        let m = OwnershipMap::ranges(vec![0, 5, 5, 10]).unwrap();
+        assert_eq!(m.count(1), 0);
+        assert_eq!(m.rank_of(4), 0);
+        assert_eq!(m.rank_of(5), 2);
+        assert_eq!(m.rank_of(9), 2);
+    }
+
+    #[test]
+    fn uniform_partition_normalizes_to_stride() {
+        let p = Partition::uniform(4, 32);
+        assert_eq!(p.total_neurons(), 128);
+        assert_eq!(p.rank_starts(), vec![0, 32, 64, 96, 128]);
+        assert_eq!(p.ownership(), OwnershipMap::stride(32));
+        p.validate(4, 128).unwrap();
+        // Cell assignment matches the decomposition's.
+        let d = DomainDecomposition::new(4, 1.0);
+        assert_eq!(p.cell_start, d.cell_partition());
+    }
+
+    #[test]
+    fn uniform_partition_splits_odd_counts_within_the_rank() {
+        // 2 ranks x 5 neurons over 4 cells each: 2,1,1,1 per rank —
+        // totals stay exactly neurons_per_rank (stride compatibility).
+        let p = Partition::uniform(2, 5);
+        assert_eq!(p.cell_counts, vec![2, 1, 1, 1, 2, 1, 1, 1]);
+        assert_eq!(p.ownership(), OwnershipMap::stride(5));
+    }
+
+    #[test]
+    fn skewed_config_partition_is_ranges() {
+        let cfg = SimConfig {
+            ranks: 2,
+            neurons_per_rank: 32,
+            balance_init_cells: "6,2".to_string(),
+            ..SimConfig::default()
+        };
+        let p = Partition::from_config(&cfg).unwrap();
+        assert_eq!(p.cell_start, vec![0, 6, 8]);
+        assert_eq!(p.total_neurons(), 64);
+        assert_eq!(p.rank_starts(), vec![0, 48, 64]);
+        match p.ownership() {
+            OwnershipMap::Ranges { starts } => assert_eq!(starts, vec![0, 48, 64]),
+            other => panic!("expected Ranges, got {other:?}"),
+        }
+        p.validate(2, 64).unwrap();
+    }
+
+    #[test]
+    fn from_config_rejects_malformed_init_cells() {
+        let mut cfg = SimConfig { ranks: 2, neurons_per_rank: 8, ..SimConfig::default() };
+        for bad in ["6,x", "6", "6,2,0", "0,8", "5,2"] {
+            cfg.balance_init_cells = bad.to_string();
+            assert!(Partition::from_config(&cfg).is_err(), "{bad:?} must be rejected");
+        }
+        cfg.balance_init_cells = "4,4".to_string();
+        Partition::from_config(&cfg).unwrap();
+        // A population too sparse for the split would leave a rank with
+        // zero neurons — rejected up front.
+        cfg.neurons_per_rank = 2; // 4 neurons over 8 cells
+        cfg.balance_init_cells = "6,2".to_string();
+        let err = Partition::from_config(&cfg).unwrap_err();
+        assert!(err.contains("zero neurons"), "{err}");
+    }
+
+    #[test]
+    fn explicit_uniform_init_cells_equals_default_partition() {
+        // "4,4" with a cell-divisible population IS the default uniform
+        // partition — same cells, same counts, same (Stride) map. This
+        // is what lets the config fingerprint hash the canonical
+        // partition instead of the raw string.
+        let cfg = SimConfig {
+            ranks: 2,
+            neurons_per_rank: 32,
+            balance_init_cells: "4,4".to_string(),
+            ..SimConfig::default()
+        };
+        assert_eq!(Partition::from_config(&cfg).unwrap(), Partition::uniform(2, 32));
+    }
+
+    #[test]
+    fn partition_encode_decode_roundtrip() {
+        let p = Partition::from_config(&SimConfig {
+            ranks: 2,
+            neurons_per_rank: 32,
+            balance_init_cells: "6,2".to_string(),
+            ..SimConfig::default()
+        })
+        .unwrap();
+        let mut buf = Vec::new();
+        p.encode(&mut buf);
+        let back = Partition::decode(&mut Cursor::new(&buf, "partition")).unwrap();
+        assert_eq!(back, p);
+        // Truncation errors instead of panicking.
+        let err =
+            Partition::decode(&mut Cursor::new(&buf[..buf.len() / 2], "partition"))
+                .unwrap_err();
+        assert!(err.contains("truncated"), "{err}");
+    }
+
+    #[test]
+    fn validate_catches_structural_corruption() {
+        let mut p = Partition::uniform(2, 8);
+        p.validate(2, 16).unwrap();
+        assert!(p.validate(3, 16).is_err());
+        assert!(p.validate(2, 17).is_err());
+        p.cell_start[1] = p.cell_start[2]; // rank 1 left with zero cells
+        assert!(p.validate(2, 16).is_err());
+    }
+
+    #[test]
+    fn first_id_of_cell_tracks_prefix_sums() {
+        let p = Partition::uniform(2, 6); // 4 cells/rank: 2,2,1,1 each
+        assert_eq!(p.first_id_of_cell(0), 0);
+        assert_eq!(p.first_id_of_cell(1), 2);
+        assert_eq!(p.first_id_of_cell(4), 6);
+        assert_eq!(p.first_id_of_cell(7), 11);
+    }
+}

@@ -101,16 +101,17 @@ pub fn sample_direct(
     rng.weighted_choice(weights_scratch).map(|k| records[k].id)
 }
 
-/// Full formation phase, direct algorithm.
+/// Full formation phase, direct algorithm. `owners` routes each chosen
+/// target id to its owning rank.
 pub fn run_formation(
     comm: &ThreadComm,
     pop: &Population,
     store: &mut SynapseStore,
     cfg: &SimConfig,
+    owners: &crate::balance::OwnershipMap,
     rng: &mut Rng,
 ) -> FormationStats {
     let mut stats = FormationStats::default();
-    let npr = cfg.neurons_per_rank as u64;
     let t_gather = std::time::Instant::now();
     let records = gather_candidates(comm, pop, store);
     stats.exchange_nanos += t_gather.elapsed().as_nanos() as u64;
@@ -126,7 +127,7 @@ pub fn run_formation(
         for _ in 0..n_vacant {
             stats.searches += 1;
             match sample_direct(&records, src_id, &src_pos, kind, cfg.sigma, &mut weights, rng) {
-                Some(target) => requests[(target / npr) as usize].push(OldRequest {
+                Some(target) => requests[owners.rank_of(target) as usize].push(OldRequest {
                     source: src_id,
                     target,
                     source_exc: pop.is_excitatory[local],

@@ -172,6 +172,7 @@ pub fn search_old(
 
 /// Full formation phase, old algorithm: every vacant axonal element
 /// searches (with RMA downloads), then one request/response round-trip.
+/// `owners` routes each found target id to its owning rank.
 #[allow(clippy::too_many_arguments)]
 pub fn run_formation(
     comm: &ThreadComm,
@@ -180,10 +181,10 @@ pub fn run_formation(
     store: &mut SynapseStore,
     cache: &mut RemoteNodeCache,
     cfg: &SimConfig,
+    owners: &crate::balance::OwnershipMap,
     rng: &mut Rng,
 ) -> FormationStats {
     let mut stats = FormationStats::default();
-    let npr = cfg.neurons_per_rank as u64;
     let mut requests: Vec<Vec<OldRequest>> = vec![Vec::new(); comm.size()];
 
     let t_search = std::time::Instant::now();
@@ -197,7 +198,7 @@ pub fn run_formation(
             let mut view = OldView { tree, cache, comm };
             match search_old(&mut view, src_id, &src_pos, kind, cfg.theta, cfg.sigma, rng) {
                 Some(target) => {
-                    let owner = (target / npr) as usize;
+                    let owner = owners.rank_of(target) as usize;
                     requests[owner].push(OldRequest {
                         source: src_id,
                         target,

@@ -54,6 +54,13 @@ impl Json {
         Ok(self.as_u64()? as usize)
     }
 
+    pub fn as_bool(&self) -> Result<bool, String> {
+        match self {
+            Json::Bool(b) => Ok(*b),
+            other => Err(format!("expected bool, got {other:?}")),
+        }
+    }
+
     pub fn as_str(&self) -> Result<&str, String> {
         match self {
             Json::Str(s) => Ok(s),

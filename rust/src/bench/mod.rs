@@ -35,5 +35,5 @@ pub mod stats;
 
 pub use report::{BenchReport, DiffReport, ScenarioResult, SCHEMA_VERSION};
 pub use runner::{run_matrix, run_scenario};
-pub use scenario::{preset, AlgGen, MatrixSpec, Regime, RunSettings, Scenario};
+pub use scenario::{preset, skewed_init_cells, AlgGen, MatrixSpec, Regime, RunSettings, Scenario};
 pub use stats::Summary;

@@ -1,11 +1,11 @@
 //! The versioned `BENCH_*.json` report: emit, parse, markdown render,
 //! and baseline diffing.
 //!
-//! Schema (`schema_version` 3):
+//! Schema (`schema_version` 4):
 //!
 //! ```json
 //! {
-//!   "schema_version": 3,
+//!   "schema_version": 4,
 //!   "name": "quick",
 //!   "created_unix": 1753500000,
 //!   "fingerprint": "9f…16 hex digits…",
@@ -14,13 +14,14 @@
 //!   "scenarios": [{
 //!     "id": "new_r4_n128_d100_active",
 //!     "alg": "new", "ranks": 4, "neurons_per_rank": 128,
-//!     "delta": 100, "regime": "active", "reps": 3,
+//!     "delta": 100, "regime": "active", "skew": false, "reps": 3,
 //!     "phases": {"spike_exchange": {"median":…,"min":…,"max":…}, …},
 //!     "wall": {"median":…,"min":…,"max":…},
 //!     "comm": {"bytes_sent":…,"bytes_recv":…,"bytes_rma":…,
 //!              "msgs_sent":…,"collectives":…,"rma_gets":…},
 //!     "spike_state_bytes": …,
-//!     "spike_lookups": …
+//!     "spike_lookups": …,
+//!     "imbalance": …
 //!   }, …]
 //! }
 //! ```
@@ -47,8 +48,12 @@ use super::stats::Summary;
 /// `spike_lookups` (remote look-ups summed over ranks, the Fig. 5
 /// quantity), drift-checked by the baseline diff so the epoch-compiled
 /// delivery plan can never silently change how many look-ups a
-/// workload performs (EXPERIMENTS.md §Perf, opt 8).
-pub const SCHEMA_VERSION: u32 = 3;
+/// workload performs (EXPERIMENTS.md §Perf, opt 8); v4 added the
+/// `skew` scenario axis and the drift-checked `imbalance` factor
+/// (max/mean per-rank step cost at run end — the quantity the
+/// load-balancing subsystem drives down, EXPERIMENTS.md §Load
+/// balancing).
+pub const SCHEMA_VERSION: u32 = 4;
 
 /// Timing differences below this many seconds are never regressions —
 /// the thread-rank substrate cannot resolve them reliably.
@@ -77,6 +82,10 @@ pub struct ScenarioResult {
     /// any drift at equal fingerprints is a behavior change in the
     /// delivery path.
     pub spike_lookups: u64,
+    /// End-of-run load-imbalance factor (max/mean per-rank step cost,
+    /// `SimReport::imbalance`). A pure function of the structural
+    /// trajectory, hence bit-deterministic and drift-checked.
+    pub imbalance: f64,
 }
 
 /// One complete benchmark trajectory (a `BENCH_*.json` file in memory).
@@ -192,9 +201,10 @@ impl BenchReport {
             out.push_str(&format!(" {} |", p.name()));
         }
         out.push_str(
-            " wall | bytes_sent | bytes_rma | collectives | spike_state | lookups |\n|---|",
+            " wall | bytes_sent | bytes_rma | collectives | spike_state | lookups | \
+             imbalance |\n|---|",
         );
-        out.push_str(&"---:|".repeat(ALL_PHASES.len() + 6));
+        out.push_str(&"---:|".repeat(ALL_PHASES.len() + 7));
         out.push('\n');
         for r in &self.results {
             out.push_str(&format!("| {} |", r.scenario.id()));
@@ -202,13 +212,14 @@ impl BenchReport {
                 out.push_str(&format!(" {:.4} |", r.phases[p.index()].median));
             }
             out.push_str(&format!(
-                " {:.4} | {} | {} | {} | {} | {} |\n",
+                " {:.4} | {} | {} | {} | {} | {} | {:.3} |\n",
                 r.wall.median,
                 r.comm.bytes_sent,
                 r.comm.bytes_rma,
                 r.comm.collectives,
                 r.spike_state_bytes,
-                r.spike_lookups
+                r.spike_lookups,
+                r.imbalance
             ));
         }
         out
@@ -272,6 +283,17 @@ impl BenchReport {
                         regressed: true,
                     });
                 }
+            }
+            // The imbalance factor is bit-deterministic (pure function
+            // of the structural trajectory): any change is drift.
+            if base.imbalance.to_bits() != cur.imbalance.to_bits() {
+                rows.push(DiffRow {
+                    scenario: id.clone(),
+                    metric: "counter_drift:imbalance".to_string(),
+                    baseline: base.imbalance,
+                    current: cur.imbalance,
+                    regressed: true,
+                });
             }
         }
         Ok(DiffReport { baseline_name: baseline.name.clone(), threshold, rows })
@@ -371,6 +393,7 @@ fn scenario_to_json(r: &ScenarioResult) -> Json {
         ("neurons_per_rank", Json::Num(r.scenario.neurons_per_rank as f64)),
         ("delta", Json::Num(r.scenario.delta as f64)),
         ("regime", Json::Str(r.scenario.regime.name().to_string())),
+        ("skew", Json::Bool(r.scenario.skew)),
         ("reps", Json::Num(r.reps as f64)),
         ("phases", Json::Obj(phases)),
         ("wall", summary_to_json(&r.wall)),
@@ -387,6 +410,7 @@ fn scenario_to_json(r: &ScenarioResult) -> Json {
         ),
         ("spike_state_bytes", Json::Num(r.spike_state_bytes as f64)),
         ("spike_lookups", Json::Num(r.spike_lookups as f64)),
+        ("imbalance", Json::Num(r.imbalance)),
     ])
 }
 
@@ -397,6 +421,7 @@ fn scenario_from_json(v: &Json) -> Result<ScenarioResult, String> {
         neurons_per_rank: v.req("neurons_per_rank")?.as_usize()?,
         delta: v.req("delta")?.as_usize()?,
         regime: Regime::from_name(v.req("regime")?.as_str()?)?,
+        skew: v.req("skew")?.as_bool()?,
     };
     let id = v.req("id")?.as_str()?;
     if id != scenario.id() {
@@ -430,6 +455,7 @@ fn scenario_from_json(v: &Json) -> Result<ScenarioResult, String> {
         },
         spike_state_bytes: v.req("spike_state_bytes")?.as_u64()?,
         spike_lookups: v.req("spike_lookups")?.as_u64()?,
+        imbalance: v.req("imbalance")?.as_f64()?,
     })
 }
 
@@ -454,6 +480,7 @@ mod tests {
                 neurons_per_rank: 64,
                 delta: 50,
                 regime: Regime::Active,
+                skew: false,
             },
             reps: 3,
             phases,
@@ -468,6 +495,7 @@ mod tests {
             },
             spike_state_bytes: 1_212,
             spike_lookups: 98_765,
+            imbalance: 1.25,
         }
     }
 
@@ -521,7 +549,7 @@ mod tests {
     #[test]
     fn unsupported_schema_version_is_rejected() {
         let text = sample_report().to_json().replace(
-            "\"schema_version\": 3",
+            "\"schema_version\": 4",
             "\"schema_version\": 99",
         );
         let err = BenchReport::from_json(&text).unwrap_err();
@@ -530,8 +558,8 @@ mod tests {
         // has no spike_lookups to drift-check against, so cross-schema
         // trajectories are not comparable.
         let text = sample_report().to_json().replace(
+            "\"schema_version\": 4",
             "\"schema_version\": 3",
-            "\"schema_version\": 2",
         );
         let err = BenchReport::from_json(&text).unwrap_err();
         assert!(err.contains("schema version"), "{err}");
@@ -623,6 +651,29 @@ mod tests {
         }
         assert!(md.contains("spike_state"), "{md}");
         assert!(md.contains("lookups"), "{md}");
+        assert!(md.contains("imbalance"), "{md}");
+        assert!(md.contains("1.250"), "{md}");
         assert_eq!(md.lines().count(), 2 + 2); // header + separator + 2 rows
+    }
+
+    #[test]
+    fn imbalance_drift_is_flagged_and_field_is_required() {
+        let base = sample_report();
+        let mut cur = sample_report();
+        cur.results[0].imbalance += 0.125;
+        let diff = cur.diff(&base, 0.2).unwrap();
+        assert_eq!(diff.regressions(), 1);
+        assert!(diff.render().contains("COUNTER DRIFT imbalance"));
+        // The v4 schema requires the field (and the skew axis) on every
+        // scenario.
+        let text = base.to_json();
+        assert!(text.contains("\"imbalance\""));
+        assert!(text.contains("\"skew\""));
+        let broken = text.replace("\"imbalance\"", "\"imbalance_gone\"");
+        let err = BenchReport::from_json(&broken).unwrap_err();
+        assert!(err.contains("imbalance"), "{err}");
+        let broken = text.replace("\"skew\"", "\"skew_gone\"");
+        let err = BenchReport::from_json(&broken).unwrap_err();
+        assert!(err.contains("skew"), "{err}");
     }
 }

@@ -30,6 +30,7 @@ pub fn run_scenario(scenario: &Scenario, settings: &RunSettings) -> Result<Scena
     let mut comm = CounterSnapshot::default();
     let mut spike_state_bytes = 0u64;
     let mut spike_lookups = 0u64;
+    let mut imbalance = 1.0f64;
     for rep in 0..settings.reps.max(1) {
         let report = run_simulation(&cfg)?;
         for p in ALL_PHASES {
@@ -75,6 +76,20 @@ pub fn run_scenario(scenario: &Scenario, settings: &RunSettings) -> Result<Scena
             );
         }
         spike_lookups = lookups;
+        // The end-of-run imbalance factor is a pure function of the
+        // (seeded) structural trajectory — neurons, edges, partners —
+        // so it must repeat exactly too, migrations included.
+        let imb = report.imbalance();
+        if rep > 0 && imb.to_bits() != imbalance.to_bits() {
+            anyhow::bail!(
+                "imbalance drifted between repetitions of {} ({} then {}) — \
+                 determinism bug in the load-balancing path",
+                scenario.id(),
+                imbalance,
+                imb
+            );
+        }
+        imbalance = imb;
     }
     let mut phases = [Summary::default(); ALL_PHASES.len()];
     for p in ALL_PHASES {
@@ -88,6 +103,7 @@ pub fn run_scenario(scenario: &Scenario, settings: &RunSettings) -> Result<Scena
         comm,
         spike_state_bytes,
         spike_lookups,
+        imbalance,
     })
 }
 
@@ -138,6 +154,7 @@ mod tests {
             neurons_per_rank: 16,
             delta: 30,
             regime: Regime::Active,
+            skew: false,
         };
         let settings = tiny_settings();
         let a = run_scenario(&sc, &settings).unwrap();
@@ -158,6 +175,41 @@ mod tests {
         // per remote in-edge per step; an active 2-rank net has some).
         assert_eq!(a.spike_lookups, b.spike_lookups);
         assert!(a.spike_lookups > 0, "active cross-rank net must look up spikes");
+        // The imbalance factor records and repeats exactly.
+        assert_eq!(a.imbalance.to_bits(), b.imbalance.to_bits());
+        assert!(a.imbalance >= 1.0 && a.imbalance.is_finite());
+    }
+
+    #[test]
+    fn skewed_scenario_rebalances_below_its_unbalanced_twin() {
+        // The headline demo in miniature: the same skewed start WITHOUT
+        // balancing ends measurably more imbalanced than the skewed
+        // cell (which migrates boundary cells until even).
+        let settings =
+            RunSettings { steps: 150, plasticity_interval: 50, warmup: 0, reps: 1, seed: 42 };
+        let skewed = Scenario {
+            alg: AlgGen::New,
+            ranks: 2,
+            neurons_per_rank: 32,
+            delta: 50,
+            regime: Regime::Active,
+            skew: true,
+        };
+        let balanced = run_scenario(&skewed, &settings).unwrap();
+        // Control: identical skewed start, balancing forced off.
+        let mut control_cfg = skewed.config(&settings);
+        control_cfg.balance_every = 0;
+        let control = run_simulation(&control_cfg).unwrap();
+        assert!(
+            balanced.imbalance < control.imbalance(),
+            "balancing must beat the frozen skew: {} vs {}",
+            balanced.imbalance,
+            control.imbalance()
+        );
+        // The frozen 48/16 skew reads clearly imbalanced; the balanced
+        // run ends near even.
+        assert!(control.imbalance() > 1.3, "control {}", control.imbalance());
+        assert!(balanced.imbalance < 1.2, "balanced {}", balanced.imbalance);
     }
 
     #[test]

@@ -106,26 +106,32 @@ pub struct Scenario {
     /// must time equal (a harness self-test).
     pub delta: usize,
     pub regime: Regime,
+    /// Skewed-load cell: start from a deliberately uneven rank → cell
+    /// split ([`skewed_init_cells`]) with load balancing enabled, so
+    /// the recorded end-of-run `imbalance` demonstrates the migration
+    /// subsystem ironing the skew out (EXPERIMENTS.md §Load balancing).
+    pub skew: bool,
 }
 
 impl Scenario {
     /// Stable identifier used as the JSON key and in baseline diffs,
-    /// e.g. `new_r4_n128_d100_active`.
+    /// e.g. `new_r4_n128_d100_active` (`_skew` suffix for skewed cells).
     pub fn id(&self) -> String {
         format!(
-            "{}_r{}_n{}_d{}_{}",
+            "{}_r{}_n{}_d{}_{}{}",
             self.alg.name(),
             self.ranks,
             self.neurons_per_rank,
             self.delta,
-            self.regime.name()
+            self.regime.name(),
+            if self.skew { "_skew" } else { "" }
         )
     }
 
     /// The simulation config this cell runs.
     pub fn config(&self, settings: &RunSettings) -> SimConfig {
         let (connectivity_alg, spike_alg) = self.alg.algorithms();
-        SimConfig {
+        let mut cfg = SimConfig {
             ranks: self.ranks,
             neurons_per_rank: self.neurons_per_rank,
             steps: settings.steps,
@@ -136,8 +142,45 @@ impl Scenario {
             bg_mean: self.regime.bg_mean(),
             seed: settings.seed,
             ..SimConfig::default()
+        };
+        if self.skew {
+            cfg.balance_init_cells = skewed_init_cells(self.ranks);
+            // Balance epochs must land on both connectivity-update and
+            // spike-epoch boundaries (config validation enforces it).
+            cfg.balance_every = lcm(settings.plasticity_interval, self.delta);
+            cfg.balance_threshold = 1.05;
+            cfg.balance_max_moves = 1;
         }
+        cfg
     }
+}
+
+fn gcd(a: usize, b: usize) -> usize {
+    if b == 0 {
+        a
+    } else {
+        gcd(b, a % b)
+    }
+}
+
+fn lcm(a: usize, b: usize) -> usize {
+    a / gcd(a, b) * b
+}
+
+/// A deterministic skewed rank → cell split for `ranks` ranks: every
+/// rank after the first gets half its fair share of Morton cells
+/// (at least one); rank 0 absorbs the rest. For 2 ranks that is "6,2" —
+/// rank 0 starts with 3× rank 1's neurons.
+pub fn skewed_init_cells(ranks: usize) -> String {
+    let num_cells = crate::octree::DomainDecomposition::new(ranks, 1.0).num_cells;
+    let fair = num_cells / ranks;
+    let small = (fair / 2).max(1);
+    let rest = num_cells - small * (ranks - 1);
+    let mut parts = vec![rest.to_string()];
+    for _ in 1..ranks {
+        parts.push(small.to_string());
+    }
+    parts.join(",")
 }
 
 /// Axis value lists; the matrix is their cross product.
@@ -148,6 +191,9 @@ pub struct MatrixSpec {
     pub neurons: Vec<usize>,
     pub deltas: Vec<usize>,
     pub regimes: Vec<Regime>,
+    /// Whether every cell of this matrix runs the skewed-load +
+    /// balancing variant (the `smoke-skew` preset).
+    pub skew: bool,
 }
 
 impl MatrixSpec {
@@ -161,7 +207,14 @@ impl MatrixSpec {
                 for &neurons_per_rank in &self.neurons {
                     for &delta in &self.deltas {
                         for &regime in &self.regimes {
-                            out.push(Scenario { alg, ranks, neurons_per_rank, delta, regime });
+                            out.push(Scenario {
+                                alg,
+                                ranks,
+                                neurons_per_rank,
+                                delta,
+                                regime,
+                                skew: self.skew,
+                            });
                         }
                     }
                 }
@@ -174,8 +227,10 @@ impl MatrixSpec {
 /// Named matrix presets. `smoke` is the CI gate (2 ranks, seconds to
 /// run), `smoke8` its 8-rank sibling (same tiny schedule, wide enough
 /// that a multi-rank regression in the exchange routing shows up),
-/// `quick` the 16-cell default, `full` the 32-cell sweep that adds the
-/// quiet firing regime.
+/// `smoke-skew` the load-balancing gate (skewed 48/16 start, migration
+/// enabled, end-of-run `imbalance` recorded), `quick` the 16-cell
+/// default, `full` the 32-cell sweep that adds the quiet firing
+/// regime.
 pub fn preset(name: &str) -> Result<(MatrixSpec, RunSettings), String> {
     let both_algs = vec![AlgGen::Old, AlgGen::New];
     match name {
@@ -186,6 +241,7 @@ pub fn preset(name: &str) -> Result<(MatrixSpec, RunSettings), String> {
                 neurons: vec![16],
                 deltas: vec![50],
                 regimes: vec![Regime::Active],
+                skew: false,
             },
             RunSettings {
                 steps: 100,
@@ -202,9 +258,27 @@ pub fn preset(name: &str) -> Result<(MatrixSpec, RunSettings), String> {
                 neurons: vec![32],
                 deltas: vec![50],
                 regimes: vec![Regime::Active],
+                skew: false,
             },
             RunSettings {
                 steps: 100,
+                plasticity_interval: 50,
+                warmup: 0,
+                reps: 2,
+                seed: 42,
+            },
+        )),
+        "smoke-skew" => Ok((
+            MatrixSpec {
+                algs: both_algs,
+                ranks: vec![2],
+                neurons: vec![32],
+                deltas: vec![50],
+                regimes: vec![Regime::Active],
+                skew: true,
+            },
+            RunSettings {
+                steps: 150,
                 plasticity_interval: 50,
                 warmup: 0,
                 reps: 2,
@@ -218,6 +292,7 @@ pub fn preset(name: &str) -> Result<(MatrixSpec, RunSettings), String> {
                 neurons: vec![64, 128],
                 deltas: vec![50, 100],
                 regimes: vec![Regime::Active],
+                skew: false,
             },
             RunSettings {
                 steps: 200,
@@ -234,6 +309,7 @@ pub fn preset(name: &str) -> Result<(MatrixSpec, RunSettings), String> {
                 neurons: vec![64, 128],
                 deltas: vec![50, 100],
                 regimes: vec![Regime::Quiet, Regime::Active],
+                skew: false,
             },
             RunSettings {
                 steps: 400,
@@ -243,7 +319,9 @@ pub fn preset(name: &str) -> Result<(MatrixSpec, RunSettings), String> {
                 seed: 42,
             },
         )),
-        other => Err(format!("unknown bench preset {other:?} (smoke | smoke8 | quick | full)")),
+        other => Err(format!(
+            "unknown bench preset {other:?} (smoke | smoke8 | smoke-skew | quick | full)"
+        )),
     }
 }
 
@@ -291,14 +369,17 @@ mod tests {
 
     #[test]
     fn scenario_id_is_stable() {
-        let sc = Scenario {
+        let mut sc = Scenario {
             alg: AlgGen::New,
             ranks: 4,
             neurons_per_rank: 128,
             delta: 100,
             regime: Regime::Active,
+            skew: false,
         };
         assert_eq!(sc.id(), "new_r4_n128_d100_active");
+        sc.skew = true;
+        assert_eq!(sc.id(), "new_r4_n128_d100_active_skew");
     }
 
     #[test]
@@ -310,6 +391,7 @@ mod tests {
             neurons_per_rank: 32,
             delta: 50,
             regime: Regime::Quiet,
+            skew: false,
         };
         let cfg = sc.config(&settings);
         assert_eq!(cfg.connectivity_alg, ConnectivityAlg::OldRma);
@@ -317,6 +399,36 @@ mod tests {
         assert_eq!(cfg.bg_mean, 3.0);
         assert_eq!(cfg.delta, 50);
         assert_eq!(cfg.steps, settings.steps);
+        assert_eq!(cfg.balance_every, 0, "non-skew cells never balance");
+    }
+
+    #[test]
+    fn smoke_skew_preset_enables_balancing_with_a_valid_split() {
+        let (spec, settings) = preset("smoke-skew").unwrap();
+        let cells = spec.cells();
+        assert_eq!(cells.len(), 2, "old + new, skewed");
+        for cell in &cells {
+            assert!(cell.skew);
+            assert!(cell.id().ends_with("_skew"), "{}", cell.id());
+            let cfg = cell.config(&settings);
+            cfg.validate().unwrap();
+            assert_eq!(cfg.balance_init_cells, "6,2");
+            assert_eq!(cfg.balance_every, settings.plasticity_interval);
+        }
+    }
+
+    #[test]
+    fn skewed_init_cells_sum_to_the_morton_domain() {
+        for ranks in [2usize, 3, 4, 8] {
+            let split = skewed_init_cells(ranks);
+            let parts: Vec<usize> =
+                split.split(',').map(|p| p.parse().unwrap()).collect();
+            assert_eq!(parts.len(), ranks, "{split}");
+            let cells = crate::octree::DomainDecomposition::new(ranks, 1.0).num_cells;
+            assert_eq!(parts.iter().sum::<usize>(), cells, "{split}");
+            assert!(parts.iter().all(|&p| p >= 1), "{split}");
+        }
+        assert_eq!(skewed_init_cells(2), "6,2");
     }
 
     #[test]

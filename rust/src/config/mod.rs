@@ -79,9 +79,9 @@ pub enum NeuronModel {
 ///
 /// // Configs round-trip through the INI dialect snapshots embed.
 /// let back = SimConfig::from_ini(&cfg.to_ini()).unwrap();
-/// assert_eq!(back.ranks, 4);
+/// assert_eq!(back, cfg);
 /// ```
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct SimConfig {
     // -- topology ------------------------------------------------------
     /// Number of simulated MPI ranks (threads).
@@ -136,6 +136,25 @@ pub struct SimConfig {
     pub checkpoint_every: usize,
     /// Directory snapshots are written to (one file per checkpoint).
     pub checkpoint_dir: String,
+
+    // -- load balancing (see the `balance` module) -----------------------
+    /// Check rank-load imbalance (and migrate neurons if it exceeds the
+    /// threshold) every this many steps; 0 disables balancing entirely
+    /// (the default — the historical fixed-stride behavior). Must be a
+    /// multiple of `plasticity_interval`: migrations piggyback on
+    /// connectivity-update epochs.
+    pub balance_every: usize,
+    /// Migrate only while max/mean step cost exceeds this factor
+    /// (1.0 = perfectly balanced).
+    pub balance_threshold: f64,
+    /// Boundary cells migrated per balance epoch (at most).
+    pub balance_max_moves: usize,
+    /// Explicit initial rank → cell split, as comma-separated cell
+    /// counts summing to the domain's 8^b Morton cells (e.g. "6,2").
+    /// Empty = the uniform default. A skewed split seeds a skewed
+    /// neuron distribution — the scenario the balancer demonstrably
+    /// irons out (EXPERIMENTS.md §Load balancing).
+    pub balance_init_cells: String,
 }
 
 impl Default for SimConfig {
@@ -164,6 +183,10 @@ impl Default for SimConfig {
             artifacts_dir: "artifacts".to_string(),
             checkpoint_every: 0,
             checkpoint_dir: String::new(),
+            balance_every: 0,
+            balance_threshold: 1.2,
+            balance_max_moves: 1,
+            balance_init_cells: String::new(),
         }
     }
 }
@@ -282,6 +305,14 @@ impl SimConfig {
                 self.checkpoint_every = value.parse().map_err(|_| bad(key))?
             }
             "instrumentation.checkpoint_dir" => self.checkpoint_dir = value.to_string(),
+            "balance.every" => self.balance_every = value.parse().map_err(|_| bad(key))?,
+            "balance.threshold" => {
+                self.balance_threshold = value.parse().map_err(|_| bad(key))?
+            }
+            "balance.max_moves" => {
+                self.balance_max_moves = value.parse().map_err(|_| bad(key))?
+            }
+            "balance.init_cells" => self.balance_init_cells = value.to_string(),
             _ => return Err(format!("unknown config key: {key}")),
         }
         Ok(())
@@ -370,6 +401,16 @@ impl SimConfig {
         if !self.checkpoint_dir.is_empty() {
             out.push_str(&format!("checkpoint_dir = {}\n", self.checkpoint_dir));
         }
+        out.push_str(&format!(
+            "[balance]\n\
+             every = {}\n\
+             threshold = {}\n\
+             max_moves = {}\n",
+            self.balance_every, self.balance_threshold, self.balance_max_moves,
+        ));
+        if !self.balance_init_cells.is_empty() {
+            out.push_str(&format!("init_cells = {}\n", self.balance_init_cells));
+        }
         out
     }
 
@@ -445,6 +486,42 @@ impl SimConfig {
                     .into(),
             );
         }
+        // The initial partition must be constructible (init_cells format,
+        // per-rank cell minimums, Morton cell totals)...
+        crate::balance::Partition::from_config(self)?;
+        // ...and active balancing needs sane knobs: migrations piggyback
+        // on connectivity-update epochs, and a threshold at or below 1.0
+        // would migrate forever (1.0 is unreachable in general).
+        if self.balance_every > 0 {
+            if self.balance_every % self.plasticity_interval != 0 {
+                return Err(format!(
+                    "balance.every ({}) must be a multiple of schedule.plasticity_interval \
+                     ({}): migrations run at connectivity-update epochs",
+                    self.balance_every, self.plasticity_interval
+                ));
+            }
+            // Under the frequency algorithm a migration must land on a
+            // spike-epoch boundary too: the very next step then runs a
+            // fresh frequency exchange routed by the new ownership, so
+            // a formerly-local pair (for which no entry exists anywhere
+            // to migrate) never silently reconstructs against 0.0 for
+            // the rest of a straddled epoch.
+            if self.spike_alg == SpikeAlg::NewFrequency && self.balance_every % self.delta != 0
+            {
+                return Err(format!(
+                    "balance.every ({}) must be a multiple of schedule.delta ({}) under \
+                     the frequency spike algorithm: migrations must land on spike-epoch \
+                     boundaries so reconstruction state is rebuilt immediately",
+                    self.balance_every, self.delta
+                ));
+            }
+            if !(self.balance_threshold > 1.0 && self.balance_threshold.is_finite()) {
+                return Err("balance.threshold must be > 1.0 (max/mean cost factor)".into());
+            }
+            if self.balance_max_moves == 0 {
+                return Err("balance.max_moves must be >= 1 when balancing is on".into());
+            }
+        }
         Ok(())
     }
 }
@@ -518,30 +595,131 @@ target_calcium = 0.6
             record_calcium_every: 10,
             checkpoint_every: 100,
             checkpoint_dir: "ckpts".to_string(),
+            balance_every: 50,
+            balance_threshold: 1.375,
+            balance_max_moves: 2,
             ..SimConfig::default()
         };
         cfg.neuron.eps_target_ca = 0.65;
         cfg.neuron.nu_growth = 0.002;
         let back = SimConfig::from_ini(&cfg.to_ini()).unwrap();
-        assert_eq!(back.ranks, cfg.ranks);
-        assert_eq!(back.neurons_per_rank, cfg.neurons_per_rank);
-        assert_eq!(back.domain_size, cfg.domain_size);
-        assert_eq!(back.seed, cfg.seed);
-        assert_eq!(back.steps, cfg.steps);
-        assert_eq!(back.plasticity_interval, cfg.plasticity_interval);
-        assert_eq!(back.delta, cfg.delta);
-        assert_eq!(back.connectivity_alg, cfg.connectivity_alg);
-        assert_eq!(back.spike_alg, cfg.spike_alg);
-        assert_eq!(back.theta, cfg.theta);
-        assert_eq!(back.sigma, cfg.sigma);
-        assert_eq!(back.frac_excitatory, cfg.frac_excitatory);
-        assert_eq!(back.bg_mean, cfg.bg_mean);
-        assert_eq!(back.bg_std, cfg.bg_std);
-        assert_eq!(back.neuron.eps_target_ca, cfg.neuron.eps_target_ca);
-        assert_eq!(back.neuron.nu_growth, cfg.neuron.nu_growth);
-        assert_eq!(back.record_calcium_every, cfg.record_calcium_every);
-        assert_eq!(back.checkpoint_every, cfg.checkpoint_every);
-        assert_eq!(back.checkpoint_dir, cfg.checkpoint_dir);
+        assert_eq!(back, cfg, "every INI-expressible field must survive the round-trip");
+    }
+
+    #[test]
+    fn prop_parse_to_ini_is_identity() {
+        // The snapshot self-description contract for every key PRs 1-5
+        // added (checkpointing, balance) and everything before them:
+        // parse(to_ini(cfg)) == cfg over randomized INI-expressible
+        // configs. A key serialized but not parsed (or vice versa)
+        // would silently desynchronize resumed runs from their
+        // snapshots — exactly what this property pins down.
+        use crate::testing::forall;
+        forall(
+            "parse(to_ini(cfg)) == cfg",
+            60,
+            |rng| {
+                let mut cfg = SimConfig {
+                    ranks: 1 + rng.next_below(8),
+                    neurons_per_rank: 1 + rng.next_below(512),
+                    domain_size: 100.0 + rng.next_f64() * 900.0,
+                    seed: rng.next_u64(),
+                    steps: 1 + rng.next_below(5000),
+                    plasticity_interval: 1 + rng.next_below(200),
+                    delta: 1 + rng.next_below(200),
+                    connectivity_alg: match rng.next_below(3) {
+                        0 => ConnectivityAlg::OldRma,
+                        1 => ConnectivityAlg::NewLocationAware,
+                        _ => ConnectivityAlg::Direct,
+                    },
+                    spike_alg: if rng.bernoulli(0.5) {
+                        SpikeAlg::OldIds
+                    } else {
+                        SpikeAlg::NewFrequency
+                    },
+                    neuron_model: if rng.bernoulli(0.5) {
+                        NeuronModel::Izhikevich
+                    } else {
+                        NeuronModel::Poisson
+                    },
+                    theta: rng.next_f64() * 0.999,
+                    sigma: 1.0 + rng.next_f64() * 1000.0,
+                    frac_excitatory: rng.next_f64(),
+                    init_elements_lo: 1.0 + rng.next_f64(),
+                    bg_mean: rng.next_f64() * 10.0,
+                    bg_std: 0.5 + rng.next_f64(),
+                    record_calcium_every: rng.next_below(100),
+                    ..SimConfig::default()
+                };
+                cfg.init_elements_hi = cfg.init_elements_lo + rng.next_f64();
+                if rng.bernoulli(0.5) {
+                    cfg.checkpoint_every = 1 + rng.next_below(1000);
+                    cfg.checkpoint_dir = format!("ckpt_{}", rng.next_below(100));
+                }
+                if rng.bernoulli(0.5) {
+                    // Valid balancing knobs: every = multiple of both
+                    // the plasticity interval and (for the frequency
+                    // algorithm) the spike epoch, threshold > 1.
+                    cfg.delta = cfg.plasticity_interval;
+                    cfg.balance_every =
+                        cfg.plasticity_interval * (1 + rng.next_below(4));
+                    cfg.balance_threshold = 1.0 + 0.001 + rng.next_f64();
+                    cfg.balance_max_moves = 1 + rng.next_below(4);
+                }
+                // Neuron parameters with INI keys are f32: Display
+                // round-trips them exactly too.
+                cfg.neuron.eps_target_ca = rng.next_f32();
+                cfg.neuron.nu_growth = rng.next_f32() * 0.01;
+                cfg.neuron.tau_ca = 1.0 + rng.next_f32() * 100.0;
+                cfg.neuron.beta_ca = rng.next_f32();
+                cfg
+            },
+            |cfg| {
+                cfg.validate().map_err(|e| format!("generated config invalid: {e}"))?;
+                let back = SimConfig::from_ini(&cfg.to_ini())
+                    .map_err(|e| format!("re-parse failed: {e}"))?;
+                if &back != cfg {
+                    return Err(format!("round-trip changed the config:\n{back:#?}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn skewed_init_cells_roundtrip_and_validate() {
+        let mut cfg = SimConfig {
+            ranks: 2,
+            neurons_per_rank: 32,
+            plasticity_interval: 50,
+            delta: 50,
+            balance_every: 50,
+            balance_threshold: 1.1,
+            balance_init_cells: "6,2".to_string(),
+            ..SimConfig::default()
+        };
+        cfg.validate().unwrap();
+        let back = SimConfig::from_ini(&cfg.to_ini()).unwrap();
+        assert_eq!(back, cfg);
+        // Malformed splits are rejected by validate.
+        cfg.balance_init_cells = "5,2".to_string();
+        assert!(cfg.validate().unwrap_err().contains("Morton"), "cell sum must match");
+        cfg.balance_init_cells = "6,2".to_string();
+        cfg.balance_every = 30; // not a multiple of 50
+        assert!(cfg.validate().unwrap_err().contains("multiple"));
+        cfg.balance_every = 50;
+        cfg.balance_threshold = 1.0;
+        assert!(cfg.validate().unwrap_err().contains("threshold"));
+        // Under the frequency algorithm, balance epochs must land on
+        // spike-epoch boundaries too — a migration straddling an epoch
+        // would leave formerly-local pairs reconstructing against 0.0.
+        cfg.balance_threshold = 1.1;
+        cfg.delta = 30;
+        let err = cfg.validate().unwrap_err();
+        assert!(err.contains("schedule.delta"), "{err}");
+        // The old (per-step id) algorithm has no spike epochs: allowed.
+        cfg.spike_alg = SpikeAlg::OldIds;
+        cfg.validate().unwrap();
     }
 
     #[test]

@@ -10,6 +10,9 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
+use crate::balance::{
+    plan_rebalance, MigrationBatch, NeuronRecord, OwnershipMap, Partition, RankCost,
+};
 use crate::barnes_hut::{self, new::FormationScratch, FormationStats};
 use crate::comm::{gather_all, run_ranks, CounterSnapshot, ThreadComm};
 use crate::config::{Backend, ConnectivityAlg, SimConfig, SpikeAlg};
@@ -41,6 +44,17 @@ pub struct RankState {
     pub pop: Population,
     pub store: SynapseStore,
     pub tree: Octree,
+    /// The replicated cell-level partition (identical on every rank).
+    /// Migration replaces it — together with `owners`, `decomp`, and
+    /// every structure derived from ownership — wholesale.
+    pub partition: Partition,
+    /// The id → rank routing view of `partition` (`Stride` until a
+    /// migration or skewed init makes it a `Ranges` table).
+    pub owners: OwnershipMap,
+    /// The spatial decomposition of `partition`'s cell assignment.
+    pub decomp: DomainDecomposition,
+    /// Migrations applied in this process segment.
+    pub migrations: u64,
     pub id_exchange: IdExchange,
     pub freq_exchange: FrequencyExchange,
     /// Epoch-compiled CSR delivery plan (EXPERIMENTS.md §Perf, opt 8).
@@ -76,23 +90,46 @@ pub struct RankState {
 }
 
 impl RankState {
-    /// Build the initial state of `rank` (placement, octree, RNG streams).
-    pub fn init(cfg: &SimConfig, decomp: &DomainDecomposition, comm: &ThreadComm) -> RankState {
+    /// Build the initial state of `rank` (placement, octree, RNG
+    /// streams) under the partition `cfg` describes (uniform by
+    /// default, skewed when `balance.init_cells` says so).
+    pub fn init(cfg: &SimConfig, comm: &ThreadComm) -> RankState {
+        let partition = Partition::from_config(cfg).expect("config was validated");
+        Self::init_with_partition(cfg, partition, comm)
+    }
+
+    /// `init` under an explicit (pre-validated) partition.
+    pub fn init_with_partition(
+        cfg: &SimConfig,
+        partition: Partition,
+        comm: &ThreadComm,
+    ) -> RankState {
         let rank = comm.rank();
+        let owners = partition.ownership();
+        let decomp = partition.decomposition(cfg.domain_size);
         let root = Rng::new(cfg.seed);
         let mut rng_model = root.fork(1_000 + rank as u64);
         let rng_conn = root.fork(2_000 + rank as u64);
         let rng_spikes = root.fork(3_000 + rank as u64);
 
-        let cells: Vec<_> =
-            decomp.cells_of_rank(rank).map(|c| decomp.cell_bounds(c)).collect();
-        let pop = Population::init_in_cells(cfg, rank, &cells, &mut rng_model);
-        let tree = Octree::build(decomp, rank, pop.first_id, &pop.positions);
+        // One contiguous id block per owned Morton cell — the
+        // cell ↔ id-block alignment the migration protocol relies on.
+        let cells: Vec<((crate::util::Vec3, crate::util::Vec3), u64)> = partition
+            .cells_of_rank(rank)
+            .map(|c| (decomp.cell_bounds(c), partition.cell_counts[c]))
+            .collect();
+        let pop =
+            Population::init_in_cells(cfg, owners.first_id(rank), &cells, &mut rng_model);
+        let tree = Octree::build(&decomp, rank, pop.first_id, &pop.positions);
         let n = pop.len();
         let mut state = RankState {
             pop,
-            store: SynapseStore::new(n, cfg.neurons_per_rank as u64),
+            store: SynapseStore::with_owners(n, owners.clone()),
             tree,
+            partition,
+            owners,
+            decomp,
+            migrations: 0,
             id_exchange: IdExchange::new(comm.size()),
             freq_exchange: FrequencyExchange::new(cfg.delta, rng_spikes),
             plan: DeliveryPlan::default(),
@@ -182,23 +219,29 @@ impl RankState {
     /// `validate_for_branch` when deliberately forking a scenario).
     pub fn restore(
         cfg: &SimConfig,
-        decomp: &DomainDecomposition,
         comm: &ThreadComm,
         snap: &Snapshot,
     ) -> Result<RankState, String> {
-        let sec = load_validated_section(cfg, snap, comm.rank())?;
-        RankState::restore_section(cfg, decomp, comm, sec)
+        let partition = snap.partition_for_resume();
+        partition
+            .validate(cfg.ranks, cfg.total_neurons() as u64)
+            .map_err(|e| format!("snapshot partition does not fit the config: {e}"))?;
+        let owners = partition.ownership();
+        let sec = load_validated_section(cfg, &owners, snap, comm.rank())?;
+        RankState::restore_section(cfg, partition, comm, sec)
     }
 
     /// `restore` from an already decoded and validated section (see
-    /// `load_validated_section`).
+    /// `load_validated_section`), under the snapshot's partition.
     fn restore_section(
         cfg: &SimConfig,
-        decomp: &DomainDecomposition,
+        partition: Partition,
         comm: &ThreadComm,
         sec: RankSection,
     ) -> Result<RankState, String> {
         let rank = comm.rank();
+        let owners = partition.ownership();
+        let decomp = partition.decomposition(cfg.domain_size);
         let pop = Population {
             first_id: sec.first_id,
             positions: sec.positions,
@@ -232,13 +275,13 @@ impl RankState {
             sec.connected_ax,
             sec.connected_den_exc,
             sec.connected_den_inh,
-            cfg.neurons_per_rank as u64,
+            owners.clone(),
         );
         // The octree is structural over the (immutable) positions;
         // rebuilding it reproduces the exact arena the original run had,
         // and its aggregates are recomputed from scratch at every
         // plasticity phase anyway.
-        let tree = Octree::build(decomp, rank, pop.first_id, &pop.positions);
+        let tree = Octree::build(&decomp, rank, pop.first_id, &pop.positions);
         let freq_exchange =
             FrequencyExchange::from_parts(cfg.delta, sec.freq_entries, sec.rng_spikes)
                 .map_err(|e| format!("rank {rank}: {e}"))?;
@@ -246,6 +289,10 @@ impl RankState {
             pop,
             store,
             tree,
+            partition,
+            owners,
+            decomp,
+            migrations: 0,
             id_exchange: IdExchange::new(comm.size()),
             freq_exchange,
             plan: DeliveryPlan::default(),
@@ -367,17 +414,13 @@ impl RankState {
     /// Phase C: the connectivity update — deletion, octree refresh (incl.
     /// branch all-to-all and, for the old algorithm, RMA-window publish),
     /// then formation with the configured algorithm.
-    pub fn plasticity_phase(
-        &mut self,
-        cfg: &SimConfig,
-        decomp: &DomainDecomposition,
-        comm: &ThreadComm,
-    ) {
-        let npr = cfg.neurons_per_rank as u64;
-        // C1: deletion.
+    pub fn plasticity_phase(&mut self, cfg: &SimConfig, comm: &ThreadComm) {
+        // C1: deletion, routed through the ownership map (the stride
+        // fast path when no migration ever happened).
+        let owners = self.owners.clone();
         let (pop, store, rng) = (&self.pop, &mut self.store, &mut self.rng_conn);
         let dstats = self.timers.time(Phase::DeleteSynapses, || {
-            run_deletion_phase(comm, pop, store, rng, |id| (id / npr) as usize)
+            run_deletion_phase(comm, pop, store, rng, |id| owners.rank_of(id) as usize)
         });
         self.deletion.axonal_retractions += dstats.axonal_retractions;
         self.deletion.dendritic_retractions += dstats.dendritic_retractions;
@@ -412,7 +455,7 @@ impl RankState {
         self.tree.reset_and_set_leaves(self.pop.first_id, &vac.exc, &vac.inh);
         self.tree.aggregate_local();
 
-        let own_cells = decomp.cells_of_rank(comm.rank());
+        let own_cells = self.decomp.cells_of_rank(comm.rank());
         let payloads = if cfg.connectivity_alg == ConnectivityAlg::OldRma {
             let win = serialize_local_subtrees(&self.tree, own_cells.clone());
             comm.publish_window(OCTREE_WINDOW, win.bytes);
@@ -439,6 +482,7 @@ impl RankState {
                 &mut self.store,
                 &mut self.cache,
                 cfg,
+                &self.owners,
                 &mut self.rng_conn,
             ),
             ConnectivityAlg::NewLocationAware => barnes_hut::new::run_formation(
@@ -455,6 +499,7 @@ impl RankState {
                 &self.pop,
                 &mut self.store,
                 cfg,
+                &self.owners,
                 &mut self.rng_conn,
             ),
         };
@@ -476,7 +521,6 @@ impl RankState {
     pub fn step(
         &mut self,
         cfg: &SimConfig,
-        decomp: &DomainDecomposition,
         comm: &ThreadComm,
         step: usize,
         xla: Option<&XlaHandle>,
@@ -484,12 +528,251 @@ impl RankState {
         self.spike_phase(cfg, comm, step);
         self.activity_phase(cfg, xla)?;
         if (step + 1) % cfg.plasticity_interval == 0 {
-            self.plasticity_phase(cfg, decomp, comm);
+            self.plasticity_phase(cfg, comm);
+            // Balance epochs piggyback on connectivity updates (the
+            // config validates the divisibility), so migration always
+            // sees a freshly recompiled, cross-validated world.
+            if cfg.balance_every > 0 && (step + 1) % cfg.balance_every == 0 {
+                self.rebalance_phase(cfg, comm);
+            }
         }
         if cfg.record_calcium_every > 0 && step % cfg.record_calcium_every == 0 {
             self.calcium_trace.push((step, self.pop.ca.clone()));
         }
         Ok(())
+    }
+
+    /// The per-rank load measurement the balance decision gathers.
+    pub fn measure_cost(&self) -> RankCost {
+        RankCost {
+            neurons: self.pop.len() as u64,
+            local_edges: (self.store.total_in() + self.store.total_out()) as u64,
+            remote_partners: self.plan.slot_count() as u64,
+            nanos: self.timers.total().as_nanos() as u64,
+        }
+    }
+
+    /// One balance epoch: gather every rank's cost, run the (identical,
+    /// deterministic) decision, and migrate if it says so. Collective —
+    /// every rank must call this at the same step.
+    fn rebalance_phase(&mut self, cfg: &SimConfig, comm: &ThreadComm) {
+        let all = gather_all(comm, &[self.measure_cost()]);
+        let costs: Vec<RankCost> = all.iter().map(|batch| batch[0]).collect();
+        if let Some(new_part) = plan_rebalance(
+            &self.partition,
+            &costs,
+            cfg.balance_threshold,
+            cfg.balance_max_moves,
+        ) {
+            self.apply_partition(cfg, comm, new_part);
+        }
+    }
+
+    /// Execute a migration: pack every locally-owned neuron whose new
+    /// owner differs, all-to-all the batches (counted traffic — moving
+    /// computation is communication), and rebuild population, store,
+    /// octree, exchange state, and delivery plan under the new
+    /// ownership. `SynapseStore::check_invariants` and
+    /// `DeliveryPlan::check_against` are hard-checked after every
+    /// migration (not just in debug builds).
+    fn apply_partition(&mut self, cfg: &SimConfig, comm: &ThreadComm, new_part: Partition) {
+        let me = comm.rank();
+        let size = comm.size();
+        let new_owners = new_part.ownership();
+
+        // Pack departures (and the frequency entries their in-edge
+        // sources have installed, so mid-epoch reconstruction continues
+        // seamlessly on the new owner). Deliberately O(local neurons):
+        // every record is built and the whole SoA world rebuilt below,
+        // even though only boundary-cell movers cross the wire — same
+        // ground-truth-rebuild philosophy as snapshot restore. At one
+        // migration per balance epoch (hundreds of steps) the O(n)
+        // repack is noise next to a single plasticity phase; splicing
+        // contiguous keeper ranges in place would save copies at a real
+        // complexity/bug cost and is left until a profile demands it.
+        let mut batches: Vec<MigrationBatch> =
+            (0..size).map(|_| MigrationBatch::default()).collect();
+        let mut freq_sets: Vec<std::collections::BTreeMap<u64, f32>> =
+            (0..size).map(|_| Default::default()).collect();
+        let mut records: Vec<NeuronRecord> = Vec::new();
+        for local in 0..self.pop.len() {
+            let id = self.pop.first_id + local as u64;
+            let rec = NeuronRecord {
+                id,
+                pos: self.pop.positions[local],
+                is_excitatory: self.pop.is_excitatory[local],
+                v: self.pop.v[local],
+                u: self.pop.u[local],
+                ca: self.pop.ca[local],
+                z_ax: self.pop.z_ax[local],
+                z_den_exc: self.pop.z_den_exc[local],
+                z_den_inh: self.pop.z_den_inh[local],
+                i_syn: self.pop.i_syn[local],
+                noise: self.pop.noise[local],
+                fired: self.pop.fired[local],
+                epoch_spikes: self.pop.epoch_spikes[local],
+                out_edges: self.store.out_edges[local].clone(),
+                in_edges: self.store.in_edges[local]
+                    .iter()
+                    .map(|e| (e.source, e.source_exc))
+                    .collect(),
+            };
+            let dest = new_owners.rank_of(id) as usize;
+            if dest == me {
+                records.push(rec);
+            } else {
+                for e in &self.store.in_edges[local] {
+                    if let Some(f) = self.freq_exchange.entry_of(e.source) {
+                        freq_sets[dest].insert(e.source, f);
+                    }
+                }
+                batches[dest].records.push(rec);
+            }
+        }
+        for (dest, set) in freq_sets.into_iter().enumerate() {
+            batches[dest].freq_entries = set.into_iter().collect();
+        }
+
+        // Ship through the counted all-to-all.
+        let sends: Vec<Vec<u8>> = batches
+            .iter()
+            .enumerate()
+            .map(|(d, b)| if d == me || b.is_empty() { Vec::new() } else { b.encode() })
+            .collect();
+        let recvs = comm.all_to_all(sends);
+        let mut incoming_freqs: Vec<(u64, f32)> = Vec::new();
+        for (src, buf) in recvs.iter().enumerate() {
+            if src == me || buf.is_empty() {
+                continue;
+            }
+            let batch = MigrationBatch::decode(buf)
+                .unwrap_or_else(|e| panic!("rank {me}: malformed migration batch: {e}"));
+            records.extend(batch.records);
+            incoming_freqs.extend(batch.freq_entries);
+        }
+
+        // The kept + received records must tile the new contiguous id
+        // range exactly.
+        records.sort_unstable_by_key(|r| r.id);
+        let first = new_owners.first_id(me);
+        let count = new_owners.count(me) as usize;
+        assert_eq!(records.len(), count, "rank {me}: migration lost or duplicated neurons");
+        for (i, r) in records.iter().enumerate() {
+            assert_eq!(r.id, first + i as u64, "rank {me}: migrated range not contiguous");
+        }
+
+        // Rebuild the population (SoA) and store from ground truth.
+        let n = records.len();
+        let mut positions = Vec::with_capacity(n);
+        let mut is_excitatory = Vec::with_capacity(n);
+        let mut v = Vec::with_capacity(n);
+        let mut u = Vec::with_capacity(n);
+        let mut ca = Vec::with_capacity(n);
+        let mut z_ax = Vec::with_capacity(n);
+        let mut z_den_exc = Vec::with_capacity(n);
+        let mut z_den_inh = Vec::with_capacity(n);
+        let mut i_syn = Vec::with_capacity(n);
+        let mut noise = Vec::with_capacity(n);
+        let mut fired = Vec::with_capacity(n);
+        let mut epoch_spikes = Vec::with_capacity(n);
+        let mut out_edges = Vec::with_capacity(n);
+        let mut in_edges: Vec<Vec<InEdge>> = Vec::with_capacity(n);
+        let mut connected_ax = Vec::with_capacity(n);
+        let mut connected_den_exc = Vec::with_capacity(n);
+        let mut connected_den_inh = Vec::with_capacity(n);
+        for r in records {
+            positions.push(r.pos);
+            is_excitatory.push(r.is_excitatory);
+            v.push(r.v);
+            u.push(r.u);
+            ca.push(r.ca);
+            z_ax.push(r.z_ax);
+            z_den_exc.push(r.z_den_exc);
+            z_den_inh.push(r.z_den_inh);
+            i_syn.push(r.i_syn);
+            noise.push(r.noise);
+            fired.push(r.fired);
+            epoch_spikes.push(r.epoch_spikes);
+            connected_ax.push(r.out_edges.len() as u32);
+            let exc = r.in_edges.iter().filter(|&&(_, e)| e).count() as u32;
+            connected_den_exc.push(exc);
+            connected_den_inh.push(r.in_edges.len() as u32 - exc);
+            out_edges.push(r.out_edges);
+            in_edges.push(
+                r.in_edges
+                    .into_iter()
+                    .map(|(source, source_exc)| InEdge { source, source_exc })
+                    .collect(),
+            );
+        }
+        let pop = Population {
+            first_id: first,
+            positions,
+            is_excitatory,
+            v,
+            u,
+            ca,
+            z_ax,
+            z_den_exc,
+            z_den_inh,
+            i_syn,
+            noise,
+            fired,
+            epoch_spikes,
+        };
+        let store = SynapseStore::from_parts(
+            out_edges,
+            in_edges,
+            connected_ax,
+            connected_den_exc,
+            connected_den_inh,
+            new_owners.clone(),
+        );
+        store
+            .check_invariants()
+            .unwrap_or_else(|e| panic!("rank {me}: store invariants after migration: {e}"));
+
+        // Merge the frequency table: surviving own entries + the
+        // entries that traveled with arriving neurons. Entries whose
+        // source became local are kept — never read (the plan treats
+        // local edges through fired flags) and replaced wholesale at
+        // the next epoch boundary — so a migrate-back restores the
+        // exact table. Conflicting ids must agree: both copies came
+        // from the same sender's same epoch report.
+        if !incoming_freqs.is_empty() || self.freq_exchange.partner_count() > 0 {
+            let mut merged: std::collections::BTreeMap<u64, f32> =
+                self.freq_exchange.entries_iter().collect();
+            for (id, f) in incoming_freqs {
+                if let Some(prev) = merged.insert(id, f) {
+                    debug_assert_eq!(
+                        prev.to_bits(),
+                        f.to_bits(),
+                        "ranks disagree on source {id}'s epoch frequency"
+                    );
+                }
+            }
+            self.freq_exchange = FrequencyExchange::from_parts(
+                cfg.delta,
+                merged.into_iter().collect(),
+                self.freq_exchange.rng_state(),
+            )
+            .expect("BTreeMap iteration is ascending");
+        }
+
+        // Install the new ownership world; rebuild all derived state.
+        self.pop = pop;
+        self.store = store;
+        self.owners = new_owners;
+        self.partition = new_part;
+        self.decomp = self.partition.decomposition(cfg.domain_size);
+        self.tree = Octree::build(&self.decomp, me, first, &self.pop.positions);
+        self.id_exchange = IdExchange::new(size);
+        self.freq_exchange.prune_stale(&self.store);
+        self.rebuild_plan();
+        self.plan
+            .check_against(&self.store)
+            .unwrap_or_else(|e| panic!("rank {me}: plan cross-validation after migration: {e}"));
+        self.migrations += 1;
     }
 
     /// Assemble this rank's final report. Restored states add their
@@ -507,6 +790,10 @@ impl RankState {
             plan_rebuilds: self.plan_rebuilds,
             synapses_out: self.store.total_out(),
             synapses_in: self.store.total_in(),
+            neurons: self.pop.len(),
+            local_edges: (self.store.total_in() + self.store.total_out()) as u64,
+            remote_partners: self.plan.slot_count() as u64,
+            migrations: self.migrations,
             mean_calcium: self.pop.mean_calcium(),
             calcium_trace: self.calcium_trace,
         }
@@ -570,11 +857,12 @@ pub fn branch_simulation_with_xla(
 /// `RankState::restore_section` cannot fail on the same data.
 fn load_validated_section(
     cfg: &SimConfig,
+    owners: &OwnershipMap,
     snap: &Snapshot,
     rank: usize,
 ) -> Result<RankSection, String> {
     let sec = snap.section(rank)?;
-    let expect_first = (rank * cfg.neurons_per_rank) as u64;
+    let expect_first = owners.first_id(rank);
     if sec.first_id != expect_first {
         return Err(format!(
             "rank {rank}: snapshot section starts at neuron {} (expected {expect_first})",
@@ -595,6 +883,17 @@ fn run_simulation_inner(
     branch: bool,
 ) -> Result<SimReport> {
     cfg.validate().map_err(anyhow::Error::msg)?;
+    // The initial partition: a resumed run inherits the snapshot's
+    // (possibly migrated) one; a fresh run builds the config's.
+    let partition = match resume {
+        Some(snap) => {
+            let p = snap.partition_for_resume();
+            p.validate(cfg.ranks, cfg.total_neurons() as u64).map_err(anyhow::Error::msg)?;
+            p
+        }
+        None => Partition::from_config(cfg).map_err(anyhow::Error::msg)?,
+    };
+    let owners = partition.ownership();
     // Decode and validate every rank's section BEFORE spawning rank
     // threads: an error inside one rank's closure would strand the
     // other ranks at their next collective barrier (deadlock) instead
@@ -607,7 +906,8 @@ fn run_simulation_inner(
             check.map_err(anyhow::Error::msg)?;
             let mut slots = Vec::with_capacity(cfg.ranks);
             for rank in 0..cfg.ranks {
-                let sec = load_validated_section(cfg, snap, rank).map_err(anyhow::Error::msg)?;
+                let sec = load_validated_section(cfg, &owners, snap, rank)
+                    .map_err(anyhow::Error::msg)?;
                 slots.push(std::sync::Mutex::new(Some(sec)));
             }
             Some(slots)
@@ -620,7 +920,6 @@ fn run_simulation_inner(
         None
     };
     let start_step = resume.map_or(0, |s| s.next_step());
-    let decomp = DomainDecomposition::new(cfg.ranks, cfg.domain_size);
     let wall = Instant::now();
     let results: Vec<Result<RankReport>> = run_ranks(cfg.ranks, |comm| {
         let mut state = match &preloaded {
@@ -630,20 +929,25 @@ fn run_simulation_inner(
                     .unwrap()
                     .take()
                     .expect("preloaded section consumed exactly once per rank");
-                RankState::restore_section(cfg, &decomp, &comm, sec)
+                RankState::restore_section(cfg, partition.clone(), &comm, sec)
                     .map_err(anyhow::Error::msg)?
             }
-            None => RankState::init(cfg, &decomp, &comm),
+            None => RankState::init_with_partition(cfg, partition.clone(), &comm),
         };
         for step in start_step..cfg.steps {
-            state.step(cfg, &decomp, &comm, step, xla.as_ref())?;
+            state.step(cfg, &comm, step, xla.as_ref())?;
             if let Some(sink) = &sink {
                 if (step + 1) % cfg.checkpoint_every == 0 {
                     // Checkpoint I/O failures are recorded, not
                     // returned: erroring out of one rank's loop would
                     // deadlock the others at the next barrier. The
                     // first failure is surfaced after the join below.
-                    sink.deposit_nonfatal(step as u64 + 1, comm.rank(), state.capture(&comm));
+                    sink.deposit_nonfatal(
+                        step as u64 + 1,
+                        comm.rank(),
+                        state.capture(&comm),
+                        &state.partition,
+                    );
                 }
             }
         }
@@ -752,11 +1056,10 @@ mod tests {
             let mut cfg = smoke_cfg();
             cfg.connectivity_alg = conn;
             cfg.spike_alg = spikes;
-            let decomp = DomainDecomposition::new(cfg.ranks, cfg.domain_size);
             let results = run_ranks(cfg.ranks, |comm| {
-                let mut state = RankState::init(&cfg, &decomp, &comm);
+                let mut state = RankState::init(&cfg, &comm);
                 for step in 0..cfg.steps {
-                    state.step(&cfg, &decomp, &comm, step, None).unwrap();
+                    state.step(&cfg, &comm, step, None).unwrap();
                 }
                 state.plan.check_against(&state.store).map_err(|e| format!("{spikes:?}: {e}"))
             });
@@ -775,13 +1078,12 @@ mod tests {
         // lookup counts all match a clean run.
         let cfg = smoke_cfg();
         let clean = run_simulation(&cfg).unwrap();
-        let decomp = DomainDecomposition::new(cfg.ranks, cfg.domain_size);
         let poisoned = run_ranks(cfg.ranks, |comm| {
-            let mut state = RankState::init(&cfg, &decomp, &comm);
+            let mut state = RankState::init(&cfg, &comm);
             state.vac_scratch.exc = vec![1e30; 1000];
             state.vac_scratch.inh = vec![-7.5; 3];
             for step in 0..cfg.steps {
-                state.step(&cfg, &decomp, &comm, step, None).unwrap();
+                state.step(&cfg, &comm, step, None).unwrap();
             }
             state.into_report(&comm)
         });
@@ -913,7 +1215,7 @@ mod tests {
         // manufactured by re-encoding a fresh checkpoint's sections in
         // the old dense layout (nonzero entries scattered over
         // total_neurons f32s) under a version-1 header.
-        use crate::snapshot::{SnapshotHeader, MIN_FORMAT_VERSION};
+        use crate::snapshot::{config_fingerprint_for_version, SnapshotHeader, MIN_FORMAT_VERSION};
         use crate::util::wire::{put_u32, put_u64};
         let dir = ckpt_dir("v1compat");
         let base = SimConfig {
@@ -934,9 +1236,12 @@ mod tests {
         let snap =
             Snapshot::read_file(dir.join(crate::snapshot::snapshot_file_name(75))).unwrap();
 
-        // Rewrite as a v1 file.
+        // Rewrite as a v1 file, stamped with the fingerprint a v1-era
+        // build would have computed (no balance bytes) — resuming it
+        // exercises the version-matched fingerprint comparison.
         let mut hdr = SnapshotHeader::for_config(&base, 75);
         hdr.version = MIN_FORMAT_VERSION;
+        hdr.fingerprint = config_fingerprint_for_version(&base, MIN_FORMAT_VERSION);
         let mut buf = Vec::new();
         hdr.encode(&mut buf);
         for rank in 0..base.ranks {
@@ -1031,6 +1336,251 @@ mod tests {
             assert_eq!(s.spike_lookups, r.spike_lookups);
         }
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Skewed start (48/16 neurons over a 6/2 cell split) with
+    /// balancing on: one boundary-cell migration per epoch.
+    fn skew_cfg() -> SimConfig {
+        SimConfig {
+            ranks: 2,
+            neurons_per_rank: 32,
+            steps: 150,
+            plasticity_interval: 50,
+            delta: 50,
+            balance_every: 50,
+            balance_threshold: 1.1,
+            balance_max_moves: 1,
+            balance_init_cells: "6,2".to_string(),
+            ..SimConfig::default()
+        }
+    }
+
+    #[test]
+    fn skewed_run_rebalances_and_imbalance_strictly_decreases() {
+        let cfg = skew_cfg();
+        cfg.validate().unwrap();
+        let results = run_ranks(cfg.ranks, |comm| {
+            let mut state = RankState::init(&cfg, &comm);
+            let mut trace = Vec::new();
+            for step in 0..cfg.steps {
+                state.step(&cfg, &comm, step, None).unwrap();
+                if (step + 1) % cfg.balance_every == 0 {
+                    // Collective probe of the post-epoch global
+                    // imbalance (every rank probes at the same steps).
+                    let all = gather_all(&comm, &[state.measure_cost()]);
+                    let costs: Vec<f64> = all.iter().map(|b| b[0].cost()).collect();
+                    trace.push(crate::balance::imbalance(&costs));
+                }
+            }
+            // The acceptance invariants, hard-checked at the end too
+            // (apply_partition already asserts them per migration).
+            state.store.check_invariants().unwrap();
+            state.plan.check_against(&state.store).unwrap();
+            (trace, state.migrations, state.pop.len())
+        });
+        let (trace, migrations, _) = &results[0];
+        assert!(*migrations >= 1, "the skewed start must trigger migrations");
+        // Strictly decreasing across balance epochs until the factor is
+        // at the threshold.
+        for w in trace.windows(2) {
+            assert!(
+                w[1] < w[0] || w[0] <= cfg.balance_threshold,
+                "imbalance failed to decrease: {trace:?}"
+            );
+        }
+        assert!(
+            trace.last().unwrap() < &trace[0],
+            "imbalance must end below its first probe: {trace:?}"
+        );
+        // Neurons actually moved toward even (48/16 is the skewed start).
+        let (n0, n1) = (results[0].2, results[1].2);
+        assert_eq!(n0 + n1, 64);
+        assert!(n0 < 48 && n1 > 16, "neurons did not move: {n0}/{n1}");
+    }
+
+    #[test]
+    fn migration_roundtrip_restores_bit_identical_state() {
+        // Grow a real network (old algorithm pair: no frequency state,
+        // so the whole digest must round-trip), force a migration of
+        // rank 0's last two cells to rank 1, then migrate them back:
+        // every array must be bit-identical to before.
+        let mut cfg = smoke_cfg();
+        cfg.connectivity_alg = ConnectivityAlg::OldRma;
+        cfg.spike_alg = SpikeAlg::OldIds;
+        type Digest = (
+            Vec<crate::util::Vec3>,
+            Vec<u32>,
+            Vec<u32>,
+            Vec<u32>,
+            Vec<u32>,
+            Vec<bool>,
+            Vec<Vec<u64>>,
+            Vec<Vec<InEdge>>,
+            Vec<(u64, f32)>,
+            (crate::util::RngState, crate::util::RngState, crate::util::RngState),
+        );
+        let digest = |s: &RankState| -> Digest {
+            (
+                s.pop.positions.clone(),
+                s.pop.v.iter().map(|x| x.to_bits()).collect(),
+                s.pop.u.iter().map(|x| x.to_bits()).collect(),
+                s.pop.ca.iter().map(|x| x.to_bits()).collect(),
+                s.pop.epoch_spikes.clone(),
+                s.pop.fired.clone(),
+                s.store.out_edges.clone(),
+                s.store.in_edges.clone(),
+                s.freq_exchange.entries(),
+                (s.rng_model.state(), s.rng_conn.state(), s.freq_exchange.rng_state()),
+            )
+        };
+        let results = run_ranks(cfg.ranks, |comm| {
+            let mut state = RankState::init(&cfg, &comm);
+            for step in 0..60 {
+                state.step(&cfg, &comm, step, None).unwrap();
+            }
+            let before = digest(&state);
+            let uniform = state.partition.clone();
+            let shifted = Partition {
+                cell_counts: uniform.cell_counts.clone(),
+                cell_start: vec![0, 2, 8],
+            };
+            state.apply_partition(&cfg, &comm, shifted);
+            assert_eq!(state.migrations, 1);
+            assert_eq!(
+                state.pop.len() as u64,
+                state.owners.count(comm.rank()),
+                "population must match the new ownership share"
+            );
+            state.apply_partition(&cfg, &comm, uniform);
+            let after = digest(&state);
+            (before, after)
+        });
+        for (before, after) in results {
+            assert_eq!(before, after, "migrate + migrate back must be the identity");
+        }
+    }
+
+    #[test]
+    fn migration_carries_frequency_entries_mid_epoch() {
+        // A mid-epoch migration must ship the receiver-side frequency
+        // entries of the moving neurons' sources along, and a
+        // migrate-back must restore both ranks' tables exactly.
+        let cfg = SimConfig {
+            ranks: 2,
+            neurons_per_rank: 32,
+            plasticity_interval: 50,
+            delta: 50,
+            ..SimConfig::default()
+        };
+        run_ranks(2, |comm| {
+            let rank = comm.rank();
+            let mut state = RankState::init(&cfg, &comm);
+            // Rank 1's neuron 40 feeds rank 0's neurons 17 (stays) and
+            // 25 (will migrate); rank 0 holds its epoch frequency.
+            if rank == 0 {
+                state.store.add_in(17, 40, true);
+                state.store.add_in(25, 40, true);
+                state.freq_exchange = FrequencyExchange::from_parts(
+                    cfg.delta,
+                    vec![(40, 1.0)],
+                    state.freq_exchange.rng_state(),
+                )
+                .unwrap();
+            } else {
+                state.store.add_out(8, 17); // local index of id 40
+                state.store.add_out(8, 25);
+            }
+            state.rebuild_plan();
+            let before = state.freq_exchange.entries();
+            // Ship rank 0's last cell (ids 24..32) to rank 1.
+            let uniform = state.partition.clone();
+            let shifted = Partition {
+                cell_counts: uniform.cell_counts.clone(),
+                cell_start: vec![0, 3, 8],
+            };
+            state.apply_partition(&cfg, &comm, shifted);
+            // Both ranks now hold the entry: rank 0 because neuron 17
+            // still reads it, rank 1 because it traveled with 25.
+            assert_eq!(state.freq_exchange.entries(), vec![(40, 1.0)]);
+            // And back: the tables restore exactly on both ranks.
+            state.apply_partition(&cfg, &comm, uniform);
+            assert_eq!(state.freq_exchange.entries(), before);
+            state.store.check_invariants().unwrap();
+            state.plan.check_against(&state.store).unwrap();
+        });
+    }
+
+    #[test]
+    fn explicit_uniform_init_cells_matches_default_run() {
+        // "4,4" names EXACTLY the default partition, so the whole
+        // trajectory — placement, routing, wire accounting — must be
+        // identical to the empty-string default (the Stride ≡ uniform
+        // Ranges equivalence at system level).
+        let base = smoke_cfg();
+        let a = run_simulation(&base).unwrap();
+        let mut explicit = base.clone();
+        explicit.balance_init_cells = "4,4".to_string();
+        let b = run_simulation(&explicit).unwrap();
+        for (ra, rb) in a.ranks.iter().zip(&b.ranks) {
+            assert_eq!(ra.synapses_out, rb.synapses_out);
+            assert_eq!(ra.mean_calcium.to_bits(), rb.mean_calcium.to_bits());
+            assert_eq!(ra.comm.bytes_sent, rb.comm.bytes_sent);
+            assert_eq!(ra.comm.collectives, rb.comm.collectives);
+            assert_eq!(ra.spike_lookups, rb.spike_lookups);
+        }
+    }
+
+    #[test]
+    fn balanced_run_resumes_bit_exactly_across_migrations() {
+        // Checkpoint AFTER the first migration (step 50): the v4 header
+        // carries the migrated (non-uniform) partition, and resuming
+        // from it reproduces the straight skewed run — including the
+        // SECOND migration at step 100 — bit-exactly.
+        let dir = ckpt_dir("balance");
+        let base = skew_cfg();
+        let straight = run_simulation(&base).unwrap();
+
+        let mut first = base.clone();
+        first.steps = 50;
+        first.checkpoint_every = 50;
+        first.checkpoint_dir = dir.to_str().unwrap().to_string();
+        run_simulation(&first).unwrap();
+        let snap =
+            Snapshot::read_file(dir.join(crate::snapshot::snapshot_file_name(50))).unwrap();
+        assert!(
+            snap.partition().is_some(),
+            "one migration in: the header must store an explicit partition"
+        );
+
+        let resumed = resume_simulation(&base, &snap).unwrap();
+        for (s, r) in straight.ranks.iter().zip(&resumed.ranks) {
+            assert_eq!(s.neurons, r.neurons, "per-rank populations after rebalancing");
+            assert_eq!(s.synapses_out, r.synapses_out);
+            assert_eq!(s.synapses_in, r.synapses_in);
+            assert_eq!(s.mean_calcium.to_bits(), r.mean_calcium.to_bits());
+            assert_eq!(s.comm.bytes_sent, r.comm.bytes_sent);
+            assert_eq!(s.comm.collectives, r.comm.collectives);
+            assert_eq!(s.spike_lookups, r.spike_lookups);
+        }
+        // The straight skewed run ends balanced: 32/32.
+        assert_eq!(straight.ranks[0].neurons, 32);
+        assert_eq!(straight.ranks[1].neurons, 32);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn reports_surface_load_observability() {
+        // Default (balancing off): migrations are zero, populations are
+        // uniform, and the load fields feed a finite imbalance factor.
+        let report = run_simulation(&smoke_cfg()).unwrap();
+        for r in &report.ranks {
+            assert_eq!(r.migrations, 0);
+            assert_eq!(r.neurons, 32);
+            assert_eq!(r.local_edges, (r.synapses_in + r.synapses_out) as u64);
+        }
+        assert_eq!(report.total_migrations(), 0);
+        let imb = report.imbalance();
+        assert!(imb >= 1.0 && imb.is_finite(), "imbalance {imb}");
     }
 
     #[test]

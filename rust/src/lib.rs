@@ -24,6 +24,7 @@
 //! | — | AOT artifact execution through PJRT | [`runtime`] |
 //! | — | Checkpoint/restore + scenario branching | [`snapshot`] |
 //! | — | Benchmark matrix + `BENCH_*.json` trajectories | [`bench`] |
+//! | — | Dynamic load balancing (neuron migration) | [`balance`] |
 //!
 //! Entry points: [`config::SimConfig`] describes a run,
 //! [`coordinator::run_simulation`] executes it,
@@ -34,6 +35,7 @@
 //! recorded measurements (§Perf, §Bench), and `README.md` for the CLI
 //! quickstart.
 
+pub mod balance;
 pub mod barnes_hut;
 pub mod bench;
 pub mod cli;

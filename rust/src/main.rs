@@ -71,6 +71,12 @@ usage: ilmi <simulate|resume|compare|bench|quality|inspect> [flags]
             [--checkpoint-every N --checkpoint-dir D]
               write a resumable snapshot every N steps into D
               (both flags are required together)
+            [--balance-every N] [--balance-threshold X]
+              migrate neurons between ranks whenever max/mean step
+              cost exceeds X, checked every N steps (N must be a
+              multiple of the plasticity interval; 0 = off). The
+              initial skew, move budget and cell split come from
+              --set balance.init_cells=.. / balance.max_moves=..
   resume    (--from FILE | --dir D) [--steps T] [--config FILE]
             [--set k=v ...] [--csv PATH] [--xla] [--branch]
             [--checkpoint-every N --checkpoint-dir D]
@@ -83,7 +89,7 @@ usage: ilmi <simulate|resume|compare|bench|quality|inspect> [flags]
               forks a new scenario (same brain, different protocol)
               from the saved state.
   compare   --set k=v ... (runs old-vs-new on the same workload)
-  bench     [--preset smoke|smoke8|quick|full] [--name NAME] [--out FILE]
+  bench     [--preset smoke|smoke8|smoke-skew|quick|full] [--name NAME] [--out FILE]
             [--steps N] [--warmup N] [--reps N] [--seed S]
             [--md FILE] [--baseline FILE] [--threshold PCT]
               run the scenario matrix ({old,new} x ranks x neurons x
@@ -108,8 +114,21 @@ fn build_config(args: &Args) -> Result<SimConfig> {
         cfg.backend = Backend::Xla;
     }
     apply_checkpoint_flags(&mut cfg, args)?;
+    apply_balance_flags(&mut cfg, args)?;
     cfg.validate().map_err(anyhow::Error::msg)?;
     Ok(cfg)
+}
+
+/// Map `--balance-every N` / `--balance-threshold X` into the config
+/// (the remaining balance knobs go through `--set balance.*`).
+fn apply_balance_flags(cfg: &mut SimConfig, args: &Args) -> Result<()> {
+    if let Some(every) = args.get_parse::<usize>("balance-every").map_err(anyhow::Error::msg)? {
+        cfg.balance_every = every;
+    }
+    if let Some(thr) = args.get_parse::<f64>("balance-threshold").map_err(anyhow::Error::msg)? {
+        cfg.balance_threshold = thr;
+    }
+    Ok(())
 }
 
 /// Apply every repeated `--set section.key=value` override.
@@ -200,6 +219,7 @@ fn cmd_resume(args: &Args) -> Result<()> {
         cfg.backend = Backend::Xla;
     }
     apply_checkpoint_flags(&mut cfg, args)?;
+    apply_balance_flags(&mut cfg, args)?;
     cfg.validate().map_err(anyhow::Error::msg)?;
 
     let branch = args.get_bool("branch");

@@ -31,6 +31,18 @@ pub struct RankReport {
     pub plan_rebuilds: u64,
     pub synapses_out: usize,
     pub synapses_in: usize,
+    /// Local population size at run end. With load balancing this can
+    /// differ from `neurons_per_rank` (neurons migrate between ranks).
+    pub neurons: usize,
+    /// Stored edges, both sides (`synapses_in + synapses_out`) — the
+    /// per-rank load term structural plasticity drifts.
+    pub local_edges: u64,
+    /// Distinct remote in-partners (the delivery plan's slot count):
+    /// the exchange-state/lookup share of the rank's load.
+    pub remote_partners: u64,
+    /// Neuron migrations applied on this rank's segment (0 when load
+    /// balancing is off).
+    pub migrations: u64,
     pub mean_calcium: f64,
     /// Optional calcium trace: (step, per-local-neuron calcium).
     pub calcium_trace: Vec<(usize, Vec<f32>)>,
@@ -107,6 +119,28 @@ impl SimReport {
         self.ranks.iter().map(|r| r.mean_calcium).sum::<f64>() / self.ranks.len() as f64
     }
 
+    /// Load-imbalance factor at run end: max/mean per-rank step cost
+    /// (`balance::step_cost` over neurons, stored edges, and remote
+    /// partners). 1.0 is perfectly balanced; the slowest rank gates
+    /// every collective, so this multiplies synchronized step time.
+    /// The quantity the load balancer drives down (BENCH schema v4's
+    /// drift-checked `imbalance` field).
+    pub fn imbalance(&self) -> f64 {
+        let costs: Vec<f64> = self
+            .ranks
+            .iter()
+            .map(|r| {
+                crate::balance::step_cost(r.neurons as u64, r.local_edges, r.remote_partners)
+            })
+            .collect();
+        crate::balance::imbalance(&costs)
+    }
+
+    /// Total neuron migrations applied across ranks.
+    pub fn total_migrations(&self) -> u64 {
+        self.ranks.iter().map(|r| r.migrations).sum()
+    }
+
     /// Merged formation stats.
     pub fn formation(&self) -> FormationStats {
         self.ranks.iter().fold(FormationStats::default(), |acc, r| acc.merge(&r.formation))
@@ -140,6 +174,11 @@ impl SimReport {
             self.total_plan_rebuilds(),
             self.total_synapses(),
             self.mean_calcium(),
+        ));
+        out.push_str(&format!(
+            "imbalance {:.3} (max/mean step cost) | migrations {}\n",
+            self.imbalance(),
+            self.total_migrations(),
         ));
         out
     }
@@ -208,6 +247,17 @@ mod tests {
         let sim = SimReport { ranks: vec![a, b], wall_seconds: 0.0 };
         assert_eq!(sim.total_plan_rebuilds(), 7);
         assert!(sim.phase_table().contains("plan rebuilds 7"));
+    }
+
+    #[test]
+    fn imbalance_is_max_over_mean_step_cost() {
+        let a = RankReport { neurons: 48, ..Default::default() };
+        let b = RankReport { neurons: 16, ..Default::default() };
+        let sim = SimReport { ranks: vec![a, b], wall_seconds: 0.0 };
+        assert!((sim.imbalance() - 1.5).abs() < 1e-12);
+        // Empty / degenerate reports read as balanced.
+        assert_eq!(SimReport::default().imbalance(), 1.0);
+        assert!(sim.phase_table().contains("imbalance 1.500"));
     }
 
     #[test]

@@ -62,7 +62,21 @@ impl Population {
     /// synapses).
     pub fn init(cfg: &SimConfig, rank: usize, lo: Vec3, hi: Vec3, rng: &mut Rng) -> Population {
         let n = cfg.neurons_per_rank;
-        let first_id = (rank * n) as GlobalNeuronId;
+        Self::init_n(cfg, n, (rank * n) as GlobalNeuronId, lo, hi, rng)
+    }
+
+    /// `init` with an explicit population size and first global id —
+    /// the building block the load-balancing subsystem uses when a
+    /// rank's share is NOT the uniform `neurons_per_rank` block (e.g. a
+    /// deliberately skewed initial partition).
+    pub fn init_n(
+        cfg: &SimConfig,
+        n: usize,
+        first_id: GlobalNeuronId,
+        lo: Vec3,
+        hi: Vec3,
+        rng: &mut Rng,
+    ) -> Population {
         let mut positions = Vec::with_capacity(n);
         let mut is_excitatory = Vec::with_capacity(n);
         let mut z_ax = Vec::with_capacity(n);
@@ -98,26 +112,37 @@ impl Population {
         }
     }
 
-    /// Initialize `n` neurons spread round-robin over the rank's Morton
-    /// cells (`cells` = per-cell `[lo, hi)` boxes), uniform within each
-    /// cell. This is the placement the distributed octree assumes: every
-    /// local neuron falls inside a subdomain this rank owns.
+    /// Initialize neurons spread over the rank's Morton cells in
+    /// contiguous id blocks: `cells[k]` is a (`[lo, hi)` box, neuron
+    /// count) pair, and the k-th block of ids lands uniformly inside
+    /// the k-th box. Blocked (not round-robin) placement is what the
+    /// load balancer relies on: each Morton cell owns one contiguous
+    /// global-id block, so migrating a boundary cell migrates a
+    /// contiguous id range — and the distributed octree's assumption
+    /// that every local neuron falls inside an owned subdomain keeps
+    /// holding after the move.
     pub fn init_in_cells(
         cfg: &SimConfig,
-        rank: usize,
-        cells: &[(Vec3, Vec3)],
+        first_id: GlobalNeuronId,
+        cells: &[((Vec3, Vec3), u64)],
         rng: &mut Rng,
     ) -> Population {
         assert!(!cells.is_empty());
-        let mut pop = Population::init(cfg, rank, cells[0].0, cells[0].1, rng);
-        for (i, pos) in pop.positions.iter_mut().enumerate() {
-            let (lo, hi) = cells[i % cells.len()];
-            *pos = Vec3::new(
-                rng.uniform(lo.x, hi.x),
-                rng.uniform(lo.y, hi.y),
-                rng.uniform(lo.z, hi.z),
-            );
+        let n: u64 = cells.iter().map(|&(_, count)| count).sum();
+        let ((lo0, hi0), _) = cells[0];
+        let mut pop = Population::init_n(cfg, n as usize, first_id, lo0, hi0, rng);
+        let mut i = 0usize;
+        for &((lo, hi), count) in cells {
+            for _ in 0..count {
+                pop.positions[i] = Vec3::new(
+                    rng.uniform(lo.x, hi.x),
+                    rng.uniform(lo.y, hi.y),
+                    rng.uniform(lo.z, hi.z),
+                );
+                i += 1;
+            }
         }
+        debug_assert_eq!(i, pop.len());
         pop
     }
 
@@ -170,6 +195,27 @@ mod tests {
         }
         assert!(pop.ca.iter().all(|&c| c == 0.0));
         assert!(pop.v.iter().all(|&v| v == cfg.neuron.c));
+    }
+
+    #[test]
+    fn init_in_cells_places_contiguous_id_blocks() {
+        let mut cfg = cfg();
+        cfg.neurons_per_rank = 7; // irrelevant: counts come from cells
+        let mut rng = Rng::new(9);
+        let box_a = (Vec3::ZERO, Vec3::splat(5.0));
+        let box_b = (Vec3::new(5.0, 0.0, 0.0), Vec3::new(10.0, 5.0, 5.0));
+        let pop =
+            Population::init_in_cells(&cfg, 40, &[(box_a, 3), (box_b, 2)], &mut rng);
+        assert_eq!(pop.len(), 5);
+        assert_eq!(pop.first_id, 40);
+        // First block of ids in the first box, second block in the
+        // second — the cell ↔ id-block invariant migration relies on.
+        for i in 0..3 {
+            assert!(pop.positions[i].in_box(&box_a.0, &box_a.1), "id {}", 40 + i);
+        }
+        for i in 3..5 {
+            assert!(pop.positions[i].in_box(&box_b.0, &box_b.1), "id {}", 40 + i);
+        }
     }
 
     #[test]

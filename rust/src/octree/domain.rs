@@ -44,6 +44,33 @@ impl DomainDecomposition {
         Self { branch_level: b, num_cells, domain_size, cell_start }
     }
 
+    /// Decompose with an EXPLICIT rank → cell assignment
+    /// (`cell_start[r]..cell_start[r+1]` = Morton cells of rank r), the
+    /// constructor the load-balancing subsystem rebuilds with after a
+    /// migration shifts boundary cells between adjacent ranks. The cell
+    /// count must be a Morton-complete 8^b and every rank must keep at
+    /// least one cell.
+    pub fn with_cells(domain_size: f64, cell_start: Vec<usize>) -> Self {
+        assert!(cell_start.len() >= 2, "need at least one rank");
+        assert_eq!(cell_start[0], 0, "cell runs must start at cell 0");
+        for w in cell_start.windows(2) {
+            assert!(w[0] < w[1], "every rank needs at least one Morton cell");
+        }
+        let num_cells = *cell_start.last().unwrap();
+        let mut b = 0u32;
+        while 8usize.pow(b) < num_cells {
+            b += 1;
+        }
+        assert_eq!(8usize.pow(b), num_cells, "cell count must be 8^b, got {num_cells}");
+        Self { branch_level: b, num_cells, domain_size, cell_start }
+    }
+
+    /// The rank → cell assignment (`cell_start[r]..cell_start[r+1]` =
+    /// cells of rank r; length ranks+1). What `with_cells` consumes.
+    pub fn cell_partition(&self) -> Vec<usize> {
+        self.cell_start.clone()
+    }
+
     pub fn ranks(&self) -> usize {
         self.cell_start.len() - 1
     }
@@ -170,6 +197,28 @@ mod tests {
             let (lo, hi) = d.cell_bounds(cell);
             assert!(p.in_box(&lo, &hi), "{p:?} not in cell {cell}");
         }
+    }
+
+    #[test]
+    fn with_cells_reproduces_and_shifts_the_default_assignment() {
+        let d = DomainDecomposition::new(2, 100.0);
+        let same = DomainDecomposition::with_cells(100.0, d.cell_partition());
+        assert_eq!(same.branch_level, d.branch_level);
+        assert_eq!(same.num_cells, d.num_cells);
+        assert_eq!(same.cells_of_rank(0), d.cells_of_rank(0));
+        // A shifted boundary moves cell ownership (the migration move).
+        let skew = DomainDecomposition::with_cells(100.0, vec![0, 6, 8]);
+        assert_eq!(skew.cells_of_rank(0), 0..6);
+        assert_eq!(skew.cells_of_rank(1), 6..8);
+        assert_eq!(skew.owner_of_cell(5), 0);
+        assert_eq!(skew.owner_of_cell(6), 1);
+        assert_eq!(skew.branch_level, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "8^b")]
+    fn with_cells_rejects_non_morton_counts() {
+        DomainDecomposition::with_cells(100.0, vec![0, 3, 7]);
     }
 
     #[test]

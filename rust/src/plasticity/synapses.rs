@@ -25,6 +25,7 @@
 
 use std::collections::BTreeMap;
 
+use crate::balance::OwnershipMap;
 use crate::neuron::GlobalNeuronId;
 use crate::octree::ElementKind;
 use crate::util::Rng;
@@ -48,8 +49,12 @@ pub struct SynapseStore {
     pub connected_ax: Vec<u32>,
     pub connected_den_exc: Vec<u32>,
     pub connected_den_inh: Vec<u32>,
-    /// Partition stride: global id / `neurons_per_rank` = owning rank.
-    neurons_per_rank: u64,
+    /// Who owns which global id — the routing authority every derived
+    /// table is built against. The historical `id / neurons_per_rank`
+    /// stride is the `OwnershipMap::Stride` fast path; after a
+    /// load-balancing migration this becomes a `Ranges` table and the
+    /// store is rebuilt via `from_parts` with the new map.
+    owners: OwnershipMap,
     /// Per local neuron: sorted (destination rank, out-edge count).
     /// A flat sorted Vec is right here — entry count is bounded by the
     /// rank count, so insert/remove memmoves are tiny.
@@ -103,17 +108,21 @@ fn unbump_map(map: &mut BTreeMap<GlobalNeuronId, u32>, key: GlobalNeuronId) {
 
 impl SynapseStore {
     /// An empty store for `n` local neurons on a simulation partitioned
-    /// `neurons_per_rank` neurons per rank (the stride the routing table
-    /// derives destination ranks from).
+    /// `neurons_per_rank` neurons per rank (the historical stride; the
+    /// routing table derives destination ranks from it).
     pub fn new(n: usize, neurons_per_rank: u64) -> Self {
-        assert!(neurons_per_rank > 0, "neurons_per_rank must be positive");
+        Self::with_owners(n, OwnershipMap::stride(neurons_per_rank))
+    }
+
+    /// An empty store routing through an explicit [`OwnershipMap`].
+    pub fn with_owners(n: usize, owners: OwnershipMap) -> Self {
         SynapseStore {
             out_edges: vec![Vec::new(); n],
             in_edges: vec![Vec::new(); n],
             connected_ax: vec![0; n],
             connected_den_exc: vec![0; n],
             connected_den_inh: vec![0; n],
-            neurons_per_rank,
+            owners,
             out_ranks: vec![Vec::new(); n],
             in_partner_refs: BTreeMap::new(),
             in_edits: 0,
@@ -125,12 +134,12 @@ impl SynapseStore {
     fn derive_routing(
         out_edges: &[Vec<GlobalNeuronId>],
         in_edges: &[Vec<InEdge>],
-        neurons_per_rank: u64,
+        owners: &OwnershipMap,
     ) -> (Vec<Vec<(u32, u32)>>, BTreeMap<GlobalNeuronId, u32>) {
         let mut out_ranks: Vec<Vec<(u32, u32)>> = vec![Vec::new(); out_edges.len()];
         for (local, edges) in out_edges.iter().enumerate() {
             for &tgt in edges {
-                bump(&mut out_ranks[local], (tgt / neurons_per_rank) as u32);
+                bump(&mut out_ranks[local], owners.rank_of(tgt));
             }
         }
         let mut in_partner_refs = BTreeMap::new();
@@ -151,27 +160,26 @@ impl SynapseStore {
         connected_ax: Vec<u32>,
         connected_den_exc: Vec<u32>,
         connected_den_inh: Vec<u32>,
-        neurons_per_rank: u64,
+        owners: OwnershipMap,
     ) -> Self {
-        assert!(neurons_per_rank > 0, "neurons_per_rank must be positive");
         let (out_ranks, in_partner_refs) =
-            Self::derive_routing(&out_edges, &in_edges, neurons_per_rank);
+            Self::derive_routing(&out_edges, &in_edges, &owners);
         SynapseStore {
             out_edges,
             in_edges,
             connected_ax,
             connected_den_exc,
             connected_den_inh,
-            neurons_per_rank,
+            owners,
             out_ranks,
             in_partner_refs,
             in_edits: 0,
         }
     }
 
-    /// The partition stride this store routes with.
-    pub fn neurons_per_rank(&self) -> u64 {
-        self.neurons_per_rank
+    /// The ownership map this store routes with.
+    pub fn owners(&self) -> &OwnershipMap {
+        &self.owners
     }
 
     /// Destination ranks of local `src`'s out-edges, as sorted
@@ -210,7 +218,7 @@ impl SynapseStore {
     pub fn add_out(&mut self, src_local: usize, target: GlobalNeuronId) {
         self.out_edges[src_local].push(target);
         self.connected_ax[src_local] += 1;
-        bump(&mut self.out_ranks[src_local], (target / self.neurons_per_rank) as u32);
+        bump(&mut self.out_ranks[src_local], self.owners.rank_of(target));
     }
 
     /// Record the dendritic side of a new synapse on local `tgt`.
@@ -235,7 +243,7 @@ impl SynapseStore {
         let k = rng.next_below(edges.len());
         let target = edges.swap_remove(k);
         self.connected_ax[src_local] -= 1;
-        unbump(&mut self.out_ranks[src_local], (target / self.neurons_per_rank) as u32);
+        unbump(&mut self.out_ranks[src_local], self.owners.rank_of(target));
         Some(target)
     }
 
@@ -278,7 +286,7 @@ impl SynapseStore {
         if let Some(k) = edges.iter().position(|&t| t == target) {
             edges.swap_remove(k);
             self.connected_ax[src_local] -= 1;
-            unbump(&mut self.out_ranks[src_local], (target / self.neurons_per_rank) as u32);
+            unbump(&mut self.out_ranks[src_local], self.owners.rank_of(target));
             true
         } else {
             false
@@ -340,7 +348,7 @@ impl SynapseStore {
             }
         }
         let (out_ranks, in_partner_refs) =
-            Self::derive_routing(&self.out_edges, &self.in_edges, self.neurons_per_rank);
+            Self::derive_routing(&self.out_edges, &self.in_edges, &self.owners);
         if out_ranks != self.out_ranks {
             return Err("out-rank routing table disagrees with out_edges".to_string());
         }
@@ -507,11 +515,85 @@ mod tests {
             incremental.connected_ax.clone(),
             incremental.connected_den_exc.clone(),
             incremental.connected_den_inh.clone(),
-            4,
+            OwnershipMap::stride(4),
         );
         assert_eq!(rebuilt.out_ranks, incremental.out_ranks);
         assert_eq!(rebuilt.in_partner_refs, incremental.in_partner_refs);
         rebuilt.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn uniform_ranges_store_routes_identically_to_stride() {
+        // The ownership-map equivalence at the store layer: the same
+        // random edit sequence against a Stride store and a uniform
+        // Ranges store must produce identical derived routing tables,
+        // partner refcounts, and edit generations.
+        use crate::testing::forall;
+        forall(
+            "uniform Ranges store ≡ Stride store",
+            20,
+            |rng| rng.next_u64(),
+            |&seed| {
+                let mut rng_a = Rng::new(seed);
+                let mut rng_b = Rng::new(seed);
+                let n = 6usize;
+                let npr = 6u64;
+                let total = 4 * npr; // 4 ranks
+                let starts: Vec<u64> = (0..=4u64).map(|r| r * npr).collect();
+                let mut a = SynapseStore::new(n, npr);
+                let mut b =
+                    SynapseStore::with_owners(n, OwnershipMap::ranges(starts).unwrap());
+                for step in 0..120 {
+                    let op = step % 4;
+                    let local = (seed as usize + step) % n;
+                    let partner = ((seed >> 8) as u64 + step as u64 * 7) % total;
+                    match op {
+                        0 => {
+                            a.add_out(local, partner);
+                            b.add_out(local, partner);
+                        }
+                        1 => {
+                            a.add_in(local, partner, step % 2 == 0);
+                            b.add_in(local, partner, step % 2 == 0);
+                        }
+                        2 => {
+                            let ra = a.remove_random_out(local, &mut rng_a);
+                            let rb = b.remove_random_out(local, &mut rng_b);
+                            if ra != rb {
+                                return Err(format!("random out removal diverged at {step}"));
+                            }
+                        }
+                        _ => {
+                            let ra = a.remove_random_in(
+                                local,
+                                ElementKind::Excitatory,
+                                &mut rng_a,
+                            );
+                            let rb = b.remove_random_in(
+                                local,
+                                ElementKind::Excitatory,
+                                &mut rng_b,
+                            );
+                            if ra != rb {
+                                return Err(format!("random in removal diverged at {step}"));
+                            }
+                        }
+                    }
+                }
+                if a.out_ranks != b.out_ranks {
+                    return Err("routing tables diverged".to_string());
+                }
+                if a.in_partner_refs != b.in_partner_refs {
+                    return Err("partner refcounts diverged".to_string());
+                }
+                if a.in_edits() != b.in_edits() {
+                    return Err("edit generations diverged".to_string());
+                }
+                a.check_invariants()?;
+                b.check_invariants()?;
+                Ok(())
+            },
+        );
     }
 
     #[test]

@@ -5,13 +5,17 @@
 //! ```text
 //! header:
 //!   magic              8 B   b"ILMISNAP"
-//!   format_version     u32   = 2 (this build also reads version 1)
+//!   format_version     u32   = 4 (this build also reads versions 1-3)
 //!   config_fingerprint u64   FNV-1a over the dynamics-relevant config
 //!   next_step          u64   first step index the resumed run executes
 //!   ranks              u32
 //!   neurons_per_rank   u32
 //!   config_ini_len     u32
 //!   config_ini         ..    the full config, `SimConfig::to_ini` text
+//!   ownership (v4+):
+//!     tag              u8    0 = uniform stride (reconstruct from the
+//!                            config), 1 = explicit partition follows
+//!     partition        ..    `balance::Partition::encode` when tag = 1
 //! sections (one per rank, in rank order):
 //!   rank               u32
 //!   section_len        u64
@@ -35,13 +39,21 @@
 //! (EXPERIMENTS.md §Perf, opt 7). v1 sections still decode: the dense
 //! table converts to sparse entries, dropping zeros (a zero frequency
 //! and a missing entry are behaviorally identical — neither ever draws
-//! the reconstruction PRNG).
+//! the reconstruction PRNG). v3 was reserved (never emitted) to keep
+//! the snapshot and BENCH schema generations aligned. v4 adds the
+//! header's ownership section: the load-balancing `Partition`
+//! (per-cell neuron counts + rank → cell assignment) a rebalanced run
+//! must restore with; readers map v1–v3 files — and v4 files with the
+//! uniform tag — to the historical `Stride` ownership. Rank sections
+//! are unchanged since v2 (per-rank neuron counts may now differ; the
+//! expected count per section comes from the partition).
 //!
 //! The encoding deliberately reuses the `util::wire` primitives used by
 //! the inter-rank message codecs; decoding goes through the checked
 //! `wire::Cursor` so truncated or corrupt files produce descriptive
 //! errors instead of panics.
 
+use crate::balance::Partition;
 use crate::barnes_hut::FormationStats;
 use crate::comm::CounterSnapshot;
 use crate::config::{ConnectivityAlg, NeuronModel, SimConfig, SpikeAlg};
@@ -54,7 +66,7 @@ pub const MAGIC: [u8; 8] = *b"ILMISNAP";
 
 /// Current snapshot format version (what this build writes). Bump on
 /// any layout change.
-pub const FORMAT_VERSION: u32 = 2;
+pub const FORMAT_VERSION: u32 = 4;
 
 /// Oldest snapshot format version this build still reads.
 pub const MIN_FORMAT_VERSION: u32 = 1;
@@ -78,6 +90,15 @@ fn fnv1a(hash: u64, bytes: &[u8]) -> u64 {
 /// length, backend and instrumentation are excluded: changing them does
 /// not invalidate saved state.
 pub fn config_fingerprint(cfg: &SimConfig) -> u64 {
+    config_fingerprint_for_version(cfg, FORMAT_VERSION)
+}
+
+/// `config_fingerprint` as the build that wrote format `version`
+/// computed it. v1–v3 builds hashed no balance bytes; recomputing
+/// their exact hash is what keeps their snapshots resumable under
+/// `validate_for` instead of failing with a misleading
+/// dynamics-mismatch error.
+pub fn config_fingerprint_for_version(cfg: &SimConfig, version: u32) -> u64 {
     let mut buf = Vec::with_capacity(256);
     put_u64(&mut buf, cfg.ranks as u64);
     put_u64(&mut buf, cfg.neurons_per_rank as u64);
@@ -117,6 +138,24 @@ pub fn config_fingerprint(cfg: &SimConfig) -> u64 {
     for p in cfg.neuron.to_vec() {
         put_f32(&mut buf, p);
     }
+    // Load balancing changes trajectories, so its knobs are
+    // dynamics-relevant (v4+ only: pre-v4 builds hashed none of this,
+    // and their snapshots must keep verifying). The initial partition
+    // is hashed in CANONICAL form (the parsed cell counts +
+    // assignment, not the raw `init_cells` string), so spellings that
+    // describe the identical partition — e.g. an explicit uniform
+    // "4,4" vs the empty default — fingerprint identically. An
+    // unparseable split falls back to the raw string;
+    // `SimConfig::validate` rejects such configs anyway.
+    if version >= 4 {
+        put_u64(&mut buf, cfg.balance_every as u64);
+        put_f64(&mut buf, cfg.balance_threshold);
+        put_u64(&mut buf, cfg.balance_max_moves as u64);
+        match Partition::from_config(cfg) {
+            Ok(p) => p.encode(&mut buf),
+            Err(_) => buf.extend_from_slice(cfg.balance_init_cells.as_bytes()),
+        }
+    }
     fnv1a(0xcbf2_9ce4_8422_2325, &buf)
 }
 
@@ -131,6 +170,11 @@ pub struct SnapshotHeader {
     pub neurons_per_rank: u32,
     /// The originating config, serialized with `SimConfig::to_ini`.
     pub config_ini: String,
+    /// The ownership partition at capture time (v4+). `None` = the
+    /// uniform stride layout (also what every v1–v3 file maps to);
+    /// `Some` = an explicitly skewed or migrated partition the restore
+    /// must reproduce.
+    pub partition: Option<Partition>,
 }
 
 impl SnapshotHeader {
@@ -142,7 +186,19 @@ impl SnapshotHeader {
             ranks: cfg.ranks as u32,
             neurons_per_rank: cfg.neurons_per_rank as u32,
             config_ini: cfg.to_ini(),
+            partition: None,
         }
+    }
+
+    /// `for_config`, recording the run's CURRENT partition: stored
+    /// explicitly unless it is exactly the uniform default (which every
+    /// reader reconstructs from the config).
+    pub fn for_run(cfg: &SimConfig, next_step: u64, partition: &Partition) -> SnapshotHeader {
+        let mut hdr = Self::for_config(cfg, next_step);
+        if *partition != Partition::uniform(cfg.ranks, cfg.neurons_per_rank as u64) {
+            hdr.partition = Some(partition.clone());
+        }
+        hdr
     }
 
     pub fn encode(&self, out: &mut Vec<u8>) {
@@ -154,6 +210,15 @@ impl SnapshotHeader {
         put_u32(out, self.neurons_per_rank);
         put_u32(out, self.config_ini.len() as u32);
         out.extend_from_slice(self.config_ini.as_bytes());
+        if self.version >= 4 {
+            match &self.partition {
+                None => put_u8(out, 0),
+                Some(p) => {
+                    put_u8(out, 1);
+                    p.encode(out);
+                }
+            }
+        }
     }
 
     pub fn decode(c: &mut Cursor<'_>) -> Result<SnapshotHeader, String> {
@@ -179,6 +244,22 @@ impl SnapshotHeader {
         let ini = c.bytes(ini_len, "config text")?;
         let config_ini = String::from_utf8(ini.to_vec())
             .map_err(|_| "snapshot: embedded config is not valid UTF-8".to_string())?;
+        let partition = if version >= 4 {
+            match c.u8("ownership tag")? {
+                0 => None,
+                1 => {
+                    let p = Partition::decode(c)?;
+                    p.validate(ranks as usize, ranks as u64 * neurons_per_rank as u64)
+                        .map_err(|e| format!("snapshot ownership partition: {e}"))?;
+                    Some(p)
+                }
+                other => {
+                    return Err(format!("snapshot: unknown ownership tag {other}"));
+                }
+            }
+        } else {
+            None
+        };
         Ok(SnapshotHeader {
             version,
             fingerprint,
@@ -186,6 +267,7 @@ impl SnapshotHeader {
             ranks,
             neurons_per_rank,
             config_ini,
+            partition,
         })
     }
 }
@@ -901,6 +983,7 @@ mod tests {
         assert_eq!(back.ranks, cfg.ranks as u32);
         assert_eq!(back.neurons_per_rank, cfg.neurons_per_rank as u32);
         assert_eq!(back.config_ini, cfg.to_ini());
+        assert!(back.partition.is_none(), "default layout stores the uniform tag");
 
         let mut bad = buf.clone();
         bad[0] = b'X';
@@ -929,11 +1012,38 @@ mod tests {
         buf[8] = 99;
         let err = SnapshotHeader::decode(&mut Cursor::new(&buf, "snapshot")).unwrap_err();
         assert!(err.contains("version 99"), "{err}");
-        assert!(err.contains("1..=2"), "{err}");
+        assert!(err.contains("1..=4"), "{err}");
         // Version 0 (below the supported floor) is rejected too.
         buf[8] = 0;
         let err = SnapshotHeader::decode(&mut Cursor::new(&buf, "snapshot")).unwrap_err();
         assert!(err.contains("version 0"), "{err}");
+    }
+
+    #[test]
+    fn migrated_partition_rides_in_the_header() {
+        use crate::balance::Partition;
+        let cfg = SimConfig { ranks: 2, neurons_per_rank: 32, ..SimConfig::default() };
+        // A migrated (non-uniform) partition is stored explicitly...
+        let skew = Partition { cell_counts: vec![8; 8], cell_start: vec![0, 5, 8] };
+        let hdr = SnapshotHeader::for_run(&cfg, 100, &skew);
+        let mut buf = Vec::new();
+        hdr.encode(&mut buf);
+        let back = SnapshotHeader::decode(&mut Cursor::new(&buf, "snapshot")).unwrap();
+        assert_eq!(back.partition.as_ref(), Some(&skew));
+        // ...while the exact uniform default collapses to the tag byte.
+        let uniform = Partition::uniform(2, 32);
+        let hdr = SnapshotHeader::for_run(&cfg, 100, &uniform);
+        assert!(hdr.partition.is_none());
+        // A corrupt partition is rejected at decode time.
+        let mut bad = SnapshotHeader::for_run(&cfg, 100, &skew);
+        bad.partition = Some(Partition {
+            cell_counts: vec![8; 8],
+            cell_start: vec![0, 8, 8], // rank 1 left with no cells
+        });
+        let mut buf = Vec::new();
+        bad.encode(&mut buf);
+        let err = SnapshotHeader::decode(&mut Cursor::new(&buf, "snapshot")).unwrap_err();
+        assert!(err.contains("ownership partition"), "{err}");
     }
 
     #[test]
@@ -966,5 +1076,46 @@ mod tests {
         let mut params = base.clone();
         params.neuron.a += 0.001;
         assert_ne!(f0, config_fingerprint(&params), "neuron params are fingerprinted");
+
+        // Balancing knobs are dynamics: they change trajectories.
+        let mut bal = base.clone();
+        bal.balance_every = base.plasticity_interval;
+        assert_ne!(f0, config_fingerprint(&bal));
+        let mut thr = base.clone();
+        thr.balance_threshold += 0.5;
+        assert_ne!(f0, config_fingerprint(&thr));
+        let mut skew = base.clone();
+        skew.balance_init_cells = "6,2".to_string();
+        assert_ne!(f0, config_fingerprint(&skew));
+    }
+
+    #[test]
+    fn pre_v4_fingerprints_ignore_balance_knobs() {
+        // A pre-v4 build hashed no balance bytes; recomputing its hash
+        // for an old snapshot must be insensitive to the new knobs, so
+        // those files keep resuming.
+        let base = SimConfig::default();
+        let mut bal = base.clone();
+        bal.balance_every = base.plasticity_interval;
+        bal.balance_threshold = 2.0;
+        assert_eq!(
+            config_fingerprint_for_version(&base, 1),
+            config_fingerprint_for_version(&bal, 3)
+        );
+        assert_ne!(
+            config_fingerprint_for_version(&base, 4),
+            config_fingerprint_for_version(&bal, 4)
+        );
+        assert_eq!(config_fingerprint(&base), config_fingerprint_for_version(&base, 4));
+    }
+
+    #[test]
+    fn fingerprint_hashes_the_canonical_partition_not_the_string() {
+        // An explicit uniform split is the SAME partition as the empty
+        // default — snapshots from one resume under the other.
+        let base = SimConfig { ranks: 2, neurons_per_rank: 32, ..SimConfig::default() };
+        let mut explicit = base.clone();
+        explicit.balance_init_cells = "4,4".to_string();
+        assert_eq!(config_fingerprint(&base), config_fingerprint(&explicit));
     }
 }

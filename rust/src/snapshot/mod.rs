@@ -32,7 +32,11 @@ pub mod reader;
 pub mod writer;
 
 pub use format::{
-    config_fingerprint, RankSection, SnapshotHeader, FORMAT_VERSION, MAGIC, MIN_FORMAT_VERSION,
+    config_fingerprint, config_fingerprint_for_version, RankSection, SnapshotHeader,
+    FORMAT_VERSION, MAGIC, MIN_FORMAT_VERSION,
 };
 pub use reader::{latest_snapshot_in, Snapshot};
-pub use writer::{snapshot_file_name, write_snapshot, write_snapshot_sections, CheckpointSink};
+pub use writer::{
+    snapshot_file_name, write_snapshot, write_snapshot_sections,
+    write_snapshot_with_partition, CheckpointSink,
+};

@@ -13,7 +13,8 @@
 
 use std::path::{Path, PathBuf};
 
-use super::format::{config_fingerprint, RankSection, SnapshotHeader, SNAPSHOT_EXT};
+use super::format::{config_fingerprint_for_version, RankSection, SnapshotHeader, SNAPSHOT_EXT};
+use crate::balance::Partition;
 use crate::config::SimConfig;
 use crate::util::wire::Cursor;
 
@@ -100,13 +101,40 @@ impl Snapshot {
         &self.header.config_ini
     }
 
+    /// The explicit ownership partition stored in a v4 header, if any
+    /// (`None` = uniform stride, which is also what every pre-v4 file
+    /// maps to).
+    pub fn partition(&self) -> Option<&Partition> {
+        self.header.partition.as_ref()
+    }
+
+    /// The partition a resume/branch must rebuild rank state with:
+    /// the stored one, or the uniform default when the snapshot was
+    /// taken under the historical stride layout.
+    pub fn partition_for_resume(&self) -> Partition {
+        match &self.header.partition {
+            Some(p) => p.clone(),
+            None => Partition::uniform(self.ranks(), self.neurons_per_rank() as u64),
+        }
+    }
+
+    /// Neurons rank `rank`'s section must hold: the partition's share
+    /// (per-rank counts differ after a migration), or the uniform
+    /// `neurons_per_rank`.
+    fn expected_n(&self, rank: usize) -> usize {
+        match &self.header.partition {
+            Some(p) => p.ownership().count(rank) as usize,
+            None => self.neurons_per_rank(),
+        }
+    }
+
     /// Reconstruct the originating config from the embedded INI and
     /// cross-check it against the stored fingerprint (catches neuron
     /// parameters that have no INI key and therefore cannot round-trip).
     pub fn config(&self) -> Result<SimConfig, String> {
         let cfg = SimConfig::from_ini(&self.header.config_ini)
             .map_err(|e| format!("snapshot's embedded config does not parse: {e}"))?;
-        if config_fingerprint(&cfg) != self.header.fingerprint {
+        if config_fingerprint_for_version(&cfg, self.header.version) != self.header.fingerprint {
             return Err(
                 "snapshot's embedded config does not reproduce its fingerprint — the \
                  original run used parameters that are not INI-expressible; resume with \
@@ -146,10 +174,12 @@ impl Snapshot {
     }
 
     /// Full validation for bit-exact resume: structure plus an exact
-    /// config-fingerprint match.
+    /// config-fingerprint match. The fingerprint is recomputed the way
+    /// the writing build computed it (pre-v4 files hashed no balance
+    /// bytes), so older snapshots keep resuming under the same config.
     pub fn validate_for(&self, cfg: &SimConfig) -> Result<(), String> {
         self.validate_structure(cfg)?;
-        let have = config_fingerprint(cfg);
+        let have = config_fingerprint_for_version(cfg, self.header.version);
         if have != self.header.fingerprint {
             return Err(format!(
                 "config fingerprint mismatch: snapshot {:016x} vs current config {:016x} — \
@@ -176,7 +206,7 @@ impl Snapshot {
             format!("snapshot has no section for rank {rank} (ranks: {})", self.ranks())
         })?;
         let total = self.ranks() * self.neurons_per_rank();
-        RankSection::decode(raw, self.neurons_per_rank(), total, self.header.version)
+        RankSection::decode(raw, self.expected_n(rank), total, self.header.version)
             .map_err(|e| format!("rank {rank}: {e}"))
     }
 }
@@ -297,6 +327,8 @@ mod tests {
         sections[1].freq_entries = vec![(0, 0.5), (3, 0.25)];
         let mut hdr = SnapshotHeader::for_config(&cfg, 20);
         hdr.version = 1;
+        // What a v1-era build would have stamped: no balance bytes.
+        hdr.fingerprint = config_fingerprint_for_version(&cfg, 1);
         let mut buf = Vec::new();
         hdr.encode(&mut buf);
         for (rank, sec) in sections.iter().enumerate() {

@@ -14,6 +14,7 @@ use std::path::{Path, PathBuf};
 use std::sync::Mutex;
 
 use super::format::{RankSection, SnapshotHeader, SNAPSHOT_EXT};
+use crate::balance::Partition;
 use crate::config::SimConfig;
 use crate::util::wire::{put_u32, put_u64};
 
@@ -51,13 +52,37 @@ pub fn snapshot_file_name(next_step: u64) -> String {
 }
 
 /// Assemble and atomically write one snapshot file from already-encoded
-/// per-rank sections (`sections[r]` = rank r, see `RankSection::encode`).
-/// Always writes the current format version (v2, sparse frequency
-/// entries); the reader additionally accepts v1 files (dense tables).
+/// per-rank sections (`sections[r]` = rank r, see `RankSection::encode`)
+/// under the uniform stride layout. Always writes the current format
+/// version (v4); the reader additionally accepts v1–v3 files. Runs with
+/// an active (or skewed) load-balancing partition go through
+/// [`write_snapshot_with_partition`] instead, so the ownership section
+/// records which rank owned which id range at capture time.
 pub fn write_snapshot(
     path: &Path,
     cfg: &SimConfig,
     next_step: u64,
+    sections: &[Vec<u8>],
+) -> Result<(), String> {
+    write_with_header(path, SnapshotHeader::for_config(cfg, next_step), cfg, sections)
+}
+
+/// `write_snapshot` recording the run's current ownership partition in
+/// the header (collapses to the uniform tag when it IS the default).
+pub fn write_snapshot_with_partition(
+    path: &Path,
+    cfg: &SimConfig,
+    next_step: u64,
+    partition: &Partition,
+    sections: &[Vec<u8>],
+) -> Result<(), String> {
+    write_with_header(path, SnapshotHeader::for_run(cfg, next_step, partition), cfg, sections)
+}
+
+fn write_with_header(
+    path: &Path,
+    header: SnapshotHeader,
+    cfg: &SimConfig,
     sections: &[Vec<u8>],
 ) -> Result<(), String> {
     if sections.len() != cfg.ranks {
@@ -70,7 +95,7 @@ pub fn write_snapshot(
     let mut buf = Vec::with_capacity(
         64 + sections.iter().map(|s| s.len() + 12).sum::<usize>(),
     );
-    SnapshotHeader::for_config(cfg, next_step).encode(&mut buf);
+    header.encode(&mut buf);
     for (rank, section) in sections.iter().enumerate() {
         put_u32(&mut buf, rank as u32);
         put_u64(&mut buf, section.len() as u64);
@@ -103,8 +128,11 @@ pub fn write_snapshot_sections(
 pub struct CheckpointSink {
     dir: PathBuf,
     cfg: SimConfig,
-    /// next_step -> per-rank section slots.
-    pending: Mutex<HashMap<u64, Vec<Option<Vec<u8>>>>>,
+    /// next_step -> (per-rank section slots, the partition at that
+    /// step — identical on every rank, installed by the first
+    /// depositor).
+    #[allow(clippy::type_complexity)]
+    pending: Mutex<HashMap<u64, (Vec<Option<Vec<u8>>>, Partition)>>,
     /// First failure, kept for end-of-run reporting. Checkpoint I/O
     /// errors must NOT abort one rank's step loop mid-run: the other
     /// ranks would block forever at their next collective barrier. The
@@ -133,8 +161,14 @@ impl CheckpointSink {
     /// `deposit`, but failures are recorded (and printed once) instead
     /// of returned, so a rank's step loop never aborts over checkpoint
     /// I/O — see `first_error`.
-    pub fn deposit_nonfatal(&self, next_step: u64, rank: usize, section: Vec<u8>) {
-        if let Err(e) = self.deposit(next_step, rank, section) {
+    pub fn deposit_nonfatal(
+        &self,
+        next_step: u64,
+        rank: usize,
+        section: Vec<u8>,
+        partition: &Partition,
+    ) {
+        if let Err(e) = self.deposit(next_step, rank, section, partition) {
             let mut first = self.first_error.lock().unwrap();
             if first.is_none() {
                 eprintln!("warning: checkpoint at step {next_step} failed: {e}");
@@ -150,20 +184,25 @@ impl CheckpointSink {
     }
 
     /// Deposit rank `rank`'s encoded section for the checkpoint taken
-    /// with `next_step` steps completed. Returns the written file path
-    /// if this call completed the snapshot, `None` while sections from
-    /// other ranks are still outstanding.
+    /// with `next_step` steps completed. `partition` is the run's
+    /// ownership partition at that step (replicated, so every rank
+    /// passes an identical value; the first depositor's copy lands in
+    /// the header). Returns the written file path if this call
+    /// completed the snapshot, `None` while sections from other ranks
+    /// are still outstanding.
     pub fn deposit(
         &self,
         next_step: u64,
         rank: usize,
         section: Vec<u8>,
+        partition: &Partition,
     ) -> Result<Option<PathBuf>, String> {
         let complete = {
             let mut pending = self.pending.lock().unwrap();
-            let slots = pending
+            let (slots, part) = pending
                 .entry(next_step)
-                .or_insert_with(|| vec![None; self.cfg.ranks]);
+                .or_insert_with(|| (vec![None; self.cfg.ranks], partition.clone()));
+            debug_assert_eq!(&*part, partition, "ranks disagree on the partition");
             if slots[rank].is_some() {
                 return Err(format!(
                     "rank {rank} deposited twice for checkpoint step {next_step}"
@@ -171,17 +210,17 @@ impl CheckpointSink {
             }
             slots[rank] = Some(section);
             if slots.iter().all(|s| s.is_some()) {
-                let slots = pending.remove(&next_step).unwrap();
-                Some(slots.into_iter().map(|s| s.unwrap()).collect::<Vec<_>>())
+                let (slots, part) = pending.remove(&next_step).unwrap();
+                Some((slots.into_iter().map(|s| s.unwrap()).collect::<Vec<_>>(), part))
             } else {
                 None
             }
         };
         match complete {
             None => Ok(None),
-            Some(sections) => {
+            Some((sections, part)) => {
                 let path = self.dir.join(snapshot_file_name(next_step));
-                write_snapshot(&path, &self.cfg, next_step, &sections)?;
+                write_snapshot_with_partition(&path, &self.cfg, next_step, &part, &sections)?;
                 Ok(Some(path))
             }
         }

@@ -88,6 +88,14 @@ impl PartnerFreqs {
         }
     }
 
+    /// The installed entry of sender `id`, distinguishing an explicit
+    /// zero from a missing entry (behaviorally identical for draws, but
+    /// the migration packer must preserve the table bit-faithfully).
+    #[inline]
+    pub fn lookup(&self, id: u64) -> Option<f32> {
+        self.ids.binary_search(&id).ok().map(|i| self.freqs[i])
+    }
+
     /// Last installed Bernoulli threshold (`frequency as f64`) of
     /// sender `id`; 0.0 when absent. The draw-site lookup: precomputed
     /// at install time, never converted per draw.
@@ -230,7 +238,7 @@ pub fn spike_weight(source_exc: bool) -> f32 {
 pub fn deliver_input(
     pop: &mut Population,
     store: &SynapseStore,
-    neurons_per_rank: u64,
+    owners: &crate::balance::OwnershipMap,
     my_rank: usize,
     mut remote_spiked: impl FnMut(usize, u64) -> bool,
 ) -> u64 {
@@ -239,7 +247,7 @@ pub fn deliver_input(
     for local in 0..pop.len() {
         let mut acc = 0.0f32;
         for e in &store.in_edges[local] {
-            let src_rank = (e.source / neurons_per_rank) as usize;
+            let src_rank = owners.rank_of(e.source) as usize;
             let spiked = if src_rank == my_rank {
                 pop.fired[(e.source - first) as usize]
             } else {
@@ -273,7 +281,8 @@ mod tests {
         store.add_in(2, 1, false);
         pop.fired[0] = true;
         pop.fired[1] = false;
-        let lookups = deliver_input(&mut pop, &store, 3, 0, |_, _| {
+        let owners = crate::balance::OwnershipMap::stride(3);
+        let lookups = deliver_input(&mut pop, &store, &owners, 0, |_, _| {
             panic!("no remote edges here")
         });
         assert_eq!(lookups, 0);
@@ -291,7 +300,8 @@ mod tests {
         // Remote sources 2 (rank 1, exc) and 4 (rank 2, inh) -> local 0.
         store.add_in(0, 2, true);
         store.add_in(0, 4, false);
-        let lookups = deliver_input(&mut pop, &store, 2, 0, |rank, id| {
+        let owners = crate::balance::OwnershipMap::stride(2);
+        let lookups = deliver_input(&mut pop, &store, &owners, 0, |rank, id| {
             assert_eq!(rank as u64, id / 2);
             true // everyone spiked
         });
@@ -317,6 +327,10 @@ mod tests {
         assert_eq!(pf.get(5), 0.5);
         assert_eq!(pf.get(9), 0.0, "explicit zero reads like a missing entry");
         assert_eq!(pf.get(4), 0.0);
+        // `lookup` (the migration packer's view) DOES distinguish an
+        // explicit zero from a missing entry.
+        assert_eq!(pf.lookup(9), Some(0.0));
+        assert_eq!(pf.lookup(4), None);
         // A new epoch REPLACES the table: a sender that stopped
         // reporting loses its entry, it is not carried over.
         pf.install_epoch([(5u64, 0.125f32)].into_iter());

@@ -177,6 +177,14 @@ impl FrequencyExchange {
         self.freqs.get(id)
     }
 
+    /// The installed entry of sender `id`, distinguishing an explicit
+    /// zero from absence — the migration packer ships entries
+    /// bit-faithfully so a migrated-and-returned neuron restores the
+    /// exact table.
+    pub fn entry_of(&self, id: u64) -> Option<f32> {
+        self.freqs.lookup(id)
+    }
+
     /// Number of partners with an installed entry (tests/inspection).
     pub fn partner_count(&self) -> usize {
         self.freqs.len()

@@ -35,6 +35,7 @@
 //! f32 addition of small integers is exact, so `i_syn` is bit-identical
 //! (the differential oracle tests below pin all of this).
 
+use crate::balance::OwnershipMap;
 use crate::neuron::{GlobalNeuronId, Population};
 use crate::plasticity::SynapseStore;
 
@@ -55,8 +56,10 @@ pub struct PlannedEdge {
 pub struct DeliveryPlan {
     /// First global id of the local population (locality resolution).
     first_id: GlobalNeuronId,
-    /// Partition stride the plan was compiled with.
-    neurons_per_rank: u64,
+    /// Ownership map the plan was compiled with (locality and slot
+    /// decisions are relative to it; a migration that changes the map
+    /// rebuilds the store, which forces a recompile).
+    owners: OwnershipMap,
     /// CSR offsets into `edges`, length n+1.
     offsets: Vec<u32>,
     /// Per neuron: index into `edges` where its remote edges begin
@@ -82,7 +85,7 @@ impl Default for DeliveryPlan {
     fn default() -> DeliveryPlan {
         DeliveryPlan {
             first_id: 0,
-            neurons_per_rank: 1,
+            owners: OwnershipMap::stride(1),
             offsets: vec![0],
             remote_starts: Vec::new(),
             edges: Vec::new(),
@@ -98,8 +101,8 @@ impl DeliveryPlan {
     /// per connectivity update that edited in-edges — all divisions and
     /// id searches the per-step loop used to pay happen here instead.
     pub fn compile(store: &SynapseStore, first_id: GlobalNeuronId) -> DeliveryPlan {
-        let npr = store.neurons_per_rank();
-        let my_rank = (first_id / npr) as u32;
+        let owners = store.owners();
+        let my_rank = owners.rank_of(first_id);
         let n = store.in_edges.len();
 
         // Slot table: unique remote sources in ascending id order. The
@@ -107,7 +110,7 @@ impl DeliveryPlan {
         let remote_ids: Vec<GlobalNeuronId> = store
             .in_partners()
             .map(|(id, _)| id)
-            .filter(|&id| (id / npr) as u32 != my_rank)
+            .filter(|&id| owners.rank_of(id) != my_rank)
             .collect();
 
         let total = store.total_in();
@@ -119,7 +122,7 @@ impl DeliveryPlan {
         offsets.push(0);
         for in_edges in &store.in_edges {
             for e in in_edges {
-                if (e.source / npr) as u32 == my_rank {
+                if owners.rank_of(e.source) == my_rank {
                     edges.push(PlannedEdge {
                         idx: (e.source - first_id) as u32,
                         weight: spike_weight(e.source_exc),
@@ -128,7 +131,7 @@ impl DeliveryPlan {
             }
             remote_starts.push(edges.len() as u32);
             for e in in_edges {
-                if (e.source / npr) as u32 != my_rank {
+                if owners.rank_of(e.source) != my_rank {
                     let slot = remote_ids
                         .binary_search(&e.source)
                         .expect("remote in-edge source missing from slot table");
@@ -143,7 +146,7 @@ impl DeliveryPlan {
         }
         DeliveryPlan {
             first_id,
-            neurons_per_rank: npr,
+            owners: owners.clone(),
             offsets,
             remote_starts,
             edges,
@@ -201,8 +204,8 @@ impl DeliveryPlan {
     }
 
     /// The interned remote source ids, ascending (`[slot] -> id`). The
-    /// owning rank of a slot, when needed, is `remote_ids[slot] /
-    /// neurons_per_rank` — not cached: no per-step consumer exists.
+    /// owning rank of a slot, when needed, comes from the ownership
+    /// map's `rank_of` — not cached: no per-step consumer exists.
     pub fn remote_ids(&self) -> &[GlobalNeuronId] {
         &self.remote_ids
     }
@@ -241,9 +244,7 @@ impl DeliveryPlan {
         {
             return Err("delivery plan CSR disagrees with store in-edges".to_string());
         }
-        if self.remote_edges != fresh.remote_edges
-            || self.neurons_per_rank != fresh.neurons_per_rank
-        {
+        if self.remote_edges != fresh.remote_edges || self.owners != fresh.owners {
             return Err("delivery plan summary counters disagree with store".to_string());
         }
         Ok(())
@@ -295,6 +296,37 @@ mod tests {
     }
 
     #[test]
+    fn uniform_ranges_plan_is_structurally_identical_to_stride() {
+        // Identical in-edge edits against a Stride store and a uniform
+        // Ranges store must intern the identical slot table and compile
+        // the identical CSR (only the ownership representation differs;
+        // everything derived from it must not).
+        let mut rng = Rng::new(99);
+        let starts: Vec<u64> = (0..=3u64).map(|r| r * 4).collect();
+        let mut sa = SynapseStore::new(4, 4);
+        let mut sb = SynapseStore::with_owners(
+            4,
+            crate::balance::OwnershipMap::ranges(starts).unwrap(),
+        );
+        for _ in 0..40 {
+            let tgt = rng.next_below(4);
+            let src = rng.next_below(12) as u64;
+            let exc = rng.bernoulli(0.5);
+            sa.add_in(tgt, src, exc);
+            sb.add_in(tgt, src, exc);
+        }
+        let pa = DeliveryPlan::compile(&sa, 4);
+        let pb = DeliveryPlan::compile(&sb, 4);
+        assert_eq!(pa.remote_ids, pb.remote_ids, "slot interning");
+        assert_eq!(pa.offsets, pb.offsets);
+        assert_eq!(pa.remote_starts, pb.remote_starts);
+        assert_eq!(pa.edges, pb.edges);
+        assert_eq!(pa.remote_edges, pb.remote_edges);
+        pa.check_against(&sa).unwrap();
+        pb.check_against(&sb).unwrap();
+    }
+
+    #[test]
     fn check_against_catches_stale_and_corrupt_plans() {
         let mut store = SynapseStore::new(2, 2);
         store.add_in(0, 2, true);
@@ -339,7 +371,8 @@ mod tests {
         pop.fired[0] = false;
         pop.fired[1] = true;
         let remote_fired = |id: u64| id == 4; // only id 4 spiked
-        let naive = deliver_input(&mut pop, &store, 2, 1, |_, id| remote_fired(id));
+        let owners = OwnershipMap::stride(2);
+        let naive = deliver_input(&mut pop, &store, &owners, 1, |_, id| remote_fired(id));
         let naive_isyn: Vec<u32> = pop.i_syn.iter().map(|x| x.to_bits()).collect();
 
         let plan = DeliveryPlan::compile(&store, 2);
@@ -408,9 +441,10 @@ mod tests {
                 plan.check_against(&store)?;
                 plan_ex.install_slots(&plan);
 
+                let owners = OwnershipMap::stride(8);
                 for round in 0..4 {
                     randomize_fired(&mut rng, &mut pop);
-                    let naive = deliver_input(&mut pop, &store, 8, 1, |_, id| {
+                    let naive = deliver_input(&mut pop, &store, &owners, 1, |_, id| {
                         naive_ex.spiked(id)
                     });
                     let want: Vec<u32> = pop.i_syn.iter().map(|x| x.to_bits()).collect();
@@ -487,7 +521,8 @@ mod tests {
                     }
                     let mut ex = IdExchange::new(2);
                     ex.exchange(&comm, &pop, &store);
-                    let naive = deliver_input(&mut pop, &store, 8, rank, |r, id| {
+                    let owners = OwnershipMap::stride(8);
+                    let naive = deliver_input(&mut pop, &store, &owners, rank, |r, id| {
                         ex.spiked(r, id)
                     });
                     let want: Vec<u32> = pop.i_syn.iter().map(|x| x.to_bits()).collect();

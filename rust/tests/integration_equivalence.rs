@@ -10,7 +10,6 @@
 use ilmi::comm::run_ranks;
 use ilmi::config::{ConnectivityAlg, SimConfig};
 use ilmi::coordinator::RankState;
-use ilmi::octree::DomainDecomposition;
 use ilmi::plasticity::SynapseStore;
 use ilmi::util::Rng;
 
@@ -29,9 +28,8 @@ fn target_rank_histogram(alg: ConnectivityAlg, seed: u64) -> Vec<usize> {
         seed,
         ..SimConfig::default()
     };
-    let decomp = DomainDecomposition::new(cfg.ranks, cfg.domain_size);
     let results = run_ranks(cfg.ranks, |comm| {
-        let mut state = RankState::init(&cfg, &decomp, &comm);
+        let mut state = RankState::init(&cfg, &comm);
         // Freeze a scenario: everyone offers dendrites, only rank 0's
         // neuron 0 searches (one vacant excitatory axonal element).
         for i in 0..NPR {
@@ -48,7 +46,7 @@ fn target_rank_histogram(alg: ConnectivityAlg, seed: u64) -> Vec<usize> {
             // Fresh store each round -> i.i.d. samples of the first choice.
             state.store = SynapseStore::new(NPR, NPR as u64);
             state.rng_conn = Rng::new(seed ^ (round as u64 * 7919));
-            state.plasticity_phase(&cfg, &decomp, &comm);
+            state.plasticity_phase(&cfg, &comm);
             if comm.rank() == 0 {
                 match state.store.out_edges[0].first() {
                     Some(&tgt) => hist[(tgt as usize) / NPR] += 1,
