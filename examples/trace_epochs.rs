@@ -1,0 +1,102 @@
+//! Epoch-granular telemetry — watch a run breathe, one plasticity epoch
+//! at a time (EXPERIMENTS.md §Tracing).
+//!
+//! Protocol:
+//!   1. Run a 2-rank network with tracing on (`instrumentation.
+//!      trace_every = 50`, the plasticity interval): at every epoch
+//!      boundary each rank records an `EpochSample` — per-phase time
+//!      deltas, comm-counter deltas, spikes fired, synapses formed and
+//!      retracted, plan rebuilds, migrations, and its step cost —
+//!      into a bounded ring.
+//!   2. Print the rank-0 time series: the windowed deltas tile the run,
+//!      so summing any column reproduces the run total for that rank.
+//!   3. Export the merged report both ways — Chrome `trace_event` JSON
+//!      (open in Perfetto: one process per rank, phase slices plus
+//!      counter tracks) and a JSONL time series — and check the event
+//!      count against its closed form: every sample contributes all
+//!      seven phase slices plus three counter points, so the count is a
+//!      pure function of seed + config, never of timing.
+//!
+//!     cargo run --release --example trace_epochs
+
+use ilmi::config::SimConfig;
+use ilmi::coordinator::run_simulation;
+use ilmi::metrics::ALL_PHASES;
+use ilmi::trace::{boundary_names, chrome_trace, event_count, trace_jsonl, EVENTS_PER_SAMPLE};
+
+fn main() -> anyhow::Result<()> {
+    let cfg = SimConfig {
+        ranks: 2,
+        neurons_per_rank: 32,
+        steps: 250,
+        plasticity_interval: 50,
+        delta: 50,
+        trace_every: 50,
+        trace_capacity: 64,
+        ..SimConfig::default()
+    };
+    cfg.validate().map_err(anyhow::Error::msg)?;
+    println!(
+        "trace_epochs: {} neurons over {} ranks, {} steps, sampling every {} steps",
+        cfg.total_neurons(),
+        cfg.ranks,
+        cfg.steps,
+        cfg.trace_every,
+    );
+
+    let report = run_simulation(&cfg)?;
+
+    // The rank-0 time series: each row is the delta over one window.
+    println!(
+        "\n{:>6} {:>18} {:>8} {:>8} {:>10} {:>12} {:>10}",
+        "step", "boundaries", "spikes", "formed", "bytes_sent", "plan_builds", "cost"
+    );
+    let r0 = &report.ranks[0];
+    for s in &r0.trace {
+        println!(
+            "{:>6} {:>18} {:>8} {:>8} {:>10} {:>12} {:>10.0}",
+            s.step,
+            boundary_names(s.boundaries).join("+"),
+            s.spikes,
+            s.formed,
+            s.comm.bytes_sent,
+            s.plan_rebuilds,
+            s.cost.cost(),
+        );
+    }
+
+    // Windowed deltas tile the run: the columns sum back to the totals.
+    let epochs = cfg.steps / cfg.trace_every;
+    assert_eq!(r0.trace.len(), epochs, "one sample per epoch boundary");
+    let formed: u64 = r0.trace.iter().map(|s| s.formed).sum();
+    assert_eq!(formed, r0.formation.formed, "formation deltas must tile the run");
+    let sent: u64 = r0.trace.iter().map(|s| s.comm.bytes_sent).sum();
+    assert_eq!(sent, r0.comm.bytes_sent, "comm deltas must tile the run");
+
+    // Export both ways and check the deterministic closed form: per
+    // sample, seven phase slices + three counter points, plus one
+    // cluster-imbalance point per aligned epoch.
+    let chrome = chrome_trace(&report);
+    let jsonl = trace_jsonl(&report);
+    let expected = cfg.ranks as u64 * epochs as u64 * EVENTS_PER_SAMPLE + epochs as u64;
+    assert_eq!(event_count(&report), expected, "event count must match its closed form");
+    assert_eq!(jsonl.lines().count(), cfg.ranks * epochs, "one JSONL line per rank-sample");
+    for p in ALL_PHASES {
+        assert!(chrome.contains(p.name()), "phase {} missing from the trace", p.name());
+    }
+
+    let dir = std::env::temp_dir().join("ilmi_trace_epochs");
+    std::fs::create_dir_all(&dir)?;
+    let chrome_path = dir.join("trace.json");
+    let jsonl_path = dir.join("trace.jsonl");
+    std::fs::write(&chrome_path, &chrome)?;
+    std::fs::write(&jsonl_path, &jsonl)?;
+    println!(
+        "\nwrote {} ({} events; load in Perfetto / chrome://tracing) and {}",
+        chrome_path.display(),
+        event_count(&report),
+        jsonl_path.display()
+    );
+    println!("trace_epochs OK: {} samples per rank, deltas tile the run exactly.", epochs);
+    Ok(())
+}

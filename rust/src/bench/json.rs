@@ -83,6 +83,44 @@ impl Json {
         out
     }
 
+    /// Render on a single line with no padding — one JSONL record.
+    pub fn compact(&self) -> String {
+        let mut out = String::new();
+        self.write_compact(&mut out);
+        out
+    }
+
+    fn write_compact(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(v) => write_num(out, *v),
+            Json::Str(s) => write_str(out, s),
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    item.write_compact(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(members) => {
+                out.push('{');
+                for (i, (k, v)) in members.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_str(out, k);
+                    out.push(':');
+                    v.write_compact(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+
     fn write(&self, out: &mut String, depth: usize) {
         match self {
             Json::Null => out.push_str("null"),
@@ -375,6 +413,20 @@ mod tests {
         // Exact for the full counter range this harness emits.
         let big = (1u64 << 53) - 1;
         assert_eq!(parse(&big.to_string()).unwrap().as_u64().unwrap(), big);
+    }
+
+    #[test]
+    fn compact_is_one_line_and_parses_back() {
+        let v = obj(vec![
+            ("rank", Json::Num(0.0)),
+            ("name", Json::Str("spike \"x\"".to_string())),
+            ("items", Json::Arr(vec![Json::Num(1.0), Json::Bool(false), Json::Null])),
+            ("empty", Json::Obj(vec![])),
+        ]);
+        let line = v.compact();
+        assert!(!line.contains('\n'));
+        assert_eq!(parse(&line).unwrap(), v);
+        assert_eq!(Json::Arr(vec![]).compact(), "[]");
     }
 
     #[test]

@@ -1,11 +1,11 @@
 //! The versioned `BENCH_*.json` report: emit, parse, markdown render,
 //! and baseline diffing.
 //!
-//! Schema (`schema_version` 4):
+//! Schema (`schema_version` 5):
 //!
 //! ```json
 //! {
-//!   "schema_version": 4,
+//!   "schema_version": 5,
 //!   "name": "quick",
 //!   "created_unix": 1753500000,
 //!   "fingerprint": "9f…16 hex digits…",
@@ -21,7 +21,8 @@
 //!              "msgs_sent":…,"collectives":…,"rma_gets":…},
 //!     "spike_state_bytes": …,
 //!     "spike_lookups": …,
-//!     "imbalance": …
+//!     "imbalance": …,
+//!     "trace_events": …
 //!   }, …]
 //! }
 //! ```
@@ -52,8 +53,11 @@ use super::stats::Summary;
 /// `skew` scenario axis and the drift-checked `imbalance` factor
 /// (max/mean per-rank step cost at run end — the quantity the
 /// load-balancing subsystem drives down, EXPERIMENTS.md §Load
-/// balancing).
-pub const SCHEMA_VERSION: u32 = 4;
+/// balancing); v5 added `trace_events` (the deterministic Chrome
+/// trace event count of the epoch-granular telemetry ring,
+/// EXPERIMENTS.md §Tracing), drift-checked so a cadence or
+/// ring-capacity behavior change can never pass silently.
+pub const SCHEMA_VERSION: u32 = 5;
 
 /// Timing differences below this many seconds are never regressions —
 /// the thread-rank substrate cannot resolve them reliably.
@@ -86,6 +90,11 @@ pub struct ScenarioResult {
     /// `SimReport::imbalance`). A pure function of the structural
     /// trajectory, hence bit-deterministic and drift-checked.
     pub imbalance: f64,
+    /// Chrome-trace event count of the telemetry ring
+    /// (`SimReport::trace_events`): every sample emits all seven phase
+    /// slices plus three counter points regardless of timing, so the
+    /// count is a pure function of seed + config and drift-checked.
+    pub trace_events: u64,
 }
 
 /// One complete benchmark trajectory (a `BENCH_*.json` file in memory).
@@ -202,9 +211,9 @@ impl BenchReport {
         }
         out.push_str(
             " wall | bytes_sent | bytes_rma | collectives | spike_state | lookups | \
-             imbalance |\n|---|",
+             imbalance | trace_events |\n|---|",
         );
-        out.push_str(&"---:|".repeat(ALL_PHASES.len() + 7));
+        out.push_str(&"---:|".repeat(ALL_PHASES.len() + 8));
         out.push('\n');
         for r in &self.results {
             out.push_str(&format!("| {} |", r.scenario.id()));
@@ -212,14 +221,15 @@ impl BenchReport {
                 out.push_str(&format!(" {:.4} |", r.phases[p.index()].median));
             }
             out.push_str(&format!(
-                " {:.4} | {} | {} | {} | {} | {} | {:.3} |\n",
+                " {:.4} | {} | {} | {} | {} | {} | {:.3} | {} |\n",
                 r.wall.median,
                 r.comm.bytes_sent,
                 r.comm.bytes_rma,
                 r.comm.collectives,
                 r.spike_state_bytes,
                 r.spike_lookups,
-                r.imbalance
+                r.imbalance,
+                r.trace_events
             ));
         }
         out
@@ -272,6 +282,7 @@ impl BenchReport {
                 ("rma_gets", base.comm.rma_gets, cur.comm.rma_gets),
                 ("spike_state_bytes", base.spike_state_bytes, cur.spike_state_bytes),
                 ("spike_lookups", base.spike_lookups, cur.spike_lookups),
+                ("trace_events", base.trace_events, cur.trace_events),
             ];
             for (field, b, c) in counter_fields {
                 if b != c {
@@ -411,6 +422,7 @@ fn scenario_to_json(r: &ScenarioResult) -> Json {
         ("spike_state_bytes", Json::Num(r.spike_state_bytes as f64)),
         ("spike_lookups", Json::Num(r.spike_lookups as f64)),
         ("imbalance", Json::Num(r.imbalance)),
+        ("trace_events", Json::Num(r.trace_events as f64)),
     ])
 }
 
@@ -456,6 +468,7 @@ fn scenario_from_json(v: &Json) -> Result<ScenarioResult, String> {
         spike_state_bytes: v.req("spike_state_bytes")?.as_u64()?,
         spike_lookups: v.req("spike_lookups")?.as_u64()?,
         imbalance: v.req("imbalance")?.as_f64()?,
+        trace_events: v.req("trace_events")?.as_u64()?,
     })
 }
 
@@ -496,6 +509,7 @@ mod tests {
             spike_state_bytes: 1_212,
             spike_lookups: 98_765,
             imbalance: 1.25,
+            trace_events: 42,
         }
     }
 
@@ -549,17 +563,17 @@ mod tests {
     #[test]
     fn unsupported_schema_version_is_rejected() {
         let text = sample_report().to_json().replace(
-            "\"schema_version\": 4",
+            "\"schema_version\": 5",
             "\"schema_version\": 99",
         );
         let err = BenchReport::from_json(&text).unwrap_err();
         assert!(err.contains("schema version"), "{err}");
-        // The previous schema generation is refused too — a v2 baseline
-        // has no spike_lookups to drift-check against, so cross-schema
+        // The previous schema generation is refused too — a v4 baseline
+        // has no trace_events to drift-check against, so cross-schema
         // trajectories are not comparable.
         let text = sample_report().to_json().replace(
+            "\"schema_version\": 5",
             "\"schema_version\": 4",
-            "\"schema_version\": 3",
         );
         let err = BenchReport::from_json(&text).unwrap_err();
         assert!(err.contains("schema version"), "{err}");
@@ -653,6 +667,7 @@ mod tests {
         assert!(md.contains("lookups"), "{md}");
         assert!(md.contains("imbalance"), "{md}");
         assert!(md.contains("1.250"), "{md}");
+        assert!(md.contains("trace_events"), "{md}");
         assert_eq!(md.lines().count(), 2 + 2); // header + separator + 2 rows
     }
 
@@ -675,5 +690,21 @@ mod tests {
         let broken = text.replace("\"skew\"", "\"skew_gone\"");
         let err = BenchReport::from_json(&broken).unwrap_err();
         assert!(err.contains("skew"), "{err}");
+    }
+
+    #[test]
+    fn trace_event_drift_is_flagged_and_field_is_required() {
+        let base = sample_report();
+        let mut cur = sample_report();
+        cur.results[0].trace_events += 10;
+        let diff = cur.diff(&base, 0.2).unwrap();
+        assert_eq!(diff.regressions(), 1);
+        assert!(diff.render().contains("COUNTER DRIFT trace_events"));
+        // The v5 schema requires the field on every scenario.
+        let text = base.to_json();
+        assert!(text.contains("\"trace_events\""));
+        let broken = text.replace("\"trace_events\"", "\"trace_events_gone\"");
+        let err = BenchReport::from_json(&broken).unwrap_err();
+        assert!(err.contains("trace_events"), "{err}");
     }
 }

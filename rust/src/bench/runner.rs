@@ -31,6 +31,7 @@ pub fn run_scenario(scenario: &Scenario, settings: &RunSettings) -> Result<Scena
     let mut spike_state_bytes = 0u64;
     let mut spike_lookups = 0u64;
     let mut imbalance = 1.0f64;
+    let mut trace_events = 0u64;
     for rep in 0..settings.reps.max(1) {
         let report = run_simulation(&cfg)?;
         for p in ALL_PHASES {
@@ -90,6 +91,20 @@ pub fn run_scenario(scenario: &Scenario, settings: &RunSettings) -> Result<Scena
             );
         }
         imbalance = imb;
+        // Trace sample/event counts are deterministic by construction
+        // (all seven phase slices are emitted per sample regardless of
+        // timing) — the schema-v5 field the baseline diff drift-checks.
+        let events = report.trace_events();
+        if rep > 0 && events != trace_events {
+            anyhow::bail!(
+                "trace events drifted between repetitions of {} ({} then {}) — \
+                 determinism bug in the telemetry path",
+                scenario.id(),
+                trace_events,
+                events
+            );
+        }
+        trace_events = events;
     }
     let mut phases = [Summary::default(); ALL_PHASES.len()];
     for p in ALL_PHASES {
@@ -104,6 +119,7 @@ pub fn run_scenario(scenario: &Scenario, settings: &RunSettings) -> Result<Scena
         spike_state_bytes,
         spike_lookups,
         imbalance,
+        trace_events,
     })
 }
 
@@ -178,6 +194,11 @@ mod tests {
         // The imbalance factor records and repeats exactly.
         assert_eq!(a.imbalance.to_bits(), b.imbalance.to_bits());
         assert!(a.imbalance >= 1.0 && a.imbalance.is_finite());
+        // Trace event counts record, repeat exactly, and match the
+        // closed form: 2 samples x 2 ranks x 10 events + 2 aligned
+        // imbalance points (steps 60 / interval 30).
+        assert_eq!(a.trace_events, b.trace_events);
+        assert_eq!(a.trace_events, 2 * 2 * 10 + 2);
     }
 
     #[test]
@@ -220,6 +241,7 @@ mod tests {
             neurons: vec![16],
             deltas: vec![30],
             regimes: vec![Regime::Active],
+            skew: false,
         };
         let mut seen = Vec::new();
         let report =

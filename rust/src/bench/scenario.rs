@@ -141,6 +141,12 @@ impl Scenario {
             spike_alg,
             bg_mean: self.regime.bg_mean(),
             seed: settings.seed,
+            // Every cell records an epoch trace at the connectivity-
+            // update cadence: the sample/event counts are seed-
+            // deterministic, so the runner drift-checks `trace_events`
+            // like `spike_lookups` (BENCH schema v5). Recording reads
+            // counters only — it never perturbs the trajectory.
+            trace_every: settings.plasticity_interval,
             ..SimConfig::default()
         };
         if self.skew {
@@ -400,6 +406,11 @@ mod tests {
         assert_eq!(cfg.delta, 50);
         assert_eq!(cfg.steps, settings.steps);
         assert_eq!(cfg.balance_every, 0, "non-skew cells never balance");
+        assert_eq!(
+            cfg.trace_every, settings.plasticity_interval,
+            "every cell records the drift-checked epoch trace"
+        );
+        assert!(cfg.trace_out.is_empty(), "bench cells never write trace files");
     }
 
     #[test]

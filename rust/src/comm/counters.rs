@@ -71,15 +71,29 @@ impl CommCounters {
 }
 
 impl CounterSnapshot {
-    /// Difference since an earlier snapshot.
+    /// Difference since an earlier snapshot. Counters are monotone
+    /// within a communicator's lifetime, so a baseline exceeding the
+    /// current snapshot means the caller mixed up snapshot order (or
+    /// mixed communicators, e.g. across a restore) — debug builds
+    /// assert, release builds saturate to zero instead of wrapping to
+    /// a ~2^64 "delta".
     pub fn since(&self, earlier: &CounterSnapshot) -> CounterSnapshot {
+        debug_assert!(
+            self.bytes_sent >= earlier.bytes_sent
+                && self.bytes_recv >= earlier.bytes_recv
+                && self.bytes_rma >= earlier.bytes_rma
+                && self.msgs_sent >= earlier.msgs_sent
+                && self.collectives >= earlier.collectives
+                && self.rma_gets >= earlier.rma_gets,
+            "since(): baseline exceeds current snapshot ({earlier:?} > {self:?})"
+        );
         CounterSnapshot {
-            bytes_sent: self.bytes_sent - earlier.bytes_sent,
-            bytes_recv: self.bytes_recv - earlier.bytes_recv,
-            bytes_rma: self.bytes_rma - earlier.bytes_rma,
-            msgs_sent: self.msgs_sent - earlier.msgs_sent,
-            collectives: self.collectives - earlier.collectives,
-            rma_gets: self.rma_gets - earlier.rma_gets,
+            bytes_sent: self.bytes_sent.saturating_sub(earlier.bytes_sent),
+            bytes_recv: self.bytes_recv.saturating_sub(earlier.bytes_recv),
+            bytes_rma: self.bytes_rma.saturating_sub(earlier.bytes_rma),
+            msgs_sent: self.msgs_sent.saturating_sub(earlier.msgs_sent),
+            collectives: self.collectives.saturating_sub(earlier.collectives),
+            rma_gets: self.rma_gets.saturating_sub(earlier.rma_gets),
         }
     }
 
@@ -128,6 +142,24 @@ mod tests {
         assert_eq!(diff.msgs_sent, 1);
         let merged = before.merge(&diff);
         assert_eq!(merged.bytes_sent, 40);
+    }
+
+    #[test]
+    fn since_with_misordered_snapshots_saturates_instead_of_wrapping() {
+        let newer = CounterSnapshot { bytes_sent: 10, msgs_sent: 1, ..Default::default() };
+        let older = CounterSnapshot { bytes_sent: 50, msgs_sent: 5, ..Default::default() };
+        if cfg!(debug_assertions) {
+            // Debug builds flag the programming error loudly.
+            let r = std::panic::catch_unwind(|| newer.since(&older));
+            assert!(r.is_err(), "debug since() must assert on a misordered baseline");
+        } else {
+            // Release builds degrade to an empty delta, never a ~2^64 one.
+            let d = newer.since(&older);
+            assert_eq!(d.bytes_sent, 0);
+            assert_eq!(d.msgs_sent, 0);
+        }
+        // Well-ordered snapshots are unaffected.
+        assert_eq!(older.since(&newer.since(&newer)).bytes_sent, 50);
     }
 
     #[test]

@@ -136,6 +136,17 @@ pub struct SimConfig {
     pub checkpoint_every: usize,
     /// Directory snapshots are written to (one file per checkpoint).
     pub checkpoint_dir: String,
+    /// Record an epoch-telemetry sample every this many steps (0 =
+    /// off). Sample counts are seed-deterministic; see the `trace`
+    /// module. The CLI defaults this to the plasticity interval when
+    /// `--trace-out` is given alone.
+    pub trace_every: usize,
+    /// Ring-buffer bound on retained samples per rank; the oldest are
+    /// evicted once full.
+    pub trace_capacity: usize,
+    /// Write the Chrome trace-event JSON here at run end (the JSONL
+    /// series lands next to it); empty = no export.
+    pub trace_out: String,
 
     // -- load balancing (see the `balance` module) -----------------------
     /// Check rank-load imbalance (and migrate neurons if it exceeds the
@@ -183,6 +194,9 @@ impl Default for SimConfig {
             artifacts_dir: "artifacts".to_string(),
             checkpoint_every: 0,
             checkpoint_dir: String::new(),
+            trace_every: 0,
+            trace_capacity: 4096,
+            trace_out: String::new(),
             balance_every: 0,
             balance_threshold: 1.2,
             balance_max_moves: 1,
@@ -305,6 +319,13 @@ impl SimConfig {
                 self.checkpoint_every = value.parse().map_err(|_| bad(key))?
             }
             "instrumentation.checkpoint_dir" => self.checkpoint_dir = value.to_string(),
+            "instrumentation.trace_every" => {
+                self.trace_every = value.parse().map_err(|_| bad(key))?
+            }
+            "instrumentation.trace_capacity" => {
+                self.trace_capacity = value.parse().map_err(|_| bad(key))?
+            }
+            "instrumentation.trace_out" => self.trace_out = value.to_string(),
             "balance.every" => self.balance_every = value.parse().map_err(|_| bad(key))?,
             "balance.threshold" => {
                 self.balance_threshold = value.parse().map_err(|_| bad(key))?
@@ -402,6 +423,13 @@ impl SimConfig {
             out.push_str(&format!("checkpoint_dir = {}\n", self.checkpoint_dir));
         }
         out.push_str(&format!(
+            "trace_every = {}\ntrace_capacity = {}\n",
+            self.trace_every, self.trace_capacity
+        ));
+        if !self.trace_out.is_empty() {
+            out.push_str(&format!("trace_out = {}\n", self.trace_out));
+        }
+        out.push_str(&format!(
             "[balance]\n\
              every = {}\n\
              threshold = {}\n\
@@ -463,6 +491,7 @@ impl SimConfig {
         for (key, value) in [
             ("instrumentation.artifacts_dir", &self.artifacts_dir),
             ("instrumentation.checkpoint_dir", &self.checkpoint_dir),
+            ("instrumentation.trace_out", &self.trace_out),
         ] {
             if value.contains(&['#', ';', '\n'][..]) {
                 return Err(format!(
@@ -476,6 +505,21 @@ impl SimConfig {
                 "instrumentation.checkpoint_every (--checkpoint-every) requires \
                  instrumentation.checkpoint_dir (--checkpoint-dir): snapshots need \
                  a directory to be written to"
+                    .into(),
+            );
+        }
+        if !self.trace_out.is_empty() && self.trace_every == 0 {
+            return Err(
+                "instrumentation.trace_out (--trace-out) requires \
+                 instrumentation.trace_every > 0 (--trace-every; the CLI defaults \
+                 it to the plasticity interval when only --trace-out is given)"
+                    .into(),
+            );
+        }
+        if self.trace_every > 0 && self.trace_capacity == 0 {
+            return Err(
+                "instrumentation.trace_capacity must be >= 1 when tracing is on \
+                 (it bounds the per-rank sample ring)"
                     .into(),
             );
         }
@@ -595,6 +639,9 @@ target_calcium = 0.6
             record_calcium_every: 10,
             checkpoint_every: 100,
             checkpoint_dir: "ckpts".to_string(),
+            trace_every: 50,
+            trace_capacity: 128,
+            trace_out: "trace.json".to_string(),
             balance_every: 50,
             balance_threshold: 1.375,
             balance_max_moves: 2,
@@ -655,6 +702,13 @@ target_calcium = 0.6
                 if rng.bernoulli(0.5) {
                     cfg.checkpoint_every = 1 + rng.next_below(1000);
                     cfg.checkpoint_dir = format!("ckpt_{}", rng.next_below(100));
+                }
+                if rng.bernoulli(0.5) {
+                    cfg.trace_every = 1 + rng.next_below(500);
+                    cfg.trace_capacity = 1 + rng.next_below(10_000);
+                    if rng.bernoulli(0.5) {
+                        cfg.trace_out = format!("trace_{}.json", rng.next_below(100));
+                    }
                 }
                 if rng.bernoulli(0.5) {
                     // Valid balancing knobs: every = multiple of both
@@ -729,6 +783,28 @@ target_calcium = 0.6
         assert!(err.contains("checkpoint_dir"), "{err}");
         cfg.checkpoint_dir = "somewhere".to_string();
         cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn trace_knob_invariants() {
+        // trace_out without a cadence is rejected (config-file path;
+        // the CLI fills the default in before validating).
+        let mut cfg = SimConfig { trace_out: "trace.json".to_string(), ..SimConfig::default() };
+        let err = cfg.validate().unwrap_err();
+        assert!(err.contains("trace_every"), "{err}");
+        cfg.trace_every = 100;
+        cfg.validate().unwrap();
+        // A zero-sample ring makes no sense while tracing.
+        cfg.trace_capacity = 0;
+        assert!(cfg.validate().unwrap_err().contains("trace_capacity"));
+        cfg.trace_capacity = 16;
+        // INI-unrepresentable paths are rejected like the other dirs.
+        cfg.trace_out = "trace#1.json".to_string();
+        assert!(cfg.validate().unwrap_err().contains("trace_out"));
+        cfg.trace_out = "trace.json".to_string();
+        // And the knobs survive the snapshot round-trip.
+        let back = SimConfig::from_ini(&cfg.to_ini()).unwrap();
+        assert_eq!(back, cfg);
     }
 
     #[test]

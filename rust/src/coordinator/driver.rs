@@ -26,6 +26,7 @@ use crate::plasticity::{run_deletion_phase, vacant, DeletionStats, InEdge, Synap
 use crate::runtime::{NeuronInputs, XlaHandle};
 use crate::snapshot::{CheckpointSink, RankSection, Snapshot};
 use crate::spikes::{DeliveryPlan, FrequencyExchange, IdExchange};
+use crate::trace::{Cumulative, Tracer};
 use crate::util::Rng;
 
 /// Reusable per-plasticity-phase vacancy buffers for the octree update
@@ -87,6 +88,15 @@ pub struct RankState {
     /// baseline to make a resumed run's accounting equal a straight
     /// run's.
     pub baseline_comm: CounterSnapshot,
+    /// Local spikes accumulated for the epoch trace. Only maintained
+    /// while tracing is enabled; derived from `pop.fired`, so it is
+    /// per-segment bookkeeping and never snapshotted.
+    pub spikes_fired: u64,
+    /// Epoch-telemetry sampler (see the `trace` module). Pure scratch:
+    /// segment-scoped like the phase timers, never stored in ILMISNAP,
+    /// primed right after each segment's initial plan compile so that
+    /// a resumed segment's first window excludes the restore recompile.
+    pub tracer: Tracer,
 }
 
 impl RankState {
@@ -145,8 +155,12 @@ impl RankState {
             bh_scratch: FormationScratch::default(),
             vac_scratch: VacancyScratch::default(),
             baseline_comm: CounterSnapshot::default(),
+            spikes_fired: 0,
+            tracer: Tracer::from_config(cfg),
         };
         state.rebuild_plan();
+        let baseline = state.trace_cumulative(comm);
+        state.tracer.prime(&baseline);
         state
     }
 
@@ -312,11 +326,19 @@ impl RankState {
             bh_scratch: FormationScratch::default(),
             vac_scratch: VacancyScratch::default(),
             baseline_comm: sec.baseline_comm,
+            spikes_fired: 0,
+            tracer: Tracer::from_config(cfg),
         };
         // The plan is derived state: never read from the snapshot,
         // always recompiled from the restored store (and the slot
         // thresholds re-derived from the restored frequency entries).
         state.rebuild_plan();
+        // Priming after the recompile keeps the restore-time rebuild
+        // (and the restored cumulative stats) out of the first trace
+        // window: a resumed segment's samples line up delta-for-delta
+        // with the straight run's.
+        let baseline = state.trace_cumulative(comm);
+        state.tracer.prime(&baseline);
         Ok(state)
     }
 
@@ -527,6 +549,9 @@ impl RankState {
     ) -> Result<()> {
         self.spike_phase(cfg, comm, step);
         self.activity_phase(cfg, xla)?;
+        if self.tracer.enabled() {
+            self.spikes_fired += self.pop.fired.iter().filter(|&&f| f).count() as u64;
+        }
         if (step + 1) % cfg.plasticity_interval == 0 {
             self.plasticity_phase(cfg, comm);
             // Balance epochs piggyback on connectivity updates (the
@@ -539,7 +564,41 @@ impl RankState {
         if cfg.record_calcium_every > 0 && step % cfg.record_calcium_every == 0 {
             self.calcium_trace.push((step, self.pop.ca.clone()));
         }
+        if self.tracer.due(step) {
+            // Which epoch kinds this boundary coincides with — a pure
+            // function of step and config, so it is deterministic.
+            let mut boundaries = 0u8;
+            if (step + 1) % cfg.delta == 0 {
+                boundaries |= crate::trace::SPIKE_EPOCH;
+            }
+            if (step + 1) % cfg.plasticity_interval == 0 {
+                boundaries |= crate::trace::PLASTICITY_EPOCH;
+            }
+            if cfg.balance_every > 0 && (step + 1) % cfg.balance_every == 0 {
+                boundaries |= crate::trace::BALANCE_EPOCH;
+            }
+            let now = self.trace_cumulative(comm);
+            let cost = self.measure_cost();
+            self.tracer.record(step as u64 + 1, boundaries, &now, cost);
+        }
         Ok(())
+    }
+
+    /// The cumulative readings the tracer deltas consecutive samples
+    /// against. Uses the segment-local communicator snapshot (NOT the
+    /// pre-resume baseline): trace windows are segment-scoped, which is
+    /// what makes a resumed run's samples concatenate exactly onto the
+    /// pre-checkpoint run's.
+    fn trace_cumulative(&self, comm: &ThreadComm) -> Cumulative {
+        Cumulative {
+            phase_seconds: self.timers.seconds(),
+            comm: comm.counters().snapshot(),
+            spikes: self.spikes_fired,
+            formed: self.formation.formed,
+            retractions: self.deletion.axonal_retractions + self.deletion.dendritic_retractions,
+            plan_rebuilds: self.plan_rebuilds,
+            migrations: self.migrations,
+        }
     }
 
     /// The per-rank load measurement the balance decision gathers.
@@ -796,6 +855,7 @@ impl RankState {
             migrations: self.migrations,
             mean_calcium: self.pop.mean_calcium(),
             calcium_trace: self.calcium_trace,
+            trace: self.tracer.into_samples(),
         }
     }
 }
@@ -1205,6 +1265,153 @@ mod tests {
     #[test]
     fn resume_is_bit_exact_old_algorithms() {
         assert_resume_matches_straight(ConnectivityAlg::OldRma, SpikeAlg::OldIds, "old");
+    }
+
+    /// The deterministic fields of a trace sample — everything except
+    /// the wall-clock observations (`ts_micros`, `phase_seconds`,
+    /// `cost.nanos`).
+    #[allow(clippy::type_complexity)]
+    fn det_fields(
+        s: &crate::trace::EpochSample,
+    ) -> (u64, u8, CounterSnapshot, u64, u64, u64, u64, u64, u64, u64, u64) {
+        (
+            s.step,
+            s.boundaries,
+            s.comm,
+            s.spikes,
+            s.formed,
+            s.retractions,
+            s.plan_rebuilds,
+            s.migrations,
+            s.cost.neurons,
+            s.cost.local_edges,
+            s.cost.remote_partners,
+        )
+    }
+
+    #[test]
+    fn trace_counts_and_deltas_are_deterministic() {
+        for (conn, spikes) in [
+            (ConnectivityAlg::NewLocationAware, SpikeAlg::NewFrequency),
+            (ConnectivityAlg::OldRma, SpikeAlg::OldIds),
+        ] {
+            let mut cfg = smoke_cfg();
+            cfg.connectivity_alg = conn;
+            cfg.spike_alg = spikes;
+            cfg.trace_every = 25;
+            // 200 steps record 8 samples; a capacity of 4 forces the
+            // ring to evict the first half.
+            cfg.trace_capacity = 4;
+            let a = run_simulation(&cfg).unwrap();
+            let b = run_simulation(&cfg).unwrap();
+            assert_eq!(a.trace_events(), b.trace_events(), "{spikes:?}: event count");
+            assert!(a.trace_events() > 0, "{spikes:?}: tracing was on");
+            for (ra, rb) in a.ranks.iter().zip(&b.ranks) {
+                assert_eq!(ra.trace.len(), 4, "{spikes:?}: ring bound");
+                let steps: Vec<u64> = ra.trace.iter().map(|s| s.step).collect();
+                assert_eq!(steps, vec![125, 150, 175, 200], "{spikes:?}: last windows kept");
+                // Boundary flags are a pure function of step + config:
+                // with delta = interval = 50, steps 150/200 are
+                // spike+plasticity epochs, 125/175 are plain samples.
+                assert_eq!(ra.trace[0].boundaries, 0);
+                assert_eq!(
+                    ra.trace[1].boundaries,
+                    crate::trace::SPIKE_EPOCH | crate::trace::PLASTICITY_EPOCH
+                );
+                for (sa, sb) in ra.trace.iter().zip(&rb.trace) {
+                    assert_eq!(det_fields(sa), det_fields(sb), "{spikes:?}: sample drift");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tracing_is_pure_observation() {
+        // Turning the tracer on must not move the trajectory or any
+        // deterministic counter, and with the ring unbounded the
+        // per-window deltas must sum back to the run totals.
+        let cfg = smoke_cfg();
+        let off = run_simulation(&cfg).unwrap();
+        assert_eq!(off.trace_events(), 0);
+        assert!(off.ranks.iter().all(|r| r.trace.is_empty()));
+        let mut traced = cfg.clone();
+        traced.trace_every = 50;
+        let on = run_simulation(&traced).unwrap();
+        for (a, b) in off.ranks.iter().zip(&on.ranks) {
+            assert_eq!(a.comm, b.comm);
+            assert_eq!(a.synapses_out, b.synapses_out);
+            assert_eq!(a.mean_calcium.to_bits(), b.mean_calcium.to_bits());
+            assert_eq!(a.spike_lookups, b.spike_lookups);
+            assert_eq!(a.plan_rebuilds, b.plan_rebuilds);
+            assert_eq!(b.trace.len(), 4);
+            let sum_formed: u64 = b.trace.iter().map(|s| s.formed).sum();
+            assert_eq!(sum_formed, b.formation.formed, "formation deltas tile the run");
+            let sum_sent: u64 = b.trace.iter().map(|s| s.comm.bytes_sent).sum();
+            assert_eq!(sum_sent, b.comm.bytes_sent, "comm deltas tile the run");
+        }
+    }
+
+    /// The trace sibling of `assert_resume_matches_straight`: traces
+    /// are segment-scoped (never snapshotted), so the pre-checkpoint
+    /// leg's samples followed by the resumed leg's must reproduce the
+    /// straight run's samples field-for-field (timestamps excluded).
+    fn assert_trace_segments_concatenate(conn: ConnectivityAlg, spikes: SpikeAlg, tag: &str) {
+        let dir = ckpt_dir(tag);
+        let base = SimConfig {
+            ranks: 2,
+            neurons_per_rank: 32,
+            steps: 150,
+            plasticity_interval: 50,
+            delta: 50,
+            trace_every: 25,
+            connectivity_alg: conn,
+            spike_alg: spikes,
+            ..SimConfig::default()
+        };
+        let straight = run_simulation(&base).unwrap();
+
+        let mut first = base.clone();
+        first.steps = 75;
+        first.checkpoint_every = 75;
+        first.checkpoint_dir = dir.to_str().unwrap().to_string();
+        let leg1 = run_simulation(&first).unwrap();
+        let snap =
+            Snapshot::read_file(dir.join(crate::snapshot::snapshot_file_name(75))).unwrap();
+        let resumed = resume_simulation(&base, &snap).unwrap();
+
+        for ((s, l), r) in straight.ranks.iter().zip(&leg1.ranks).zip(&resumed.ranks) {
+            assert_eq!(s.trace.len(), 6, "{tag}: straight samples");
+            assert_eq!(l.trace.len(), 3, "{tag}: leg-1 trace is segment-scoped");
+            assert_eq!(r.trace.len(), 3, "{tag}: resumed trace is segment-scoped");
+            let concat: Vec<_> = l.trace.iter().chain(&r.trace).map(det_fields).collect();
+            let whole: Vec<_> = s.trace.iter().map(det_fields).collect();
+            assert_eq!(concat, whole, "{tag}: segment traces must concatenate");
+        }
+        // The drift-checked event counts concatenate too.
+        assert_eq!(
+            leg1.trace_events() + resumed.trace_events(),
+            straight.trace_events(),
+            "{tag}: event counts"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn trace_segments_concatenate_across_resume_new_algorithms() {
+        assert_trace_segments_concatenate(
+            ConnectivityAlg::NewLocationAware,
+            SpikeAlg::NewFrequency,
+            "trace_new",
+        );
+    }
+
+    #[test]
+    fn trace_segments_concatenate_across_resume_old_algorithms() {
+        assert_trace_segments_concatenate(
+            ConnectivityAlg::OldRma,
+            SpikeAlg::OldIds,
+            "trace_old",
+        );
     }
 
     #[test]

@@ -25,6 +25,7 @@
 //! | — | Checkpoint/restore + scenario branching | [`snapshot`] |
 //! | — | Benchmark matrix + `BENCH_*.json` trajectories | [`bench`] |
 //! | — | Dynamic load balancing (neuron migration) | [`balance`] |
+//! | — | Epoch-granular telemetry (Perfetto/JSONL export) | [`trace`] |
 //!
 //! Entry points: [`config::SimConfig`] describes a run,
 //! [`coordinator::run_simulation`] executes it,
@@ -50,4 +51,5 @@ pub mod runtime;
 pub mod snapshot;
 pub mod spikes;
 pub mod testing;
+pub mod trace;
 pub mod util;

@@ -27,6 +27,10 @@
 //!
 //! Common flags: --config FILE, --set section.key=value (repeatable),
 //! --csv PATH, --xla (use the AOT artifacts for the neuron update).
+//! `--trace-out FILE` (simulate/resume) records the epoch-granular
+//! telemetry ring and exports a Chrome trace JSON plus a JSONL time
+//! series at run end; `--trace-every`/`--trace-capacity` tune cadence
+//! and ring depth.
 
 use anyhow::{anyhow, bail, Result};
 
@@ -77,9 +81,17 @@ usage: ilmi <simulate|resume|compare|bench|quality|inspect> [flags]
               multiple of the plasticity interval; 0 = off). The
               initial skew, move budget and cell split come from
               --set balance.init_cells=.. / balance.max_moves=..
+            [--trace-out FILE] [--trace-every N] [--trace-capacity C]
+              sample per-rank phase/comm/plasticity deltas every N
+              steps (default: the plasticity interval) into a ring of
+              C samples per rank, then export FILE (Chrome trace JSON,
+              open in Perfetto) plus the FILE.jsonl time series
   resume    (--from FILE | --dir D) [--steps T] [--config FILE]
             [--set k=v ...] [--csv PATH] [--xla] [--branch]
             [--checkpoint-every N --checkpoint-dir D]
+            [--trace-out FILE] [--trace-every N] [--trace-capacity C]
+              trace the resumed segment (the snapshot's trace knobs
+              never carry over; samples cover post-resume steps only)
               continue a run from a snapshot, bit-exactly. The snapshot
               embeds its config (--config FILE overrides it); --steps T
               sets the TOTAL schedule length (must exceed the
@@ -115,6 +127,7 @@ fn build_config(args: &Args) -> Result<SimConfig> {
     }
     apply_checkpoint_flags(&mut cfg, args)?;
     apply_balance_flags(&mut cfg, args)?;
+    apply_trace_flags(&mut cfg, args)?;
     cfg.validate().map_err(anyhow::Error::msg)?;
     Ok(cfg)
 }
@@ -128,6 +141,42 @@ fn apply_balance_flags(cfg: &mut SimConfig, args: &Args) -> Result<()> {
     if let Some(thr) = args.get_parse::<f64>("balance-threshold").map_err(anyhow::Error::msg)? {
         cfg.balance_threshold = thr;
     }
+    Ok(())
+}
+
+/// Map `--trace-out FILE` / `--trace-every N` / `--trace-capacity N`
+/// into the config. Giving only `--trace-out` turns tracing on at the
+/// natural cadence — one sample per plasticity epoch — so the common
+/// "just record a trace" invocation needs a single flag.
+fn apply_trace_flags(cfg: &mut SimConfig, args: &Args) -> Result<()> {
+    if let Some(out) = args.get("trace-out") {
+        cfg.trace_out = out.to_string();
+    }
+    if let Some(every) = args.get_parse::<usize>("trace-every").map_err(anyhow::Error::msg)? {
+        cfg.trace_every = every;
+    }
+    if let Some(cap) = args.get_parse::<usize>("trace-capacity").map_err(anyhow::Error::msg)? {
+        cfg.trace_capacity = cap;
+    }
+    if !cfg.trace_out.is_empty() && cfg.trace_every == 0 {
+        cfg.trace_every = cfg.plasticity_interval;
+    }
+    Ok(())
+}
+
+/// Write the Chrome-trace JSON and JSONL time series next to each other
+/// when the run was configured with a trace output path.
+fn write_trace_exports(cfg: &SimConfig, report: &ilmi::metrics::SimReport) -> Result<()> {
+    if cfg.trace_out.is_empty() {
+        return Ok(());
+    }
+    let (chrome_path, jsonl_path) = ilmi::trace::export_paths(&cfg.trace_out);
+    std::fs::write(&chrome_path, ilmi::trace::chrome_trace(report))?;
+    std::fs::write(&jsonl_path, ilmi::trace::trace_jsonl(report))?;
+    println!(
+        "wrote {chrome_path} ({} events; load in Perfetto / chrome://tracing) and {jsonl_path}",
+        report.trace_events()
+    );
     Ok(())
 }
 
@@ -185,6 +234,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         std::fs::write(path, report.to_csv())?;
         println!("wrote {path}");
     }
+    write_trace_exports(&cfg, &report)?;
     Ok(())
 }
 
@@ -203,11 +253,14 @@ fn cmd_resume(args: &Args) -> Result<()> {
         Some(file) => SimConfig::from_file(file).map_err(anyhow::Error::msg)?,
         None => {
             let mut cfg = snap.config().map_err(anyhow::Error::msg)?;
-            // Checkpointing settings of the original run do not
-            // auto-carry over: resuming into the same directory is
-            // opt-in via the flags below.
+            // Checkpointing and tracing settings of the original run do
+            // not auto-carry over: resuming into the same directory (or
+            // overwriting the original trace file) is opt-in via the
+            // flags below.
             cfg.checkpoint_every = 0;
             cfg.checkpoint_dir = String::new();
+            cfg.trace_every = 0;
+            cfg.trace_out = String::new();
             cfg
         }
     };
@@ -220,6 +273,7 @@ fn cmd_resume(args: &Args) -> Result<()> {
     }
     apply_checkpoint_flags(&mut cfg, args)?;
     apply_balance_flags(&mut cfg, args)?;
+    apply_trace_flags(&mut cfg, args)?;
     cfg.validate().map_err(anyhow::Error::msg)?;
 
     let branch = args.get_bool("branch");
@@ -253,6 +307,7 @@ fn cmd_resume(args: &Args) -> Result<()> {
         std::fs::write(csv, report.to_csv())?;
         println!("wrote {csv}");
     }
+    write_trace_exports(&cfg, &report)?;
     Ok(())
 }
 

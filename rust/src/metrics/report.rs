@@ -46,6 +46,11 @@ pub struct RankReport {
     pub mean_calcium: f64,
     /// Optional calcium trace: (step, per-local-neuron calcium).
     pub calcium_trace: Vec<(usize, Vec<f32>)>,
+    /// Epoch-granular telemetry samples (`instrumentation.trace_every`
+    /// boundaries; empty when tracing is off). Segment-scoped like
+    /// `phase_seconds` — never stored in ILMISNAP — and bounded by
+    /// `trace_capacity` (DESIGN.md §10).
+    pub trace: Vec<crate::trace::EpochSample>,
 }
 
 /// Aggregated view over all ranks of one simulation.
@@ -141,6 +146,13 @@ impl SimReport {
         self.ranks.iter().map(|r| r.migrations).sum()
     }
 
+    /// Deterministic count of Chrome trace events the report's samples
+    /// export (`trace::event_count`): what BENCH schema v5
+    /// drift-checks as `trace_events`. 0 when tracing is off.
+    pub fn trace_events(&self) -> u64 {
+        crate::trace::event_count(self)
+    }
+
     /// Merged formation stats.
     pub fn formation(&self) -> FormationStats {
         self.ranks.iter().fold(FormationStats::default(), |acc, r| acc.merge(&r.formation))
@@ -189,15 +201,29 @@ impl SimReport {
         out.push_str(
             &ALL_PHASES.iter().map(|p| p.name().to_string()).collect::<Vec<_>>().join(","),
         );
-        out.push_str(",bytes_sent,bytes_rma,msgs,synapses_out,mean_ca\n");
+        out.push_str(
+            ",bytes_sent,bytes_rma,msgs,synapses_out,mean_ca,spike_lookups,spike_state_bytes,\
+             plan_rebuilds,neurons,local_edges,remote_partners,migrations\n",
+        );
         for r in &self.ranks {
             out.push_str(&format!("{},", r.rank));
             out.push_str(
                 &r.phase_seconds.iter().map(|s| format!("{s:.6}")).collect::<Vec<_>>().join(","),
             );
             out.push_str(&format!(
-                ",{},{},{},{},{:.4}\n",
-                r.comm.bytes_sent, r.comm.bytes_rma, r.comm.msgs_sent, r.synapses_out, r.mean_calcium
+                ",{},{},{},{},{:.4},{},{},{},{},{},{},{}\n",
+                r.comm.bytes_sent,
+                r.comm.bytes_rma,
+                r.comm.msgs_sent,
+                r.synapses_out,
+                r.mean_calcium,
+                r.spike_lookups,
+                r.spike_state_bytes,
+                r.plan_rebuilds,
+                r.neurons,
+                r.local_edges,
+                r.remote_partners,
+                r.migrations,
             ));
         }
         out
@@ -258,6 +284,43 @@ mod tests {
         // Empty / degenerate reports read as balanced.
         assert_eq!(SimReport::default().imbalance(), 1.0);
         assert!(sim.phase_table().contains("imbalance 1.500"));
+    }
+
+    #[test]
+    fn csv_header_and_rows_have_matching_columns() {
+        let loaded = RankReport {
+            rank: 1,
+            spike_lookups: 7,
+            spike_state_bytes: 24,
+            plan_rebuilds: 3,
+            neurons: 48,
+            local_edges: 120,
+            remote_partners: 5,
+            migrations: 2,
+            ..Default::default()
+        };
+        let sim =
+            SimReport { ranks: vec![RankReport::default(), loaded], wall_seconds: 0.0 };
+        let csv = sim.to_csv();
+        let mut lines = csv.lines();
+        let header: Vec<&str> = lines.next().unwrap().split(',').collect();
+        let rows: Vec<Vec<&str>> = lines.map(|l| l.split(',').collect()).collect();
+        assert_eq!(rows.len(), 2);
+        for row in &rows {
+            assert_eq!(row.len(), header.len(), "row/header column mismatch");
+        }
+        // Every load/observability column is present and lands in the
+        // right place.
+        let col = |name: &str| header.iter().position(|h| *h == name).unwrap_or_else(|| {
+            panic!("missing column {name}")
+        });
+        assert_eq!(rows[1][col("spike_lookups")], "7");
+        assert_eq!(rows[1][col("spike_state_bytes")], "24");
+        assert_eq!(rows[1][col("plan_rebuilds")], "3");
+        assert_eq!(rows[1][col("neurons")], "48");
+        assert_eq!(rows[1][col("local_edges")], "120");
+        assert_eq!(rows[1][col("remote_partners")], "5");
+        assert_eq!(rows[1][col("migrations")], "2");
     }
 
     #[test]

@@ -1059,6 +1059,9 @@ mod tests {
         instr.record_calcium_every = 7;
         instr.checkpoint_every = 100;
         instr.checkpoint_dir = "x".into();
+        instr.trace_every = 50;
+        instr.trace_capacity = 8;
+        instr.trace_out = "trace.json".into();
         assert_eq!(f0, config_fingerprint(&instr), "instrumentation must not affect it");
 
         let mut seed = base.clone();

@@ -1,0 +1,106 @@
+//! JSONL time-series export: one compact line per (rank, sample),
+//! ordered by rank then step — ready for `jq`/pandas without a
+//! Perfetto UI in the loop.
+
+use crate::bench::json::{obj, Json};
+use crate::metrics::{SimReport, ALL_PHASES};
+
+use super::{boundary_names, EpochSample};
+
+fn sample_json(rank: usize, s: &EpochSample) -> Json {
+    let phases = ALL_PHASES
+        .iter()
+        .map(|p| (p.name().to_string(), Json::Num(s.phase_seconds[p.index()])))
+        .collect();
+    let boundaries =
+        boundary_names(s.boundaries).into_iter().map(|n| Json::Str(n.to_string())).collect();
+    obj(vec![
+        ("rank", Json::Num(rank as f64)),
+        ("step", Json::Num(s.step as f64)),
+        ("boundaries", Json::Arr(boundaries)),
+        ("ts_us", Json::Num(s.ts_micros)),
+        ("phases", Json::Obj(phases)),
+        (
+            "comm",
+            obj(vec![
+                ("bytes_sent", Json::Num(s.comm.bytes_sent as f64)),
+                ("bytes_recv", Json::Num(s.comm.bytes_recv as f64)),
+                ("bytes_rma", Json::Num(s.comm.bytes_rma as f64)),
+                ("msgs_sent", Json::Num(s.comm.msgs_sent as f64)),
+                ("collectives", Json::Num(s.comm.collectives as f64)),
+                ("rma_gets", Json::Num(s.comm.rma_gets as f64)),
+            ]),
+        ),
+        ("spikes", Json::Num(s.spikes as f64)),
+        ("formed", Json::Num(s.formed as f64)),
+        ("retractions", Json::Num(s.retractions as f64)),
+        ("plan_rebuilds", Json::Num(s.plan_rebuilds as f64)),
+        ("migrations", Json::Num(s.migrations as f64)),
+        (
+            "cost",
+            obj(vec![
+                ("neurons", Json::Num(s.cost.neurons as f64)),
+                ("local_edges", Json::Num(s.cost.local_edges as f64)),
+                ("remote_partners", Json::Num(s.cost.remote_partners as f64)),
+                ("nanos", Json::Num(s.cost.nanos as f64)),
+                ("step_cost", Json::Num(s.cost.cost())),
+            ]),
+        ),
+    ])
+}
+
+/// Render the report's traces as JSONL: one object per (rank, sample).
+pub fn trace_jsonl(report: &SimReport) -> String {
+    let mut out = String::new();
+    for r in &report.ranks {
+        for s in &r.trace {
+            out.push_str(&sample_json(r.rank, s).compact());
+            out.push('\n');
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::json::parse;
+    use crate::comm::CounterSnapshot;
+    use crate::metrics::RankReport;
+    use crate::trace::{BALANCE_EPOCH, PLASTICITY_EPOCH};
+
+    #[test]
+    fn one_parseable_line_per_rank_sample() {
+        let s = EpochSample {
+            step: 50,
+            boundaries: PLASTICITY_EPOCH | BALANCE_EPOCH,
+            comm: CounterSnapshot { bytes_sent: 1024, ..CounterSnapshot::default() },
+            spikes: 12,
+            ..EpochSample::default()
+        };
+        let r0 = RankReport { rank: 0, trace: vec![s.clone(), s.clone()], ..Default::default() };
+        let r1 = RankReport { rank: 1, trace: vec![s], ..Default::default() };
+        let sim = SimReport { ranks: vec![r0, r1], wall_seconds: 0.0 };
+        let text = trace_jsonl(&sim);
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3);
+        let v = parse(lines[2]).unwrap();
+        assert_eq!(v.get("rank").unwrap().as_u64().unwrap(), 1);
+        assert_eq!(v.get("step").unwrap().as_u64().unwrap(), 50);
+        assert_eq!(v.get("comm").unwrap().get("bytes_sent").unwrap().as_u64().unwrap(), 1024);
+        assert_eq!(v.get("spikes").unwrap().as_u64().unwrap(), 12);
+        let names: Vec<&str> = v
+            .get("boundaries")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|b| b.as_str().unwrap())
+            .collect();
+        assert_eq!(names, vec!["plasticity", "balance"]);
+        for p in ALL_PHASES {
+            assert!(v.get("phases").unwrap().get(p.name()).is_some());
+        }
+        assert_eq!(trace_jsonl(&SimReport::default()), "");
+    }
+}

@@ -1,0 +1,329 @@
+//! Epoch-granular telemetry: per-rank time series over the run.
+//!
+//! Every end-of-run aggregate this repro reports — spike-exchange
+//! bytes, plan recompiles, the imbalance factor — hides *when* the
+//! interesting dynamics happened. This module records them over time:
+//! each rank keeps a bounded ring buffer of [`EpochSample`]s, one per
+//! trace boundary (`instrumentation.trace_every` steps; the CLI
+//! defaults it to the plasticity interval, one sample per connectivity
+//! epoch). A sample holds the *deltas* since the previous sample —
+//! per-phase seconds from `PhaseTimers`, comm counters via
+//! [`CounterSnapshot::since`], spikes fired, synapse formations and
+//! retractions, plan rebuilds, migrations — plus the rank's
+//! [`RankCost`] at the boundary, finally surfacing the
+//! gathered-but-unused `RankCost.nanos` (DESIGN.md §10).
+//!
+//! At run end the samples ride into `SimReport` and export two ways:
+//! a Chrome `trace_event` JSON for Perfetto ([`chrome_trace`]) and a
+//! JSONL time series ([`trace_jsonl`]).
+//!
+//! Determinism contract: sample *counts* and the counter-valued fields
+//! of every sample are pure functions of seed + config, so the bench
+//! harness drift-checks [`event_count`] (`trace_events`, BENCH schema
+//! v5) exactly like `spike_lookups`. Only `ts_micros`,
+//! `phase_seconds`, and `cost.nanos` are wall-clock observations.
+//!
+//! Segment scoping: like `phase_seconds`, traces belong to a process
+//! segment and are **never stored in ILMISNAP** snapshots. The tracer
+//! is primed (baselines captured) right after the rank's initial plan
+//! compile — on restore too, so the recompile a resume performs is
+//! excluded — which makes a resumed run's samples concatenate exactly
+//! onto the pre-checkpoint run's (pinned by a differential test in
+//! `coordinator::driver`).
+
+mod jsonl;
+mod perfetto;
+
+pub use jsonl::trace_jsonl;
+pub use perfetto::chrome_trace;
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use crate::balance::RankCost;
+use crate::comm::CounterSnapshot;
+use crate::config::SimConfig;
+use crate::metrics::{SimReport, ALL_PHASES};
+
+/// Sample boundary coincided with a spike-exchange epoch (`delta`).
+pub const SPIKE_EPOCH: u8 = 1 << 0;
+/// Sample boundary coincided with a plasticity epoch.
+pub const PLASTICITY_EPOCH: u8 = 1 << 1;
+/// Sample boundary coincided with a balance epoch.
+pub const BALANCE_EPOCH: u8 = 1 << 2;
+
+/// Human-readable names for a [`EpochSample::boundaries`] bit set.
+pub fn boundary_names(bits: u8) -> Vec<&'static str> {
+    let mut out = Vec::new();
+    if bits & SPIKE_EPOCH != 0 {
+        out.push("spike");
+    }
+    if bits & PLASTICITY_EPOCH != 0 {
+        out.push("plasticity");
+    }
+    if bits & BALANCE_EPOCH != 0 {
+        out.push("balance");
+    }
+    out
+}
+
+/// One rank's telemetry at one trace boundary. All counter-valued
+/// fields are deltas since the previous sample (or since the tracer
+/// was primed, for the first one); `ts_micros`, `phase_seconds`, and
+/// `cost.nanos` are the only wall-clock observations.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct EpochSample {
+    /// 1-based step count at the boundary (the sample covers steps
+    /// `step - trace_every + 1 ..= step`).
+    pub step: u64,
+    /// Which epoch kinds this boundary coincided with
+    /// ([`SPIKE_EPOCH`] | [`PLASTICITY_EPOCH`] | [`BALANCE_EPOCH`]).
+    /// A pure function of step and config.
+    pub boundaries: u8,
+    /// Microseconds since the tracer was primed. Observational only.
+    pub ts_micros: f64,
+    /// Per-phase seconds spent in this window, `ALL_PHASES` order.
+    /// Observational only.
+    pub phase_seconds: [f64; ALL_PHASES.len()],
+    /// Comm-counter deltas for this window (`CounterSnapshot::since`).
+    pub comm: CounterSnapshot,
+    /// Local neurons that fired in this window.
+    pub spikes: u64,
+    /// Synapses formed (formation phase) in this window.
+    pub formed: u64,
+    /// Synaptic-element retractions (axonal + dendritic) in this window.
+    pub retractions: u64,
+    /// Delivery-plan recompiles in this window.
+    pub plan_rebuilds: u64,
+    /// Neuron migrations applied in this window.
+    pub migrations: u64,
+    /// The rank's measured load at the boundary. The structural terms
+    /// are deterministic; `cost.nanos` is the phase-timer reading.
+    pub cost: RankCost,
+}
+
+/// Absolute (cumulative) readings taken off a rank at one boundary;
+/// [`Tracer::record`] turns consecutive readings into deltas.
+#[derive(Clone, Debug, Default)]
+pub struct Cumulative {
+    pub phase_seconds: [f64; ALL_PHASES.len()],
+    pub comm: CounterSnapshot,
+    pub spikes: u64,
+    pub formed: u64,
+    pub retractions: u64,
+    pub plan_rebuilds: u64,
+    pub migrations: u64,
+}
+
+/// Per-rank ring-buffered sampler. Pure scratch from the snapshot
+/// format's point of view: never serialized, rebuilt (and re-primed)
+/// at segment start, exactly like `PhaseTimers`.
+#[derive(Clone, Debug)]
+pub struct Tracer {
+    every: usize,
+    capacity: usize,
+    ring: VecDeque<EpochSample>,
+    recorded: u64,
+    start: Instant,
+    prev: Cumulative,
+}
+
+impl Tracer {
+    pub fn new(every: usize, capacity: usize) -> Tracer {
+        Tracer {
+            every,
+            capacity,
+            ring: VecDeque::new(),
+            recorded: 0,
+            start: Instant::now(),
+            prev: Cumulative::default(),
+        }
+    }
+
+    pub fn from_config(cfg: &SimConfig) -> Tracer {
+        Tracer::new(cfg.trace_every, cfg.trace_capacity)
+    }
+
+    /// Tracing is on at all (`trace_every > 0`).
+    pub fn enabled(&self) -> bool {
+        self.every > 0
+    }
+
+    /// Is the 0-based `step` a trace boundary?
+    pub fn due(&self, step: usize) -> bool {
+        self.every > 0 && (step + 1) % self.every == 0
+    }
+
+    /// Capture the baseline the first sample's deltas are taken
+    /// against, and start the wall clock. Called once per segment,
+    /// after the initial plan compile — so on a resumed segment the
+    /// restore-time recompile is *not* attributed to the first window.
+    pub fn prime(&mut self, now: &Cumulative) {
+        self.prev = now.clone();
+        self.start = Instant::now();
+    }
+
+    /// Record one sample: deltas of `now` against the previous
+    /// reading. Oldest samples are evicted once the ring is full.
+    pub fn record(&mut self, step: u64, boundaries: u8, now: &Cumulative, cost: RankCost) {
+        if !self.enabled() {
+            return;
+        }
+        let mut phase_seconds = [0.0; ALL_PHASES.len()];
+        for (i, d) in phase_seconds.iter_mut().enumerate() {
+            *d = (now.phase_seconds[i] - self.prev.phase_seconds[i]).max(0.0);
+        }
+        let sample = EpochSample {
+            step,
+            boundaries,
+            ts_micros: self.start.elapsed().as_secs_f64() * 1e6,
+            phase_seconds,
+            comm: now.comm.since(&self.prev.comm),
+            spikes: now.spikes - self.prev.spikes,
+            formed: now.formed - self.prev.formed,
+            retractions: now.retractions - self.prev.retractions,
+            plan_rebuilds: now.plan_rebuilds - self.prev.plan_rebuilds,
+            migrations: now.migrations - self.prev.migrations,
+            cost,
+        };
+        self.prev = now.clone();
+        while self.ring.len() >= self.capacity.max(1) {
+            self.ring.pop_front();
+        }
+        self.ring.push_back(sample);
+        self.recorded += 1;
+    }
+
+    /// Samples currently held (≤ capacity).
+    pub fn len(&self) -> usize {
+        self.ring.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ring.is_empty()
+    }
+
+    /// Samples recorded over the segment, including any evicted ones.
+    pub fn recorded(&self) -> u64 {
+        self.recorded
+    }
+
+    /// Drain the ring into the report's per-rank sample vector.
+    pub fn into_samples(self) -> Vec<EpochSample> {
+        self.ring.into_iter().collect()
+    }
+}
+
+/// Chrome trace events per rank sample that [`chrome_trace`] emits:
+/// one complete slice per phase (always all seven, even at zero
+/// duration — event counts must not depend on timing) plus one point
+/// per counter track (`bytes_sent`, `step_cost`, `spikes`).
+pub const EVENTS_PER_SAMPLE: u64 = ALL_PHASES.len() as u64 + 3;
+
+/// Samples every rank has (min across ranks): the length of the
+/// cluster-wide `imbalance` counter track, which needs one cost per
+/// rank per point.
+pub fn aligned_samples(report: &SimReport) -> u64 {
+    report.ranks.iter().map(|r| r.trace.len() as u64).min().unwrap_or(0)
+}
+
+/// Deterministic count of non-metadata Chrome trace events the report
+/// exports: per-rank slices + counter points, plus the cluster
+/// imbalance track. The quantity BENCH schema v5 drift-checks as
+/// `trace_events`; a unit test pins it against the actual export.
+pub fn event_count(report: &SimReport) -> u64 {
+    let per_rank: u64 =
+        report.ranks.iter().map(|r| r.trace.len() as u64 * EVENTS_PER_SAMPLE).sum();
+    per_rank + aligned_samples(report)
+}
+
+/// Where `--trace-out PATH` writes: the Chrome trace at `PATH` itself
+/// and the JSONL series next to it (`.json` swapped for `.jsonl`, or
+/// appended when the extension differs).
+pub fn export_paths(out: &str) -> (String, String) {
+    let jsonl = match out.strip_suffix(".json") {
+        Some(stem) => format!("{stem}.jsonl"),
+        None => format!("{out}.jsonl"),
+    };
+    (out.to_string(), jsonl)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn reading(scale: u64) -> Cumulative {
+        Cumulative {
+            phase_seconds: [scale as f64 * 0.5; ALL_PHASES.len()],
+            comm: CounterSnapshot {
+                bytes_sent: 100 * scale,
+                bytes_recv: 100 * scale,
+                bytes_rma: 8 * scale,
+                msgs_sent: 4 * scale,
+                collectives: 2 * scale,
+                rma_gets: scale,
+            },
+            spikes: 10 * scale,
+            formed: 3 * scale,
+            retractions: 2 * scale,
+            plan_rebuilds: scale,
+            migrations: 0,
+        }
+    }
+
+    #[test]
+    fn record_takes_deltas_against_previous_reading() {
+        let mut t = Tracer::new(50, 16);
+        t.prime(&reading(1));
+        t.record(50, PLASTICITY_EPOCH, &reading(3), RankCost::default());
+        t.record(100, PLASTICITY_EPOCH | BALANCE_EPOCH, &reading(4), RankCost::default());
+        let s = t.into_samples();
+        assert_eq!(s.len(), 2);
+        // First window: reading(3) - reading(1).
+        assert_eq!(s[0].comm.bytes_sent, 200);
+        assert_eq!(s[0].spikes, 20);
+        assert_eq!(s[0].formed, 6);
+        assert_eq!(s[0].plan_rebuilds, 2);
+        assert!((s[0].phase_seconds[0] - 1.0).abs() < 1e-12);
+        // Second window: reading(4) - reading(3).
+        assert_eq!(s[1].comm.bytes_sent, 100);
+        assert_eq!(s[1].spikes, 10);
+        assert_eq!(s[1].retractions, 2);
+        assert_eq!(s[1].boundaries, PLASTICITY_EPOCH | BALANCE_EPOCH);
+        assert_eq!(boundary_names(s[1].boundaries), vec!["plasticity", "balance"]);
+    }
+
+    #[test]
+    fn ring_keeps_the_last_capacity_samples() {
+        let mut t = Tracer::new(10, 3);
+        t.prime(&reading(0));
+        for i in 1..=5u64 {
+            t.record(10 * i, 0, &reading(i), RankCost::default());
+        }
+        assert_eq!(t.len(), 3);
+        assert_eq!(t.recorded(), 5);
+        let steps: Vec<u64> = t.into_samples().iter().map(|s| s.step).collect();
+        assert_eq!(steps, vec![30, 40, 50]);
+    }
+
+    #[test]
+    fn due_follows_the_cadence_and_disabled_never_fires() {
+        let t = Tracer::new(25, 8);
+        assert!(!t.due(0));
+        assert!(t.due(24));
+        assert!(!t.due(25));
+        assert!(t.due(49));
+        let off = Tracer::new(0, 8);
+        assert!(!off.enabled());
+        assert!(!off.due(24));
+    }
+
+    #[test]
+    fn export_paths_swap_or_append_the_extension() {
+        assert_eq!(
+            export_paths("trace.json"),
+            ("trace.json".to_string(), "trace.jsonl".to_string())
+        );
+        assert_eq!(export_paths("trace"), ("trace".to_string(), "trace.jsonl".to_string()));
+    }
+}

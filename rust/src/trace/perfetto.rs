@@ -1,0 +1,207 @@
+//! Chrome `trace_event` export: open the file in Perfetto
+//! (ui.perfetto.dev) or `chrome://tracing`.
+//!
+//! Layout: one process (`pid`) per rank named `rank N`, with one named
+//! thread track per phase carrying complete ("X") slices — all seven
+//! phases get a slice per sample, even at zero duration, so the event
+//! count is a pure function of the sample count — plus per-rank
+//! counter ("C") tracks for `bytes_sent`, `step_cost`, and `spikes`.
+//! A final `cluster` process carries the `imbalance` counter track
+//! (max/mean `step_cost` across ranks per aligned sample), the same
+//! quantity the load balancer drives down: on a skewed run the
+//! migration epoch is readable straight off its drop (EXPERIMENTS.md
+//! §Tracing).
+//!
+//! Timestamps (`ts`, `dur`, microseconds) are observational; slices
+//! for a window are laid out end-to-start against the sample's
+//! boundary timestamp, which places them correctly relative to each
+//! other without requiring per-phase wall-clock bookkeeping.
+
+use crate::bench::json::{obj, Json};
+use crate::metrics::{SimReport, ALL_PHASES};
+
+use super::aligned_samples;
+
+fn metadata(name: &str, pid: usize, tid: usize, value: &str) -> Json {
+    obj(vec![
+        ("name", Json::Str(name.to_string())),
+        ("ph", Json::Str("M".to_string())),
+        ("pid", Json::Num(pid as f64)),
+        ("tid", Json::Num(tid as f64)),
+        ("args", obj(vec![("name", Json::Str(value.to_string()))])),
+    ])
+}
+
+fn counter(name: &str, pid: usize, ts: f64, key: &str, value: f64) -> Json {
+    obj(vec![
+        ("name", Json::Str(name.to_string())),
+        ("ph", Json::Str("C".to_string())),
+        ("pid", Json::Num(pid as f64)),
+        ("tid", Json::Num(0.0)),
+        ("ts", Json::Num(ts)),
+        ("args", obj(vec![(key, Json::Num(value))])),
+    ])
+}
+
+/// Render the whole report as a Chrome trace-event JSON string.
+/// Emits exactly [`super::event_count`] non-metadata events.
+pub fn chrome_trace(report: &SimReport) -> String {
+    let mut events = Vec::new();
+    for r in &report.ranks {
+        let pid = r.rank;
+        events.push(metadata("process_name", pid, 0, &format!("rank {pid}")));
+        for p in ALL_PHASES {
+            events.push(metadata("thread_name", pid, p.index() + 1, p.name()));
+        }
+        for s in &r.trace {
+            // Phase slices, laid out back-to-back ending at the
+            // boundary timestamp (most recent phase last).
+            let mut end = s.ts_micros;
+            for p in ALL_PHASES.iter().rev() {
+                let dur = s.phase_seconds[p.index()] * 1e6;
+                let ts = (end - dur).max(0.0);
+                events.push(obj(vec![
+                    ("name", Json::Str(p.name().to_string())),
+                    ("ph", Json::Str("X".to_string())),
+                    ("pid", Json::Num(pid as f64)),
+                    ("tid", Json::Num(p.index() as f64 + 1.0)),
+                    ("ts", Json::Num(ts)),
+                    ("dur", Json::Num(dur)),
+                    ("args", obj(vec![("step", Json::Num(s.step as f64))])),
+                ]));
+                end = ts;
+            }
+            events.push(counter(
+                "bytes_sent",
+                pid,
+                s.ts_micros,
+                "bytes_sent",
+                s.comm.bytes_sent as f64,
+            ));
+            events.push(counter("step_cost", pid, s.ts_micros, "step_cost", s.cost.cost()));
+            events.push(counter("spikes", pid, s.ts_micros, "spikes", s.spikes as f64));
+        }
+    }
+    // Cluster-wide imbalance track: one point per sample every rank
+    // has. Rings evict oldest-first and all ranks share the cadence,
+    // so aligning from the tail pairs up identical boundary steps.
+    let cluster_pid = report.ranks.len();
+    if !report.ranks.is_empty() {
+        events.push(metadata("process_name", cluster_pid, 0, "cluster"));
+    }
+    let aligned = aligned_samples(report) as usize;
+    for i in 0..aligned {
+        let mut costs = Vec::with_capacity(report.ranks.len());
+        let mut ts = 0.0f64;
+        for r in &report.ranks {
+            let s = &r.trace[r.trace.len() - aligned + i];
+            costs.push(s.cost.cost());
+            ts = ts.max(s.ts_micros);
+        }
+        events.push(counter(
+            "imbalance",
+            cluster_pid,
+            ts,
+            "imbalance",
+            crate::balance::imbalance(&costs),
+        ));
+    }
+    obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", Json::Str("ms".to_string())),
+    ])
+    .pretty()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::balance::RankCost;
+    use crate::bench::json::parse;
+    use crate::metrics::RankReport;
+    use crate::trace::{event_count, EpochSample, PLASTICITY_EPOCH};
+
+    fn sample(step: u64, neurons: u64) -> EpochSample {
+        EpochSample {
+            step,
+            boundaries: PLASTICITY_EPOCH,
+            ts_micros: step as f64 * 1000.0,
+            phase_seconds: [0.0001; ALL_PHASES.len()],
+            spikes: 5,
+            cost: RankCost { neurons, local_edges: 10, remote_partners: 2, nanos: 7 },
+            ..EpochSample::default()
+        }
+    }
+
+    fn two_rank_report() -> SimReport {
+        let mk = |rank: usize, n: u64, samples: usize| RankReport {
+            rank,
+            trace: (1..=samples).map(|i| sample(50 * i as u64, n)).collect(),
+            ..RankReport::default()
+        };
+        // Unequal sample counts: rank 1's ring evicted one sample.
+        SimReport { ranks: vec![mk(0, 48, 3), mk(1, 16, 2)], wall_seconds: 1.0 }
+    }
+
+    #[test]
+    fn export_matches_the_deterministic_event_count() {
+        let report = two_rank_report();
+        let root = parse(&chrome_trace(&report)).unwrap();
+        let events = root.get("traceEvents").unwrap().as_arr().unwrap();
+        let non_meta = events
+            .iter()
+            .filter(|e| e.get("ph").unwrap().as_str().unwrap() != "M")
+            .count() as u64;
+        // 3 + 2 samples at 10 events each, plus 2 aligned imbalance points.
+        assert_eq!(non_meta, 52);
+        assert_eq!(non_meta, event_count(&report));
+    }
+
+    #[test]
+    fn every_rank_gets_a_process_all_phases_and_counter_tracks() {
+        let text = chrome_trace(&two_rank_report());
+        let root = parse(&text).unwrap();
+        let events = root.get("traceEvents").unwrap().as_arr().unwrap();
+        for pid in [0.0, 1.0] {
+            for p in ALL_PHASES {
+                assert!(
+                    events.iter().any(|e| {
+                        e.get("ph").map(|v| v.as_str() == Ok("X")).unwrap_or(false)
+                            && e.get("pid").unwrap().as_f64().unwrap() == pid
+                            && e.get("name").unwrap().as_str().unwrap() == p.name()
+                    }),
+                    "rank {pid} missing a {} slice",
+                    p.name()
+                );
+            }
+            for track in ["bytes_sent", "step_cost", "spikes"] {
+                assert!(events.iter().any(|e| {
+                    e.get("ph").map(|v| v.as_str() == Ok("C")).unwrap_or(false)
+                        && e.get("pid").unwrap().as_f64().unwrap() == pid
+                        && e.get("name").unwrap().as_str().unwrap() == track
+                }));
+            }
+        }
+        // The cluster process carries the imbalance counter: 48 + 12 vs
+        // 16 + 12 cost with two ranks -> max/mean = 60/44.
+        let imb: Vec<f64> = events
+            .iter()
+            .filter(|e| {
+                e.get("name").unwrap().as_str().unwrap() == "imbalance"
+                    && e.get("ph").unwrap().as_str().unwrap() == "C"
+            })
+            .map(|e| e.get("args").unwrap().get("imbalance").unwrap().as_f64().unwrap())
+            .collect();
+        assert_eq!(imb.len(), 2);
+        assert!((imb[0] - 60.0 / 44.0).abs() < 1e-12);
+        assert!(text.contains("\"traceEvents\""));
+    }
+
+    #[test]
+    fn empty_report_exports_no_events() {
+        let report = SimReport::default();
+        let root = parse(&chrome_trace(&report)).unwrap();
+        assert!(root.get("traceEvents").unwrap().as_arr().unwrap().is_empty());
+        assert_eq!(event_count(&report), 0);
+    }
+}
