@@ -7,7 +7,7 @@
 //! and the oracle the Barnes–Hut variants approximate. Used as a
 //! baseline in benches and as the reference distribution in tests.
 
-use crate::comm::{gather_all, ThreadComm};
+use crate::comm::{gather_all, Comm};
 use crate::config::SimConfig;
 use crate::neuron::{GlobalNeuronId, Population};
 use crate::plasticity::{vacant, SynapseStore};
@@ -49,7 +49,7 @@ impl Wire for DirectRecord {
 /// Gather the global candidate table (only neurons with any vacant
 /// dendritic element; others can never be chosen).
 pub fn gather_candidates(
-    comm: &ThreadComm,
+    comm: &impl Comm,
     pop: &Population,
     store: &SynapseStore,
 ) -> Vec<DirectRecord> {
@@ -104,7 +104,7 @@ pub fn sample_direct(
 /// Full formation phase, direct algorithm. `owners` routes each chosen
 /// target id to its owning rank.
 pub fn run_formation(
-    comm: &ThreadComm,
+    comm: &impl Comm,
     pop: &Population,
     store: &mut SynapseStore,
     cfg: &SimConfig,

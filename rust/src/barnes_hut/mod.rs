@@ -16,7 +16,7 @@ pub mod new;
 pub mod old;
 pub mod select;
 
-use crate::comm::{exchange, ThreadComm};
+use crate::comm::{exchange, Comm};
 use crate::neuron::{GlobalNeuronId, Population};
 use crate::octree::ElementKind;
 use crate::plasticity::SynapseStore;
@@ -203,7 +203,7 @@ pub fn accept_proposals(
 /// rank, all-to-all the 1 B responses back (order-preserving), and apply
 /// successful formations on the source side.
 pub fn old_request_roundtrip(
-    comm: &ThreadComm,
+    comm: &impl Comm,
     requests: Vec<Vec<OldRequest>>,
     pop: &Population,
     store: &mut SynapseStore,

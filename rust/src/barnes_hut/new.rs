@@ -10,7 +10,7 @@
 //! accept/decline). Per-neuron communication drops from O(log n) RMA
 //! fetches to O(1) messages.
 
-use crate::comm::{exchange_ref, ThreadComm};
+use crate::comm::{exchange_ref, Comm};
 use crate::config::SimConfig;
 use crate::neuron::{GlobalNeuronId, Population};
 use crate::octree::{ElementKind, NodeKind, Octree, NO_CHILD, NO_NEURON};
@@ -150,7 +150,7 @@ pub struct FormationScratch {
 /// source-side searches, one 42 B-request all-to-all, owner-side
 /// searches, acceptance, one 9 B-response all-to-all.
 pub fn run_formation(
-    comm: &ThreadComm,
+    comm: &impl Comm,
     tree: &Octree,
     pop: &Population,
     store: &mut SynapseStore,
@@ -296,7 +296,7 @@ pub fn run_formation(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::comm::run_ranks;
+    use crate::comm::{run_ranks, ThreadComm};
     use crate::octree::DomainDecomposition;
 
     fn build_two_rank_tree(

@@ -7,7 +7,7 @@
 //! Per-neuron communication is O(log n) node downloads — the baseline
 //! the location-aware algorithm (`new.rs`) eliminates.
 
-use crate::comm::ThreadComm;
+use crate::comm::Comm;
 use crate::config::SimConfig;
 use crate::neuron::{GlobalNeuronId, Population};
 use crate::octree::{
@@ -36,13 +36,13 @@ struct Info {
 }
 
 /// The old algorithm's tree view: local arena + RMA downloads.
-pub struct OldView<'a> {
+pub struct OldView<'a, C: Comm> {
     pub tree: &'a Octree,
     pub cache: &'a mut RemoteNodeCache,
-    pub comm: &'a ThreadComm,
+    pub comm: &'a C,
 }
 
-impl<'a> OldView<'a> {
+impl<'a, C: Comm> OldView<'a, C> {
     fn info(&mut self, h: H, kind: ElementKind) -> Info {
         match h {
             H::Local(i) => {
@@ -115,8 +115,8 @@ impl<'a> OldView<'a> {
 
 /// One full old-style target search from the root. Downloads remote
 /// nodes as needed; returns the found neuron or None.
-pub fn search_old(
-    view: &mut OldView<'_>,
+pub fn search_old<C: Comm>(
+    view: &mut OldView<'_, C>,
     src_id: GlobalNeuronId,
     src_pos: &Vec3,
     kind: ElementKind,
@@ -175,7 +175,7 @@ pub fn search_old(
 /// `owners` routes each found target id to its owning rank.
 #[allow(clippy::too_many_arguments)]
 pub fn run_formation(
-    comm: &ThreadComm,
+    comm: &impl Comm,
     tree: &Octree,
     pop: &Population,
     store: &mut SynapseStore,

@@ -34,6 +34,6 @@ pub mod scenario;
 pub mod stats;
 
 pub use report::{BenchReport, DiffReport, ScenarioResult, SCHEMA_VERSION};
-pub use runner::{run_matrix, run_scenario};
+pub use runner::{run_matrix, run_matrix_with_backend, run_scenario, run_scenario_with_backend};
 pub use scenario::{preset, skewed_init_cells, AlgGen, MatrixSpec, Regime, RunSettings, Scenario};
 pub use stats::Summary;

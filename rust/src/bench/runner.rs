@@ -6,6 +6,7 @@
 use anyhow::Result;
 
 use crate::comm::CounterSnapshot;
+use crate::config::CommBackend;
 use crate::coordinator::run_simulation;
 use crate::metrics::ALL_PHASES;
 
@@ -21,7 +22,21 @@ use super::stats::Summary;
 /// repetitions — any drift is a determinism bug and errors the run
 /// (a hard check, not a debug assertion: benches run `--release`).
 pub fn run_scenario(scenario: &Scenario, settings: &RunSettings) -> Result<ScenarioResult> {
-    let cfg = scenario.config(settings);
+    run_scenario_with_backend(scenario, settings, CommBackend::Thread)
+}
+
+/// [`run_scenario`] on an explicit communication backend. The backend is
+/// transport, not dynamics: every recorded number except wall/phase
+/// seconds must be identical across backends (the differential suite
+/// pins this), so scenario ids and the report schema carry no backend
+/// tag — a socket report diffs cleanly against a thread baseline.
+pub fn run_scenario_with_backend(
+    scenario: &Scenario,
+    settings: &RunSettings,
+    backend: CommBackend,
+) -> Result<ScenarioResult> {
+    let mut cfg = scenario.config(settings);
+    cfg.comm_backend = backend;
     for _ in 0..settings.warmup {
         run_simulation(&cfg)?;
     }
@@ -130,6 +145,18 @@ pub fn run_matrix(
     name: &str,
     spec: &MatrixSpec,
     settings: &RunSettings,
+    progress: impl FnMut(&str),
+) -> Result<BenchReport> {
+    run_matrix_with_backend(name, spec, settings, CommBackend::Thread, progress)
+}
+
+/// [`run_matrix`] on an explicit communication backend (what
+/// `ilmi bench --comm socket` runs).
+pub fn run_matrix_with_backend(
+    name: &str,
+    spec: &MatrixSpec,
+    settings: &RunSettings,
+    backend: CommBackend,
     mut progress: impl FnMut(&str),
 ) -> Result<BenchReport> {
     let cells = spec.cells();
@@ -144,7 +171,7 @@ pub fn run_matrix(
             settings.reps.max(1),
             settings.steps
         ));
-        results.push(run_scenario(cell, settings)?);
+        results.push(run_scenario_with_backend(cell, settings, backend)?);
     }
     let created_unix = std::time::SystemTime::now()
         .duration_since(std::time::UNIX_EPOCH)

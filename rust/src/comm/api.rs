@@ -1,0 +1,83 @@
+//! The `Comm` trait: the communicator surface the simulation is written
+//! against.
+//!
+//! Every algorithm in this repo (spike exchange, Barnes–Hut formation,
+//! deletion notification, migration, snapshot capture) talks to its
+//! peers through exactly this surface. Backends differ only in *how*
+//! bytes move — shared-memory slots between threads (`ThreadComm`) or
+//! length-prefixed frames over Unix domain sockets between processes
+//! (`SocketComm`) — never in who-talks-to-whom, message counts, or byte
+//! volumes. That invariant is what makes `CommCounters` accounting and
+//! simulation trajectories bit-identical across backends, and it is
+//! pinned by the cross-backend differential suite
+//! (`rust/tests/integration_comm_backends.rs`).
+//!
+//! Contract notes (DESIGN.md §11):
+//! - `all_to_all` is collective: every rank must call it the same number
+//!   of times with one buffer per rank. Self-delivery is free; bytes
+//!   between distinct ranks are counted (`add_sent`/`add_recv`), and the
+//!   collective itself is counted once on each rank.
+//! - `rma_get` is one-sided from the *caller's* accounting perspective:
+//!   remotely-fetched bytes are attributed to the requester
+//!   (`add_rma`), self-gets are free. Callers synchronize publication
+//!   with a collective or `barrier` (like `MPI_Win_fence`).
+//! - `barrier`, `window_len`, `counters`, and `all_counters` are
+//!   uncounted metadata/synchronization operations.
+//! - `poison`/`is_poisoned`: a failing rank marks the communicator so
+//!   peers (and the harness) can distinguish "peer crashed" from a local
+//!   logic error instead of deadlocking.
+
+use super::counters::{CommCounters, CounterSnapshot};
+use super::thread_comm::WindowKey;
+
+/// A simulated-MPI communicator endpoint for one rank. See the module
+/// docs for the accounting and synchronization contract every backend
+/// must satisfy bit-for-bit.
+pub trait Comm {
+    /// This rank's id in `0..size()`.
+    fn rank(&self) -> usize;
+
+    /// Number of ranks in the communicator.
+    fn size(&self) -> usize;
+
+    /// Synchronize all ranks (uncounted).
+    fn barrier(&self);
+
+    /// Synchronous all-to-all: `sends[d]` is delivered to rank `d`;
+    /// returns `recvs[s]` = buffer sent by rank `s`. Bytes moving
+    /// between distinct ranks are counted; self-delivery is free.
+    fn all_to_all(&self, sends: Vec<Vec<u8>>) -> Vec<Vec<u8>>;
+
+    /// Publish (replace) an RMA window under `key`. Visible to other
+    /// ranks after the next synchronization point (caller synchronizes,
+    /// like `MPI_Win_fence`).
+    fn publish_window(&self, key: WindowKey, data: Vec<u8>);
+
+    /// Remove a published window.
+    fn retract_window(&self, key: WindowKey);
+
+    /// One-sided get: copy `len` bytes at `offset` from `target`'s
+    /// window. Counted as remotely-accessed bytes on the *calling* rank;
+    /// self-gets are free. Panics (with the same message shapes on every
+    /// backend) on a missing window, an out-of-range `offset + len`, or
+    /// a range that overflows `usize`.
+    fn rma_get(&self, target: usize, key: WindowKey, offset: usize, len: usize) -> Vec<u8>;
+
+    /// Size in bytes of `target`'s window (free metadata peek used to
+    /// bound fetches; not counted).
+    fn window_len(&self, target: usize, key: WindowKey) -> Option<usize>;
+
+    /// This rank's counter handle.
+    fn counters(&self) -> &CommCounters;
+
+    /// Snapshot of every rank's counters, indexed by rank (uncounted;
+    /// callers quiesce with a `barrier` first when they need a
+    /// deterministic cut).
+    fn all_counters(&self) -> Vec<CounterSnapshot>;
+
+    /// Mark the communicator as failed (a panicking rank sets this so
+    /// sibling ranks can be diagnosed instead of deadlocking).
+    fn poison(&self);
+
+    fn is_poisoned(&self) -> bool;
+}

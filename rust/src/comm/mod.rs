@@ -13,18 +13,36 @@
 //! new algorithms differ in *communication structure and volume*, not in
 //! which transport carries the bytes. Who-talks-to-whom, message counts,
 //! synchronization points, and byte volumes are preserved exactly.
+//!
+//! Two backends implement the [`Comm`] trait (DESIGN.md §11):
+//! - [`ThreadComm`]: each rank is an OS thread in this process;
+//!   collectives move buffers through shared-memory slots.
+//! - [`SocketComm`]: each rank is its own OS process; collectives and
+//!   RMA move length-prefixed frames over Unix domain sockets (launched
+//!   by [`proc::run_entry`], selected with `--comm socket`).
+//!
+//! Accounting is byte-for-byte identical across backends — the
+//! cross-backend differential suite pins it.
 
+mod api;
 mod counters;
+#[cfg(unix)]
+pub mod proc;
+#[cfg(unix)]
+mod socket_comm;
 mod thread_comm;
 
+pub use api::Comm;
 pub use counters::{CommCounters, CounterSnapshot};
+#[cfg(unix)]
+pub use socket_comm::{decode_frame, encode_frame, socket_ranks, SocketComm, FRAME_HEADER};
 pub use thread_comm::{run_ranks, ThreadComm, WindowKey};
 
 use crate::util::wire::{decode_all, encode_all, Wire};
 
 /// Typed all-to-all: `sends[d]` goes to rank `d`; returns `recvs[s]`
 /// received from rank `s`. Counts wire bytes on the communicator.
-pub fn exchange<T: Wire>(comm: &ThreadComm, sends: Vec<Vec<T>>) -> Vec<Vec<T>> {
+pub fn exchange<T: Wire>(comm: &impl Comm, sends: Vec<Vec<T>>) -> Vec<Vec<T>> {
     exchange_ref(comm, &sends)
 }
 
@@ -33,14 +51,14 @@ pub fn exchange<T: Wire>(comm: &ThreadComm, sends: Vec<Vec<T>>) -> Vec<Vec<T>> {
 /// per call (EXPERIMENTS.md §Perf, opt 6). The wire bytes on the
 /// communicator are identical to `exchange`'s: encoding copies out of
 /// the borrowed lists either way.
-pub fn exchange_ref<T: Wire>(comm: &ThreadComm, sends: &[Vec<T>]) -> Vec<Vec<T>> {
+pub fn exchange_ref<T: Wire>(comm: &impl Comm, sends: &[Vec<T>]) -> Vec<Vec<T>> {
     let bufs = sends.iter().map(|msgs| encode_all(msgs)).collect();
     comm.all_to_all(bufs).iter().map(|buf| decode_all(buf)).collect()
 }
 
 /// Typed all-gather: every rank contributes `items`; returns per-source
 /// vectors on every rank.
-pub fn gather_all<T: Wire + Clone>(comm: &ThreadComm, items: &[T]) -> Vec<Vec<T>> {
+pub fn gather_all<T: Wire + Clone>(comm: &impl Comm, items: &[T]) -> Vec<Vec<T>> {
     let sends = vec![items.to_vec(); comm.size()];
     exchange(comm, sends)
 }

@@ -1,0 +1,293 @@
+//! Process-per-rank launcher for the socket backend.
+//!
+//! `run_entry` re-executes the current binary once per rank with the
+//! rendezvous parameters in `ILMI_COMM_*` environment variables; each
+//! child calls [`maybe_run_child`] at the top of `main` (or from a
+//! dedicated test hook), joins the communicator, runs the named entry
+//! function, and reports its result back over a control socket in the
+//! rendezvous directory. Entries are looked up by name in a registry the
+//! host binary passes in — a plain `fn` table, so the child executes
+//! exactly the code the parent named, never arbitrary input.
+//!
+//! Failure semantics (DESIGN.md §11): a child that panics or errors
+//! reports a `CHILD_ERR` frame and exits nonzero; a child that dies
+//! without reporting is noticed by the launcher's `try_wait` sweep; a
+//! child that hangs is bounded by the launch deadline. On the first
+//! failure the launcher kills the remaining children — no partial fleet
+//! lingers. Successful entries leave together (a final barrier) so one
+//! rank's exit cannot tear its RMA server threads down while a slower
+//! peer still needs them.
+
+use std::io::ErrorKind;
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::Path;
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use super::socket_comm::{fresh_rendezvous_dir, read_frame, tags, write_frame, SocketComm};
+use super::Comm;
+use crate::util::wire::{put_u32, Cursor};
+
+/// Entry-function name the child should run (presence marks a child).
+pub const ENV_ENTRY: &str = "ILMI_COMM_ENTRY";
+pub const ENV_RANK: &str = "ILMI_COMM_RANK";
+pub const ENV_SIZE: &str = "ILMI_COMM_SIZE";
+pub const ENV_DIR: &str = "ILMI_COMM_DIR";
+pub const ENV_TIMEOUT_MS: &str = "ILMI_COMM_TIMEOUT_MS";
+/// Extra argv prepended when re-executing the current binary. The `ilmi`
+/// binary needs none; a libtest harness sets this to
+/// `"<full test name> --exact"` so the child process runs its
+/// `maybe_run_child` hook instead of the whole suite.
+pub const ENV_CHILD_ARGS: &str = "ILMI_SOCKET_CHILD_ARGS";
+
+/// A named function a rank process can be asked to run.
+pub type Entry = fn(&SocketComm, &[u8]) -> Result<Vec<u8>, String>;
+
+/// One process-per-rank launch.
+pub struct LaunchSpec<'a> {
+    /// Registry name of the entry every rank runs.
+    pub entry: &'a str,
+    pub ranks: usize,
+    /// Opaque argument bytes delivered to every rank's entry.
+    pub args: &'a [u8],
+    /// Bounds the rendezvous, every peer read in the children, and
+    /// (plus a reporting margin) the launch as a whole.
+    pub timeout: Duration,
+}
+
+/// How long the launcher keeps draining the control socket after a
+/// child exits before declaring its result lost.
+const EXIT_GRACE: Duration = Duration::from_millis(500);
+
+fn env_usize(key: &str) -> usize {
+    std::env::var(key)
+        .unwrap_or_else(|_| panic!("{key} not set in socket child"))
+        .parse()
+        .unwrap_or_else(|_| panic!("{key} is not a number"))
+}
+
+/// Child-side hook: if this process was spawned by `run_entry`, join the
+/// communicator, run the named entry from `entries`, report the result,
+/// and exit — never returns in that case. A plain invocation (no
+/// `ILMI_COMM_ENTRY` in the environment) returns immediately.
+pub fn maybe_run_child(entries: &[(&str, Entry)]) {
+    let Ok(entry_name) = std::env::var(ENV_ENTRY) else {
+        return;
+    };
+    let rank = env_usize(ENV_RANK);
+    let size = env_usize(ENV_SIZE);
+    let dir = std::env::var(ENV_DIR).expect("ILMI_COMM_DIR not set in socket child");
+    let timeout = Duration::from_millis(env_usize(ENV_TIMEOUT_MS) as u64);
+    // Strip the rendezvous variables so nothing the entry spawns — or a
+    // nested thread-backend simulation — re-enters the child path.
+    for key in [ENV_ENTRY, ENV_RANK, ENV_SIZE, ENV_DIR, ENV_TIMEOUT_MS] {
+        std::env::remove_var(key);
+    }
+    std::process::exit(run_child(&entry_name, entries, rank, size, Path::new(&dir), timeout));
+}
+
+fn run_child(
+    entry_name: &str,
+    entries: &[(&str, Entry)],
+    rank: usize,
+    size: usize,
+    dir: &Path,
+    timeout: Duration,
+) -> i32 {
+    let report = |tag: u8, body: &[u8]| {
+        if let Ok(stream) = UnixStream::connect(dir.join("ctl.sock")) {
+            let mut framed = Vec::with_capacity(4 + body.len());
+            put_u32(&mut framed, rank as u32);
+            framed.extend_from_slice(body);
+            let _ = write_frame(&stream, tag, &framed);
+        }
+    };
+    let Some(entry) = entries.iter().find(|(n, _)| *n == entry_name).map(|(_, f)| *f) else {
+        report(tags::CHILD_ERR, format!("unknown socket entry {entry_name:?}").as_bytes());
+        return 1;
+    };
+    let args = std::fs::read(dir.join("args.bin")).unwrap_or_default();
+    let comm = match SocketComm::connect(rank, size, dir, timeout) {
+        Ok(c) => c,
+        Err(e) => {
+            report(tags::CHILD_ERR, format!("rendezvous failed: {e}").as_bytes());
+            return 1;
+        }
+    };
+    let result = catch_unwind(AssertUnwindSafe(|| {
+        let bytes = entry(&comm, &args)?;
+        // Leave together: a rank that exits the moment its own entry
+        // returns would tear down the RMA server threads a slower peer
+        // is still reading from.
+        comm.barrier();
+        Ok(bytes)
+    }));
+    match result {
+        Ok(Ok(bytes)) => {
+            report(tags::RESULT, &bytes);
+            0
+        }
+        Ok(Err(msg)) => {
+            report(tags::CHILD_ERR, msg.as_bytes());
+            1
+        }
+        Err(panic) => {
+            let msg = panic_message(panic.as_ref());
+            report(tags::CHILD_ERR, format!("panicked: {msg}").as_bytes());
+            1
+        }
+    }
+}
+
+fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Launch `spec.ranks` rank processes running `spec.entry` and collect
+/// their result bytes in rank order. Fails fast on the first child
+/// error, a child death without a report, or the deadline.
+pub fn run_entry(spec: &LaunchSpec) -> Result<Vec<Vec<u8>>, String> {
+    if std::env::var_os(ENV_ENTRY).is_some() {
+        return Err("recursive socket launch: ILMI_COMM_ENTRY is already set".into());
+    }
+    let exe = std::env::current_exe().map_err(|e| format!("current_exe: {e}"))?;
+    let dir = fresh_rendezvous_dir("pc").map_err(|e| format!("rendezvous dir: {e}"))?;
+    let result = launch_in(&exe, &dir, spec);
+    let _ = std::fs::remove_dir_all(&dir);
+    result
+}
+
+fn launch_in(exe: &Path, dir: &Path, spec: &LaunchSpec) -> Result<Vec<Vec<u8>>, String> {
+    std::fs::write(dir.join("args.bin"), spec.args)
+        .map_err(|e| format!("writing entry args: {e}"))?;
+    let ctl = UnixListener::bind(dir.join("ctl.sock"))
+        .map_err(|e| format!("binding control socket: {e}"))?;
+    ctl.set_nonblocking(true).map_err(|e| format!("control socket: {e}"))?;
+
+    let child_args = child_args_from_env();
+    let mut children: Vec<Child> = Vec::with_capacity(spec.ranks);
+    for rank in 0..spec.ranks {
+        let spawned = Command::new(exe)
+            .args(&child_args)
+            .env(ENV_ENTRY, spec.entry)
+            .env(ENV_RANK, rank.to_string())
+            .env(ENV_SIZE, spec.ranks.to_string())
+            .env(ENV_DIR, dir.as_os_str())
+            .env(ENV_TIMEOUT_MS, spec.timeout.as_millis().to_string())
+            .stdin(Stdio::null())
+            .stdout(Stdio::null())
+            .spawn();
+        match spawned {
+            Ok(c) => children.push(c),
+            Err(e) => {
+                kill_all(&mut children);
+                return Err(format!("spawning rank {rank}: {e}"));
+            }
+        }
+    }
+
+    let deadline = Instant::now() + spec.timeout + Duration::from_secs(5);
+    let mut results: Vec<Option<Vec<u8>>> = (0..spec.ranks).map(|_| None).collect();
+    let mut exited_at: Vec<Option<Instant>> = vec![None; spec.ranks];
+    let mut failure: Option<String> = None;
+    while failure.is_none() && results.iter().any(|r| r.is_none()) {
+        // Drain every report queued on the control socket.
+        loop {
+            match ctl.accept() {
+                Ok((stream, _)) => {
+                    let _ = stream.set_nonblocking(false);
+                    let _ = stream.set_read_timeout(Some(Duration::from_secs(5)));
+                    match read_report(&stream, spec.ranks) {
+                        Ok((rank, Ok(bytes))) => results[rank] = Some(bytes),
+                        Ok((rank, Err(msg))) => {
+                            failure = Some(format!("socket rank {rank} failed: {msg}"));
+                        }
+                        Err(e) => failure = Some(format!("malformed child report: {e}")),
+                    }
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) => {
+                    failure = Some(format!("control socket: {e}"));
+                    break;
+                }
+            }
+            if failure.is_some() {
+                break;
+            }
+        }
+        if failure.is_some() {
+            break;
+        }
+        // A child that exited without reporting gets a short grace for
+        // its queued report to drain, then counts as lost.
+        for rank in 0..spec.ranks {
+            if results[rank].is_some() {
+                continue;
+            }
+            if let Ok(Some(status)) = children[rank].try_wait() {
+                let t = *exited_at[rank].get_or_insert_with(Instant::now);
+                if t.elapsed() > EXIT_GRACE {
+                    failure = Some(format!(
+                        "socket rank {rank} exited with {status} before reporting a result"
+                    ));
+                    break;
+                }
+            }
+        }
+        if failure.is_none() && Instant::now() >= deadline {
+            failure = Some(format!(
+                "socket launch timed out after {:?} waiting for rank results",
+                spec.timeout
+            ));
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+
+    if let Some(msg) = failure {
+        kill_all(&mut children);
+        return Err(msg);
+    }
+    for c in &mut children {
+        let _ = c.wait(); // every rank has reported; exits are imminent
+    }
+    Ok(results.into_iter().map(|r| r.expect("result checked above")).collect())
+}
+
+fn read_report(stream: &UnixStream, ranks: usize) -> Result<(usize, Result<Vec<u8>, String>), String> {
+    let (tag, payload) = read_frame(stream).map_err(|e| format!("reading frame: {e}"))?;
+    let mut c = Cursor::new(&payload, "child report");
+    let rank = c.u32("rank")? as usize;
+    if rank >= ranks {
+        return Err(format!("report from out-of-range rank {rank}"));
+    }
+    let n = c.remaining();
+    let body = c.bytes(n, "report body")?.to_vec();
+    match tag {
+        tags::RESULT => Ok((rank, Ok(body))),
+        tags::CHILD_ERR => Ok((rank, Err(String::from_utf8_lossy(&body).into_owned()))),
+        other => Err(format!("unexpected child report tag {other}")),
+    }
+}
+
+fn kill_all(children: &mut [Child]) {
+    for c in children.iter_mut() {
+        let _ = c.kill();
+        let _ = c.wait();
+    }
+}
+
+/// The extra argv `run_entry` passes when re-executing this binary
+/// (`ILMI_SOCKET_CHILD_ARGS`, whitespace-split). Empty for the `ilmi`
+/// CLI; test harnesses point it at their child hook test.
+pub fn child_args_from_env() -> Vec<String> {
+    std::env::var(ENV_CHILD_ARGS)
+        .map(|s| s.split_whitespace().map(str::to_string).collect())
+        .unwrap_or_default()
+}

@@ -1,0 +1,806 @@
+//! Process-per-rank communicator over Unix domain sockets.
+//!
+//! Each rank is its own OS process (launched by [`super::proc`]). Ranks
+//! rendezvous in a shared directory: rank `r` binds a listener at
+//! `r{r}.sock`, then opens two stream channels to every peer:
+//!
+//! - a **data** channel (one direction per ordered pair): collective and
+//!   barrier frames from `r` to the peer. `all_to_all` writes one frame
+//!   to every other rank, then reads one frame from every other rank;
+//!   because every rank issues the same collective sequence (the same
+//!   contract `ThreadComm` relies on), frames per pair arrive in order.
+//! - an **RMA** channel (request/reply, client side at `r`): `rma_get`,
+//!   `window_len`, and `all_counters` become request frames answered by
+//!   a server thread on the owning rank, which reads the owner's
+//!   published window map. This turns one-sided RMA into request/reply
+//!   while keeping the *accounting* identical: fetched bytes are counted
+//!   on the requester only (`add_rma`), request/metadata frames are
+//!   free, exactly like `ThreadComm`.
+//!
+//! Every frame is length-prefixed: `[tag: u8][len: u32 LE][payload]`.
+//! Request payloads are decoded with `wire::Cursor`, so a truncated or
+//! corrupt frame is rejected with a descriptive error reply instead of a
+//! panic in the server thread. Reads on data and client channels carry a
+//! bounded timeout: a peer process that dies (EOF) or stalls (timeout)
+//! mid-collective poisons this rank's communicator and panics with a
+//! diagnostic instead of deadlocking. See DESIGN.md §11.
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+use std::time::{Duration, Instant};
+
+use super::counters::{CommCounters, CounterSnapshot};
+use super::thread_comm::WindowKey;
+use crate::util::wire::{put_u32, put_u64, put_u8, Cursor};
+
+/// Frame tags. One byte on the wire; grouped by channel.
+pub(crate) mod tags {
+    /// First frame on any inbound channel: `[rank u32][kind u8]`.
+    pub const HELLO: u8 = 1;
+    /// One `all_to_all` buffer (data channel).
+    pub const COLLECTIVE: u8 = 2;
+    /// Barrier token, empty payload (data channel).
+    pub const BARRIER: u8 = 3;
+    /// `rma_get` request: `[key u32][offset u64][len u64]` (RMA channel).
+    pub const RMA_REQ: u8 = 4;
+    /// `rma_get` reply: the fetched bytes.
+    pub const RMA_OK: u8 = 5;
+    /// `window_len` request: `[key u32]`.
+    pub const WINLEN_REQ: u8 = 6;
+    /// `window_len` reply: `[present u8][len u64]`.
+    pub const WINLEN_RESP: u8 = 7;
+    /// Counter snapshot request, empty payload.
+    pub const CNT_REQ: u8 = 8;
+    /// Counter snapshot reply: six `u64`s.
+    pub const CNT_RESP: u8 = 9;
+    /// Error reply: UTF-8 message. The requester re-panics with it.
+    pub const ERR: u8 = 10;
+    /// Child → launcher result frame: `[rank u32][bytes]` (control socket).
+    pub const RESULT: u8 = 11;
+    /// Child → launcher failure frame: `[rank u32][UTF-8 message]`.
+    pub const CHILD_ERR: u8 = 12;
+}
+
+/// Channel kinds carried in the HELLO frame.
+const KIND_DATA: u8 = 0;
+const KIND_RMA: u8 = 1;
+
+/// Upper bound on a single frame payload; a corrupt length prefix must
+/// not turn into a multi-gigabyte allocation.
+pub(crate) const MAX_FRAME: usize = 1 << 30;
+
+/// Bytes of framing added to every payload: `[tag u8][len u32]`.
+pub const FRAME_HEADER: usize = 5;
+
+// -- frame codec --------------------------------------------------------
+
+/// Encode one frame: `[tag][len u32 LE][payload]`.
+pub fn encode_frame(tag: u8, payload: &[u8]) -> Vec<u8> {
+    assert!(payload.len() <= MAX_FRAME, "frame payload exceeds MAX_FRAME");
+    let mut out = Vec::with_capacity(FRAME_HEADER + payload.len());
+    put_u8(&mut out, tag);
+    put_u32(&mut out, payload.len() as u32);
+    out.extend_from_slice(payload);
+    out
+}
+
+/// Decode one complete frame from a byte buffer via checked `Cursor`
+/// reads: truncation (in the header or the payload), trailing garbage,
+/// and an oversized length prefix are all `Err`, never a panic.
+pub fn decode_frame(buf: &[u8]) -> Result<(u8, Vec<u8>), String> {
+    let mut c = Cursor::new(buf, "socket frame");
+    let tag = c.u8("frame tag")?;
+    let len = c.u32("frame length")? as usize;
+    if len > MAX_FRAME {
+        return Err(format!("socket frame: length {len} exceeds MAX_FRAME"));
+    }
+    let payload = c.bytes(len, "frame payload")?.to_vec();
+    c.finish("frame")?;
+    Ok((tag, payload))
+}
+
+/// Write one frame to a stream.
+pub(crate) fn write_frame(mut stream: &UnixStream, tag: u8, payload: &[u8]) -> std::io::Result<()> {
+    stream.write_all(&encode_frame(tag, payload))?;
+    stream.flush()
+}
+
+/// Read one frame from a stream (blocking, honoring any read timeout set
+/// on the socket). EOF, timeout, and a corrupt length prefix are errors.
+pub(crate) fn read_frame(mut stream: &UnixStream) -> std::io::Result<(u8, Vec<u8>)> {
+    let mut header = [0u8; FRAME_HEADER];
+    stream.read_exact(&mut header)?;
+    let tag = header[0];
+    let len = u32::from_le_bytes(header[1..5].try_into().unwrap()) as usize;
+    if len > MAX_FRAME {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("socket frame: length {len} exceeds MAX_FRAME"),
+        ));
+    }
+    let mut payload = vec![0u8; len];
+    stream.read_exact(&mut payload)?;
+    Ok((tag, payload))
+}
+
+pub(crate) fn encode_snapshot(s: &CounterSnapshot) -> Vec<u8> {
+    let mut out = Vec::with_capacity(48);
+    put_u64(&mut out, s.bytes_sent);
+    put_u64(&mut out, s.bytes_recv);
+    put_u64(&mut out, s.bytes_rma);
+    put_u64(&mut out, s.msgs_sent);
+    put_u64(&mut out, s.collectives);
+    put_u64(&mut out, s.rma_gets);
+    out
+}
+
+pub(crate) fn decode_snapshot(buf: &[u8]) -> Result<CounterSnapshot, String> {
+    let mut c = Cursor::new(buf, "counter snapshot");
+    let s = CounterSnapshot {
+        bytes_sent: c.u64("bytes_sent")?,
+        bytes_recv: c.u64("bytes_recv")?,
+        bytes_rma: c.u64("bytes_rma")?,
+        msgs_sent: c.u64("msgs_sent")?,
+        collectives: c.u64("collectives")?,
+        rma_gets: c.u64("rma_gets")?,
+    };
+    c.finish("counter snapshot")?;
+    Ok(s)
+}
+
+// -- the communicator ---------------------------------------------------
+
+type Windows = Arc<RwLock<HashMap<WindowKey, Arc<Vec<u8>>>>>;
+
+/// One rank's endpoint of a process-per-rank socket communicator.
+pub struct SocketComm {
+    rank: usize,
+    size: usize,
+    counters: Arc<CommCounters>,
+    windows: Windows,
+    poisoned: Arc<AtomicBool>,
+    /// Outbound data channel to each peer (`None` at `self.rank`).
+    data_out: Vec<Option<UnixStream>>,
+    /// Inbound data channel from each peer.
+    data_in: Vec<Option<UnixStream>>,
+    /// Request/reply client channel to each peer's RMA server thread.
+    rma_out: Vec<Option<UnixStream>>,
+}
+
+fn connect_retry(path: &Path, deadline: Instant) -> std::io::Result<UnixStream> {
+    loop {
+        match UnixStream::connect(path) {
+            Ok(s) => return Ok(s),
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::NotFound | std::io::ErrorKind::ConnectionRefused
+                ) && Instant::now() < deadline =>
+            {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(e) => {
+                return Err(std::io::Error::new(
+                    e.kind(),
+                    format!("connecting {}: {e}", path.display()),
+                ))
+            }
+        }
+    }
+}
+
+fn io_invalid(msg: String) -> std::io::Error {
+    std::io::Error::new(std::io::ErrorKind::InvalidData, msg)
+}
+
+/// Serve one peer's RMA request/reply channel. Runs on a detached thread
+/// owned by the window-owning rank; exits when the peer hangs up.
+/// Malformed request frames get an `ERR` reply (checked `Cursor`
+/// decoding), never a panic: a corrupt peer must not take the owner
+/// down with it.
+fn serve_rma(stream: UnixStream, windows: Windows, counters: Arc<CommCounters>, my_rank: usize) {
+    loop {
+        let (tag, payload) = match read_frame(&stream) {
+            Ok(f) => f,
+            Err(_) => return, // peer closed (or died): server retires
+        };
+        let (rtag, reply) = match tag {
+            tags::RMA_REQ => match serve_rma_get(&payload, &windows, my_rank) {
+                Ok(bytes) => (tags::RMA_OK, bytes),
+                Err(msg) => (tags::ERR, msg.into_bytes()),
+            },
+            tags::WINLEN_REQ => match serve_window_len(&payload, &windows) {
+                Ok(bytes) => (tags::WINLEN_RESP, bytes),
+                Err(msg) => (tags::ERR, msg.into_bytes()),
+            },
+            tags::CNT_REQ => (tags::CNT_RESP, encode_snapshot(&counters.snapshot())),
+            other => (
+                tags::ERR,
+                format!("rank {my_rank}: unexpected frame tag {other} on RMA channel").into_bytes(),
+            ),
+        };
+        if write_frame(&stream, rtag, &reply).is_err() {
+            return;
+        }
+    }
+}
+
+fn serve_rma_get(payload: &[u8], windows: &Windows, my_rank: usize) -> Result<Vec<u8>, String> {
+    let mut c = Cursor::new(payload, "rma_get request");
+    let key = c.u32("window key")?;
+    let offset = c.u64("offset")? as usize;
+    let len = c.u64("length")? as usize;
+    c.finish("rma_get request")?;
+    let win = windows
+        .read()
+        .unwrap()
+        .get(&key)
+        .cloned()
+        .ok_or_else(|| format!("rank {my_rank} has no window {key}"))?;
+    let end = offset
+        .checked_add(len)
+        .ok_or_else(|| format!("rma_get out of bounds: {offset}+{len} overflows usize"))?;
+    if end > win.len() {
+        return Err(format!("rma_get out of bounds: {}+{} > {}", offset, len, win.len()));
+    }
+    Ok(win[offset..end].to_vec())
+}
+
+fn serve_window_len(payload: &[u8], windows: &Windows) -> Result<Vec<u8>, String> {
+    let mut c = Cursor::new(payload, "window_len request");
+    let key = c.u32("window key")?;
+    c.finish("window_len request")?;
+    let len = windows.read().unwrap().get(&key).map(|w| w.len());
+    let mut out = Vec::with_capacity(9);
+    put_u8(&mut out, len.is_some() as u8);
+    put_u64(&mut out, len.unwrap_or(0) as u64);
+    Ok(out)
+}
+
+impl SocketComm {
+    /// Join the communicator rendezvousing in `dir`: bind this rank's
+    /// listener, open data + RMA channels to every peer, and start the
+    /// RMA server threads. `timeout` bounds both the rendezvous and
+    /// every subsequent peer read (the anti-deadlock budget).
+    pub fn connect(
+        rank: usize,
+        size: usize,
+        dir: &Path,
+        timeout: Duration,
+    ) -> std::io::Result<SocketComm> {
+        assert!(size > 0, "communicator needs at least one rank");
+        assert!(rank < size, "rank {rank} out of range for size {size}");
+        let mut comm = SocketComm {
+            rank,
+            size,
+            counters: Arc::new(CommCounters::default()),
+            windows: Arc::new(RwLock::new(HashMap::new())),
+            poisoned: Arc::new(AtomicBool::new(false)),
+            data_out: (0..size).map(|_| None).collect(),
+            data_in: (0..size).map(|_| None).collect(),
+            rma_out: (0..size).map(|_| None).collect(),
+        };
+        if size == 1 {
+            return Ok(comm); // solo: every operation is local
+        }
+        let deadline = Instant::now() + timeout;
+        let listener = UnixListener::bind(dir.join(format!("r{rank}.sock")))?;
+        listener.set_nonblocking(true)?;
+
+        // Outbound: a data channel and an RMA client channel per peer.
+        // Peers that have not bound yet are retried until the deadline.
+        for peer in 0..size {
+            if peer == rank {
+                continue;
+            }
+            let path = dir.join(format!("r{peer}.sock"));
+            for kind in [KIND_DATA, KIND_RMA] {
+                let stream = connect_retry(&path, deadline)?;
+                let mut hello = Vec::with_capacity(5);
+                put_u32(&mut hello, rank as u32);
+                put_u8(&mut hello, kind);
+                write_frame(&stream, tags::HELLO, &hello)?;
+                if kind == KIND_DATA {
+                    comm.data_out[peer] = Some(stream);
+                } else {
+                    stream.set_read_timeout(Some(timeout))?;
+                    comm.rma_out[peer] = Some(stream);
+                }
+            }
+        }
+
+        // Inbound: accept the mirror-image channels and classify them by
+        // their HELLO frame. The listener is non-blocking so a peer that
+        // never arrives turns into a rendezvous timeout, not a hang.
+        let mut pending = 2 * (size - 1);
+        while pending > 0 {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    stream.set_nonblocking(false)?;
+                    let grace = deadline
+                        .saturating_duration_since(Instant::now())
+                        .max(Duration::from_millis(10));
+                    stream.set_read_timeout(Some(grace))?;
+                    let (tag, payload) = read_frame(&stream)?;
+                    if tag != tags::HELLO {
+                        return Err(io_invalid(format!("expected HELLO frame, got tag {tag}")));
+                    }
+                    let mut c = Cursor::new(&payload, "hello frame");
+                    let peer = c.u32("peer rank").map_err(io_invalid)? as usize;
+                    let kind = c.u8("channel kind").map_err(io_invalid)?;
+                    c.finish("hello frame").map_err(io_invalid)?;
+                    if peer >= size || peer == rank {
+                        return Err(io_invalid(format!("bad HELLO peer rank {peer}")));
+                    }
+                    match kind {
+                        KIND_DATA => {
+                            if comm.data_in[peer].is_some() {
+                                return Err(io_invalid(format!(
+                                    "duplicate data channel from rank {peer}"
+                                )));
+                            }
+                            stream.set_read_timeout(Some(timeout))?;
+                            comm.data_in[peer] = Some(stream);
+                        }
+                        KIND_RMA => {
+                            // The server blocks indefinitely between
+                            // requests; it retires on peer hang-up.
+                            stream.set_read_timeout(None)?;
+                            let windows = Arc::clone(&comm.windows);
+                            let counters = Arc::clone(&comm.counters);
+                            std::thread::spawn(move || {
+                                serve_rma(stream, windows, counters, rank)
+                            });
+                        }
+                        other => {
+                            return Err(io_invalid(format!("bad HELLO channel kind {other}")))
+                        }
+                    }
+                    pending -= 1;
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    if Instant::now() >= deadline {
+                        return Err(std::io::Error::new(
+                            std::io::ErrorKind::TimedOut,
+                            format!(
+                                "rank {rank}: rendezvous timed out with {pending} channels missing"
+                            ),
+                        ));
+                    }
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        Ok(comm)
+    }
+
+    fn send_data(&self, dst: usize, tag: u8, payload: &[u8], ctx: &str) {
+        let stream = self.data_out[dst].as_ref().expect("no data channel to peer");
+        if let Err(e) = write_frame(stream, tag, payload) {
+            self.poison_now();
+            panic!(
+                "rank {}: peer rank {dst} unreachable during {ctx} ({e}); communicator poisoned",
+                self.rank
+            );
+        }
+    }
+
+    fn recv_data(&self, src: usize, expect: u8, ctx: &str) -> Vec<u8> {
+        let stream = self.data_in[src].as_ref().expect("no data channel from peer");
+        match read_frame(stream) {
+            Ok((tag, payload)) if tag == expect => payload,
+            Ok((tag, _)) => {
+                self.poison_now();
+                panic!(
+                    "rank {}: collective sequence diverged in {ctx}: got frame tag {tag} \
+                     from rank {src}; communicator poisoned",
+                    self.rank
+                );
+            }
+            Err(e) => {
+                self.poison_now();
+                panic!(
+                    "rank {}: peer rank {src} unreachable during {ctx} ({e}); \
+                     communicator poisoned",
+                    self.rank
+                );
+            }
+        }
+    }
+
+    /// One request/reply round on the RMA channel to `target`. An `ERR`
+    /// reply re-panics with the owner's message verbatim so failure
+    /// modes (missing window, out-of-bounds get) read identically to
+    /// `ThreadComm`'s; transport failures poison first.
+    fn rma_request(&self, target: usize, tag: u8, payload: &[u8], expect: u8, ctx: &str) -> Vec<u8> {
+        let stream = self.rma_out[target].as_ref().expect("no RMA channel to peer");
+        if let Err(e) = write_frame(stream, tag, payload) {
+            self.poison_now();
+            panic!(
+                "rank {}: peer rank {target} unreachable during {ctx} ({e}); \
+                 communicator poisoned",
+                self.rank
+            );
+        }
+        match read_frame(stream) {
+            Ok((t, p)) if t == expect => p,
+            Ok((t, p)) if t == tags::ERR => panic!("{}", String::from_utf8_lossy(&p)),
+            Ok((t, _)) => {
+                self.poison_now();
+                panic!(
+                    "rank {}: protocol mismatch in {ctx}: got frame tag {t} from rank {target}; \
+                     communicator poisoned",
+                    self.rank
+                );
+            }
+            Err(e) => {
+                self.poison_now();
+                panic!(
+                    "rank {}: peer rank {target} unreachable during {ctx} ({e}); \
+                     communicator poisoned",
+                    self.rank
+                );
+            }
+        }
+    }
+
+    fn poison_now(&self) {
+        self.poisoned.store(true, Ordering::SeqCst);
+    }
+}
+
+impl super::Comm for SocketComm {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Full-mesh barrier: send a token to every peer, collect one from
+    /// every peer. A rank can only pass once all peers have entered —
+    /// the same post/consume discipline as `ThreadComm`'s `Barrier`.
+    /// Uncounted, like every synchronization-only operation.
+    fn barrier(&self) {
+        for dst in 0..self.size {
+            if dst != self.rank {
+                self.send_data(dst, tags::BARRIER, &[], "barrier");
+            }
+        }
+        for src in 0..self.size {
+            if src != self.rank {
+                self.recv_data(src, tags::BARRIER, "barrier");
+            }
+        }
+    }
+
+    fn all_to_all(&self, mut sends: Vec<Vec<u8>>) -> Vec<Vec<u8>> {
+        let size = self.size;
+        assert_eq!(sends.len(), size, "all_to_all needs one buffer per rank");
+        let me = self.rank;
+        self.counters.add_collective();
+        let mut own = Some(std::mem::take(&mut sends[me]));
+        for (dst, buf) in sends.iter().enumerate() {
+            if dst == me {
+                continue;
+            }
+            self.counters.add_sent(buf.len() as u64);
+            self.send_data(dst, tags::COLLECTIVE, buf, "all_to_all");
+        }
+        let mut recvs = Vec::with_capacity(size);
+        for src in 0..size {
+            if src == me {
+                recvs.push(own.take().expect("self buffer consumed twice"));
+                continue;
+            }
+            let buf = self.recv_data(src, tags::COLLECTIVE, "all_to_all");
+            self.counters.add_recv(buf.len() as u64);
+            recvs.push(buf);
+        }
+        recvs
+    }
+
+    fn publish_window(&self, key: WindowKey, data: Vec<u8>) {
+        self.windows.write().unwrap().insert(key, Arc::new(data));
+    }
+
+    fn retract_window(&self, key: WindowKey) {
+        self.windows.write().unwrap().remove(&key);
+    }
+
+    fn rma_get(&self, target: usize, key: WindowKey, offset: usize, len: usize) -> Vec<u8> {
+        // checked_add on the requester, before any wire traffic: the
+        // same guard (and message) as ThreadComm's.
+        let end = offset.checked_add(len).unwrap_or_else(|| {
+            panic!("rma_get out of bounds: {offset}+{len} overflows usize")
+        });
+        if target == self.rank {
+            // Bind before panicking: unwinding with the read-guard
+            // temporary alive would poison the windows lock the RMA
+            // server threads share (see ThreadComm::rma_get).
+            let win = self.windows.read().unwrap().get(&key).cloned();
+            let win =
+                win.unwrap_or_else(|| panic!("rank {} has no window {key}", target));
+            assert!(
+                end <= win.len(),
+                "rma_get out of bounds: {}+{} > {}",
+                offset,
+                len,
+                win.len()
+            );
+            return win[offset..end].to_vec(); // self-gets are free
+        }
+        let mut req = Vec::with_capacity(20);
+        put_u32(&mut req, key);
+        put_u64(&mut req, offset as u64);
+        put_u64(&mut req, len as u64);
+        let bytes = self.rma_request(target, tags::RMA_REQ, &req, tags::RMA_OK, "rma_get");
+        debug_assert_eq!(bytes.len(), len, "rma_get reply length mismatch");
+        self.counters.add_rma(len as u64);
+        bytes
+    }
+
+    fn window_len(&self, target: usize, key: WindowKey) -> Option<usize> {
+        if target == self.rank {
+            return self.windows.read().unwrap().get(&key).map(|w| w.len());
+        }
+        let mut req = Vec::with_capacity(4);
+        put_u32(&mut req, key);
+        let resp = self.rma_request(target, tags::WINLEN_REQ, &req, tags::WINLEN_RESP, "window_len");
+        let parsed = (|| -> Result<Option<u64>, String> {
+            let mut c = Cursor::new(&resp, "window_len reply");
+            let present = c.u8("present")?;
+            let len = c.u64("length")?;
+            c.finish("window_len reply")?;
+            Ok((present != 0).then_some(len))
+        })();
+        match parsed {
+            Ok(len) => len.map(|l| l as usize),
+            Err(e) => {
+                self.poison_now();
+                panic!(
+                    "rank {}: malformed window_len reply from rank {target}: {e}; \
+                     communicator poisoned",
+                    self.rank
+                );
+            }
+        }
+    }
+
+    fn counters(&self) -> &CommCounters {
+        &self.counters
+    }
+
+    fn all_counters(&self) -> Vec<CounterSnapshot> {
+        let mut out = Vec::with_capacity(self.size);
+        for r in 0..self.size {
+            if r == self.rank {
+                out.push(self.counters.snapshot());
+                continue;
+            }
+            let resp = self.rma_request(r, tags::CNT_REQ, &[], tags::CNT_RESP, "all_counters");
+            match decode_snapshot(&resp) {
+                Ok(s) => out.push(s),
+                Err(e) => {
+                    self.poison_now();
+                    panic!(
+                        "rank {}: malformed counter snapshot from rank {r}: {e}; \
+                         communicator poisoned",
+                        self.rank
+                    );
+                }
+            }
+        }
+        out
+    }
+
+    fn poison(&self) {
+        self.poison_now();
+    }
+
+    fn is_poisoned(&self) -> bool {
+        self.poisoned.load(Ordering::SeqCst)
+    }
+}
+
+// -- in-process harness -------------------------------------------------
+
+static DIR_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// A fresh, short, unique rendezvous directory (UDS paths are limited to
+/// ~108 bytes, so this stays under the system temp dir).
+pub(crate) fn fresh_rendezvous_dir(label: &str) -> std::io::Result<PathBuf> {
+    let n = DIR_SEQ.fetch_add(1, Ordering::Relaxed);
+    let dir = std::env::temp_dir().join(format!("ilmi-{label}{}-{n}", std::process::id()));
+    std::fs::create_dir_all(&dir)?;
+    Ok(dir)
+}
+
+/// Run `f` on `size` ranks, each with a `SocketComm`, hosted on threads
+/// of this process: the full socket transport (frames, UDS, RMA server
+/// threads) without the process launcher. The drop-in socket twin of
+/// [`super::run_ranks`], used by the differential and property suites;
+/// end-to-end process isolation is exercised via [`super::proc`].
+pub fn socket_ranks<R, F>(size: usize, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(SocketComm) -> R + Send + Sync,
+{
+    let dir = fresh_rendezvous_dir("sr").expect("creating rendezvous dir");
+    let timeout = Duration::from_secs(30);
+    let mut results: Vec<Option<R>> = (0..size).map(|_| None).collect();
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(size);
+        for (rank, slot) in results.iter_mut().enumerate() {
+            let f = &f;
+            let dir = &dir;
+            handles.push(scope.spawn(move || {
+                let comm = SocketComm::connect(rank, size, dir, timeout)
+                    .unwrap_or_else(|e| panic!("rank {rank}: socket rendezvous failed: {e}"));
+                *slot = Some(f(comm));
+            }));
+        }
+        let mut panic: Option<Box<dyn std::any::Any + Send>> = None;
+        for h in handles {
+            if let Err(e) = h.join() {
+                panic = Some(e);
+            }
+        }
+        if let Some(e) = panic {
+            std::panic::resume_unwind(e);
+        }
+    });
+    let _ = std::fs::remove_dir_all(&dir);
+    results.into_iter().map(|r| r.expect("rank produced no result")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::Comm;
+    use super::*;
+
+    #[test]
+    fn frame_roundtrip() {
+        let buf = encode_frame(tags::COLLECTIVE, b"hello");
+        assert_eq!(buf.len(), FRAME_HEADER + 5);
+        let (tag, payload) = decode_frame(&buf).unwrap();
+        assert_eq!(tag, tags::COLLECTIVE);
+        assert_eq!(payload, b"hello");
+    }
+
+    #[test]
+    fn truncated_frames_are_errors_not_panics() {
+        let buf = encode_frame(tags::RMA_REQ, &[1, 2, 3, 4, 5, 6, 7, 8]);
+        // Every proper prefix must fail with a descriptive error.
+        for cut in 0..buf.len() {
+            let err = decode_frame(&buf[..cut]).unwrap_err();
+            assert!(err.contains("truncated"), "cut {cut}: {err}");
+        }
+        decode_frame(&buf).unwrap();
+    }
+
+    #[test]
+    fn oversized_length_prefix_is_rejected() {
+        let mut buf = vec![tags::COLLECTIVE];
+        buf.extend_from_slice(&u32::MAX.to_le_bytes());
+        let err = decode_frame(&buf).unwrap_err();
+        assert!(err.contains("MAX_FRAME"), "{err}");
+    }
+
+    #[test]
+    fn trailing_garbage_is_rejected() {
+        let mut buf = encode_frame(tags::BARRIER, &[]);
+        buf.push(0xFF);
+        assert!(decode_frame(&buf).unwrap_err().contains("trailing"));
+    }
+
+    #[test]
+    fn malformed_rma_request_gets_error_reply_shape() {
+        // The server-side decoder itself: a truncated request payload is
+        // a clean Err (which serve_rma turns into an ERR reply frame).
+        let windows: Windows = Arc::new(RwLock::new(HashMap::new()));
+        let err = serve_rma_get(&[1, 2, 3], &windows, 0).unwrap_err();
+        assert!(err.contains("truncated"), "{err}");
+    }
+
+    #[test]
+    fn socket_all_to_all_routes_buffers() {
+        let results = socket_ranks(3, |comm| {
+            let sends: Vec<Vec<u8>> =
+                (0..3).map(|d| vec![comm.rank() as u8, d as u8]).collect();
+            comm.all_to_all(sends)
+        });
+        for (rank, recvs) in results.iter().enumerate() {
+            for (src, buf) in recvs.iter().enumerate() {
+                assert_eq!(buf, &vec![src as u8, rank as u8]);
+            }
+        }
+    }
+
+    #[test]
+    fn socket_counters_match_thread_accounting() {
+        let results = socket_ranks(2, |comm| {
+            comm.all_to_all(vec![vec![0; 100], vec![0; 100]]);
+            comm.counters().snapshot()
+        });
+        for snap in results {
+            assert_eq!(snap.bytes_sent, 100); // only the off-rank buffer
+            assert_eq!(snap.bytes_recv, 100);
+            assert_eq!(snap.msgs_sent, 1);
+            assert_eq!(snap.collectives, 1);
+        }
+    }
+
+    #[test]
+    fn socket_rma_window_get() {
+        let results = socket_ranks(2, |comm| {
+            comm.publish_window(7, vec![comm.rank() as u8; 16]);
+            comm.barrier();
+            let other = 1 - comm.rank();
+            assert_eq!(comm.window_len(other, 7), Some(16));
+            assert_eq!(comm.window_len(other, 99), None);
+            let got = comm.rma_get(other, 7, 4, 8);
+            comm.barrier();
+            (got, comm.counters().snapshot())
+        });
+        for (rank, (got, snap)) in results.iter().enumerate() {
+            assert_eq!(got, &vec![(1 - rank) as u8; 8]);
+            assert_eq!(snap.bytes_rma, 8);
+            assert_eq!(snap.rma_gets, 1);
+        }
+    }
+
+    #[test]
+    fn socket_all_counters_gathers_every_rank() {
+        let results = socket_ranks(3, |comm| {
+            let mut sends = vec![Vec::new(); 3];
+            sends[(comm.rank() + 1) % 3] = vec![0; 10 * (comm.rank() + 1)];
+            comm.all_to_all(sends);
+            comm.barrier(); // quiesce so the snapshot cut is deterministic
+            comm.all_counters()
+        });
+        for all in &results {
+            assert_eq!(all.len(), 3);
+            for (r, snap) in all.iter().enumerate() {
+                assert_eq!(snap.bytes_sent, 10 * (r as u64 + 1));
+                assert_eq!(snap.collectives, 1);
+            }
+        }
+    }
+
+    #[test]
+    fn socket_solo_is_fully_local() {
+        let dir = fresh_rendezvous_dir("solo").unwrap();
+        let comm = SocketComm::connect(0, 1, &dir, Duration::from_secs(5)).unwrap();
+        let recvs = comm.all_to_all(vec![vec![1, 2, 3]]);
+        assert_eq!(recvs, vec![vec![1, 2, 3]]);
+        comm.publish_window(1, vec![9; 4]);
+        assert_eq!(comm.rma_get(0, 1, 0, 4), vec![9; 4]);
+        let snap = comm.counters().snapshot();
+        assert_eq!(snap.bytes_sent, 0);
+        assert_eq!(snap.bytes_rma, 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn socket_repeated_collectives_do_not_cross() {
+        let results = socket_ranks(4, |comm| {
+            let mut sums = Vec::new();
+            for round in 0..10u8 {
+                let sends: Vec<Vec<u8>> = (0..4).map(|_| vec![round]).collect();
+                let recvs = comm.all_to_all(sends);
+                sums.push(recvs.iter().map(|b| b[0] as u32).sum::<u32>());
+            }
+            sums
+        });
+        for sums in results {
+            assert_eq!(sums, (0..10).map(|r| 4 * r).collect::<Vec<u32>>());
+        }
+    }
+}

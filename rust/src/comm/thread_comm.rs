@@ -145,12 +145,13 @@ impl ThreadComm {
     /// Counted as remotely-accessed bytes on the *calling* rank (the paper
     /// attributes RMA traffic to the requester). Self-gets are free.
     pub fn rma_get(&self, target: usize, key: WindowKey, offset: usize, len: usize) -> Vec<u8> {
-        let win = self.shared.windows[target]
-            .read()
-            .unwrap()
-            .get(&key)
-            .cloned()
-            .unwrap_or_else(|| panic!("rank {} has no window {key}", target));
+        // Bind the lookup result before panicking on a missing window:
+        // panicking inside the statement would unwind while the read
+        // guard temporary is still alive and poison the lock, taking
+        // every later window operation down with it. A failed get must
+        // leave the communicator usable (DESIGN.md §11).
+        let win = self.shared.windows[target].read().unwrap().get(&key).cloned();
+        let win = win.unwrap_or_else(|| panic!("rank {} has no window {key}", target));
         // checked_add: with plain `+`, an offset near usize::MAX wraps
         // in release builds and the bounds assert silently passes.
         let end = offset.checked_add(len).unwrap_or_else(|| {
@@ -193,6 +194,61 @@ impl ThreadComm {
 
     pub fn is_poisoned(&self) -> bool {
         self.shared.poisoned.load(Ordering::SeqCst)
+    }
+}
+
+/// `ThreadComm` is the reference implementation of the backend-neutral
+/// communicator surface; `SocketComm` must match it byte-for-byte in
+/// accounting and routing (pinned by the cross-backend differential
+/// suite). The inherent methods above stay callable without the trait
+/// in scope; this impl only forwards to them.
+impl super::Comm for ThreadComm {
+    fn rank(&self) -> usize {
+        ThreadComm::rank(self)
+    }
+
+    fn size(&self) -> usize {
+        ThreadComm::size(self)
+    }
+
+    fn barrier(&self) {
+        ThreadComm::barrier(self)
+    }
+
+    fn all_to_all(&self, sends: Vec<Vec<u8>>) -> Vec<Vec<u8>> {
+        ThreadComm::all_to_all(self, sends)
+    }
+
+    fn publish_window(&self, key: WindowKey, data: Vec<u8>) {
+        ThreadComm::publish_window(self, key, data)
+    }
+
+    fn retract_window(&self, key: WindowKey) {
+        ThreadComm::retract_window(self, key)
+    }
+
+    fn rma_get(&self, target: usize, key: WindowKey, offset: usize, len: usize) -> Vec<u8> {
+        ThreadComm::rma_get(self, target, key, offset, len)
+    }
+
+    fn window_len(&self, target: usize, key: WindowKey) -> Option<usize> {
+        ThreadComm::window_len(self, target, key)
+    }
+
+    fn counters(&self) -> &CommCounters {
+        ThreadComm::counters(self)
+    }
+
+    fn all_counters(&self) -> Vec<CounterSnapshot> {
+        ThreadComm::all_counters(self)
+    }
+
+    fn poison(&self) {
+        ThreadComm::poison(self)
+    }
+
+    fn is_poisoned(&self) -> bool {
+        ThreadComm::is_poisoned(self)
     }
 }
 

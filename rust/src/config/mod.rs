@@ -45,6 +45,20 @@ pub enum Backend {
     Xla,
 }
 
+/// Which communicator transports the simulated MPI traffic. Transport
+/// only: the backend never enters the dynamics, so it is excluded from
+/// the snapshot config fingerprint and both values produce bit-identical
+/// trajectories (pinned by the cross-backend differential suite).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CommBackend {
+    /// Each rank is an OS thread in this process, exchanging through
+    /// shared-memory slots (`comm::ThreadComm`) — the default.
+    Thread,
+    /// Each rank is a separate OS process, exchanging over Unix domain
+    /// sockets (`comm::SocketComm`; Unix only).
+    Socket,
+}
+
 /// Which neuron model drives the electrical activity (the plasticity
 /// machinery is model-agnostic — paper §III-A0a "computed using models
 /// like Izhikevich").
@@ -92,6 +106,8 @@ pub struct SimConfig {
     pub domain_size: f64,
     /// Global PRNG seed.
     pub seed: u64,
+    /// Communicator transport (thread or process-per-rank socket).
+    pub comm_backend: CommBackend,
 
     // -- schedule ------------------------------------------------------
     /// Total simulation steps (1 step = 1 ms biological time).
@@ -175,6 +191,7 @@ impl Default for SimConfig {
             neurons_per_rank: 256,
             domain_size: 1000.0,
             seed: 42,
+            comm_backend: CommBackend::Thread,
             steps: 1000,
             plasticity_interval: 100,
             delta: 100,
@@ -256,6 +273,13 @@ impl SimConfig {
             }
             "topology.domain_size" => self.domain_size = value.parse().map_err(|_| bad(key))?,
             "topology.seed" => self.seed = value.parse().map_err(|_| bad(key))?,
+            "topology.comm" => {
+                self.comm_backend = match value {
+                    "thread" => CommBackend::Thread,
+                    "socket" => CommBackend::Socket,
+                    _ => return Err(bad(key)),
+                }
+            }
             "schedule.steps" => self.steps = value.parse().map_err(|_| bad(key))?,
             "schedule.plasticity_interval" => {
                 self.plasticity_interval = value.parse().map_err(|_| bad(key))?
@@ -370,8 +394,17 @@ impl SimConfig {
              ranks = {}\n\
              neurons_per_rank = {}\n\
              domain_size = {}\n\
-             seed = {}\n\
-             [schedule]\n\
+             seed = {}\n",
+            self.ranks, self.neurons_per_rank, self.domain_size, self.seed,
+        );
+        // Emitted only when non-default so a thread-backend config's INI
+        // bytes — and with them every snapshot fingerprint and pinned
+        // golden file — are unchanged by the key's existence.
+        if self.comm_backend == CommBackend::Socket {
+            out.push_str("comm = socket\n");
+        }
+        out.push_str(&format!(
+            "[schedule]\n\
              steps = {}\n\
              plasticity_interval = {}\n\
              delta = {}\n\
@@ -395,10 +428,6 @@ impl SimConfig {
              [instrumentation]\n\
              record_calcium_every = {}\n\
              artifacts_dir = {}\n",
-            self.ranks,
-            self.neurons_per_rank,
-            self.domain_size,
-            self.seed,
             self.steps,
             self.plasticity_interval,
             self.delta,
@@ -415,7 +444,7 @@ impl SimConfig {
             self.neuron.beta_ca,
             self.record_calcium_every,
             self.artifacts_dir,
-        );
+        ));
         if self.checkpoint_every > 0 {
             out.push_str(&format!("checkpoint_every = {}\n", self.checkpoint_every));
         }
@@ -529,6 +558,26 @@ impl SimConfig {
                  (the AOT artifact implements the Izhikevich kernel)"
                     .into(),
             );
+        }
+        if self.comm_backend == CommBackend::Socket {
+            // Socket ranks are separate processes; snapshot deposit and
+            // the shared XLA executor handle both assume one address
+            // space. Keep the unsupported combinations loud.
+            if self.checkpoint_every > 0 {
+                return Err(
+                    "topology.comm=socket does not support checkpointing \
+                     (instrumentation.checkpoint_every must be 0): rank processes \
+                     cannot share the in-process checkpoint sink"
+                        .into(),
+                );
+            }
+            if self.backend == Backend::Xla {
+                return Err(
+                    "topology.comm=socket runs the native backend only \
+                     (algorithms.backend=xla needs the shared in-process executor)"
+                        .into(),
+                );
+            }
         }
         // The initial partition must be constructible (init_cells format,
         // per-rank cell minimums, Morton cell totals)...
@@ -654,6 +703,45 @@ target_calcium = 0.6
     }
 
     #[test]
+    fn comm_backend_roundtrips_and_default_ini_is_unchanged() {
+        // The default (thread) emits NO comm key: a pre-existing
+        // snapshot's embedded INI and fingerprint are untouched by the
+        // key's existence.
+        let thread = SimConfig::default();
+        assert!(!thread.to_ini().contains("comm"), "thread configs must not emit the key");
+        assert_eq!(SimConfig::from_ini(&thread.to_ini()).unwrap().comm_backend, CommBackend::Thread);
+
+        let socket = SimConfig { comm_backend: CommBackend::Socket, ..SimConfig::default() };
+        let ini = socket.to_ini();
+        assert!(ini.contains("comm = socket"), "{ini}");
+        let back = SimConfig::from_ini(&ini).unwrap();
+        assert_eq!(back, socket);
+
+        let mut cfg = SimConfig::default();
+        cfg.apply_kv("topology.comm", "socket").unwrap();
+        assert_eq!(cfg.comm_backend, CommBackend::Socket);
+        assert!(cfg.apply_kv("topology.comm", "carrier-pigeon").is_err());
+    }
+
+    #[test]
+    fn socket_backend_rejects_checkpointing_and_xla() {
+        let mut cfg = SimConfig {
+            comm_backend: CommBackend::Socket,
+            checkpoint_every: 50,
+            checkpoint_dir: "ckpts".to_string(),
+            ..SimConfig::default()
+        };
+        let err = cfg.validate().unwrap_err();
+        assert!(err.contains("socket"), "{err}");
+        cfg.checkpoint_every = 0;
+        cfg.checkpoint_dir = String::new();
+        cfg.validate().unwrap();
+        cfg.backend = Backend::Xla;
+        let err = cfg.validate().unwrap_err();
+        assert!(err.contains("socket"), "{err}");
+    }
+
+    #[test]
     fn prop_parse_to_ini_is_identity() {
         // The snapshot self-description contract for every key PRs 1-5
         // added (checkpointing, balance) and everything before them:
@@ -702,6 +790,11 @@ target_calcium = 0.6
                 if rng.bernoulli(0.5) {
                     cfg.checkpoint_every = 1 + rng.next_below(1000);
                     cfg.checkpoint_dir = format!("ckpt_{}", rng.next_below(100));
+                }
+                // Socket excludes checkpointing (validate rejects the
+                // pair), so only flip the transport when unset.
+                if cfg.checkpoint_every == 0 && rng.bernoulli(0.5) {
+                    cfg.comm_backend = CommBackend::Socket;
                 }
                 if rng.bernoulli(0.5) {
                     cfg.trace_every = 1 + rng.next_below(500);

@@ -14,7 +14,7 @@ use crate::balance::{
     plan_rebalance, MigrationBatch, NeuronRecord, OwnershipMap, Partition, RankCost,
 };
 use crate::barnes_hut::{self, new::FormationScratch, FormationStats};
-use crate::comm::{gather_all, run_ranks, CounterSnapshot, ThreadComm};
+use crate::comm::{gather_all, run_ranks, Comm, CounterSnapshot};
 use crate::config::{Backend, ConnectivityAlg, SimConfig, SpikeAlg};
 use crate::metrics::{Phase, PhaseTimers, RankReport, SimReport};
 use crate::neuron::{izhikevich, Population};
@@ -103,7 +103,7 @@ impl RankState {
     /// Build the initial state of `rank` (placement, octree, RNG
     /// streams) under the partition `cfg` describes (uniform by
     /// default, skewed when `balance.init_cells` says so).
-    pub fn init(cfg: &SimConfig, comm: &ThreadComm) -> RankState {
+    pub fn init(cfg: &SimConfig, comm: &impl Comm) -> RankState {
         let partition = Partition::from_config(cfg).expect("config was validated");
         Self::init_with_partition(cfg, partition, comm)
     }
@@ -112,7 +112,7 @@ impl RankState {
     pub fn init_with_partition(
         cfg: &SimConfig,
         partition: Partition,
-        comm: &ThreadComm,
+        comm: &impl Comm,
     ) -> RankState {
         let rank = comm.rank();
         let owners = partition.ownership();
@@ -184,7 +184,7 @@ impl RankState {
     /// frequency entries are encoded straight from the exchange's
     /// borrowing iterator: this runs inside the step loop, so the
     /// writer path allocates no per-capture entry `Vec`.
-    pub fn capture(&self, comm: &ThreadComm) -> Vec<u8> {
+    pub fn capture(&self, comm: &impl Comm) -> Vec<u8> {
         RankSection {
             first_id: self.pop.first_id,
             positions: self.pop.positions.clone(),
@@ -233,7 +233,7 @@ impl RankState {
     /// `validate_for_branch` when deliberately forking a scenario).
     pub fn restore(
         cfg: &SimConfig,
-        comm: &ThreadComm,
+        comm: &impl Comm,
         snap: &Snapshot,
     ) -> Result<RankState, String> {
         let partition = snap.partition_for_resume();
@@ -250,7 +250,7 @@ impl RankState {
     fn restore_section(
         cfg: &SimConfig,
         partition: Partition,
-        comm: &ThreadComm,
+        comm: &impl Comm,
         sec: RankSection,
     ) -> Result<RankState, String> {
         let rank = comm.rank();
@@ -348,7 +348,7 @@ impl RankState {
     /// with O(1) slot lookups instead of per-edge division + search
     /// (EXPERIMENTS.md §Perf, opt 8; the naive loop survives as the
     /// differential-test oracle in `spikes`).
-    pub fn spike_phase(&mut self, cfg: &SimConfig, comm: &ThreadComm, step: usize) {
+    pub fn spike_phase(&mut self, cfg: &SimConfig, comm: &impl Comm, step: usize) {
         debug_assert!(
             self.plan.is_current(&self.store),
             "delivery plan not rebuilt after an in-edge edit"
@@ -436,7 +436,7 @@ impl RankState {
     /// Phase C: the connectivity update — deletion, octree refresh (incl.
     /// branch all-to-all and, for the old algorithm, RMA-window publish),
     /// then formation with the configured algorithm.
-    pub fn plasticity_phase(&mut self, cfg: &SimConfig, comm: &ThreadComm) {
+    pub fn plasticity_phase(&mut self, cfg: &SimConfig, comm: &impl Comm) {
         // C1: deletion, routed through the ownership map (the stride
         // fast path when no migration ever happened).
         let owners = self.owners.clone();
@@ -543,7 +543,7 @@ impl RankState {
     pub fn step(
         &mut self,
         cfg: &SimConfig,
-        comm: &ThreadComm,
+        comm: &impl Comm,
         step: usize,
         xla: Option<&XlaHandle>,
     ) -> Result<()> {
@@ -589,7 +589,7 @@ impl RankState {
     /// pre-resume baseline): trace windows are segment-scoped, which is
     /// what makes a resumed run's samples concatenate exactly onto the
     /// pre-checkpoint run's.
-    fn trace_cumulative(&self, comm: &ThreadComm) -> Cumulative {
+    fn trace_cumulative(&self, comm: &impl Comm) -> Cumulative {
         Cumulative {
             phase_seconds: self.timers.seconds(),
             comm: comm.counters().snapshot(),
@@ -614,7 +614,7 @@ impl RankState {
     /// One balance epoch: gather every rank's cost, run the (identical,
     /// deterministic) decision, and migrate if it says so. Collective —
     /// every rank must call this at the same step.
-    fn rebalance_phase(&mut self, cfg: &SimConfig, comm: &ThreadComm) {
+    fn rebalance_phase(&mut self, cfg: &SimConfig, comm: &impl Comm) {
         let all = gather_all(comm, &[self.measure_cost()]);
         let costs: Vec<RankCost> = all.iter().map(|batch| batch[0]).collect();
         if let Some(new_part) = plan_rebalance(
@@ -634,7 +634,7 @@ impl RankState {
     /// ownership. `SynapseStore::check_invariants` and
     /// `DeliveryPlan::check_against` are hard-checked after every
     /// migration (not just in debug builds).
-    fn apply_partition(&mut self, cfg: &SimConfig, comm: &ThreadComm, new_part: Partition) {
+    fn apply_partition(&mut self, cfg: &SimConfig, comm: &impl Comm, new_part: Partition) {
         let me = comm.rank();
         let size = comm.size();
         let new_owners = new_part.ownership();
@@ -837,7 +837,7 @@ impl RankState {
     /// Assemble this rank's final report. Restored states add their
     /// pre-resume communication baseline so the totals equal a straight
     /// run's.
-    pub fn into_report(self, comm: &ThreadComm) -> RankReport {
+    pub fn into_report(self, comm: &impl Comm) -> RankReport {
         RankReport {
             rank: comm.rank(),
             phase_seconds: self.timers.seconds(),
@@ -936,6 +936,108 @@ fn load_validated_section(
     Ok(sec)
 }
 
+/// One rank's full simulation, generic over the comm backend: restore or
+/// init, the step loop (with optional checkpoint capture), final report.
+/// This is the exact body every rank runs — as a thread over a
+/// [`ThreadComm`](crate::comm::ThreadComm) or as a process over a
+/// [`SocketComm`](crate::comm::SocketComm) — so the two backends cannot
+/// drift apart in what they simulate.
+fn simulate_rank<C: Comm>(
+    cfg: &SimConfig,
+    partition: Partition,
+    comm: &C,
+    preloaded: Option<RankSection>,
+    sink: Option<&CheckpointSink>,
+    start_step: usize,
+    xla: Option<&XlaHandle>,
+) -> Result<RankReport> {
+    let mut state = match preloaded {
+        Some(sec) => RankState::restore_section(cfg, partition, comm, sec)
+            .map_err(anyhow::Error::msg)?,
+        None => RankState::init_with_partition(cfg, partition, comm),
+    };
+    for step in start_step..cfg.steps {
+        state.step(cfg, comm, step, xla)?;
+        if let Some(sink) = sink {
+            if (step + 1) % cfg.checkpoint_every == 0 {
+                // Checkpoint I/O failures are recorded, not returned:
+                // erroring out of one rank's loop would deadlock the
+                // others at the next barrier. The first failure is
+                // surfaced after the join in `run_simulation_inner`.
+                sink.deposit_nonfatal(
+                    step as u64 + 1,
+                    comm.rank(),
+                    state.capture(comm),
+                    &state.partition,
+                );
+            }
+        }
+    }
+    Ok(state.into_report(comm))
+}
+
+/// The registry name of the per-rank simulation entry a socket child runs.
+#[cfg(unix)]
+pub const SIMULATE_ENTRY: &str = "simulate";
+
+/// The socket-child entry registry the `ilmi` binary (and any test
+/// harness that launches socket simulations) hands to
+/// [`crate::comm::proc::maybe_run_child`].
+#[cfg(unix)]
+pub const SOCKET_ENTRIES: &[(&str, crate::comm::proc::Entry)] =
+    &[(SIMULATE_ENTRY, simulate_entry as crate::comm::proc::Entry)];
+
+/// Child-side body of one socket rank: parse the INI config the launcher
+/// shipped, build the (config-derived) partition, run `simulate_rank` on
+/// the process's `SocketComm`, and return the encoded `RankReport`.
+#[cfg(unix)]
+fn simulate_entry(comm: &crate::comm::SocketComm, args: &[u8]) -> Result<Vec<u8>, String> {
+    let ini = std::str::from_utf8(args).map_err(|e| format!("entry args not UTF-8: {e}"))?;
+    let cfg = SimConfig::from_ini(ini)?;
+    let partition = Partition::from_config(&cfg)?;
+    let report =
+        simulate_rank(&cfg, partition, comm, None, None, 0, None).map_err(|e| format!("{e:#}"))?;
+    Ok(report.encode())
+}
+
+/// Orchestrate a socket-backend run: re-exec this binary once per rank
+/// (see `comm::proc`), ship the config as INI bytes, and decode the
+/// per-rank reports the children send back. The shipped config is
+/// rewritten to the thread backend so the child-side parse describes the
+/// per-rank body, not this orchestrator — the `comm` key is transport
+/// for THIS invocation, never part of the simulated dynamics.
+#[cfg(unix)]
+fn run_simulation_socket(cfg: &SimConfig) -> Result<SimReport> {
+    let mut child_cfg = cfg.clone();
+    child_cfg.comm_backend = crate::config::CommBackend::Thread;
+    let ini = child_cfg.to_ini();
+    let wall = Instant::now();
+    let spec = crate::comm::proc::LaunchSpec {
+        entry: SIMULATE_ENTRY,
+        ranks: cfg.ranks,
+        args: ini.as_bytes(),
+        timeout: socket_launch_timeout(cfg),
+    };
+    let encoded = crate::comm::proc::run_entry(&spec).map_err(anyhow::Error::msg)?;
+    let mut ranks = Vec::with_capacity(encoded.len());
+    for (rank, bytes) in encoded.iter().enumerate() {
+        let report = RankReport::decode(bytes).map_err(|e| {
+            anyhow::Error::msg(format!("socket rank {rank} returned a malformed report: {e}"))
+        })?;
+        ranks.push(report);
+    }
+    Ok(SimReport { ranks, wall_seconds: wall.elapsed().as_secs_f64() })
+}
+
+/// Bound on the whole socket launch (rendezvous + every peer read). The
+/// floor covers smoke configs; large schedules scale it so a legitimate
+/// long run is not mistaken for a hung fleet.
+#[cfg(unix)]
+fn socket_launch_timeout(cfg: &SimConfig) -> Duration {
+    let budget = 60 + (cfg.steps as u64 * cfg.total_neurons() as u64) / 100_000;
+    Duration::from_secs(budget.min(3600))
+}
+
 fn run_simulation_inner(
     cfg: &SimConfig,
     xla: Option<XlaHandle>,
@@ -943,6 +1045,18 @@ fn run_simulation_inner(
     branch: bool,
 ) -> Result<SimReport> {
     cfg.validate().map_err(anyhow::Error::msg)?;
+    if cfg.comm_backend == crate::config::CommBackend::Socket {
+        if resume.is_some() || branch {
+            bail!("the socket backend does not support snapshot resume; use the thread backend");
+        }
+        if xla.is_some() {
+            bail!("the socket backend does not support an XLA executor handle");
+        }
+        #[cfg(unix)]
+        return run_simulation_socket(cfg);
+        #[cfg(not(unix))]
+        bail!("the socket backend requires Unix domain sockets; use the thread backend");
+    }
     // The initial partition: a resumed run inherits the snapshot's
     // (possibly migrated) one; a fresh run builds the config's.
     let partition = match resume {
@@ -982,36 +1096,14 @@ fn run_simulation_inner(
     let start_step = resume.map_or(0, |s| s.next_step());
     let wall = Instant::now();
     let results: Vec<Result<RankReport>> = run_ranks(cfg.ranks, |comm| {
-        let mut state = match &preloaded {
-            Some(slots) => {
-                let sec = slots[comm.rank()]
-                    .lock()
-                    .unwrap()
-                    .take()
-                    .expect("preloaded section consumed exactly once per rank");
-                RankState::restore_section(cfg, partition.clone(), &comm, sec)
-                    .map_err(anyhow::Error::msg)?
-            }
-            None => RankState::init_with_partition(cfg, partition.clone(), &comm),
-        };
-        for step in start_step..cfg.steps {
-            state.step(cfg, &comm, step, xla.as_ref())?;
-            if let Some(sink) = &sink {
-                if (step + 1) % cfg.checkpoint_every == 0 {
-                    // Checkpoint I/O failures are recorded, not
-                    // returned: erroring out of one rank's loop would
-                    // deadlock the others at the next barrier. The
-                    // first failure is surfaced after the join below.
-                    sink.deposit_nonfatal(
-                        step as u64 + 1,
-                        comm.rank(),
-                        state.capture(&comm),
-                        &state.partition,
-                    );
-                }
-            }
-        }
-        Ok(state.into_report(&comm))
+        let sec = preloaded.as_ref().map(|slots| {
+            slots[comm.rank()]
+                .lock()
+                .unwrap()
+                .take()
+                .expect("preloaded section consumed exactly once per rank")
+        });
+        simulate_rank(cfg, partition.clone(), &comm, sec, sink.as_ref(), start_step, xla.as_ref())
     });
     let mut ranks = Vec::with_capacity(results.len());
     for r in results {

@@ -7,3 +7,5 @@ pub use driver::{
     branch_simulation, branch_simulation_with_xla, resume_simulation, resume_simulation_with_xla,
     run_simulation, run_simulation_with_xla, RankState,
 };
+#[cfg(unix)]
+pub use driver::{SIMULATE_ENTRY, SOCKET_ENTRIES};

@@ -44,6 +44,11 @@ use ilmi::runtime::spawn_service;
 use ilmi::snapshot::{latest_snapshot_in, Snapshot};
 
 fn main() {
+    // Socket-backend rank processes re-exec this binary; when the
+    // rendezvous env vars are present this call runs the rank body and
+    // exits instead of falling through to the CLI.
+    #[cfg(unix)]
+    ilmi::comm::proc::maybe_run_child(ilmi::coordinator::SOCKET_ENTRIES);
     let argv: Vec<String> = std::env::args().skip(1).collect();
     if let Err(e) = run(&argv) {
         eprintln!("error: {e:#}");
@@ -72,6 +77,11 @@ const HELP: &str = "\
 ilmi - I Like To Move It: structural-plasticity brain simulation
 usage: ilmi <simulate|resume|compare|bench|quality|inspect> [flags]
   simulate  --config FILE --set k=v ... [--csv PATH] [--xla]
+            [--comm thread|socket]
+              communication backend: in-process threads (default) or
+              one OS process per rank over Unix domain sockets; both
+              produce bit-identical results (DESIGN.md SS11). The
+              socket backend excludes --xla and checkpointing
             [--checkpoint-every N --checkpoint-dir D]
               write a resumable snapshot every N steps into D
               (both flags are required together)
@@ -103,6 +113,7 @@ usage: ilmi <simulate|resume|compare|bench|quality|inspect> [flags]
   compare   --set k=v ... (runs old-vs-new on the same workload)
   bench     [--preset smoke|smoke8|smoke-skew|quick|full] [--name NAME] [--out FILE]
             [--steps N] [--warmup N] [--reps N] [--seed S]
+            [--comm thread|socket]
             [--md FILE] [--baseline FILE] [--threshold PCT]
               run the scenario matrix ({old,new} x ranks x neurons x
               delta x regime) and write BENCH_<name>.json (per-phase
@@ -125,11 +136,22 @@ fn build_config(args: &Args) -> Result<SimConfig> {
     if args.get_bool("xla") {
         cfg.backend = Backend::Xla;
     }
+    apply_comm_flag(&mut cfg, args)?;
     apply_checkpoint_flags(&mut cfg, args)?;
     apply_balance_flags(&mut cfg, args)?;
     apply_trace_flags(&mut cfg, args)?;
     cfg.validate().map_err(anyhow::Error::msg)?;
     Ok(cfg)
+}
+
+/// Map `--comm thread|socket` onto `topology.comm` — the communication
+/// backend: in-process threads (default) or one OS process per rank
+/// over Unix domain sockets (DESIGN.md §11).
+fn apply_comm_flag(cfg: &mut SimConfig, args: &Args) -> Result<()> {
+    if let Some(backend) = args.get("comm") {
+        cfg.apply_kv("topology.comm", backend).map_err(anyhow::Error::msg)?;
+    }
+    Ok(())
 }
 
 /// Map `--balance-every N` / `--balance-threshold X` into the config
@@ -409,7 +431,15 @@ fn cmd_bench(args: &Args) -> Result<()> {
         .as_ref()
         .is_some_and(|(path, _)| std::path::Path::new(path) == std::path::Path::new(&out));
 
-    let report = ilmi::bench::run_matrix(&name, &spec, &settings, |msg| println!("{msg}"))?;
+    let backend = match args.get("comm") {
+        None | Some("thread") => ilmi::config::CommBackend::Thread,
+        Some("socket") => ilmi::config::CommBackend::Socket,
+        Some(other) => bail!("--comm expects thread or socket, got {other:?}"),
+    };
+    let report =
+        ilmi::bench::run_matrix_with_backend(&name, &spec, &settings, backend, |msg| {
+            println!("{msg}")
+        })?;
     let json = report.to_json();
     // Self-check: the emitted document must parse back under the schema
     // (which requires all seven phases per scenario) and reproduce its

@@ -1,9 +1,12 @@
 //! Per-rank and aggregated simulation reports.
 
+use crate::balance::RankCost;
 use crate::barnes_hut::FormationStats;
 use crate::comm::CounterSnapshot;
 use crate::plasticity::DeletionStats;
+use crate::trace::EpochSample;
 use crate::util::format_bytes;
+use crate::util::wire::{put_f32, put_f64, put_u32, put_u64, put_u8, Cursor};
 
 use super::{Phase, ALL_PHASES};
 
@@ -51,6 +54,168 @@ pub struct RankReport {
     /// `phase_seconds` — never stored in ILMISNAP — and bounded by
     /// `trace_capacity` (DESIGN.md §10).
     pub trace: Vec<crate::trace::EpochSample>,
+}
+
+fn put_counters(out: &mut Vec<u8>, c: &CounterSnapshot) {
+    put_u64(out, c.bytes_sent);
+    put_u64(out, c.bytes_recv);
+    put_u64(out, c.bytes_rma);
+    put_u64(out, c.msgs_sent);
+    put_u64(out, c.collectives);
+    put_u64(out, c.rma_gets);
+}
+
+fn read_counters(c: &mut Cursor<'_>) -> Result<CounterSnapshot, String> {
+    Ok(CounterSnapshot {
+        bytes_sent: c.u64("bytes_sent")?,
+        bytes_recv: c.u64("bytes_recv")?,
+        bytes_rma: c.u64("bytes_rma")?,
+        msgs_sent: c.u64("msgs_sent")?,
+        collectives: c.u64("collectives")?,
+        rma_gets: c.u64("rma_gets")?,
+    })
+}
+
+fn read_phases(c: &mut Cursor<'_>) -> Result<[f64; ALL_PHASES.len()], String> {
+    let mut out = [0.0; ALL_PHASES.len()];
+    for slot in &mut out {
+        *slot = c.f64("phase_seconds")?;
+    }
+    Ok(out)
+}
+
+impl RankReport {
+    /// Encode for the socket backend's result channel: a child rank
+    /// process sends this back to the launcher, which reassembles the
+    /// `SimReport`. Little-endian, fields in declaration order;
+    /// `decode` is the checked inverse (truncation is an error, never
+    /// a panic).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        put_u64(&mut out, self.rank as u64);
+        for s in self.phase_seconds {
+            put_f64(&mut out, s);
+        }
+        put_counters(&mut out, &self.comm);
+        put_u64(&mut out, self.formation.searches);
+        put_u64(&mut out, self.formation.failed_searches);
+        put_u64(&mut out, self.formation.proposals);
+        put_u64(&mut out, self.formation.formed);
+        put_u64(&mut out, self.formation.declined);
+        put_u64(&mut out, self.formation.compute_nanos);
+        put_u64(&mut out, self.formation.exchange_nanos);
+        put_u64(&mut out, self.deletion.axonal_retractions);
+        put_u64(&mut out, self.deletion.dendritic_retractions);
+        put_u64(&mut out, self.deletion.notifications_sent);
+        put_u64(&mut out, self.spike_lookups);
+        put_u64(&mut out, self.spike_state_bytes);
+        put_u64(&mut out, self.plan_rebuilds);
+        put_u64(&mut out, self.synapses_out as u64);
+        put_u64(&mut out, self.synapses_in as u64);
+        put_u64(&mut out, self.neurons as u64);
+        put_u64(&mut out, self.local_edges);
+        put_u64(&mut out, self.remote_partners);
+        put_u64(&mut out, self.migrations);
+        put_f64(&mut out, self.mean_calcium);
+        put_u32(&mut out, self.calcium_trace.len() as u32);
+        for (step, row) in &self.calcium_trace {
+            put_u64(&mut out, *step as u64);
+            put_u32(&mut out, row.len() as u32);
+            for v in row {
+                put_f32(&mut out, *v);
+            }
+        }
+        put_u32(&mut out, self.trace.len() as u32);
+        for s in &self.trace {
+            put_u64(&mut out, s.step);
+            put_u8(&mut out, s.boundaries);
+            put_f64(&mut out, s.ts_micros);
+            for p in s.phase_seconds {
+                put_f64(&mut out, p);
+            }
+            put_counters(&mut out, &s.comm);
+            put_u64(&mut out, s.spikes);
+            put_u64(&mut out, s.formed);
+            put_u64(&mut out, s.retractions);
+            put_u64(&mut out, s.plan_rebuilds);
+            put_u64(&mut out, s.migrations);
+            put_u64(&mut out, s.cost.neurons);
+            put_u64(&mut out, s.cost.local_edges);
+            put_u64(&mut out, s.cost.remote_partners);
+            put_u64(&mut out, s.cost.nanos);
+        }
+        out
+    }
+
+    /// Checked inverse of [`encode`](Self::encode).
+    pub fn decode(buf: &[u8]) -> Result<RankReport, String> {
+        let mut c = Cursor::new(buf, "rank report");
+        let mut r = RankReport {
+            rank: c.u64("rank")? as usize,
+            phase_seconds: read_phases(&mut c)?,
+            comm: read_counters(&mut c)?,
+            ..RankReport::default()
+        };
+        r.formation = FormationStats {
+            searches: c.u64("searches")?,
+            failed_searches: c.u64("failed_searches")?,
+            proposals: c.u64("proposals")?,
+            formed: c.u64("formed")?,
+            declined: c.u64("declined")?,
+            compute_nanos: c.u64("compute_nanos")?,
+            exchange_nanos: c.u64("exchange_nanos")?,
+        };
+        r.deletion = DeletionStats {
+            axonal_retractions: c.u64("axonal_retractions")?,
+            dendritic_retractions: c.u64("dendritic_retractions")?,
+            notifications_sent: c.u64("notifications_sent")?,
+        };
+        r.spike_lookups = c.u64("spike_lookups")?;
+        r.spike_state_bytes = c.u64("spike_state_bytes")?;
+        r.plan_rebuilds = c.u64("plan_rebuilds")?;
+        r.synapses_out = c.u64("synapses_out")? as usize;
+        r.synapses_in = c.u64("synapses_in")? as usize;
+        r.neurons = c.u64("neurons")? as usize;
+        r.local_edges = c.u64("local_edges")?;
+        r.remote_partners = c.u64("remote_partners")?;
+        r.migrations = c.u64("migrations")?;
+        r.mean_calcium = c.f64("mean_calcium")?;
+        let n_ca = c.u32("calcium_trace count")? as usize;
+        r.calcium_trace = Vec::with_capacity(n_ca);
+        for _ in 0..n_ca {
+            let step = c.u64("calcium step")? as usize;
+            let n = c.u32("calcium row len")? as usize;
+            let mut row = Vec::with_capacity(n);
+            for _ in 0..n {
+                row.push(c.f32("calcium value")?);
+            }
+            r.calcium_trace.push((step, row));
+        }
+        let n_tr = c.u32("trace count")? as usize;
+        r.trace = Vec::with_capacity(n_tr);
+        for _ in 0..n_tr {
+            r.trace.push(EpochSample {
+                step: c.u64("trace step")?,
+                boundaries: c.u8("trace boundaries")?,
+                ts_micros: c.f64("trace ts_micros")?,
+                phase_seconds: read_phases(&mut c)?,
+                comm: read_counters(&mut c)?,
+                spikes: c.u64("trace spikes")?,
+                formed: c.u64("trace formed")?,
+                retractions: c.u64("trace retractions")?,
+                plan_rebuilds: c.u64("trace plan_rebuilds")?,
+                migrations: c.u64("trace migrations")?,
+                cost: RankCost {
+                    neurons: c.u64("cost neurons")?,
+                    local_edges: c.u64("cost local_edges")?,
+                    remote_partners: c.u64("cost remote_partners")?,
+                    nanos: c.u64("cost nanos")?,
+                },
+            });
+        }
+        c.finish("rank report")?;
+        Ok(r)
+    }
 }
 
 /// Aggregated view over all ranks of one simulation.
@@ -321,6 +486,58 @@ mod tests {
         assert_eq!(rows[1][col("local_edges")], "120");
         assert_eq!(rows[1][col("remote_partners")], "5");
         assert_eq!(rows[1][col("migrations")], "2");
+    }
+
+    #[test]
+    fn rank_report_wire_roundtrip() {
+        let mut r = RankReport {
+            rank: 3,
+            spike_lookups: 11,
+            spike_state_bytes: 36,
+            plan_rebuilds: 2,
+            synapses_out: 40,
+            synapses_in: 38,
+            neurons: 32,
+            local_edges: 78,
+            remote_partners: 5,
+            migrations: 1,
+            mean_calcium: 0.625,
+            calcium_trace: vec![(50, vec![0.5, 0.75]), (100, vec![])],
+            ..Default::default()
+        };
+        r.phase_seconds[0] = 1.25;
+        r.comm.bytes_sent = 1024;
+        r.comm.collectives = 7;
+        r.formation.searches = 9;
+        r.formation.formed = 4;
+        r.deletion.axonal_retractions = 2;
+        let mut sample = crate::trace::EpochSample::default();
+        sample.step = 50;
+        sample.boundaries = 3;
+        sample.comm.bytes_recv = 99;
+        sample.cost.neurons = 32;
+        r.trace.push(sample);
+
+        let bytes = r.encode();
+        let back = RankReport::decode(&bytes).unwrap();
+        // Byte-identical re-encode pins every field without needing
+        // PartialEq on the nested stats structs.
+        assert_eq!(back.encode(), bytes);
+        assert_eq!(back.rank, 3);
+        assert_eq!(back.calcium_trace, r.calcium_trace);
+        assert_eq!(back.trace.len(), 1);
+        assert_eq!(back.trace[0].comm.bytes_recv, 99);
+    }
+
+    #[test]
+    fn rank_report_decode_rejects_truncation_and_trailing() {
+        let bytes = RankReport::default().encode();
+        let err = RankReport::decode(&bytes[..bytes.len() - 1]).unwrap_err();
+        assert!(err.contains("truncated"), "{err}");
+        let mut extra = bytes.clone();
+        extra.push(0);
+        let err = RankReport::decode(&extra).unwrap_err();
+        assert!(err.contains("trailing"), "{err}");
     }
 
     #[test]

@@ -13,7 +13,7 @@
 use std::collections::HashMap;
 
 use super::tree::{ElementKind, NodeKind, Octree, NO_CHILD};
-use crate::comm::{ThreadComm, WindowKey};
+use crate::comm::{Comm, WindowKey};
 use crate::util::wire::{get_f32, get_i64_at, get_i32_at, put_f32, put_u32, Wire};
 use crate::util::Vec3;
 
@@ -202,7 +202,7 @@ impl RemoteNodeCache {
     }
 
     /// Fetch node `idx` of `rank`'s window, via RMA on a miss.
-    pub fn get(&mut self, comm: &ThreadComm, rank: u32, idx: i32) -> WireNode {
+    pub fn get(&mut self, comm: &impl Comm, rank: u32, idx: i32) -> WireNode {
         let r = rank as usize;
         if self.per_rank.len() <= r {
             self.per_rank.resize_with(r + 1, Vec::new);
@@ -234,6 +234,7 @@ impl RemoteNodeCache {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::comm::ThreadComm;
     use crate::octree::domain::DomainDecomposition;
     use crate::octree::NO_NEURON;
     use crate::util::Rng;

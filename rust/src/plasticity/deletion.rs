@@ -6,7 +6,7 @@
 //! other side must be notified — it keeps its element (now vacant) but
 //! loses the synapse. Notifications cross ranks in one all-to-all.
 
-use crate::comm::{exchange, ThreadComm};
+use crate::comm::{exchange, Comm};
 use crate::neuron::{GlobalNeuronId, Population};
 use crate::octree::ElementKind;
 use crate::util::wire::{get_u64, get_u8, put_u64, put_u8, Wire};
@@ -57,7 +57,7 @@ pub struct DeletionStats {
 /// Run the deletion phase for this rank. `owner_of` maps a global neuron
 /// id to its rank.
 pub fn run_deletion_phase(
-    comm: &ThreadComm,
+    comm: &impl Comm,
     pop: &Population,
     store: &mut SynapseStore,
     rng: &mut Rng,

@@ -17,7 +17,7 @@
 //! from the `SynapseStore`'s incrementally-maintained out-rank table
 //! instead of rescanning `out_edges` per firing neuron per exchange.
 
-use crate::comm::{exchange_ref, ThreadComm};
+use crate::comm::{exchange_ref, Comm};
 use crate::neuron::Population;
 use crate::plasticity::SynapseStore;
 use crate::util::wire::{get_f32, get_u64, put_f32, put_u64, Wire};
@@ -89,7 +89,7 @@ impl FrequencyExchange {
     /// dies with the epoch instead of lingering indefinitely.
     pub fn maybe_exchange(
         &mut self,
-        comm: &ThreadComm,
+        comm: &impl Comm,
         pop: &mut Population,
         store: &SynapseStore,
         step: usize,

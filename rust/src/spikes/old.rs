@@ -2,7 +2,7 @@
 //! sorted on receipt, binary-searched per remote in-partner
 //! (paper §III-A0a / §V-B0b).
 
-use crate::comm::{exchange_ref, ThreadComm};
+use crate::comm::{exchange_ref, Comm};
 use crate::neuron::Population;
 use crate::plasticity::SynapseStore;
 
@@ -41,7 +41,7 @@ impl IdExchange {
     /// the `SynapseStore`'s incrementally-maintained out-rank table
     /// (EXPERIMENTS.md §Perf, opt 7) instead of rescanning `out_edges`
     /// into a per-destination flag array per firing neuron.
-    pub fn exchange(&mut self, comm: &ThreadComm, pop: &Population, store: &SynapseStore) {
+    pub fn exchange(&mut self, comm: &impl Comm, pop: &Population, store: &SynapseStore) {
         let sends = &mut self.sends;
         sends.iter_mut().for_each(|s| s.clear());
         let me = comm.rank() as u32;

@@ -1,0 +1,179 @@
+//! Backend-generic `Comm` semantics checks.
+//!
+//! Each check runs *inside* a rank closure — hand it the communicator
+//! from `run_ranks` (threads) or `socket_ranks` (socket transport) and
+//! it asserts the same contract on either backend. This is how the
+//! property suite proves the two backends are interchangeable: the
+//! identical check body, parameterized only by the transport
+//! (DESIGN.md §11).
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+use crate::comm::{Comm, WindowKey};
+use crate::util::Rng;
+
+/// Deterministic payload for the (round, src → dst) message: both ends
+/// can derive it independently, so routing errors show up as content
+/// mismatches, not just length mismatches.
+fn pattern_bytes(round: usize, src: usize, dst: usize, len: usize) -> Vec<u8> {
+    (0..len).map(|i| ((src * 7 + dst * 13 + round * 31 + i) % 251) as u8).collect()
+}
+
+/// Run the panicking closure and return its panic message.
+fn panic_message(f: impl FnOnce()) -> String {
+    let err = catch_unwind(AssertUnwindSafe(f)).expect_err("expected a panic");
+    err.downcast_ref::<String>()
+        .cloned()
+        .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+        .unwrap_or_else(|| "non-string panic payload".to_string())
+}
+
+/// `all_to_all` routes ragged (including empty and zero-length) buffer
+/// patterns permutation-correctly, and the counter deltas follow the
+/// accounting contract exactly: self-delivery free, `bytes_sent`/
+/// `bytes_recv` summed over distinct-rank pairs, `msgs_sent` only for
+/// non-empty sends, one collective per call — on *any* backend.
+///
+/// All ranks must call this with the same `seed` (the pattern table is
+/// derived from it identically everywhere).
+pub fn check_all_to_all_routes(comm: &impl Comm, seed: u64) {
+    let me = comm.rank();
+    let size = comm.size();
+    let rounds = 8usize;
+    // Shared-seed pattern table: lens[round][src][dst]. Round 0 is
+    // forced all-empty — a zero-byte collective still synchronizes and
+    // still counts as one collective, with zero messages.
+    let mut rng = Rng::new(seed);
+    let lens: Vec<Vec<Vec<usize>>> = (0..rounds)
+        .map(|round| {
+            (0..size)
+                .map(|_| {
+                    (0..size)
+                        .map(|_| {
+                            let len = if rng.bernoulli(0.3) {
+                                0
+                            } else {
+                                (rng.next_u64() % 300) as usize
+                            };
+                            if round == 0 {
+                                0
+                            } else {
+                                len
+                            }
+                        })
+                        .collect()
+                })
+                .collect()
+        })
+        .collect();
+
+    let base = comm.counters().snapshot();
+    let (mut want_sent, mut want_recv, mut want_msgs) = (0u64, 0u64, 0u64);
+    for (round, table) in lens.iter().enumerate() {
+        let sends: Vec<Vec<u8>> =
+            (0..size).map(|dst| pattern_bytes(round, me, dst, table[me][dst])).collect();
+        let recvs = comm.all_to_all(sends);
+        assert_eq!(recvs.len(), size, "round {round}: one buffer per source rank");
+        for (src, buf) in recvs.iter().enumerate() {
+            let want = pattern_bytes(round, src, me, table[src][me]);
+            assert_eq!(buf, &want, "round {round}: wrong bytes from rank {src}");
+        }
+        for dst in (0..size).filter(|&d| d != me) {
+            want_sent += table[me][dst] as u64;
+            want_msgs += (table[me][dst] > 0) as u64;
+        }
+        for src in (0..size).filter(|&s| s != me) {
+            want_recv += table[src][me] as u64;
+        }
+    }
+    let now = comm.counters().snapshot();
+    assert_eq!(now.bytes_sent - base.bytes_sent, want_sent, "bytes_sent accounting");
+    assert_eq!(now.bytes_recv - base.bytes_recv, want_recv, "bytes_recv accounting");
+    assert_eq!(now.msgs_sent - base.msgs_sent, want_msgs, "msgs_sent accounting");
+    assert_eq!(now.collectives - base.collectives, rounds as u64, "collective accounting");
+}
+
+/// A failing `rma_get` — range past the window end, `offset + len`
+/// overflowing `usize`, or a missing window — panics with the same
+/// message shape on every backend, never poisons the communicator, and
+/// leaves it usable. All ranks call this together (it synchronizes
+/// internally).
+pub fn check_rma_oob_fails_cleanly(comm: &impl Comm) {
+    const KEY: WindowKey = 7001;
+    const ABSENT: WindowKey = 7999;
+    comm.publish_window(KEY, vec![0xAB; 16]);
+    comm.barrier(); // fence: windows visible everywhere
+    let target = (comm.rank() + 1) % comm.size();
+
+    assert_eq!(comm.rma_get(target, KEY, 8, 8), vec![0xAB; 8], "in-range get");
+    let rma_before = comm.counters().snapshot().bytes_rma;
+
+    let msg = panic_message(|| {
+        comm.rma_get(target, KEY, 10, 10);
+    });
+    assert!(msg.contains("rma_get out of bounds: 10+10 > 16"), "oob message: {msg}");
+
+    let msg = panic_message(|| {
+        comm.rma_get(target, KEY, usize::MAX, 2);
+    });
+    assert!(msg.contains("overflows usize"), "overflow message: {msg}");
+
+    let msg = panic_message(|| {
+        comm.rma_get(target, ABSENT, 0, 1);
+    });
+    assert!(msg.contains(&format!("no window {ABSENT}")), "missing-window message: {msg}");
+
+    // Failed gets move no bytes and do not poison: the communicator
+    // stays fully usable.
+    assert_eq!(comm.counters().snapshot().bytes_rma, rma_before, "failed gets are free");
+    assert!(!comm.is_poisoned(), "a failed get must not poison the communicator");
+    assert_eq!(comm.rma_get(target, KEY, 0, 16), vec![0xAB; 16], "get after failures");
+    comm.barrier(); // fence before retraction
+    comm.retract_window(KEY);
+}
+
+/// The paper's exact message sizes (42 B new request, 9 B new response,
+/// 17 B old request, 1 B old response) hold on the wire: the encoders
+/// pin them, and on the socket transport each all_to_all buffer adds
+/// exactly `FRAME_HEADER` bytes of framing on top — framing is
+/// transport overhead, never counted traffic.
+pub fn check_wire_pins() {
+    use crate::barnes_hut::{NewRequest, NewResponse, OldRequest, OldResponse};
+    use crate::util::wire::Wire;
+    assert_eq!(NewRequest::SIZE, 42);
+    assert_eq!(NewResponse::SIZE, 9);
+    assert_eq!(OldRequest::SIZE, 17);
+    assert_eq!(OldResponse::SIZE, 1);
+    #[cfg(unix)]
+    {
+        use crate::comm::{decode_frame, encode_frame, FRAME_HEADER};
+        for payload_len in [NewRequest::SIZE, NewResponse::SIZE, OldRequest::SIZE, 0] {
+            let payload = vec![0x5A; payload_len];
+            let frame = encode_frame(2, &payload);
+            assert_eq!(frame.len(), FRAME_HEADER + payload_len);
+            let (tag, back) = decode_frame(&frame).expect("frame round-trip");
+            assert_eq!((tag, back), (2, payload));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::run_ranks;
+
+    #[test]
+    fn thread_backend_satisfies_all_to_all_property() {
+        run_ranks(3, |comm| check_all_to_all_routes(&comm, 0xA11));
+    }
+
+    #[test]
+    fn thread_backend_fails_rma_cleanly() {
+        run_ranks(2, |comm| check_rma_oob_fails_cleanly(&comm));
+    }
+
+    #[test]
+    fn wire_pins_hold() {
+        check_wire_pins();
+    }
+}

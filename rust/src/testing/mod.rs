@@ -5,6 +5,8 @@
 //! failure report the case index and seed so the exact case can be
 //! replayed (`forall_seeded` with the printed seed).
 
+pub mod comm_props;
+
 use crate::util::Rng;
 
 /// Run `prop` over `cases` random inputs drawn by `gen`. Panics with the

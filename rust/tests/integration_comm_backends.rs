@@ -1,0 +1,273 @@
+//! Cross-backend differential suite: the thread and socket
+//! communicators must be interchangeable transports (DESIGN.md §11).
+//!
+//! The same seeded configuration is run once over `run_ranks`
+//! (`ThreadComm`) and once over `socket_ranks` (`SocketComm` — real UDS
+//! frames, RMA server threads, hosted on threads of this process), and
+//! everything except wall-clock timing must be bit-identical per rank:
+//! the ILMISNAP capture bytes (the full dynamics state, RNG streams
+//! included), the deterministic fields of the encoded `RankReport`, and
+//! every rank's `CounterSnapshot`. Both spike algorithms are covered,
+//! plus a skewed load-balancing run (migration collectives) and, via
+//! `zz_socket_child`, the end-to-end process-per-rank launcher.
+//!
+//! Also here: the backend-generic `Comm` property checks
+//! (`ilmi::testing::comm_props`) run over both transports, and the
+//! fault-injection regressions — a dead peer poisons survivors instead
+//! of deadlocking them, and truncated frames are checked-decode errors.
+
+#![cfg(unix)]
+
+use std::time::{Duration, Instant};
+
+use ilmi::bench::{AlgGen, Regime, RunSettings, Scenario};
+use ilmi::comm::proc::{self, Entry, LaunchSpec};
+use ilmi::comm::{decode_frame, run_ranks, socket_ranks, Comm, CounterSnapshot, SocketComm};
+use ilmi::config::{CommBackend, SimConfig};
+use ilmi::coordinator::{run_simulation, RankState, SOCKET_ENTRIES};
+use ilmi::metrics::RankReport;
+use ilmi::testing::comm_props::{check_all_to_all_routes, check_rma_oob_fails_cleanly};
+
+// -- differential harness ------------------------------------------------
+
+/// Everything one rank produces that must be backend-independent.
+type Digest = (Vec<u8>, Vec<u8>, Vec<CounterSnapshot>);
+
+/// Encode a report with its wall-clock-derived fields zeroed; all
+/// remaining bytes are functions of the seeded trajectory alone.
+fn deterministic_bytes(mut r: RankReport) -> Vec<u8> {
+    r.phase_seconds = Default::default();
+    r.formation.compute_nanos = 0;
+    r.formation.exchange_nanos = 0;
+    for s in &mut r.trace {
+        s.ts_micros = 0.0;
+        s.phase_seconds = Default::default();
+        s.cost.nanos = 0;
+    }
+    r.encode()
+}
+
+/// The per-rank simulation body, generic over the transport: run every
+/// step, then capture the ILMISNAP section, the quiesced per-rank
+/// counter snapshots, and the deterministic report bytes.
+fn rank_digest(cfg: &SimConfig, comm: &impl Comm) -> Digest {
+    let mut state = RankState::init(cfg, comm);
+    for step in 0..cfg.steps {
+        state.step(cfg, comm, step, None).expect("step failed");
+    }
+    // The capture embeds FormationStats, whose nanos are wall-clock;
+    // zero them on the live state so the section bytes are pure state.
+    state.formation.compute_nanos = 0;
+    state.formation.exchange_nanos = 0;
+    let section = state.capture(comm);
+    comm.barrier(); // quiesce: every rank's counters are final
+    let all = comm.all_counters();
+    (section, deterministic_bytes(state.into_report(comm)), all)
+}
+
+fn assert_backends_agree(cfg: &SimConfig, label: &str) {
+    let threads: Vec<Digest> = run_ranks(cfg.ranks, |comm| rank_digest(cfg, &comm));
+    let sockets: Vec<Digest> = socket_ranks(cfg.ranks, |comm| rank_digest(cfg, &comm));
+    for (rank, (t, s)) in threads.iter().zip(&sockets).enumerate() {
+        assert_eq!(t.0, s.0, "{label}: rank {rank} ILMISNAP section bytes differ");
+        assert_eq!(t.1, s.1, "{label}: rank {rank} report bytes differ");
+        assert_eq!(t.2, s.2, "{label}: rank {rank} counter snapshots differ");
+    }
+}
+
+fn smoke_settings() -> RunSettings {
+    RunSettings { steps: 60, plasticity_interval: 30, warmup: 0, reps: 1, seed: 42 }
+}
+
+fn smoke_scenario(alg: AlgGen) -> Scenario {
+    Scenario {
+        alg,
+        ranks: 2,
+        neurons_per_rank: 16,
+        delta: 30,
+        regime: Regime::Active,
+        skew: false,
+    }
+}
+
+#[test]
+fn new_algorithms_are_bit_identical_across_backends() {
+    let mut cfg = smoke_scenario(AlgGen::New).config(&smoke_settings());
+    // Tracing on: epoch samples must survive the socket path too.
+    cfg.trace_every = 30;
+    cfg.trace_capacity = 8;
+    assert_backends_agree(&cfg, "new/new smoke");
+}
+
+#[test]
+fn old_algorithms_are_bit_identical_across_backends() {
+    // The old generation downloads octree nodes over RMA: this is the
+    // request/reply window path on the socket transport.
+    let cfg = smoke_scenario(AlgGen::Old).config(&smoke_settings());
+    assert_backends_agree(&cfg, "old/old smoke");
+}
+
+#[test]
+fn balanced_skewed_run_is_bit_identical_across_backends() {
+    // Skewed start + load balancing: plasticity epochs plus migration
+    // all_to_alls, the heaviest collective traffic in the repo.
+    let settings =
+        RunSettings { steps: 150, plasticity_interval: 50, warmup: 0, reps: 1, seed: 42 };
+    let cfg = Scenario {
+        alg: AlgGen::New,
+        ranks: 2,
+        neurons_per_rank: 32,
+        delta: 50,
+        regime: Regime::Active,
+        skew: true,
+    }
+    .config(&settings);
+    assert_backends_agree(&cfg, "skewed balance run");
+}
+
+// -- Comm property checks, generic over backend --------------------------
+
+#[test]
+fn all_to_all_property_holds_on_both_backends() {
+    for seed in [0xA11u64, 0xB22, 0xC33] {
+        run_ranks(3, |comm| check_all_to_all_routes(&comm, seed));
+        socket_ranks(3, |comm| check_all_to_all_routes(&comm, seed));
+    }
+}
+
+#[test]
+fn rma_failures_are_clean_on_both_backends() {
+    run_ranks(2, |comm| check_rma_oob_fails_cleanly(&comm));
+    socket_ranks(2, |comm| check_rma_oob_fails_cleanly(&comm));
+}
+
+// -- fault injection ----------------------------------------------------
+
+#[test]
+fn dead_peer_poisons_survivor_instead_of_deadlocking() {
+    let start = Instant::now();
+    let err = std::panic::catch_unwind(|| {
+        socket_ranks(2, |comm| {
+            if comm.rank() == 0 {
+                return; // drop the comm: streams close, peer sees EOF
+            }
+            // Give rank 0 a moment to leave, then enter a collective it
+            // will never join.
+            std::thread::sleep(Duration::from_millis(50));
+            let _ = comm.all_to_all(vec![vec![1u8; 8], vec![1u8; 8]]);
+        })
+    })
+    .expect_err("the survivor must panic, not deadlock");
+    let msg = err
+        .downcast_ref::<String>()
+        .cloned()
+        .unwrap_or_else(|| "non-string panic".into());
+    assert!(msg.contains("unreachable"), "diagnostic names the failure: {msg}");
+    assert!(msg.contains("poisoned"), "communicator must be poisoned: {msg}");
+    // Bounded by the transport's read timeout, not a deadlock.
+    assert!(start.elapsed() < Duration::from_secs(25), "took {:?}", start.elapsed());
+}
+
+#[test]
+fn truncated_frames_are_rejected_not_misparsed() {
+    let frame = ilmi::comm::encode_frame(2, &[7u8; 42]);
+    for cut in 0..frame.len() {
+        let err = decode_frame(&frame[..cut]).expect_err("prefix must not parse");
+        assert!(err.contains("truncated"), "cut {cut}: {err}");
+    }
+    assert_eq!(decode_frame(&frame).unwrap(), (2, vec![7u8; 42]));
+}
+
+// -- process-per-rank launcher, end to end -------------------------------
+
+/// Point `proc::run_entry` children at this binary's `zz_socket_child`
+/// hook (the launcher re-execs the current executable, which under
+/// libtest is this test binary).
+fn set_child_hook() {
+    std::env::set_var(proc::ENV_CHILD_ARGS, "zz_socket_child --exact");
+}
+
+fn die_mid_collective(comm: &SocketComm, _args: &[u8]) -> Result<Vec<u8>, String> {
+    comm.barrier(); // everyone joined; the fleet is healthy so far
+    if comm.rank() == 0 {
+        std::process::exit(2); // die without reporting
+    }
+    let sends = (0..comm.size()).map(|_| vec![0u8; 64]).collect();
+    let _ = comm.all_to_all(sends); // panics: rank 0 never joins
+    Ok(Vec::new())
+}
+
+fn echo_entry(comm: &SocketComm, args: &[u8]) -> Result<Vec<u8>, String> {
+    let mut out = args.to_vec();
+    out.push(comm.rank() as u8);
+    Ok(out)
+}
+
+fn test_entries() -> Vec<(&'static str, Entry)> {
+    let mut entries = SOCKET_ENTRIES.to_vec();
+    entries.push(("die_mid_collective", die_mid_collective as Entry));
+    entries.push(("echo", echo_entry as Entry));
+    entries
+}
+
+/// Child-side hook: every rank process the launcher spawns from this
+/// binary runs exactly this test (`--exact`), which dispatches into the
+/// entry registry and exits. A normal suite run (no `ILMI_COMM_ENTRY`
+/// in the environment) falls straight through.
+#[test]
+fn zz_socket_child() {
+    proc::maybe_run_child(&test_entries());
+}
+
+#[test]
+fn launcher_runs_entries_and_collects_results_in_rank_order() {
+    set_child_hook();
+    let spec = LaunchSpec {
+        entry: "echo",
+        ranks: 3,
+        args: b"hi",
+        timeout: Duration::from_secs(60),
+    };
+    let results = proc::run_entry(&spec).expect("launch failed");
+    for (rank, bytes) in results.iter().enumerate() {
+        assert_eq!(bytes, &[b'h', b'i', rank as u8], "rank {rank}");
+    }
+}
+
+#[test]
+fn launcher_surfaces_a_dead_rank_as_an_error_not_a_hang() {
+    set_child_hook();
+    let start = Instant::now();
+    let spec = LaunchSpec {
+        entry: "die_mid_collective",
+        ranks: 2,
+        args: &[],
+        timeout: Duration::from_secs(20),
+    };
+    let err = proc::run_entry(&spec).expect_err("a dead rank must fail the launch");
+    // Either failure order is legitimate: the survivor's poisoned-panic
+    // report, or the launcher noticing rank 0 exited without reporting.
+    assert!(
+        err.contains("poisoned") || err.contains("before reporting"),
+        "diagnostic: {err}"
+    );
+    assert!(start.elapsed() < Duration::from_secs(60), "took {:?}", start.elapsed());
+}
+
+#[test]
+fn simulate_over_processes_matches_thread_backend() {
+    set_child_hook();
+    let mut cfg = smoke_scenario(AlgGen::New).config(&smoke_settings());
+    let thread_report = run_simulation(&cfg).expect("thread run");
+    cfg.comm_backend = CommBackend::Socket;
+    let socket_report = run_simulation(&cfg).expect("socket run");
+    assert_eq!(socket_report.ranks.len(), thread_report.ranks.len());
+    for (t, s) in thread_report.ranks.iter().zip(&socket_report.ranks) {
+        assert_eq!(
+            deterministic_bytes(t.clone()),
+            deterministic_bytes(s.clone()),
+            "rank {}: process-per-rank run diverged from the thread run",
+            t.rank
+        );
+    }
+}

@@ -9,6 +9,9 @@ use ilmi::config::SimConfig;
 use ilmi::neuron::Population;
 use ilmi::octree::{DomainDecomposition, ElementKind, Octree, NO_NEURON};
 use ilmi::plasticity::{run_deletion_phase, SynapseStore};
+use ilmi::testing::comm_props::{
+    check_all_to_all_routes, check_rma_oob_fails_cleanly, check_wire_pins,
+};
 use ilmi::testing::forall;
 use ilmi::util::{morton, Rng, Vec3};
 
@@ -331,6 +334,48 @@ fn prop_all_to_all_conserves_bytes() {
             Ok(())
         },
     );
+}
+
+#[test]
+fn prop_comm_all_to_all_routes_any_raggedness() {
+    // Backend-generic Comm semantics (DESIGN.md §11): ragged, empty and
+    // zero-length send lists all route permutation-correctly and count
+    // identically. The shared check bodies live in
+    // `ilmi::testing::comm_props` so the cross-backend differential
+    // suite runs the very same assertions over `SocketComm`.
+    forall(
+        "all_to_all routes ragged payloads and counts them",
+        6,
+        |rng| rng.next_u64(),
+        |&seed| {
+            run_ranks(3, move |comm| check_all_to_all_routes(&comm, seed));
+            Ok(())
+        },
+    );
+}
+
+#[cfg(unix)]
+#[test]
+fn prop_comm_all_to_all_routes_over_sockets() {
+    forall(
+        "socket all_to_all routes ragged payloads and counts them",
+        3,
+        |rng| rng.next_u64(),
+        |&seed| {
+            ilmi::comm::socket_ranks(3, move |comm| check_all_to_all_routes(&comm, seed));
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_comm_rma_oob_fails_cleanly() {
+    run_ranks(2, |comm| check_rma_oob_fails_cleanly(&comm));
+}
+
+#[test]
+fn prop_comm_wire_sizes_are_pinned() {
+    check_wire_pins();
 }
 
 #[test]
