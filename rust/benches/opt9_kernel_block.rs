@@ -1,0 +1,156 @@
+//! §Perf opt 9 — cache-blocked activity update: the fixed-width
+//! (`BLOCK_WIDTH` = 64 lane) SoA walk with branchless spike/reset
+//! selects vs the straight-line scalar loop.
+//!
+//! Two parts:
+//!
+//! 1. **Differential oracle**: run the scalar and blocked kernels over
+//!    the same seeded population for hundreds of steps (with a
+//!    non-multiple-of-64 size, so the tail block is exercised) and
+//!    assert every state array is bit-identical and the model RNG
+//!    streams stayed aligned — the bench refuses to print numbers for
+//!    a blocked loop that changed semantics.
+//! 2. **Microbench**: per-neuron-step nanoseconds of both kernels
+//!    across population sizes. Small populations fit L1/L2 either way;
+//!    the gap opens where the eight state arrays stop fitting cache and
+//!    the blocked walk's reuse (and autovectorized selects) pay off.
+//!
+//! The companion delivery-side blocking (EDGE_BLOCK chunking of
+//! `DeliveryPlan::deliver`, §Perf opt 10) keeps the same accumulation
+//! order, so it shares opt 8's oracle rather than needing its own.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use std::time::Instant;
+
+use common::figure_header;
+use ilmi::config::{KernelKind, SimConfig};
+use ilmi::neuron::{make_kernel, NeuronKernel, Population, BLOCK_WIDTH};
+use ilmi::util::{Rng, Vec3};
+
+/// A seeded population plus the forked model RNG its kernel consumes.
+fn seeded_pop(n: usize, seed: u64) -> (SimConfig, Population, Rng) {
+    let cfg = SimConfig { neurons_per_rank: n, ..SimConfig::default() };
+    let mut rng = Rng::new(seed);
+    let pop = Population::init(&cfg, 1, Vec3::ZERO, Vec3::splat(10.0), &mut rng);
+    (cfg, pop, rng)
+}
+
+fn kernel_for(cfg: &SimConfig, kind: KernelKind) -> Box<dyn NeuronKernel> {
+    let mut c = cfg.clone();
+    c.kernel = kind;
+    make_kernel(&c, None)
+}
+
+fn oracle_check() {
+    // 1000 neurons: 15 full blocks + a 40-lane tail.
+    let n = 1000usize;
+    assert_ne!(n % BLOCK_WIDTH, 0, "the oracle must exercise the tail block");
+    let (cfg, mut pop_s, mut rng_s) = seeded_pop(n, 2024);
+    let (_, mut pop_b, mut rng_b) = seeded_pop(n, 2024);
+    let mut scalar = kernel_for(&cfg, KernelKind::Scalar);
+    let mut blocked = kernel_for(&cfg, KernelKind::Blocked);
+    assert_eq!(scalar.name(), "scalar");
+    assert_eq!(blocked.name(), "blocked");
+    for step in 0..300 {
+        // The driver's activity phase in miniature: fresh noise, a
+        // synthetic synaptic input, one kernel step.
+        pop_s.draw_noise(&cfg, &mut rng_s);
+        pop_b.draw_noise(&cfg, &mut rng_b);
+        for i in 0..n {
+            let syn = ((i + step) % 7) as f32;
+            pop_s.i_syn[i] = syn;
+            pop_b.i_syn[i] = syn;
+        }
+        scalar.step(&mut pop_s, &cfg, &mut rng_s).unwrap();
+        blocked.step(&mut pop_b, &cfg, &mut rng_b).unwrap();
+    }
+    let spikes: u32 = pop_s.epoch_spikes.iter().sum();
+    assert!(spikes > 0, "the oracle workload must actually fire");
+    let bits = |xs: &[f32]| xs.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+    assert_eq!(bits(&pop_s.v), bits(&pop_b.v), "v diverged");
+    assert_eq!(bits(&pop_s.u), bits(&pop_b.u), "u diverged");
+    assert_eq!(bits(&pop_s.ca), bits(&pop_b.ca), "ca diverged");
+    assert_eq!(bits(&pop_s.z_ax), bits(&pop_b.z_ax), "z_ax diverged");
+    assert_eq!(bits(&pop_s.z_den_exc), bits(&pop_b.z_den_exc), "z_den_exc diverged");
+    assert_eq!(bits(&pop_s.z_den_inh), bits(&pop_b.z_den_inh), "z_den_inh diverged");
+    assert_eq!(pop_s.fired, pop_b.fired, "fired diverged");
+    assert_eq!(pop_s.epoch_spikes, pop_b.epoch_spikes, "epoch_spikes diverged");
+    assert_eq!(rng_s.state(), rng_b.state(), "model RNG streams diverged");
+    println!(
+        "oracle check: OK (300 steps x {n} neurons incl. tail block, {spikes} spikes, \
+         all eight state arrays bit-identical)"
+    );
+}
+
+/// Time `steps` kernel invocations and return ns per neuron-step.
+fn time_kernel(
+    kernel: &mut dyn NeuronKernel,
+    pop: &mut Population,
+    cfg: &SimConfig,
+    rng: &mut Rng,
+    steps: usize,
+) -> f64 {
+    let t0 = Instant::now();
+    for _ in 0..steps {
+        kernel.step(pop, cfg, rng).unwrap();
+    }
+    t0.elapsed().as_nanos() as f64 / (steps * pop.len()) as f64
+}
+
+fn main() {
+    figure_header(
+        "Perf opt 9",
+        "cache-blocked activity update: scalar loop vs 64-lane blocked walk",
+    );
+    oracle_check();
+
+    println!(
+        "\n{:>10} {:>8} {:>16} {:>16} {:>8}",
+        "neurons", "steps", "scalar [ns/op]", "blocked [ns/op]", "ratio"
+    );
+    let sizes: &[usize] = if common::full_grid() {
+        &[256, 1024, 4096, 16384, 65536, 262144]
+    } else {
+        &[256, 1024, 4096, 16384, 65536]
+    };
+    // ILMI_BENCH_STEPS scales the per-size neuron-step budget (default
+    // 1000 => 4M neuron-steps per column), so CI can run a quick pass.
+    let budget = 4_000 * common::bench_steps();
+    for &n in sizes {
+        // Same per-size work budget either way, so rows take comparable
+        // wall time; noise is drawn once — the kernels only read it.
+        let steps = (budget / n).max(4);
+        let (cfg, mut pop_s, mut rng_s) = seeded_pop(n, n as u64);
+        let (_, mut pop_b, mut rng_b) = seeded_pop(n, n as u64);
+        pop_s.draw_noise(&cfg, &mut rng_s);
+        pop_b.draw_noise(&cfg, &mut rng_b);
+        let mut scalar = kernel_for(&cfg, KernelKind::Scalar);
+        let mut blocked = kernel_for(&cfg, KernelKind::Blocked);
+        // Warm the caches/branch predictor once per column.
+        scalar.step(&mut pop_s, &cfg, &mut rng_s).unwrap();
+        blocked.step(&mut pop_b, &cfg, &mut rng_b).unwrap();
+        let scalar_ns = time_kernel(&mut *scalar, &mut pop_s, &cfg, &mut rng_s, steps);
+        let blocked_ns = time_kernel(&mut *blocked, &mut pop_b, &cfg, &mut rng_b, steps);
+        // The timed trajectories must agree too — identical inputs,
+        // identical kernels, so any divergence is a semantics bug.
+        assert_eq!(
+            pop_s.v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>(),
+            pop_b.v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>(),
+            "timed runs diverged at n = {n}"
+        );
+        println!(
+            "{:>10} {:>8} {:>16.2} {:>16.2} {:>8}",
+            n,
+            steps,
+            scalar_ns,
+            blocked_ns,
+            common::ratio(scalar_ns, blocked_ns)
+        );
+    }
+    println!(
+        "\n(both columns are bit-identical by construction; the gap is pure cache/\
+         vectorization — multiply by neurons x steps for the per-run saving)"
+    );
+}

@@ -1,11 +1,11 @@
 //! The versioned `BENCH_*.json` report: emit, parse, markdown render,
 //! and baseline diffing.
 //!
-//! Schema (`schema_version` 5):
+//! Schema (`schema_version` 6):
 //!
 //! ```json
 //! {
-//!   "schema_version": 5,
+//!   "schema_version": 6,
 //!   "name": "quick",
 //!   "created_unix": 1753500000,
 //!   "fingerprint": "9f…16 hex digits…",
@@ -14,7 +14,8 @@
 //!   "scenarios": [{
 //!     "id": "new_r4_n128_d100_active",
 //!     "alg": "new", "ranks": 4, "neurons_per_rank": 128,
-//!     "delta": 100, "regime": "active", "skew": false, "reps": 3,
+//!     "delta": 100, "regime": "active", "skew": false,
+//!     "kernel": "scalar", "reps": 3,
 //!     "phases": {"spike_exchange": {"median":…,"min":…,"max":…}, …},
 //!     "wall": {"median":…,"min":…,"max":…},
 //!     "comm": {"bytes_sent":…,"bytes_recv":…,"bytes_rma":…,
@@ -22,7 +23,8 @@
 //!     "spike_state_bytes": …,
 //!     "spike_lookups": …,
 //!     "imbalance": …,
-//!     "trace_events": …
+//!     "trace_events": …,
+//!     "kernel_blocks": …
 //!   }, …]
 //! }
 //! ```
@@ -37,6 +39,7 @@
 //! fingerprints is flagged as drift regardless of the threshold.
 
 use crate::comm::CounterSnapshot;
+use crate::config::KernelKind;
 use crate::metrics::ALL_PHASES;
 
 use super::json::{obj, parse, Json};
@@ -56,8 +59,15 @@ use super::stats::Summary;
 /// balancing); v5 added `trace_events` (the deterministic Chrome
 /// trace event count of the epoch-granular telemetry ring,
 /// EXPERIMENTS.md §Tracing), drift-checked so a cadence or
-/// ring-capacity behavior change can never pass silently.
-pub const SCHEMA_VERSION: u32 = 5;
+/// ring-capacity behavior change can never pass silently; v6 added the
+/// `kernel` scenario axis (which `NeuronKernel` backend executed the
+/// activity update — execution strategy, not dynamics) and the
+/// drift-checked `kernel_blocks` counter (cache-block iterations summed
+/// over ranks, `ceil(n/64)` per rank per step), which is
+/// kernel-independent by construction so a population-size or schedule
+/// change can never hide behind a kernel switch
+/// (EXPERIMENTS.md §Perf, opt 9).
+pub const SCHEMA_VERSION: u32 = 6;
 
 /// Timing differences below this many seconds are never regressions —
 /// the thread-rank substrate cannot resolve them reliably.
@@ -95,6 +105,13 @@ pub struct ScenarioResult {
     /// slices plus three counter points regardless of timing, so the
     /// count is a pure function of seed + config and drift-checked.
     pub trace_events: u64,
+    /// Cache-block iterations of the activity update summed over ranks
+    /// (`SimReport::total_kernel_blocks`: `ceil(n/64)` per rank per
+    /// step). Kernel-independent by construction — the driver counts
+    /// blocks from the population size, not from the kernel — so the
+    /// kernel axis can never silently change how much work a cell
+    /// represents. Drift-checked like the communication counters.
+    pub kernel_blocks: u64,
 }
 
 /// One complete benchmark trajectory (a `BENCH_*.json` file in memory).
@@ -211,9 +228,9 @@ impl BenchReport {
         }
         out.push_str(
             " wall | bytes_sent | bytes_rma | collectives | spike_state | lookups | \
-             imbalance | trace_events |\n|---|",
+             imbalance | trace_events | kernel_blocks |\n|---|",
         );
-        out.push_str(&"---:|".repeat(ALL_PHASES.len() + 8));
+        out.push_str(&"---:|".repeat(ALL_PHASES.len() + 9));
         out.push('\n');
         for r in &self.results {
             out.push_str(&format!("| {} |", r.scenario.id()));
@@ -221,7 +238,7 @@ impl BenchReport {
                 out.push_str(&format!(" {:.4} |", r.phases[p.index()].median));
             }
             out.push_str(&format!(
-                " {:.4} | {} | {} | {} | {} | {} | {:.3} | {} |\n",
+                " {:.4} | {} | {} | {} | {} | {} | {:.3} | {} | {} |\n",
                 r.wall.median,
                 r.comm.bytes_sent,
                 r.comm.bytes_rma,
@@ -229,7 +246,8 @@ impl BenchReport {
                 r.spike_state_bytes,
                 r.spike_lookups,
                 r.imbalance,
-                r.trace_events
+                r.trace_events,
+                r.kernel_blocks
             ));
         }
         out
@@ -283,6 +301,7 @@ impl BenchReport {
                 ("spike_state_bytes", base.spike_state_bytes, cur.spike_state_bytes),
                 ("spike_lookups", base.spike_lookups, cur.spike_lookups),
                 ("trace_events", base.trace_events, cur.trace_events),
+                ("kernel_blocks", base.kernel_blocks, cur.kernel_blocks),
             ];
             for (field, b, c) in counter_fields {
                 if b != c {
@@ -405,6 +424,7 @@ fn scenario_to_json(r: &ScenarioResult) -> Json {
         ("delta", Json::Num(r.scenario.delta as f64)),
         ("regime", Json::Str(r.scenario.regime.name().to_string())),
         ("skew", Json::Bool(r.scenario.skew)),
+        ("kernel", Json::Str(r.scenario.kernel.name().to_string())),
         ("reps", Json::Num(r.reps as f64)),
         ("phases", Json::Obj(phases)),
         ("wall", summary_to_json(&r.wall)),
@@ -423,6 +443,7 @@ fn scenario_to_json(r: &ScenarioResult) -> Json {
         ("spike_lookups", Json::Num(r.spike_lookups as f64)),
         ("imbalance", Json::Num(r.imbalance)),
         ("trace_events", Json::Num(r.trace_events as f64)),
+        ("kernel_blocks", Json::Num(r.kernel_blocks as f64)),
     ])
 }
 
@@ -434,6 +455,11 @@ fn scenario_from_json(v: &Json) -> Result<ScenarioResult, String> {
         delta: v.req("delta")?.as_usize()?,
         regime: Regime::from_name(v.req("regime")?.as_str()?)?,
         skew: v.req("skew")?.as_bool()?,
+        kernel: {
+            let name = v.req("kernel")?.as_str()?;
+            KernelKind::from_name(name)
+                .ok_or_else(|| format!("unknown kernel backend {name:?}"))?
+        },
     };
     let id = v.req("id")?.as_str()?;
     if id != scenario.id() {
@@ -469,6 +495,7 @@ fn scenario_from_json(v: &Json) -> Result<ScenarioResult, String> {
         spike_lookups: v.req("spike_lookups")?.as_u64()?,
         imbalance: v.req("imbalance")?.as_f64()?,
         trace_events: v.req("trace_events")?.as_u64()?,
+        kernel_blocks: v.req("kernel_blocks")?.as_u64()?,
     })
 }
 
@@ -494,6 +521,7 @@ mod tests {
                 delta: 50,
                 regime: Regime::Active,
                 skew: false,
+                kernel: KernelKind::Scalar,
             },
             reps: 3,
             phases,
@@ -510,6 +538,7 @@ mod tests {
             spike_lookups: 98_765,
             imbalance: 1.25,
             trace_events: 42,
+            kernel_blocks: 400,
         }
     }
 
@@ -563,17 +592,17 @@ mod tests {
     #[test]
     fn unsupported_schema_version_is_rejected() {
         let text = sample_report().to_json().replace(
-            "\"schema_version\": 5",
+            "\"schema_version\": 6",
             "\"schema_version\": 99",
         );
         let err = BenchReport::from_json(&text).unwrap_err();
         assert!(err.contains("schema version"), "{err}");
-        // The previous schema generation is refused too — a v4 baseline
-        // has no trace_events to drift-check against, so cross-schema
-        // trajectories are not comparable.
+        // The previous schema generation is refused too — a v5 baseline
+        // has no kernel axis or kernel_blocks to drift-check against,
+        // so cross-schema trajectories are not comparable.
         let text = sample_report().to_json().replace(
+            "\"schema_version\": 6",
             "\"schema_version\": 5",
-            "\"schema_version\": 4",
         );
         let err = BenchReport::from_json(&text).unwrap_err();
         assert!(err.contains("schema version"), "{err}");
@@ -668,6 +697,8 @@ mod tests {
         assert!(md.contains("imbalance"), "{md}");
         assert!(md.contains("1.250"), "{md}");
         assert!(md.contains("trace_events"), "{md}");
+        assert!(md.contains("kernel_blocks"), "{md}");
+        assert!(md.contains("| 400 |"), "{md}");
         assert_eq!(md.lines().count(), 2 + 2); // header + separator + 2 rows
     }
 
@@ -706,5 +737,42 @@ mod tests {
         let broken = text.replace("\"trace_events\"", "\"trace_events_gone\"");
         let err = BenchReport::from_json(&broken).unwrap_err();
         assert!(err.contains("trace_events"), "{err}");
+    }
+
+    #[test]
+    fn kernel_blocks_drift_is_flagged_and_v6_fields_are_required() {
+        let base = sample_report();
+        let mut cur = sample_report();
+        cur.results[0].kernel_blocks += 64;
+        let diff = cur.diff(&base, 0.2).unwrap();
+        assert_eq!(diff.regressions(), 1);
+        assert!(diff.render().contains("COUNTER DRIFT kernel_blocks"));
+        // The v6 schema requires both the counter and the kernel axis
+        // on every scenario.
+        let text = base.to_json();
+        assert!(text.contains("\"kernel_blocks\""));
+        assert!(text.contains("\"kernel\": \"scalar\""));
+        let broken = text.replace("\"kernel_blocks\"", "\"kernel_blocks_gone\"");
+        let err = BenchReport::from_json(&broken).unwrap_err();
+        assert!(err.contains("kernel_blocks"), "{err}");
+        let broken = text.replace("\"kernel\": \"scalar\"", "\"kernel\": \"simd\"");
+        let err = BenchReport::from_json(&broken).unwrap_err();
+        assert!(err.contains("kernel"), "{err}");
+    }
+
+    #[test]
+    fn kernel_axis_feeds_the_scenario_id_roundtrip() {
+        // A non-default kernel suffixes the id; the JSON id/axes
+        // consistency check must accept the suffixed form and reject a
+        // mismatched one.
+        let mut report = sample_report();
+        report.results[1].scenario.kernel = KernelKind::Blocked;
+        let text = report.to_json();
+        assert!(text.contains("new_r2_n64_d50_active_kblocked"), "{text}");
+        let back = BenchReport::from_json(&text).unwrap();
+        assert_eq!(back, report);
+        let broken = text.replace("\"kernel\": \"blocked\"", "\"kernel\": \"xla\"");
+        let err = BenchReport::from_json(&broken).unwrap_err();
+        assert!(err.contains("does not match its axes"), "{err}");
     }
 }

@@ -47,6 +47,7 @@ pub fn run_scenario_with_backend(
     let mut spike_lookups = 0u64;
     let mut imbalance = 1.0f64;
     let mut trace_events = 0u64;
+    let mut kernel_blocks = 0u64;
     for rep in 0..settings.reps.max(1) {
         let report = run_simulation(&cfg)?;
         for p in ALL_PHASES {
@@ -120,6 +121,21 @@ pub fn run_scenario_with_backend(
             );
         }
         trace_events = events;
+        // Kernel-block counts are a pure function of the per-rank
+        // population-size trajectory (`ceil(n/64)` per step, counted by
+        // the driver independent of the kernel backend) — the schema-v6
+        // field the baseline diff drift-checks.
+        let blocks = report.total_kernel_blocks();
+        if rep > 0 && blocks != kernel_blocks {
+            anyhow::bail!(
+                "kernel blocks drifted between repetitions of {} ({} then {}) — \
+                 determinism bug in the activity-update scheduling",
+                scenario.id(),
+                kernel_blocks,
+                blocks
+            );
+        }
+        kernel_blocks = blocks;
     }
     let mut phases = [Summary::default(); ALL_PHASES.len()];
     for p in ALL_PHASES {
@@ -135,6 +151,7 @@ pub fn run_scenario_with_backend(
         spike_lookups,
         imbalance,
         trace_events,
+        kernel_blocks,
     })
 }
 
@@ -184,6 +201,7 @@ pub fn run_matrix_with_backend(
 mod tests {
     use super::*;
     use crate::bench::scenario::{AlgGen, Regime};
+    use crate::config::KernelKind;
 
     fn tiny_settings() -> RunSettings {
         RunSettings { steps: 60, plasticity_interval: 30, warmup: 0, reps: 2, seed: 42 }
@@ -198,6 +216,7 @@ mod tests {
             delta: 30,
             regime: Regime::Active,
             skew: false,
+            kernel: KernelKind::Scalar,
         };
         let settings = tiny_settings();
         let a = run_scenario(&sc, &settings).unwrap();
@@ -226,6 +245,37 @@ mod tests {
         // imbalance points (steps 60 / interval 30).
         assert_eq!(a.trace_events, b.trace_events);
         assert_eq!(a.trace_events, 2 * 2 * 10 + 2);
+        // Kernel-block counts match the closed form: 60 steps x 2 ranks
+        // x ceil(16/64) = 1 block per rank per step.
+        assert_eq!(a.kernel_blocks, b.kernel_blocks);
+        assert_eq!(a.kernel_blocks, 120);
+    }
+
+    #[test]
+    fn blocked_kernel_cell_matches_scalar_counters() {
+        // The kernel axis is execution strategy, not dynamics: every
+        // drift-checked number must be identical across kernels, so a
+        // blocked-kernel report row is comparable to its scalar twin.
+        let settings = tiny_settings();
+        let mut sc = Scenario {
+            alg: AlgGen::New,
+            ranks: 2,
+            neurons_per_rank: 16,
+            delta: 30,
+            regime: Regime::Active,
+            skew: false,
+            kernel: KernelKind::Scalar,
+        };
+        let scalar = run_scenario(&sc, &settings).unwrap();
+        sc.kernel = KernelKind::Blocked;
+        let blocked = run_scenario(&sc, &settings).unwrap();
+        assert_eq!(blocked.scenario.id(), "new_r2_n16_d30_active_kblocked");
+        assert_eq!(scalar.comm, blocked.comm);
+        assert_eq!(scalar.spike_state_bytes, blocked.spike_state_bytes);
+        assert_eq!(scalar.spike_lookups, blocked.spike_lookups);
+        assert_eq!(scalar.imbalance.to_bits(), blocked.imbalance.to_bits());
+        assert_eq!(scalar.trace_events, blocked.trace_events);
+        assert_eq!(scalar.kernel_blocks, blocked.kernel_blocks);
     }
 
     #[test]
@@ -242,6 +292,7 @@ mod tests {
             delta: 50,
             regime: Regime::Active,
             skew: true,
+            kernel: KernelKind::Scalar,
         };
         let balanced = run_scenario(&skewed, &settings).unwrap();
         // Control: identical skewed start, balancing forced off.
@@ -269,6 +320,7 @@ mod tests {
             deltas: vec![30],
             regimes: vec![Regime::Active],
             skew: false,
+            kernels: vec![KernelKind::Scalar],
         };
         let mut seen = Vec::new();
         let report =

@@ -7,7 +7,7 @@
 //! measures the same schedule. EXPERIMENTS.md §Bench documents the
 //! default matrices and how they map onto the paper's figures.
 
-use crate::config::{ConnectivityAlg, SimConfig, SpikeAlg};
+use crate::config::{ConnectivityAlg, KernelKind, SimConfig, SpikeAlg};
 
 /// Algorithm generation under test: the paper's before/after pair.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -111,20 +111,32 @@ pub struct Scenario {
     /// the recorded end-of-run `imbalance` demonstrates the migration
     /// subsystem ironing the skew out (EXPERIMENTS.md §Load balancing).
     pub skew: bool,
+    /// Neuron-kernel backend executing the activity update. Execution
+    /// strategy, not dynamics: every counter the diff drift-checks must
+    /// be identical across kernels (the cross-kernel differential suite
+    /// pins bit-identical trajectories), so sweeping this axis measures
+    /// pure hot-loop speed (EXPERIMENTS.md §Perf, opt 9).
+    pub kernel: KernelKind,
 }
 
 impl Scenario {
     /// Stable identifier used as the JSON key and in baseline diffs,
-    /// e.g. `new_r4_n128_d100_active` (`_skew` suffix for skewed cells).
+    /// e.g. `new_r4_n128_d100_active` (`_skew` suffix for skewed cells,
+    /// `_k<kernel>` suffix for non-default kernels — omitted for the
+    /// scalar kernel so pre-v6 scenario ids are unchanged).
     pub fn id(&self) -> String {
         format!(
-            "{}_r{}_n{}_d{}_{}{}",
+            "{}_r{}_n{}_d{}_{}{}{}",
             self.alg.name(),
             self.ranks,
             self.neurons_per_rank,
             self.delta,
             self.regime.name(),
-            if self.skew { "_skew" } else { "" }
+            if self.skew { "_skew" } else { "" },
+            match self.kernel {
+                KernelKind::Scalar => String::new(),
+                other => format!("_k{}", other.name()),
+            }
         )
     }
 
@@ -141,6 +153,7 @@ impl Scenario {
             spike_alg,
             bg_mean: self.regime.bg_mean(),
             seed: settings.seed,
+            kernel: self.kernel,
             // Every cell records an epoch trace at the connectivity-
             // update cadence: the sample/event counts are seed-
             // deterministic, so the runner drift-checks `trace_events`
@@ -200,11 +213,16 @@ pub struct MatrixSpec {
     /// Whether every cell of this matrix runs the skewed-load +
     /// balancing variant (the `smoke-skew` preset).
     pub skew: bool,
+    /// Kernel backends to sweep (innermost axis). Presets pin
+    /// `[Scalar]`; `ilmi bench --kernel` swaps the single entry, and a
+    /// CI matrix job can compare backends cell-for-cell because the
+    /// drift-checked counters are kernel-independent.
+    pub kernels: Vec<KernelKind>,
 }
 
 impl MatrixSpec {
     /// Expand the cross product in a fixed axis order (alg outermost,
-    /// regime innermost) so cell order — and with it the report
+    /// kernel innermost) so cell order — and with it the report
     /// fingerprint — is deterministic.
     pub fn cells(&self) -> Vec<Scenario> {
         let mut out = Vec::new();
@@ -213,14 +231,17 @@ impl MatrixSpec {
                 for &neurons_per_rank in &self.neurons {
                     for &delta in &self.deltas {
                         for &regime in &self.regimes {
-                            out.push(Scenario {
-                                alg,
-                                ranks,
-                                neurons_per_rank,
-                                delta,
-                                regime,
-                                skew: self.skew,
-                            });
+                            for &kernel in &self.kernels {
+                                out.push(Scenario {
+                                    alg,
+                                    ranks,
+                                    neurons_per_rank,
+                                    delta,
+                                    regime,
+                                    skew: self.skew,
+                                    kernel,
+                                });
+                            }
                         }
                     }
                 }
@@ -248,6 +269,7 @@ pub fn preset(name: &str) -> Result<(MatrixSpec, RunSettings), String> {
                 deltas: vec![50],
                 regimes: vec![Regime::Active],
                 skew: false,
+                kernels: vec![KernelKind::Scalar],
             },
             RunSettings {
                 steps: 100,
@@ -265,6 +287,7 @@ pub fn preset(name: &str) -> Result<(MatrixSpec, RunSettings), String> {
                 deltas: vec![50],
                 regimes: vec![Regime::Active],
                 skew: false,
+                kernels: vec![KernelKind::Scalar],
             },
             RunSettings {
                 steps: 100,
@@ -282,6 +305,7 @@ pub fn preset(name: &str) -> Result<(MatrixSpec, RunSettings), String> {
                 deltas: vec![50],
                 regimes: vec![Regime::Active],
                 skew: true,
+                kernels: vec![KernelKind::Scalar],
             },
             RunSettings {
                 steps: 150,
@@ -299,6 +323,7 @@ pub fn preset(name: &str) -> Result<(MatrixSpec, RunSettings), String> {
                 deltas: vec![50, 100],
                 regimes: vec![Regime::Active],
                 skew: false,
+                kernels: vec![KernelKind::Scalar],
             },
             RunSettings {
                 steps: 200,
@@ -316,6 +341,7 @@ pub fn preset(name: &str) -> Result<(MatrixSpec, RunSettings), String> {
                 deltas: vec![50, 100],
                 regimes: vec![Regime::Quiet, Regime::Active],
                 skew: false,
+                kernels: vec![KernelKind::Scalar],
             },
             RunSettings {
                 steps: 400,
@@ -382,10 +408,18 @@ mod tests {
             delta: 100,
             regime: Regime::Active,
             skew: false,
+            kernel: KernelKind::Scalar,
         };
         assert_eq!(sc.id(), "new_r4_n128_d100_active");
         sc.skew = true;
         assert_eq!(sc.id(), "new_r4_n128_d100_active_skew");
+        // Non-default kernels suffix the id; the scalar default stays
+        // suffix-free so pre-v6 baselines keep their cell names.
+        sc.kernel = KernelKind::Blocked;
+        assert_eq!(sc.id(), "new_r4_n128_d100_active_skew_kblocked");
+        sc.skew = false;
+        sc.kernel = KernelKind::Xla;
+        assert_eq!(sc.id(), "new_r4_n128_d100_active_kxla");
     }
 
     #[test]
@@ -398,8 +432,10 @@ mod tests {
             delta: 50,
             regime: Regime::Quiet,
             skew: false,
+            kernel: KernelKind::Blocked,
         };
         let cfg = sc.config(&settings);
+        assert_eq!(cfg.kernel, KernelKind::Blocked, "cells select their kernel");
         assert_eq!(cfg.connectivity_alg, ConnectivityAlg::OldRma);
         assert_eq!(cfg.spike_alg, SpikeAlg::OldIds);
         assert_eq!(cfg.bg_mean, 3.0);
@@ -440,6 +476,27 @@ mod tests {
             assert!(parts.iter().all(|&p| p >= 1), "{split}");
         }
         assert_eq!(skewed_init_cells(2), "6,2");
+    }
+
+    #[test]
+    fn kernel_axis_expands_innermost_with_suffixed_ids() {
+        let (mut spec, settings) = preset("smoke").unwrap();
+        spec.kernels = vec![KernelKind::Scalar, KernelKind::Blocked];
+        let cells = spec.cells();
+        assert_eq!(cells.len(), 4, "2 algs x 2 kernels");
+        let ids: Vec<String> = cells.iter().map(|c| c.id()).collect();
+        assert_eq!(
+            ids,
+            vec![
+                "old_r2_n32_d50_active",
+                "old_r2_n32_d50_active_kblocked",
+                "new_r2_n32_d50_active",
+                "new_r2_n32_d50_active_kblocked",
+            ]
+        );
+        for cell in &cells {
+            cell.config(&settings).validate().unwrap();
+        }
     }
 
     #[test]

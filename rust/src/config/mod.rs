@@ -59,6 +59,46 @@ pub enum CommBackend {
     Socket,
 }
 
+/// Which `NeuronKernel` implementation executes the fused per-step
+/// activity update (see `neuron::kernel`). Kernels are *execution
+/// strategy*, not dynamics: all three produce bit-identical
+/// trajectories (pinned by the cross-kernel differential suite), so
+/// the choice is excluded from the snapshot config fingerprint and a
+/// run may resume under a different kernel than it checkpointed with.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelKind {
+    /// The straight-line scalar loop — the reference oracle.
+    Scalar,
+    /// Cache-blocked SoA walk in fixed-width chunks with branchless
+    /// spike/reset selects (autovectorizes; elementwise, so lane order
+    /// — and with it every bit — matches the scalar loop).
+    Blocked,
+    /// The XLA/PJRT staged path with persistent staging buffers
+    /// (Izhikevich only; requires a live executor service).
+    Xla,
+}
+
+impl KernelKind {
+    /// Stable lower-case name (INI value, CLI value, bench JSON).
+    pub fn name(&self) -> &'static str {
+        match self {
+            KernelKind::Scalar => "scalar",
+            KernelKind::Blocked => "blocked",
+            KernelKind::Xla => "xla",
+        }
+    }
+
+    /// Inverse of [`name`](Self::name).
+    pub fn from_name(name: &str) -> Option<KernelKind> {
+        match name {
+            "scalar" => Some(KernelKind::Scalar),
+            "blocked" => Some(KernelKind::Blocked),
+            "xla" => Some(KernelKind::Xla),
+            _ => None,
+        }
+    }
+}
+
 /// Which neuron model drives the electrical activity (the plasticity
 /// machinery is model-agnostic — paper §III-A0a "computed using models
 /// like Izhikevich").
@@ -123,6 +163,9 @@ pub struct SimConfig {
     pub spike_alg: SpikeAlg,
     pub backend: Backend,
     pub neuron_model: NeuronModel,
+    /// Which `NeuronKernel` executes the activity update (execution
+    /// strategy only — all kernels are bit-identical; see `[compute]`).
+    pub kernel: KernelKind,
     /// Barnes–Hut acceptance criterion θ (paper: {0.2, 0.3, 0.4}).
     pub theta: f64,
 
@@ -199,6 +242,7 @@ impl Default for SimConfig {
             spike_alg: SpikeAlg::NewFrequency,
             backend: Backend::Native,
             neuron_model: NeuronModel::Izhikevich,
+            kernel: KernelKind::Scalar,
             theta: 0.3,
             sigma: 750.0,
             frac_excitatory: 0.8,
@@ -306,6 +350,9 @@ impl SimConfig {
                     "xla" => Backend::Xla,
                     _ => return Err(bad(key)),
                 }
+            }
+            "compute.kernel" => {
+                self.kernel = KernelKind::from_name(value).ok_or_else(|| bad(key))?
             }
             "model.neuron_model" => {
                 self.neuron_model = match value {
@@ -468,6 +515,13 @@ impl SimConfig {
         if !self.balance_init_cells.is_empty() {
             out.push_str(&format!("init_cells = {}\n", self.balance_init_cells));
         }
+        // Emitted only when non-default, like `topology.comm`: a
+        // scalar-kernel config's INI bytes — and with them every
+        // pre-existing snapshot's embedded config — are unchanged by
+        // the key's existence.
+        if self.kernel != KernelKind::Scalar {
+            out.push_str(&format!("[compute]\nkernel = {}\n", self.kernel.name()));
+        }
         out
     }
 
@@ -559,6 +613,14 @@ impl SimConfig {
                     .into(),
             );
         }
+        if self.neuron_model == NeuronModel::Poisson && self.kernel == KernelKind::Xla {
+            return Err(
+                "model.neuron_model=poisson cannot run compute.kernel=xla \
+                 (the AOT artifact implements the Izhikevich kernel; use \
+                 scalar or blocked)"
+                    .into(),
+            );
+        }
         if self.comm_backend == CommBackend::Socket {
             // Socket ranks are separate processes; snapshot deposit and
             // the shared XLA executor handle both assume one address
@@ -575,6 +637,14 @@ impl SimConfig {
                 return Err(
                     "topology.comm=socket runs the native backend only \
                      (algorithms.backend=xla needs the shared in-process executor)"
+                        .into(),
+                );
+            }
+            if self.kernel == KernelKind::Xla {
+                return Err(
+                    "topology.comm=socket cannot run compute.kernel=xla: rank \
+                     processes cannot share the in-process XLA executor handle \
+                     (use scalar or blocked)"
                         .into(),
                 );
             }
@@ -724,6 +794,49 @@ target_calcium = 0.6
     }
 
     #[test]
+    fn kernel_kind_roundtrips_and_default_ini_is_unchanged() {
+        // Scalar (the default) emits NO [compute] section: pre-existing
+        // snapshots' embedded INIs are byte-stable under the new key.
+        let scalar = SimConfig::default();
+        assert!(!scalar.to_ini().contains("kernel"), "scalar configs must not emit the key");
+        assert_eq!(SimConfig::from_ini(&scalar.to_ini()).unwrap().kernel, KernelKind::Scalar);
+
+        for kind in [KernelKind::Blocked, KernelKind::Xla] {
+            let cfg = SimConfig { kernel: kind, ..SimConfig::default() };
+            let ini = cfg.to_ini();
+            assert!(ini.contains(&format!("kernel = {}", kind.name())), "{ini}");
+            let back = SimConfig::from_ini(&ini).unwrap();
+            assert_eq!(back, cfg);
+            assert_eq!(KernelKind::from_name(kind.name()), Some(kind));
+        }
+
+        let mut cfg = SimConfig::default();
+        cfg.apply_kv("compute.kernel", "blocked").unwrap();
+        assert_eq!(cfg.kernel, KernelKind::Blocked);
+        assert!(cfg.apply_kv("compute.kernel", "abacus").is_err());
+    }
+
+    #[test]
+    fn xla_kernel_rejects_poisson_and_socket() {
+        // The AOT artifact implements the Izhikevich kernel only.
+        let mut cfg = SimConfig {
+            kernel: KernelKind::Xla,
+            neuron_model: NeuronModel::Poisson,
+            ..SimConfig::default()
+        };
+        let err = cfg.validate().unwrap_err();
+        assert!(err.contains("poisson"), "{err}");
+        cfg.neuron_model = NeuronModel::Izhikevich;
+        cfg.validate().unwrap();
+        // Socket rank processes cannot share the in-process executor.
+        cfg.comm_backend = CommBackend::Socket;
+        let err = cfg.validate().unwrap_err();
+        assert!(err.contains("socket") && err.contains("kernel"), "{err}");
+        cfg.kernel = KernelKind::Blocked;
+        cfg.validate().unwrap();
+    }
+
+    #[test]
     fn socket_backend_rejects_checkpointing_and_xla() {
         let mut cfg = SimConfig {
             comm_backend: CommBackend::Socket,
@@ -796,6 +909,18 @@ target_calcium = 0.6
                 if cfg.checkpoint_every == 0 && rng.bernoulli(0.5) {
                     cfg.comm_backend = CommBackend::Socket;
                 }
+                // The xla kernel excludes Poisson and socket (validate
+                // rejects both pairs); blocked is unconstrained.
+                cfg.kernel = match rng.next_below(3) {
+                    0 => KernelKind::Scalar,
+                    1 => KernelKind::Blocked,
+                    _ if cfg.neuron_model == NeuronModel::Izhikevich
+                        && cfg.comm_backend == CommBackend::Thread =>
+                    {
+                        KernelKind::Xla
+                    }
+                    _ => KernelKind::Blocked,
+                };
                 if rng.bernoulli(0.5) {
                     cfg.trace_every = 1 + rng.next_below(500);
                     cfg.trace_capacity = 1 + rng.next_below(10_000);

@@ -17,13 +17,13 @@ use crate::barnes_hut::{self, new::FormationScratch, FormationStats};
 use crate::comm::{gather_all, run_ranks, Comm, CounterSnapshot};
 use crate::config::{Backend, ConnectivityAlg, SimConfig, SpikeAlg};
 use crate::metrics::{Phase, PhaseTimers, RankReport, SimReport};
-use crate::neuron::{izhikevich, Population};
+use crate::neuron::{blocks_per_step, make_kernel, NeuronKernel, Population};
 use crate::octree::{
     serialize_local_subtrees, DomainDecomposition, Octree, RemoteNodeCache, NO_CHILD,
     OCTREE_WINDOW,
 };
 use crate::plasticity::{run_deletion_phase, vacant, DeletionStats, InEdge, SynapseStore};
-use crate::runtime::{NeuronInputs, XlaHandle};
+use crate::runtime::XlaHandle;
 use crate::snapshot::{CheckpointSink, RankSection, Snapshot};
 use crate::spikes::{DeliveryPlan, FrequencyExchange, IdExchange};
 use crate::trace::{Cumulative, Tracer};
@@ -97,6 +97,18 @@ pub struct RankState {
     /// primed right after each segment's initial plan compile so that
     /// a resumed segment's first window excludes the restore recompile.
     pub tracer: Tracer,
+    /// The activity-update backend (see `neuron::kernel`). Pure
+    /// execution strategy — every backend is bit-identical — so it is
+    /// derived from config (constructors build the handle-less dispatch;
+    /// `simulate_rank` re-installs with the XLA handle when one exists)
+    /// and never snapshotted.
+    pub kernel: Box<dyn NeuronKernel>,
+    /// Deterministic work metric: cache blocks covered by this segment's
+    /// activity updates (`blocks_per_step` per step — counted here, not
+    /// by the kernels, so it is kernel-independent by construction).
+    /// Per-segment bookkeeping like `plan_rebuilds`: never snapshotted,
+    /// drift-checked by the bench harness.
+    pub kernel_blocks: u64,
 }
 
 impl RankState {
@@ -157,6 +169,8 @@ impl RankState {
             baseline_comm: CounterSnapshot::default(),
             spikes_fired: 0,
             tracer: Tracer::from_config(cfg),
+            kernel: make_kernel(cfg, None),
+            kernel_blocks: 0,
         };
         state.rebuild_plan();
         let baseline = state.trace_cumulative(comm);
@@ -328,6 +342,8 @@ impl RankState {
             baseline_comm: sec.baseline_comm,
             spikes_fired: 0,
             tracer: Tracer::from_config(cfg),
+            kernel: make_kernel(cfg, None),
+            kernel_blocks: 0,
         };
         // The plan is derived state: never read from the snapshot,
         // always recompiled from the restored store (and the slot
@@ -382,53 +398,16 @@ impl RankState {
         }
     }
 
-    /// Phase B: background noise + the fused neuron/element update
-    /// (native mirror or the AOT XLA artifact).
-    pub fn activity_phase(&mut self, cfg: &SimConfig, xla: Option<&XlaHandle>) -> Result<()> {
+    /// Phase B: background noise + the fused neuron/element update,
+    /// dispatched through the rank's [`NeuronKernel`] backend (scalar
+    /// oracle, cache-blocked, or the XLA staged path — bit-identical by
+    /// the kernel contract, so backend choice never moves the
+    /// trajectory).
+    pub fn activity_phase(&mut self, cfg: &SimConfig) -> Result<()> {
         let t0 = Instant::now();
         self.pop.draw_noise(cfg, &mut self.rng_model);
-        match (cfg.backend, xla) {
-            (Backend::Native, _) | (Backend::Xla, None) => match cfg.neuron_model {
-                crate::config::NeuronModel::Izhikevich => {
-                    izhikevich::step(&mut self.pop, &cfg.neuron);
-                }
-                crate::config::NeuronModel::Poisson => {
-                    crate::neuron::poisson::step(
-                        &mut self.pop,
-                        &cfg.neuron,
-                        &crate::neuron::poisson::PoissonParams::default(),
-                        &mut self.rng_model,
-                    );
-                }
-            },
-            (Backend::Xla, Some(handle)) => {
-                let pop = &mut self.pop;
-                let out = handle.neuron_update(NeuronInputs {
-                    v: pop.v.clone(),
-                    u: pop.u.clone(),
-                    ca: pop.ca.clone(),
-                    z_ax: pop.z_ax.clone(),
-                    z_de: pop.z_den_exc.clone(),
-                    z_di: pop.z_den_inh.clone(),
-                    i_syn: pop.i_syn.clone(),
-                    noise: pop.noise.clone(),
-                    params: cfg.neuron.to_vec(),
-                })?;
-                pop.v = out.v;
-                pop.u = out.u;
-                pop.ca = out.ca;
-                pop.z_ax = out.z_ax;
-                pop.z_den_exc = out.z_de;
-                pop.z_den_inh = out.z_di;
-                for (i, &f) in out.fired.iter().enumerate() {
-                    let fired = f > 0.5;
-                    pop.fired[i] = fired;
-                    if fired {
-                        pop.epoch_spikes[i] += 1;
-                    }
-                }
-            }
-        }
+        self.kernel.step(&mut self.pop, cfg, &mut self.rng_model)?;
+        self.kernel_blocks += blocks_per_step(self.pop.len());
         self.timers.add(Phase::ActivityUpdate, t0.elapsed());
         Ok(())
     }
@@ -540,15 +519,9 @@ impl RankState {
     }
 
     /// One full simulation step.
-    pub fn step(
-        &mut self,
-        cfg: &SimConfig,
-        comm: &impl Comm,
-        step: usize,
-        xla: Option<&XlaHandle>,
-    ) -> Result<()> {
+    pub fn step(&mut self, cfg: &SimConfig, comm: &impl Comm, step: usize) -> Result<()> {
         self.spike_phase(cfg, comm, step);
-        self.activity_phase(cfg, xla)?;
+        self.activity_phase(cfg)?;
         if self.tracer.enabled() {
             self.spikes_fired += self.pop.fired.iter().filter(|&&f| f).count() as u64;
         }
@@ -853,6 +826,7 @@ impl RankState {
             local_edges: (self.store.total_in() + self.store.total_out()) as u64,
             remote_partners: self.plan.slot_count() as u64,
             migrations: self.migrations,
+            kernel_blocks: self.kernel_blocks,
             mean_calcium: self.pop.mean_calcium(),
             calcium_trace: self.calcium_trace,
             trace: self.tracer.into_samples(),
@@ -956,8 +930,13 @@ fn simulate_rank<C: Comm>(
             .map_err(anyhow::Error::msg)?,
         None => RankState::init_with_partition(cfg, partition, comm),
     };
+    // The constructors build the handle-less kernel; re-dispatch with
+    // the run's XLA handle (if any) so `backend/kernel = xla` selects
+    // the staged path. Trajectories are kernel-independent, so this is
+    // safe after restore too.
+    state.kernel = make_kernel(cfg, xla);
     for step in start_step..cfg.steps {
-        state.step(cfg, comm, step, xla)?;
+        state.step(cfg, comm, step)?;
         if let Some(sink) = sink {
             if (step + 1) % cfg.checkpoint_every == 0 {
                 // Checkpoint I/O failures are recorded, not returned:
@@ -994,6 +973,17 @@ pub const SOCKET_ENTRIES: &[(&str, crate::comm::proc::Entry)] =
 fn simulate_entry(comm: &crate::comm::SocketComm, args: &[u8]) -> Result<Vec<u8>, String> {
     let ini = std::str::from_utf8(args).map_err(|e| format!("entry args not UTF-8: {e}"))?;
     let cfg = SimConfig::from_ini(ini)?;
+    // Child-side guard (the launcher rewrites `comm` to thread before
+    // shipping the INI, so `validate`'s socket+xla rejection no longer
+    // fires here): a socket child has no XLA executor handle, and
+    // silently degrading to the native kernel would misreport what ran.
+    if cfg.backend == Backend::Xla || cfg.kernel == crate::config::KernelKind::Xla {
+        return Err(
+            "socket rank has no XLA executor handle: backend/kernel = xla cannot run \
+             over --comm socket (use scalar or blocked)"
+                .to_string(),
+        );
+    }
     let partition = Partition::from_config(&cfg)?;
     let report =
         simulate_rank(&cfg, partition, comm, None, None, 0, None).map_err(|e| format!("{e:#}"))?;
@@ -1051,6 +1041,14 @@ fn run_simulation_inner(
         }
         if xla.is_some() {
             bail!("the socket backend does not support an XLA executor handle");
+        }
+        // validate() already rejects socket + backend/kernel = xla;
+        // this is the defense in depth for callers that bypass it.
+        if cfg.backend == Backend::Xla || cfg.kernel == crate::config::KernelKind::Xla {
+            bail!(
+                "the socket backend cannot run backend/kernel = xla: rank processes \
+                 cannot share the in-process XLA executor handle (use scalar or blocked)"
+            );
         }
         #[cfg(unix)]
         return run_simulation_socket(cfg);
@@ -1211,7 +1209,7 @@ mod tests {
             let results = run_ranks(cfg.ranks, |comm| {
                 let mut state = RankState::init(&cfg, &comm);
                 for step in 0..cfg.steps {
-                    state.step(&cfg, &comm, step, None).unwrap();
+                    state.step(&cfg, &comm, step).unwrap();
                 }
                 state.plan.check_against(&state.store).map_err(|e| format!("{spikes:?}: {e}"))
             });
@@ -1235,7 +1233,7 @@ mod tests {
             state.vac_scratch.exc = vec![1e30; 1000];
             state.vac_scratch.inh = vec![-7.5; 3];
             for step in 0..cfg.steps {
-                state.step(&cfg, &comm, step, None).unwrap();
+                state.step(&cfg, &comm, step).unwrap();
             }
             state.into_report(&comm)
         });
@@ -1662,7 +1660,7 @@ mod tests {
             let mut state = RankState::init(&cfg, &comm);
             let mut trace = Vec::new();
             for step in 0..cfg.steps {
-                state.step(&cfg, &comm, step, None).unwrap();
+                state.step(&cfg, &comm, step).unwrap();
                 if (step + 1) % cfg.balance_every == 0 {
                     // Collective probe of the post-epoch global
                     // imbalance (every rank probes at the same steps).
@@ -1735,7 +1733,7 @@ mod tests {
         let results = run_ranks(cfg.ranks, |comm| {
             let mut state = RankState::init(&cfg, &comm);
             for step in 0..60 {
-                state.step(&cfg, &comm, step, None).unwrap();
+                state.step(&cfg, &comm, step).unwrap();
             }
             let before = digest(&state);
             let uniform = state.partition.clone();
@@ -1903,5 +1901,111 @@ mod tests {
         let report = branch_simulation(&other, &snap).unwrap();
         assert_eq!(report.ranks.len(), cfg.ranks);
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn kernel_blocks_counter_is_deterministic_and_kernel_independent() {
+        // 16 neurons per rank = one 64-wide block per step; 60 steps =
+        // 60 blocks per rank, regardless of which backend executed them
+        // (the driver counts blocks, not the kernels).
+        let mut cfg = smoke_cfg();
+        cfg.neurons_per_rank = 16;
+        cfg.steps = 60;
+        for kind in [crate::config::KernelKind::Scalar, crate::config::KernelKind::Blocked] {
+            let mut c = cfg.clone();
+            c.kernel = kind;
+            let report = run_simulation(&c).unwrap();
+            for r in &report.ranks {
+                assert_eq!(r.kernel_blocks, 60, "{kind:?}");
+            }
+            assert_eq!(report.total_kernel_blocks(), 120, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn blocked_kernel_reproduces_scalar_run_bit_exactly() {
+        let scalar = run_simulation(&smoke_cfg()).unwrap();
+        let mut cfg = smoke_cfg();
+        cfg.kernel = crate::config::KernelKind::Blocked;
+        let blocked = run_simulation(&cfg).unwrap();
+        for (a, b) in scalar.ranks.iter().zip(&blocked.ranks) {
+            assert_eq!(a.mean_calcium.to_bits(), b.mean_calcium.to_bits());
+            assert_eq!(a.synapses_out, b.synapses_out);
+            assert_eq!(a.synapses_in, b.synapses_in);
+            assert_eq!(a.comm.bytes_sent, b.comm.bytes_sent);
+            assert_eq!(a.spike_lookups, b.spike_lookups);
+            assert_eq!(a.kernel_blocks, b.kernel_blocks);
+        }
+    }
+
+    #[test]
+    fn mock_xla_backend_matches_native_run_bit_exactly() {
+        // End-to-end over the staged path: backend = xla with a mock
+        // service (the scalar oracle behind the service protocol) must
+        // reproduce the native run bit-for-bit.
+        let native = run_simulation(&smoke_cfg()).unwrap();
+        let mut cfg = smoke_cfg();
+        cfg.backend = Backend::Xla;
+        let handle = crate::runtime::spawn_mock_service();
+        let xla = run_simulation_with_xla(&cfg, Some(handle.clone())).unwrap();
+        handle.shutdown();
+        for (a, b) in native.ranks.iter().zip(&xla.ranks) {
+            assert_eq!(a.mean_calcium.to_bits(), b.mean_calcium.to_bits());
+            assert_eq!(a.synapses_out, b.synapses_out);
+            assert_eq!(a.comm.bytes_sent, b.comm.bytes_sent);
+            assert_eq!(a.spike_lookups, b.spike_lookups);
+        }
+    }
+
+    #[test]
+    fn poisson_with_xla_handle_keeps_native_dynamics() {
+        // The satellite-a regression. The explicit combination is
+        // rejected up front...
+        let mut bad = smoke_cfg();
+        bad.backend = Backend::Xla;
+        bad.neuron_model = crate::config::NeuronModel::Poisson;
+        let handle = crate::runtime::spawn_mock_service();
+        let err = run_simulation_with_xla(&bad, Some(handle.clone())).unwrap_err();
+        assert!(format!("{err:#}").contains("poisson"), "{err:#}");
+        // ...and even a state handed an XLA handle directly never
+        // routes Poisson dynamics to the Izhikevich artifact: the
+        // dispatch falls back to the scalar kernel, matching a plain
+        // native run bit-for-bit.
+        let mut cfg = smoke_cfg();
+        cfg.neuron_model = crate::config::NeuronModel::Poisson;
+        cfg.steps = 60;
+        let plain = run_simulation(&cfg).unwrap();
+        let results = run_ranks(cfg.ranks, |comm| {
+            let mut state = RankState::init(&cfg, &comm);
+            state.kernel = make_kernel(&cfg, Some(&handle));
+            assert_eq!(state.kernel.name(), "scalar");
+            for step in 0..cfg.steps {
+                state.step(&cfg, &comm, step).unwrap();
+            }
+            state.into_report(&comm)
+        });
+        handle.shutdown();
+        for (a, b) in plain.ranks.iter().zip(&results) {
+            assert_eq!(a.mean_calcium.to_bits(), b.mean_calcium.to_bits());
+            assert_eq!(a.synapses_out, b.synapses_out);
+        }
+    }
+
+    #[test]
+    fn socket_with_xla_fails_fast_at_launch() {
+        // The satellite-b guard: a socket launch with the XLA backend
+        // or kernel must error before any child is spawned instead of
+        // silently degrading to the native path.
+        for set in [
+            |c: &mut SimConfig| c.backend = Backend::Xla,
+            |c: &mut SimConfig| c.kernel = crate::config::KernelKind::Xla,
+        ] {
+            let mut cfg = smoke_cfg();
+            cfg.comm_backend = crate::config::CommBackend::Socket;
+            set(&mut cfg);
+            let err = run_simulation(&cfg).unwrap_err();
+            let msg = format!("{err:#}").to_lowercase();
+            assert!(msg.contains("socket") && msg.contains("xla"), "{msg}");
+        }
     }
 }

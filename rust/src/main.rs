@@ -26,7 +26,9 @@
 //!   inspect    load + exercise the AOT artifacts through PJRT
 //!
 //! Common flags: --config FILE, --set section.key=value (repeatable),
-//! --csv PATH, --xla (use the AOT artifacts for the neuron update).
+//! --csv PATH, --xla (use the AOT artifacts for the neuron update),
+//! --kernel scalar|blocked|xla (which `NeuronKernel` backend executes
+//! the activity update; bit-identical, DESIGN.md §12).
 //! `--trace-out FILE` (simulate/resume) records the epoch-granular
 //! telemetry ring and exports a Chrome trace JSON plus a JSONL time
 //! series at run end; `--trace-every`/`--trace-capacity` tune cadence
@@ -77,6 +79,12 @@ const HELP: &str = "\
 ilmi - I Like To Move It: structural-plasticity brain simulation
 usage: ilmi <simulate|resume|compare|bench|quality|inspect> [flags]
   simulate  --config FILE --set k=v ... [--csv PATH] [--xla]
+            [--kernel scalar|blocked|xla]
+              neuron-kernel backend for the activity update: scalar
+              reference loop (default), cache-blocked SoA loop, or the
+              staged XLA path (needs --xla artifacts). All three are
+              bit-identical (DESIGN.md SS12) - the flag trades speed,
+              never trajectory
             [--comm thread|socket]
               communication backend: in-process threads (default) or
               one OS process per rank over Unix domain sockets; both
@@ -98,6 +106,9 @@ usage: ilmi <simulate|resume|compare|bench|quality|inspect> [flags]
               open in Perfetto) plus the FILE.jsonl time series
   resume    (--from FILE | --dir D) [--steps T] [--config FILE]
             [--set k=v ...] [--csv PATH] [--xla] [--branch]
+            [--kernel scalar|blocked|xla]
+              kernels are excluded from the dynamics fingerprint, so a
+              snapshot may resume under a different kernel bit-exactly
             [--checkpoint-every N --checkpoint-dir D]
             [--trace-out FILE] [--trace-every N] [--trace-capacity C]
               trace the resumed segment (the snapshot's trace knobs
@@ -113,7 +124,10 @@ usage: ilmi <simulate|resume|compare|bench|quality|inspect> [flags]
   compare   --set k=v ... (runs old-vs-new on the same workload)
   bench     [--preset smoke|smoke8|smoke-skew|quick|full] [--name NAME] [--out FILE]
             [--steps N] [--warmup N] [--reps N] [--seed S]
-            [--comm thread|socket]
+            [--comm thread|socket] [--kernel scalar|blocked]
+              run every cell on the given neuron-kernel backend; the
+              drift-checked counters are kernel-independent, so kernel
+              reports compare cell-for-cell (ids gain a _k suffix)
             [--md FILE] [--baseline FILE] [--threshold PCT]
               run the scenario matrix ({old,new} x ranks x neurons x
               delta x regime) and write BENCH_<name>.json (per-phase
@@ -136,12 +150,24 @@ fn build_config(args: &Args) -> Result<SimConfig> {
     if args.get_bool("xla") {
         cfg.backend = Backend::Xla;
     }
+    apply_kernel_flag(&mut cfg, args)?;
     apply_comm_flag(&mut cfg, args)?;
     apply_checkpoint_flags(&mut cfg, args)?;
     apply_balance_flags(&mut cfg, args)?;
     apply_trace_flags(&mut cfg, args)?;
     cfg.validate().map_err(anyhow::Error::msg)?;
     Ok(cfg)
+}
+
+/// Map `--kernel scalar|blocked|xla` onto `compute.kernel` — the
+/// `NeuronKernel` backend executing the activity update. Execution
+/// strategy, not dynamics: all three are bit-identical (DESIGN.md §12),
+/// so the flag is free to vary between a checkpoint and its resume.
+fn apply_kernel_flag(cfg: &mut SimConfig, args: &Args) -> Result<()> {
+    if let Some(kernel) = args.get("kernel") {
+        cfg.apply_kv("compute.kernel", kernel).map_err(anyhow::Error::msg)?;
+    }
+    Ok(())
 }
 
 /// Map `--comm thread|socket` onto `topology.comm` — the communication
@@ -293,6 +319,7 @@ fn cmd_resume(args: &Args) -> Result<()> {
     if args.get_bool("xla") {
         cfg.backend = Backend::Xla;
     }
+    apply_kernel_flag(&mut cfg, args)?;
     apply_checkpoint_flags(&mut cfg, args)?;
     apply_balance_flags(&mut cfg, args)?;
     apply_trace_flags(&mut cfg, args)?;
@@ -393,7 +420,8 @@ fn cmd_compare(args: &Args) -> Result<()> {
 
 fn cmd_bench(args: &Args) -> Result<()> {
     let preset_name = args.get("preset").unwrap_or("quick");
-    let (spec, mut settings) = ilmi::bench::preset(preset_name).map_err(anyhow::Error::msg)?;
+    let (mut spec, mut settings) =
+        ilmi::bench::preset(preset_name).map_err(anyhow::Error::msg)?;
     if let Some(v) = args.get_parse::<usize>("steps").map_err(anyhow::Error::msg)? {
         settings.steps = v;
     }
@@ -405,6 +433,18 @@ fn cmd_bench(args: &Args) -> Result<()> {
     }
     if let Some(v) = args.get_parse::<u64>("seed").map_err(anyhow::Error::msg)? {
         settings.seed = v;
+    }
+    if let Some(kernel) = args.get("kernel") {
+        let kind = ilmi::config::KernelKind::from_name(kernel)
+            .ok_or_else(|| anyhow!("--kernel expects scalar or blocked, got {kernel:?}"))?;
+        if kind == ilmi::config::KernelKind::Xla {
+            bail!(
+                "bench --kernel xla is not supported: bench cells run without an XLA \
+                 executor handle, so the xla kernel would silently fall back to scalar \
+                 and mislabel every cell (use scalar or blocked)"
+            );
+        }
+        spec.kernels = vec![kind];
     }
     let name = args.get("name").unwrap_or(preset_name).to_string();
     let out = args

@@ -46,6 +46,12 @@ pub struct RankReport {
     /// Neuron migrations applied on this rank's segment (0 when load
     /// balancing is off).
     pub migrations: u64,
+    /// Cache blocks covered by this segment's activity updates
+    /// (`neuron::blocks_per_step` summed over steps). Deterministic
+    /// work metric, counted by the driver — identical across kernel
+    /// backends by construction, which is exactly what the bench
+    /// harness drift-checks (BENCH schema v6).
+    pub kernel_blocks: u64,
     pub mean_calcium: f64,
     /// Optional calcium trace: (step, per-local-neuron calcium).
     pub calcium_trace: Vec<(usize, Vec<f32>)>,
@@ -116,6 +122,7 @@ impl RankReport {
         put_u64(&mut out, self.local_edges);
         put_u64(&mut out, self.remote_partners);
         put_u64(&mut out, self.migrations);
+        put_u64(&mut out, self.kernel_blocks);
         put_f64(&mut out, self.mean_calcium);
         put_u32(&mut out, self.calcium_trace.len() as u32);
         for (step, row) in &self.calcium_trace {
@@ -179,6 +186,7 @@ impl RankReport {
         r.local_edges = c.u64("local_edges")?;
         r.remote_partners = c.u64("remote_partners")?;
         r.migrations = c.u64("migrations")?;
+        r.kernel_blocks = c.u64("kernel_blocks")?;
         r.mean_calcium = c.f64("mean_calcium")?;
         let n_ca = c.u32("calcium_trace count")? as usize;
         r.calcium_trace = Vec::with_capacity(n_ca);
@@ -311,6 +319,13 @@ impl SimReport {
         self.ranks.iter().map(|r| r.migrations).sum()
     }
 
+    /// Total activity-update cache blocks across ranks (this process
+    /// segment; see `RankReport::kernel_blocks`). BENCH schema v6's
+    /// drift-checked `kernel_blocks` field.
+    pub fn total_kernel_blocks(&self) -> u64 {
+        self.ranks.iter().map(|r| r.kernel_blocks).sum()
+    }
+
     /// Deterministic count of Chrome trace events the report's samples
     /// export (`trace::event_count`): what BENCH schema v5
     /// drift-checks as `trace_events`. 0 when tracing is off.
@@ -368,7 +383,7 @@ impl SimReport {
         );
         out.push_str(
             ",bytes_sent,bytes_rma,msgs,synapses_out,mean_ca,spike_lookups,spike_state_bytes,\
-             plan_rebuilds,neurons,local_edges,remote_partners,migrations\n",
+             plan_rebuilds,neurons,local_edges,remote_partners,migrations,kernel_blocks\n",
         );
         for r in &self.ranks {
             out.push_str(&format!("{},", r.rank));
@@ -376,7 +391,7 @@ impl SimReport {
                 &r.phase_seconds.iter().map(|s| format!("{s:.6}")).collect::<Vec<_>>().join(","),
             );
             out.push_str(&format!(
-                ",{},{},{},{},{:.4},{},{},{},{},{},{},{}\n",
+                ",{},{},{},{},{:.4},{},{},{},{},{},{},{},{}\n",
                 r.comm.bytes_sent,
                 r.comm.bytes_rma,
                 r.comm.msgs_sent,
@@ -389,6 +404,7 @@ impl SimReport {
                 r.local_edges,
                 r.remote_partners,
                 r.migrations,
+                r.kernel_blocks,
             ));
         }
         out
@@ -462,6 +478,7 @@ mod tests {
             local_edges: 120,
             remote_partners: 5,
             migrations: 2,
+            kernel_blocks: 60,
             ..Default::default()
         };
         let sim =
@@ -486,6 +503,15 @@ mod tests {
         assert_eq!(rows[1][col("local_edges")], "120");
         assert_eq!(rows[1][col("remote_partners")], "5");
         assert_eq!(rows[1][col("migrations")], "2");
+        assert_eq!(rows[1][col("kernel_blocks")], "60");
+    }
+
+    #[test]
+    fn kernel_blocks_aggregate_as_sum() {
+        let a = RankReport { kernel_blocks: 60, ..Default::default() };
+        let b = RankReport { kernel_blocks: 60, ..Default::default() };
+        let sim = SimReport { ranks: vec![a, b], wall_seconds: 0.0 };
+        assert_eq!(sim.total_kernel_blocks(), 120);
     }
 
     #[test]
@@ -501,6 +527,7 @@ mod tests {
             local_edges: 78,
             remote_partners: 5,
             migrations: 1,
+            kernel_blocks: 17,
             mean_calcium: 0.625,
             calcium_trace: vec![(50, vec![0.5, 0.75]), (100, vec![])],
             ..Default::default()

@@ -1,0 +1,432 @@
+//! Kernel execution layer: pluggable backends for the fused activity
+//! update (Izhikevich/Poisson + calcium + element growth).
+//!
+//! The kernel boundary is noise-in / `{v,u,ca,z_*,fired,epoch_spikes}`-
+//! out on the population's SoA arrays. Three backends implement it:
+//!
+//! * [`ScalarKernel`] — the straight-line loops in `izhikevich.rs` /
+//!   `poisson.rs`, retained untouched as the reference oracle.
+//! * [`BlockedKernel`] — walks the population in [`BLOCK_WIDTH`]-wide
+//!   chunks with branchless spike/reset selects. The update is
+//!   elementwise, so lane order (and with it every result bit) matches
+//!   the scalar loop; the blocked form exists so the compiler can keep
+//!   a block's eight SoA stripes resident in L1 and autovectorize.
+//! * [`XlaKernel`] — the AOT/PJRT path moved behind the trait. It owns
+//!   persistent staging buffers (`NeuronInputs` + `NeuronOutputs`) and
+//!   a reply channel, ping-ponging the boxed buffers through the
+//!   service thread — no per-step heap allocation: the buffers are
+//!   created once and refilled in place every step.
+//!
+//! Backend choice is pure execution strategy — every kernel produces
+//! bit-identical trajectories (pinned by `tests/integration_kernels.rs`
+//! and the unit tests below), so `compute.kernel` never enters the
+//! snapshot config fingerprint.
+
+use std::sync::mpsc;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::izhikevich;
+use super::params::NeuronParams;
+use super::poisson::{self, PoissonParams};
+use super::population::Population;
+use crate::config::{Backend, KernelKind, NeuronModel, SimConfig};
+use crate::runtime::{NeuronInputs, NeuronOutputs, StagedReply, XlaHandle};
+use crate::util::Rng;
+
+/// Neurons per cache block. Eight f32 SoA stripes × 64 lanes = 2 KiB of
+/// hot state per block — comfortably inside L1 alongside the parameter
+/// constants, and a multiple of every SIMD width the compiler targets.
+pub const BLOCK_WIDTH: usize = 64;
+
+/// Deterministic work metric: blocks one activity step covers for a
+/// population of `n`. Counted by the driver (not the kernels), so it is
+/// kernel-independent by construction — the bench harness drift-checks
+/// it across reps and backends.
+pub fn blocks_per_step(n: usize) -> u64 {
+    n.div_ceil(BLOCK_WIDTH) as u64
+}
+
+/// One fused activity update over the whole population. Reads
+/// `i_syn`/`noise`, writes `v`, `u`, `ca`, `z_*`, `fired`,
+/// `epoch_spikes`. `rng` is the model RNG (consumed only by the
+/// Poisson model, one draw per neuron in index order).
+pub trait NeuronKernel: Send {
+    /// Stable backend name (reporting/debug).
+    fn name(&self) -> &'static str;
+    /// Execute one step.
+    fn step(&mut self, pop: &mut Population, cfg: &SimConfig, rng: &mut Rng) -> Result<()>;
+}
+
+/// Build the kernel for a config. The effective kind is `cfg.kernel`,
+/// except that the pre-kernel-layer combination `backend = xla` with the
+/// default `kernel = scalar` still selects the XLA path (back-compat:
+/// that pair meant "run the artifact" before `compute.kernel` existed).
+///
+/// Two silent-downgrade hazards are resolved here rather than at call
+/// sites: the Poisson model never routes to the XLA kernel (the artifact
+/// implements Izhikevich only — running it would silently execute the
+/// wrong dynamics), and an XLA request without a live handle falls back
+/// to the scalar oracle (the historical `(Backend::Xla, None)`
+/// behavior). `SimConfig::validate` rejects the Poisson and socket
+/// combinations up front; this is the defense in depth behind it.
+pub fn make_kernel(cfg: &SimConfig, xla: Option<&XlaHandle>) -> Box<dyn NeuronKernel> {
+    let kind = match cfg.kernel {
+        KernelKind::Scalar if cfg.backend == Backend::Xla => KernelKind::Xla,
+        k => k,
+    };
+    match kind {
+        KernelKind::Scalar => Box::new(ScalarKernel),
+        KernelKind::Blocked => Box::new(BlockedKernel),
+        KernelKind::Xla => match xla {
+            Some(h) if cfg.neuron_model == NeuronModel::Izhikevich => {
+                Box::new(XlaKernel::new(h.clone()))
+            }
+            _ => Box::new(ScalarKernel),
+        },
+    }
+}
+
+/// Reference backend: the scalar loops, verbatim.
+pub struct ScalarKernel;
+
+impl NeuronKernel for ScalarKernel {
+    fn name(&self) -> &'static str {
+        "scalar"
+    }
+
+    fn step(&mut self, pop: &mut Population, cfg: &SimConfig, rng: &mut Rng) -> Result<()> {
+        match cfg.neuron_model {
+            NeuronModel::Izhikevich => izhikevich::step(pop, &cfg.neuron),
+            NeuronModel::Poisson => {
+                poisson::step(pop, &cfg.neuron, &PoissonParams::default(), rng)
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Cache-blocked backend: fixed-width chunks, branchless selects.
+pub struct BlockedKernel;
+
+/// One Izhikevich block `[lo, hi)`, mirroring `izhikevich::step`
+/// op-for-op in f32 (same expressions, same order — no algebraic
+/// rewrites), with the spike/reset branches written as selects and the
+/// epoch counter as a branchless add. Both forms compute identical
+/// values; the blocked shape is what lets the compiler vectorize.
+fn izhikevich_block(pop: &mut Population, p: &NeuronParams, lo: usize, hi: usize) {
+    use super::params::growth_curve;
+    for i in lo..hi {
+        let i_total = pop.i_syn[i] * p.i_scale + pop.noise[i];
+
+        let v = pop.v[i];
+        let u = pop.u[i];
+        let v_new = v + p.dt * (0.04 * v * v + 5.0 * v + 140.0 - u + i_total);
+        let u_new = u + p.dt * p.a * (p.b * v - u);
+
+        let fired = v_new >= p.v_spike;
+        pop.v[i] = if fired { p.c } else { v_new };
+        pop.u[i] = if fired { u_new + p.d } else { u_new };
+        pop.fired[i] = fired;
+        pop.epoch_spikes[i] += fired as u32;
+
+        let spike = if fired { 1.0f32 } else { 0.0 };
+        let ca = pop.ca[i] - p.dt * pop.ca[i] / p.tau_ca + p.beta_ca * spike;
+        pop.ca[i] = ca;
+
+        let g_ax = growth_curve(ca, p.nu_growth, p.eta_ax, p.eps_target_ca);
+        let g_den = growth_curve(ca, p.nu_growth, p.eta_den, p.eps_target_ca);
+        pop.z_ax[i] = (pop.z_ax[i] + g_ax).max(0.0);
+        pop.z_den_exc[i] = (pop.z_den_exc[i] + g_den).max(0.0);
+        pop.z_den_inh[i] = (pop.z_den_inh[i] + g_den).max(0.0);
+    }
+}
+
+/// One Poisson block `[lo, hi)`, mirroring `poisson::step` op-for-op —
+/// including exactly one `rng.next_f32()` per neuron in index order, so
+/// the model RNG stream stays aligned with the scalar loop.
+fn poisson_block(
+    pop: &mut Population,
+    p: &NeuronParams,
+    pp: &PoissonParams,
+    rng: &mut Rng,
+    lo: usize,
+    hi: usize,
+) {
+    use super::params::growth_curve;
+    for i in lo..hi {
+        let i_total = pop.i_syn[i] * p.i_scale + pop.noise[i];
+        let v = pop.v[i] + (i_total - pop.v[i]) / pp.tau_v;
+        pop.v[i] = v;
+
+        let rate = pp.rate_max / (1.0 + (-(pp.beta * (v - pp.v_half))).exp());
+        let fired = rng.next_f32() < rate;
+        pop.fired[i] = fired;
+        pop.epoch_spikes[i] += fired as u32;
+
+        let spike = if fired { 1.0f32 } else { 0.0 };
+        let ca = pop.ca[i] - p.dt * pop.ca[i] / p.tau_ca + p.beta_ca * spike;
+        pop.ca[i] = ca;
+
+        let g_ax = growth_curve(ca, p.nu_growth, p.eta_ax, p.eps_target_ca);
+        let g_den = growth_curve(ca, p.nu_growth, p.eta_den, p.eps_target_ca);
+        pop.z_ax[i] = (pop.z_ax[i] + g_ax).max(0.0);
+        pop.z_den_exc[i] = (pop.z_den_exc[i] + g_den).max(0.0);
+        pop.z_den_inh[i] = (pop.z_den_inh[i] + g_den).max(0.0);
+    }
+}
+
+impl NeuronKernel for BlockedKernel {
+    fn name(&self) -> &'static str {
+        "blocked"
+    }
+
+    fn step(&mut self, pop: &mut Population, cfg: &SimConfig, rng: &mut Rng) -> Result<()> {
+        let n = pop.len();
+        let mut lo = 0;
+        while lo < n {
+            let hi = (lo + BLOCK_WIDTH).min(n);
+            match cfg.neuron_model {
+                NeuronModel::Izhikevich => izhikevich_block(pop, &cfg.neuron, lo, hi),
+                NeuronModel::Poisson => {
+                    poisson_block(pop, &cfg.neuron, &PoissonParams::default(), rng, lo, hi)
+                }
+            }
+            lo = hi;
+        }
+        Ok(())
+    }
+}
+
+/// XLA/PJRT backend with persistent staging. The two boxed buffers are
+/// allocated once at construction and ping-pong through the service
+/// thread every step: stage (clear + extend in place), send both boxes,
+/// receive them back with the outputs refilled, unstage
+/// (`copy_from_slice` into the SoA arrays). The reply channel is also
+/// created once; cloning its `Sender` per send is a refcount bump, not
+/// an allocation.
+pub struct XlaKernel {
+    handle: XlaHandle,
+    /// `Some` between steps; taken while a request is in flight.
+    bufs: Option<(Box<NeuronInputs>, Box<NeuronOutputs>)>,
+    reply_tx: mpsc::Sender<StagedReply>,
+    reply_rx: mpsc::Receiver<StagedReply>,
+}
+
+impl XlaKernel {
+    pub fn new(handle: XlaHandle) -> Self {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let inputs = Box::new(NeuronInputs {
+            v: Vec::new(),
+            u: Vec::new(),
+            ca: Vec::new(),
+            z_ax: Vec::new(),
+            z_de: Vec::new(),
+            z_di: Vec::new(),
+            i_syn: Vec::new(),
+            noise: Vec::new(),
+            params: [0.0; crate::neuron::params::NUM_PARAMS],
+        });
+        let outputs = Box::new(NeuronOutputs {
+            v: Vec::new(),
+            u: Vec::new(),
+            ca: Vec::new(),
+            z_ax: Vec::new(),
+            z_de: Vec::new(),
+            z_di: Vec::new(),
+            fired: Vec::new(),
+        });
+        XlaKernel { handle, bufs: Some((inputs, outputs)), reply_tx, reply_rx }
+    }
+}
+
+/// Refill `dst` from `src` without releasing its capacity.
+fn restage(dst: &mut Vec<f32>, src: &[f32]) {
+    dst.clear();
+    dst.extend_from_slice(src);
+}
+
+impl NeuronKernel for XlaKernel {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn step(&mut self, pop: &mut Population, cfg: &SimConfig, _rng: &mut Rng) -> Result<()> {
+        if cfg.neuron_model != NeuronModel::Izhikevich {
+            bail!("the XLA kernel implements the Izhikevich model only");
+        }
+        let (mut inputs, outputs) =
+            self.bufs.take().ok_or_else(|| anyhow!("XLA staging buffers lost to a prior error"))?;
+        restage(&mut inputs.v, &pop.v);
+        restage(&mut inputs.u, &pop.u);
+        restage(&mut inputs.ca, &pop.ca);
+        restage(&mut inputs.z_ax, &pop.z_ax);
+        restage(&mut inputs.z_de, &pop.z_den_exc);
+        restage(&mut inputs.z_di, &pop.z_den_inh);
+        restage(&mut inputs.i_syn, &pop.i_syn);
+        restage(&mut inputs.noise, &pop.noise);
+        inputs.params = cfg.neuron.to_vec();
+
+        self.handle.neuron_update_staged(inputs, outputs, self.reply_tx.clone())?;
+        let (inputs, outputs) = self
+            .reply_rx
+            .recv()
+            .map_err(|_| anyhow!("XLA service dropped the staged reply"))??;
+
+        pop.v.copy_from_slice(&outputs.v);
+        pop.u.copy_from_slice(&outputs.u);
+        pop.ca.copy_from_slice(&outputs.ca);
+        pop.z_ax.copy_from_slice(&outputs.z_ax);
+        pop.z_den_exc.copy_from_slice(&outputs.z_de);
+        pop.z_den_inh.copy_from_slice(&outputs.z_di);
+        for (i, &f) in outputs.fired.iter().enumerate() {
+            let fired = f > 0.5;
+            pop.fired[i] = fired;
+            if fired {
+                pop.epoch_spikes[i] += 1;
+            }
+        }
+        self.bufs = Some((inputs, outputs));
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::spawn_mock_service;
+    use crate::util::Vec3;
+
+    fn make_pop(n: usize, model: NeuronModel) -> (Population, SimConfig) {
+        let cfg =
+            SimConfig { neurons_per_rank: n, neuron_model: model, ..SimConfig::default() };
+        let mut rng = Rng::new(11);
+        let pop = Population::init(&cfg, 0, Vec3::ZERO, Vec3::splat(100.0), &mut rng);
+        (pop, cfg)
+    }
+
+    fn bits(xs: &[f32]) -> Vec<u32> {
+        xs.iter().map(|x| x.to_bits()).collect()
+    }
+
+    fn assert_pops_bit_identical(a: &Population, b: &Population, tag: &str) {
+        assert_eq!(bits(&a.v), bits(&b.v), "{tag}: v");
+        assert_eq!(bits(&a.u), bits(&b.u), "{tag}: u");
+        assert_eq!(bits(&a.ca), bits(&b.ca), "{tag}: ca");
+        assert_eq!(bits(&a.z_ax), bits(&b.z_ax), "{tag}: z_ax");
+        assert_eq!(bits(&a.z_den_exc), bits(&b.z_den_exc), "{tag}: z_den_exc");
+        assert_eq!(bits(&a.z_den_inh), bits(&b.z_den_inh), "{tag}: z_den_inh");
+        assert_eq!(a.fired, b.fired, "{tag}: fired");
+        assert_eq!(a.epoch_spikes, b.epoch_spikes, "{tag}: epoch_spikes");
+    }
+
+    /// Drive two kernels over the same noise/input schedule and demand
+    /// bit-identical state. 100 neurons exercises a partial tail block.
+    fn assert_kernels_match(
+        model: NeuronModel,
+        mut a: Box<dyn NeuronKernel>,
+        mut b: Box<dyn NeuronKernel>,
+        tag: &str,
+    ) {
+        let (mut pa, cfg) = make_pop(100, model);
+        let mut pb = pa.clone();
+        let mut rng_a = Rng::new(42);
+        let mut rng_b = Rng::new(42);
+        for step in 0..200 {
+            pa.draw_noise(&cfg, &mut rng_a);
+            pb.draw_noise(&cfg, &mut rng_b);
+            // A crude synaptic drive so the spike/reset selects and the
+            // growth clamp all see both sides of their branch.
+            for i in 0..pa.len() {
+                let s = ((i + step) % 7) as f32;
+                pa.i_syn[i] = s;
+                pb.i_syn[i] = s;
+            }
+            a.step(&mut pa, &cfg, &mut rng_a).unwrap();
+            b.step(&mut pb, &cfg, &mut rng_b).unwrap();
+        }
+        assert!(pa.epoch_spikes.iter().any(|&s| s > 0), "{tag}: nothing fired");
+        assert_pops_bit_identical(&pa, &pb, tag);
+        assert_eq!(rng_a.state(), rng_b.state(), "{tag}: rng streams diverged");
+    }
+
+    #[test]
+    fn blocked_matches_scalar_izhikevich() {
+        assert_kernels_match(
+            NeuronModel::Izhikevich,
+            Box::new(ScalarKernel),
+            Box::new(BlockedKernel),
+            "izhikevich",
+        );
+    }
+
+    #[test]
+    fn blocked_matches_scalar_poisson() {
+        assert_kernels_match(
+            NeuronModel::Poisson,
+            Box::new(ScalarKernel),
+            Box::new(BlockedKernel),
+            "poisson",
+        );
+    }
+
+    #[test]
+    fn xla_staged_matches_scalar_via_mock_service() {
+        let handle = spawn_mock_service();
+        assert_kernels_match(
+            NeuronModel::Izhikevich,
+            Box::new(ScalarKernel),
+            Box::new(XlaKernel::new(handle.clone())),
+            "xla-mock",
+        );
+        handle.shutdown();
+    }
+
+    #[test]
+    fn block_math() {
+        assert_eq!(blocks_per_step(0), 0);
+        assert_eq!(blocks_per_step(1), 1);
+        assert_eq!(blocks_per_step(64), 1);
+        assert_eq!(blocks_per_step(65), 2);
+        assert_eq!(blocks_per_step(16), 1);
+    }
+
+    #[test]
+    fn dispatch_honors_config_and_never_routes_poisson_to_xla() {
+        let cfg = SimConfig::default();
+        assert_eq!(make_kernel(&cfg, None).name(), "scalar");
+
+        let blocked = SimConfig { kernel: KernelKind::Blocked, ..SimConfig::default() };
+        assert_eq!(make_kernel(&blocked, None).name(), "blocked");
+
+        let handle = spawn_mock_service();
+        // Explicit kernel=xla and the pre-kernel-layer backend=xla
+        // spelling both select the staged path...
+        let explicit = SimConfig { kernel: KernelKind::Xla, ..SimConfig::default() };
+        assert_eq!(make_kernel(&explicit, Some(&handle)).name(), "xla");
+        let legacy = SimConfig { backend: Backend::Xla, ..SimConfig::default() };
+        assert_eq!(make_kernel(&legacy, Some(&handle)).name(), "xla");
+        // ...but never for the Poisson model (the artifact computes
+        // Izhikevich dynamics — the satellite-a regression).
+        let poisson = SimConfig {
+            backend: Backend::Xla,
+            neuron_model: NeuronModel::Poisson,
+            ..SimConfig::default()
+        };
+        assert_eq!(make_kernel(&poisson, Some(&handle)).name(), "scalar");
+        // And without a live handle the request degrades to the oracle.
+        assert_eq!(make_kernel(&explicit, None).name(), "scalar");
+        handle.shutdown();
+    }
+
+    #[test]
+    fn xla_kernel_rejects_poisson_defensively() {
+        let handle = spawn_mock_service();
+        let mut k = XlaKernel::new(handle.clone());
+        let (mut pop, cfg) = make_pop(8, NeuronModel::Poisson);
+        let mut rng = Rng::new(1);
+        let err = k.step(&mut pop, &cfg, &mut rng).unwrap_err();
+        assert!(format!("{err:#}").contains("Izhikevich"), "{err:#}");
+        handle.shutdown();
+    }
+}

@@ -2,9 +2,11 @@
 //! state-update implementation mirroring the L1 Pallas kernel.
 
 pub mod izhikevich;
+pub mod kernel;
 pub mod params;
 pub mod poisson;
 pub mod population;
 
+pub use kernel::{blocks_per_step, make_kernel, NeuronKernel, BLOCK_WIDTH};
 pub use params::NeuronParams;
 pub use population::{GlobalNeuronId, Population};

@@ -101,6 +101,27 @@ impl NeuronParams {
         p[PARAM_ISCALE] = self.i_scale;
         p
     }
+
+    /// Inverse of [`to_vec`](Self::to_vec): unpack the (16,) wire/AOT
+    /// vector back into the struct. `from_vec(p.to_vec()) == p` for all
+    /// parameters (spare slots carry no information).
+    pub fn from_vec(p: &[f32; NUM_PARAMS]) -> NeuronParams {
+        NeuronParams {
+            a: p[PARAM_A],
+            b: p[PARAM_B],
+            c: p[PARAM_C],
+            d: p[PARAM_D],
+            dt: p[PARAM_DT],
+            tau_ca: p[PARAM_TAU_CA],
+            beta_ca: p[PARAM_BETA_CA],
+            nu_growth: p[PARAM_NU],
+            eps_target_ca: p[PARAM_EPS],
+            eta_ax: p[PARAM_ETA_AX],
+            eta_den: p[PARAM_ETA_DEN],
+            v_spike: p[PARAM_VSPIKE],
+            i_scale: p[PARAM_ISCALE],
+        }
+    }
 }
 
 /// Butz & van Ooyen (2013) Gaussian growth curve, mirroring
@@ -127,6 +148,12 @@ mod tests {
         assert_eq!(p[PARAM_VSPIKE], 30.0);
         assert_eq!(p[13], 0.0); // spare slots stay zero
         assert_eq!(p.len(), NUM_PARAMS);
+    }
+
+    #[test]
+    fn pack_unpack_is_identity() {
+        let p = NeuronParams { a: 0.03, tau_ca: 512.0, ..NeuronParams::default() };
+        assert_eq!(NeuronParams::from_vec(&p.to_vec()), p);
     }
 
     #[test]

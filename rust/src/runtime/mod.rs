@@ -20,7 +20,7 @@ mod service;
 // Swap this alias for `use xla;` once the real bindings are available.
 use pjrt_stub as xla;
 
-pub use service::{spawn_service, NeuronInputs, XlaHandle};
+pub use service::{spawn_mock_service, spawn_service, NeuronInputs, StagedReply, XlaHandle};
 
 use std::collections::BTreeMap;
 use std::path::Path;

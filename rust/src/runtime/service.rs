@@ -9,10 +9,20 @@ use anyhow::{anyhow, Result};
 use super::{NeuronOutputs, XlaRuntime};
 use crate::neuron::params::NUM_PARAMS;
 
+/// Reply payload of the staged neuron-update path: both staging boxes
+/// travel back to the caller with the outputs refilled in place, so the
+/// same two allocations ping-pong between kernel and service forever.
+pub type StagedReply = Result<(Box<NeuronInputs>, Box<NeuronOutputs>)>;
+
 enum Request {
     NeuronUpdate {
         inputs: Box<NeuronInputs>,
         reply: mpsc::Sender<Result<NeuronOutputs>>,
+    },
+    NeuronUpdateStaged {
+        inputs: Box<NeuronInputs>,
+        outputs: Box<NeuronOutputs>,
+        reply: mpsc::Sender<StagedReply>,
     },
     GaussProbs {
         src_pos: [f32; 3],
@@ -57,6 +67,24 @@ impl XlaHandle {
             .send(Request::NeuronUpdate { inputs: Box::new(inputs), reply })
             .map_err(|_| anyhow!("XLA service is gone"))?;
         rx.recv().map_err(|_| anyhow!("XLA service dropped the reply"))?
+    }
+
+    /// Staged variant of [`neuron_update`](Self::neuron_update): the
+    /// caller owns both staging boxes and a persistent reply channel;
+    /// the service refills `outputs` in place (capacity preserved) and
+    /// ships both boxes back through `reply` — no staging memory is
+    /// allocated on either side after the first step.
+    pub fn neuron_update_staged(
+        &self,
+        inputs: Box<NeuronInputs>,
+        outputs: Box<NeuronOutputs>,
+        reply: mpsc::Sender<StagedReply>,
+    ) -> Result<()> {
+        self.tx
+            .lock()
+            .unwrap()
+            .send(Request::NeuronUpdateStaged { inputs, outputs, reply })
+            .map_err(|_| anyhow!("XLA service is gone"))
     }
 
     /// Execute one Gaussian probability row on the service thread.
@@ -125,6 +153,17 @@ pub fn spawn_service(dir: &str) -> Result<XlaHandle> {
                         );
                         let _ = reply.send(out);
                     }
+                    Request::NeuronUpdateStaged { inputs, mut outputs, reply } => {
+                        let i = &*inputs;
+                        let res = runtime.neuron_update(
+                            &i.v, &i.u, &i.ca, &i.z_ax, &i.z_de, &i.z_di, &i.i_syn,
+                            &i.noise, &i.params,
+                        );
+                        let _ = reply.send(res.map(|out| {
+                            fill_outputs(&mut outputs, &out);
+                            (inputs, outputs)
+                        }));
+                    }
                     Request::GaussProbs { src_pos, sigma, tx, ty, tz, vac, reply } => {
                         let _ =
                             reply.send(runtime.gauss_probs(src_pos, sigma, &tx, &ty, &tz, &vac));
@@ -139,4 +178,89 @@ pub fn spawn_service(dir: &str) -> Result<XlaHandle> {
         .expect("spawning xla-service thread");
     ready_rx.recv().map_err(|_| anyhow!("XLA service died during startup"))??;
     Ok(XlaHandle { tx: Arc::new(Mutex::new(tx)) })
+}
+
+/// Refill the staged output box from a freshly computed result without
+/// releasing its capacity (keeps the caller's buffers stable).
+fn fill_outputs(dst: &mut NeuronOutputs, src: &NeuronOutputs) {
+    fn refill(d: &mut Vec<f32>, s: &[f32]) {
+        d.clear();
+        d.extend_from_slice(s);
+    }
+    refill(&mut dst.v, &src.v);
+    refill(&mut dst.u, &src.u);
+    refill(&mut dst.ca, &src.ca);
+    refill(&mut dst.z_ax, &src.z_ax);
+    refill(&mut dst.z_de, &src.z_de);
+    refill(&mut dst.z_di, &src.z_di);
+    refill(&mut dst.fired, &src.fired);
+}
+
+/// Spawn a service thread that answers neuron-update requests with the
+/// native `izhikevich::step` oracle instead of a PJRT runtime — the
+/// stubbed XLA backend for tests and differential harnesses on machines
+/// without compiled artifacts. Bit-identical to the scalar kernel by
+/// construction (it IS the scalar kernel behind the service protocol).
+/// `gauss_probs` replies an error; `neuron_batches` replies empty.
+pub fn spawn_mock_service() -> XlaHandle {
+    use crate::neuron::{izhikevich, NeuronParams, Population};
+    use crate::util::Vec3;
+
+    /// Run the native oracle over one staged input set.
+    fn mock_update(i: &NeuronInputs) -> NeuronOutputs {
+        let n = i.v.len();
+        let mut pop = Population {
+            first_id: 0,
+            positions: vec![Vec3::ZERO; n],
+            is_excitatory: vec![true; n],
+            v: i.v.clone(),
+            u: i.u.clone(),
+            ca: i.ca.clone(),
+            z_ax: i.z_ax.clone(),
+            z_den_exc: i.z_de.clone(),
+            z_den_inh: i.z_di.clone(),
+            i_syn: i.i_syn.clone(),
+            noise: i.noise.clone(),
+            fired: vec![false; n],
+            epoch_spikes: vec![0; n],
+        };
+        izhikevich::step(&mut pop, &NeuronParams::from_vec(&i.params));
+        NeuronOutputs {
+            v: pop.v,
+            u: pop.u,
+            ca: pop.ca,
+            z_ax: pop.z_ax,
+            z_de: pop.z_den_exc,
+            z_di: pop.z_den_inh,
+            fired: pop.fired.iter().map(|&f| if f { 1.0 } else { 0.0 }).collect(),
+        }
+    }
+
+    let (tx, rx) = mpsc::channel::<Request>();
+    std::thread::Builder::new()
+        .name("xla-mock-service".into())
+        .spawn(move || {
+            while let Ok(req) = rx.recv() {
+                match req {
+                    Request::NeuronUpdate { inputs, reply } => {
+                        let _ = reply.send(Ok(mock_update(&inputs)));
+                    }
+                    Request::NeuronUpdateStaged { inputs, mut outputs, reply } => {
+                        let out = mock_update(&inputs);
+                        fill_outputs(&mut outputs, &out);
+                        let _ = reply.send(Ok((inputs, outputs)));
+                    }
+                    Request::GaussProbs { reply, .. } => {
+                        let _ = reply
+                            .send(Err(anyhow!("mock XLA service: gauss_probs is not stubbed")));
+                    }
+                    Request::Batches { reply } => {
+                        let _ = reply.send(Vec::new());
+                    }
+                    Request::Shutdown => break,
+                }
+            }
+        })
+        .expect("spawning xla-mock-service thread");
+    XlaHandle { tx: Arc::new(Mutex::new(tx)) }
 }

@@ -1064,6 +1064,15 @@ mod tests {
         instr.trace_out = "trace.json".into();
         assert_eq!(f0, config_fingerprint(&instr), "instrumentation must not affect it");
 
+        // The neuron-kernel backend is execution strategy, not dynamics
+        // (all kernels are bit-identical), so a snapshot taken under one
+        // kernel must resume under another without --branch.
+        let mut kern = base.clone();
+        kern.kernel = crate::config::KernelKind::Blocked;
+        assert_eq!(f0, config_fingerprint(&kern), "kernel must not affect fingerprint");
+        kern.kernel = crate::config::KernelKind::Xla;
+        assert_eq!(f0, config_fingerprint(&kern), "kernel must not affect fingerprint");
+
         let mut seed = base.clone();
         seed.seed += 1;
         assert_ne!(f0, config_fingerprint(&seed));

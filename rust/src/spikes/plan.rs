@@ -41,6 +41,13 @@ use crate::plasticity::SynapseStore;
 
 use super::spike_weight;
 
+/// Edges per delivery chunk: 1024 × 8 B = 8 KiB of planned edges per
+/// chunk — a quarter of a typical 32 KiB L1d, leaving room for the
+/// `fired`/slot-state stripes the edges index into. Chunking changes
+/// neither the edge order nor the single-accumulator sum, so delivery
+/// stays bit-identical to the unchunked loop (see `deliver`).
+pub const EDGE_BLOCK: usize = 1024;
+
 /// One compiled in-edge: a pre-resolved index (local source index for
 /// local edges, remote-source *slot* for remote ones) and the signed
 /// synaptic weight (+1.0 excitatory, −1.0 inhibitory). 8 B, so a
@@ -163,6 +170,13 @@ impl DeliveryPlan {
     /// per remote edge, in exactly the naive loop's remote-edge order.
     /// Returns the number of remote look-ups performed (the paper's
     /// Fig. 5 quantity, identical to the naive loop's count).
+    ///
+    /// Both edge walks run in [`EDGE_BLOCK`]-sized chunks (ROADMAP
+    /// item 2: cache-block the delivery hot loop). A neuron's input is
+    /// still one left-to-right accumulation into a single `acc`, so the
+    /// f32 addition sequence — and therefore every result bit — is
+    /// identical to the unchunked loop; the chunking only bounds the
+    /// working set the prefetcher has to track per iteration.
     pub fn deliver(
         &self,
         pop: &mut Population,
@@ -176,14 +190,18 @@ impl DeliveryPlan {
             let mid = self.remote_starts[local] as usize;
             let hi = self.offsets[local + 1] as usize;
             let mut acc = 0.0f32;
-            for e in &self.edges[lo..mid] {
-                if pop.fired[e.idx as usize] {
-                    acc += e.weight;
+            for chunk in self.edges[lo..mid].chunks(EDGE_BLOCK) {
+                for e in chunk {
+                    if pop.fired[e.idx as usize] {
+                        acc += e.weight;
+                    }
                 }
             }
-            for e in &self.edges[mid..hi] {
-                if remote_spiked(e.idx as usize) {
-                    acc += e.weight;
+            for chunk in self.edges[mid..hi].chunks(EDGE_BLOCK) {
+                for e in chunk {
+                    if remote_spiked(e.idx as usize) {
+                        acc += e.weight;
+                    }
                 }
             }
             pop.i_syn[local] = acc;

@@ -23,7 +23,7 @@ use std::time::{Duration, Instant};
 use ilmi::bench::{AlgGen, Regime, RunSettings, Scenario};
 use ilmi::comm::proc::{self, Entry, LaunchSpec};
 use ilmi::comm::{decode_frame, run_ranks, socket_ranks, Comm, CounterSnapshot, SocketComm};
-use ilmi::config::{CommBackend, SimConfig};
+use ilmi::config::{CommBackend, KernelKind, SimConfig};
 use ilmi::coordinator::{run_simulation, RankState, SOCKET_ENTRIES};
 use ilmi::metrics::RankReport;
 use ilmi::testing::comm_props::{check_all_to_all_routes, check_rma_oob_fails_cleanly};
@@ -53,7 +53,7 @@ fn deterministic_bytes(mut r: RankReport) -> Vec<u8> {
 fn rank_digest(cfg: &SimConfig, comm: &impl Comm) -> Digest {
     let mut state = RankState::init(cfg, comm);
     for step in 0..cfg.steps {
-        state.step(cfg, comm, step, None).expect("step failed");
+        state.step(cfg, comm, step).expect("step failed");
     }
     // The capture embeds FormationStats, whose nanos are wall-clock;
     // zero them on the live state so the section bytes are pure state.
@@ -87,6 +87,7 @@ fn smoke_scenario(alg: AlgGen) -> Scenario {
         delta: 30,
         regime: Regime::Active,
         skew: false,
+        kernel: KernelKind::Scalar,
     }
 }
 
@@ -120,6 +121,7 @@ fn balanced_skewed_run_is_bit_identical_across_backends() {
         delta: 50,
         regime: Regime::Active,
         skew: true,
+        kernel: KernelKind::Scalar,
     }
     .config(&settings);
     assert_backends_agree(&cfg, "skewed balance run");

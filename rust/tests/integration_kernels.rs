@@ -1,0 +1,234 @@
+//! Cross-kernel differential suite: the scalar, cache-blocked, and
+//! staged-XLA `NeuronKernel` backends must be interchangeable execution
+//! strategies (DESIGN.md §12).
+//!
+//! The same seeded configuration is run once per kernel over the thread
+//! transport, and everything except wall-clock timing must be
+//! bit-identical per rank: the ILMISNAP capture bytes (the full
+//! dynamics state, RNG streams included), the deterministic fields of
+//! the encoded `RankReport`, and every rank's `CounterSnapshot`. The
+//! XLA column runs against the mock executor service (the native oracle
+//! behind the staged service protocol), so the staging/unstaging path —
+//! not the floating-point math — is what the comparison exercises.
+//!
+//! Coverage: both spike algorithms, both neuron models (Poisson is
+//! scalar/blocked only — config validation pins the XLA exclusion), a
+//! skewed load-balancing run (population sizes change mid-run under
+//! migration), and checkpoint/resume legs that *switch kernels* at the
+//! boundary — the kernel is excluded from the dynamics fingerprint, so
+//! a snapshot taken under one backend must resume bit-exactly under
+//! another.
+
+use ilmi::bench::{AlgGen, Regime, RunSettings, Scenario};
+use ilmi::comm::{run_ranks, Comm, CounterSnapshot};
+use ilmi::config::{KernelKind, NeuronModel, SimConfig};
+use ilmi::coordinator::{resume_simulation, resume_simulation_with_xla, run_simulation, RankState};
+use ilmi::metrics::{RankReport, SimReport};
+use ilmi::neuron::make_kernel;
+use ilmi::runtime::{spawn_mock_service, XlaHandle};
+use ilmi::snapshot::{snapshot_file_name, Snapshot};
+
+// -- differential harness ------------------------------------------------
+
+/// Everything one rank produces that must be kernel-independent.
+type Digest = (Vec<u8>, Vec<u8>, Vec<CounterSnapshot>);
+
+/// Encode a report with its wall-clock-derived fields zeroed; all
+/// remaining bytes are functions of the seeded trajectory alone.
+fn deterministic_bytes(mut r: RankReport) -> Vec<u8> {
+    r.phase_seconds = Default::default();
+    r.formation.compute_nanos = 0;
+    r.formation.exchange_nanos = 0;
+    for s in &mut r.trace {
+        s.ts_micros = 0.0;
+        s.phase_seconds = Default::default();
+        s.cost.nanos = 0;
+    }
+    r.encode()
+}
+
+/// The per-rank simulation body: install the kernel under test, run
+/// every step, then capture the ILMISNAP section, the quiesced per-rank
+/// counter snapshots, and the deterministic report bytes.
+fn rank_digest(cfg: &SimConfig, comm: &impl Comm, xla: Option<&XlaHandle>) -> Digest {
+    let mut state = RankState::init(cfg, comm);
+    state.kernel = make_kernel(cfg, xla);
+    for step in 0..cfg.steps {
+        state.step(cfg, comm, step).expect("step failed");
+    }
+    state.formation.compute_nanos = 0;
+    state.formation.exchange_nanos = 0;
+    let section = state.capture(comm);
+    comm.barrier(); // quiesce: every rank's counters are final
+    let all = comm.all_counters();
+    (section, deterministic_bytes(state.into_report(comm)), all)
+}
+
+/// Run `cfg` once per kernel column and pin every digest against the
+/// scalar oracle's. `with_xla` additionally runs the staged path
+/// against the mock executor service (Izhikevich only).
+fn assert_kernels_agree(cfg: &SimConfig, with_xla: bool, label: &str) {
+    let digest_for = |kernel: KernelKind, xla: Option<XlaHandle>| -> Vec<Digest> {
+        let mut c = cfg.clone();
+        c.kernel = kernel;
+        c.validate().expect("kernel config must validate");
+        run_ranks(c.ranks, |comm| rank_digest(&c, &comm, xla.as_ref()))
+    };
+    let scalar = digest_for(KernelKind::Scalar, None);
+    let mut columns = vec![("blocked", digest_for(KernelKind::Blocked, None))];
+    if with_xla {
+        let handle = spawn_mock_service();
+        columns.push(("xla", digest_for(KernelKind::Xla, Some(handle.clone()))));
+        handle.shutdown();
+    }
+    for (name, column) in columns {
+        for (rank, (s, k)) in scalar.iter().zip(&column).enumerate() {
+            assert_eq!(
+                s.0, k.0,
+                "{label}/{name}: rank {rank} ILMISNAP section bytes differ"
+            );
+            assert_eq!(s.1, k.1, "{label}/{name}: rank {rank} report bytes differ");
+            assert_eq!(s.2, k.2, "{label}/{name}: rank {rank} counter snapshots differ");
+        }
+    }
+}
+
+fn smoke_settings() -> RunSettings {
+    RunSettings { steps: 60, plasticity_interval: 30, warmup: 0, reps: 1, seed: 42 }
+}
+
+fn smoke_cfg(alg: AlgGen) -> SimConfig {
+    Scenario {
+        alg,
+        ranks: 2,
+        neurons_per_rank: 16,
+        delta: 30,
+        regime: Regime::Active,
+        skew: false,
+        kernel: KernelKind::Scalar,
+    }
+    .config(&smoke_settings())
+}
+
+// -- kernel equivalence, straight runs -----------------------------------
+
+#[test]
+fn izhikevich_kernels_are_bit_identical_new_algorithms() {
+    let mut cfg = smoke_cfg(AlgGen::New);
+    // Tracing on: epoch samples must be identical across kernels too.
+    cfg.trace_every = 30;
+    cfg.trace_capacity = 8;
+    assert_kernels_agree(&cfg, true, "new/izhikevich");
+}
+
+#[test]
+fn izhikevich_kernels_are_bit_identical_old_algorithms() {
+    // The old generation's RMA downloads ride the same step loop; the
+    // kernel must not perturb the octree/spike-id paths either.
+    let cfg = smoke_cfg(AlgGen::Old);
+    assert_kernels_agree(&cfg, true, "old/izhikevich");
+}
+
+#[test]
+fn poisson_scalar_and_blocked_are_bit_identical() {
+    // Poisson draws exactly one uniform per neuron in index order; the
+    // blocked walk must preserve that RNG stream bit-for-bit. The XLA
+    // column is excluded by config validation (native-only model).
+    let mut cfg = smoke_cfg(AlgGen::New);
+    cfg.neuron_model = NeuronModel::Poisson;
+    assert_kernels_agree(&cfg, false, "new/poisson");
+
+    let mut xla = cfg.clone();
+    xla.kernel = KernelKind::Xla;
+    let err = xla.validate().expect_err("poisson + kernel=xla must be rejected");
+    assert!(err.contains("poisson"), "{err}");
+}
+
+#[test]
+fn skewed_balancing_run_is_kernel_independent() {
+    // Migration changes per-rank population sizes mid-run: block counts
+    // and tail handling shift under the blocked kernel, and the staged
+    // XLA buffers must follow the resizes.
+    let settings =
+        RunSettings { steps: 150, plasticity_interval: 50, warmup: 0, reps: 1, seed: 42 };
+    let cfg = Scenario {
+        alg: AlgGen::New,
+        ranks: 2,
+        neurons_per_rank: 32,
+        delta: 50,
+        regime: Regime::Active,
+        skew: true,
+        kernel: KernelKind::Scalar,
+    }
+    .config(&settings);
+    assert_kernels_agree(&cfg, true, "skewed balance run");
+}
+
+// -- checkpoint/resume across a kernel switch ----------------------------
+
+/// The deterministic per-rank fields a resumed run must reproduce
+/// against its straight-run twin. (Full report bytes are not comparable
+/// across a resume split: `kernel_blocks` counts the executed segment.)
+fn assert_reports_match(straight: &SimReport, resumed: &SimReport, tag: &str) {
+    assert_eq!(straight.ranks.len(), resumed.ranks.len());
+    for (s, r) in straight.ranks.iter().zip(&resumed.ranks) {
+        assert_eq!(s.synapses_out, r.synapses_out, "{tag}: synapses_out");
+        assert_eq!(s.synapses_in, r.synapses_in, "{tag}: synapses_in");
+        assert_eq!(
+            s.mean_calcium.to_bits(),
+            r.mean_calcium.to_bits(),
+            "{tag}: mean_calcium {} vs {}",
+            s.mean_calcium,
+            r.mean_calcium
+        );
+        assert_eq!(s.comm, r.comm, "{tag}: comm counters");
+        assert_eq!(s.spike_lookups, r.spike_lookups, "{tag}: spike_lookups");
+        assert_eq!(s.migrations, r.migrations, "{tag}: migrations");
+    }
+}
+
+#[test]
+fn resume_switches_kernels_bit_exactly() {
+    // Straight 150-step run under the scalar oracle.
+    let mut base = smoke_cfg(AlgGen::New);
+    base.steps = 150;
+    base.plasticity_interval = 50;
+    base.delta = 50;
+    let straight = run_simulation(&base).unwrap();
+
+    // Leg 1: first 75 steps under the BLOCKED kernel, checkpointing.
+    let dir = std::env::temp_dir().join(format!("ilmi_kernel_switch_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut first = base.clone();
+    first.kernel = KernelKind::Blocked;
+    first.steps = 75;
+    first.checkpoint_every = 75;
+    first.checkpoint_dir = dir.to_str().unwrap().to_string();
+    run_simulation(&first).unwrap();
+    let snap = Snapshot::read_file(dir.join(snapshot_file_name(75))).unwrap();
+    assert_eq!(snap.next_step(), 75);
+
+    // Leg 2a: resume under the SCALAR kernel. The kernel is excluded
+    // from the dynamics fingerprint, so no --branch is needed.
+    let resumed_scalar = resume_simulation(&base, &snap).unwrap();
+    assert_reports_match(&straight, &resumed_scalar, "blocked->scalar");
+
+    // Leg 2b: resume the same snapshot under the staged XLA kernel
+    // (mock executor service).
+    let mut xla_cfg = base.clone();
+    xla_cfg.kernel = KernelKind::Xla;
+    let handle = spawn_mock_service();
+    let resumed_xla =
+        resume_simulation_with_xla(&xla_cfg, &snap, Some(handle.clone())).unwrap();
+    handle.shutdown();
+    assert_reports_match(&straight, &resumed_xla, "blocked->xla");
+
+    // kernel_blocks is per-segment work, not resumed: the straight run
+    // counts all 150 steps, each leg-2 report only its own 75
+    // (ceil(16/64) = 1 block per rank per step).
+    assert_eq!(straight.total_kernel_blocks(), 150 * 2);
+    assert_eq!(resumed_scalar.total_kernel_blocks(), 75 * 2);
+    assert_eq!(resumed_xla.total_kernel_blocks(), 75 * 2);
+
+    std::fs::remove_dir_all(&dir).ok();
+}
