@@ -74,7 +74,7 @@ fn run_branch(
             cfg_rank.bg_std = 0.0;
         }
         for step in GROW_STEPS..GROW_STEPS + BRANCH_STEPS {
-            state.step(&cfg_rank, &comm, step, None).unwrap();
+            state.step(&cfg_rank, &comm, step).unwrap();
         }
         census(&state, rank, npr)
     })

@@ -1,0 +1,105 @@
+//! Chaos drill: kill a rank process mid-run AND corrupt the newest
+//! checkpoint, then watch the supervisor put the fleet back together —
+//! bit-identically (DESIGN.md §13, EXPERIMENTS.md §Fault tolerance).
+//!
+//! Protocol:
+//!   1. Run a 2-process socket fleet for 240 steps, checkpointing every
+//!      40 into a retention ring of 3, with no faults: the reference
+//!      trajectory. Record the final snapshot's bytes.
+//!   2. Wipe the checkpoint directory and rerun the SAME config with a
+//!      seeded fault plan: the step-160 checkpoint is written truncated
+//!      (it will fail its whole-file content checksum), and rank 1 is
+//!      killed at step 180 — after the corrupt checkpoint, before the next good one.
+//!   3. The supervisor reaps the dead fleet, scans the ring, rejects
+//!      the corrupt step-160 file, resumes everyone from step 120, and
+//!      the relaunched fleet — fault plan filtered to attempt 1, so the
+//!      kill does not re-fire — finishes the schedule.
+//!   4. Print the recovery ledger and assert the recovered final
+//!      snapshot is byte-for-byte identical to the reference: faults
+//!      cost wall time, never trajectory.
+//!
+//!     cargo run --release --example chaos
+
+use ilmi::config::{CommBackend, SimConfig};
+use ilmi::coordinator::run_simulation;
+use ilmi::snapshot::snapshot_file_name;
+
+fn base_config(dir: &std::path::Path) -> SimConfig {
+    let mut cfg = SimConfig {
+        ranks: 2,
+        neurons_per_rank: 16,
+        steps: 240,
+        plasticity_interval: 40,
+        delta: 40,
+        ..SimConfig::default()
+    };
+    cfg.comm_backend = CommBackend::Socket;
+    cfg.checkpoint_every = 40;
+    cfg.checkpoint_dir = dir.to_string_lossy().into_owned();
+    cfg.checkpoint_keep = 3;
+    cfg.max_recoveries = 3;
+    cfg
+}
+
+fn main() -> anyhow::Result<()> {
+    // Socket-backend rank processes re-exec this binary; the child hook
+    // must run before anything else.
+    ilmi::comm::proc::maybe_run_child(ilmi::coordinator::SOCKET_ENTRIES);
+
+    let dir = std::env::temp_dir().join(format!("ilmi_chaos_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir)?;
+    let cfg = base_config(&dir);
+    cfg.validate().map_err(anyhow::Error::msg)?;
+
+    println!(
+        "chaos: {} ranks x {} neurons, {} steps, checkpoint every {} (ring of {})",
+        cfg.ranks, cfg.neurons_per_rank, cfg.steps, cfg.checkpoint_every, cfg.checkpoint_keep
+    );
+    println!("\n-- reference run (no faults) --");
+    let clean = run_simulation(&cfg)?;
+    assert_eq!(clean.recoveries, 0);
+    let final_name = snapshot_file_name(cfg.steps as u64);
+    let reference = std::fs::read(dir.join(&final_name))?;
+    println!(
+        "reference finished: wall {:.2}s, final snapshot {} ({} bytes)",
+        clean.wall_seconds,
+        final_name,
+        reference.len()
+    );
+
+    // Same directory ⇒ the embedded config INI matches the reference
+    // run's, so the snapshot files are byte-comparable.
+    std::fs::remove_dir_all(&dir)?;
+    std::fs::create_dir_all(&dir)?;
+    let mut chaotic = cfg.clone();
+    chaotic.fault_plan = "ckpt_corrupt:step=160;kill:rank=1,step=180".to_string();
+
+    println!("\n-- chaos run: corrupt the step-160 checkpoint, kill rank 1 at step 180 --");
+    let report = run_simulation(&chaotic)?;
+    let recovered = std::fs::read(dir.join(&final_name))?;
+
+    println!("\n{:<22} {:>12}", "recovery ledger", "");
+    println!("{:<22} {:>12}", "recoveries", report.recoveries);
+    println!("{:<22} {:>12}", "lost steps (>=)", report.lost_steps);
+    println!("{:<22} {:>11.3}s", "recovery wall", report.recovery_seconds);
+    println!("{:<22} {:>11.2}s", "total wall", report.wall_seconds);
+    for r in &report.ranks {
+        println!("rank {}: {} recoveries carried in its report", r.rank, r.recoveries);
+    }
+
+    assert_eq!(report.recoveries, 1, "one supervised relaunch");
+    // The corrupt step-160 file was rejected, so the fleet resumed from
+    // step 120: the 40 steps between are the provable replay cost.
+    assert_eq!(report.lost_steps, 40, "evidence says steps 120..160 were replayed");
+    assert_eq!(
+        reference, recovered,
+        "recovered final snapshot must be byte-identical to the reference"
+    );
+    println!(
+        "\nchaos OK: killed + corrupted, recovered from the ring, and the final \
+         snapshot is byte-identical to the clean run."
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+    Ok(())
+}

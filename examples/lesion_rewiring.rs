@@ -70,7 +70,7 @@ fn main() -> anyhow::Result<()> {
 
         // Phase 1: grow to equilibrium.
         for step in 0..grow_steps {
-            state.step(&cfg_rank, &comm, step, None).unwrap();
+            state.step(&cfg_rank, &comm, step).unwrap();
         }
         let before = census(&state, rank, npr);
 
@@ -93,7 +93,7 @@ fn main() -> anyhow::Result<()> {
         // Phase 3: recovery.
         let mut mid = None;
         for step in grow_steps..grow_steps + post_lesion_steps {
-            state.step(&cfg_rank, &comm, step, None).unwrap();
+            state.step(&cfg_rank, &comm, step).unwrap();
             if step == grow_steps + 200 {
                 mid = Some(census(&state, rank, npr));
             }

@@ -59,7 +59,7 @@ fn main() -> anyhow::Result<()> {
         let costs: Vec<f64> = all.iter().map(|b| b[0].cost()).collect();
         rows.push((0usize, costs.clone(), imbalance(&costs), state.migrations));
         for step in 0..cfg.steps {
-            state.step(&cfg, &comm, step, None).unwrap();
+            state.step(&cfg, &comm, step).unwrap();
             if (step + 1) % cfg.balance_every == 0 {
                 // Collective probe (all ranks, same steps): the global
                 // cost vector right after this epoch's migration.

@@ -1,11 +1,11 @@
 //! The versioned `BENCH_*.json` report: emit, parse, markdown render,
 //! and baseline diffing.
 //!
-//! Schema (`schema_version` 6):
+//! Schema (`schema_version` 7):
 //!
 //! ```json
 //! {
-//!   "schema_version": 6,
+//!   "schema_version": 7,
 //!   "name": "quick",
 //!   "created_unix": 1753500000,
 //!   "fingerprint": "9f…16 hex digits…",
@@ -24,7 +24,8 @@
 //!     "spike_lookups": …,
 //!     "imbalance": …,
 //!     "trace_events": …,
-//!     "kernel_blocks": …
+//!     "kernel_blocks": …,
+//!     "recoveries": …
 //!   }, …]
 //! }
 //! ```
@@ -66,8 +67,13 @@ use super::stats::Summary;
 /// over ranks, `ceil(n/64)` per rank per step), which is
 /// kernel-independent by construction so a population-size or schedule
 /// change can never hide behind a kernel switch
-/// (EXPERIMENTS.md §Perf, opt 9).
-pub const SCHEMA_VERSION: u32 = 6;
+/// (EXPERIMENTS.md §Perf, opt 9); v7 added the drift-checked
+/// `recoveries` counter (supervised checkpoint-restart relaunches,
+/// `SimReport::recoveries`, DESIGN.md §13) — bench runs inject no
+/// faults, so the expected value is 0 and ANY nonzero value or drift
+/// means the launch path silently failed and recovered, which must
+/// surface as a behavior change, not vanish into timing noise.
+pub const SCHEMA_VERSION: u32 = 7;
 
 /// Timing differences below this many seconds are never regressions —
 /// the thread-rank substrate cannot resolve them reliably.
@@ -112,6 +118,12 @@ pub struct ScenarioResult {
     /// kernel axis can never silently change how much work a cell
     /// represents. Drift-checked like the communication counters.
     pub kernel_blocks: u64,
+    /// Supervised checkpoint-restart relaunches during the cell's reps
+    /// (`SimReport::recoveries`, DESIGN.md §13). Bench scenarios inject
+    /// no faults, so this is 0 in a healthy run; drift-checked so a
+    /// launch path that starts dying-and-recovering cannot pass as a
+    /// mere timing blip.
+    pub recoveries: u64,
 }
 
 /// One complete benchmark trajectory (a `BENCH_*.json` file in memory).
@@ -302,6 +314,7 @@ impl BenchReport {
                 ("spike_lookups", base.spike_lookups, cur.spike_lookups),
                 ("trace_events", base.trace_events, cur.trace_events),
                 ("kernel_blocks", base.kernel_blocks, cur.kernel_blocks),
+                ("recoveries", base.recoveries, cur.recoveries),
             ];
             for (field, b, c) in counter_fields {
                 if b != c {
@@ -444,6 +457,7 @@ fn scenario_to_json(r: &ScenarioResult) -> Json {
         ("imbalance", Json::Num(r.imbalance)),
         ("trace_events", Json::Num(r.trace_events as f64)),
         ("kernel_blocks", Json::Num(r.kernel_blocks as f64)),
+        ("recoveries", Json::Num(r.recoveries as f64)),
     ])
 }
 
@@ -496,6 +510,7 @@ fn scenario_from_json(v: &Json) -> Result<ScenarioResult, String> {
         imbalance: v.req("imbalance")?.as_f64()?,
         trace_events: v.req("trace_events")?.as_u64()?,
         kernel_blocks: v.req("kernel_blocks")?.as_u64()?,
+        recoveries: v.req("recoveries")?.as_u64()?,
     })
 }
 
@@ -539,6 +554,7 @@ mod tests {
             imbalance: 1.25,
             trace_events: 42,
             kernel_blocks: 400,
+            recoveries: 0,
         }
     }
 
@@ -592,17 +608,17 @@ mod tests {
     #[test]
     fn unsupported_schema_version_is_rejected() {
         let text = sample_report().to_json().replace(
-            "\"schema_version\": 6",
+            "\"schema_version\": 7",
             "\"schema_version\": 99",
         );
         let err = BenchReport::from_json(&text).unwrap_err();
         assert!(err.contains("schema version"), "{err}");
-        // The previous schema generation is refused too — a v5 baseline
-        // has no kernel axis or kernel_blocks to drift-check against,
-        // so cross-schema trajectories are not comparable.
+        // The previous schema generation is refused too — a v6 baseline
+        // has no recoveries counter to drift-check against, so
+        // cross-schema trajectories are not comparable.
         let text = sample_report().to_json().replace(
+            "\"schema_version\": 7",
             "\"schema_version\": 6",
-            "\"schema_version\": 5",
         );
         let err = BenchReport::from_json(&text).unwrap_err();
         assert!(err.contains("schema version"), "{err}");
@@ -758,6 +774,24 @@ mod tests {
         let broken = text.replace("\"kernel\": \"scalar\"", "\"kernel\": \"simd\"");
         let err = BenchReport::from_json(&broken).unwrap_err();
         assert!(err.contains("kernel"), "{err}");
+    }
+
+    #[test]
+    fn recovery_drift_is_flagged_and_v7_field_is_required() {
+        let base = sample_report();
+        let mut cur = sample_report();
+        // A launch path that silently died and recovered once: counter
+        // drift, regardless of how the timings look.
+        cur.results[0].recoveries = 1;
+        let diff = cur.diff(&base, 0.2).unwrap();
+        assert_eq!(diff.regressions(), 1);
+        assert!(diff.render().contains("COUNTER DRIFT recoveries"));
+        // The v7 schema requires the field on every scenario.
+        let text = base.to_json();
+        assert!(text.contains("\"recoveries\""));
+        let broken = text.replace("\"recoveries\"", "\"recoveries_gone\"");
+        let err = BenchReport::from_json(&broken).unwrap_err();
+        assert!(err.contains("recoveries"), "{err}");
     }
 
     #[test]

@@ -48,6 +48,7 @@ pub fn run_scenario_with_backend(
     let mut imbalance = 1.0f64;
     let mut trace_events = 0u64;
     let mut kernel_blocks = 0u64;
+    let mut recoveries = 0u64;
     for rep in 0..settings.reps.max(1) {
         let report = run_simulation(&cfg)?;
         for p in ALL_PHASES {
@@ -136,6 +137,21 @@ pub fn run_scenario_with_backend(
             );
         }
         kernel_blocks = blocks;
+        // Bench scenarios inject no faults, so supervised relaunches
+        // must not happen at all — a nonzero or drifting count means
+        // the launch path is dying and silently recovering, which is a
+        // behavior change the schema-v7 field pins, not timing noise.
+        let rec = report.recoveries;
+        if rep > 0 && rec != recoveries {
+            anyhow::bail!(
+                "recovery count drifted between repetitions of {} ({} then {}) — \
+                 the launch path is failing nondeterministically",
+                scenario.id(),
+                recoveries,
+                rec
+            );
+        }
+        recoveries = rec;
     }
     let mut phases = [Summary::default(); ALL_PHASES.len()];
     for p in ALL_PHASES {
@@ -152,6 +168,7 @@ pub fn run_scenario_with_backend(
         imbalance,
         trace_events,
         kernel_blocks,
+        recoveries,
     })
 }
 
@@ -249,6 +266,8 @@ mod tests {
         // x ceil(16/64) = 1 block per rank per step.
         assert_eq!(a.kernel_blocks, b.kernel_blocks);
         assert_eq!(a.kernel_blocks, 120);
+        // No faults injected, so no supervised relaunches.
+        assert_eq!(a.recoveries, 0);
     }
 
     #[test]

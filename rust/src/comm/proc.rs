@@ -25,7 +25,9 @@ use std::path::Path;
 use std::process::{Child, Command, Stdio};
 use std::time::{Duration, Instant};
 
-use super::socket_comm::{fresh_rendezvous_dir, read_frame, tags, write_frame, SocketComm};
+use super::socket_comm::{
+    fresh_rendezvous_dir, read_frame, tags, write_frame, RendezvousDirGuard, SocketComm,
+};
 use super::Comm;
 use crate::util::wire::{put_u32, Cursor};
 
@@ -54,6 +56,11 @@ pub struct LaunchSpec<'a> {
     /// Bounds the rendezvous, every peer read in the children, and
     /// (plus a reporting margin) the launch as a whole.
     pub timeout: Duration,
+    /// Extra environment variables set on every rank process — the
+    /// supervisor ships the attempt's fault plan (`ILMI_FAULT_PLAN`)
+    /// this way so faults arm only inside children, never in the
+    /// launching process.
+    pub env: &'a [(String, String)],
 }
 
 /// How long the launcher keeps draining the control socket after a
@@ -84,6 +91,9 @@ pub fn maybe_run_child(entries: &[(&str, Entry)]) {
     for key in [ENV_ENTRY, ENV_RANK, ENV_SIZE, ENV_DIR, ENV_TIMEOUT_MS] {
         std::env::remove_var(key);
     }
+    // Arm this rank's injected faults, if the launcher shipped a plan
+    // (consumes and removes ILMI_FAULT_PLAN; no-op otherwise).
+    crate::fault::arm_from_env(rank);
     std::process::exit(run_child(&entry_name, entries, rank, size, Path::new(&dir), timeout));
 }
 
@@ -159,9 +169,10 @@ pub fn run_entry(spec: &LaunchSpec) -> Result<Vec<Vec<u8>>, String> {
     }
     let exe = std::env::current_exe().map_err(|e| format!("current_exe: {e}"))?;
     let dir = fresh_rendezvous_dir("pc").map_err(|e| format!("rendezvous dir: {e}"))?;
-    let result = launch_in(&exe, &dir, spec);
-    let _ = std::fs::remove_dir_all(&dir);
-    result
+    // Drop guard: the rendezvous dir is removed on every exit path —
+    // success, error return, or a panic unwinding through this frame.
+    let guard = RendezvousDirGuard(dir);
+    launch_in(&exe, &guard.0, spec)
 }
 
 fn launch_in(exe: &Path, dir: &Path, spec: &LaunchSpec) -> Result<Vec<Vec<u8>>, String> {
@@ -181,6 +192,7 @@ fn launch_in(exe: &Path, dir: &Path, spec: &LaunchSpec) -> Result<Vec<Vec<u8>>, 
             .env(ENV_SIZE, spec.ranks.to_string())
             .env(ENV_DIR, dir.as_os_str())
             .env(ENV_TIMEOUT_MS, spec.timeout.as_millis().to_string())
+            .envs(spec.env.iter().map(|(k, v)| (k.as_str(), v.as_str())))
             .stdin(Stdio::null())
             .stdout(Stdio::null())
             .spawn();

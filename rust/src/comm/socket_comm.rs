@@ -35,6 +35,7 @@ use std::time::{Duration, Instant};
 
 use super::counters::{CommCounters, CounterSnapshot};
 use super::thread_comm::WindowKey;
+use crate::fault::FrameAction;
 use crate::util::wire::{put_u32, put_u64, put_u8, Cursor};
 
 /// Frame tags. One byte on the wire; grouped by channel.
@@ -171,7 +172,14 @@ pub struct SocketComm {
     rma_out: Vec<Option<UnixStream>>,
 }
 
-fn connect_retry(path: &Path, deadline: Instant) -> std::io::Result<UnixStream> {
+fn connect_retry(path: &Path, deadline: Instant, rank: usize) -> std::io::Result<UnixStream> {
+    // Capped exponential backoff with a deterministic, rank-derived
+    // jitter. After a supervised recovery the whole fleet re-executes
+    // and re-dials in near-lockstep; the jitter de-synchronizes the
+    // retry storm without introducing nondeterminism (same rank, same
+    // offset, every run).
+    let jitter = Duration::from_micros(((rank as u64).wrapping_mul(2_654_435_761) >> 16) % 8_000);
+    let mut backoff = Duration::from_millis(1);
     loop {
         match UnixStream::connect(path) {
             Ok(s) => return Ok(s),
@@ -181,7 +189,9 @@ fn connect_retry(path: &Path, deadline: Instant) -> std::io::Result<UnixStream> 
                     std::io::ErrorKind::NotFound | std::io::ErrorKind::ConnectionRefused
                 ) && Instant::now() < deadline =>
             {
-                std::thread::sleep(Duration::from_millis(2));
+                let remaining = deadline.saturating_duration_since(Instant::now());
+                std::thread::sleep((backoff + jitter).min(remaining));
+                backoff = (backoff * 2).min(Duration::from_millis(32));
             }
             Err(e) => {
                 return Err(std::io::Error::new(
@@ -223,6 +233,14 @@ fn serve_rma(stream: UnixStream, windows: Windows, counters: Arc<CommCounters>, 
                 format!("rank {my_rank}: unexpected frame tag {other} on RMA channel").into_bytes(),
             ),
         };
+        // Injected RMA stall: hold the reply back so the requester's
+        // read-timeout path (bounded waits, DESIGN.md §11) is exercised
+        // deterministically.
+        if rtag == tags::RMA_OK {
+            if let Some(millis) = crate::fault::on_rma_reply() {
+                std::thread::sleep(Duration::from_millis(millis));
+            }
+        }
         if write_frame(&stream, rtag, &reply).is_err() {
             return;
         }
@@ -299,7 +317,7 @@ impl SocketComm {
             }
             let path = dir.join(format!("r{peer}.sock"));
             for kind in [KIND_DATA, KIND_RMA] {
-                let stream = connect_retry(&path, deadline)?;
+                let stream = connect_retry(&path, deadline, rank)?;
                 let mut hello = Vec::with_capacity(5);
                 put_u32(&mut hello, rank as u32);
                 put_u8(&mut hello, kind);
@@ -381,6 +399,27 @@ impl SocketComm {
 
     fn send_data(&self, dst: usize, tag: u8, payload: &[u8], ctx: &str) {
         let stream = self.data_out[dst].as_ref().expect("no data channel to peer");
+        // Deterministic fault injection (a no-op unless a plan is armed
+        // in this process): the hook counts outbound data frames and
+        // can delay one or cut it off mid-frame.
+        match crate::fault::on_data_frame() {
+            FrameAction::Pass => {}
+            FrameAction::Delay { millis } => std::thread::sleep(Duration::from_millis(millis)),
+            FrameAction::Truncate { keep } => {
+                let frame = encode_frame(tag, payload);
+                let keep = (keep as usize).min(frame.len());
+                let mut partial: &UnixStream = stream;
+                let _ = partial.write_all(&frame[..keep]);
+                let _ = partial.flush();
+                let _ = stream.shutdown(std::net::Shutdown::Write);
+                self.poison_now();
+                panic!(
+                    "rank {}: fault injection truncated a frame to {keep} bytes during {ctx}; \
+                     communicator poisoned",
+                    self.rank
+                );
+            }
+        }
         if let Err(e) = write_frame(stream, tag, payload) {
             self.poison_now();
             panic!(
@@ -622,6 +661,19 @@ pub(crate) fn fresh_rendezvous_dir(label: &str) -> std::io::Result<PathBuf> {
     Ok(dir)
 }
 
+/// Removes the rendezvous directory when dropped, so every exit path —
+/// normal return, `?` error propagation, and panics unwinding through
+/// the owning frame (including `resume_unwind` re-raises) — cleans up.
+/// Leaked rendezvous dirs were exactly how repeated failure-path runs
+/// used to litter the temp dir.
+pub(crate) struct RendezvousDirGuard(pub PathBuf);
+
+impl Drop for RendezvousDirGuard {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.0);
+    }
+}
+
 /// Run `f` on `size` ranks, each with a `SocketComm`, hosted on threads
 /// of this process: the full socket transport (frames, UDS, RMA server
 /// threads) without the process launcher. The drop-in socket twin of
@@ -632,14 +684,16 @@ where
     R: Send,
     F: Fn(SocketComm) -> R + Send + Sync,
 {
-    let dir = fresh_rendezvous_dir("sr").expect("creating rendezvous dir");
+    // Drop guard, not a trailing remove: a rank panic re-raised by
+    // `resume_unwind` below used to skip cleanup and leak the dir.
+    let guard = RendezvousDirGuard(fresh_rendezvous_dir("sr").expect("creating rendezvous dir"));
+    let dir = &guard.0;
     let timeout = Duration::from_secs(30);
     let mut results: Vec<Option<R>> = (0..size).map(|_| None).collect();
     std::thread::scope(|scope| {
         let mut handles = Vec::with_capacity(size);
         for (rank, slot) in results.iter_mut().enumerate() {
             let f = &f;
-            let dir = &dir;
             handles.push(scope.spawn(move || {
                 let comm = SocketComm::connect(rank, size, dir, timeout)
                     .unwrap_or_else(|e| panic!("rank {rank}: socket rendezvous failed: {e}"));
@@ -656,7 +710,6 @@ where
             std::panic::resume_unwind(e);
         }
     });
-    let _ = std::fs::remove_dir_all(&dir);
     results.into_iter().map(|r| r.expect("rank produced no result")).collect()
 }
 

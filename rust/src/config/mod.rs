@@ -195,6 +195,11 @@ pub struct SimConfig {
     pub checkpoint_every: usize,
     /// Directory snapshots are written to (one file per checkpoint).
     pub checkpoint_dir: String,
+    /// Retention ring: keep only the newest K checkpoints in
+    /// `checkpoint_dir`, pruning older ones after each successful write
+    /// (0 = keep all). Gives the recovery scan a bounded set of
+    /// fallback candidates without unbounded disk growth.
+    pub checkpoint_keep: usize,
     /// Record an epoch-telemetry sample every this many steps (0 =
     /// off). Sample counts are seed-deterministic; see the `trace`
     /// module. The CLI defaults this to the plasticity interval when
@@ -225,6 +230,20 @@ pub struct SimConfig {
     /// neuron distribution — the scenario the balancer demonstrably
     /// irons out (EXPERIMENTS.md §Load balancing).
     pub balance_init_cells: String,
+
+    // -- fault tolerance (see the `fault` module, DESIGN.md §13) ---------
+    /// Deterministic fault-injection plan (`fault::FaultPlan` spec
+    /// grammar; `[faults] plan = ...` or repeated `--fault`). Empty =
+    /// no injection. Deliberately **never emitted** by [`to_ini`]: the
+    /// config embedded in snapshots describes the simulation, not the
+    /// failures injected around it, so a recovered faulted run ends
+    /// bit-identical to a clean one.
+    pub fault_plan: String,
+    /// Supervised socket runs: when a rank process dies, respawn the
+    /// fleet from the newest valid checkpoint up to this many times
+    /// (0 = fail fast, the historical behavior). Requires the socket
+    /// backend and `checkpoint_every > 0`.
+    pub max_recoveries: usize,
 }
 
 impl Default for SimConfig {
@@ -255,6 +274,7 @@ impl Default for SimConfig {
             artifacts_dir: "artifacts".to_string(),
             checkpoint_every: 0,
             checkpoint_dir: String::new(),
+            checkpoint_keep: 0,
             trace_every: 0,
             trace_capacity: 4096,
             trace_out: String::new(),
@@ -262,6 +282,8 @@ impl Default for SimConfig {
             balance_threshold: 1.2,
             balance_max_moves: 1,
             balance_init_cells: String::new(),
+            fault_plan: String::new(),
+            max_recoveries: 0,
         }
     }
 }
@@ -390,6 +412,9 @@ impl SimConfig {
                 self.checkpoint_every = value.parse().map_err(|_| bad(key))?
             }
             "instrumentation.checkpoint_dir" => self.checkpoint_dir = value.to_string(),
+            "instrumentation.checkpoint_keep" => {
+                self.checkpoint_keep = value.parse().map_err(|_| bad(key))?
+            }
             "instrumentation.trace_every" => {
                 self.trace_every = value.parse().map_err(|_| bad(key))?
             }
@@ -405,6 +430,10 @@ impl SimConfig {
                 self.balance_max_moves = value.parse().map_err(|_| bad(key))?
             }
             "balance.init_cells" => self.balance_init_cells = value.to_string(),
+            "faults.plan" => self.fault_plan = value.to_string(),
+            "recovery.max_recoveries" => {
+                self.max_recoveries = value.parse().map_err(|_| bad(key))?
+            }
             _ => return Err(format!("unknown config key: {key}")),
         }
         Ok(())
@@ -498,6 +527,9 @@ impl SimConfig {
         if !self.checkpoint_dir.is_empty() {
             out.push_str(&format!("checkpoint_dir = {}\n", self.checkpoint_dir));
         }
+        if self.checkpoint_keep > 0 {
+            out.push_str(&format!("checkpoint_keep = {}\n", self.checkpoint_keep));
+        }
         out.push_str(&format!(
             "trace_every = {}\ntrace_capacity = {}\n",
             self.trace_every, self.trace_capacity
@@ -521,6 +553,14 @@ impl SimConfig {
         // the key's existence.
         if self.kernel != KernelKind::Scalar {
             out.push_str(&format!("[compute]\nkernel = {}\n", self.kernel.name()));
+        }
+        // Emitted only when non-default, like the keys above. The fault
+        // plan (`faults.plan`) is deliberately NOT serialized at all:
+        // snapshots describe the simulation, not the failures injected
+        // around it, so a faulted run's snapshots stay byte-identical
+        // to a clean run's.
+        if self.max_recoveries > 0 {
+            out.push_str(&format!("[recovery]\nmax_recoveries = {}\n", self.max_recoveries));
         }
         out
     }
@@ -591,6 +631,14 @@ impl SimConfig {
                     .into(),
             );
         }
+        if self.checkpoint_keep > 0 && self.checkpoint_every == 0 {
+            return Err(
+                "instrumentation.checkpoint_keep (--checkpoint-keep) requires \
+                 instrumentation.checkpoint_every > 0: there is no checkpoint \
+                 ring to prune without checkpointing"
+                    .into(),
+            );
+        }
         if !self.trace_out.is_empty() && self.trace_every == 0 {
             return Err(
                 "instrumentation.trace_out (--trace-out) requires \
@@ -622,17 +670,10 @@ impl SimConfig {
             );
         }
         if self.comm_backend == CommBackend::Socket {
-            // Socket ranks are separate processes; snapshot deposit and
-            // the shared XLA executor handle both assume one address
-            // space. Keep the unsupported combinations loud.
-            if self.checkpoint_every > 0 {
-                return Err(
-                    "topology.comm=socket does not support checkpointing \
-                     (instrumentation.checkpoint_every must be 0): rank processes \
-                     cannot share the in-process checkpoint sink"
-                        .into(),
-                );
-            }
+            // Socket ranks are separate processes; the shared XLA
+            // executor handle assumes one address space. (Checkpointing
+            // works: rank processes assemble snapshots through part
+            // files in `checkpoint_dir` — see `snapshot::PartSink`.)
             if self.backend == Backend::Xla {
                 return Err(
                     "topology.comm=socket runs the native backend only \
@@ -683,6 +724,37 @@ impl SimConfig {
             }
             if self.balance_max_moves == 0 {
                 return Err("balance.max_moves must be >= 1 when balancing is on".into());
+            }
+        }
+        // Fault-injection and supervision knobs: a malformed plan (or
+        // one whose faults can never fire) must fail at validation, not
+        // silently "pass" a chaos test by injecting nothing.
+        let plan = crate::fault::FaultPlan::parse(&self.fault_plan)
+            .map_err(|e| format!("faults.plan (--fault): {e}"))?;
+        if !plan.is_empty() && self.comm_backend != CommBackend::Socket {
+            return Err(
+                "faults.plan (--fault) requires topology.comm=socket: faults are \
+                 armed inside rank processes (arming the shared thread-backend \
+                 process would leak injected state across runs)"
+                    .into(),
+            );
+        }
+        if self.max_recoveries > 0 {
+            if self.comm_backend != CommBackend::Socket {
+                return Err(
+                    "recovery.max_recoveries (--max-recoveries) requires \
+                     topology.comm=socket: only rank processes can be respawned \
+                     (thread-backend failures abort the whole process)"
+                        .into(),
+                );
+            }
+            if self.checkpoint_every == 0 {
+                return Err(
+                    "recovery.max_recoveries (--max-recoveries) requires \
+                     instrumentation.checkpoint_every > 0: recovery restarts \
+                     from the newest valid checkpoint"
+                        .into(),
+                );
             }
         }
         Ok(())
@@ -837,21 +909,58 @@ target_calcium = 0.6
     }
 
     #[test]
-    fn socket_backend_rejects_checkpointing_and_xla() {
+    fn socket_backend_allows_checkpointing_but_rejects_xla() {
+        // PR 9 lifted the socket+checkpoint restriction (rank processes
+        // assemble snapshots through part files); xla stays rejected.
         let mut cfg = SimConfig {
             comm_backend: CommBackend::Socket,
             checkpoint_every: 50,
             checkpoint_dir: "ckpts".to_string(),
             ..SimConfig::default()
         };
-        let err = cfg.validate().unwrap_err();
-        assert!(err.contains("socket"), "{err}");
-        cfg.checkpoint_every = 0;
-        cfg.checkpoint_dir = String::new();
         cfg.validate().unwrap();
         cfg.backend = Backend::Xla;
         let err = cfg.validate().unwrap_err();
         assert!(err.contains("socket"), "{err}");
+    }
+
+    #[test]
+    fn fault_and_recovery_knobs_validate() {
+        // A malformed plan fails loudly at validation.
+        let mut cfg = SimConfig { fault_plan: "explode:rank=0".to_string(), ..SimConfig::default() };
+        let err = cfg.validate().unwrap_err();
+        assert!(err.contains("faults.plan"), "{err}");
+        // Faults arm inside rank processes, so a plan needs the socket
+        // backend — checkpoint faults included.
+        cfg.fault_plan = "kill:rank=1,step=10".to_string();
+        let err = cfg.validate().unwrap_err();
+        assert!(err.contains("socket"), "{err}");
+        cfg.comm_backend = CommBackend::Socket;
+        cfg.validate().unwrap();
+        let thread = SimConfig { fault_plan: "ckpt_fail:step=10".to_string(), ..SimConfig::default() };
+        assert!(thread.validate().unwrap_err().contains("socket"));
+        // The plan is intentionally NOT serialized: faulted and clean
+        // runs embed byte-identical configs in their snapshots.
+        let ini = cfg.to_ini();
+        assert!(!ini.contains("[faults]") && !ini.contains("plan ="), "{ini}");
+        let mut clean = cfg.clone();
+        clean.fault_plan.clear();
+        assert_eq!(ini, clean.to_ini(), "fault plans must not change INI bytes");
+        // Supervision needs the socket backend and a checkpoint cadence.
+        let mut sup = SimConfig { max_recoveries: 2, ..SimConfig::default() };
+        assert!(sup.validate().unwrap_err().contains("socket"));
+        sup.comm_backend = CommBackend::Socket;
+        assert!(sup.validate().unwrap_err().contains("checkpoint_every"));
+        sup.checkpoint_every = 50;
+        sup.checkpoint_dir = "ckpts".to_string();
+        sup.validate().unwrap();
+        // And the supervision/retention knobs round-trip through INI.
+        sup.checkpoint_keep = 3;
+        let back = SimConfig::from_ini(&sup.to_ini()).unwrap();
+        assert_eq!(back, sup);
+        // checkpoint_keep without checkpointing is meaningless.
+        let keep = SimConfig { checkpoint_keep: 2, ..SimConfig::default() };
+        assert!(keep.validate().unwrap_err().contains("checkpoint_keep"));
     }
 
     #[test]
@@ -903,11 +1012,16 @@ target_calcium = 0.6
                 if rng.bernoulli(0.5) {
                     cfg.checkpoint_every = 1 + rng.next_below(1000);
                     cfg.checkpoint_dir = format!("ckpt_{}", rng.next_below(100));
+                    if rng.bernoulli(0.5) {
+                        cfg.checkpoint_keep = 1 + rng.next_below(8);
+                    }
                 }
-                // Socket excludes checkpointing (validate rejects the
-                // pair), so only flip the transport when unset.
-                if cfg.checkpoint_every == 0 && rng.bernoulli(0.5) {
+                if rng.bernoulli(0.5) {
                     cfg.comm_backend = CommBackend::Socket;
+                    // Supervision requires socket + checkpointing.
+                    if cfg.checkpoint_every > 0 && rng.bernoulli(0.5) {
+                        cfg.max_recoveries = 1 + rng.next_below(4);
+                    }
                 }
                 // The xla kernel excludes Poisson and socket (validate
                 // rejects both pairs); blocked is unconstrained.

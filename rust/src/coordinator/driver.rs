@@ -24,7 +24,7 @@ use crate::octree::{
 };
 use crate::plasticity::{run_deletion_phase, vacant, DeletionStats, InEdge, SynapseStore};
 use crate::runtime::XlaHandle;
-use crate::snapshot::{CheckpointSink, RankSection, Snapshot};
+use crate::snapshot::{CheckpointSink, RankSection, SectionSink, Snapshot};
 use crate::spikes::{DeliveryPlan, FrequencyExchange, IdExchange};
 use crate::trace::{Cumulative, Tracer};
 use crate::util::Rng;
@@ -109,6 +109,13 @@ pub struct RankState {
     /// Per-segment bookkeeping like `plan_rebuilds`: never snapshotted,
     /// drift-checked by the bench harness.
     pub kernel_blocks: u64,
+    /// Set when this segment was (re)started by the recovery supervisor:
+    /// the first trace sample taken afterwards carries the
+    /// `RECOVERY_EPOCH` boundary bit, marking the restart in Perfetto /
+    /// JSONL exports. Consumed by the first due sample; never
+    /// snapshotted (recovery is a property of the segment, not the
+    /// trajectory).
+    pub recovery_pending: bool,
 }
 
 impl RankState {
@@ -171,6 +178,7 @@ impl RankState {
             tracer: Tracer::from_config(cfg),
             kernel: make_kernel(cfg, None),
             kernel_blocks: 0,
+            recovery_pending: false,
         };
         state.rebuild_plan();
         let baseline = state.trace_cumulative(comm);
@@ -344,6 +352,7 @@ impl RankState {
             tracer: Tracer::from_config(cfg),
             kernel: make_kernel(cfg, None),
             kernel_blocks: 0,
+            recovery_pending: false,
         };
         // The plan is derived state: never read from the snapshot,
         // always recompiled from the restored store (and the slot
@@ -549,6 +558,10 @@ impl RankState {
             }
             if cfg.balance_every > 0 && (step + 1) % cfg.balance_every == 0 {
                 boundaries |= crate::trace::BALANCE_EPOCH;
+            }
+            if self.recovery_pending {
+                boundaries |= crate::trace::RECOVERY_EPOCH;
+                self.recovery_pending = false;
             }
             let now = self.trace_cumulative(comm);
             let cost = self.measure_cost();
@@ -827,6 +840,7 @@ impl RankState {
             remote_partners: self.plan.slot_count() as u64,
             migrations: self.migrations,
             kernel_blocks: self.kernel_blocks,
+            recoveries: 0,
             mean_calcium: self.pop.mean_calcium(),
             calcium_trace: self.calcium_trace,
             trace: self.tracer.into_samples(),
@@ -921,8 +935,9 @@ fn simulate_rank<C: Comm>(
     partition: Partition,
     comm: &C,
     preloaded: Option<RankSection>,
-    sink: Option<&CheckpointSink>,
+    sink: Option<&dyn SectionSink>,
     start_step: usize,
+    recovered: bool,
     xla: Option<&XlaHandle>,
 ) -> Result<RankReport> {
     let mut state = match preloaded {
@@ -935,7 +950,12 @@ fn simulate_rank<C: Comm>(
     // the staged path. Trajectories are kernel-independent, so this is
     // safe after restore too.
     state.kernel = make_kernel(cfg, xla);
+    state.recovery_pending = recovered;
     for step in start_step..cfg.steps {
+        // Injected-kill hook (no-op unless a fault plan is armed in
+        // this process): "kill rank R at step S" means R's process
+        // exits immediately before executing 0-based step S.
+        crate::fault::on_step(step as u64);
         state.step(cfg, comm, step)?;
         if let Some(sink) = sink {
             if (step + 1) % cfg.checkpoint_every == 0 {
@@ -966,13 +986,61 @@ pub const SIMULATE_ENTRY: &str = "simulate";
 pub const SOCKET_ENTRIES: &[(&str, crate::comm::proc::Entry)] =
     &[(SIMULATE_ENTRY, simulate_entry as crate::comm::proc::Entry)];
 
-/// Child-side body of one socket rank: parse the INI config the launcher
-/// shipped, build the (config-derived) partition, run `simulate_rank` on
-/// the process's `SocketComm`, and return the encoded `RankReport`.
+/// Encode the `simulate` entry's argument bytes: the child config INI,
+/// the supervision attempt number, and (for restarts) the checkpoint
+/// file every rank resumes from.
+#[cfg(unix)]
+fn encode_simulate_args(ini: &str, attempt: u32, resume: Option<&std::path::Path>) -> Vec<u8> {
+    use crate::util::wire::{put_u8, put_u32};
+    let mut out = Vec::with_capacity(16 + ini.len());
+    put_u32(&mut out, ini.len() as u32);
+    out.extend_from_slice(ini.as_bytes());
+    put_u32(&mut out, attempt);
+    match resume {
+        None => put_u8(&mut out, 0),
+        Some(path) => {
+            let s = path.to_str().expect("checkpoint paths are UTF-8");
+            put_u8(&mut out, 1);
+            put_u32(&mut out, s.len() as u32);
+            out.extend_from_slice(s.as_bytes());
+        }
+    }
+    out
+}
+
+#[cfg(unix)]
+fn decode_simulate_args(
+    args: &[u8],
+) -> Result<(SimConfig, u32, Option<std::path::PathBuf>), String> {
+    use crate::util::wire::Cursor;
+    let mut c = Cursor::new(args, "simulate entry args");
+    let ini_len = c.u32("ini length")? as usize;
+    let ini = std::str::from_utf8(c.bytes(ini_len, "config ini")?)
+        .map_err(|e| format!("entry config not UTF-8: {e}"))?
+        .to_string();
+    let cfg = SimConfig::from_ini(&ini)?;
+    let attempt = c.u32("attempt")?;
+    let resume = if c.u8("has resume path")? != 0 {
+        let n = c.u32("resume path length")? as usize;
+        let s = std::str::from_utf8(c.bytes(n, "resume path")?)
+            .map_err(|e| format!("resume path not UTF-8: {e}"))?;
+        Some(std::path::PathBuf::from(s))
+    } else {
+        None
+    };
+    c.finish("simulate entry args")?;
+    Ok((cfg, attempt, resume))
+}
+
+/// Child-side body of one socket rank: parse the config + attempt +
+/// optional resume checkpoint the launcher shipped, build (or restore)
+/// this rank's state, run `simulate_rank` on the process's `SocketComm`
+/// — with a [`PartSink`](crate::snapshot::PartSink) when checkpointing,
+/// so the fleet's sections assemble into ordinary snapshot files through
+/// the shared checkpoint dir — and return the encoded `RankReport`.
 #[cfg(unix)]
 fn simulate_entry(comm: &crate::comm::SocketComm, args: &[u8]) -> Result<Vec<u8>, String> {
-    let ini = std::str::from_utf8(args).map_err(|e| format!("entry args not UTF-8: {e}"))?;
-    let cfg = SimConfig::from_ini(ini)?;
+    let (cfg, attempt, resume) = decode_simulate_args(args)?;
     // Child-side guard (the launcher rewrites `comm` to thread before
     // shipping the INI, so `validate`'s socket+xla rejection no longer
     // fires here): a socket child has no XLA executor handle, and
@@ -984,10 +1052,69 @@ fn simulate_entry(comm: &crate::comm::SocketComm, args: &[u8]) -> Result<Vec<u8>
                 .to_string(),
         );
     }
-    let partition = Partition::from_config(&cfg)?;
-    let report =
-        simulate_rank(&cfg, partition, comm, None, None, 0, None).map_err(|e| format!("{e:#}"))?;
+    let (partition, preloaded, start_step) = match &resume {
+        None => (Partition::from_config(&cfg)?, None, 0),
+        Some(path) => {
+            // Every rank validates the full snapshot independently —
+            // cheap at these sizes, and it means a rank never starts
+            // from a checkpoint its peers would reject.
+            let snap = Snapshot::read_file(path)?;
+            snap.validate_for(&cfg)?;
+            let partition = snap.partition_for_resume();
+            partition
+                .validate(cfg.ranks, cfg.total_neurons() as u64)
+                .map_err(|e| format!("snapshot partition does not fit the config: {e}"))?;
+            let owners = partition.ownership();
+            let sec = load_validated_section(&cfg, &owners, &snap, comm.rank())?;
+            let start = snap.next_step();
+            (partition, Some(sec), start)
+        }
+    };
+    let sink = if cfg.checkpoint_every > 0 {
+        Some(crate::snapshot::PartSink::create(&cfg)?)
+    } else {
+        None
+    };
+    let report = simulate_rank(
+        &cfg,
+        partition,
+        comm,
+        preloaded,
+        sink.as_ref().map(|s| s as &dyn SectionSink),
+        start_step,
+        attempt > 0,
+        None,
+    )
+    .map_err(|e| format!("{e:#}"))?;
+    if let Some(sink) = &sink {
+        if let Some(e) = sink.first_error() {
+            return Err(format!("simulation finished but checkpointing failed: {e}"));
+        }
+    }
     Ok(report.encode())
+}
+
+/// Resume a socket-backend run from an on-disk checkpoint file: the
+/// supervisor ships the path to every rank process, which restores and
+/// continues bit-exactly (the socket twin of [`resume_simulation`],
+/// which takes an in-memory [`Snapshot`] — rank processes can't share
+/// one, so the file itself is the interchange).
+#[cfg(unix)]
+pub fn resume_simulation_socket(
+    cfg: &SimConfig,
+    snapshot_path: &std::path::Path,
+) -> Result<SimReport> {
+    cfg.validate().map_err(anyhow::Error::msg)?;
+    if cfg.comm_backend != crate::config::CommBackend::Socket {
+        bail!("resume_simulation_socket needs topology.comm = socket");
+    }
+    // Parent-side validation up front, for a good error message before
+    // any fleet is spawned (children re-validate independently).
+    let snap = Snapshot::read_file(snapshot_path).map_err(anyhow::Error::msg)?;
+    let mut child_cfg = cfg.clone();
+    child_cfg.comm_backend = crate::config::CommBackend::Thread;
+    snap.validate_for(&child_cfg).map_err(anyhow::Error::msg)?;
+    run_simulation_socket_from(cfg, Some(snapshot_path.to_path_buf()))
 }
 
 /// Orchestrate a socket-backend run: re-exec this binary once per rank
@@ -998,25 +1125,118 @@ fn simulate_entry(comm: &crate::comm::SocketComm, args: &[u8]) -> Result<Vec<u8>
 /// for THIS invocation, never part of the simulated dynamics.
 #[cfg(unix)]
 fn run_simulation_socket(cfg: &SimConfig) -> Result<SimReport> {
+    run_simulation_socket_from(cfg, None)
+}
+
+/// The supervised launch loop (DESIGN.md §13). Each iteration launches
+/// the full fleet; when the launch fails and `recovery.max_recoveries`
+/// allows another attempt, the supervisor backs off, scans
+/// `checkpoint_dir` for the newest *fully valid* snapshot (falling back
+/// past whatever a dying fleet left truncated), and relaunches every
+/// rank from it. `proc::run_entry` already guarantees no partial fleet
+/// survives a failed launch (kill + reap + rendezvous-dir removal), so
+/// iterations never overlap.
+#[cfg(unix)]
+fn run_simulation_socket_from(
+    cfg: &SimConfig,
+    mut resume_path: Option<std::path::PathBuf>,
+) -> Result<SimReport> {
+    // Children get the thread-backend per-rank body config. The fault
+    // plan is stripped (it travels per-attempt via ILMI_FAULT_PLAN, so
+    // the INI embedded in snapshots matches a clean run's bytes) and
+    // supervision is parent-only; checkpoint knobs stay — children
+    // write the part files that assemble into snapshots.
     let mut child_cfg = cfg.clone();
     child_cfg.comm_backend = crate::config::CommBackend::Thread;
+    child_cfg.fault_plan = String::new();
+    child_cfg.max_recoveries = 0;
     let ini = child_cfg.to_ini();
+    let plan = crate::fault::FaultPlan::parse(&cfg.fault_plan).map_err(anyhow::Error::msg)?;
     let wall = Instant::now();
-    let spec = crate::comm::proc::LaunchSpec {
-        entry: SIMULATE_ENTRY,
-        ranks: cfg.ranks,
-        args: ini.as_bytes(),
-        timeout: socket_launch_timeout(cfg),
-    };
-    let encoded = crate::comm::proc::run_entry(&spec).map_err(anyhow::Error::msg)?;
-    let mut ranks = Vec::with_capacity(encoded.len());
-    for (rank, bytes) in encoded.iter().enumerate() {
-        let report = RankReport::decode(bytes).map_err(|e| {
-            anyhow::Error::msg(format!("socket rank {rank} returned a malformed report: {e}"))
-        })?;
-        ranks.push(report);
+    let mut recoveries: u64 = 0;
+    let mut lost_steps: u64 = 0;
+    let mut recovery_seconds: f64 = 0.0;
+    loop {
+        let attempt = recoveries as u32;
+        let args = encode_simulate_args(&ini, attempt, resume_path.as_deref());
+        let attempt_plan = plan.for_attempt(attempt);
+        let mut env: Vec<(String, String)> = Vec::new();
+        if !attempt_plan.is_empty() {
+            env.push((crate::fault::ENV_FAULT_PLAN.to_string(), attempt_plan.to_spec()));
+        }
+        let spec = crate::comm::proc::LaunchSpec {
+            entry: SIMULATE_ENTRY,
+            ranks: cfg.ranks,
+            args: &args,
+            timeout: socket_launch_timeout(cfg),
+            env: &env,
+        };
+        let failure = match crate::comm::proc::run_entry(&spec) {
+            Ok(encoded) => {
+                let mut ranks = Vec::with_capacity(encoded.len());
+                for (rank, bytes) in encoded.iter().enumerate() {
+                    let mut report = RankReport::decode(bytes).map_err(|e| {
+                        anyhow::Error::msg(format!(
+                            "socket rank {rank} returned a malformed report: {e}"
+                        ))
+                    })?;
+                    report.recoveries = recoveries;
+                    ranks.push(report);
+                }
+                return Ok(SimReport {
+                    ranks,
+                    wall_seconds: wall.elapsed().as_secs_f64(),
+                    recoveries,
+                    lost_steps,
+                    recovery_seconds,
+                });
+            }
+            Err(e) => e,
+        };
+        if cfg.max_recoveries == 0 {
+            bail!("socket fleet failed (recovery disabled; set recovery.max_recoveries \
+                   and checkpointing to supervise): {failure}");
+        }
+        if recoveries >= cfg.max_recoveries as u64 {
+            bail!(
+                "socket fleet failed after {recoveries} recover{}: giving up \
+                 (recovery.max_recoveries = {}): {failure}",
+                if recoveries == 1 { "y" } else { "ies" },
+                cfg.max_recoveries
+            );
+        }
+        let t0 = Instant::now();
+        // Bounded exponential backoff: transient causes (fd pressure,
+        // load spikes) get breathing room; the cap keeps a doomed
+        // config from stalling for minutes before giving up.
+        let backoff = Duration::from_millis((100u64 << recoveries.min(5)).min(5_000));
+        std::thread::sleep(backoff);
+        let scan = match crate::snapshot::scan_for_recovery(&cfg.checkpoint_dir, &child_cfg) {
+            Ok(scan) => scan,
+            Err(scan_err) => bail!(
+                "socket fleet failed ({failure}) and no usable checkpoint to recover \
+                 from: {scan_err}"
+            ),
+        };
+        let resume_step = scan.snapshot.next_step() as u64;
+        // Evidence-based lower bound on replayed work: the fleet
+        // provably wrote (or started writing) a checkpoint at
+        // `newest_step_seen`, and this attempt restarts from
+        // `resume_step`. Steps executed after the newest checkpoint
+        // left no trace, so the true loss can only be larger.
+        lost_steps += scan.newest_step_seen.saturating_sub(resume_step);
+        recoveries += 1;
+        eprintln!(
+            "[recover] socket fleet failed ({failure}); attempt {recoveries}: resuming \
+             from {} (step {resume_step})",
+            scan.path.display()
+        );
+        for (path, reason) in &scan.skipped {
+            eprintln!("[recover]   skipped {}: {reason}", path.display());
+        }
+        resume_path = Some(scan.path);
+        recovery_seconds += t0.elapsed().as_secs_f64();
     }
-    Ok(SimReport { ranks, wall_seconds: wall.elapsed().as_secs_f64() })
 }
 
 /// Bound on the whole socket launch (rendezvous + every peer read). The
@@ -1037,7 +1257,11 @@ fn run_simulation_inner(
     cfg.validate().map_err(anyhow::Error::msg)?;
     if cfg.comm_backend == crate::config::CommBackend::Socket {
         if resume.is_some() || branch {
-            bail!("the socket backend does not support snapshot resume; use the thread backend");
+            bail!(
+                "the socket backend cannot resume from an in-memory snapshot (rank \
+                 processes cannot share it); use resume_simulation_socket with the \
+                 on-disk checkpoint file, or the thread backend"
+            );
         }
         if xla.is_some() {
             bail!("the socket backend does not support an XLA executor handle");
@@ -1101,7 +1325,16 @@ fn run_simulation_inner(
                 .take()
                 .expect("preloaded section consumed exactly once per rank")
         });
-        simulate_rank(cfg, partition.clone(), &comm, sec, sink.as_ref(), start_step, xla.as_ref())
+        simulate_rank(
+            cfg,
+            partition.clone(),
+            &comm,
+            sec,
+            sink.as_ref().map(|s| s as &dyn SectionSink),
+            start_step,
+            false,
+            xla.as_ref(),
+        )
     });
     let mut ranks = Vec::with_capacity(results.len());
     for r in results {
@@ -1112,7 +1345,13 @@ fn run_simulation_inner(
             bail!("simulation finished but checkpointing failed: {e}");
         }
     }
-    Ok(SimReport { ranks, wall_seconds: wall.elapsed().as_secs_f64() })
+    Ok(SimReport {
+        ranks,
+        wall_seconds: wall.elapsed().as_secs_f64(),
+        recoveries: 0,
+        lost_steps: 0,
+        recovery_seconds: 0.0,
+    })
 }
 
 #[cfg(test)]

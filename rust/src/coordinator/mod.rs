@@ -8,4 +8,4 @@ pub use driver::{
     run_simulation, run_simulation_with_xla, RankState,
 };
 #[cfg(unix)]
-pub use driver::{SIMULATE_ENTRY, SOCKET_ENTRIES};
+pub use driver::{resume_simulation_socket, SIMULATE_ENTRY, SOCKET_ENTRIES};

@@ -1,0 +1,426 @@
+//! Deterministic fault injection (DESIGN.md §13).
+//!
+//! A [`FaultPlan`] is a small, seeded-run-friendly description of
+//! *exactly* which failures to inject and when: kill a named rank at a
+//! named step, truncate or delay the nth outbound socket frame, stall
+//! an RMA reply, or fail/corrupt a checkpoint write. Because every
+//! trigger is keyed on deterministic counters (step index, per-process
+//! frame ordinal) and never on wall clock, an injected run is exactly
+//! reproducible — the property the recovery differential tests lean on.
+//!
+//! The plan travels two ways:
+//!
+//! * configuration: the `[faults] plan = ...` INI key or repeated
+//!   `--fault` CLI flags populate `SimConfig::fault_plan`. The key is
+//!   deliberately **never re-emitted** by `SimConfig::to_ini`, so the
+//!   config INI embedded in snapshots (and therefore the snapshot
+//!   bytes) of a faulted run is identical to a clean run's — which is
+//!   what makes "recovered run ends bit-identical to the uninterrupted
+//!   run" a meaningful invariant.
+//! * process environment: the supervisor filters the plan down to the
+//!   current launch attempt ([`FaultPlan::for_attempt`]) and ships it
+//!   to rank processes via [`ENV_FAULT_PLAN`]; `proc::maybe_run_child`
+//!   arms it process-globally before the communicator connects.
+//!
+//! Hooks are zero-cost when nothing is armed: each one is a single
+//! `OnceLock::get()` returning `None` on the hot path.
+//!
+//! Spec grammar (`;`-separated faults, `,`-separated fields):
+//!
+//! ```text
+//! kill:rank=1,step=120            # exit(KILL_EXIT_CODE) before step 120
+//! frame_truncate:rank=1,nth=3,keep=2   # cut rank 1's 3rd data frame to 2 bytes
+//! frame_delay:rank=0,nth=5,ms=40  # sleep 40ms before rank 0's 5th data frame
+//! rma_stall:rank=0,nth=2,ms=40    # sleep 40ms before rank 0's 2nd RMA reply
+//! ckpt_fail:step=100              # error the checkpoint write for next_step 100
+//! ckpt_corrupt:step=100           # write that checkpoint truncated (invalid)
+//! ```
+//!
+//! Every fault takes an optional `attempt=K` field (default 0): it only
+//! fires on supervision attempt K, so an injected kill does not re-fire
+//! after the supervisor respawns the fleet.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
+
+/// Environment variable carrying an attempt-filtered plan spec to rank
+/// processes (consumed and removed by `proc::maybe_run_child`).
+pub const ENV_FAULT_PLAN: &str = "ILMI_FAULT_PLAN";
+
+/// Exit code used by an injected kill; distinctive so launcher
+/// diagnostics ("exited with code 86 before reporting") read as an
+/// injected fault, not an organic crash.
+pub const KILL_EXIT_CODE: i32 = 86;
+
+/// One injectable failure. `rank`-keyed faults act inside that rank's
+/// process; checkpoint faults are keyed by the checkpoint's `next_step`
+/// alone and fire in whichever process performs the write (under the
+/// socket backend the assembling rank is a benign race — the *effect*,
+/// a missing or invalid `step_N` snapshot, is deterministic).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Fault {
+    /// Terminate rank `rank`'s process immediately before executing
+    /// (0-based) step `step`.
+    Kill { rank: u32, step: u64 },
+    /// Truncate rank `rank`'s `nth` (1-based) outbound data frame to
+    /// `keep` bytes and shut the stream down: the peer sees a short
+    /// read, the sender poisons itself — a deterministic transport
+    /// failure.
+    FrameTruncate { rank: u32, nth: u64, keep: u32 },
+    /// Sleep `millis` before rank `rank`'s `nth` outbound data frame
+    /// (non-fatal: exercises timeout headroom, not failure).
+    FrameDelay { rank: u32, nth: u64, millis: u64 },
+    /// Sleep `millis` before rank `rank` serves its `nth` RMA reply.
+    RmaStall { rank: u32, nth: u64, millis: u64 },
+    /// Error the checkpoint write whose file would be `step_{step}`.
+    CheckpointFail { step: u64 },
+    /// Write that checkpoint truncated so it exists but fails
+    /// validation — the recovery scan must skip it.
+    CheckpointCorrupt { step: u64 },
+}
+
+/// A fault plus the supervision attempt it is scoped to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultSpec {
+    pub attempt: u32,
+    pub fault: Fault,
+}
+
+/// An ordered set of [`FaultSpec`]s; parse/print round-trips exactly.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    pub faults: Vec<FaultSpec>,
+}
+
+/// Parse `key=value` fields, rejecting unknown or duplicate keys so a
+/// typo'd spec fails loudly instead of silently not firing.
+fn parse_fields<'a>(
+    kind: &str,
+    body: &'a str,
+    allowed: &[&str],
+) -> Result<Vec<(&'a str, u64)>, String> {
+    let mut out: Vec<(&str, u64)> = Vec::new();
+    for field in body.split(',').filter(|f| !f.is_empty()) {
+        let (key, value) = field
+            .split_once('=')
+            .ok_or_else(|| format!("fault `{kind}`: field `{field}` is not key=value"))?;
+        if !allowed.contains(&key) && key != "attempt" {
+            return Err(format!(
+                "fault `{kind}`: unknown field `{key}` (expected {})",
+                allowed.join("/")
+            ));
+        }
+        if out.iter().any(|(k, _)| *k == key) {
+            return Err(format!("fault `{kind}`: duplicate field `{key}`"));
+        }
+        let parsed: u64 = value
+            .parse()
+            .map_err(|_| format!("fault `{kind}`: field `{key}`: `{value}` is not a number"))?;
+        out.push((key, parsed));
+    }
+    for required in allowed {
+        if !out.iter().any(|(k, _)| k == required) {
+            return Err(format!("fault `{kind}`: missing required field `{required}`"));
+        }
+    }
+    Ok(out)
+}
+
+fn field(fields: &[(&str, u64)], key: &str) -> u64 {
+    fields.iter().find(|(k, _)| *k == key).map(|(_, v)| *v).unwrap_or(0)
+}
+
+impl FaultPlan {
+    /// Parse a spec string; empty (or all-whitespace) means no faults.
+    pub fn parse(spec: &str) -> Result<FaultPlan, String> {
+        let mut faults = Vec::new();
+        for item in spec.split(';').map(str::trim).filter(|s| !s.is_empty()) {
+            let (kind, body) = item.split_once(':').unwrap_or((item, ""));
+            let allowed: &[&str] = match kind {
+                "kill" => &["rank", "step"],
+                "frame_truncate" => &["rank", "nth", "keep"],
+                "frame_delay" | "rma_stall" => &["rank", "nth", "ms"],
+                "ckpt_fail" | "ckpt_corrupt" => &["step"],
+                other => {
+                    return Err(format!(
+                        "unknown fault kind `{other}` (expected kill/frame_truncate/\
+                         frame_delay/rma_stall/ckpt_fail/ckpt_corrupt)"
+                    ))
+                }
+            };
+            let f = parse_fields(kind, body, allowed)?;
+            let attempt = field(&f, "attempt") as u32;
+            let rank = field(&f, "rank") as u32;
+            let nth = field(&f, "nth");
+            let fault = match kind {
+                "kill" => Fault::Kill { rank, step: field(&f, "step") },
+                "frame_truncate" => {
+                    Fault::FrameTruncate { rank, nth, keep: field(&f, "keep") as u32 }
+                }
+                "frame_delay" => Fault::FrameDelay { rank, nth, millis: field(&f, "ms") },
+                "rma_stall" => Fault::RmaStall { rank, nth, millis: field(&f, "ms") },
+                "ckpt_fail" => Fault::CheckpointFail { step: field(&f, "step") },
+                _ => Fault::CheckpointCorrupt { step: field(&f, "step") },
+            };
+            faults.push(FaultSpec { attempt, fault });
+        }
+        Ok(FaultPlan { faults })
+    }
+
+    /// Canonical spec string; `parse(to_spec())` round-trips exactly.
+    pub fn to_spec(&self) -> String {
+        let items: Vec<String> = self
+            .faults
+            .iter()
+            .map(|s| {
+                let body = match s.fault {
+                    Fault::Kill { rank, step } => format!("kill:rank={rank},step={step}"),
+                    Fault::FrameTruncate { rank, nth, keep } => {
+                        format!("frame_truncate:rank={rank},nth={nth},keep={keep}")
+                    }
+                    Fault::FrameDelay { rank, nth, millis } => {
+                        format!("frame_delay:rank={rank},nth={nth},ms={millis}")
+                    }
+                    Fault::RmaStall { rank, nth, millis } => {
+                        format!("rma_stall:rank={rank},nth={nth},ms={millis}")
+                    }
+                    Fault::CheckpointFail { step } => format!("ckpt_fail:step={step}"),
+                    Fault::CheckpointCorrupt { step } => format!("ckpt_corrupt:step={step}"),
+                };
+                if s.attempt == 0 {
+                    body
+                } else {
+                    format!("{body},attempt={}", s.attempt)
+                }
+            })
+            .collect();
+        items.join(";")
+    }
+
+    /// The sub-plan scoped to one supervision attempt (attempt fields
+    /// are dropped: the receiving process applies everything it gets).
+    pub fn for_attempt(&self, attempt: u32) -> FaultPlan {
+        FaultPlan {
+            faults: self
+                .faults
+                .iter()
+                .filter(|s| s.attempt == attempt)
+                .map(|s| FaultSpec { attempt: 0, fault: s.fault })
+                .collect(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+
+    /// Whether any fault needs rank *processes* to act on (kill,
+    /// transport faults) — these are socket-backend-only; checkpoint
+    /// faults work under either backend.
+    pub fn requires_processes(&self) -> bool {
+        self.faults.iter().any(|s| {
+            !matches!(s.fault, Fault::CheckpointFail { .. } | Fault::CheckpointCorrupt { .. })
+        })
+    }
+}
+
+// -- process-global armed state ------------------------------------------
+
+struct Armed {
+    plan: FaultPlan,
+    rank: u32,
+    /// Outbound data frames sent by this process (1-based ordinals).
+    data_frames: AtomicU64,
+    /// RMA replies served by this process (1-based ordinals).
+    rma_replies: AtomicU64,
+}
+
+static ARMED: OnceLock<Armed> = OnceLock::new();
+
+/// Arm a plan for this process (idempotent per process; only the first
+/// call wins — rank processes arm exactly once, before connecting).
+/// Empty plans are ignored so the hooks stay on their `None` fast path.
+pub fn arm(plan: FaultPlan, rank: usize) {
+    if plan.is_empty() {
+        return;
+    }
+    let _ = ARMED.set(Armed {
+        plan,
+        rank: rank as u32,
+        data_frames: AtomicU64::new(0),
+        rma_replies: AtomicU64::new(0),
+    });
+}
+
+/// Arm from [`ENV_FAULT_PLAN`] if present, removing the variable so
+/// nested launches don't inherit it. Parse errors are fatal here: a
+/// fault plan that silently fails to arm would "pass" every test.
+pub fn arm_from_env(rank: usize) {
+    if let Ok(spec) = std::env::var(ENV_FAULT_PLAN) {
+        std::env::remove_var(ENV_FAULT_PLAN);
+        let plan = FaultPlan::parse(&spec)
+            .unwrap_or_else(|e| panic!("invalid {ENV_FAULT_PLAN} spec `{spec}`: {e}"));
+        arm(plan, rank);
+    }
+}
+
+/// What a transport hook should do with the frame it is about to send.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FrameAction {
+    Pass,
+    Truncate { keep: u32 },
+    Delay { millis: u64 },
+}
+
+/// What a checkpoint writer should do with the write it is about to
+/// perform.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CkptAction {
+    Pass,
+    Fail,
+    Corrupt,
+}
+
+/// Kill hook, called at the top of every simulation step. Exits the
+/// process (code [`KILL_EXIT_CODE`]) if an armed kill matches this
+/// process's rank and this step.
+#[inline]
+pub fn on_step(step: u64) {
+    let Some(armed) = ARMED.get() else { return };
+    for s in &armed.plan.faults {
+        if let Fault::Kill { rank, step: at } = s.fault {
+            if rank == armed.rank && at == step {
+                eprintln!(
+                    "[fault] rank {rank}: injected kill before step {step} \
+                     (exit code {KILL_EXIT_CODE})"
+                );
+                std::process::exit(KILL_EXIT_CODE);
+            }
+        }
+    }
+}
+
+/// Transport hook: called once per outbound data frame, in send order.
+#[inline]
+pub fn on_data_frame() -> FrameAction {
+    let Some(armed) = ARMED.get() else { return FrameAction::Pass };
+    let ordinal = armed.data_frames.fetch_add(1, Ordering::Relaxed) + 1;
+    for s in &armed.plan.faults {
+        match s.fault {
+            Fault::FrameTruncate { rank, nth, keep } if rank == armed.rank && nth == ordinal => {
+                return FrameAction::Truncate { keep };
+            }
+            Fault::FrameDelay { rank, nth, millis } if rank == armed.rank && nth == ordinal => {
+                return FrameAction::Delay { millis };
+            }
+            _ => {}
+        }
+    }
+    FrameAction::Pass
+}
+
+/// RMA server hook: called once per served reply, in service order.
+/// Returns a stall duration in milliseconds when armed and matching.
+#[inline]
+pub fn on_rma_reply() -> Option<u64> {
+    let armed = ARMED.get()?;
+    let ordinal = armed.rma_replies.fetch_add(1, Ordering::Relaxed) + 1;
+    for s in &armed.plan.faults {
+        if let Fault::RmaStall { rank, nth, millis } = s.fault {
+            if rank == armed.rank && nth == ordinal {
+                return Some(millis);
+            }
+        }
+    }
+    None
+}
+
+/// Checkpoint hook: consulted before writing the snapshot (or part
+/// file) for `next_step`.
+#[inline]
+pub fn on_checkpoint_write(next_step: u64) -> CkptAction {
+    let Some(armed) = ARMED.get() else { return CkptAction::Pass };
+    for s in &armed.plan.faults {
+        match s.fault {
+            Fault::CheckpointFail { step } if step == next_step => return CkptAction::Fail,
+            Fault::CheckpointCorrupt { step } if step == next_step => return CkptAction::Corrupt,
+            _ => {}
+        }
+    }
+    CkptAction::Pass
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_to_spec_round_trips() {
+        let spec = "kill:rank=1,step=120;frame_truncate:rank=1,nth=3,keep=2;\
+                    frame_delay:rank=0,nth=5,ms=40;rma_stall:rank=0,nth=2,ms=40;\
+                    ckpt_fail:step=100;ckpt_corrupt:step=160,attempt=1";
+        let plan = FaultPlan::parse(spec).unwrap();
+        assert_eq!(plan.faults.len(), 6);
+        assert_eq!(plan.to_spec(), spec);
+        assert_eq!(FaultPlan::parse(&plan.to_spec()).unwrap(), plan);
+    }
+
+    #[test]
+    fn empty_and_whitespace_specs_are_empty_plans() {
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+        assert!(FaultPlan::parse("  ;  ; ").unwrap().is_empty());
+    }
+
+    #[test]
+    fn unknown_kinds_and_fields_are_rejected() {
+        assert!(FaultPlan::parse("explode:rank=0").unwrap_err().contains("unknown fault kind"));
+        assert!(FaultPlan::parse("kill:rank=0,step=1,when=now")
+            .unwrap_err()
+            .contains("unknown field"));
+        assert!(FaultPlan::parse("kill:rank=0").unwrap_err().contains("missing required"));
+        assert!(FaultPlan::parse("kill:rank=0,rank=1,step=2")
+            .unwrap_err()
+            .contains("duplicate"));
+        assert!(FaultPlan::parse("kill:rank=zero,step=1")
+            .unwrap_err()
+            .contains("not a number"));
+    }
+
+    #[test]
+    fn for_attempt_filters_and_strips_attempt_tags() {
+        let plan =
+            FaultPlan::parse("kill:rank=1,step=10;kill:rank=0,step=20,attempt=1").unwrap();
+        let a0 = plan.for_attempt(0);
+        assert_eq!(a0.faults, vec![FaultSpec {
+            attempt: 0,
+            fault: Fault::Kill { rank: 1, step: 10 }
+        }]);
+        let a1 = plan.for_attempt(1);
+        assert_eq!(a1.faults, vec![FaultSpec {
+            attempt: 0,
+            fault: Fault::Kill { rank: 0, step: 20 }
+        }]);
+        assert!(plan.for_attempt(2).is_empty());
+    }
+
+    #[test]
+    fn process_requirements_distinguish_checkpoint_faults() {
+        assert!(FaultPlan::parse("kill:rank=0,step=1").unwrap().requires_processes());
+        assert!(FaultPlan::parse("frame_delay:rank=0,nth=1,ms=1")
+            .unwrap()
+            .requires_processes());
+        assert!(!FaultPlan::parse("ckpt_fail:step=1;ckpt_corrupt:step=2")
+            .unwrap()
+            .requires_processes());
+    }
+
+    #[test]
+    fn unarmed_hooks_are_pass_through() {
+        // The suite shares one process; nothing arms in unit tests, so
+        // every hook must take its fast path.
+        on_step(0);
+        assert_eq!(on_data_frame(), FrameAction::Pass);
+        assert_eq!(on_rma_reply(), None);
+        assert_eq!(on_checkpoint_write(0), CkptAction::Pass);
+    }
+}

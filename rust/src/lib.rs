@@ -26,6 +26,7 @@
 //! | — | Benchmark matrix + `BENCH_*.json` trajectories | [`bench`] |
 //! | — | Dynamic load balancing (neuron migration) | [`balance`] |
 //! | — | Epoch-granular telemetry (Perfetto/JSONL export) | [`trace`] |
+//! | — | Fault injection + checkpoint-restart recovery | [`fault`] |
 //!
 //! Entry points: [`config::SimConfig`] describes a run,
 //! [`coordinator::run_simulation`] executes it,
@@ -43,6 +44,7 @@ pub mod cli;
 pub mod comm;
 pub mod coordinator;
 pub mod config;
+pub mod fault;
 pub mod metrics;
 pub mod neuron;
 pub mod octree;

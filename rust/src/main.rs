@@ -37,7 +37,7 @@
 use anyhow::{anyhow, bail, Result};
 
 use ilmi::cli::Args;
-use ilmi::config::{Backend, ConnectivityAlg, SimConfig, SpikeAlg};
+use ilmi::config::{Backend, CommBackend, ConnectivityAlg, SimConfig, SpikeAlg};
 use ilmi::coordinator::{
     branch_simulation_with_xla, resume_simulation, resume_simulation_with_xla, run_simulation,
     run_simulation_with_xla,
@@ -89,10 +89,24 @@ usage: ilmi <simulate|resume|compare|bench|quality|inspect> [flags]
               communication backend: in-process threads (default) or
               one OS process per rank over Unix domain sockets; both
               produce bit-identical results (DESIGN.md SS11). The
-              socket backend excludes --xla and checkpointing
+              socket backend excludes --xla
             [--checkpoint-every N --checkpoint-dir D]
               write a resumable snapshot every N steps into D
               (both flags are required together)
+            [--checkpoint-keep K]
+              retain only the newest K complete snapshots (plus any
+              part-file scraps newer than them); 0 = keep all
+            [--fault SPEC ...] [--max-recoveries R]
+              deterministic fault injection (socket backend only):
+              kill:rank=R,step=S / frame_truncate:rank=R,nth=N,keep=B /
+              frame_delay:rank=R,nth=N,ms=M / rma_stall:rank=R,nth=N,ms=M /
+              ckpt_fail:step=S / ckpt_corrupt:step=S, each optionally
+              suffixed ,attempt=A (default 0: first launch only);
+              repeat --fault to combine. --max-recoveries R arms the
+              supervisor: when a rank process dies, the fleet is
+              killed, reaped, and relaunched from the newest VALID
+              checkpoint (falling back past corrupt ones), at most R
+              times, bit-identically (DESIGN.md SS13)
             [--balance-every N] [--balance-threshold X]
               migrate neurons between ranks whenever max/mean step
               cost exceeds X, checked every N steps (N must be a
@@ -109,6 +123,9 @@ usage: ilmi <simulate|resume|compare|bench|quality|inspect> [flags]
             [--kernel scalar|blocked|xla]
               kernels are excluded from the dynamics fingerprint, so a
               snapshot may resume under a different kernel bit-exactly
+            [--comm thread|socket]
+              socket resume ships the snapshot PATH to the rank fleet,
+              which restores bit-exactly (excludes --branch and --xla)
             [--checkpoint-every N --checkpoint-dir D]
             [--trace-out FILE] [--trace-every N] [--trace-capacity C]
               trace the resumed segment (the snapshot's trace knobs
@@ -153,10 +170,31 @@ fn build_config(args: &Args) -> Result<SimConfig> {
     apply_kernel_flag(&mut cfg, args)?;
     apply_comm_flag(&mut cfg, args)?;
     apply_checkpoint_flags(&mut cfg, args)?;
+    apply_fault_flags(&mut cfg, args)?;
     apply_balance_flags(&mut cfg, args)?;
     apply_trace_flags(&mut cfg, args)?;
     cfg.validate().map_err(anyhow::Error::msg)?;
     Ok(cfg)
+}
+
+/// Map `--fault SPEC` (repeatable; specs join into one `;`-separated
+/// plan), `--checkpoint-keep K`, and `--max-recoveries R` into the
+/// config. All three are execution-robustness knobs, never dynamics:
+/// none is part of the snapshot fingerprint, and `to_ini` never embeds
+/// the fault plan, so a faulted run's checkpoints are byte-identical to
+/// a clean run's (DESIGN.md §13).
+fn apply_fault_flags(cfg: &mut SimConfig, args: &Args) -> Result<()> {
+    let faults = args.get_all("fault");
+    if !faults.is_empty() {
+        cfg.fault_plan = faults.join(";");
+    }
+    if let Some(keep) = args.get_parse::<usize>("checkpoint-keep").map_err(anyhow::Error::msg)? {
+        cfg.checkpoint_keep = keep;
+    }
+    if let Some(max) = args.get_parse::<usize>("max-recoveries").map_err(anyhow::Error::msg)? {
+        cfg.max_recoveries = max;
+    }
+    Ok(())
 }
 
 /// Map `--kernel scalar|blocked|xla` onto `compute.kernel` — the
@@ -258,6 +296,18 @@ fn apply_checkpoint_flags(cfg: &mut SimConfig, args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Socket-backend resume: the rank fleet restores from the on-disk
+/// snapshot file (processes cannot share the in-memory one).
+#[cfg(unix)]
+fn resume_socket(cfg: &SimConfig, path: &std::path::Path) -> Result<ilmi::metrics::SimReport> {
+    ilmi::coordinator::resume_simulation_socket(cfg, path)
+}
+
+#[cfg(not(unix))]
+fn resume_socket(_cfg: &SimConfig, _path: &std::path::Path) -> Result<ilmi::metrics::SimReport> {
+    bail!("the socket backend requires Unix domain sockets; use the thread backend")
+}
+
 fn run_with_backend(cfg: &SimConfig) -> Result<ilmi::metrics::SimReport> {
     if cfg.backend == Backend::Xla {
         let handle = spawn_service(&cfg.artifacts_dir)?;
@@ -301,14 +351,18 @@ fn cmd_resume(args: &Args) -> Result<()> {
         Some(file) => SimConfig::from_file(file).map_err(anyhow::Error::msg)?,
         None => {
             let mut cfg = snap.config().map_err(anyhow::Error::msg)?;
-            // Checkpointing and tracing settings of the original run do
-            // not auto-carry over: resuming into the same directory (or
-            // overwriting the original trace file) is opt-in via the
-            // flags below.
+            // Checkpointing, tracing, and fault/recovery settings of
+            // the original run do not auto-carry over: resuming into
+            // the same directory (or overwriting the original trace
+            // file, or re-injecting faults) is opt-in via the flags
+            // below.
             cfg.checkpoint_every = 0;
             cfg.checkpoint_dir = String::new();
+            cfg.checkpoint_keep = 0;
             cfg.trace_every = 0;
             cfg.trace_out = String::new();
+            cfg.fault_plan = String::new();
+            cfg.max_recoveries = 0;
             cfg
         }
     };
@@ -320,7 +374,9 @@ fn cmd_resume(args: &Args) -> Result<()> {
         cfg.backend = Backend::Xla;
     }
     apply_kernel_flag(&mut cfg, args)?;
+    apply_comm_flag(&mut cfg, args)?;
     apply_checkpoint_flags(&mut cfg, args)?;
+    apply_fault_flags(&mut cfg, args)?;
     apply_balance_flags(&mut cfg, args)?;
     apply_trace_flags(&mut cfg, args)?;
     cfg.validate().map_err(anyhow::Error::msg)?;
@@ -337,7 +393,16 @@ fn cmd_resume(args: &Args) -> Result<()> {
         cfg.spike_alg,
         if branch { " [BRANCH: dynamics may differ from the snapshot]" } else { "" },
     );
-    let report = if cfg.backend == Backend::Xla {
+    let report = if cfg.comm_backend == CommBackend::Socket {
+        if branch {
+            bail!(
+                "the socket backend cannot --branch: branching deliberately relaxes \
+                 the fingerprint check, which the rank fleet re-validates strictly; \
+                 use the thread backend to fork scenarios"
+            );
+        }
+        resume_socket(&cfg, &path)?
+    } else if cfg.backend == Backend::Xla {
         let handle = spawn_service(&cfg.artifacts_dir)?;
         let report = if branch {
             branch_simulation_with_xla(&cfg, &snap, Some(handle.clone()))

@@ -52,6 +52,13 @@ pub struct RankReport {
     /// backends by construction, which is exactly what the bench
     /// harness drift-checks (BENCH schema v6).
     pub kernel_blocks: u64,
+    /// Supervised fleet relaunches that preceded this rank's segment
+    /// (DESIGN.md §13). Stamped by the socket supervisor after decode —
+    /// a child process cannot know how many attempts came before it —
+    /// so it is 0 on the wire and for the thread backend. Like
+    /// `phase_seconds`, per-segment: the counters above describe only
+    /// the surviving attempt, not work lost to killed fleets.
+    pub recoveries: u64,
     pub mean_calcium: f64,
     /// Optional calcium trace: (step, per-local-neuron calcium).
     pub calcium_trace: Vec<(usize, Vec<f32>)>,
@@ -123,6 +130,7 @@ impl RankReport {
         put_u64(&mut out, self.remote_partners);
         put_u64(&mut out, self.migrations);
         put_u64(&mut out, self.kernel_blocks);
+        put_u64(&mut out, self.recoveries);
         put_f64(&mut out, self.mean_calcium);
         put_u32(&mut out, self.calcium_trace.len() as u32);
         for (step, row) in &self.calcium_trace {
@@ -187,6 +195,7 @@ impl RankReport {
         r.remote_partners = c.u64("remote_partners")?;
         r.migrations = c.u64("migrations")?;
         r.kernel_blocks = c.u64("kernel_blocks")?;
+        r.recoveries = c.u64("recoveries")?;
         r.mean_calcium = c.f64("mean_calcium")?;
         let n_ca = c.u32("calcium_trace count")? as usize;
         r.calcium_trace = Vec::with_capacity(n_ca);
@@ -231,6 +240,21 @@ impl RankReport {
 pub struct SimReport {
     pub ranks: Vec<RankReport>,
     pub wall_seconds: f64,
+    /// Supervised fleet relaunches performed by the socket supervisor
+    /// to produce this report (DESIGN.md §13); 0 when nothing failed
+    /// and always 0 on the thread backend. BENCH schema v7's
+    /// drift-checked `recoveries` field.
+    pub recoveries: u64,
+    /// Evidence-based lower bound on simulation steps re-executed
+    /// because of recoveries: for each recovery, the newest checkpoint
+    /// step the dying fleet provably reached minus the step actually
+    /// resumed from. Steps past the last checkpoint leave no trace, so
+    /// the true loss can only be larger.
+    pub lost_steps: u64,
+    /// Wall seconds the supervisor spent between fleet death and
+    /// relaunch (backoff plus checkpoint scan), summed over
+    /// recoveries. Included in `wall_seconds`.
+    pub recovery_seconds: f64,
 }
 
 impl SimReport {
@@ -372,6 +396,12 @@ impl SimReport {
             self.imbalance(),
             self.total_migrations(),
         ));
+        if self.recoveries > 0 {
+            out.push_str(&format!(
+                "recoveries {} | lost steps >= {} | recovery wall {:.3} s\n",
+                self.recoveries, self.lost_steps, self.recovery_seconds,
+            ));
+        }
         out
     }
 
@@ -383,7 +413,8 @@ impl SimReport {
         );
         out.push_str(
             ",bytes_sent,bytes_rma,msgs,synapses_out,mean_ca,spike_lookups,spike_state_bytes,\
-             plan_rebuilds,neurons,local_edges,remote_partners,migrations,kernel_blocks\n",
+             plan_rebuilds,neurons,local_edges,remote_partners,migrations,kernel_blocks,\
+             recoveries\n",
         );
         for r in &self.ranks {
             out.push_str(&format!("{},", r.rank));
@@ -391,7 +422,7 @@ impl SimReport {
                 &r.phase_seconds.iter().map(|s| format!("{s:.6}")).collect::<Vec<_>>().join(","),
             );
             out.push_str(&format!(
-                ",{},{},{},{},{:.4},{},{},{},{},{},{},{},{}\n",
+                ",{},{},{},{},{:.4},{},{},{},{},{},{},{},{},{}\n",
                 r.comm.bytes_sent,
                 r.comm.bytes_rma,
                 r.comm.msgs_sent,
@@ -405,6 +436,7 @@ impl SimReport {
                 r.remote_partners,
                 r.migrations,
                 r.kernel_blocks,
+                r.recoveries,
             ));
         }
         out
@@ -431,6 +463,7 @@ mod tests {
                 report_with(Phase::BarnesHut, 3.0, 200, 0),
             ],
             wall_seconds: 3.5,
+            ..Default::default()
         };
         assert_eq!(sim.phase_max(Phase::BarnesHut), 3.0);
         assert_eq!(sim.phase_mean(Phase::BarnesHut), 2.0);
@@ -442,7 +475,7 @@ mod tests {
     fn spike_state_aggregates_as_max_across_ranks() {
         let a = RankReport { spike_state_bytes: 24, ..Default::default() };
         let b = RankReport { spike_state_bytes: 120, ..Default::default() };
-        let sim = SimReport { ranks: vec![a, b], wall_seconds: 0.0 };
+        let sim = SimReport { ranks: vec![a, b], ..Default::default() };
         assert_eq!(sim.max_spike_state_bytes(), 120);
         assert_eq!(SimReport::default().max_spike_state_bytes(), 0);
     }
@@ -451,7 +484,7 @@ mod tests {
     fn plan_rebuilds_aggregate_as_sum() {
         let a = RankReport { plan_rebuilds: 3, ..Default::default() };
         let b = RankReport { plan_rebuilds: 4, ..Default::default() };
-        let sim = SimReport { ranks: vec![a, b], wall_seconds: 0.0 };
+        let sim = SimReport { ranks: vec![a, b], ..Default::default() };
         assert_eq!(sim.total_plan_rebuilds(), 7);
         assert!(sim.phase_table().contains("plan rebuilds 7"));
     }
@@ -460,7 +493,7 @@ mod tests {
     fn imbalance_is_max_over_mean_step_cost() {
         let a = RankReport { neurons: 48, ..Default::default() };
         let b = RankReport { neurons: 16, ..Default::default() };
-        let sim = SimReport { ranks: vec![a, b], wall_seconds: 0.0 };
+        let sim = SimReport { ranks: vec![a, b], ..Default::default() };
         assert!((sim.imbalance() - 1.5).abs() < 1e-12);
         // Empty / degenerate reports read as balanced.
         assert_eq!(SimReport::default().imbalance(), 1.0);
@@ -479,10 +512,11 @@ mod tests {
             remote_partners: 5,
             migrations: 2,
             kernel_blocks: 60,
+            recoveries: 1,
             ..Default::default()
         };
         let sim =
-            SimReport { ranks: vec![RankReport::default(), loaded], wall_seconds: 0.0 };
+            SimReport { ranks: vec![RankReport::default(), loaded], ..Default::default() };
         let csv = sim.to_csv();
         let mut lines = csv.lines();
         let header: Vec<&str> = lines.next().unwrap().split(',').collect();
@@ -504,13 +538,30 @@ mod tests {
         assert_eq!(rows[1][col("remote_partners")], "5");
         assert_eq!(rows[1][col("migrations")], "2");
         assert_eq!(rows[1][col("kernel_blocks")], "60");
+        assert_eq!(rows[1][col("recoveries")], "1");
+    }
+
+    #[test]
+    fn recovery_line_renders_only_after_a_recovery() {
+        let quiet = SimReport::default();
+        assert!(!quiet.phase_table().contains("recoveries"));
+        let sim = SimReport {
+            ranks: vec![RankReport::default()],
+            recoveries: 2,
+            lost_steps: 37,
+            recovery_seconds: 0.25,
+            ..Default::default()
+        };
+        let t = sim.phase_table();
+        assert!(t.contains("recoveries 2"), "{t}");
+        assert!(t.contains("lost steps >= 37"), "{t}");
     }
 
     #[test]
     fn kernel_blocks_aggregate_as_sum() {
         let a = RankReport { kernel_blocks: 60, ..Default::default() };
         let b = RankReport { kernel_blocks: 60, ..Default::default() };
-        let sim = SimReport { ranks: vec![a, b], wall_seconds: 0.0 };
+        let sim = SimReport { ranks: vec![a, b], ..Default::default() };
         assert_eq!(sim.total_kernel_blocks(), 120);
     }
 
@@ -528,6 +579,7 @@ mod tests {
             remote_partners: 5,
             migrations: 1,
             kernel_blocks: 17,
+            recoveries: 2,
             mean_calcium: 0.625,
             calcium_trace: vec![(50, vec![0.5, 0.75]), (100, vec![])],
             ..Default::default()
@@ -572,6 +624,7 @@ mod tests {
         let sim = SimReport {
             ranks: vec![report_with(Phase::SpikeExchange, 0.5, 1024, 0)],
             wall_seconds: 1.0,
+            ..Default::default()
         };
         let t = sim.phase_table();
         assert!(t.contains("spike_exchange"));

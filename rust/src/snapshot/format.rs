@@ -5,7 +5,7 @@
 //! ```text
 //! header:
 //!   magic              8 B   b"ILMISNAP"
-//!   format_version     u32   = 4 (this build also reads versions 1-3)
+//!   format_version     u32   = 5 (this build also reads versions 1-4)
 //!   config_fingerprint u64   FNV-1a over the dynamics-relevant config
 //!   next_step          u64   first step index the resumed run executes
 //!   ranks              u32
@@ -20,6 +20,8 @@
 //!   rank               u32
 //!   section_len        u64
 //!   section            ..    see `RankSection::encode`
+//! trailer (v5+):
+//!   content_checksum   u64   FNV-1a over every preceding byte
 //! ```
 //!
 //! A rank section captures everything `RankState::restore` needs for a
@@ -46,7 +48,11 @@
 //! must restore with; readers map v1–v3 files — and v4 files with the
 //! uniform tag — to the historical `Stride` ownership. Rank sections
 //! are unchanged since v2 (per-rank neuron counts may now differ; the
-//! expected count per section comes from the partition).
+//! expected count per section comes from the partition). v5 appends a
+//! whole-file FNV-1a content checksum so *any* corruption — including
+//! payload bit-rot the structural checks cannot see — is a checked
+//! read error, which the checkpoint-recovery scan (DESIGN.md §13)
+//! relies on to fall back past a damaged newest checkpoint.
 //!
 //! The encoding deliberately reuses the `util::wire` primitives used by
 //! the inter-rank message codecs; decoding goes through the checked
@@ -66,7 +72,7 @@ pub const MAGIC: [u8; 8] = *b"ILMISNAP";
 
 /// Current snapshot format version (what this build writes). Bump on
 /// any layout change.
-pub const FORMAT_VERSION: u32 = 4;
+pub const FORMAT_VERSION: u32 = 5;
 
 /// Oldest snapshot format version this build still reads.
 pub const MIN_FORMAT_VERSION: u32 = 1;
@@ -81,6 +87,25 @@ fn fnv1a(hash: u64, bytes: &[u8]) -> u64 {
         h = h.wrapping_mul(0x100_0000_01b3);
     }
     h
+}
+
+/// The v5+ whole-file content checksum: FNV-1a over every byte before
+/// the 8-byte little-endian trailer that stores it. Not cryptographic —
+/// it defends against truncation and bit-rot, not an adversary.
+pub fn content_checksum(bytes: &[u8]) -> u64 {
+    fnv1a(0xcbf2_9ce4_8422_2325, bytes)
+}
+
+/// Read the format version from the fixed-offset field right after the
+/// magic, without parsing the variable-length header — the reader needs
+/// it up front to know whether a content-checksum trailer is present.
+/// `None` when the buffer is too short or the magic is wrong (full
+/// header decoding then produces the descriptive error).
+pub fn peek_version(buf: &[u8]) -> Option<u32> {
+    if buf.len() < 12 || buf[..8] != MAGIC {
+        return None;
+    }
+    Some(u32::from_le_bytes(buf[8..12].try_into().unwrap()))
 }
 
 /// Fingerprint of every config field that influences the simulation
@@ -1012,7 +1037,7 @@ mod tests {
         buf[8] = 99;
         let err = SnapshotHeader::decode(&mut Cursor::new(&buf, "snapshot")).unwrap_err();
         assert!(err.contains("version 99"), "{err}");
-        assert!(err.contains("1..=4"), "{err}");
+        assert!(err.contains("1..=5"), "{err}");
         // Version 0 (below the supported floor) is rejected too.
         buf[8] = 0;
         let err = SnapshotHeader::decode(&mut Cursor::new(&buf, "snapshot")).unwrap_err();
@@ -1044,6 +1069,24 @@ mod tests {
         bad.encode(&mut buf);
         let err = SnapshotHeader::decode(&mut Cursor::new(&buf, "snapshot")).unwrap_err();
         assert!(err.contains("ownership partition"), "{err}");
+    }
+
+    #[test]
+    fn peek_version_and_checksum_basics() {
+        let cfg = SimConfig::default();
+        let hdr = SnapshotHeader::for_config(&cfg, 0);
+        let mut buf = Vec::new();
+        hdr.encode(&mut buf);
+        assert_eq!(peek_version(&buf), Some(FORMAT_VERSION));
+        assert_eq!(peek_version(&buf[..11]), None, "too short for the version field");
+        let mut bad = buf.clone();
+        bad[0] = b'X';
+        assert_eq!(peek_version(&bad), None, "bad magic");
+        // The checksum is sensitive to every byte (FNV-1a absorbs each
+        // input byte into the running hash).
+        let c0 = content_checksum(&buf);
+        buf[13] ^= 0x40;
+        assert_ne!(c0, content_checksum(&buf));
     }
 
     #[test]

@@ -13,12 +13,14 @@
 //! * [`format`] — the versioned little-endian file format (magic +
 //!   version + config fingerprint + per-rank sections) and what exactly
 //!   is captured for bit-exact resume. See `DESIGN.md` §6 for the spec.
-//! * [`writer`] — single-file assembly, atomic writes, and the
-//!   [`CheckpointSink`] the driver deposits per-rank sections into for
-//!   periodic in-run checkpoints (`SimConfig::checkpoint_every`).
+//! * [`writer`] — single-file assembly, atomic writes, the in-run
+//!   checkpoint sinks ([`CheckpointSink`] for rank threads, [`PartSink`]
+//!   for rank processes, both behind [`SectionSink`]) and the
+//!   `checkpoint_keep` retention ring.
 //! * [`reader`] — parsing plus layered validation: structural fit,
 //!   exact fingerprint match for resume, relaxed structural-only checks
-//!   for deliberate scenario branches.
+//!   for deliberate scenario branches, and [`scan_for_recovery`], the
+//!   supervisor's fall-back-past-corruption checkpoint scan.
 //!
 //! Determinism contract: running `2N` steps straight produces a
 //! `SimReport` identical (synapse counts, calcium, transferred bytes)
@@ -32,11 +34,12 @@ pub mod reader;
 pub mod writer;
 
 pub use format::{
-    config_fingerprint, config_fingerprint_for_version, RankSection, SnapshotHeader,
-    FORMAT_VERSION, MAGIC, MIN_FORMAT_VERSION,
+    config_fingerprint, config_fingerprint_for_version, content_checksum, peek_version,
+    RankSection, SnapshotHeader, FORMAT_VERSION, MAGIC, MIN_FORMAT_VERSION,
 };
-pub use reader::{latest_snapshot_in, Snapshot};
+pub use reader::{latest_snapshot_in, scan_for_recovery, RecoveryScan, Snapshot};
 pub use writer::{
-    snapshot_file_name, write_snapshot, write_snapshot_sections,
-    write_snapshot_with_partition, CheckpointSink,
+    prune_checkpoint_ring, snapshot_file_name, step_of_file_name, write_snapshot,
+    write_snapshot_sections, write_snapshot_with_partition, CheckpointSink, PartSink,
+    SectionSink,
 };

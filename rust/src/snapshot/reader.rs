@@ -13,7 +13,10 @@
 
 use std::path::{Path, PathBuf};
 
-use super::format::{config_fingerprint_for_version, RankSection, SnapshotHeader, SNAPSHOT_EXT};
+use super::format::{
+    config_fingerprint_for_version, content_checksum, peek_version, RankSection, SnapshotHeader,
+    FORMAT_VERSION, SNAPSHOT_EXT,
+};
 use crate::balance::Partition;
 use crate::config::SimConfig;
 use crate::util::wire::Cursor;
@@ -27,6 +30,29 @@ pub struct Snapshot {
 impl Snapshot {
     /// Parse a snapshot from raw bytes.
     pub fn from_bytes(buf: &[u8]) -> Result<Snapshot, String> {
+        // v5+ files end in a whole-file checksum; verify it before
+        // parsing anything so every kind of damage — header, section
+        // bytes, truncation anywhere — surfaces as this one checked
+        // error. Unknown FUTURE versions skip the check and fall through
+        // to the header decode's descriptive "unsupported version".
+        let buf = match peek_version(buf) {
+            Some(v) if (5..=FORMAT_VERSION).contains(&v) => {
+                let Some(body_len) = buf.len().checked_sub(8) else {
+                    return Err("snapshot is corrupt or truncated: no room for the \
+                                content-checksum trailer"
+                        .to_string());
+                };
+                let stored = u64::from_le_bytes(buf[body_len..].try_into().unwrap());
+                if content_checksum(&buf[..body_len]) != stored {
+                    return Err(format!(
+                        "snapshot is corrupt or truncated: content checksum mismatch \
+                         over {body_len} bytes"
+                    ));
+                }
+                &buf[..body_len]
+            }
+            _ => buf,
+        };
         let mut c = Cursor::new(buf, "snapshot");
         let header = SnapshotHeader::decode(&mut c)?;
         let ranks = header.ranks as usize;
@@ -235,6 +261,78 @@ pub fn latest_snapshot_in(dir: impl AsRef<Path>) -> Result<PathBuf, String> {
     best.ok_or_else(|| format!("no *.{SNAPSHOT_EXT} files in {}", dir.display()))
 }
 
+/// What [`scan_for_recovery`] found: the newest *fully valid* snapshot
+/// plus the evidence needed for honest recovery accounting.
+pub struct RecoveryScan {
+    /// The snapshot recovery will resume from.
+    pub snapshot: Snapshot,
+    /// Its file path.
+    pub path: PathBuf,
+    /// The highest step number named by ANY `step_*.ilmisnap` file in
+    /// the directory, valid or not. The gap between this and the chosen
+    /// snapshot's step is a lower bound on the work a recovery replays
+    /// (the fleet provably reached at least this step).
+    pub newest_step_seen: u64,
+    /// Newer snapshot files that were skipped, with why (corrupt,
+    /// truncated, fingerprint mismatch, undecodable section...).
+    pub skipped: Vec<(PathBuf, String)>,
+}
+
+/// Find the newest snapshot in `dir` that a recovery can actually trust:
+/// reads each `step_*.ilmisnap` newest-first and requires a full parse
+/// (v5+: whole-file checksum), a fingerprint match against `cfg`, and a
+/// successful decode of EVERY rank section before accepting it — a
+/// checkpoint that was being written when the fleet died, or one an
+/// injected fault corrupted, is skipped and an older ring entry wins.
+pub fn scan_for_recovery(dir: impl AsRef<Path>, cfg: &SimConfig) -> Result<RecoveryScan, String> {
+    let dir = dir.as_ref();
+    let entries = std::fs::read_dir(dir)
+        .map_err(|e| format!("reading checkpoint dir {}: {e}", dir.display()))?;
+    let mut candidates: Vec<PathBuf> = entries
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| {
+            p.extension().and_then(|e| e.to_str()) == Some(SNAPSHOT_EXT)
+                && super::writer::step_of_file_name(p).is_some()
+        })
+        .collect();
+    // Zero-padded names: lexicographic descending == newest first.
+    candidates.sort();
+    candidates.reverse();
+    let newest_step_seen = candidates
+        .first()
+        .and_then(|p| super::writer::step_of_file_name(p))
+        .unwrap_or(0);
+    let mut skipped = Vec::new();
+    for path in candidates {
+        let verdict = Snapshot::read_file(&path).and_then(|snap| {
+            snap.validate_for(cfg)?;
+            for rank in 0..snap.ranks() {
+                snap.section(rank)?;
+            }
+            Ok(snap)
+        });
+        match verdict {
+            Ok(snapshot) => {
+                return Ok(RecoveryScan { snapshot, path, newest_step_seen, skipped });
+            }
+            Err(reason) => skipped.push((path, reason)),
+        }
+    }
+    if skipped.is_empty() {
+        return Err(format!("no *.{SNAPSHOT_EXT} files in {}", dir.display()));
+    }
+    let mut msg = format!(
+        "no usable checkpoint in {}: all {} snapshot file(s) failed validation",
+        dir.display(),
+        skipped.len()
+    );
+    for (path, reason) in &skipped {
+        msg.push_str(&format!("\n  {}: {reason}", path.display()));
+    }
+    Err(msg)
+}
+
 #[cfg(test)]
 mod tests {
     use super::super::writer::write_snapshot_sections;
@@ -393,6 +491,110 @@ mod tests {
         // Truncation.
         bytes.truncate(bytes.len() - 7);
         assert!(Snapshot::from_bytes(&bytes).unwrap_err().contains("truncated"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Satellite hardening: a v5 file truncated at EVERY possible offset
+    /// must fail with an error — never a panic, never a partial parse.
+    #[test]
+    fn truncation_at_every_offset_is_a_checked_error() {
+        let dir = tmp_dir("trunc_sweep");
+        let cfg = tiny_cfg();
+        let path = dir.join("snap.ilmisnap");
+        write_snapshot_sections(&path, &cfg, 10, &tiny_sections(&cfg)).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        assert!(Snapshot::from_bytes(&bytes).is_ok());
+        for len in 0..bytes.len() {
+            assert!(
+                Snapshot::from_bytes(&bytes[..len]).is_err(),
+                "truncation to {len}/{} bytes parsed successfully",
+                bytes.len()
+            );
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Satellite hardening: flipping ANY single byte of a v5 file must
+    /// fail — the whole-file checksum leaves no unprotected region.
+    #[test]
+    fn every_single_byte_flip_is_a_checked_error() {
+        let dir = tmp_dir("flip_sweep");
+        let cfg = tiny_cfg();
+        let path = dir.join("snap.ilmisnap");
+        write_snapshot_sections(&path, &cfg, 10, &tiny_sections(&cfg)).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        for i in 0..bytes.len() {
+            bytes[i] ^= 0xFF;
+            assert!(
+                Snapshot::from_bytes(&bytes).is_err(),
+                "byte flip at offset {i}/{} parsed successfully",
+                bytes.len()
+            );
+            bytes[i] ^= 0xFF;
+        }
+        assert!(Snapshot::from_bytes(&bytes).is_ok(), "restored file must parse");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Satellite hardening: absurd length fields must error without a
+    /// matching up-front allocation, even when the file carries a valid
+    /// checksum over its crafted contents.
+    #[test]
+    fn huge_length_fields_error_without_allocating() {
+        use crate::snapshot::format::{content_checksum, SnapshotHeader};
+        use crate::util::wire::{put_u32, put_u64};
+        let cfg = tiny_cfg();
+
+        // Section claiming u64::MAX bytes.
+        let hdr = SnapshotHeader::for_config(&cfg, 20);
+        let mut buf = Vec::new();
+        hdr.encode(&mut buf);
+        put_u32(&mut buf, 0);
+        put_u64(&mut buf, u64::MAX);
+        let sum = content_checksum(&buf);
+        put_u64(&mut buf, sum);
+        let err = Snapshot::from_bytes(&buf).unwrap_err();
+        assert!(err.contains("truncated"), "{err}");
+
+        // Header claiming u32::MAX ranks (capacity clamp, then a framing
+        // error on the first missing section).
+        let mut hdr = SnapshotHeader::for_config(&cfg, 20);
+        hdr.ranks = u32::MAX;
+        let mut buf = Vec::new();
+        hdr.encode(&mut buf);
+        let sum = content_checksum(&buf);
+        put_u64(&mut buf, sum);
+        assert!(Snapshot::from_bytes(&buf).is_err());
+    }
+
+    #[test]
+    fn recovery_scan_falls_back_past_corrupt_newest() {
+        let dir = tmp_dir("recovery_scan");
+        let cfg = tiny_cfg();
+        let sections = tiny_sections(&cfg);
+        for step in [10u64, 30, 50] {
+            let path = dir.join(super::super::writer::snapshot_file_name(step));
+            write_snapshot_sections(&path, &cfg, step, &sections).unwrap();
+        }
+        // Corrupt the newest (as an interrupted write would), leave the
+        // middle intact.
+        let newest = dir.join(super::super::writer::snapshot_file_name(50));
+        let mut bytes = std::fs::read(&newest).unwrap();
+        bytes.truncate(bytes.len() * 2 / 3);
+        std::fs::write(&newest, &bytes).unwrap();
+
+        let scan = scan_for_recovery(&dir, &cfg).unwrap();
+        assert_eq!(scan.snapshot.next_step(), 30);
+        assert_eq!(scan.path, dir.join(super::super::writer::snapshot_file_name(30)));
+        assert_eq!(scan.newest_step_seen, 50);
+        assert_eq!(scan.skipped.len(), 1);
+        assert!(scan.skipped[0].1.contains("checksum"), "{}", scan.skipped[0].1);
+
+        // A fingerprint-incompatible config finds nothing usable.
+        let mut other = cfg.clone();
+        other.seed += 1;
+        let err = scan_for_recovery(&dir, &other).unwrap_err();
+        assert!(err.contains("no usable checkpoint"), "{err}");
         std::fs::remove_dir_all(&dir).ok();
     }
 }

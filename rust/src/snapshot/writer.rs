@@ -1,21 +1,30 @@
-//! Snapshot writing: single-file assembly plus the in-run
-//! `CheckpointSink` that collects per-rank sections and writes one
-//! complete snapshot file per checkpoint step.
+//! Snapshot writing: single-file assembly plus the in-run checkpoint
+//! sinks that collect per-rank sections and write one complete snapshot
+//! file per checkpoint step — [`CheckpointSink`] when every rank is a
+//! thread of this process, [`PartSink`] when each rank is its own
+//! process and sections must meet on the filesystem instead.
 //!
 //! Checkpoint I/O is deliberately invisible to the simulation: capture
 //! only *reads* rank state, sections travel through shared process
-//! memory (not the simulated-MPI communicator, whose byte counters
-//! reproduce the paper's tables and must not see checkpoint traffic),
-//! and files are written atomically (temp file + rename) so a crash
-//! mid-write never leaves a half-snapshot behind.
+//! memory or part files (not the simulated-MPI communicator, whose byte
+//! counters reproduce the paper's tables and must not see checkpoint
+//! traffic), and files are written atomically (temp file + rename) so a
+//! crash mid-write never leaves a half-snapshot behind.
+//!
+//! Both sinks apply the `checkpoint_keep` retention ring (prune the
+//! oldest snapshots after each successful write) and both route the
+//! final file through the `fault::on_checkpoint_write` hook, so
+//! checkpoint failures are injectable deterministically (DESIGN.md
+//! §13).
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::Mutex;
 
-use super::format::{RankSection, SnapshotHeader, SNAPSHOT_EXT};
+use super::format::{content_checksum, RankSection, SnapshotHeader, SNAPSHOT_EXT};
 use crate::balance::Partition;
 use crate::config::SimConfig;
+use crate::fault::CkptAction;
 use crate::util::wire::{put_u32, put_u64};
 
 /// Canonical file name of the checkpoint taken with `next_step` steps
@@ -54,7 +63,7 @@ pub fn snapshot_file_name(next_step: u64) -> String {
 /// Assemble and atomically write one snapshot file from already-encoded
 /// per-rank sections (`sections[r]` = rank r, see `RankSection::encode`)
 /// under the uniform stride layout. Always writes the current format
-/// version (v4); the reader additionally accepts v1–v3 files. Runs with
+/// version (v5); the reader additionally accepts v1–v4 files. Runs with
 /// an active (or skewed) load-balancing partition go through
 /// [`write_snapshot_with_partition`] instead, so the ownership section
 /// records which rank owned which id range at capture time.
@@ -92,6 +101,7 @@ fn write_with_header(
             cfg.ranks
         ));
     }
+    let next_step = header.next_step;
     let mut buf = Vec::with_capacity(
         64 + sections.iter().map(|s| s.len() + 12).sum::<usize>(),
     );
@@ -101,12 +111,83 @@ fn write_with_header(
         put_u64(&mut buf, section.len() as u64);
         buf.extend_from_slice(section);
     }
+    // v5 trailer: whole-file content checksum, so the recovery scan can
+    // reject any corrupt or truncated checkpoint with a checked read.
+    let checksum = content_checksum(&buf);
+    put_u64(&mut buf, checksum);
+    // Deterministic fault injection (no-ops unless a plan is armed in
+    // this process): fail the write outright, or leave a truncated —
+    // hence checksum-invalid — file in place that the recovery scan
+    // must fall back past.
+    match crate::fault::on_checkpoint_write(next_step) {
+        CkptAction::Pass => {}
+        CkptAction::Fail => {
+            return Err(format!(
+                "injected fault: checkpoint write for step {next_step} failed"
+            ));
+        }
+        CkptAction::Corrupt => {
+            eprintln!("[fault] corrupting checkpoint for step {next_step}");
+            buf.truncate(buf.len() * 2 / 3);
+        }
+    }
     let tmp = path.with_extension("ilmisnap.tmp");
     std::fs::write(&tmp, &buf)
         .map_err(|e| format!("writing snapshot {}: {e}", tmp.display()))?;
     std::fs::rename(&tmp, path)
         .map_err(|e| format!("renaming snapshot into place at {}: {e}", path.display()))?;
     Ok(())
+}
+
+/// Apply the `checkpoint_keep` retention ring: keep only the newest
+/// `keep` complete snapshots in `dir`, deleting older `.ilmisnap` files
+/// plus any stale part/claim files from checkpoints that can no longer
+/// matter (their step precedes the newest complete snapshot). `keep ==
+/// 0` means keep everything. Prune errors are non-fatal by design —
+/// the snapshot that was just written is already safe on disk — so the
+/// function reports, at most, a best effort.
+pub fn prune_checkpoint_ring(dir: &Path, keep: usize) {
+    let Ok(entries) = std::fs::read_dir(dir) else { return };
+    let mut snaps: Vec<PathBuf> = Vec::new();
+    let mut scraps: Vec<PathBuf> = Vec::new();
+    for entry in entries.flatten() {
+        let path = entry.path();
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        if name.ends_with(&format!(".{SNAPSHOT_EXT}")) && name.starts_with("step_") {
+            snaps.push(path);
+        } else if name.starts_with("step_")
+            && (name.ends_with(".sect") || name.ends_with(".claim"))
+        {
+            scraps.push(path);
+        }
+    }
+    // Zero-padded step numbers sort lexicographically = numerically.
+    snaps.sort();
+    if keep > 0 && snaps.len() > keep {
+        for old in &snaps[..snaps.len() - keep] {
+            let _ = std::fs::remove_file(old);
+        }
+    }
+    // Part/claim files for steps at or before the newest complete
+    // snapshot are leftovers of failed or finished assemblies: an
+    // assembly that has not completed by the time a NEWER snapshot
+    // exists never will (deposits arrive in step order).
+    let newest = snaps.last().and_then(|p| step_of_file_name(p));
+    if let Some(newest) = newest {
+        for scrap in &scraps {
+            if step_of_file_name(scrap).is_some_and(|s| s <= newest) {
+                let _ = std::fs::remove_file(scrap);
+            }
+        }
+    }
+}
+
+/// Parse the step number out of a `step_{N:010}.*` checkpoint-related
+/// file name; `None` for anything else.
+pub fn step_of_file_name(path: &Path) -> Option<u64> {
+    let name = path.file_name()?.to_str()?;
+    name.strip_prefix("step_")?.get(..10)?.parse().ok()
 }
 
 /// Convenience for callers holding decoded sections (examples, tests).
@@ -118,6 +199,23 @@ pub fn write_snapshot_sections(
 ) -> Result<(), String> {
     let encoded: Vec<Vec<u8>> = sections.iter().map(|s| s.encode()).collect();
     write_snapshot(path, cfg, next_step, &encoded)
+}
+
+/// What the driver's step loop needs from a checkpoint sink, abstracted
+/// over WHERE the other ranks' sections live: shared process memory
+/// ([`CheckpointSink`], thread backend) or part files in the checkpoint
+/// directory ([`PartSink`], process-per-rank socket backend). Failures
+/// must be recorded, not returned — a rank aborting its step loop over
+/// checkpoint I/O would deadlock the others at the next collective.
+pub trait SectionSink: Sync {
+    /// Deposit rank `rank`'s encoded section for the checkpoint taken
+    /// with `next_step` steps completed, recording (never propagating)
+    /// failures.
+    fn deposit_nonfatal(&self, next_step: u64, rank: usize, section: Vec<u8>, partition: &Partition);
+
+    /// The first recorded failure, surfaced by the driver after all
+    /// ranks have joined.
+    fn first_error(&self) -> Option<String>;
 }
 
 /// Collects per-rank sections during a run and writes one snapshot file
@@ -221,8 +319,285 @@ impl CheckpointSink {
             Some((sections, part)) => {
                 let path = self.dir.join(snapshot_file_name(next_step));
                 write_snapshot_with_partition(&path, &self.cfg, next_step, &part, &sections)?;
+                prune_checkpoint_ring(&self.dir, self.cfg.checkpoint_keep);
                 Ok(Some(path))
             }
         }
+    }
+}
+
+impl SectionSink for CheckpointSink {
+    fn deposit_nonfatal(
+        &self,
+        next_step: u64,
+        rank: usize,
+        section: Vec<u8>,
+        partition: &Partition,
+    ) {
+        CheckpointSink::deposit_nonfatal(self, next_step, rank, section, partition)
+    }
+
+    fn first_error(&self) -> Option<String> {
+        CheckpointSink::first_error(self)
+    }
+}
+
+/// Name of rank `rank`'s part file for the checkpoint at `next_step`.
+fn part_file_name(next_step: u64, rank: usize) -> String {
+    format!("step_{next_step:010}.r{rank}.sect")
+}
+
+/// Name of the assembly claim file for the checkpoint at `next_step`.
+fn claim_file_name(next_step: u64) -> String {
+    format!("step_{next_step:010}.claim")
+}
+
+/// The process-per-rank checkpoint sink: rank processes cannot share a
+/// `CheckpointSink`, so sections meet on the filesystem instead. Each
+/// rank atomically writes its encoded section to a part file
+/// (`step_N.rK.sect`); whichever rank then observes all parts present
+/// claims assembly (an exclusive `step_N.claim` create), reads them
+/// back, and writes the ordinary snapshot file — byte-identical to what
+/// the thread backend's sink writes, which the cross-backend
+/// differential suite pins.
+///
+/// Liveness: part renames are totally ordered per step, so the rank
+/// that performs the LAST rename observes a complete set and triggers
+/// assembly; the claim file makes racing observers idempotent. No
+/// communicator traffic is involved, so the paper's byte counters never
+/// see checkpoint I/O here either.
+pub struct PartSink {
+    dir: PathBuf,
+    cfg: SimConfig,
+    first_error: Mutex<Option<String>>,
+}
+
+impl PartSink {
+    /// Create the sink (and the checkpoint directory) for one rank
+    /// process.
+    pub fn create(cfg: &SimConfig) -> Result<PartSink, String> {
+        if cfg.checkpoint_dir.is_empty() {
+            return Err("checkpoint part sink needs a non-empty checkpoint_dir".to_string());
+        }
+        let dir = PathBuf::from(&cfg.checkpoint_dir);
+        std::fs::create_dir_all(&dir)
+            .map_err(|e| format!("creating checkpoint dir {}: {e}", dir.display()))?;
+        Ok(PartSink { dir, cfg: cfg.clone(), first_error: Mutex::new(None) })
+    }
+
+    /// Deposit this rank's section; assembles and writes the snapshot
+    /// if this deposit completed the set. Returns the snapshot path if
+    /// this call performed the assembly.
+    pub fn deposit(
+        &self,
+        next_step: u64,
+        rank: usize,
+        section: Vec<u8>,
+        partition: &Partition,
+    ) -> Result<Option<PathBuf>, String> {
+        // Atomic part write: tmp + rename, like the snapshot itself.
+        let part = self.dir.join(part_file_name(next_step, rank));
+        let tmp = part.with_extension("sect.tmp");
+        std::fs::write(&tmp, &section)
+            .map_err(|e| format!("writing checkpoint part {}: {e}", tmp.display()))?;
+        std::fs::rename(&tmp, &part)
+            .map_err(|e| format!("renaming checkpoint part {}: {e}", part.display()))?;
+        // Completeness check. At least one rank — the one whose rename
+        // lands last — sees every part present.
+        for r in 0..self.cfg.ranks {
+            if !self.dir.join(part_file_name(next_step, r)).exists() {
+                return Ok(None);
+            }
+        }
+        // Claim assembly exclusively; losing the race is success.
+        let claim = self.dir.join(claim_file_name(next_step));
+        match std::fs::OpenOptions::new().write(true).create_new(true).open(&claim) {
+            Ok(_) => {}
+            Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => return Ok(None),
+            Err(e) => return Err(format!("claiming assembly {}: {e}", claim.display())),
+        }
+        let mut sections = Vec::with_capacity(self.cfg.ranks);
+        for r in 0..self.cfg.ranks {
+            let path = self.dir.join(part_file_name(next_step, r));
+            sections.push(
+                std::fs::read(&path)
+                    .map_err(|e| format!("reading checkpoint part {}: {e}", path.display()))?,
+            );
+        }
+        let path = self.dir.join(snapshot_file_name(next_step));
+        write_snapshot_with_partition(&path, &self.cfg, next_step, partition, &sections)?;
+        for r in 0..self.cfg.ranks {
+            let _ = std::fs::remove_file(self.dir.join(part_file_name(next_step, r)));
+        }
+        let _ = std::fs::remove_file(&claim);
+        prune_checkpoint_ring(&self.dir, self.cfg.checkpoint_keep);
+        Ok(Some(path))
+    }
+}
+
+impl SectionSink for PartSink {
+    fn deposit_nonfatal(
+        &self,
+        next_step: u64,
+        rank: usize,
+        section: Vec<u8>,
+        partition: &Partition,
+    ) {
+        if let Err(e) = self.deposit(next_step, rank, section, partition) {
+            let mut first = self.first_error.lock().unwrap();
+            if first.is_none() {
+                eprintln!("warning: checkpoint at step {next_step} failed: {e}");
+                *first = Some(e);
+            }
+        }
+    }
+
+    fn first_error(&self) -> Option<String> {
+        self.first_error.lock().unwrap().clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fresh_dir(label: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("ilmi_writer_{label}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn tiny_cfg(dir: &Path) -> SimConfig {
+        let mut cfg = SimConfig::default();
+        cfg.ranks = 2;
+        cfg.neurons_per_rank = 8;
+        cfg.checkpoint_every = 10;
+        cfg.checkpoint_dir = dir.to_str().unwrap().to_string();
+        cfg
+    }
+
+    fn names_in(dir: &Path) -> Vec<String> {
+        let mut names: Vec<String> = std::fs::read_dir(dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .collect();
+        names.sort();
+        names
+    }
+
+    #[test]
+    fn ring_prune_keeps_newest_and_clears_stale_scraps() {
+        let dir = fresh_dir("ring");
+        for name in [
+            "step_0000000050.ilmisnap",
+            "step_0000000100.ilmisnap",
+            "step_0000000150.ilmisnap",
+            "step_0000000100.r0.sect", // stale: ≤ newest snapshot
+            "step_0000000100.claim",   // stale: ≤ newest snapshot
+            "step_0000000200.r1.sect", // in-flight: newer than any snapshot
+            "unrelated.txt",
+        ] {
+            std::fs::write(dir.join(name), b"x").unwrap();
+        }
+
+        // keep == 0 keeps every snapshot but still clears stale scraps.
+        prune_checkpoint_ring(&dir, 0);
+        assert_eq!(
+            names_in(&dir),
+            vec![
+                "step_0000000050.ilmisnap",
+                "step_0000000100.ilmisnap",
+                "step_0000000150.ilmisnap",
+                "step_0000000200.r1.sect",
+                "unrelated.txt",
+            ]
+        );
+
+        prune_checkpoint_ring(&dir, 2);
+        assert_eq!(
+            names_in(&dir),
+            vec![
+                "step_0000000100.ilmisnap",
+                "step_0000000150.ilmisnap",
+                "step_0000000200.r1.sect",
+                "unrelated.txt",
+            ]
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn step_parsing_handles_all_checkpoint_file_kinds() {
+        for (name, want) in [
+            ("step_0000000100.ilmisnap", Some(100)),
+            ("step_0000000100.r3.sect", Some(100)),
+            ("step_0000000100.claim", Some(100)),
+            ("step_123.ilmisnap", None), // not zero-padded to width 10
+            ("other.ilmisnap", None),
+        ] {
+            assert_eq!(step_of_file_name(Path::new(name)), want, "{name}");
+        }
+    }
+
+    #[test]
+    fn part_sink_assembles_exactly_once_and_cleans_up() {
+        let dir = fresh_dir("parts");
+        let cfg = tiny_cfg(&dir);
+        let part = Partition::uniform(cfg.ranks, cfg.neurons_per_rank as u64);
+        let sink = PartSink::create(&cfg).unwrap();
+
+        assert_eq!(sink.deposit(10, 0, vec![1, 2, 3], &part).unwrap(), None);
+        assert_eq!(names_in(&dir), vec!["step_0000000010.r0.sect"]);
+
+        let written = sink.deposit(10, 1, vec![4, 5], &part).unwrap();
+        assert_eq!(written, Some(dir.join("step_0000000010.ilmisnap")));
+        // Parts and claim are gone; only the assembled snapshot remains.
+        assert_eq!(names_in(&dir), vec!["step_0000000010.ilmisnap"]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn part_sink_output_is_byte_identical_to_checkpoint_sink() {
+        // The cross-backend differential suite relies on socket-run
+        // checkpoints matching thread-run checkpoints bit for bit; pin
+        // that at the sink level (same cfg, hence same embedded INI).
+        let dir = fresh_dir("equiv");
+        let cfg = tiny_cfg(&dir);
+        let part = Partition::uniform(cfg.ranks, cfg.neurons_per_rank as u64);
+        let sections = [vec![9u8; 40], vec![7u8; 40]];
+
+        let shared = CheckpointSink::create(&cfg).unwrap();
+        shared.deposit(20, 0, sections[0].clone(), &part).unwrap();
+        let path = shared.deposit(20, 1, sections[1].clone(), &part).unwrap().unwrap();
+        let via_threads = std::fs::read(&path).unwrap();
+        std::fs::remove_file(&path).unwrap();
+
+        let parts = PartSink::create(&cfg).unwrap();
+        parts.deposit(20, 0, sections[0].clone(), &part).unwrap();
+        parts.deposit(20, 1, sections[1].clone(), &part).unwrap();
+        let via_parts = std::fs::read(&path).unwrap();
+
+        assert_eq!(via_threads, via_parts);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn checkpoint_sink_applies_the_retention_ring() {
+        let dir = fresh_dir("sink_ring");
+        let mut cfg = tiny_cfg(&dir);
+        cfg.checkpoint_keep = 2;
+        let part = Partition::uniform(cfg.ranks, cfg.neurons_per_rank as u64);
+        let sink = CheckpointSink::create(&cfg).unwrap();
+        for step in [10u64, 20, 30] {
+            sink.deposit(step, 0, vec![1], &part).unwrap();
+            sink.deposit(step, 1, vec![2], &part).unwrap();
+        }
+        assert_eq!(
+            names_in(&dir),
+            vec!["step_0000000020.ilmisnap", "step_0000000030.ilmisnap"]
+        );
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -80,7 +80,7 @@ mod tests {
         };
         let r0 = RankReport { rank: 0, trace: vec![s.clone(), s.clone()], ..Default::default() };
         let r1 = RankReport { rank: 1, trace: vec![s], ..Default::default() };
-        let sim = SimReport { ranks: vec![r0, r1], wall_seconds: 0.0 };
+        let sim = SimReport { ranks: vec![r0, r1], ..Default::default() };
         let text = trace_jsonl(&sim);
         let lines: Vec<&str> = text.lines().collect();
         assert_eq!(lines.len(), 3);

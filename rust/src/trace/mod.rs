@@ -51,6 +51,11 @@ pub const SPIKE_EPOCH: u8 = 1 << 0;
 pub const PLASTICITY_EPOCH: u8 = 1 << 1;
 /// Sample boundary coincided with a balance epoch.
 pub const BALANCE_EPOCH: u8 = 1 << 2;
+/// First sample of a segment that resumed from a checkpoint after a
+/// supervised recovery (DESIGN.md §13). Unlike the other bits this is
+/// NOT a pure function of step and config — it marks where a fault
+/// actually struck, so recovery points stay visible in exported traces.
+pub const RECOVERY_EPOCH: u8 = 1 << 3;
 
 /// Human-readable names for a [`EpochSample::boundaries`] bit set.
 pub fn boundary_names(bits: u8) -> Vec<&'static str> {
@@ -63,6 +68,9 @@ pub fn boundary_names(bits: u8) -> Vec<&'static str> {
     }
     if bits & BALANCE_EPOCH != 0 {
         out.push("balance");
+    }
+    if bits & RECOVERY_EPOCH != 0 {
+        out.push("recovery");
     }
     out
 }
@@ -77,8 +85,10 @@ pub struct EpochSample {
     /// `step - trace_every + 1 ..= step`).
     pub step: u64,
     /// Which epoch kinds this boundary coincided with
-    /// ([`SPIKE_EPOCH`] | [`PLASTICITY_EPOCH`] | [`BALANCE_EPOCH`]).
-    /// A pure function of step and config.
+    /// ([`SPIKE_EPOCH`] | [`PLASTICITY_EPOCH`] | [`BALANCE_EPOCH`] |
+    /// [`RECOVERY_EPOCH`]). A pure function of step and config, except
+    /// `RECOVERY_EPOCH`, which marks the first sample after a
+    /// supervised restart.
     pub boundaries: u8,
     /// Microseconds since the tracer was primed. Observational only.
     pub ts_micros: f64,
@@ -291,6 +301,10 @@ mod tests {
         assert_eq!(s[1].retractions, 2);
         assert_eq!(s[1].boundaries, PLASTICITY_EPOCH | BALANCE_EPOCH);
         assert_eq!(boundary_names(s[1].boundaries), vec!["plasticity", "balance"]);
+        assert_eq!(
+            boundary_names(SPIKE_EPOCH | RECOVERY_EPOCH),
+            vec!["spike", "recovery"]
+        );
     }
 
     #[test]

@@ -140,7 +140,7 @@ mod tests {
             ..RankReport::default()
         };
         // Unequal sample counts: rank 1's ring evicted one sample.
-        SimReport { ranks: vec![mk(0, 48, 3), mk(1, 16, 2)], wall_seconds: 1.0 }
+        SimReport { ranks: vec![mk(0, 48, 3), mk(1, 16, 2)], wall_seconds: 1.0, ..Default::default() }
     }
 
     #[test]

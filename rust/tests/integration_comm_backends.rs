@@ -229,11 +229,74 @@ fn launcher_runs_entries_and_collects_results_in_rank_order() {
         ranks: 3,
         args: b"hi",
         timeout: Duration::from_secs(60),
+        env: &[],
     };
     let results = proc::run_entry(&spec).expect("launch failed");
     for (rank, bytes) in results.iter().enumerate() {
         assert_eq!(bytes, &[b'h', b'i', rank as u8], "rank {rank}");
     }
+}
+
+/// Count THIS process's launcher rendezvous directories currently on
+/// disk (`ilmi-pc<pid>-<seq>`; the pid scoping excludes other test
+/// binaries running concurrently).
+fn rendezvous_dirs() -> usize {
+    let prefix = format!("ilmi-pc{}-", std::process::id());
+    std::fs::read_dir(std::env::temp_dir())
+        .map(|rd| {
+            rd.filter_map(|e| e.ok())
+                .filter(|e| e.file_name().to_string_lossy().starts_with(&prefix))
+                .count()
+        })
+        .unwrap_or(0)
+}
+
+#[test]
+fn launcher_cleans_rendezvous_dirs_on_success_and_failure() {
+    set_child_hook();
+    // Success path: echo fleet comes and goes without leaving a dir.
+    // Other tests in this binary launch fleets concurrently, so compare
+    // against a baseline taken right before rather than asserting zero.
+    let spec = LaunchSpec {
+        entry: "echo",
+        ranks: 2,
+        args: b"ok",
+        timeout: Duration::from_secs(60),
+        env: &[],
+    };
+    proc::run_entry(&spec).expect("launch failed");
+    // Failure path: a dying fleet must not leak its dir either (the
+    // guard removes it even when run_entry returns Err).
+    let spec = LaunchSpec {
+        entry: "die_mid_collective",
+        ranks: 2,
+        args: &[],
+        timeout: Duration::from_secs(20),
+        env: &[],
+    };
+    proc::run_entry(&spec).expect_err("a dead rank must fail the launch");
+    // Both fleets above are fully reaped by the time run_entry returns,
+    // so any ilmi-pc-* dirs still present belong to fleets of OTHER
+    // concurrently-running tests — bounded by this binary's own test
+    // thread count, while a leak from the two launches above would
+    // accumulate. Run the pair again and require no growth.
+    let before = rendezvous_dirs();
+    for _ in 0..2 {
+        let spec = LaunchSpec {
+            entry: "echo",
+            ranks: 2,
+            args: b"ok",
+            timeout: Duration::from_secs(60),
+            env: &[],
+        };
+        proc::run_entry(&spec).expect("launch failed");
+    }
+    assert!(
+        rendezvous_dirs() <= before + 1,
+        "rendezvous dirs accumulated: {} then {}",
+        before,
+        rendezvous_dirs()
+    );
 }
 
 #[test]
@@ -245,6 +308,7 @@ fn launcher_surfaces_a_dead_rank_as_an_error_not_a_hang() {
         ranks: 2,
         args: &[],
         timeout: Duration::from_secs(20),
+        env: &[],
     };
     let err = proc::run_entry(&spec).expect_err("a dead rank must fail the launch");
     // Either failure order is legitimate: the survivor's poisoned-panic

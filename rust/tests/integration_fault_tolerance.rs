@@ -1,0 +1,181 @@
+//! Fault-tolerance suite: deterministic fault injection + supervised
+//! checkpoint-restart recovery (DESIGN.md §13).
+//!
+//! The headline invariant pinned here: a socket fleet whose rank is
+//! KILLED mid-run (and whose newest checkpoint may additionally be
+//! CORRUPTED) recovers under the supervisor and finishes with a final
+//! snapshot that is byte-for-byte identical to an uninterrupted run's —
+//! for both spike-algorithm generations. Recovery is allowed to cost
+//! wall time, never trajectory.
+//!
+//! Also here: the supervisor's give-up path — when `max_recoveries` is
+//! exhausted it returns an error promptly (no hang), with every rank
+//! process reaped and no rendezvous directory left behind.
+
+#![cfg(unix)]
+
+use std::path::PathBuf;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use ilmi::bench::{AlgGen, Regime, RunSettings, Scenario};
+use ilmi::comm::proc;
+use ilmi::config::{CommBackend, KernelKind, SimConfig};
+use ilmi::coordinator::{run_simulation, SOCKET_ENTRIES};
+use ilmi::snapshot::snapshot_file_name;
+
+/// Each test launches a 2-process fleet (several times, with kills);
+/// running them concurrently would oversubscribe CI and turn launch
+/// timeouts flaky, so the suite serializes itself.
+static SERIAL: Mutex<()> = Mutex::new(());
+
+/// Child-side hook: rank processes spawned from this binary re-exec it
+/// with `--exact zz_socket_child`, which dispatches into the standard
+/// entry registry and exits. A normal suite run falls straight through.
+#[test]
+fn zz_socket_child() {
+    proc::maybe_run_child(SOCKET_ENTRIES);
+}
+
+fn set_child_hook() {
+    std::env::set_var(proc::ENV_CHILD_ARGS, "zz_socket_child --exact");
+}
+
+fn fresh_dir(label: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("ilmi_ft_{label}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// A 2-rank socket run with checkpoints at steps 50/100/150 and the
+/// supervisor armed. 150 steps x 16 neurons keeps one fleet launch
+/// comfortably inside the launch timeout even on loaded CI.
+fn supervised_cfg(alg: AlgGen, dir: &std::path::Path) -> SimConfig {
+    let settings =
+        RunSettings { steps: 150, plasticity_interval: 50, warmup: 0, reps: 1, seed: 42 };
+    let mut cfg = Scenario {
+        alg,
+        ranks: 2,
+        neurons_per_rank: 16,
+        delta: 50,
+        regime: Regime::Active,
+        skew: false,
+        kernel: KernelKind::Scalar,
+    }
+    .config(&settings);
+    cfg.comm_backend = CommBackend::Socket;
+    cfg.checkpoint_every = 50;
+    cfg.checkpoint_dir = dir.to_string_lossy().into_owned();
+    cfg.max_recoveries = 2;
+    cfg
+}
+
+/// Run clean, capture the final snapshot's bytes, WIPE the directory,
+/// rerun with `fault_plan` injected into the SAME directory (same path
+/// ⇒ same embedded config INI ⇒ byte-comparable files), and return
+/// (clean final bytes, faulted final bytes, faulted report).
+fn clean_vs_faulted(
+    alg: AlgGen,
+    label: &str,
+    fault_plan: &str,
+) -> (Vec<u8>, Vec<u8>, ilmi::metrics::SimReport) {
+    let dir = fresh_dir(label);
+    let cfg = supervised_cfg(alg, &dir);
+    let clean = run_simulation(&cfg).expect("clean supervised run");
+    assert_eq!(clean.recoveries, 0, "nothing failed, nothing to recover");
+    let final_name = snapshot_file_name(150);
+    let clean_bytes = std::fs::read(dir.join(&final_name)).expect("clean final snapshot");
+    std::fs::remove_dir_all(&dir).unwrap();
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let mut faulted = cfg;
+    faulted.fault_plan = fault_plan.to_string();
+    let report = run_simulation(&faulted).expect("faulted run must recover");
+    let faulted_bytes = std::fs::read(dir.join(&final_name)).expect("recovered final snapshot");
+    let _ = std::fs::remove_dir_all(&dir);
+    (clean_bytes, faulted_bytes, report)
+}
+
+#[test]
+fn killed_rank_recovers_bit_identically_new_algorithms() {
+    let _guard = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    set_child_hook();
+    let (clean, faulted, report) =
+        clean_vs_faulted(AlgGen::New, "kill_new", "kill:rank=1,step=120");
+    assert_eq!(report.recoveries, 1, "exactly one supervised relaunch");
+    // Kill at 120, newest checkpoint at 100: no checkpoint evidence of
+    // steps past 100, so the proven-lost count is 0 (a lower bound).
+    assert_eq!(report.lost_steps, 0);
+    for r in &report.ranks {
+        assert_eq!(r.recoveries, 1, "rank {} carries the recovery count", r.rank);
+    }
+    assert_eq!(clean, faulted, "recovered final snapshot must be byte-identical");
+}
+
+#[test]
+fn killed_rank_recovers_bit_identically_old_algorithms() {
+    let _guard = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    set_child_hook();
+    // The old generation exercises the RMA window path during recovery.
+    let (clean, faulted, report) =
+        clean_vs_faulted(AlgGen::Old, "kill_old", "kill:rank=1,step=120");
+    assert_eq!(report.recoveries, 1);
+    assert_eq!(clean, faulted, "recovered final snapshot must be byte-identical");
+}
+
+#[test]
+fn corrupt_newest_checkpoint_falls_back_to_older_ring_entry() {
+    let _guard = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    set_child_hook();
+    // The step-100 checkpoint is written truncated (fails its content
+    // checksum), then rank 1 dies at 120: the scan must reject the
+    // corrupt newest file and resume from step 50 instead — replaying
+    // 50 provably-lost steps — and still finish bit-identically.
+    let (clean, faulted, report) = clean_vs_faulted(
+        AlgGen::New,
+        "corrupt_newest",
+        "ckpt_corrupt:step=100;kill:rank=1,step=120",
+    );
+    assert_eq!(report.recoveries, 1);
+    assert_eq!(report.lost_steps, 50, "step-100 evidence minus step-50 resume point");
+    assert!(report.recovery_seconds > 0.0);
+    assert_eq!(clean, faulted, "recovered final snapshot must be byte-identical");
+}
+
+/// Rendezvous dirs of THIS process's launcher (`ilmi-pc<pid>-<seq>`).
+fn rendezvous_dirs() -> usize {
+    let prefix = format!("ilmi-pc{}-", std::process::id());
+    std::fs::read_dir(std::env::temp_dir())
+        .map(|rd| {
+            rd.filter_map(|e| e.ok())
+                .filter(|e| e.file_name().to_string_lossy().starts_with(&prefix))
+                .count()
+        })
+        .unwrap_or(0)
+}
+
+#[test]
+fn supervisor_gives_up_cleanly_when_recoveries_are_exhausted() {
+    let _guard = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    set_child_hook();
+    let dir = fresh_dir("give_up");
+    let mut cfg = supervised_cfg(AlgGen::New, &dir);
+    // A kill on the first launch AND on the recovery attempt, with only
+    // one recovery allowed: the supervisor must recover once, watch the
+    // fleet die again, and give up with an error — promptly, with every
+    // child reaped and no rendezvous dir left behind.
+    cfg.fault_plan = "kill:rank=1,step=120;kill:rank=1,step=120,attempt=1".to_string();
+    cfg.max_recoveries = 1;
+    let dirs_before = rendezvous_dirs();
+    let start = Instant::now();
+    let err = run_simulation(&cfg).expect_err("both attempts die; the run must fail");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("giving up"), "diagnostic: {msg}");
+    assert!(msg.contains("max_recoveries"), "names the knob to raise: {msg}");
+    // Two short fleet launches plus one backoff — nowhere near the
+    // per-launch timeout, so a hang would be caught here.
+    assert!(start.elapsed() < Duration::from_secs(120), "took {:?}", start.elapsed());
+    assert_eq!(rendezvous_dirs(), dirs_before, "rendezvous dirs leaked");
+    let _ = std::fs::remove_dir_all(&dir);
+}
