@@ -1,0 +1,133 @@
+//! Fleet watch: the live telemetry plane end to end (DESIGN.md §14,
+//! EXPERIMENTS.md §Live telemetry).
+//!
+//! Protocol:
+//!   1. Launch a supervised 2-process socket fleet with heartbeats every
+//!      5 steps, a 3-miss watchdog budget, and `--status-dir` aggregation
+//!      — plus an injected HANG: rank 1's first data frame at/after step
+//!      120 stalls for an hour. A hang is the failure mode a plain
+//!      exit-status supervisor cannot see: nothing dies, nothing reports.
+//!   2. While the fleet runs, a watcher thread polls the status
+//!      directory the way `ilmi status <dir>` does and prints every
+//!      state transition it observes (running -> recovering -> running
+//!      -> done) with the per-rank table.
+//!   3. The starving heartbeat stream trips the supervisor's watchdog,
+//!      which kills, reaps, and relaunches the fleet from the step-100
+//!      checkpoint — the same recovery loop a crashed rank takes.
+//!   4. Assert the run recovered exactly once, the final status reads
+//!      `done`, and telemetry stayed pure observation: the final
+//!      snapshot is byte-identical to a telemetry-free clean run's.
+//!
+//!     cargo run --release --example fleet_watch
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use ilmi::config::{CommBackend, SimConfig};
+use ilmi::coordinator::run_simulation;
+use ilmi::snapshot::snapshot_file_name;
+use ilmi::telemetry::render_status;
+
+fn base_config(ckpt_dir: &std::path::Path) -> SimConfig {
+    let mut cfg = SimConfig {
+        ranks: 2,
+        neurons_per_rank: 16,
+        steps: 200,
+        plasticity_interval: 50,
+        delta: 50,
+        ..SimConfig::default()
+    };
+    cfg.comm_backend = CommBackend::Socket;
+    cfg.checkpoint_every = 50;
+    cfg.checkpoint_dir = ckpt_dir.to_string_lossy().into_owned();
+    cfg.max_recoveries = 2;
+    cfg
+}
+
+fn main() -> anyhow::Result<()> {
+    // Socket-backend rank processes re-exec this binary; the child hook
+    // must run before anything else.
+    ilmi::comm::proc::maybe_run_child(ilmi::coordinator::SOCKET_ENTRIES);
+
+    let root = std::env::temp_dir().join(format!("ilmi_watch_{}", std::process::id()));
+    let ckpt_dir = root.join("ckpts");
+    let status_dir = root.join("status");
+    let _ = std::fs::remove_dir_all(&root);
+    std::fs::create_dir_all(&ckpt_dir)?;
+
+    // Reference: the same schedule with telemetry off, for the purity
+    // check in step 4 (same checkpoint dir => byte-comparable files).
+    let clean_cfg = base_config(&ckpt_dir);
+    clean_cfg.validate().map_err(anyhow::Error::msg)?;
+    println!("-- reference run (telemetry off, no faults) --");
+    let clean = run_simulation(&clean_cfg)?;
+    assert_eq!(clean.recoveries, 0);
+    let final_name = snapshot_file_name(clean_cfg.steps as u64);
+    let reference = std::fs::read(ckpt_dir.join(&final_name))?;
+    std::fs::remove_dir_all(&ckpt_dir)?;
+    std::fs::create_dir_all(&ckpt_dir)?;
+
+    let mut cfg = base_config(&ckpt_dir);
+    cfg.telemetry_every = 5;
+    cfg.telemetry_watchdog_misses = 3;
+    cfg.status_dir = status_dir.to_string_lossy().into_owned();
+    // Rank 1 stalls for an hour before its first data frame at/after
+    // step 120: without the watchdog, the run would ride out a
+    // transport read timeout at best.
+    cfg.fault_plan = "frame_delay:rank=1,nth=1,ms=3600000,step=120".to_string();
+    cfg.validate().map_err(anyhow::Error::msg)?;
+
+    println!(
+        "\n-- watched run: beats every {} steps, watchdog after {} misses, hang at step 120 --",
+        cfg.telemetry_every, cfg.telemetry_watchdog_misses
+    );
+    // The watcher is exactly what `ilmi status <dir>` does, in a loop:
+    // read status.json (atomically rewritten by the supervisor), render,
+    // print on every state transition.
+    let stop = Arc::new(AtomicBool::new(false));
+    let watcher = {
+        let stop = Arc::clone(&stop);
+        let dir = status_dir.clone();
+        std::thread::spawn(move || {
+            let mut last_state = String::new();
+            while !stop.load(Ordering::Relaxed) {
+                if let Ok(table) = render_status(&dir) {
+                    let state = table.lines().next().unwrap_or("").to_string();
+                    if state != last_state {
+                        println!("\n[watch]\n{table}");
+                        last_state = state;
+                    }
+                }
+                std::thread::sleep(Duration::from_millis(100));
+            }
+        })
+    };
+
+    let report = run_simulation(&cfg)?;
+    stop.store(true, Ordering::Relaxed);
+    watcher.join().expect("watcher thread");
+
+    println!("\n{:<22} {:>12}", "recovery ledger", "");
+    println!("{:<22} {:>12}", "recoveries", report.recoveries);
+    println!("{:<22} {:>11.3}s", "recovery wall", report.recovery_seconds);
+    println!("{:<22} {:>11.2}s", "total wall", report.wall_seconds);
+
+    let final_table = render_status(&status_dir).map_err(anyhow::Error::msg)?;
+    println!("\n-- final `ilmi status` --\n{final_table}");
+
+    assert_eq!(report.recoveries, 1, "one watchdog-driven relaunch");
+    assert!(final_table.starts_with("state done"), "{final_table}");
+    let recovered = std::fs::read(ckpt_dir.join(&final_name))?;
+    assert_eq!(
+        reference, recovered,
+        "telemetry + watchdog recovery must not move the trajectory"
+    );
+    println!(
+        "fleet_watch OK: the hang was invisible to exit statuses, the heartbeat \
+         watchdog caught it, and the final snapshot is byte-identical to the \
+         telemetry-free clean run."
+    );
+    let _ = std::fs::remove_dir_all(&root);
+    Ok(())
+}

@@ -1,11 +1,11 @@
 //! The versioned `BENCH_*.json` report: emit, parse, markdown render,
 //! and baseline diffing.
 //!
-//! Schema (`schema_version` 7):
+//! Schema (`schema_version` 8):
 //!
 //! ```json
 //! {
-//!   "schema_version": 7,
+//!   "schema_version": 8,
 //!   "name": "quick",
 //!   "created_unix": 1753500000,
 //!   "fingerprint": "9f…16 hex digits…",
@@ -25,7 +25,10 @@
 //!     "imbalance": …,
 //!     "trace_events": …,
 //!     "kernel_blocks": …,
-//!     "recoveries": …
+//!     "recoveries": …,
+//!     "comm_hist_a2a": …,
+//!     "comm_hist_rma": …,
+//!     "comm_hist_barrier": …
 //!   }, …]
 //! }
 //! ```
@@ -72,8 +75,15 @@ use super::stats::Summary;
 /// `SimReport::recoveries`, DESIGN.md §13) — bench runs inject no
 /// faults, so the expected value is 0 and ANY nonzero value or drift
 /// means the launch path silently failed and recovered, which must
-/// surface as a behavior change, not vanish into timing noise.
-pub const SCHEMA_VERSION: u32 = 7;
+/// surface as a behavior change, not vanish into timing noise; v8 added
+/// the drift-checked `comm_hist_a2a` / `comm_hist_rma` /
+/// `comm_hist_barrier` totals (comm-latency histogram sample counts,
+/// `SimReport::total_comm_hists`, DESIGN.md §14) — totals are
+/// trait-level call counts, deterministic per workload, so an
+/// instrumentation or comm-structure change that alters how often a
+/// primitive runs cannot pass silently, while the per-bucket latency
+/// spread stays observability-only per the PR 5 nanos convention.
+pub const SCHEMA_VERSION: u32 = 8;
 
 /// Timing differences below this many seconds are never regressions —
 /// the thread-rank substrate cannot resolve them reliably.
@@ -124,6 +134,16 @@ pub struct ScenarioResult {
     /// launch path that starts dying-and-recovering cannot pass as a
     /// mere timing blip.
     pub recoveries: u64,
+    /// Comm-latency histogram sample totals summed over ranks
+    /// (`SimReport::total_comm_hists`): how many trait-level
+    /// `all_to_all` / `rma_get` / `barrier` calls the workload made.
+    /// Deterministic call counts — the latency *distribution* is
+    /// wall-clock and deliberately not recorded here (PR 5 nanos
+    /// convention); any drift in the counts is a comm-structure or
+    /// instrumentation change.
+    pub comm_hist_a2a: u64,
+    pub comm_hist_rma: u64,
+    pub comm_hist_barrier: u64,
 }
 
 /// One complete benchmark trajectory (a `BENCH_*.json` file in memory).
@@ -315,6 +335,9 @@ impl BenchReport {
                 ("trace_events", base.trace_events, cur.trace_events),
                 ("kernel_blocks", base.kernel_blocks, cur.kernel_blocks),
                 ("recoveries", base.recoveries, cur.recoveries),
+                ("comm_hist_a2a", base.comm_hist_a2a, cur.comm_hist_a2a),
+                ("comm_hist_rma", base.comm_hist_rma, cur.comm_hist_rma),
+                ("comm_hist_barrier", base.comm_hist_barrier, cur.comm_hist_barrier),
             ];
             for (field, b, c) in counter_fields {
                 if b != c {
@@ -458,6 +481,9 @@ fn scenario_to_json(r: &ScenarioResult) -> Json {
         ("trace_events", Json::Num(r.trace_events as f64)),
         ("kernel_blocks", Json::Num(r.kernel_blocks as f64)),
         ("recoveries", Json::Num(r.recoveries as f64)),
+        ("comm_hist_a2a", Json::Num(r.comm_hist_a2a as f64)),
+        ("comm_hist_rma", Json::Num(r.comm_hist_rma as f64)),
+        ("comm_hist_barrier", Json::Num(r.comm_hist_barrier as f64)),
     ])
 }
 
@@ -511,6 +537,9 @@ fn scenario_from_json(v: &Json) -> Result<ScenarioResult, String> {
         trace_events: v.req("trace_events")?.as_u64()?,
         kernel_blocks: v.req("kernel_blocks")?.as_u64()?,
         recoveries: v.req("recoveries")?.as_u64()?,
+        comm_hist_a2a: v.req("comm_hist_a2a")?.as_u64()?,
+        comm_hist_rma: v.req("comm_hist_rma")?.as_u64()?,
+        comm_hist_barrier: v.req("comm_hist_barrier")?.as_u64()?,
     })
 }
 
@@ -555,6 +584,9 @@ mod tests {
             trace_events: 42,
             kernel_blocks: 400,
             recoveries: 0,
+            comm_hist_a2a: 600,
+            comm_hist_rma: 35,
+            comm_hist_barrier: 200,
         }
     }
 
@@ -608,17 +640,17 @@ mod tests {
     #[test]
     fn unsupported_schema_version_is_rejected() {
         let text = sample_report().to_json().replace(
-            "\"schema_version\": 7",
+            "\"schema_version\": 8",
             "\"schema_version\": 99",
         );
         let err = BenchReport::from_json(&text).unwrap_err();
         assert!(err.contains("schema version"), "{err}");
-        // The previous schema generation is refused too — a v6 baseline
-        // has no recoveries counter to drift-check against, so
+        // The previous schema generation is refused too — a v7 baseline
+        // has no comm_hist_* totals to drift-check against, so
         // cross-schema trajectories are not comparable.
         let text = sample_report().to_json().replace(
+            "\"schema_version\": 8",
             "\"schema_version\": 7",
-            "\"schema_version\": 6",
         );
         let err = BenchReport::from_json(&text).unwrap_err();
         assert!(err.contains("schema version"), "{err}");
@@ -792,6 +824,26 @@ mod tests {
         let broken = text.replace("\"recoveries\"", "\"recoveries_gone\"");
         let err = BenchReport::from_json(&broken).unwrap_err();
         assert!(err.contains("recoveries"), "{err}");
+    }
+
+    #[test]
+    fn comm_hist_drift_is_flagged_and_v8_fields_are_required() {
+        let base = sample_report();
+        let mut cur = sample_report();
+        // An extra barrier slipped into the step loop: totals are call
+        // counts, so this is drift no matter what the latencies were.
+        cur.results[0].comm_hist_barrier += 1;
+        let diff = cur.diff(&base, 0.2).unwrap();
+        assert_eq!(diff.regressions(), 1);
+        assert!(diff.render().contains("COUNTER DRIFT comm_hist_barrier"));
+        // The v8 schema requires all three totals on every scenario.
+        let text = base.to_json();
+        for field in ["comm_hist_a2a", "comm_hist_rma", "comm_hist_barrier"] {
+            assert!(text.contains(&format!("\"{field}\"")), "{field} missing");
+            let broken = text.replace(&format!("\"{field}\""), "\"hist_gone\"");
+            let err = BenchReport::from_json(&broken).unwrap_err();
+            assert!(err.contains(field), "{err}");
+        }
     }
 
     #[test]

@@ -49,6 +49,7 @@ pub fn run_scenario_with_backend(
     let mut trace_events = 0u64;
     let mut kernel_blocks = 0u64;
     let mut recoveries = 0u64;
+    let mut comm_hists = crate::metrics::CommHistSnapshot::default();
     for rep in 0..settings.reps.max(1) {
         let report = run_simulation(&cfg)?;
         for p in ALL_PHASES {
@@ -152,6 +153,30 @@ pub fn run_scenario_with_backend(
             );
         }
         recoveries = rec;
+        // Histogram totals are trait-level call counts — deterministic
+        // like the comm counters (the per-bucket spread is wall-clock
+        // and never recorded here) — the schema-v8 fields the baseline
+        // diff drift-checks.
+        let hists = report.total_comm_hists();
+        if rep > 0
+            && (hists.a2a.total() != comm_hists.a2a.total()
+                || hists.rma.total() != comm_hists.rma.total()
+                || hists.barrier.total() != comm_hists.barrier.total())
+        {
+            anyhow::bail!(
+                "comm-histogram totals drifted between repetitions of {} \
+                 (a2a/rma/barrier {}/{}/{} then {}/{}/{}) — determinism bug in \
+                 the comm instrumentation",
+                scenario.id(),
+                comm_hists.a2a.total(),
+                comm_hists.rma.total(),
+                comm_hists.barrier.total(),
+                hists.a2a.total(),
+                hists.rma.total(),
+                hists.barrier.total()
+            );
+        }
+        comm_hists = hists;
     }
     let mut phases = [Summary::default(); ALL_PHASES.len()];
     for p in ALL_PHASES {
@@ -169,6 +194,9 @@ pub fn run_scenario_with_backend(
         trace_events,
         kernel_blocks,
         recoveries,
+        comm_hist_a2a: comm_hists.a2a.total(),
+        comm_hist_rma: comm_hists.rma.total(),
+        comm_hist_barrier: comm_hists.barrier.total(),
     })
 }
 
@@ -268,6 +296,14 @@ mod tests {
         assert_eq!(a.kernel_blocks, 120);
         // No faults injected, so no supervised relaunches.
         assert_eq!(a.recoveries, 0);
+        // Histogram totals are call counts: deterministic across whole
+        // harness runs, nonzero on an exchanging net, and RMA-free for
+        // the new algorithm (it never downloads subtrees).
+        assert_eq!(a.comm_hist_a2a, b.comm_hist_a2a);
+        assert_eq!(a.comm_hist_barrier, b.comm_hist_barrier);
+        assert!(a.comm_hist_a2a > 0, "exchanging net must time all_to_all");
+        assert!(a.comm_hist_barrier > 0);
+        assert_eq!(a.comm_hist_rma, 0);
     }
 
     #[test]

@@ -29,6 +29,7 @@
 
 use super::counters::{CommCounters, CounterSnapshot};
 use super::thread_comm::WindowKey;
+use crate::metrics::histogram::CommHistSnapshot;
 
 /// A simulated-MPI communicator endpoint for one rank. See the module
 /// docs for the accounting and synchronization contract every backend
@@ -74,6 +75,14 @@ pub trait Comm {
     /// callers quiesce with a `barrier` first when they need a
     /// deterministic cut).
     fn all_counters(&self) -> Vec<CounterSnapshot>;
+
+    /// Snapshot of this rank's comm latency histograms. Every
+    /// `all_to_all`, `rma_get` (self-gets included), and `barrier` call
+    /// made *through the trait* records one sample, so per-primitive
+    /// totals are deterministic call counts identical across backends;
+    /// the per-bucket spread is wall-clock and observability-only.
+    /// Histogram upkeep never touches `CommCounters`.
+    fn comm_hists(&self) -> CommHistSnapshot;
 
     /// Mark the communicator as failed (a panicking rank sets this so
     /// sibling ranks can be diagnosed instead of deadlocking).

@@ -35,6 +35,8 @@ mod thread_comm;
 pub use api::Comm;
 pub use counters::{CommCounters, CounterSnapshot};
 #[cfg(unix)]
+pub(crate) use socket_comm::beat_wire;
+#[cfg(unix)]
 pub use socket_comm::{decode_frame, encode_frame, socket_ranks, SocketComm, FRAME_HEADER};
 pub use thread_comm::{run_ranks, ThreadComm, WindowKey};
 

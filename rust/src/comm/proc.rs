@@ -29,6 +29,7 @@ use super::socket_comm::{
     fresh_rendezvous_dir, read_frame, tags, write_frame, RendezvousDirGuard, SocketComm,
 };
 use super::Comm;
+use crate::telemetry::HealthFrame;
 use crate::util::wire::{put_u32, Cursor};
 
 /// Entry-function name the child should run (presence marks a child).
@@ -58,9 +59,19 @@ pub struct LaunchSpec<'a> {
     pub timeout: Duration,
     /// Extra environment variables set on every rank process — the
     /// supervisor ships the attempt's fault plan (`ILMI_FAULT_PLAN`)
-    /// this way so faults arm only inside children, never in the
-    /// launching process.
+    /// and the heartbeat cadence (`ILMI_TELEMETRY_EVERY`) this way so
+    /// they arm only inside children, never in the launching process.
     pub env: &'a [(String, String)],
+    /// Hang watchdog: a rank that has sent at least one heartbeat and
+    /// then stays silent for this many multiples of the largest
+    /// inter-beat gap observed so far is declared hung and the launch
+    /// fails (routing into supervised recovery). 0 disables; useless
+    /// without a heartbeat cadence in `env`.
+    pub watchdog_misses: u32,
+    /// Called on every heartbeat received (the supervisor folds these
+    /// into its live status file). `None` drops them after watchdog
+    /// bookkeeping.
+    pub on_beat: Option<&'a dyn Fn(&HealthFrame)>,
 }
 
 /// How long the launcher keeps draining the control socket after a
@@ -92,8 +103,11 @@ pub fn maybe_run_child(entries: &[(&str, Entry)]) {
         std::env::remove_var(key);
     }
     // Arm this rank's injected faults, if the launcher shipped a plan
-    // (consumes and removes ILMI_FAULT_PLAN; no-op otherwise).
+    // (consumes and removes ILMI_FAULT_PLAN; no-op otherwise), and
+    // heartbeat emission, if it shipped a cadence (the control socket
+    // lives in the rendezvous dir, captured before the env-strip above).
     crate::fault::arm_from_env(rank);
+    crate::telemetry::arm_child_from_env(rank, Path::new(&dir));
     std::process::exit(run_child(&entry_name, entries, rank, size, Path::new(&dir), timeout));
 }
 
@@ -205,9 +219,16 @@ fn launch_in(exe: &Path, dir: &Path, spec: &LaunchSpec) -> Result<Vec<Vec<u8>>, 
         }
     }
 
-    let deadline = Instant::now() + spec.timeout + Duration::from_secs(5);
+    let launched = Instant::now();
+    let deadline = launched + spec.timeout + Duration::from_secs(5);
     let mut results: Vec<Option<Vec<u8>>> = (0..spec.ranks).map(|_| None).collect();
     let mut exited_at: Vec<Option<Instant>> = vec![None; spec.ranks];
+    // Watchdog state: when each rank last beat, and the largest
+    // inter-beat gap observed fleet-wide (launch → first beat counts,
+    // so an expensive init can't trip it). The floor keeps a fast fleet
+    // from declaring "hung" over scheduler noise.
+    let mut last_beat: Vec<Option<Instant>> = vec![None; spec.ranks];
+    let mut max_gap = Duration::from_millis(250);
     let mut failure: Option<String> = None;
     while failure.is_none() && results.iter().any(|r| r.is_none()) {
         // Drain every report queued on the control socket.
@@ -217,9 +238,19 @@ fn launch_in(exe: &Path, dir: &Path, spec: &LaunchSpec) -> Result<Vec<Vec<u8>>, 
                     let _ = stream.set_nonblocking(false);
                     let _ = stream.set_read_timeout(Some(Duration::from_secs(5)));
                     match read_report(&stream, spec.ranks) {
-                        Ok((rank, Ok(bytes))) => results[rank] = Some(bytes),
-                        Ok((rank, Err(msg))) => {
+                        Ok(CtlMsg::Result(rank, bytes)) => results[rank] = Some(bytes),
+                        Ok(CtlMsg::ChildErr(rank, msg)) => {
                             failure = Some(format!("socket rank {rank} failed: {msg}"));
+                        }
+                        Ok(CtlMsg::Beat(frame)) => {
+                            let rank = frame.rank as usize;
+                            let now = Instant::now();
+                            let gap = now - last_beat[rank].unwrap_or(launched);
+                            max_gap = max_gap.max(gap);
+                            last_beat[rank] = Some(now);
+                            if let Some(cb) = spec.on_beat {
+                                cb(&frame);
+                            }
                         }
                         Err(e) => failure = Some(format!("malformed child report: {e}")),
                     }
@@ -253,6 +284,26 @@ fn launch_in(exe: &Path, dir: &Path, spec: &LaunchSpec) -> Result<Vec<Vec<u8>>, 
                 }
             }
         }
+        // Hang watchdog: a rank armed itself by beating once; if it then
+        // goes silent for `watchdog_misses` expected gaps while still
+        // result-less and alive, the fleet is declared hung. This is
+        // what turns an rma_stall/frame_delay hang — invisible to
+        // try_wait — into a supervised recovery instead of a launch
+        // timeout (DESIGN.md §14).
+        if failure.is_none() && spec.watchdog_misses > 0 {
+            for rank in 0..spec.ranks {
+                let (Some(beat), None) = (last_beat[rank], &results[rank]) else { continue };
+                let silent = beat.elapsed();
+                if silent > max_gap * spec.watchdog_misses {
+                    failure = Some(format!(
+                        "watchdog: socket rank {rank} missed ~{} heartbeats \
+                         (silent {silent:?}, expected gap ≤{max_gap:?})",
+                        spec.watchdog_misses
+                    ));
+                    break;
+                }
+            }
+        }
         if failure.is_none() && Instant::now() >= deadline {
             failure = Some(format!(
                 "socket launch timed out after {:?} waiting for rank results",
@@ -272,7 +323,14 @@ fn launch_in(exe: &Path, dir: &Path, spec: &LaunchSpec) -> Result<Vec<Vec<u8>>, 
     Ok(results.into_iter().map(|r| r.expect("result checked above")).collect())
 }
 
-fn read_report(stream: &UnixStream, ranks: usize) -> Result<(usize, Result<Vec<u8>, String>), String> {
+/// One message off the control socket.
+enum CtlMsg {
+    Result(usize, Vec<u8>),
+    ChildErr(usize, String),
+    Beat(HealthFrame),
+}
+
+fn read_report(stream: &UnixStream, ranks: usize) -> Result<CtlMsg, String> {
     let (tag, payload) = read_frame(stream).map_err(|e| format!("reading frame: {e}"))?;
     let mut c = Cursor::new(&payload, "child report");
     let rank = c.u32("rank")? as usize;
@@ -282,8 +340,18 @@ fn read_report(stream: &UnixStream, ranks: usize) -> Result<(usize, Result<Vec<u
     let n = c.remaining();
     let body = c.bytes(n, "report body")?.to_vec();
     match tag {
-        tags::RESULT => Ok((rank, Ok(body))),
-        tags::CHILD_ERR => Ok((rank, Err(String::from_utf8_lossy(&body).into_owned()))),
+        tags::RESULT => Ok(CtlMsg::Result(rank, body)),
+        tags::CHILD_ERR => Ok(CtlMsg::ChildErr(rank, String::from_utf8_lossy(&body).into_owned())),
+        tags::HEARTBEAT => {
+            let frame = HealthFrame::decode(&body).map_err(|e| format!("heartbeat: {e}"))?;
+            if frame.rank as usize != rank {
+                return Err(format!(
+                    "heartbeat rank mismatch: envelope {rank}, frame {}",
+                    frame.rank
+                ));
+            }
+            Ok(CtlMsg::Beat(frame))
+        }
         other => Err(format!("unexpected child report tag {other}")),
     }
 }

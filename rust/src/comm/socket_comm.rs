@@ -64,6 +64,10 @@ pub(crate) mod tags {
     pub const RESULT: u8 = 11;
     /// Child → launcher failure frame: `[rank u32][UTF-8 message]`.
     pub const CHILD_ERR: u8 = 12;
+    /// Child → launcher heartbeat: `[rank u32][HealthFrame]` (control
+    /// socket, `telemetry` module). Never on a peer data channel, never
+    /// counted.
+    pub const HEARTBEAT: u8 = 13;
 }
 
 /// Channel kinds carried in the HELLO frame.
@@ -108,6 +112,13 @@ pub fn decode_frame(buf: &[u8]) -> Result<(u8, Vec<u8>), String> {
 pub(crate) fn write_frame(mut stream: &UnixStream, tag: u8, payload: &[u8]) -> std::io::Result<()> {
     stream.write_all(&encode_frame(tag, payload))?;
     stream.flush()
+}
+
+/// Write one `HEARTBEAT` control frame — the telemetry module's only
+/// touchpoint with the frame codec (keeps `write_frame` and the tag
+/// table crate-private to `comm`).
+pub(crate) fn beat_wire(stream: &UnixStream, framed: &[u8]) -> std::io::Result<()> {
+    write_frame(stream, tags::HEARTBEAT, framed)
 }
 
 /// Read one frame from a stream (blocking, honoring any read timeout set
@@ -170,6 +181,9 @@ pub struct SocketComm {
     data_in: Vec<Option<UnixStream>>,
     /// Request/reply client channel to each peer's RMA server thread.
     rma_out: Vec<Option<UnixStream>>,
+    /// Comm latency histograms for calls made through the `Comm` trait.
+    /// Observability-only; never part of `CommCounters` accounting.
+    hists: crate::metrics::histogram::CommHists,
 }
 
 fn connect_retry(path: &Path, deadline: Instant, rank: usize) -> std::io::Result<UnixStream> {
@@ -301,6 +315,7 @@ impl SocketComm {
             data_out: (0..size).map(|_| None).collect(),
             data_in: (0..size).map(|_| None).collect(),
             rma_out: (0..size).map(|_| None).collect(),
+            hists: crate::metrics::histogram::CommHists::default(),
         };
         if size == 1 {
             return Ok(comm); // solo: every operation is local
@@ -507,42 +522,46 @@ impl super::Comm for SocketComm {
     /// the same post/consume discipline as `ThreadComm`'s `Barrier`.
     /// Uncounted, like every synchronization-only operation.
     fn barrier(&self) {
-        for dst in 0..self.size {
-            if dst != self.rank {
-                self.send_data(dst, tags::BARRIER, &[], "barrier");
+        self.hists.barrier.time(|| {
+            for dst in 0..self.size {
+                if dst != self.rank {
+                    self.send_data(dst, tags::BARRIER, &[], "barrier");
+                }
             }
-        }
-        for src in 0..self.size {
-            if src != self.rank {
-                self.recv_data(src, tags::BARRIER, "barrier");
+            for src in 0..self.size {
+                if src != self.rank {
+                    self.recv_data(src, tags::BARRIER, "barrier");
+                }
             }
-        }
+        })
     }
 
     fn all_to_all(&self, mut sends: Vec<Vec<u8>>) -> Vec<Vec<u8>> {
-        let size = self.size;
-        assert_eq!(sends.len(), size, "all_to_all needs one buffer per rank");
-        let me = self.rank;
-        self.counters.add_collective();
-        let mut own = Some(std::mem::take(&mut sends[me]));
-        for (dst, buf) in sends.iter().enumerate() {
-            if dst == me {
-                continue;
+        self.hists.a2a.time(|| {
+            let size = self.size;
+            assert_eq!(sends.len(), size, "all_to_all needs one buffer per rank");
+            let me = self.rank;
+            self.counters.add_collective();
+            let mut own = Some(std::mem::take(&mut sends[me]));
+            for (dst, buf) in sends.iter().enumerate() {
+                if dst == me {
+                    continue;
+                }
+                self.counters.add_sent(buf.len() as u64);
+                self.send_data(dst, tags::COLLECTIVE, buf, "all_to_all");
             }
-            self.counters.add_sent(buf.len() as u64);
-            self.send_data(dst, tags::COLLECTIVE, buf, "all_to_all");
-        }
-        let mut recvs = Vec::with_capacity(size);
-        for src in 0..size {
-            if src == me {
-                recvs.push(own.take().expect("self buffer consumed twice"));
-                continue;
+            let mut recvs = Vec::with_capacity(size);
+            for src in 0..size {
+                if src == me {
+                    recvs.push(own.take().expect("self buffer consumed twice"));
+                    continue;
+                }
+                let buf = self.recv_data(src, tags::COLLECTIVE, "all_to_all");
+                self.counters.add_recv(buf.len() as u64);
+                recvs.push(buf);
             }
-            let buf = self.recv_data(src, tags::COLLECTIVE, "all_to_all");
-            self.counters.add_recv(buf.len() as u64);
-            recvs.push(buf);
-        }
-        recvs
+            recvs
+        })
     }
 
     fn publish_window(&self, key: WindowKey, data: Vec<u8>) {
@@ -554,6 +573,38 @@ impl super::Comm for SocketComm {
     }
 
     fn rma_get(&self, target: usize, key: WindowKey, offset: usize, len: usize) -> Vec<u8> {
+        // Every call is sampled — self-gets too, so histogram totals
+        // stay deterministic call counts matching ThreadComm's.
+        self.hists.rma.time(|| self.rma_get_inner(target, key, offset, len))
+    }
+
+    fn window_len(&self, target: usize, key: WindowKey) -> Option<usize> {
+        SocketComm::window_len_inner(self, target, key)
+    }
+
+    fn counters(&self) -> &CommCounters {
+        &self.counters
+    }
+
+    fn all_counters(&self) -> Vec<CounterSnapshot> {
+        SocketComm::all_counters_inner(self)
+    }
+
+    fn comm_hists(&self) -> crate::metrics::histogram::CommHistSnapshot {
+        self.hists.snapshot()
+    }
+
+    fn poison(&self) {
+        self.poison_now();
+    }
+
+    fn is_poisoned(&self) -> bool {
+        self.poisoned.load(Ordering::SeqCst)
+    }
+}
+
+impl SocketComm {
+    fn rma_get_inner(&self, target: usize, key: WindowKey, offset: usize, len: usize) -> Vec<u8> {
         // checked_add on the requester, before any wire traffic: the
         // same guard (and message) as ThreadComm's.
         let end = offset.checked_add(len).unwrap_or_else(|| {
@@ -585,7 +636,7 @@ impl super::Comm for SocketComm {
         bytes
     }
 
-    fn window_len(&self, target: usize, key: WindowKey) -> Option<usize> {
+    fn window_len_inner(&self, target: usize, key: WindowKey) -> Option<usize> {
         if target == self.rank {
             return self.windows.read().unwrap().get(&key).map(|w| w.len());
         }
@@ -612,11 +663,7 @@ impl super::Comm for SocketComm {
         }
     }
 
-    fn counters(&self) -> &CommCounters {
-        &self.counters
-    }
-
-    fn all_counters(&self) -> Vec<CounterSnapshot> {
+    fn all_counters_inner(&self) -> Vec<CounterSnapshot> {
         let mut out = Vec::with_capacity(self.size);
         for r in 0..self.size {
             if r == self.rank {
@@ -637,14 +684,6 @@ impl super::Comm for SocketComm {
             }
         }
         out
-    }
-
-    fn poison(&self) {
-        self.poison_now();
-    }
-
-    fn is_poisoned(&self) -> bool {
-        self.poisoned.load(Ordering::SeqCst)
     }
 }
 

@@ -11,6 +11,7 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Barrier, Mutex, RwLock};
 
 use super::counters::{CommCounters, CounterSnapshot};
+use crate::metrics::histogram::{CommHistSnapshot, CommHists};
 
 /// Key identifying a published RMA window (e.g. "octree nodes of this
 /// connectivity update").
@@ -39,6 +40,10 @@ pub struct ThreadComm {
     /// Parity of the next collective on this rank (ranks stay in
     /// lockstep: a collective is collective for everyone).
     parity: std::cell::Cell<u8>,
+    /// Comm latency histograms for calls made through the `Comm` trait.
+    /// Per-handle (each rank's handle lives on one thread), never part
+    /// of `CommCounters` accounting.
+    hists: CommHists,
     shared: Arc<Shared>,
 }
 
@@ -63,6 +68,7 @@ impl ThreadComm {
             .map(|rank| ThreadComm {
                 rank,
                 parity: std::cell::Cell::new(0),
+                hists: CommHists::default(),
                 shared: Arc::clone(&shared),
             })
             .collect()
@@ -201,7 +207,11 @@ impl ThreadComm {
 /// communicator surface; `SocketComm` must match it byte-for-byte in
 /// accounting and routing (pinned by the cross-backend differential
 /// suite). The inherent methods above stay callable without the trait
-/// in scope; this impl only forwards to them.
+/// in scope; this impl forwards to them, adding only latency-histogram
+/// sampling around the three instrumented primitives — which is why
+/// histogram totals are exact counts of *trait-level* comm calls (the
+/// barrier inside the inherent `all_to_all` is not a trait call and is
+/// not double-counted).
 impl super::Comm for ThreadComm {
     fn rank(&self) -> usize {
         ThreadComm::rank(self)
@@ -212,11 +222,11 @@ impl super::Comm for ThreadComm {
     }
 
     fn barrier(&self) {
-        ThreadComm::barrier(self)
+        self.hists.barrier.time(|| ThreadComm::barrier(self))
     }
 
     fn all_to_all(&self, sends: Vec<Vec<u8>>) -> Vec<Vec<u8>> {
-        ThreadComm::all_to_all(self, sends)
+        self.hists.a2a.time(|| ThreadComm::all_to_all(self, sends))
     }
 
     fn publish_window(&self, key: WindowKey, data: Vec<u8>) {
@@ -228,7 +238,10 @@ impl super::Comm for ThreadComm {
     }
 
     fn rma_get(&self, target: usize, key: WindowKey, offset: usize, len: usize) -> Vec<u8> {
-        ThreadComm::rma_get(self, target, key, offset, len)
+        // Self-gets are free in `CommCounters` but still sampled here:
+        // histogram totals must count every call identically on both
+        // backends to stay deterministic.
+        self.hists.rma.time(|| ThreadComm::rma_get(self, target, key, offset, len))
     }
 
     fn window_len(&self, target: usize, key: WindowKey) -> Option<usize> {
@@ -241,6 +254,10 @@ impl super::Comm for ThreadComm {
 
     fn all_counters(&self) -> Vec<CounterSnapshot> {
         ThreadComm::all_counters(self)
+    }
+
+    fn comm_hists(&self) -> CommHistSnapshot {
+        self.hists.snapshot()
     }
 
     fn poison(&self) {

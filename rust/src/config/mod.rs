@@ -244,6 +244,24 @@ pub struct SimConfig {
     /// (0 = fail fast, the historical behavior). Requires the socket
     /// backend and `checkpoint_every > 0`.
     pub max_recoveries: usize,
+
+    // -- live telemetry (see the `telemetry` module, DESIGN.md §14) ------
+    /// Heartbeat cadence in steps (`[telemetry] every`,
+    /// `--telemetry-every`; 0 = off). Socket backend only: each rank
+    /// process streams a `HealthFrame` to the supervisor every this
+    /// many completed steps. Pure observation — like `faults.plan`,
+    /// the `[telemetry]` keys are never serialized by [`to_ini`], so
+    /// snapshot bytes and config fingerprints are unchanged by them.
+    pub telemetry_every: u64,
+    /// Hang watchdog: treat a rank silent for this many times the
+    /// largest observed inter-beat gap as hung and fail the fleet into
+    /// the recovery loop (0 = watchdog off). Requires
+    /// `telemetry_every > 0`.
+    pub telemetry_watchdog_misses: u32,
+    /// Directory the supervisor atomically rewrites `status.json` in
+    /// for `ilmi status` (`[telemetry] status_dir`, `--status-dir`;
+    /// empty = off). Requires `telemetry_every > 0`.
+    pub status_dir: String,
 }
 
 impl Default for SimConfig {
@@ -284,6 +302,9 @@ impl Default for SimConfig {
             balance_init_cells: String::new(),
             fault_plan: String::new(),
             max_recoveries: 0,
+            telemetry_every: 0,
+            telemetry_watchdog_misses: 0,
+            status_dir: String::new(),
         }
     }
 }
@@ -434,6 +455,13 @@ impl SimConfig {
             "recovery.max_recoveries" => {
                 self.max_recoveries = value.parse().map_err(|_| bad(key))?
             }
+            "telemetry.every" => {
+                self.telemetry_every = value.parse().map_err(|_| bad(key))?
+            }
+            "telemetry.watchdog_misses" => {
+                self.telemetry_watchdog_misses = value.parse().map_err(|_| bad(key))?
+            }
+            "telemetry.status_dir" => self.status_dir = value.to_string(),
             _ => return Err(format!("unknown config key: {key}")),
         }
         Ok(())
@@ -562,6 +590,10 @@ impl SimConfig {
         if self.max_recoveries > 0 {
             out.push_str(&format!("[recovery]\nmax_recoveries = {}\n", self.max_recoveries));
         }
+        // The `[telemetry]` keys are deliberately NOT serialized, like
+        // `faults.plan`: they are live-observation knobs around the run,
+        // not part of the simulated dynamics, so snapshot bytes and the
+        // config fingerprint are identical with telemetry on or off.
         out
     }
 
@@ -756,6 +788,31 @@ impl SimConfig {
                         .into(),
                 );
             }
+        }
+        // Live-telemetry knobs: heartbeats only exist between rank
+        // processes and a supervisor, and the watchdog/status plane
+        // consumes heartbeats — each gate names the missing half.
+        if self.telemetry_every > 0 && self.comm_backend != CommBackend::Socket {
+            return Err(
+                "telemetry.every (--telemetry-every) requires topology.comm=socket: \
+                 heartbeats stream from rank processes to the supervisor over the \
+                 launcher's control socket (the thread backend has neither)"
+                    .into(),
+            );
+        }
+        if self.telemetry_watchdog_misses > 0 && self.telemetry_every == 0 {
+            return Err(
+                "telemetry.watchdog_misses (--watchdog-misses) requires \
+                 telemetry.every > 0: the hang watchdog counts missed heartbeats"
+                    .into(),
+            );
+        }
+        if !self.status_dir.is_empty() && self.telemetry_every == 0 {
+            return Err(
+                "telemetry.status_dir (--status-dir) requires telemetry.every > 0: \
+                 status.json aggregates heartbeats"
+                    .into(),
+            );
         }
         Ok(())
     }
@@ -1106,6 +1163,46 @@ target_calcium = 0.6
         // The old (per-step id) algorithm has no spike epochs: allowed.
         cfg.spike_alg = SpikeAlg::OldIds;
         cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn telemetry_knobs_parse_gate_and_stay_out_of_ini() {
+        // [telemetry] keys parse from INI text onto the config...
+        let base = SimConfig { comm_backend: CommBackend::Socket, ..SimConfig::default() };
+        let text = format!(
+            "{}[telemetry]\nevery = 5\nwatchdog_misses = 3\nstatus_dir = status\n",
+            base.to_ini()
+        );
+        let cfg = SimConfig::from_ini(&text).unwrap();
+        assert_eq!(cfg.telemetry_every, 5);
+        assert_eq!(cfg.telemetry_watchdog_misses, 3);
+        assert_eq!(cfg.status_dir, "status");
+        cfg.validate().unwrap();
+        // ...but heartbeats ride the control socket, so the thread
+        // backend rejects them.
+        let mut thread = cfg.clone();
+        thread.comm_backend = CommBackend::Thread;
+        let err = thread.validate().unwrap_err();
+        assert!(err.contains("socket"), "{err}");
+        // Watchdog and status aggregation are meaningless without beats.
+        let wd = SimConfig {
+            comm_backend: CommBackend::Socket,
+            telemetry_watchdog_misses: 2,
+            ..SimConfig::default()
+        };
+        assert!(wd.validate().unwrap_err().contains("watchdog_misses"));
+        let st = SimConfig {
+            comm_backend: CommBackend::Socket,
+            status_dir: "st".to_string(),
+            ..SimConfig::default()
+        };
+        assert!(st.validate().unwrap_err().contains("status_dir"));
+        // Like faults.plan, the telemetry keys are deliberately NOT
+        // serialized: telemetry on and off must embed byte-identical
+        // configs in their snapshots.
+        let ini = cfg.to_ini();
+        assert!(!ini.contains("[telemetry]") && !ini.contains("status_dir"), "{ini}");
+        assert_eq!(ini, base.to_ini(), "telemetry knobs must not change INI bytes");
     }
 
     #[test]

@@ -547,18 +547,7 @@ impl RankState {
             self.calcium_trace.push((step, self.pop.ca.clone()));
         }
         if self.tracer.due(step) {
-            // Which epoch kinds this boundary coincides with — a pure
-            // function of step and config, so it is deterministic.
-            let mut boundaries = 0u8;
-            if (step + 1) % cfg.delta == 0 {
-                boundaries |= crate::trace::SPIKE_EPOCH;
-            }
-            if (step + 1) % cfg.plasticity_interval == 0 {
-                boundaries |= crate::trace::PLASTICITY_EPOCH;
-            }
-            if cfg.balance_every > 0 && (step + 1) % cfg.balance_every == 0 {
-                boundaries |= crate::trace::BALANCE_EPOCH;
-            }
+            let mut boundaries = Self::epoch_boundaries(cfg, step);
             if self.recovery_pending {
                 boundaries |= crate::trace::RECOVERY_EPOCH;
                 self.recovery_pending = false;
@@ -568,6 +557,24 @@ impl RankState {
             self.tracer.record(step as u64 + 1, boundaries, &now, cost);
         }
         Ok(())
+    }
+
+    /// Which epoch kinds the boundary after `step` coincides with — a
+    /// pure function of step and config, so it is deterministic. The
+    /// tracer ORs in `RECOVERY_EPOCH` separately (that bit is segment
+    /// state, not schedule); heartbeats reuse the schedule bits as-is.
+    fn epoch_boundaries(cfg: &SimConfig, step: usize) -> u8 {
+        let mut boundaries = 0u8;
+        if (step + 1) % cfg.delta == 0 {
+            boundaries |= crate::trace::SPIKE_EPOCH;
+        }
+        if (step + 1) % cfg.plasticity_interval == 0 {
+            boundaries |= crate::trace::PLASTICITY_EPOCH;
+        }
+        if cfg.balance_every > 0 && (step + 1) % cfg.balance_every == 0 {
+            boundaries |= crate::trace::BALANCE_EPOCH;
+        }
+        boundaries
     }
 
     /// The cumulative readings the tracer deltas consecutive samples
@@ -824,6 +831,11 @@ impl RankState {
     /// pre-resume communication baseline so the totals equal a straight
     /// run's.
     pub fn into_report(self, comm: &impl Comm) -> RankReport {
+        // `into_samples` drains the ring, so count evictions first:
+        // everything recorded that is no longer in the ring was dropped.
+        let recorded = self.tracer.recorded();
+        let trace = self.tracer.into_samples();
+        let trace_dropped = recorded - trace.len() as u64;
         RankReport {
             rank: comm.rank(),
             phase_seconds: self.timers.seconds(),
@@ -843,7 +855,9 @@ impl RankState {
             recoveries: 0,
             mean_calcium: self.pop.mean_calcium(),
             calcium_trace: self.calcium_trace,
-            trace: self.tracer.into_samples(),
+            trace,
+            trace_dropped,
+            comm_hists: comm.comm_hists(),
         }
     }
 }
@@ -951,12 +965,25 @@ fn simulate_rank<C: Comm>(
     // safe after restore too.
     state.kernel = make_kernel(cfg, xla);
     state.recovery_pending = recovered;
+    // Telemetry (no-op unless armed in this process): one forced beat
+    // before the loop so the supervisor's watchdog covers this rank
+    // even if the very first step hangs, then one candidate beat per
+    // completed step (the cadence filter lives in `maybe_beat`).
+    crate::telemetry::maybe_beat(start_step as u64, 0, true, || {
+        (state.timers.seconds(), comm.counters().snapshot())
+    });
     for step in start_step..cfg.steps {
         // Injected-kill hook (no-op unless a fault plan is armed in
         // this process): "kill rank R at step S" means R's process
         // exits immediately before executing 0-based step S.
         crate::fault::on_step(step as u64);
         state.step(cfg, comm, step)?;
+        crate::telemetry::maybe_beat(
+            step as u64 + 1,
+            RankState::epoch_boundaries(cfg, step),
+            false,
+            || (state.timers.seconds(), comm.counters().snapshot()),
+        );
         if let Some(sink) = sink {
             if (step + 1) % cfg.checkpoint_every == 0 {
                 // Checkpoint I/O failures are recorded, not returned:
@@ -1152,6 +1179,33 @@ fn run_simulation_socket_from(
     child_cfg.max_recoveries = 0;
     let ini = child_cfg.to_ini();
     let plan = crate::fault::FaultPlan::parse(&cfg.fault_plan).map_err(anyhow::Error::msg)?;
+    // Live status aggregation (tentpole d): heartbeats fold into an
+    // atomically rewritten status.json for `ilmi status` to render.
+    // Parent-only, like supervision — children never see the dir.
+    let status: Option<std::cell::RefCell<crate::telemetry::StatusWriter>> =
+        if cfg.status_dir.is_empty() {
+            None
+        } else {
+            let dir = std::path::Path::new(&cfg.status_dir);
+            std::fs::create_dir_all(dir)
+                .map_err(|e| anyhow::Error::msg(format!("creating status dir: {e}")))?;
+            Some(std::cell::RefCell::new(crate::telemetry::StatusWriter::new(
+                dir,
+                cfg.ranks,
+                cfg.telemetry_every,
+                cfg.telemetry_watchdog_misses,
+            )))
+        };
+    let set_state = |state: &str, attempt: u32, recoveries: u64| {
+        if let Some(s) = &status {
+            s.borrow_mut().set_state(state, attempt, recoveries as u32);
+        }
+    };
+    let on_beat = |frame: &crate::telemetry::HealthFrame| {
+        if let Some(s) = &status {
+            s.borrow_mut().on_beat(frame);
+        }
+    };
     let wall = Instant::now();
     let mut recoveries: u64 = 0;
     let mut lost_steps: u64 = 0;
@@ -1164,12 +1218,21 @@ fn run_simulation_socket_from(
         if !attempt_plan.is_empty() {
             env.push((crate::fault::ENV_FAULT_PLAN.to_string(), attempt_plan.to_spec()));
         }
+        if cfg.telemetry_every > 0 {
+            env.push((
+                crate::telemetry::ENV_TELEMETRY_EVERY.to_string(),
+                cfg.telemetry_every.to_string(),
+            ));
+        }
+        set_state("running", attempt, recoveries);
         let spec = crate::comm::proc::LaunchSpec {
             entry: SIMULATE_ENTRY,
             ranks: cfg.ranks,
             args: &args,
             timeout: socket_launch_timeout(cfg),
             env: &env,
+            watchdog_misses: cfg.telemetry_watchdog_misses,
+            on_beat: if cfg.telemetry_every > 0 { Some(&on_beat) } else { None },
         };
         let failure = match crate::comm::proc::run_entry(&spec) {
             Ok(encoded) => {
@@ -1183,6 +1246,7 @@ fn run_simulation_socket_from(
                     report.recoveries = recoveries;
                     ranks.push(report);
                 }
+                set_state("done", attempt, recoveries);
                 return Ok(SimReport {
                     ranks,
                     wall_seconds: wall.elapsed().as_secs_f64(),
@@ -1194,10 +1258,12 @@ fn run_simulation_socket_from(
             Err(e) => e,
         };
         if cfg.max_recoveries == 0 {
+            set_state("failed", attempt, recoveries);
             bail!("socket fleet failed (recovery disabled; set recovery.max_recoveries \
                    and checkpointing to supervise): {failure}");
         }
         if recoveries >= cfg.max_recoveries as u64 {
+            set_state("failed", attempt, recoveries);
             bail!(
                 "socket fleet failed after {recoveries} recover{}: giving up \
                  (recovery.max_recoveries = {}): {failure}",
@@ -1206,6 +1272,7 @@ fn run_simulation_socket_from(
             );
         }
         let t0 = Instant::now();
+        set_state("recovering", attempt, recoveries);
         // Bounded exponential backoff: transient causes (fd pressure,
         // load spikes) get breathing room; the cap keeps a doomed
         // config from stalling for minutes before giving up.
@@ -1213,10 +1280,13 @@ fn run_simulation_socket_from(
         std::thread::sleep(backoff);
         let scan = match crate::snapshot::scan_for_recovery(&cfg.checkpoint_dir, &child_cfg) {
             Ok(scan) => scan,
-            Err(scan_err) => bail!(
-                "socket fleet failed ({failure}) and no usable checkpoint to recover \
-                 from: {scan_err}"
-            ),
+            Err(scan_err) => {
+                set_state("failed", attempt, recoveries);
+                bail!(
+                    "socket fleet failed ({failure}) and no usable checkpoint to recover \
+                     from: {scan_err}"
+                )
+            }
         };
         let resume_step = scan.snapshot.next_step() as u64;
         // Evidence-based lower bound on replayed work: the fleet

@@ -39,6 +39,14 @@
 //! Every fault takes an optional `attempt=K` field (default 0): it only
 //! fires on supervision attempt K, so an injected kill does not re-fire
 //! after the supervisor respawns the fleet.
+//!
+//! `frame_delay` and `rma_stall` additionally take an optional `step=S`
+//! gate (default 0): `nth` then counts only events occurring at or
+//! after simulation step S. Frame ordinals from process start are hard
+//! to predict across algorithm generations (rendezvous, initial
+//! exchanges); the step gate lets a test say "hang the first frame
+//! after step 30" — e.g. deterministically *after* the first checkpoint
+//! exists, which is what the watchdog recovery tests need.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::OnceLock;
@@ -67,11 +75,13 @@ pub enum Fault {
     /// read, the sender poisons itself — a deterministic transport
     /// failure.
     FrameTruncate { rank: u32, nth: u64, keep: u32 },
-    /// Sleep `millis` before rank `rank`'s `nth` outbound data frame
-    /// (non-fatal: exercises timeout headroom, not failure).
-    FrameDelay { rank: u32, nth: u64, millis: u64 },
-    /// Sleep `millis` before rank `rank` serves its `nth` RMA reply.
-    RmaStall { rank: u32, nth: u64, millis: u64 },
+    /// Sleep `millis` before rank `rank`'s `nth` outbound data frame at
+    /// or after step `step` (non-fatal by itself: exercises timeout
+    /// headroom and, with a long sleep, the heartbeat watchdog).
+    FrameDelay { rank: u32, nth: u64, millis: u64, step: u64 },
+    /// Sleep `millis` before rank `rank` serves its `nth` RMA reply at
+    /// or after step `step`.
+    RmaStall { rank: u32, nth: u64, millis: u64, step: u64 },
     /// Error the checkpoint write whose file would be `step_{step}`.
     CheckpointFail { step: u64 },
     /// Write that checkpoint truncated so it exists but fails
@@ -98,13 +108,14 @@ fn parse_fields<'a>(
     kind: &str,
     body: &'a str,
     allowed: &[&str],
+    optional: &[&str],
 ) -> Result<Vec<(&'a str, u64)>, String> {
     let mut out: Vec<(&str, u64)> = Vec::new();
     for field in body.split(',').filter(|f| !f.is_empty()) {
         let (key, value) = field
             .split_once('=')
             .ok_or_else(|| format!("fault `{kind}`: field `{field}` is not key=value"))?;
-        if !allowed.contains(&key) && key != "attempt" {
+        if !allowed.contains(&key) && !optional.contains(&key) && key != "attempt" {
             return Err(format!(
                 "fault `{kind}`: unknown field `{key}` (expected {})",
                 allowed.join("/")
@@ -136,11 +147,11 @@ impl FaultPlan {
         let mut faults = Vec::new();
         for item in spec.split(';').map(str::trim).filter(|s| !s.is_empty()) {
             let (kind, body) = item.split_once(':').unwrap_or((item, ""));
-            let allowed: &[&str] = match kind {
-                "kill" => &["rank", "step"],
-                "frame_truncate" => &["rank", "nth", "keep"],
-                "frame_delay" | "rma_stall" => &["rank", "nth", "ms"],
-                "ckpt_fail" | "ckpt_corrupt" => &["step"],
+            let (allowed, optional): (&[&str], &[&str]) = match kind {
+                "kill" => (&["rank", "step"], &[]),
+                "frame_truncate" => (&["rank", "nth", "keep"], &[]),
+                "frame_delay" | "rma_stall" => (&["rank", "nth", "ms"], &["step"]),
+                "ckpt_fail" | "ckpt_corrupt" => (&["step"], &[]),
                 other => {
                     return Err(format!(
                         "unknown fault kind `{other}` (expected kill/frame_truncate/\
@@ -148,7 +159,7 @@ impl FaultPlan {
                     ))
                 }
             };
-            let f = parse_fields(kind, body, allowed)?;
+            let f = parse_fields(kind, body, allowed, optional)?;
             let attempt = field(&f, "attempt") as u32;
             let rank = field(&f, "rank") as u32;
             let nth = field(&f, "nth");
@@ -157,8 +168,18 @@ impl FaultPlan {
                 "frame_truncate" => {
                     Fault::FrameTruncate { rank, nth, keep: field(&f, "keep") as u32 }
                 }
-                "frame_delay" => Fault::FrameDelay { rank, nth, millis: field(&f, "ms") },
-                "rma_stall" => Fault::RmaStall { rank, nth, millis: field(&f, "ms") },
+                "frame_delay" => Fault::FrameDelay {
+                    rank,
+                    nth,
+                    millis: field(&f, "ms"),
+                    step: field(&f, "step"),
+                },
+                "rma_stall" => Fault::RmaStall {
+                    rank,
+                    nth,
+                    millis: field(&f, "ms"),
+                    step: field(&f, "step"),
+                },
                 "ckpt_fail" => Fault::CheckpointFail { step: field(&f, "step") },
                 _ => Fault::CheckpointCorrupt { step: field(&f, "step") },
             };
@@ -178,11 +199,13 @@ impl FaultPlan {
                     Fault::FrameTruncate { rank, nth, keep } => {
                         format!("frame_truncate:rank={rank},nth={nth},keep={keep}")
                     }
-                    Fault::FrameDelay { rank, nth, millis } => {
-                        format!("frame_delay:rank={rank},nth={nth},ms={millis}")
+                    Fault::FrameDelay { rank, nth, millis, step } => {
+                        let gate = if step > 0 { format!(",step={step}") } else { String::new() };
+                        format!("frame_delay:rank={rank},nth={nth},ms={millis}{gate}")
                     }
-                    Fault::RmaStall { rank, nth, millis } => {
-                        format!("rma_stall:rank={rank},nth={nth},ms={millis}")
+                    Fault::RmaStall { rank, nth, millis, step } => {
+                        let gate = if step > 0 { format!(",step={step}") } else { String::new() };
+                        format!("rma_stall:rank={rank},nth={nth},ms={millis}{gate}")
                     }
                     Fault::CheckpointFail { step } => format!("ckpt_fail:step={step}"),
                     Fault::CheckpointCorrupt { step } => format!("ckpt_corrupt:step={step}"),
@@ -231,8 +254,14 @@ struct Armed {
     rank: u32,
     /// Outbound data frames sent by this process (1-based ordinals).
     data_frames: AtomicU64,
-    /// RMA replies served by this process (1-based ordinals).
-    rma_replies: AtomicU64,
+    /// Per-fault event counters for step-gated faults (`frame_delay`,
+    /// `rma_stall`): each counts only events at/after its own gate, so
+    /// `nth` is relative to the gate. Indexed parallel to `plan.faults`.
+    gated_hits: Vec<AtomicU64>,
+    /// Most recent step index seen by [`on_step`] — the clock the step
+    /// gates compare against (0 until the first step begins, so a gate
+    /// of 0 preserves the count-from-process-start semantics).
+    current_step: AtomicU64,
 }
 
 static ARMED: OnceLock<Armed> = OnceLock::new();
@@ -244,11 +273,13 @@ pub fn arm(plan: FaultPlan, rank: usize) {
     if plan.is_empty() {
         return;
     }
+    let gated_hits = plan.faults.iter().map(|_| AtomicU64::new(0)).collect();
     let _ = ARMED.set(Armed {
         plan,
         rank: rank as u32,
         data_frames: AtomicU64::new(0),
-        rma_replies: AtomicU64::new(0),
+        gated_hits,
+        current_step: AtomicU64::new(0),
     });
 }
 
@@ -287,6 +318,10 @@ pub enum CkptAction {
 #[inline]
 pub fn on_step(step: u64) {
     let Some(armed) = ARMED.get() else { return };
+    // Advance the gate clock first: faults gated on `step=S` must see
+    // the new step for frames sent during it (RMA server threads read
+    // this cross-thread).
+    armed.current_step.store(step, Ordering::SeqCst);
     for s in &armed.plan.faults {
         if let Fault::Kill { rank, step: at } = s.fault {
             if rank == armed.rank && at == step {
@@ -305,13 +340,17 @@ pub fn on_step(step: u64) {
 pub fn on_data_frame() -> FrameAction {
     let Some(armed) = ARMED.get() else { return FrameAction::Pass };
     let ordinal = armed.data_frames.fetch_add(1, Ordering::Relaxed) + 1;
-    for s in &armed.plan.faults {
+    let step_now = armed.current_step.load(Ordering::SeqCst);
+    for (i, s) in armed.plan.faults.iter().enumerate() {
         match s.fault {
             Fault::FrameTruncate { rank, nth, keep } if rank == armed.rank && nth == ordinal => {
                 return FrameAction::Truncate { keep };
             }
-            Fault::FrameDelay { rank, nth, millis } if rank == armed.rank && nth == ordinal => {
-                return FrameAction::Delay { millis };
+            Fault::FrameDelay { rank, nth, millis, step } if rank == armed.rank => {
+                if step_now >= step && armed.gated_hits[i].fetch_add(1, Ordering::SeqCst) + 1 == nth
+                {
+                    return FrameAction::Delay { millis };
+                }
             }
             _ => {}
         }
@@ -324,10 +363,13 @@ pub fn on_data_frame() -> FrameAction {
 #[inline]
 pub fn on_rma_reply() -> Option<u64> {
     let armed = ARMED.get()?;
-    let ordinal = armed.rma_replies.fetch_add(1, Ordering::Relaxed) + 1;
-    for s in &armed.plan.faults {
-        if let Fault::RmaStall { rank, nth, millis } = s.fault {
-            if rank == armed.rank && nth == ordinal {
+    let step_now = armed.current_step.load(Ordering::SeqCst);
+    for (i, s) in armed.plan.faults.iter().enumerate() {
+        if let Fault::RmaStall { rank, nth, millis, step } = s.fault {
+            if rank == armed.rank
+                && step_now >= step
+                && armed.gated_hits[i].fetch_add(1, Ordering::SeqCst) + 1 == nth
+            {
                 return Some(millis);
             }
         }
@@ -363,6 +405,29 @@ mod tests {
         assert_eq!(plan.faults.len(), 6);
         assert_eq!(plan.to_spec(), spec);
         assert_eq!(FaultPlan::parse(&plan.to_spec()).unwrap(), plan);
+    }
+
+    #[test]
+    fn step_gate_parses_defaults_and_round_trips() {
+        // Ungated specs keep the count-from-process-start default.
+        let plan = FaultPlan::parse("frame_delay:rank=0,nth=5,ms=40").unwrap();
+        assert_eq!(plan.faults[0].fault, Fault::FrameDelay {
+            rank: 0,
+            nth: 5,
+            millis: 40,
+            step: 0
+        });
+        assert_eq!(plan.to_spec(), "frame_delay:rank=0,nth=5,ms=40");
+        // Gated specs carry the gate and round-trip (with attempt too).
+        let spec = "frame_delay:rank=1,nth=1,ms=9,step=30;\
+                    rma_stall:rank=0,nth=1,ms=9,step=30,attempt=1";
+        let plan = FaultPlan::parse(spec).unwrap();
+        assert_eq!(plan.to_spec(), spec);
+        assert_eq!(FaultPlan::parse(&plan.to_spec()).unwrap(), plan);
+        // The gate is not legal where it means nothing.
+        assert!(FaultPlan::parse("frame_truncate:rank=0,nth=1,keep=0,step=3")
+            .unwrap_err()
+            .contains("unknown field"));
     }
 
     #[test]

@@ -27,6 +27,7 @@
 //! | — | Dynamic load balancing (neuron migration) | [`balance`] |
 //! | — | Epoch-granular telemetry (Perfetto/JSONL export) | [`trace`] |
 //! | — | Fault injection + checkpoint-restart recovery | [`fault`] |
+//! | — | Live telemetry: heartbeats, watchdog, `ilmi status` | [`telemetry`] |
 //!
 //! Entry points: [`config::SimConfig`] describes a run,
 //! [`coordinator::run_simulation`] executes it,
@@ -52,6 +53,7 @@ pub mod plasticity;
 pub mod runtime;
 pub mod snapshot;
 pub mod spikes;
+pub mod telemetry;
 pub mod testing;
 pub mod trace;
 pub mod util;

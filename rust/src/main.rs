@@ -24,6 +24,8 @@
 //!              report and fails on regressions beyond `--threshold`
 //!   quality    the §V-D calcium-quality experiment (Figs. 8/9), CSV out
 //!   inspect    load + exercise the AOT artifacts through PJRT
+//!   status     render the live fleet table from the status.json a
+//!              supervised socket run maintains under `--status-dir`
 //!
 //! Common flags: --config FILE, --set section.key=value (repeatable),
 //! --csv PATH, --xla (use the AOT artifacts for the neuron update),
@@ -59,6 +61,11 @@ fn main() {
 }
 
 fn run(argv: &[String]) -> Result<()> {
+    // `status` takes a positional directory, which the flag grammar
+    // rejects; dispatch it before Args::parse.
+    if argv.first().map(String::as_str) == Some("status") {
+        return cmd_status(&argv[1..]);
+    }
     let args = Args::parse(argv).map_err(anyhow::Error::msg)?;
     match args.subcommand.as_str() {
         "simulate" => cmd_simulate(&args),
@@ -77,7 +84,7 @@ fn run(argv: &[String]) -> Result<()> {
 
 const HELP: &str = "\
 ilmi - I Like To Move It: structural-plasticity brain simulation
-usage: ilmi <simulate|resume|compare|bench|quality|inspect> [flags]
+usage: ilmi <simulate|resume|compare|bench|quality|inspect|status> [flags]
   simulate  --config FILE --set k=v ... [--csv PATH] [--xla]
             [--kernel scalar|blocked|xla]
               neuron-kernel backend for the activity update: scalar
@@ -118,6 +125,16 @@ usage: ilmi <simulate|resume|compare|bench|quality|inspect> [flags]
               steps (default: the plasticity interval) into a ring of
               C samples per rank, then export FILE (Chrome trace JSON,
               open in Perfetto) plus the FILE.jsonl time series
+            [--telemetry-every N] [--watchdog-misses K] [--status-dir D]
+              socket backend only: every rank streams a health frame
+              (step, phase/comm deltas, rss) to the supervisor every N
+              steps over the control socket. K missed beats trip the
+              hang watchdog, which routes the stalled fleet into the
+              checkpoint-restart recovery loop (needs --max-recoveries
+              and checkpointing). D aggregates the beats into an
+              atomically-rewritten status.json that `ilmi status D`
+              renders while the run is live. Observation only: on or
+              off, final snapshots are byte-identical (DESIGN.md SS14)
   resume    (--from FILE | --dir D) [--steps T] [--config FILE]
             [--set k=v ...] [--csv PATH] [--xla] [--branch]
             [--kernel scalar|blocked|xla]
@@ -156,6 +173,11 @@ usage: ilmi <simulate|resume|compare|bench|quality|inspect> [flags]
               See EXPERIMENTS.md SSBench.
   quality   [--steps N] [--csv PATH] [--old] (paper SS V-D, Figs 8/9)
   inspect   [--artifacts DIR] (load artifacts, run one batch through PJRT)
+  status    <status-dir>
+              print the per-rank fleet table (state, step, beats, rss,
+              comm deltas, imbalance) from the status.json a supervised
+              run maintains under --status-dir; safe to run repeatedly
+              while the fleet is live (reads are atomic via rename)
 ";
 
 fn build_config(args: &Args) -> Result<SimConfig> {
@@ -173,6 +195,7 @@ fn build_config(args: &Args) -> Result<SimConfig> {
     apply_fault_flags(&mut cfg, args)?;
     apply_balance_flags(&mut cfg, args)?;
     apply_trace_flags(&mut cfg, args)?;
+    apply_telemetry_flags(&mut cfg, args)?;
     cfg.validate().map_err(anyhow::Error::msg)?;
     Ok(cfg)
 }
@@ -296,6 +319,36 @@ fn apply_checkpoint_flags(cfg: &mut SimConfig, args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Map `--telemetry-every N` / `--watchdog-misses K` / `--status-dir D`
+/// into the config. Pure observation: none of the three is serialized
+/// into snapshots, counted in `CommCounters`, or part of the dynamics
+/// fingerprint (DESIGN.md §14).
+fn apply_telemetry_flags(cfg: &mut SimConfig, args: &Args) -> Result<()> {
+    if let Some(every) = args.get_parse::<u64>("telemetry-every").map_err(anyhow::Error::msg)? {
+        cfg.telemetry_every = every;
+    }
+    if let Some(k) = args.get_parse::<u32>("watchdog-misses").map_err(anyhow::Error::msg)? {
+        cfg.telemetry_watchdog_misses = k;
+    }
+    if let Some(dir) = args.get("status-dir") {
+        cfg.status_dir = dir.to_string();
+    }
+    Ok(())
+}
+
+/// `ilmi status <dir>`: render the status.json a supervised run
+/// maintains under `--status-dir` as a per-rank table. Read-only — it
+/// never touches the run it observes.
+fn cmd_status(rest: &[String]) -> Result<()> {
+    let [dir] = rest else {
+        bail!("usage: ilmi status <status-dir>  (the --status-dir of a live run)");
+    };
+    let text = ilmi::telemetry::render_status(std::path::Path::new(dir))
+        .map_err(anyhow::Error::msg)?;
+    print!("{text}");
+    Ok(())
+}
+
 /// Socket-backend resume: the rank fleet restores from the on-disk
 /// snapshot file (processes cannot share the in-memory one).
 #[cfg(unix)]
@@ -379,6 +432,7 @@ fn cmd_resume(args: &Args) -> Result<()> {
     apply_fault_flags(&mut cfg, args)?;
     apply_balance_flags(&mut cfg, args)?;
     apply_trace_flags(&mut cfg, args)?;
+    apply_telemetry_flags(&mut cfg, args)?;
     cfg.validate().map_err(anyhow::Error::msg)?;
 
     let branch = args.get_bool("branch");

@@ -1,0 +1,265 @@
+//! Fixed-bucket log2 latency histograms for communication primitives.
+//!
+//! Each histogram has [`HIST_BUCKETS`] power-of-two buckets over
+//! nanoseconds: bucket `b` counts latencies in `[2^b, 2^(b+1))` ns
+//! (bucket 0 additionally absorbs 0–1 ns, the last bucket absorbs
+//! everything from ~2.1 s up). The *spread* across buckets is
+//! wall-clock-dependent and therefore observability-only, exactly like
+//! phase seconds (PR 5 convention) — but the *total* sample count is a
+//! deterministic count of comm calls, identical across backends and
+//! reps, and is drift-checked in the BENCH schema (v8) and in the
+//! cross-backend differential harness (after [`HistSnapshot::collapse`]
+//! folds the nondeterministic spread away).
+//!
+//! Recording is a single relaxed atomic increment; when nobody reads the
+//! histogram the cost is two `Instant::now()` calls per comm op, which
+//! is noise next to a socket round-trip and invisible next to the
+//! dynamics (the histograms never feed back into the simulation).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Number of log2 buckets. 32 covers 1 ns .. ~4.3 s per-op latency,
+/// beyond which the socket launch timeout would fire anyway.
+pub const HIST_BUCKETS: usize = 32;
+
+/// Bucket index for a latency of `nanos`: `floor(log2(nanos))`, clamped
+/// to the bucket range. 0 and 1 ns land in bucket 0.
+#[inline]
+pub fn bucket_of(nanos: u64) -> usize {
+    if nanos <= 1 {
+        0
+    } else {
+        ((63 - nanos.leading_zeros()) as usize).min(HIST_BUCKETS - 1)
+    }
+}
+
+/// Shared-writer histogram: relaxed atomic bumps, snapshot on demand.
+#[derive(Debug, Default)]
+pub struct LatencyHistogram {
+    counts: [AtomicU64; HIST_BUCKETS],
+}
+
+impl LatencyHistogram {
+    pub fn record(&self, nanos: u64) {
+        self.counts[bucket_of(nanos)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Time a closure and record its elapsed nanos. Returns the
+    /// closure's value unchanged — callers wrap a comm primitive.
+    #[inline]
+    pub fn time<R>(&self, f: impl FnOnce() -> R) -> R {
+        let t0 = std::time::Instant::now();
+        let r = f();
+        self.record(t0.elapsed().as_nanos().min(u128::from(u64::MAX)) as u64);
+        r
+    }
+
+    pub fn snapshot(&self) -> HistSnapshot {
+        let mut counts = [0u64; HIST_BUCKETS];
+        for (out, c) in counts.iter_mut().zip(&self.counts) {
+            *out = c.load(Ordering::Relaxed);
+        }
+        HistSnapshot { counts }
+    }
+}
+
+/// A plain-data copy of one histogram at a point in time.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct HistSnapshot {
+    pub counts: [u64; HIST_BUCKETS],
+}
+
+impl HistSnapshot {
+    /// Total samples — a deterministic call count (see module docs).
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// Elementwise sum (aggregating over ranks or reps).
+    pub fn merge(&self, other: &HistSnapshot) -> HistSnapshot {
+        let mut counts = [0u64; HIST_BUCKETS];
+        for (out, (a, b)) in counts.iter_mut().zip(self.counts.iter().zip(&other.counts)) {
+            *out = a + b;
+        }
+        HistSnapshot { counts }
+    }
+
+    /// Fold the wall-clock-dependent spread away: every sample moves to
+    /// bucket 0, preserving the deterministic total. The cross-backend
+    /// differential harness compares collapsed histograms byte-for-byte.
+    pub fn collapse(&self) -> HistSnapshot {
+        let mut counts = [0u64; HIST_BUCKETS];
+        counts[0] = self.total();
+        HistSnapshot { counts }
+    }
+}
+
+/// One histogram per instrumented comm primitive. Owned by a backend
+/// handle; snapshotted into a [`CommHistSnapshot`] for reports.
+#[derive(Debug, Default)]
+pub struct CommHists {
+    pub a2a: LatencyHistogram,
+    pub rma: LatencyHistogram,
+    pub barrier: LatencyHistogram,
+}
+
+impl CommHists {
+    pub fn snapshot(&self) -> CommHistSnapshot {
+        CommHistSnapshot {
+            a2a: self.a2a.snapshot(),
+            rma: self.rma.snapshot(),
+            barrier: self.barrier.snapshot(),
+        }
+    }
+}
+
+/// Plain-data comm latency histograms, as carried in `RankReport`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CommHistSnapshot {
+    pub a2a: HistSnapshot,
+    pub rma: HistSnapshot,
+    pub barrier: HistSnapshot,
+}
+
+impl CommHistSnapshot {
+    pub fn merge(&self, other: &CommHistSnapshot) -> CommHistSnapshot {
+        CommHistSnapshot {
+            a2a: self.a2a.merge(&other.a2a),
+            rma: self.rma.merge(&other.rma),
+            barrier: self.barrier.merge(&other.barrier),
+        }
+    }
+
+    pub fn collapse(&self) -> CommHistSnapshot {
+        CommHistSnapshot {
+            a2a: self.a2a.collapse(),
+            rma: self.rma.collapse(),
+            barrier: self.barrier.collapse(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::forall;
+    use crate::util::Rng;
+
+    #[test]
+    fn bucket_boundaries_are_powers_of_two() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 0);
+        assert_eq!(bucket_of(2), 1);
+        assert_eq!(bucket_of(3), 1);
+        assert_eq!(bucket_of(4), 2);
+        assert_eq!(bucket_of(1023), 9);
+        assert_eq!(bucket_of(1024), 10);
+        assert_eq!(bucket_of((1 << 31) - 1), 30);
+        assert_eq!(bucket_of(1 << 31), 31);
+        // Everything past the last boundary clamps into the last bucket.
+        assert_eq!(bucket_of(1 << 40), 31);
+        assert_eq!(bucket_of(u64::MAX), 31);
+    }
+
+    #[test]
+    fn prop_every_sample_lands_in_its_halfopen_bucket() {
+        forall(
+            "bucket_of(n) puts n in [2^b, 2^(b+1))",
+            500,
+            |rng| rng.next_u64() >> (rng.next_u64() % 64),
+            |&n| {
+                let b = bucket_of(n);
+                let lo = 1u64 << b;
+                if n >= 2 && n < lo {
+                    return Err(format!("{n} below bucket {b} floor {lo}"));
+                }
+                if b + 1 < HIST_BUCKETS && n >= lo << 1 {
+                    return Err(format!("{n} at/above bucket {b} ceiling {}", lo << 1));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn record_time_and_snapshot() {
+        let h = LatencyHistogram::default();
+        h.record(0);
+        h.record(1);
+        h.record(1024);
+        let x = h.time(|| 42);
+        assert_eq!(x, 42);
+        let s = h.snapshot();
+        assert_eq!(s.total(), 4);
+        assert_eq!(s.counts[0], 2);
+        assert_eq!(s.counts[10], 1);
+    }
+
+    fn arb_hist(rng: &mut Rng) -> HistSnapshot {
+        let mut counts = [0u64; HIST_BUCKETS];
+        for c in counts.iter_mut() {
+            *c = rng.next_u64() % 1000;
+        }
+        HistSnapshot { counts }
+    }
+
+    #[test]
+    fn prop_merge_is_commutative_and_associative() {
+        forall(
+            "merge commutes and associates, totals add",
+            200,
+            |rng| (arb_hist(rng), arb_hist(rng), arb_hist(rng)),
+            |(a, b, c)| {
+                if a.merge(b) != b.merge(a) {
+                    return Err("merge not commutative".into());
+                }
+                if a.merge(b).merge(c) != a.merge(&b.merge(c)) {
+                    return Err("merge not associative".into());
+                }
+                if a.merge(b).total() != a.total() + b.total() {
+                    return Err("totals do not add".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_collapse_preserves_total_and_identity_on_merge() {
+        forall(
+            "collapse keeps the total, zeroes the spread",
+            200,
+            |rng| (arb_hist(rng), arb_hist(rng)),
+            |(a, b)| {
+                let c = a.collapse();
+                if c.total() != a.total() || c.counts[0] != a.total() {
+                    return Err("collapse changed the total".into());
+                }
+                if c.counts[1..].iter().any(|&n| n != 0) {
+                    return Err("collapse left samples outside bucket 0".into());
+                }
+                // Collapse distributes over merge — what lets the
+                // differential harness collapse per-rank before merging.
+                if a.merge(b).collapse() != a.collapse().merge(&b.collapse()) {
+                    return Err("collapse does not distribute over merge".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn comm_hists_snapshot_and_merge() {
+        let h = CommHists::default();
+        h.a2a.record(100);
+        h.rma.record(5);
+        h.rma.record(1 << 20);
+        let s = h.snapshot();
+        assert_eq!(s.a2a.total(), 1);
+        assert_eq!(s.rma.total(), 2);
+        assert_eq!(s.barrier.total(), 0);
+        let doubled = s.merge(&s);
+        assert_eq!(doubled.rma.total(), 4);
+        assert_eq!(doubled.collapse().rma.counts[0], 4);
+    }
+}

@@ -1,10 +1,12 @@
 //! Phase timing, byte accounting, report rendering, and the Extra-P
 //! style performance-model fit (paper Fig. 10).
 
+pub mod histogram;
 pub mod model;
 pub mod netmodel;
 pub mod report;
 
+pub use histogram::{CommHistSnapshot, CommHists, HistSnapshot, LatencyHistogram, HIST_BUCKETS};
 pub use netmodel::NetModel;
 pub use report::{RankReport, SimReport};
 

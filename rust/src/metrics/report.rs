@@ -8,6 +8,7 @@ use crate::trace::EpochSample;
 use crate::util::format_bytes;
 use crate::util::wire::{put_f32, put_f64, put_u32, put_u64, put_u8, Cursor};
 
+use super::histogram::{CommHistSnapshot, HistSnapshot};
 use super::{Phase, ALL_PHASES};
 
 /// Everything one rank reports after a run.
@@ -67,6 +68,19 @@ pub struct RankReport {
     /// `phase_seconds` — never stored in ILMISNAP — and bounded by
     /// `trace_capacity` (DESIGN.md §10).
     pub trace: Vec<crate::trace::EpochSample>,
+    /// Tracer ring evictions this segment: samples recorded but pushed
+    /// out of the bounded ring before the run ended. Non-zero means
+    /// `trace` holds the *suffix* of the segment, not all of it —
+    /// previously a silent loss, now surfaced here, in the phase table,
+    /// and in the JSONL export (DESIGN.md §14).
+    pub trace_dropped: u64,
+    /// Comm-latency histograms around `all_to_all` / `rma_get` /
+    /// `barrier` on this rank's communicator (DESIGN.md §14). Bucket
+    /// *totals* are deterministic trait-level call counts (what BENCH
+    /// schema v8 drift-checks); the per-bucket spread is wall-clock
+    /// observability, which is why the cross-backend differential
+    /// compares them collapsed.
+    pub comm_hists: CommHistSnapshot,
 }
 
 fn put_counters(out: &mut Vec<u8>, c: &CounterSnapshot) {
@@ -87,6 +101,20 @@ fn read_counters(c: &mut Cursor<'_>) -> Result<CounterSnapshot, String> {
         collectives: c.u64("collectives")?,
         rma_gets: c.u64("rma_gets")?,
     })
+}
+
+fn put_hist(out: &mut Vec<u8>, h: &HistSnapshot) {
+    for b in h.counts {
+        put_u64(out, b);
+    }
+}
+
+fn read_hist(c: &mut Cursor<'_>) -> Result<HistSnapshot, String> {
+    let mut h = HistSnapshot::default();
+    for slot in h.counts.iter_mut() {
+        *slot = c.u64("hist bucket")?;
+    }
+    Ok(h)
 }
 
 fn read_phases(c: &mut Cursor<'_>) -> Result<[f64; ALL_PHASES.len()], String> {
@@ -159,6 +187,10 @@ impl RankReport {
             put_u64(&mut out, s.cost.remote_partners);
             put_u64(&mut out, s.cost.nanos);
         }
+        put_u64(&mut out, self.trace_dropped);
+        put_hist(&mut out, &self.comm_hists.a2a);
+        put_hist(&mut out, &self.comm_hists.rma);
+        put_hist(&mut out, &self.comm_hists.barrier);
         out
     }
 
@@ -230,6 +262,12 @@ impl RankReport {
                 },
             });
         }
+        r.trace_dropped = c.u64("trace_dropped")?;
+        r.comm_hists = CommHistSnapshot {
+            a2a: read_hist(&mut c)?,
+            rma: read_hist(&mut c)?,
+            barrier: read_hist(&mut c)?,
+        };
         c.finish("rank report")?;
         Ok(r)
     }
@@ -357,6 +395,21 @@ impl SimReport {
         crate::trace::event_count(self)
     }
 
+    /// Comm-latency histograms merged over ranks. The three totals are
+    /// deterministic call counts (BENCH schema v8's drift-checked
+    /// `comm_hist_*` fields); bucket spread is wall-clock.
+    pub fn total_comm_hists(&self) -> CommHistSnapshot {
+        self.ranks
+            .iter()
+            .fold(CommHistSnapshot::default(), |acc, r| acc.merge(&r.comm_hists))
+    }
+
+    /// Tracer ring evictions summed over ranks (see
+    /// `RankReport::trace_dropped`).
+    pub fn total_trace_dropped(&self) -> u64 {
+        self.ranks.iter().map(|r| r.trace_dropped).sum()
+    }
+
     /// Merged formation stats.
     pub fn formation(&self) -> FormationStats {
         self.ranks.iter().fold(FormationStats::default(), |acc, r| acc.merge(&r.formation))
@@ -402,6 +455,13 @@ impl SimReport {
                 self.recoveries, self.lost_steps, self.recovery_seconds,
             ));
         }
+        let dropped = self.total_trace_dropped();
+        if dropped > 0 {
+            out.push_str(&format!(
+                "trace dropped {dropped} sample(s): ring full — older epochs evicted \
+                 (raise instrumentation.trace_capacity)\n"
+            ));
+        }
         out
     }
 
@@ -414,7 +474,7 @@ impl SimReport {
         out.push_str(
             ",bytes_sent,bytes_rma,msgs,synapses_out,mean_ca,spike_lookups,spike_state_bytes,\
              plan_rebuilds,neurons,local_edges,remote_partners,migrations,kernel_blocks,\
-             recoveries\n",
+             recoveries,trace_dropped,comm_hist_a2a,comm_hist_rma,comm_hist_barrier\n",
         );
         for r in &self.ranks {
             out.push_str(&format!("{},", r.rank));
@@ -422,7 +482,7 @@ impl SimReport {
                 &r.phase_seconds.iter().map(|s| format!("{s:.6}")).collect::<Vec<_>>().join(","),
             );
             out.push_str(&format!(
-                ",{},{},{},{},{:.4},{},{},{},{},{},{},{},{},{}\n",
+                ",{},{},{},{},{:.4},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
                 r.comm.bytes_sent,
                 r.comm.bytes_rma,
                 r.comm.msgs_sent,
@@ -437,6 +497,10 @@ impl SimReport {
                 r.migrations,
                 r.kernel_blocks,
                 r.recoveries,
+                r.trace_dropped,
+                r.comm_hists.a2a.total(),
+                r.comm_hists.rma.total(),
+                r.comm_hists.barrier.total(),
             ));
         }
         out
@@ -502,7 +566,7 @@ mod tests {
 
     #[test]
     fn csv_header_and_rows_have_matching_columns() {
-        let loaded = RankReport {
+        let mut loaded = RankReport {
             rank: 1,
             spike_lookups: 7,
             spike_state_bytes: 24,
@@ -513,8 +577,11 @@ mod tests {
             migrations: 2,
             kernel_blocks: 60,
             recoveries: 1,
+            trace_dropped: 4,
             ..Default::default()
         };
+        loaded.comm_hists.a2a.counts[3] = 9;
+        loaded.comm_hists.barrier.counts[0] = 2;
         let sim =
             SimReport { ranks: vec![RankReport::default(), loaded], ..Default::default() };
         let csv = sim.to_csv();
@@ -539,6 +606,10 @@ mod tests {
         assert_eq!(rows[1][col("migrations")], "2");
         assert_eq!(rows[1][col("kernel_blocks")], "60");
         assert_eq!(rows[1][col("recoveries")], "1");
+        assert_eq!(rows[1][col("trace_dropped")], "4");
+        assert_eq!(rows[1][col("comm_hist_a2a")], "9");
+        assert_eq!(rows[1][col("comm_hist_rma")], "0");
+        assert_eq!(rows[1][col("comm_hist_barrier")], "2");
     }
 
     #[test]
@@ -582,8 +653,12 @@ mod tests {
             recoveries: 2,
             mean_calcium: 0.625,
             calcium_trace: vec![(50, vec![0.5, 0.75]), (100, vec![])],
+            trace_dropped: 6,
             ..Default::default()
         };
+        r.comm_hists.a2a.counts[5] = 3;
+        r.comm_hists.rma.counts[31] = 1;
+        r.comm_hists.barrier.counts[0] = 7;
         r.phase_seconds[0] = 1.25;
         r.comm.bytes_sent = 1024;
         r.comm.collectives = 7;
@@ -606,6 +681,26 @@ mod tests {
         assert_eq!(back.calcium_trace, r.calcium_trace);
         assert_eq!(back.trace.len(), 1);
         assert_eq!(back.trace[0].comm.bytes_recv, 99);
+        assert_eq!(back.trace_dropped, 6);
+        assert_eq!(back.comm_hists, r.comm_hists);
+    }
+
+    #[test]
+    fn comm_hists_and_trace_dropped_aggregate_over_ranks() {
+        let mut a = RankReport { trace_dropped: 2, ..Default::default() };
+        a.comm_hists.a2a.counts[1] = 5;
+        let mut b = RankReport { trace_dropped: 3, ..Default::default() };
+        b.comm_hists.a2a.counts[2] = 5;
+        b.comm_hists.rma.counts[0] = 4;
+        let sim = SimReport { ranks: vec![a, b], ..Default::default() };
+        let total = sim.total_comm_hists();
+        assert_eq!(total.a2a.total(), 10);
+        assert_eq!(total.rma.total(), 4);
+        assert_eq!(sim.total_trace_dropped(), 5);
+        // The phase table surfaces the formerly-silent eviction; quiet
+        // runs stay quiet.
+        assert!(sim.phase_table().contains("trace dropped 5"));
+        assert!(!SimReport::default().phase_table().contains("trace dropped"));
     }
 
     #[test]

@@ -1,0 +1,525 @@
+//! Live telemetry plane: rank heartbeats, fleet status, `ilmi status`.
+//!
+//! PR 6's trace subsystem explains a run *after* it ends; this module
+//! makes a socket fleet observable *while it runs* (DESIGN.md §14).
+//! Three pieces:
+//!
+//! * **Heartbeats** — every `telemetry.every` steps, each rank process
+//!   encodes a fixed-layout [`HealthFrame`] (step, phase-seconds deltas,
+//!   comm-counter deltas, rss estimate, epoch-boundary bits) and writes
+//!   it to the supervisor over the launcher's existing control socket
+//!   (`ctl.sock`, tag `HEARTBEAT`). One fresh connection per beat, the
+//!   same pattern as result reporting — no long-lived channel to leak.
+//! * **Watchdog** — the launcher tracks per-rank inter-beat gaps; a rank
+//!   that stays silent for `watchdog_misses` times the largest gap seen
+//!   so far is declared hung and the launch fails, which routes into the
+//!   supervisor's existing kill-reap-scan-respawn recovery loop
+//!   (`comm::proc`, DESIGN.md §13). Hangs become recoverable, not just
+//!   deaths.
+//! * **Status** — the supervisor folds heartbeats into an atomically
+//!   rewritten `status.json` ([`StatusWriter`]); `ilmi status <dir>`
+//!   renders it as a table ([`render_status`]).
+//!
+//! Telemetry is pure observation: heartbeat bytes travel only on the
+//! control socket (never a peer data channel), are excluded from
+//! `CommCounters`, and the `[telemetry]` config keys are
+//! instrumentation knobs outside the dynamics fingerprint — a run with
+//! telemetry on ends bit-identical to the same run with it off (pinned
+//! by the fault-tolerance suite). Everything here is zero-cost when
+//! off: the per-step hook is one `OnceLock::get()` returning `None`.
+
+use std::path::{Path, PathBuf};
+use std::sync::{Mutex, OnceLock};
+
+use crate::bench::json::{obj, parse, Json};
+use crate::comm::CounterSnapshot;
+use crate::trace::boundary_names;
+use crate::util::wire::{put_f64, put_u32, put_u64, put_u8, Cursor};
+
+/// Environment variable carrying the heartbeat cadence (steps per beat)
+/// to rank processes; consumed and removed by `proc::maybe_run_child`.
+/// Absent or `0` means telemetry is off.
+pub const ENV_TELEMETRY_EVERY: &str = "ILMI_TELEMETRY_EVERY";
+
+/// Status JSON schema version (bumped on layout changes).
+pub const STATUS_SCHEMA_VERSION: u64 = 1;
+
+/// Encoded size of a [`HealthFrame`]: rank + step + boundaries +
+/// 7 phase deltas + 6 counter deltas + rss.
+pub const HEALTH_FRAME_LEN: usize = 4 + 8 + 1 + 7 * 8 + 6 * 8 + 8;
+
+/// One rank heartbeat: everything the supervisor needs to render a
+/// top-like view, as *deltas since the previous beat* so the stream is
+/// meaningful mid-run without history. Fixed layout, no heap fields.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct HealthFrame {
+    pub rank: u32,
+    /// Global steps completed when the beat was taken.
+    pub step: u64,
+    /// Epoch-boundary bits of the beat step (`trace::SPIKE_EPOCH` etc.).
+    pub boundaries: u8,
+    /// Per-phase busy seconds since the previous beat, `ALL_PHASES`
+    /// order.
+    pub phase_delta: [f64; 7],
+    /// Comm-counter deltas since the previous beat.
+    pub comm_delta: CounterSnapshot,
+    /// Resident-set estimate in bytes (0 where unavailable).
+    pub rss_bytes: u64,
+}
+
+impl HealthFrame {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(HEALTH_FRAME_LEN);
+        put_u32(&mut out, self.rank);
+        put_u64(&mut out, self.step);
+        put_u8(&mut out, self.boundaries);
+        for v in self.phase_delta {
+            put_f64(&mut out, v);
+        }
+        let c = self.comm_delta;
+        for v in [c.bytes_sent, c.bytes_recv, c.bytes_rma, c.msgs_sent, c.collectives, c.rma_gets]
+        {
+            put_u64(&mut out, v);
+        }
+        put_u64(&mut out, self.rss_bytes);
+        debug_assert_eq!(out.len(), HEALTH_FRAME_LEN);
+        out
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<HealthFrame, String> {
+        let mut c = Cursor::new(buf, "health frame");
+        let rank = c.u32("rank")?;
+        let step = c.u64("step")?;
+        let boundaries = c.u8("boundaries")?;
+        let mut phase_delta = [0.0; 7];
+        for p in phase_delta.iter_mut() {
+            *p = c.f64("phase delta")?;
+        }
+        let comm_delta = CounterSnapshot {
+            bytes_sent: c.u64("bytes_sent")?,
+            bytes_recv: c.u64("bytes_recv")?,
+            bytes_rma: c.u64("bytes_rma")?,
+            msgs_sent: c.u64("msgs_sent")?,
+            collectives: c.u64("collectives")?,
+            rma_gets: c.u64("rma_gets")?,
+        };
+        let rss_bytes = c.u64("rss_bytes")?;
+        c.finish("health frame")?;
+        Ok(HealthFrame { rank, step, boundaries, phase_delta, comm_delta, rss_bytes })
+    }
+}
+
+// -- child side (rank process) -------------------------------------------
+
+struct ChildTelemetry {
+    every: u64,
+    rank: u32,
+    ctl: PathBuf,
+    state: Mutex<BeatState>,
+}
+
+#[derive(Default)]
+struct BeatState {
+    prev_phase: [f64; 7],
+    prev_comm: CounterSnapshot,
+}
+
+static CHILD: OnceLock<ChildTelemetry> = OnceLock::new();
+
+/// Arm heartbeat emission for this rank process (idempotent; only the
+/// first call wins, mirroring `fault::arm`). `every == 0` is a no-op so
+/// the beat hook stays on its `None` fast path.
+pub fn arm_child(every: u64, rank: usize, ctl: PathBuf) {
+    if every == 0 {
+        return;
+    }
+    let _ = CHILD.set(ChildTelemetry {
+        every,
+        rank: rank as u32,
+        ctl,
+        state: Mutex::new(BeatState::default()),
+    });
+}
+
+/// Arm from [`ENV_TELEMETRY_EVERY`] if present, removing the variable so
+/// nested launches don't inherit it. The control socket lives in the
+/// launcher's rendezvous `dir`.
+pub fn arm_child_from_env(rank: usize, dir: &Path) {
+    if let Ok(v) = std::env::var(ENV_TELEMETRY_EVERY) {
+        std::env::remove_var(ENV_TELEMETRY_EVERY);
+        let every: u64 = v
+            .parse()
+            .unwrap_or_else(|_| panic!("invalid {ENV_TELEMETRY_EVERY} value `{v}`"));
+        arm_child(every, rank, dir.join("ctl.sock"));
+    }
+}
+
+/// Emit a heartbeat if telemetry is armed and `steps_done` lands on the
+/// cadence (or `force` is set — segment start emits one unconditionally
+/// so the watchdog arms for this rank before step 0 can hang). `read`
+/// is only called when a beat is actually due: cumulative phase seconds
+/// and comm counters, from which this rank's deltas are computed.
+///
+/// Best-effort by design: a beat that cannot be sent (supervisor gone,
+/// socket pressure) is dropped silently — telemetry must never be able
+/// to fail a healthy run.
+pub fn maybe_beat(
+    steps_done: u64,
+    boundaries: u8,
+    force: bool,
+    read: impl FnOnce() -> ([f64; 7], CounterSnapshot),
+) {
+    let Some(child) = CHILD.get() else { return };
+    if !force && steps_done % child.every != 0 {
+        return;
+    }
+    let (phase, comm) = read();
+    let frame = {
+        let mut st = child.state.lock().unwrap();
+        let mut phase_delta = [0.0; 7];
+        for (d, (now, prev)) in phase_delta.iter_mut().zip(phase.iter().zip(&st.prev_phase)) {
+            *d = (now - prev).max(0.0);
+        }
+        let comm_delta = comm.since(&st.prev_comm);
+        st.prev_phase = phase;
+        st.prev_comm = comm;
+        HealthFrame {
+            rank: child.rank,
+            step: steps_done,
+            boundaries,
+            phase_delta,
+            comm_delta,
+            rss_bytes: rss_estimate(),
+        }
+    };
+    #[cfg(unix)]
+    send_beat(child, &frame);
+    #[cfg(not(unix))]
+    let _ = frame;
+}
+
+#[cfg(unix)]
+fn send_beat(child: &ChildTelemetry, frame: &HealthFrame) {
+    use crate::comm::beat_wire;
+    if let Ok(stream) = std::os::unix::net::UnixStream::connect(&child.ctl) {
+        let mut framed = Vec::with_capacity(4 + HEALTH_FRAME_LEN);
+        put_u32(&mut framed, frame.rank);
+        framed.extend_from_slice(&frame.encode());
+        let _ = beat_wire(&stream, &framed);
+    }
+}
+
+/// Resident-set estimate from `/proc/self/statm` (pages → bytes).
+/// Returns 0 on platforms without it — the field is best-effort.
+pub fn rss_estimate() -> u64 {
+    let Ok(text) = std::fs::read_to_string("/proc/self/statm") else { return 0 };
+    let rss_pages: u64 = text
+        .split_whitespace()
+        .nth(1)
+        .and_then(|f| f.parse().ok())
+        .unwrap_or(0);
+    rss_pages * 4096
+}
+
+// -- supervisor side (status aggregation) --------------------------------
+
+/// Per-rank accumulation of the heartbeat stream.
+#[derive(Clone, Debug, Default)]
+struct RankStat {
+    seen: bool,
+    step: u64,
+    beats: u64,
+    boundaries: u8,
+    /// Cumulative busy seconds (sum of all phase deltas received).
+    busy_seconds: f64,
+    /// Busy seconds of the most recent beat window (imbalance input).
+    window_seconds: f64,
+    /// Per-phase cumulative seconds, `ALL_PHASES` order.
+    phase_seconds: [f64; 7],
+    /// Accumulated comm deltas.
+    comm: CounterSnapshot,
+    rss_bytes: u64,
+}
+
+/// Folds [`HealthFrame`]s into an atomically rewritten `status.json`
+/// under the status directory. The supervisor drives it: one `on_beat`
+/// per heartbeat, one `set_state` per lifecycle transition.
+pub struct StatusWriter {
+    path: PathBuf,
+    every: u64,
+    watchdog_misses: u32,
+    state: String,
+    attempt: u32,
+    recoveries: u32,
+    ranks: Vec<RankStat>,
+}
+
+impl StatusWriter {
+    /// `dir` must exist; the status file is `dir/status.json`.
+    pub fn new(dir: &Path, ranks: usize, every: u64, watchdog_misses: u32) -> StatusWriter {
+        StatusWriter {
+            path: dir.join("status.json"),
+            every,
+            watchdog_misses,
+            state: "starting".to_string(),
+            attempt: 0,
+            recoveries: 0,
+            ranks: vec![RankStat::default(); ranks],
+        }
+    }
+
+    /// Record a lifecycle transition and rewrite the file.
+    pub fn set_state(&mut self, state: &str, attempt: u32, recoveries: u32) {
+        self.state = state.to_string();
+        self.attempt = attempt;
+        self.recoveries = recoveries;
+        self.write();
+    }
+
+    /// Fold one heartbeat in and rewrite the file.
+    pub fn on_beat(&mut self, frame: &HealthFrame) {
+        let Some(r) = self.ranks.get_mut(frame.rank as usize) else { return };
+        r.seen = true;
+        r.step = frame.step;
+        r.beats += 1;
+        r.boundaries = frame.boundaries;
+        let window: f64 = frame.phase_delta.iter().sum();
+        r.busy_seconds += window;
+        r.window_seconds = window;
+        for (acc, d) in r.phase_seconds.iter_mut().zip(&frame.phase_delta) {
+            *acc += d;
+        }
+        r.comm = r.comm.merge(&frame.comm_delta);
+        r.rss_bytes = frame.rss_bytes;
+        self.write();
+    }
+
+    /// Max-over-mean of the latest beat window's busy seconds across
+    /// ranks — 1.0 is a perfectly balanced fleet (paper §V-B's imbalance
+    /// notion, live). 0.0 until every rank has beaten at least once.
+    pub fn imbalance(&self) -> f64 {
+        let windows: Vec<f64> =
+            self.ranks.iter().filter(|r| r.seen).map(|r| r.window_seconds).collect();
+        if windows.len() < self.ranks.len() || windows.is_empty() {
+            return 0.0;
+        }
+        let mean = windows.iter().sum::<f64>() / windows.len() as f64;
+        if mean <= 0.0 {
+            return 0.0;
+        }
+        windows.iter().cloned().fold(0.0, f64::max) / mean
+    }
+
+    fn to_json(&self) -> Json {
+        let seen: Vec<&RankStat> = self.ranks.iter().filter(|r| r.seen).collect();
+        let min_step = seen.iter().map(|r| r.step).min().unwrap_or(0);
+        let max_step = seen.iter().map(|r| r.step).max().unwrap_or(0);
+        let watchdog = if self.watchdog_misses > 0 { "armed" } else { "off" };
+        let ranks: Vec<Json> = self
+            .ranks
+            .iter()
+            .enumerate()
+            .map(|(rank, r)| {
+                let c = r.comm;
+                obj(vec![
+                    ("rank", Json::Num(rank as f64)),
+                    ("seen", Json::Bool(r.seen)),
+                    ("step", Json::Num(r.step as f64)),
+                    ("beats", Json::Num(r.beats as f64)),
+                    ("busy_seconds", Json::Num(r.busy_seconds)),
+                    ("window_seconds", Json::Num(r.window_seconds)),
+                    (
+                        "phase_seconds",
+                        Json::Arr(r.phase_seconds.iter().map(|&s| Json::Num(s)).collect()),
+                    ),
+                    (
+                        "boundaries",
+                        Json::Arr(
+                            boundary_names(r.boundaries)
+                                .into_iter()
+                                .map(|n| Json::Str(n.to_string()))
+                                .collect(),
+                        ),
+                    ),
+                    ("bytes_sent", Json::Num(c.bytes_sent as f64)),
+                    ("bytes_rma", Json::Num(c.bytes_rma as f64)),
+                    ("collectives", Json::Num(c.collectives as f64)),
+                    ("rma_gets", Json::Num(c.rma_gets as f64)),
+                    ("rss_bytes", Json::Num(r.rss_bytes as f64)),
+                ])
+            })
+            .collect();
+        obj(vec![
+            ("schema_version", Json::Num(STATUS_SCHEMA_VERSION as f64)),
+            ("state", Json::Str(self.state.clone())),
+            ("attempt", Json::Num(f64::from(self.attempt))),
+            ("recoveries", Json::Num(f64::from(self.recoveries))),
+            ("watchdog", Json::Str(watchdog.to_string())),
+            ("watchdog_misses", Json::Num(f64::from(self.watchdog_misses))),
+            ("telemetry_every", Json::Num(self.every as f64)),
+            (
+                "fleet",
+                obj(vec![
+                    ("min_step", Json::Num(min_step as f64)),
+                    ("max_step", Json::Num(max_step as f64)),
+                    ("imbalance", Json::Num(self.imbalance())),
+                ]),
+            ),
+            ("ranks", Json::Arr(ranks)),
+        ])
+    }
+
+    /// Atomic rewrite: write a temp file in the same directory, then
+    /// rename over `status.json` — a concurrent `ilmi status` never
+    /// sees a torn file. Failures are swallowed (observability must not
+    /// fail the run).
+    pub fn write(&self) {
+        let tmp = self.path.with_extension("json.tmp");
+        if std::fs::write(&tmp, self.to_json().pretty()).is_ok() {
+            let _ = std::fs::rename(&tmp, &self.path);
+        }
+    }
+}
+
+// -- `ilmi status` rendering ---------------------------------------------
+
+/// Read `<dir>/status.json` and render the table `ilmi status` prints.
+pub fn render_status(dir: &Path) -> Result<String, String> {
+    let path = dir.join("status.json");
+    let text = std::fs::read_to_string(&path)
+        .map_err(|e| format!("reading {}: {e} (is --status-dir pointed here?)", path.display()))?;
+    let v = parse(&text).map_err(|e| format!("parsing {}: {e}", path.display()))?;
+    let schema = v.req("schema_version")?.as_u64()?;
+    if schema != STATUS_SCHEMA_VERSION {
+        return Err(format!(
+            "status schema v{schema} unsupported (this build reads v{STATUS_SCHEMA_VERSION})"
+        ));
+    }
+    let fleet = v.req("fleet")?;
+    let mut out = String::new();
+    out.push_str(&format!(
+        "state {}  attempt {}  recoveries {}  watchdog {} (misses={})  every {} steps\n",
+        v.req("state")?.as_str()?,
+        v.req("attempt")?.as_u64()?,
+        v.req("recoveries")?.as_u64()?,
+        v.req("watchdog")?.as_str()?,
+        v.req("watchdog_misses")?.as_u64()?,
+        v.req("telemetry_every")?.as_u64()?,
+    ));
+    out.push_str(&format!(
+        "fleet step {}..{}  imbalance {:.2}\n",
+        fleet.req("min_step")?.as_u64()?,
+        fleet.req("max_step")?.as_u64()?,
+        fleet.req("imbalance")?.as_f64()?,
+    ));
+    out.push_str(&format!(
+        "{:>4} {:>8} {:>6} {:>10} {:>10} {:>12} {:>9} {:>8}  {}\n",
+        "rank", "step", "beats", "busy(s)", "window(s)", "bytes_sent", "rma_gets", "rss(MB)", "boundary"
+    ));
+    for r in v.req("ranks")?.as_arr()? {
+        let names: Vec<String> = r
+            .req("boundaries")?
+            .as_arr()?
+            .iter()
+            .map(|n| n.as_str().map(str::to_string))
+            .collect::<Result<_, _>>()?;
+        let seen = r.req("seen")?.as_bool()?;
+        out.push_str(&format!(
+            "{:>4} {:>8} {:>6} {:>10.3} {:>10.3} {:>12} {:>9} {:>8.1}  {}\n",
+            r.req("rank")?.as_u64()?,
+            if seen { r.req("step")?.as_u64()?.to_string() } else { "-".to_string() },
+            r.req("beats")?.as_u64()?,
+            r.req("busy_seconds")?.as_f64()?,
+            r.req("window_seconds")?.as_f64()?,
+            r.req("bytes_sent")?.as_u64()?,
+            r.req("rma_gets")?.as_u64()?,
+            r.req("rss_bytes")?.as_f64()? / (1024.0 * 1024.0),
+            if names.is_empty() { "-".to_string() } else { names.join("+") },
+        ));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn frame(rank: u32, step: u64) -> HealthFrame {
+        HealthFrame {
+            rank,
+            step,
+            boundaries: crate::trace::SPIKE_EPOCH | crate::trace::PLASTICITY_EPOCH,
+            phase_delta: [0.5, 0.0, 1.0, 0.0, 0.25, 0.125, 0.0],
+            comm_delta: CounterSnapshot {
+                bytes_sent: 1000,
+                bytes_recv: 900,
+                bytes_rma: 64,
+                msgs_sent: 10,
+                collectives: 5,
+                rma_gets: 2,
+            },
+            rss_bytes: 8 << 20,
+        }
+    }
+
+    #[test]
+    fn health_frame_roundtrips_at_fixed_length() {
+        let f = frame(3, 120);
+        let bytes = f.encode();
+        assert_eq!(bytes.len(), HEALTH_FRAME_LEN);
+        assert_eq!(HealthFrame::decode(&bytes).unwrap(), f);
+        // Truncation and trailing bytes both fail loudly.
+        assert!(HealthFrame::decode(&bytes[..bytes.len() - 1]).is_err());
+        let mut long = bytes.clone();
+        long.push(0);
+        assert!(HealthFrame::decode(&long).is_err());
+    }
+
+    #[test]
+    fn status_writer_aggregates_and_rewrites_atomically() {
+        let dir = std::env::temp_dir().join(format!("ilmi_status_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut w = StatusWriter::new(&dir, 2, 10, 3);
+        w.set_state("running", 0, 0);
+        w.on_beat(&frame(0, 10));
+        assert_eq!(w.imbalance(), 0.0, "rank 1 has not beaten yet");
+        w.on_beat(&frame(1, 10));
+        w.on_beat(&frame(0, 20));
+        assert!(w.imbalance() >= 1.0);
+        let rendered = render_status(&dir).unwrap();
+        assert!(rendered.contains("state running"), "{rendered}");
+        assert!(rendered.contains("watchdog armed"), "{rendered}");
+        assert!(rendered.contains("spike+plasticity"), "{rendered}");
+        // Fleet min/max straddle the two ranks' steps.
+        assert!(rendered.contains("fleet step 10..20"), "{rendered}");
+        // No torn temp file left behind.
+        assert!(!dir.join("status.json.tmp").exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn render_rejects_missing_and_foreign_schemas() {
+        let dir = std::env::temp_dir().join(format!("ilmi_status_bad_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        assert!(render_status(&dir).unwrap_err().contains("status-dir"));
+        std::fs::write(dir.join("status.json"), "{\"schema_version\": 99}").unwrap();
+        assert!(render_status(&dir).unwrap_err().contains("v99"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn unarmed_beat_hook_is_pass_through() {
+        // The suite shares one process; nothing arms telemetry in unit
+        // tests, so the reader closure must never run.
+        maybe_beat(10, 0, true, || panic!("read closure ran while unarmed"));
+    }
+
+    #[test]
+    fn rss_estimate_is_nonzero_on_linux() {
+        if std::path::Path::new("/proc/self/statm").exists() {
+            assert!(rss_estimate() > 0);
+        }
+    }
+}

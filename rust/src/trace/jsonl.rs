@@ -1,9 +1,13 @@
 //! JSONL time-series export: one compact line per (rank, sample),
 //! ordered by rank then step — ready for `jq`/pandas without a
-//! Perfetto UI in the loop.
+//! Perfetto UI in the loop — plus one `"kind": "rank_summary"` line per
+//! rank carrying the run-level observability that has no per-sample
+//! shape: tracer ring evictions (`trace_dropped`) and the comm-latency
+//! histograms (full bucket arrays; totals are deterministic call
+//! counts, the spread is wall-clock — DESIGN.md §14).
 
 use crate::bench::json::{obj, Json};
-use crate::metrics::{SimReport, ALL_PHASES};
+use crate::metrics::{HistSnapshot, RankReport, SimReport, ALL_PHASES};
 
 use super::{boundary_names, EpochSample};
 
@@ -49,7 +53,31 @@ fn sample_json(rank: usize, s: &EpochSample) -> Json {
     ])
 }
 
-/// Render the report's traces as JSONL: one object per (rank, sample).
+fn hist_json(h: &HistSnapshot) -> Json {
+    obj(vec![
+        ("total", Json::Num(h.total() as f64)),
+        ("buckets", Json::Arr(h.counts.iter().map(|&c| Json::Num(c as f64)).collect())),
+    ])
+}
+
+fn rank_summary_json(r: &RankReport) -> Json {
+    obj(vec![
+        ("rank", Json::Num(r.rank as f64)),
+        ("kind", Json::Str("rank_summary".to_string())),
+        ("trace_dropped", Json::Num(r.trace_dropped as f64)),
+        (
+            "comm_hist",
+            obj(vec![
+                ("a2a", hist_json(&r.comm_hists.a2a)),
+                ("rma", hist_json(&r.comm_hists.rma)),
+                ("barrier", hist_json(&r.comm_hists.barrier)),
+            ]),
+        ),
+    ])
+}
+
+/// Render the report's traces as JSONL: one object per (rank, sample),
+/// then one `rank_summary` object per rank.
 pub fn trace_jsonl(report: &SimReport) -> String {
     let mut out = String::new();
     for r in &report.ranks {
@@ -57,6 +85,10 @@ pub fn trace_jsonl(report: &SimReport) -> String {
             out.push_str(&sample_json(r.rank, s).compact());
             out.push('\n');
         }
+    }
+    for r in &report.ranks {
+        out.push_str(&rank_summary_json(r).compact());
+        out.push('\n');
     }
     out
 }
@@ -79,11 +111,15 @@ mod tests {
             ..EpochSample::default()
         };
         let r0 = RankReport { rank: 0, trace: vec![s.clone(), s.clone()], ..Default::default() };
-        let r1 = RankReport { rank: 1, trace: vec![s], ..Default::default() };
+        let mut r1 = RankReport { rank: 1, trace: vec![s], ..Default::default() };
+        r1.trace_dropped = 3;
+        r1.comm_hists.a2a.counts[2] = 8;
+        r1.comm_hists.barrier.counts[0] = 1;
         let sim = SimReport { ranks: vec![r0, r1], ..Default::default() };
         let text = trace_jsonl(&sim);
         let lines: Vec<&str> = text.lines().collect();
-        assert_eq!(lines.len(), 3);
+        // 3 sample lines + one rank_summary per rank.
+        assert_eq!(lines.len(), 5);
         let v = parse(lines[2]).unwrap();
         assert_eq!(v.get("rank").unwrap().as_u64().unwrap(), 1);
         assert_eq!(v.get("step").unwrap().as_u64().unwrap(), 50);
@@ -101,6 +137,22 @@ mod tests {
         for p in ALL_PHASES {
             assert!(v.get("phases").unwrap().get(p.name()).is_some());
         }
+        // The trailing summary lines surface ring evictions and the
+        // latency histograms, one per rank in rank order.
+        let s0 = parse(lines[3]).unwrap();
+        assert_eq!(s0.get("kind").unwrap().as_str().unwrap(), "rank_summary");
+        assert_eq!(s0.get("rank").unwrap().as_u64().unwrap(), 0);
+        assert_eq!(s0.get("trace_dropped").unwrap().as_u64().unwrap(), 0);
+        let s1 = parse(lines[4]).unwrap();
+        assert_eq!(s1.get("trace_dropped").unwrap().as_u64().unwrap(), 3);
+        let a2a = s1.get("comm_hist").unwrap().get("a2a").unwrap();
+        assert_eq!(a2a.get("total").unwrap().as_u64().unwrap(), 8);
+        assert_eq!(a2a.get("buckets").unwrap().as_arr().unwrap().len(), 32);
+        assert_eq!(
+            s1.get("comm_hist").unwrap().get("barrier").unwrap().get("total").unwrap()
+                .as_u64().unwrap(),
+            1
+        );
         assert_eq!(trace_jsonl(&SimReport::default()), "");
     }
 }

@@ -44,7 +44,9 @@ fn counter(name: &str, pid: usize, ts: f64, key: &str, value: f64) -> Json {
 }
 
 /// Render the whole report as a Chrome trace-event JSON string.
-/// Emits exactly [`super::event_count`] non-metadata events.
+/// Emits exactly [`super::event_count`] non-metadata events, plus (per
+/// traced rank) three `comm_hist_*` counter points that sit outside the
+/// count — they are run totals, not per-sample events.
 pub fn chrome_trace(report: &SimReport) -> String {
     let mut events = Vec::new();
     for r in &report.ranks {
@@ -80,6 +82,21 @@ pub fn chrome_trace(report: &SimReport) -> String {
             ));
             events.push(counter("step_cost", pid, s.ts_micros, "step_cost", s.cost.cost()));
             events.push(counter("spikes", pid, s.ts_micros, "spikes", s.spikes as f64));
+        }
+        // Comm-latency histogram totals: one counter point per primitive
+        // at the rank's last boundary. Run-level observability riding on
+        // the trace, NOT per-sample telemetry — excluded from
+        // `super::event_count`'s closed form, which stays a pure
+        // function of the sample count (DESIGN.md §14).
+        if let Some(last) = r.trace.last() {
+            let h = &r.comm_hists;
+            for (name, total) in [
+                ("comm_hist_a2a", h.a2a.total()),
+                ("comm_hist_rma", h.rma.total()),
+                ("comm_hist_barrier", h.barrier.total()),
+            ] {
+                events.push(counter(name, pid, last.ts_micros, "calls", total as f64));
+            }
         }
     }
     // Cluster-wide imbalance track: one point per sample every rank
@@ -150,11 +167,21 @@ mod tests {
         let events = root.get("traceEvents").unwrap().as_arr().unwrap();
         let non_meta = events
             .iter()
-            .filter(|e| e.get("ph").unwrap().as_str().unwrap() != "M")
+            .filter(|e| {
+                e.get("ph").unwrap().as_str().unwrap() != "M"
+                    && !e.get("name").unwrap().as_str().unwrap().starts_with("comm_hist_")
+            })
             .count() as u64;
         // 3 + 2 samples at 10 events each, plus 2 aligned imbalance points.
         assert_eq!(non_meta, 52);
         assert_eq!(non_meta, event_count(&report));
+        // The histogram tracks ride along outside the closed form: three
+        // per traced rank.
+        let hist_points = events
+            .iter()
+            .filter(|e| e.get("name").unwrap().as_str().unwrap().starts_with("comm_hist_"))
+            .count();
+        assert_eq!(hist_points, 6);
     }
 
     #[test]
@@ -174,7 +201,9 @@ mod tests {
                     p.name()
                 );
             }
-            for track in ["bytes_sent", "step_cost", "spikes"] {
+            for track in
+                ["bytes_sent", "step_cost", "spikes", "comm_hist_a2a", "comm_hist_barrier"]
+            {
                 assert!(events.iter().any(|e| {
                     e.get("ph").map(|v| v.as_str() == Ok("C")).unwrap_or(false)
                         && e.get("pid").unwrap().as_f64().unwrap() == pid

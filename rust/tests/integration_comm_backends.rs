@@ -44,6 +44,10 @@ fn deterministic_bytes(mut r: RankReport) -> Vec<u8> {
         s.phase_seconds = Default::default();
         s.cost.nanos = 0;
     }
+    // Comm-latency histogram TOTALS are deterministic call counts, but
+    // which bucket each call lands in is wall-clock; collapse the
+    // spread, keep the totals comparable.
+    r.comm_hists = r.comm_hists.collapse();
     r.encode()
 }
 
@@ -230,6 +234,8 @@ fn launcher_runs_entries_and_collects_results_in_rank_order() {
         args: b"hi",
         timeout: Duration::from_secs(60),
         env: &[],
+        watchdog_misses: 0,
+        on_beat: None,
     };
     let results = proc::run_entry(&spec).expect("launch failed");
     for (rank, bytes) in results.iter().enumerate() {
@@ -263,6 +269,8 @@ fn launcher_cleans_rendezvous_dirs_on_success_and_failure() {
         args: b"ok",
         timeout: Duration::from_secs(60),
         env: &[],
+        watchdog_misses: 0,
+        on_beat: None,
     };
     proc::run_entry(&spec).expect("launch failed");
     // Failure path: a dying fleet must not leak its dir either (the
@@ -273,6 +281,8 @@ fn launcher_cleans_rendezvous_dirs_on_success_and_failure() {
         args: &[],
         timeout: Duration::from_secs(20),
         env: &[],
+        watchdog_misses: 0,
+        on_beat: None,
     };
     proc::run_entry(&spec).expect_err("a dead rank must fail the launch");
     // Both fleets above are fully reaped by the time run_entry returns,
@@ -288,6 +298,8 @@ fn launcher_cleans_rendezvous_dirs_on_success_and_failure() {
             args: b"ok",
             timeout: Duration::from_secs(60),
             env: &[],
+            watchdog_misses: 0,
+            on_beat: None,
         };
         proc::run_entry(&spec).expect("launch failed");
     }
@@ -309,6 +321,8 @@ fn launcher_surfaces_a_dead_rank_as_an_error_not_a_hang() {
         args: &[],
         timeout: Duration::from_secs(20),
         env: &[],
+        watchdog_misses: 0,
+        on_beat: None,
     };
     let err = proc::run_entry(&spec).expect_err("a dead rank must fail the launch");
     // Either failure order is legitimate: the survivor's poisoned-panic

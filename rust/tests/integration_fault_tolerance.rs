@@ -10,7 +10,13 @@
 //!
 //! Also here: the supervisor's give-up path — when `max_recoveries` is
 //! exhausted it returns an error promptly (no hang), with every rank
-//! process reaped and no rendezvous directory left behind.
+//! process reaped and no rendezvous directory left behind — and the
+//! telemetry plane (DESIGN.md §14): a rank that HANGS (stalls, never
+//! dies) starves the heartbeat stream, trips the supervisor's watchdog
+//! well before any transport read timeout, and recovers through the
+//! same checkpoint-restart loop bit-identically; and telemetry itself
+//! is pure observation — heartbeats on or off, the final snapshot
+//! bytes are identical for both spike-algorithm generations.
 
 #![cfg(unix)]
 
@@ -141,6 +147,112 @@ fn corrupt_newest_checkpoint_falls_back_to_older_ring_entry() {
     assert_eq!(report.lost_steps, 50, "step-100 evidence minus step-50 resume point");
     assert!(report.recovery_seconds > 0.0);
     assert_eq!(clean, faulted, "recovered final snapshot must be byte-identical");
+}
+
+/// Like `clean_vs_faulted`, but the fault HANGS a rank instead of
+/// killing it: the faulted run arms telemetry (beats every 5 steps, a
+/// 3-miss watchdog budget) so the supervisor detects the silence and
+/// recovers. The clean run stays telemetry-free, so the byte comparison
+/// additionally pins telemetry purity across the pair. The faulted run
+/// is time-bounded WELL below both the hour-long stall and the socket
+/// transport's read timeout (≥60s): only the watchdog path can finish
+/// that fast.
+fn clean_vs_hung(
+    alg: AlgGen,
+    label: &str,
+    fault_plan: &str,
+) -> (Vec<u8>, Vec<u8>, ilmi::metrics::SimReport) {
+    let dir = fresh_dir(label);
+    let cfg = supervised_cfg(alg, &dir);
+    let clean = run_simulation(&cfg).expect("clean supervised run");
+    assert_eq!(clean.recoveries, 0, "nothing failed, nothing to recover");
+    let final_name = snapshot_file_name(150);
+    let clean_bytes = std::fs::read(dir.join(&final_name)).expect("clean final snapshot");
+    std::fs::remove_dir_all(&dir).unwrap();
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let mut hung = cfg;
+    hung.fault_plan = fault_plan.to_string();
+    hung.telemetry_every = 5;
+    hung.telemetry_watchdog_misses = 3;
+    let start = Instant::now();
+    let report = run_simulation(&hung).expect("hung run must recover via the watchdog");
+    assert!(
+        start.elapsed() < Duration::from_secs(45),
+        "{label}: recovery took {:?} — watchdog did not fire (a transport read \
+         timeout would need >=60s, the injected stall 3600s)",
+        start.elapsed()
+    );
+    let hung_bytes = std::fs::read(dir.join(&final_name)).expect("recovered final snapshot");
+    let _ = std::fs::remove_dir_all(&dir);
+    (clean_bytes, hung_bytes, report)
+}
+
+#[test]
+fn hung_rank_trips_the_watchdog_and_recovers_old_algorithms() {
+    let _guard = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    set_child_hook();
+    // rank 0's first RMA reply at/after step 120 stalls for an hour —
+    // the Barnes-Hut window path of the old generation. The requesting
+    // rank blocks inside rma_get, beats stop, the watchdog kills the
+    // fleet, and the supervisor resumes from the step-100 checkpoint
+    // (attempt 1 re-runs fault-free: the spec defaults to attempt=0).
+    let (clean, hung, report) = clean_vs_hung(
+        AlgGen::Old,
+        "stall_old",
+        "rma_stall:rank=0,nth=1,ms=3600000,step=120",
+    );
+    assert_eq!(report.recoveries, 1, "exactly one watchdog-driven relaunch");
+    assert_eq!(clean, hung, "recovered final snapshot must be byte-identical");
+}
+
+#[test]
+fn hung_rank_trips_the_watchdog_and_recovers_new_algorithms() {
+    let _guard = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    set_child_hook();
+    // The new generation never touches RMA; stall rank 1's first data
+    // frame at/after step 120 instead (collective traffic path).
+    let (clean, hung, report) = clean_vs_hung(
+        AlgGen::New,
+        "stall_new",
+        "frame_delay:rank=1,nth=1,ms=3600000,step=120",
+    );
+    assert_eq!(report.recoveries, 1, "exactly one watchdog-driven relaunch");
+    assert_eq!(clean, hung, "recovered final snapshot must be byte-identical");
+}
+
+#[test]
+fn telemetry_is_pure_observation_for_both_algorithm_generations() {
+    let _guard = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    set_child_hook();
+    for (alg, label) in [(AlgGen::New, "pure_new"), (AlgGen::Old, "pure_old")] {
+        let dir = fresh_dir(label);
+        let cfg = supervised_cfg(alg, &dir);
+        run_simulation(&cfg).expect("telemetry-off run");
+        let final_name = snapshot_file_name(150);
+        let off = std::fs::read(dir.join(&final_name)).expect("final snapshot");
+        std::fs::remove_dir_all(&dir).unwrap();
+        std::fs::create_dir_all(&dir).unwrap();
+
+        // Same run with beats at a deliberately aggressive cadence, the
+        // watchdog armed, and status aggregation on: the trajectory —
+        // and therefore the snapshot bytes — must not move.
+        let status_dir = fresh_dir(&format!("{label}_status"));
+        let mut on = cfg;
+        on.telemetry_every = 2;
+        on.telemetry_watchdog_misses = 3;
+        on.status_dir = status_dir.to_string_lossy().into_owned();
+        run_simulation(&on).expect("telemetry-on run");
+        let with_telemetry = std::fs::read(dir.join(&final_name)).expect("final snapshot");
+        assert_eq!(off, with_telemetry, "{label}: telemetry perturbed the trajectory");
+        // The supervisor left a terminal status.json behind, and the
+        // `ilmi status` renderer accepts it.
+        let rendered = ilmi::telemetry::render_status(&status_dir).expect("status.json");
+        assert!(rendered.contains("state done"), "{label}: {rendered}");
+        assert!(rendered.contains("watchdog armed"), "{label}: {rendered}");
+        let _ = std::fs::remove_dir_all(&dir);
+        let _ = std::fs::remove_dir_all(&status_dir);
+    }
 }
 
 /// Rendezvous dirs of THIS process's launcher (`ilmi-pc<pid>-<seq>`).
